@@ -1,0 +1,113 @@
+//! Real-network (loopback) experiment — the Fig. 6 / Table 2 path.
+//!
+//! Runs the actual coordinator engines (threads, real UDP sockets on
+//! localhost, Reed–Solomon codec, wire format) with injected fragment
+//! loss as the controlled-WAN substitute:
+//!
+//!   * Alg. 1 (guaranteed error bound) with adaptive redundancy;
+//!   * Alg. 2 (guaranteed time) at 90% of Alg. 1's duration;
+//!   * repeated over several loss fractions like the paper's five runs.
+//!
+//! Run: `cargo run --release --example realnet_loopback`
+
+use janus::coordinator::{Contract, ReceiverConfig, SenderConfig};
+use janus::model::NetParams;
+use janus::refactor::{decompose, generate, levels_to_bytes, reconstruct, GrfConfig};
+use janus::transport::{udp_pair, LossyChannel};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dim = 64;
+    let vol = generate(dim, &GrfConfig::default(), 7);
+    let levels = decompose(&vol, 4);
+    let bytes = levels_to_bytes(&levels);
+    let refs: Vec<&[f32]> = levels.iter().map(|l| l.as_slice()).collect();
+    let mut eps: Vec<f64> = (1..=4)
+        .map(|u| vol.linf_rel_error(&reconstruct(&refs, u, 4, dim)).max(1e-12))
+        .collect();
+    for i in 1..4 {
+        if eps[i] >= eps[i - 1] {
+            eps[i] = eps[i - 1] * 0.999;
+        }
+    }
+    let total: u64 = bytes.iter().map(|b| b.len() as u64).sum();
+    println!(
+        "payload: {dim}³ field → 4 levels, {total} bytes total, ε {:?}",
+        eps.iter().map(|e| format!("{e:.1e}")).collect::<Vec<_>>()
+    );
+
+    // Pacing low enough that loopback never overruns socket buffers.
+    let rate = 30_000.0;
+    let net = NetParams { t: 0.0005, r: rate, n: 32, s: 4096, lambda: 0.0 };
+
+    println!(
+        "\n{:<8} {:>10} {:>12} {:>10} {:>12} {:>8}",
+        "loss", "alg1 s", "alg1 passes", "alg2 s", "alg2 levels", "ε met"
+    );
+    for (run, loss_fraction) in [0.001, 0.01, 0.02, 0.03, 0.05].iter().enumerate() {
+        // ---- Alg. 1: guaranteed error bound over lossy UDP ----
+        let (tx, rx) = udp_pair()?;
+        let lossy = LossyChannel::new(tx, *loss_fraction, 1000 + run as u64);
+        let scfg = SenderConfig {
+            net,
+            contract: Contract::ErrorBound(eps[3]),
+            initial_lambda: loss_fraction * rate,
+            max_duration: Duration::from_secs(120),
+        };
+        let rcfg = ReceiverConfig {
+            t_w: 0.25,
+            idle_timeout: Duration::from_secs(10),
+            max_duration: Duration::from_secs(120),
+        };
+        let (s1, r1) = janus::coordinator::run_session(
+            lossy,
+            rx,
+            scfg,
+            rcfg.clone(),
+            bytes.clone(),
+            eps.clone(),
+        )?;
+        assert_eq!(r1.levels_recovered, 4, "Alg.1 must deliver everything");
+        // Verify the delivered bytes decode to the exact field.
+        let got: Vec<Vec<f32>> = r1
+            .levels
+            .iter()
+            .map(|l| janus::refactor::bytes_to_level(l.as_ref().unwrap()))
+            .collect();
+        let grefs: Vec<&[f32]> = got.iter().map(|l| l.as_slice()).collect();
+        let recon = reconstruct(&grefs, 4, 4, dim);
+        let err = vol.linf_rel_error(&recon);
+        assert!(err <= eps[3] * 1.001, "ε violated after real transfer: {err}");
+
+        // ---- Alg. 2: deadline at 90% of Alg. 1's wall time ----
+        let tau = 0.9 * r1.duration;
+        let (tx2, rx2) = udp_pair()?;
+        let lossy2 = LossyChannel::new(tx2, *loss_fraction, 2000 + run as u64);
+        let scfg2 = SenderConfig {
+            net,
+            contract: Contract::Deadline(tau),
+            initial_lambda: loss_fraction * rate,
+            max_duration: Duration::from_secs(120),
+        };
+        let (_s2, r2) = janus::coordinator::run_session(
+            lossy2,
+            rx2,
+            scfg2,
+            rcfg,
+            bytes.clone(),
+            eps.clone(),
+        )?;
+        println!(
+            "{:<8} {:>10.3} {:>12} {:>10.3} {:>12} {:>8}",
+            format!("{:.1}%", loss_fraction * 100.0),
+            r1.duration,
+            s1.passes,
+            r2.duration,
+            format!("{}/{}", r2.levels_recovered, r2.levels.len()),
+            if err <= eps[3] * 1.001 { "✓" } else { "✗" },
+        );
+    }
+    println!("\nAlg.1 delivered byte-exact data at every loss rate (ε_4 contract).");
+    println!("Alg.2 traded accuracy for a 10% shorter, deterministic deadline (Table 2).");
+    Ok(())
+}

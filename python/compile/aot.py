@@ -1,0 +1,98 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (for volume dimension D and L levels):
+  refactor_d{D}_l{L}.hlo.txt          x:(D,D,D) -> (level_1..level_L)
+  reconstruct_d{D}_l{L}_u{u}.hlo.txt  (level_1..level_u) -> x_hat:(D,D,D)
+  linf_error_d{D}.hlo.txt             (a, b) -> scalar relative L-inf err
+  manifest.tsv                        name, file, input arity/shapes
+
+Run once via `make artifacts`; never imported at runtime.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, dim: int, levels: int, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    vol = jax.ShapeDtypeStruct((dim, dim, dim), jnp.float32)
+    sizes = model.level_sizes(dim, levels)
+    elems = [s // 4 for s in sizes]
+    manifest = []
+
+    def emit(name, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            "x".join(str(d) for d in a.shape) or "scalar" for a in args
+        )
+        manifest.append((name, fname, len(args), shapes))
+        if verbose:
+            print(f"  {fname}: {len(text)} chars, inputs [{shapes}]")
+
+    # Refactor: volume -> L level buffers.
+    emit(
+        f"refactor_d{dim}_l{levels}",
+        lambda x: model.refactor(x, levels),
+        (vol,),
+    )
+
+    # Progressive reconstruction for every usable prefix length.
+    for used in range(1, levels + 1):
+        specs = tuple(
+            jax.ShapeDtypeStruct((elems[i],), jnp.float32) for i in range(used)
+        )
+
+        def recon(*bufs, _used=used):
+            return (model.reconstruct(list(bufs), _used, levels, dim),)
+
+        emit(f"reconstruct_d{dim}_l{levels}_u{used}", recon, specs)
+
+    # Error metric.
+    emit(
+        f"linf_error_d{dim}",
+        lambda a, b: (model.linf_rel_error(a, b),),
+        (vol, vol),
+    )
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"# dim={dim} levels={levels}\n")
+        for name, fname, arity, shapes in manifest:
+            f.write(f"{name}\t{fname}\t{arity}\t{shapes}\n")
+    if verbose:
+        print(f"wrote {len(manifest)} artifacts + manifest.tsv to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--levels", type=int, default=4)
+    args = ap.parse_args()
+    export(args.out_dir, args.dim, args.levels)
+
+
+if __name__ == "__main__":
+    main()

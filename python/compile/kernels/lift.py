@@ -1,0 +1,100 @@
+"""Layer-1 Pallas kernels: the lifting step of the multilevel refactorer.
+
+The compute hot-spot of the refactoring pipeline is the per-axis lifting
+(predict/split) pass over the whole volume. Each kernel processes a
+(BLOCK_ROWS, W) tile of the flattened (rows, W) view of the volume:
+one HBM read of the fine data, one write each of coarse and detail --
+the minimum possible traffic for this memory-bound transform (see
+DESIGN.md section "Hardware-Adaptation" for the TPU mapping: tiles sized
+for VMEM, stencil on the VPU, BlockSpec expressing the HBM<->VMEM
+schedule).
+
+All pallas_calls use interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (vs kernels/ref.py) is the contract
+on this backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 8 x 4096 f32 in + 2 x (8 x 2048) out = 256 KiB of
+# VMEM traffic per step -- far under the ~16 MiB budget, leaving room for
+# double buffering.
+BLOCK_ROWS = 8
+
+
+def _fwd_kernel(x_ref, c_ref, d_ref):
+    x = x_ref[...]
+    even = x[:, 0::2]
+    odd = x[:, 1::2]
+    right = jnp.concatenate([even[:, 1:], even[:, -1:]], axis=1)
+    detail = odd - 0.5 * (even + right)
+    dleft = jnp.concatenate([detail[:, :1], detail[:, :-1]], axis=1)
+    c_ref[...] = even + 0.25 * (dleft + detail)
+    d_ref[...] = detail
+
+
+def _inv_kernel(c_ref, d_ref, x_ref):
+    coarse = c_ref[...]
+    det = d_ref[...]
+    dleft = jnp.concatenate([det[:, :1], det[:, :-1]], axis=1)
+    even = coarse - 0.25 * (dleft + det)
+    right = jnp.concatenate([even[:, 1:], even[:, -1:]], axis=1)
+    odd = det + 0.5 * (even + right)
+    x = jnp.stack([even, odd], axis=-1).reshape(even.shape[0], even.shape[1] * 2)
+    x_ref[...] = x
+
+
+def _grid(rows, block):
+    assert rows % block == 0, f"rows {rows} not divisible by block {block}"
+    return rows // block
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def lift_forward(x, block_rows=BLOCK_ROWS):
+    """Forward lifting along the last axis of a 2-D view.
+
+    x: (rows, W) with W even. Returns (coarse, detail), each (rows, W/2).
+    """
+    rows, w = x.shape
+    assert w % 2 == 0
+    block = min(block_rows, rows)
+    grid = _grid(rows, block)
+    half = w // 2
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block, w), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block, half), lambda i: (i, 0)),
+            pl.BlockSpec((block, half), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, half), x.dtype),
+            jax.ShapeDtypeStruct((rows, half), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def lift_inverse(coarse, detail, block_rows=BLOCK_ROWS):
+    """Inverse lifting: (rows, W/2) x 2 -> (rows, W)."""
+    rows, half = coarse.shape
+    assert detail.shape == (rows, half)
+    block = min(block_rows, rows)
+    grid = _grid(rows, block)
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block, half), lambda i: (i, 0)),
+            pl.BlockSpec((block, half), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block, half * 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, half * 2), coarse.dtype)],
+        interpret=True,
+    )(coarse, detail)[0]

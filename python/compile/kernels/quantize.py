@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: shared-exponent quantization for bitplane
+encoding (paper section 2.2 -- pMGARD stores multilevel coefficients as
+bitplanes; this kernel produces the sign/magnitude integer field the
+bitplane transpose consumes; the transpose itself is byte-shuffling and
+lives on the Rust side, rust/src/refactor/bitplane.rs).
+
+interpret=True like all Janus kernels (CPU PJRT contract).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _quant_kernel(x_ref, scale_ref, q_ref, s_ref):
+    x = x_ref[...]
+    scale = scale_ref[0]
+    mag = jnp.abs(x) * scale
+    q = jnp.clip(jnp.round(mag), 0, 2**30).astype(jnp.int32)
+    q_ref[...] = q
+    s_ref[...] = (x < 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("planes",))
+def quantize(x, e_max, planes=16):
+    """Quantize a flat f32 array against a shared exponent.
+
+    Returns (q, signs): int32 magnitudes in [0, 2^planes) relative to
+    2^(e_max - planes), and 0/1 sign flags.
+    """
+    n = x.shape[0]
+    assert n % BLOCK == 0 or n < BLOCK, f"n={n} must divide {BLOCK}"
+    block = min(BLOCK, n)
+    grid = n // block
+    scale = jnp.asarray([2.0 ** (planes - e_max)], jnp.float32)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, scale)
+    # Clamp to the plane budget (rounding can hit 2^planes exactly).
+    return jnp.minimum(q, 2**planes - 1), s
+
+
+def quantize_ref(x, e_max, planes=16):
+    """Pure-jnp oracle."""
+    scale = 2.0 ** (planes - e_max)
+    q = jnp.clip(jnp.round(jnp.abs(x) * scale), 0, 2**planes - 1).astype(jnp.int32)
+    return q, (x < 0).astype(jnp.int32)
+
+
+def dequantize_ref(q, s, e_max, planes=16):
+    inv = 2.0 ** (e_max - planes)
+    mag = q.astype(jnp.float32) * inv
+    return jnp.where(s == 1, -mag, mag)

@@ -1,0 +1,181 @@
+"""Pure-jnp oracle for the lifting kernels.
+
+The multilevel refactoring (our pMGARD substitute, DESIGN.md section 3) is
+built from a 1-D interpolation-wavelet lifting step applied separably along
+each axis. This module is the correctness reference the Pallas kernels are
+pytest-verified against, and is itself unit-tested for perfect
+reconstruction.
+
+Forward step along the last axis (W even), CDF(2,2)-style lifting:
+    even = x[..., 0::2]
+    odd  = x[..., 1::2]
+    detail = odd - (even + roll_left(even)) / 2     (predict)
+    coarse = even + (roll_right(detail) + detail)/4 (update: local average)
+
+The update step turns the coarse samples into local averages, which is
+what gives the multilevel hierarchy its decreasing-error property on
+smooth fields (the role of pMGARD's L2 projection). The inverse undoes
+update then predict and re-interleaves.
+"""
+
+import jax.numpy as jnp
+
+
+def _predict(even):
+    """Neighbour-average predictor for the odd samples."""
+    right = jnp.concatenate([even[..., 1:], even[..., -1:]], axis=-1)
+    return 0.5 * (even + right)
+
+
+def _update(detail):
+    """Update term making coarse samples local averages (CDF(2,2))."""
+    left = jnp.concatenate([detail[..., :1], detail[..., :-1]], axis=-1)
+    return 0.25 * (left + detail)
+
+
+def lift_forward_ref(x):
+    """Forward lifting along the last axis. Returns (coarse, detail)."""
+    assert x.shape[-1] % 2 == 0, "last axis must be even"
+    even = x[..., 0::2]
+    odd = x[..., 1::2]
+    detail = odd - _predict(even)
+    return even + _update(detail), detail
+
+
+def lift_inverse_ref(coarse, detail):
+    """Inverse of :func:`lift_forward_ref`."""
+    even = coarse - _update(detail)
+    odd = detail + _predict(even)
+    stacked = jnp.stack([even, odd], axis=-1)
+    return stacked.reshape(*coarse.shape[:-1], coarse.shape[-1] * 2)
+
+
+def lift3d_forward_ref(x):
+    """Separable 3-D forward lift: one step along each axis.
+
+    Returns the full same-shape array `y` whose [:d,:d,:d] octant is the
+    coarse approximation and the remaining 7 octants are detail subbands
+    (d = D/2). Axis order: last axis first, then middle, then first.
+    """
+    D = x.shape[0]
+    assert x.shape == (D, D, D) and D % 2 == 0
+    # Axis 2.
+    c, d = lift_forward_ref(x)
+    y = jnp.concatenate([c, d], axis=2)
+    # Axis 1.
+    y = jnp.swapaxes(y, 1, 2)
+    c, d = lift_forward_ref(y)
+    y = jnp.concatenate([c, d], axis=2)
+    y = jnp.swapaxes(y, 1, 2)
+    # Axis 0.
+    y = jnp.swapaxes(y, 0, 2)
+    c, d = lift_forward_ref(y)
+    y = jnp.concatenate([c, d], axis=2)
+    y = jnp.swapaxes(y, 0, 2)
+    return y
+
+
+def lift3d_inverse_ref(y):
+    """Inverse of :func:`lift3d_forward_ref`."""
+    D = y.shape[0]
+    h = D // 2
+    # Axis 0.
+    z = jnp.swapaxes(y, 0, 2)
+    z = lift_inverse_ref(z[..., :h], z[..., h:])
+    z = jnp.swapaxes(z, 0, 2)
+    # Axis 1.
+    z = jnp.swapaxes(z, 1, 2)
+    z = lift_inverse_ref(z[..., :h], z[..., h:])
+    z = jnp.swapaxes(z, 1, 2)
+    # Axis 2.
+    return lift_inverse_ref(z[..., :h], z[..., h:])
+
+
+def detail_octants(y):
+    """Flatten the 7 detail octants of a lifted cube (fixed order)."""
+    h = y.shape[0] // 2
+    parts = []
+    for oi in range(2):
+        for oj in range(2):
+            for ok in range(2):
+                if (oi, oj, ok) == (0, 0, 0):
+                    continue
+                parts.append(
+                    y[
+                        oi * h : (oi + 1) * h,
+                        oj * h : (oj + 1) * h,
+                        ok * h : (ok + 1) * h,
+                    ].reshape(-1)
+                )
+    return jnp.concatenate(parts)
+
+
+def unflatten_octants(coarse, det_flat):
+    """Rebuild the full lifted cube from coarse octant + flat details."""
+    h = coarse.shape[0]
+    D = 2 * h
+    y = jnp.zeros((D, D, D), dtype=coarse.dtype)
+    y = y.at[:h, :h, :h].set(coarse)
+    idx = 0
+    csize = h * h * h
+    for oi in range(2):
+        for oj in range(2):
+            for ok in range(2):
+                if (oi, oj, ok) == (0, 0, 0):
+                    continue
+                block = det_flat[idx * csize : (idx + 1) * csize].reshape(h, h, h)
+                y = y.at[
+                    oi * h : (oi + 1) * h,
+                    oj * h : (oj + 1) * h,
+                    ok * h : (ok + 1) * h,
+                ].set(block)
+                idx += 1
+    return y
+
+
+def decompose_ref(x, levels):
+    """Multilevel decomposition into `levels` flattened buffers.
+
+    level 1 (index 0) is the coarsest approximation cube; level i>1 holds
+    the 7 detail octants at scale D/2^(levels-i+1), flattened. Matches the
+    paper's hierarchy: more levels => lower reconstruction error.
+    """
+    D = x.shape[0]
+    assert D % (1 << (levels - 1)) == 0, "D must be divisible by 2^(L-1)"
+    details = []
+    cur = x
+    for _ in range(levels - 1):
+        y = lift3d_forward_ref(cur)
+        h = cur.shape[0] // 2
+        coarse = y[:h, :h, :h]
+        details.append(detail_octants(y))
+        cur = coarse
+    out = [cur.reshape(-1)]
+    out.extend(reversed(details))
+    return out
+
+
+def reconstruct_ref(level_buffers, levels_used, total_levels, D):
+    """Progressive reconstruction from the first `levels_used` buffers.
+
+    Missing detail levels are treated as zero (pure upsampling via the
+    inverse predictor), mirroring the paper's progressive retrieval.
+    """
+    base = D >> (total_levels - 1)
+    cur = level_buffers[0].reshape(base, base, base)
+    for i in range(1, total_levels):
+        h = cur.shape[0]
+        if i < levels_used:
+            det = level_buffers[i]
+        else:
+            det = jnp.zeros(7 * h * h * h, dtype=cur.dtype)
+        y = unflatten_octants(cur, det)
+        cur = lift3d_inverse_ref(y)
+    return cur
+
+
+def linf_rel_error_ref(original, approx):
+    """Relative L-infinity error, Eq. 1 of the paper."""
+    num = jnp.max(jnp.abs(original - approx))
+    den = jnp.max(jnp.abs(original))
+    return num / den

@@ -1,0 +1,102 @@
+"""Layer-2 JAX model: the multilevel refactoring pipeline.
+
+Composes the Layer-1 Pallas lifting kernels into the 3-D separable
+multilevel decomposition / progressive reconstruction used by the Janus
+endpoints (the pMGARD substitute, DESIGN.md section 3), plus the relative
+L-infinity error metric (paper Eq. 1).
+
+These functions are lowered ONCE to HLO text by aot.py; the Rust
+coordinator loads and executes the artifacts via PJRT. Python never runs
+on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lift import lift_forward, lift_inverse
+from .kernels.ref import detail_octants, unflatten_octants
+
+
+def _lift3d(x):
+    """One separable 3-D lift step via the Pallas 1-D kernels."""
+
+    def along_last(a):
+        rows = a.shape[0] * a.shape[1]
+        half = a.shape[2] // 2
+        c, d = lift_forward(a.reshape(rows, a.shape[2]))
+        c = c.reshape(a.shape[0], a.shape[1], half)
+        d = d.reshape(a.shape[0], a.shape[1], half)
+        return jnp.concatenate([c, d], axis=2)
+
+    y = along_last(x)
+    y = jnp.swapaxes(along_last(jnp.swapaxes(y, 1, 2)), 1, 2)
+    y = jnp.swapaxes(along_last(jnp.swapaxes(y, 0, 2)), 0, 2)
+    return y
+
+
+def _unlift3d(y):
+    """Inverse of :func:`_lift3d` via the Pallas inverse kernel."""
+
+    def inv_last(a):
+        rows = a.shape[0] * a.shape[1]
+        half = a.shape[2] // 2
+        c = a[:, :, :half].reshape(rows, half)
+        d = a[:, :, half:].reshape(rows, half)
+        x = lift_inverse(c, d)
+        return x.reshape(a.shape[0], a.shape[1], a.shape[2])
+
+    z = jnp.swapaxes(inv_last(jnp.swapaxes(y, 0, 2)), 0, 2)
+    z = jnp.swapaxes(inv_last(jnp.swapaxes(z, 1, 2)), 1, 2)
+    return inv_last(z)
+
+
+def refactor(x, levels):
+    """Decompose a (D, D, D) volume into `levels` flat buffers.
+
+    Returns a tuple: (level_1, ..., level_L) where level 1 is the coarsest
+    approximation and later levels add finer detail octants.
+    """
+    details = []
+    cur = x
+    for _ in range(levels - 1):
+        y = _lift3d(cur)
+        h = cur.shape[0] // 2
+        details.append(detail_octants(y))
+        cur = y[:h, :h, :h]
+    out = [cur.reshape(-1)]
+    out.extend(reversed(details))
+    return tuple(out)
+
+
+def reconstruct(level_buffers, levels_used, total_levels, D):
+    """Progressive reconstruction from the first `levels_used` buffers.
+
+    Missing detail levels are zero-filled (smooth upsampling through the
+    inverse predictor).
+    """
+    base = D >> (total_levels - 1)
+    cur = level_buffers[0].reshape(base, base, base)
+    for i in range(1, total_levels):
+        h = cur.shape[0]
+        if i < levels_used:
+            det = level_buffers[i]
+        else:
+            det = jnp.zeros(7 * h * h * h, dtype=cur.dtype)
+        cur = _unlift3d(unflatten_octants(cur, det))
+    return cur
+
+
+def linf_rel_error(original, approx):
+    """Relative L-infinity error (paper Eq. 1)."""
+    return jnp.max(jnp.abs(original - approx)) / jnp.max(jnp.abs(original))
+
+
+def level_sizes(D, levels):
+    """Float32 byte size of each level buffer for a (D, D, D) volume."""
+    base = D >> (levels - 1)
+    sizes = [base**3 * 4]
+    h = base
+    for _ in range(1, levels):
+        sizes.append(7 * h**3 * 4)
+        h *= 2
+    return sizes

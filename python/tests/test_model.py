@@ -1,0 +1,88 @@
+"""L2 correctness: multilevel refactor / progressive reconstruction."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_volume(d, seed):
+    return jnp.array(np.random.RandomState(seed).randn(d, d, d), jnp.float32)
+
+
+def smooth_volume(d, seed, kmax=2):
+    rs = np.random.RandomState(seed)
+    g = np.stack(
+        np.meshgrid(*[np.linspace(0, 2 * np.pi, d, endpoint=False)] * 3, indexing="ij")
+    )
+    f = np.ones((d, d, d)) * 3.0
+    for _ in range(12):
+        k = rs.randint(1, kmax + 1, 3)
+        ph = rs.rand(3) * 2 * np.pi
+        amp = 1.0 / (k.sum() ** 2)
+        f += (
+            amp
+            * np.cos(k[0] * g[0] + ph[0])
+            * np.cos(k[1] * g[1] + ph[1])
+            * np.cos(k[2] * g[2] + ph[2])
+        )
+    return jnp.array(f, jnp.float32)
+
+
+@pytest.mark.parametrize("d,levels", [(16, 2), (16, 3), (32, 4), (64, 4)])
+def test_full_roundtrip_exact(d, levels):
+    x = rand_volume(d, 1)
+    bufs = model.refactor(x, levels)
+    xi = model.reconstruct(list(bufs), levels, levels, d)
+    np.testing.assert_allclose(xi, x, rtol=1e-4, atol=1e-4)
+
+
+def test_matches_reference_decomposition():
+    x = rand_volume(32, 2)
+    got = model.refactor(x, 4)
+    want = ref.decompose_ref(x, 4)
+    assert len(got) == len(want) == 4
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_level_sizes_match_buffers():
+    x = rand_volume(32, 3)
+    bufs = model.refactor(x, 4)
+    sizes = model.level_sizes(32, 4)
+    assert [b.size * 4 for b in bufs] == sizes
+    # Sizes grow monotonically (paper: S_1 < S_2 < ... < S_L).
+    assert all(sizes[i] < sizes[i + 1] for i in range(len(sizes) - 1))
+
+
+def test_progressive_error_decreases_on_smooth_field():
+    d = 32
+    x = smooth_volume(d, 4)
+    bufs = model.refactor(x, 4)
+    errs = [
+        float(model.linf_rel_error(x, model.reconstruct(list(bufs), u, 4, d)))
+        for u in range(1, 5)
+    ]
+    for a, b in zip(errs, errs[1:]):
+        assert a > b, f"eps must strictly decrease: {errs}"
+    assert errs[-1] < 1e-5, f"full reconstruction eps too high: {errs[-1]}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_roundtrip_property_16(seed):
+    x = rand_volume(16, seed)
+    bufs = model.refactor(x, 3)
+    xi = model.reconstruct(list(bufs), 3, 3, 16)
+    np.testing.assert_allclose(xi, x, rtol=1e-4, atol=1e-4)
+
+
+def test_linf_error_metric():
+    a = jnp.ones((4, 4, 4), jnp.float32) * 2.0
+    b = a.at[0, 0, 0].set(2.5)
+    # max|a-b| / max|a| = 0.5 / 2.0
+    assert abs(float(model.linf_rel_error(a, b)) - 0.25) < 1e-6
+    assert float(model.linf_rel_error(a, a)) == 0.0

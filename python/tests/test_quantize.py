@@ -1,0 +1,48 @@
+"""Pallas quantize kernel vs oracle + bound properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quantize import dequantize_ref, quantize, quantize_ref
+
+
+def rand(n, seed, scale=4.0):
+    return jnp.array(np.random.RandomState(seed).randn(n) * scale, jnp.float32)
+
+
+def test_kernel_matches_ref():
+    x = rand(4096, 0)
+    q, s = quantize(x, e_max=3, planes=16)
+    qr, sr = quantize_ref(x, e_max=3, planes=16)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_small_input_single_block():
+    x = rand(64, 1)
+    q, s = quantize(x, e_max=3, planes=12)
+    qr, sr = quantize_ref(x, e_max=3, planes=12)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), planes=st.integers(6, 22))
+def test_roundtrip_error_within_half_lsb(seed, planes):
+    x = rand(1024, seed, scale=2.0)
+    e_max = 2  # |x| < 4 = 2^2 whp; clip to be safe
+    x = jnp.clip(x, -3.99, 3.99)
+    q, s = quantize(x, e_max=e_max, planes=planes)
+    back = dequantize_ref(q, s, e_max=e_max, planes=planes)
+    lsb = 2.0 ** (e_max - planes)
+    # 0.5 lsb from rounding, plus up to 0.5 lsb when the top-of-range
+    # clamp (q <= 2^planes - 1) engages near |x| = 2^e_max.
+    assert float(jnp.max(jnp.abs(back - x))) <= 1.0 * lsb + 1e-7
+
+
+def test_zero_maps_to_zero():
+    x = jnp.zeros(1024, jnp.float32)
+    q, s = quantize(x, e_max=0, planes=10)
+    assert int(jnp.sum(q)) == 0
+    assert int(jnp.sum(s)) == 0

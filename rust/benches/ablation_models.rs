@@ -1,0 +1,124 @@
+//! Ablations on the optimization machinery (beyond the paper's figures;
+//! DESIGN.md §5 "Ablations").
+//!
+//! 1. Eq. 6 vs Eq. 7: the p-model crossover at λ·n/r = 1 — how far the
+//!    two estimates diverge across λ, justifying the regime dispatch.
+//! 2. Eq. 12 solver: exhaustive vs coordinate descent — solution quality
+//!    and wall time (the scaling story for L > 4).
+//! 3. T_W sensitivity: adaptive Alg. 1 total time vs measurement window
+//!    under HMM loss (the paper fixes T_W = 3 s; this shows the tradeoff).
+
+use janus::metrics::bench::{bench_scale, time_it, BenchTable};
+use janus::model::error_model::{
+    optimize_deadline_coordinate, optimize_deadline_exhaustive,
+};
+use janus::model::prob::{p_unrecoverable_high, p_unrecoverable_low};
+use janus::model::{LevelSchedule, NetParams};
+use janus::sim::estimator::{tracking_rmse, EwmaEstimator, LambdaEstimator, WindowEstimator};
+use janus::sim::{run_guaranteed_error, HmmLoss, ParityPolicy};
+use janus::util::stats;
+
+fn main() {
+    // --- 1. Eq. 6 vs Eq. 7 across λ ---
+    let mut t1 = BenchTable::new(
+        "ablation_p_models",
+        vec!["lambda", "mean_losses_per_ftg", "p_eq6_m4", "p_eq7_m4", "ratio"],
+    );
+    t1.header();
+    for lambda in [10.0, 19.0, 100.0, 383.0, 598.0, 700.0, 957.0, 2000.0] {
+        let p = NetParams::paper_default(lambda);
+        let mu = lambda * p.n as f64 / p.r;
+        let p6 = p_unrecoverable_low(&p, 4);
+        let p7 = p_unrecoverable_high(&p, 4);
+        t1.row(
+            format!("λ={lambda}"),
+            vec![
+                format!("{mu:.3}"),
+                format!("{p6:.3e}"),
+                format!("{p7:.3e}"),
+                format!("{:.2}", p7 / p6.max(1e-300)),
+            ],
+        );
+    }
+    t1.save().unwrap();
+
+    // --- 2. Solver comparison ---
+    let sched = LevelSchedule::paper_nyx();
+    let mut t2 = BenchTable::new(
+        "ablation_solvers",
+        vec!["case", "exhaustive_err", "cd_err", "exh_ms", "cd_ms", "same_plan"],
+    );
+    t2.header();
+    for (lambda, tau) in [(19.0, 378.03), (383.0, 401.11), (957.0, 429.75)] {
+        let p = NetParams::paper_default(lambda);
+        let (ex, ex_s) = time_it(|| optimize_deadline_exhaustive(&p, &sched, tau).unwrap());
+        let (cd, cd_s) = time_it(|| optimize_deadline_coordinate(&p, &sched, tau, 3).unwrap());
+        t2.row(
+            format!("λ={lambda} τ={tau}"),
+            vec![
+                format!("{:.3e}", ex.expected_error),
+                format!("{:.3e}", cd.expected_error),
+                format!("{:.1}", ex_s * 1e3),
+                format!("{:.1}", cd_s * 1e3),
+                format!("{}", ex.m == cd.m),
+            ],
+        );
+        assert!(
+            cd.expected_error <= ex.expected_error * 1.05 + 1e-12,
+            "coordinate descent degraded > 5%"
+        );
+    }
+    t2.save().unwrap();
+
+    // --- 3. T_W sensitivity under HMM loss ---
+    let scale = bench_scale(10);
+    let sched_s = LevelSchedule::paper_nyx_scaled(scale);
+    let params = NetParams::paper_default(383.0);
+    let ttl = 1.0 / params.r;
+    let mut t3 = BenchTable::new(
+        "ablation_tw",
+        vec!["T_W_s", "total_time_s", "m_changes"],
+    );
+    t3.header();
+    let base_tw = if scale <= 1 { 3.0 } else { 3.0 / scale as f64 };
+    for factor in [0.25, 0.5, 1.0, 2.0, 8.0] {
+        let t_w = base_tw * factor;
+        let mut times = Vec::new();
+        let mut changes = Vec::new();
+        for seed in 0..3 {
+            let mut loss = HmmLoss::paper_default_with_ttl(500 + seed, ttl);
+            let res = run_guaranteed_error(
+                &mut loss,
+                &params,
+                &sched_s,
+                4,
+                &ParityPolicy::Adaptive { t_w, initial_lambda: 383.0 },
+            );
+            times.push(res.total_time);
+            changes.push(res.m_changes.len() as f64);
+        }
+        t3.row(
+            format!("{t_w:.3}"),
+            vec![BenchTable::cell(&times), format!("{:.1}", stats::mean(&changes))],
+        );
+    }
+    t3.save().unwrap();
+
+    // --- 4. λ estimator comparison on the HMM trace ---
+    let mut t4 = BenchTable::new("ablation_estimators", vec!["estimator", "rmse_losses_per_s"]);
+    t4.header();
+    let mut estimators: Vec<Box<dyn LambdaEstimator>> = vec![
+        Box::new(WindowEstimator::new(3.0)),
+        Box::new(WindowEstimator::new(1.0)),
+        Box::new(EwmaEstimator::new(1.0, 0.3)),
+        Box::new(EwmaEstimator::new(0.5, 0.2)),
+    ];
+    let labels = ["window T_W=3", "window T_W=1", "ewma 1s α=0.3", "ewma 0.5s α=0.2"];
+    for (est, label) in estimators.iter_mut().zip(labels) {
+        let mut loss = HmmLoss::paper_default_with_ttl(9, 1.0 / 19_144.0);
+        let rmse = tracking_rmse(est.as_mut(), &mut loss, 19_144.0, 200.0);
+        t4.row(label, vec![format!("{rmse:.1}")]);
+    }
+    t4.save().unwrap();
+    println!("\nablation_models complete.");
+}

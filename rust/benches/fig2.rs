@@ -1,0 +1,95 @@
+//! Fig. 2 — Total time for transferring data with guaranteed error bound
+//! under static packet loss rates.
+//!
+//! Three panels (λ = 19 / 383 / 957 losses/s). Each panel: TCP baseline,
+//! UDP+EC simulation for m = 0..16, and the model's E[T_total] (Eq. 2/8)
+//! for the same m — the paper's claim is that model and simulation align
+//! and that an interior optimal m appears as λ grows.
+//!
+//! `JANUS_SCALE=1 cargo bench --bench fig2` reproduces the full 26.75 GB
+//! workload; the default scale (10) keeps the sweep under a minute and
+//! scales all times by 1/10.
+
+use janus::metrics::bench::{bench_runs, bench_scale, BenchTable};
+use janus::model::{
+    expected_time_curve, LevelSchedule, NetParams,
+};
+use janus::sim::{run_guaranteed_error, run_tcp, BernoulliLoss, ParityPolicy, StaticLoss};
+use janus::util::stats;
+
+fn main() {
+    let scale = bench_scale(10);
+    let runs = bench_runs(3);
+    let sched = if scale <= 1 {
+        LevelSchedule::paper_nyx()
+    } else {
+        LevelSchedule::paper_nyx_scaled(scale)
+    };
+    let bytes = sched.total_bytes(4);
+    println!(
+        "fig2: workload {} MB (scale 1/{scale}), {runs} seeds per point",
+        bytes / (1024 * 1024)
+    );
+
+    for (panel, lambda) in [("a", 19.0), ("b", 383.0), ("c", 957.0)] {
+        let params = NetParams::paper_default(lambda);
+        let ttl = 1.0 / params.r;
+        let mut table = BenchTable::new(
+            &format!("fig2{panel}_lambda{}", lambda as u64),
+            vec!["m", "sim_time_s", "model_time_s", "retrans_ftgs"],
+        );
+        table.header();
+
+        // TCP baseline (loss as per-packet fraction λ/r, see DESIGN.md §3).
+        let tcp_times: Vec<f64> = (0..runs)
+            .map(|seed| {
+                let mut loss = BernoulliLoss::new(lambda / params.r, 7_000 + seed as u64);
+                run_tcp(&mut loss, &params, bytes).total_time
+            })
+            .collect();
+        table.row("TCP", vec![BenchTable::cell(&tcp_times), "-".into(), "-".into()]);
+
+        // Model curve for every m.
+        let curve = expected_time_curve(&params, bytes, 16);
+
+        for m in 0..=16usize {
+            let mut times = Vec::new();
+            let mut retrans = Vec::new();
+            for seed in 0..runs {
+                let mut loss =
+                    StaticLoss::with_ttl(lambda, 100 * (m as u64 + 1) + seed as u64, ttl);
+                let res =
+                    run_guaranteed_error(&mut loss, &params, &sched, 4, &ParityPolicy::Static(m));
+                times.push(res.total_time);
+                retrans.push(res.ftgs_retransmitted as f64);
+            }
+            table.row(
+                format!("UDP+EC m={m}"),
+                vec![
+                    BenchTable::cell(&times),
+                    format!("{:.2}", curve[m].expected_time),
+                    format!("{:.0}", stats::mean(&retrans)),
+                ],
+            );
+        }
+        table.save().unwrap();
+
+        // Shape checks mirrored from the paper's observations.
+        let sim_m = |m: usize| {
+            let mut loss = StaticLoss::with_ttl(lambda, 4242 + m as u64, ttl);
+            run_guaranteed_error(&mut loss, &params, &sched, 4, &ParityPolicy::Static(m)).total_time
+        };
+        if lambda < 100.0 {
+            // (a): parity only adds overhead at low loss.
+            assert!(sim_m(0) < sim_m(16), "fig2a shape: m=0 should beat m=16");
+        } else {
+            // (b)/(c): an interior m beats both endpoints.
+            let best_interior = (2..=12).map(sim_m).fold(f64::INFINITY, f64::min);
+            assert!(
+                best_interior < sim_m(0),
+                "fig2{panel} shape: interior m should beat m=0"
+            );
+        }
+    }
+    println!("\nfig2 complete.");
+}

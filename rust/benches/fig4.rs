@@ -1,0 +1,109 @@
+//! Fig. 4 — Total time for transferring data with guaranteed error bound
+//! under time-varying (HMM) packet loss rates.
+//!
+//! Compares TCP, static UDP+EC (m = 0..16) and the adaptive protocol
+//! (Alg. 1). Paper claim: the adaptive protocol beats the best static
+//! configuration (by ~30 s on the full workload, 388.8 s total).
+
+use janus::metrics::bench::{bench_runs, bench_scale, BenchTable};
+use janus::model::{LevelSchedule, NetParams};
+use janus::sim::{
+    run_guaranteed_error, run_tcp, FractionOfRate, HmmLoss, ParityPolicy,
+};
+use janus::util::stats;
+
+fn main() {
+    let scale = bench_scale(10);
+    let runs = bench_runs(5);
+    let sched = if scale <= 1 {
+        LevelSchedule::paper_nyx()
+    } else {
+        LevelSchedule::paper_nyx_scaled(scale)
+    };
+    let params = NetParams::paper_default(383.0); // λ field unused by HMM
+    let ttl = 1.0 / params.r;
+    let bytes = sched.total_bytes(4);
+
+    // NOTE on T_W scaling: the HMM holds each state ~25 s regardless of
+    // workload scale, so at scale > 1 the transfer spans fewer states.
+    // We keep the paper's T_W = 3 s at scale 1 and shrink it with the
+    // workload so adaptation still sees several windows per state.
+    let t_w = if scale <= 1 { 3.0 } else { (3.0 / scale as f64).max(0.3) };
+
+    let mut table = BenchTable::new(
+        "fig4_hmm",
+        vec!["config", "total_time_s", "rounds", "lost_frags"],
+    );
+    table.header();
+
+    // TCP over the same HMM regime (per-packet fraction λ(t)/r).
+    let tcp_times: Vec<f64> = (0..runs)
+        .map(|seed| {
+            let inner = HmmLoss::paper_default(seed as u64);
+            let mut loss = FractionOfRate::new(inner, params.r, 50 + seed as u64);
+            run_tcp(&mut loss, &params, bytes).total_time
+        })
+        .collect();
+    table.row("TCP", vec![BenchTable::cell(&tcp_times), "-".into(), "-".into()]);
+
+    let mut best_static = f64::INFINITY;
+    for m in 0..=16usize {
+        let mut times = Vec::new();
+        let mut rounds = Vec::new();
+        let mut lost = Vec::new();
+        for seed in 0..runs {
+            let mut loss = HmmLoss::paper_default_with_ttl(300 + seed as u64, ttl);
+            let res =
+                run_guaranteed_error(&mut loss, &params, &sched, 4, &ParityPolicy::Static(m));
+            times.push(res.total_time);
+            rounds.push(res.rounds as f64);
+            lost.push(res.fragments_lost as f64);
+        }
+        best_static = best_static.min(stats::median(&times));
+        table.row(
+            format!("static m={m}"),
+            vec![
+                BenchTable::cell(&times),
+                format!("{:.1}", stats::mean(&rounds)),
+                format!("{:.0}", stats::mean(&lost)),
+            ],
+        );
+    }
+
+    let mut adap_times = Vec::new();
+    let mut adap_rounds = Vec::new();
+    let mut adap_lost = Vec::new();
+    for seed in 0..runs {
+        let mut loss = HmmLoss::paper_default_with_ttl(300 + seed as u64, ttl);
+        let res = run_guaranteed_error(
+            &mut loss,
+            &params,
+            &sched,
+            4,
+            &ParityPolicy::Adaptive { t_w, initial_lambda: 383.0 },
+        );
+        adap_times.push(res.total_time);
+        adap_rounds.push(res.rounds as f64);
+        adap_lost.push(res.fragments_lost as f64);
+    }
+    table.row(
+        "adaptive (Alg.1)",
+        vec![
+            BenchTable::cell(&adap_times),
+            format!("{:.1}", stats::mean(&adap_rounds)),
+            format!("{:.0}", stats::mean(&adap_lost)),
+        ],
+    );
+    table.save().unwrap();
+
+    let adaptive = stats::median(&adap_times);
+    println!(
+        "\nadaptive {adaptive:.2}s vs best static {best_static:.2}s vs TCP {:.2}s",
+        stats::median(&tcp_times)
+    );
+    assert!(
+        adaptive <= best_static * 1.02,
+        "adaptive ({adaptive:.2}) should match or beat best static ({best_static:.2})"
+    );
+    println!("fig4 complete.");
+}

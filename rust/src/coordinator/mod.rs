@@ -1,0 +1,21 @@
+//! The Janus coordinator — the paper's system contribution over real
+//! transports (§4, §5.3): adaptive sender/receiver protocol engines,
+//! wire format, and session harness.
+//!
+//! * [`packet`] — fragment + control wire format (Protobuf substitute).
+//! * [`sender`] — Alg. 1/Alg. 2 sender: parity-generation thread feeding a
+//!   paced transmission thread, λ-adaptive redundancy, passive
+//!   retransmission.
+//! * [`receiver`] — FTG reassembly, Reed–Solomon recovery, λ measurement
+//!   window, lost-FTG feedback.
+//! * [`session`] — run a sender/receiver pair over connected channels.
+
+pub mod packet;
+pub mod receiver;
+pub mod sender;
+pub mod session;
+
+pub use packet::{FragmentHeader, Manifest, Packet, WireError};
+pub use receiver::{run_receiver, ReceiverConfig, ReceiverReport};
+pub use sender::{run_sender, Contract, SenderConfig, SenderReport};
+pub use session::run_session;

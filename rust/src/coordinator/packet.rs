@@ -1,0 +1,337 @@
+//! Wire format for Janus fragments and control messages.
+//!
+//! The paper's prototype (§5.3.1) uses Protobuf to carry erasure-coding
+//! metadata — level, FTG id, redundancy m — alongside each fragment. We
+//! use a hand-rolled fixed layout (little-endian) with a CRC32 trailer:
+//! no proto toolchain in the offline environment, and a fixed layout
+//! keeps the per-packet encode/decode cost off the hot path's heap.
+
+use crc32fast::Hasher;
+
+/// Maximum datagram we ever emit (fragment header + 4 KiB payload fits
+/// comfortably; control messages are small).
+pub const MAX_DATAGRAM: usize = 9 * 1024;
+
+/// A parsed Janus packet.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Packet {
+    /// One erasure-coded fragment of a fault-tolerant group.
+    Fragment(FragmentHeader, Vec<u8>),
+    /// Receiver → sender: freshly measured packet-loss rate (λ̂, /s).
+    LambdaUpdate { lambda: f64 },
+    /// Sender → receiver: pass `pass` finished (0 = initial transmission).
+    EndOfPass { pass: u32 },
+    /// Receiver → sender: FTGs with unrecoverable losses in this pass.
+    LostList { ftgs: Vec<(u8, u32)> },
+    /// Receiver → sender: transfer complete.
+    Done,
+    /// Sender → receiver: transfer manifest (must precede fragments).
+    Manifest(Manifest),
+    /// Receiver → sender: manifest acknowledged, start sending.
+    ManifestAck,
+}
+
+/// Fragment metadata (the paper's per-packet erasure-coding metadata).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FragmentHeader {
+    /// Refactoring level this fragment belongs to (0-based).
+    pub level: u8,
+    /// FTG index within the level.
+    pub ftg: u32,
+    /// Fragment index within the FTG: `0..k` data, `k..k+m` parity.
+    pub index: u8,
+    /// Data fragments in this FTG.
+    pub k: u8,
+    /// Parity fragments in this FTG (the redundancy metadata of §4.2).
+    pub m: u8,
+    /// Global wire sequence number (loss detection at the receiver).
+    pub seq: u64,
+    /// Retransmission pass that produced this copy.
+    pub pass: u32,
+}
+
+/// Transfer manifest: level schedule + coding geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Fragments per FTG (n = k + m is constant; k varies per FTG).
+    pub n: u8,
+    /// Fragment payload size in bytes.
+    pub s: u32,
+    /// Per-level (byte size, ε) pairs, in transmission order.
+    pub levels: Vec<(u64, f64)>,
+    /// Contract: 0 = guaranteed error bound (Alg. 1, retransmission on),
+    /// 1 = guaranteed time (Alg. 2, no retransmission).
+    pub contract: u8,
+}
+
+const KIND_FRAGMENT: u8 = 1;
+const KIND_LAMBDA: u8 = 2;
+const KIND_END: u8 = 3;
+const KIND_LOST: u8 = 4;
+const KIND_DONE: u8 = 5;
+const KIND_MANIFEST: u8 = 6;
+const KIND_MANIFEST_ACK: u8 = 7;
+
+fn crc(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+/// Serialize a fragment without constructing a [`Packet`] (the sender hot
+/// path: avoids cloning the 4 KiB payload into the enum).
+pub fn encode_fragment_into(h: &FragmentHeader, payload: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.push(KIND_FRAGMENT);
+    out.push(h.level);
+    out.extend_from_slice(&h.ftg.to_le_bytes());
+    out.push(h.index);
+    out.push(h.k);
+    out.push(h.m);
+    out.extend_from_slice(&h.seq.to_le_bytes());
+    out.extend_from_slice(&h.pass.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let c = crc(out);
+    out.extend_from_slice(&c.to_le_bytes());
+}
+
+/// Packet (de)serialization error.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum WireError {
+    #[error("datagram too short ({0} bytes)")]
+    Truncated(usize),
+    #[error("bad checksum")]
+    BadChecksum,
+    #[error("unknown packet kind {0}")]
+    UnknownKind(u8),
+}
+
+impl Packet {
+    /// Serialize into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize, reusing `out` (cleared first). Appends a CRC32 trailer.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        match self {
+            Packet::Fragment(h, payload) => {
+                out.push(KIND_FRAGMENT);
+                out.push(h.level);
+                out.extend_from_slice(&h.ftg.to_le_bytes());
+                out.push(h.index);
+                out.push(h.k);
+                out.push(h.m);
+                out.extend_from_slice(&h.seq.to_le_bytes());
+                out.extend_from_slice(&h.pass.to_le_bytes());
+                out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                out.extend_from_slice(payload);
+            }
+            Packet::LambdaUpdate { lambda } => {
+                out.push(KIND_LAMBDA);
+                out.extend_from_slice(&lambda.to_le_bytes());
+            }
+            Packet::EndOfPass { pass } => {
+                out.push(KIND_END);
+                out.extend_from_slice(&pass.to_le_bytes());
+            }
+            Packet::LostList { ftgs } => {
+                out.push(KIND_LOST);
+                out.extend_from_slice(&(ftgs.len() as u32).to_le_bytes());
+                for &(level, ftg) in ftgs {
+                    out.push(level);
+                    out.extend_from_slice(&ftg.to_le_bytes());
+                }
+            }
+            Packet::Done => out.push(KIND_DONE),
+            Packet::Manifest(m) => {
+                out.push(KIND_MANIFEST);
+                out.push(m.n);
+                out.extend_from_slice(&m.s.to_le_bytes());
+                out.push(m.contract);
+                out.extend_from_slice(&(m.levels.len() as u32).to_le_bytes());
+                for &(size, eps) in &m.levels {
+                    out.extend_from_slice(&size.to_le_bytes());
+                    out.extend_from_slice(&eps.to_le_bytes());
+                }
+            }
+            Packet::ManifestAck => out.push(KIND_MANIFEST_ACK),
+        }
+        let c = crc(out);
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+
+    /// Parse a datagram (checks the CRC32 trailer).
+    pub fn decode(buf: &[u8]) -> Result<Packet, WireError> {
+        if buf.len() < 5 {
+            return Err(WireError::Truncated(buf.len()));
+        }
+        let (body, trailer) = buf.split_at(buf.len() - 4);
+        let want = u32::from_le_bytes(trailer.try_into().unwrap());
+        if crc(body) != want {
+            return Err(WireError::BadChecksum);
+        }
+        let kind = body[0];
+        let rest = &body[1..];
+        let need = |n: usize| {
+            if rest.len() < n {
+                Err(WireError::Truncated(buf.len()))
+            } else {
+                Ok(())
+            }
+        };
+        match kind {
+            KIND_FRAGMENT => {
+                need(1 + 4 + 1 + 1 + 1 + 8 + 4 + 4)?;
+                let level = rest[0];
+                let ftg = u32::from_le_bytes(rest[1..5].try_into().unwrap());
+                let index = rest[5];
+                let k = rest[6];
+                let m = rest[7];
+                let seq = u64::from_le_bytes(rest[8..16].try_into().unwrap());
+                let pass = u32::from_le_bytes(rest[16..20].try_into().unwrap());
+                let len = u32::from_le_bytes(rest[20..24].try_into().unwrap()) as usize;
+                if rest.len() < 24 + len {
+                    return Err(WireError::Truncated(buf.len()));
+                }
+                Ok(Packet::Fragment(
+                    FragmentHeader { level, ftg, index, k, m, seq, pass },
+                    rest[24..24 + len].to_vec(),
+                ))
+            }
+            KIND_LAMBDA => {
+                need(8)?;
+                Ok(Packet::LambdaUpdate {
+                    lambda: f64::from_le_bytes(rest[..8].try_into().unwrap()),
+                })
+            }
+            KIND_END => {
+                need(4)?;
+                Ok(Packet::EndOfPass {
+                    pass: u32::from_le_bytes(rest[..4].try_into().unwrap()),
+                })
+            }
+            KIND_LOST => {
+                need(4)?;
+                let count = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+                need(4 + count * 5)?;
+                let mut ftgs = Vec::with_capacity(count);
+                for i in 0..count {
+                    let off = 4 + i * 5;
+                    ftgs.push((
+                        rest[off],
+                        u32::from_le_bytes(rest[off + 1..off + 5].try_into().unwrap()),
+                    ));
+                }
+                Ok(Packet::LostList { ftgs })
+            }
+            KIND_DONE => Ok(Packet::Done),
+            KIND_MANIFEST => {
+                need(1 + 4 + 1 + 4)?;
+                let n = rest[0];
+                let s = u32::from_le_bytes(rest[1..5].try_into().unwrap());
+                let contract = rest[5];
+                let count = u32::from_le_bytes(rest[6..10].try_into().unwrap()) as usize;
+                need(10 + count * 16)?;
+                let mut levels = Vec::with_capacity(count);
+                for i in 0..count {
+                    let off = 10 + i * 16;
+                    levels.push((
+                        u64::from_le_bytes(rest[off..off + 8].try_into().unwrap()),
+                        f64::from_le_bytes(rest[off + 8..off + 16].try_into().unwrap()),
+                    ));
+                }
+                Ok(Packet::Manifest(Manifest { n, s, levels, contract }))
+            }
+            KIND_MANIFEST_ACK => Ok(Packet::ManifestAck),
+            k => Err(WireError::UnknownKind(k)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(p: Packet) {
+        let buf = p.encode();
+        assert!(buf.len() <= MAX_DATAGRAM);
+        let got = Packet::decode(&buf).unwrap();
+        assert_eq!(got, p);
+    }
+
+    #[test]
+    fn fragment_roundtrip() {
+        roundtrip(Packet::Fragment(
+            FragmentHeader { level: 2, ftg: 12345, index: 31, k: 24, m: 8, seq: 987654321, pass: 3 },
+            vec![0xAB; 4096],
+        ));
+    }
+
+    #[test]
+    fn empty_payload_fragment() {
+        roundtrip(Packet::Fragment(
+            FragmentHeader { level: 0, ftg: 0, index: 0, k: 1, m: 0, seq: 0, pass: 0 },
+            vec![],
+        ));
+    }
+
+    #[test]
+    fn control_roundtrips() {
+        roundtrip(Packet::LambdaUpdate { lambda: 383.25 });
+        roundtrip(Packet::EndOfPass { pass: 7 });
+        roundtrip(Packet::LostList { ftgs: vec![(0, 1), (3, 99999)] });
+        roundtrip(Packet::LostList { ftgs: vec![] });
+        roundtrip(Packet::Done);
+        roundtrip(Packet::ManifestAck);
+        roundtrip(Packet::Manifest(Manifest {
+            n: 32,
+            s: 4096,
+            levels: vec![(668 << 20, 0.004), (2867 << 20, 0.0005)],
+            contract: 1,
+        }));
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut buf = Packet::LambdaUpdate { lambda: 1.0 }.encode();
+        buf[3] ^= 0x40;
+        assert_eq!(Packet::decode(&buf), Err(WireError::BadChecksum));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let buf = Packet::Done.encode();
+        assert!(matches!(
+            Packet::decode(&buf[..2]),
+            Err(WireError::Truncated(_) | WireError::BadChecksum)
+        ));
+        assert!(matches!(Packet::decode(&[]), Err(WireError::Truncated(0))));
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut buf = vec![0xEEu8];
+        let c = {
+            let mut h = Hasher::new();
+            h.update(&buf);
+            h.finalize()
+        };
+        buf.extend_from_slice(&c.to_le_bytes());
+        assert_eq!(Packet::decode(&buf), Err(WireError::UnknownKind(0xEE)));
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let mut buf = Vec::new();
+        Packet::Done.encode_into(&mut buf);
+        let len1 = buf.len();
+        Packet::LambdaUpdate { lambda: 2.0 }.encode_into(&mut buf);
+        assert_ne!(buf.len(), len1);
+        assert_eq!(Packet::decode(&buf).unwrap(), Packet::LambdaUpdate { lambda: 2.0 });
+    }
+}

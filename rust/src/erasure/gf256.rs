@@ -1,0 +1,300 @@
+//! GF(2^8) arithmetic for Reed–Solomon coding.
+//!
+//! Field: GF(256) with the AES/Rijndael-compatible primitive polynomial
+//! x^8 + x^4 + x^3 + x^2 + 1 (0x11D), generator 2 — the same construction
+//! used by liberasurecode/ISA-L, which the paper benchmarks (§5.2.2).
+//!
+//! Two multiplication strategies:
+//!  * `mul` — log/exp table lookups, used for matrix algebra.
+//!  * `MulTable::apply` / [`mul_slice_add`] — a 2×16-entry split-nibble
+//!    table per constant, applied over byte slices. This is the encode/
+//!    decode inner loop; it avoids the log/exp double lookup and the
+//!    branch on zero, and vectorizes well.
+
+/// Primitive polynomial x^8+x^4+x^3+x^2+1 (0x11D) reduced to 8 bits.
+const POLY: u32 = 0x11D;
+
+/// Exponentiation table: EXP[i] = g^i for g = 2, length 512 to avoid
+/// a modulo in `mul`.
+static EXP: [u8; 512] = build_exp();
+/// Log table: LOG[x] = i such that g^i = x (LOG[0] unused).
+static LOG: [u8; 256] = build_log();
+
+const fn build_exp() -> [u8; 512] {
+    let mut exp = [0u8; 512];
+    let mut x: u32 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= POLY;
+        }
+        i += 1;
+    }
+    // Duplicate so exp[a + b] works without (a + b) % 255.
+    let mut j = 0;
+    while j < 257 {
+        exp[255 + j] = exp[j % 255];
+        j += 1;
+    }
+    exp
+}
+
+const fn build_log() -> [u8; 256] {
+    let exp = build_exp();
+    let mut log = [0u8; 256];
+    let mut i = 0;
+    while i < 255 {
+        log[exp[i] as usize] = i as u8;
+        i += 1;
+    }
+    log
+}
+
+/// Field addition (= subtraction): XOR.
+#[inline(always)]
+pub fn add(a: u8, b: u8) -> u8 {
+    a ^ b
+}
+
+/// Field multiplication via log/exp tables.
+#[inline(always)]
+pub fn mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        EXP[LOG[a as usize] as usize + LOG[b as usize] as usize]
+    }
+}
+
+/// Multiplicative inverse. Panics on zero.
+#[inline]
+pub fn inv(a: u8) -> u8 {
+    assert!(a != 0, "gf256: inverse of zero");
+    EXP[255 - LOG[a as usize] as usize]
+}
+
+/// Field division a / b. Panics when b == 0.
+#[inline]
+pub fn div(a: u8, b: u8) -> u8 {
+    assert!(b != 0, "gf256: division by zero");
+    if a == 0 {
+        0
+    } else {
+        EXP[LOG[a as usize] as usize + 255 - LOG[b as usize] as usize]
+    }
+}
+
+/// a^n by repeated squaring (exponent over the integers).
+pub fn pow(a: u8, n: u64) -> u8 {
+    if n == 0 {
+        return 1;
+    }
+    if a == 0 {
+        return 0;
+    }
+    let e = (LOG[a as usize] as u64 * (n % 255)) % 255;
+    EXP[e as usize]
+}
+
+/// Precomputed split-nibble multiplication table for one constant.
+///
+/// `mul(c, x)` = `lo[x & 15] ^ hi[x >> 4]` — two loads and one XOR per
+/// byte, no branches, friendly to auto-vectorization.
+#[derive(Clone)]
+pub struct MulTable {
+    lo: [u8; 16],
+    hi: [u8; 16],
+}
+
+impl MulTable {
+    pub fn new(c: u8) -> Self {
+        let mut lo = [0u8; 16];
+        let mut hi = [0u8; 16];
+        for i in 0..16u8 {
+            lo[i as usize] = mul(c, i);
+            hi[i as usize] = mul(c, i << 4);
+        }
+        MulTable { lo, hi }
+    }
+
+    /// y[i] ^= c * x[i] over slices.
+    ///
+    /// Hot loop of Reed–Solomon encode/decode. On x86-64 with SSSE3 the
+    /// split-nibble tables map directly onto `pshufb` (16 parallel table
+    /// lookups per instruction — the ISA-L/liberasurecode technique the
+    /// paper's `r_ec` numbers come from); elsewhere a scalar loop.
+    #[inline]
+    pub fn mul_slice_add(&self, x: &[u8], y: &mut [u8]) {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("ssse3") {
+                unsafe { self.mul_slice_add_ssse3(x, y) };
+                return;
+            }
+        }
+        self.mul_slice_add_scalar(x, y);
+    }
+
+    #[inline]
+    fn mul_slice_add_scalar(&self, x: &[u8], y: &mut [u8]) {
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            *yi ^= self.lo[(xi & 0x0F) as usize] ^ self.hi[(xi >> 4) as usize];
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "ssse3")]
+    unsafe fn mul_slice_add_ssse3(&self, x: &[u8], y: &mut [u8]) {
+        use std::arch::x86_64::*;
+        let lo_tbl = _mm_loadu_si128(self.lo.as_ptr() as *const __m128i);
+        let hi_tbl = _mm_loadu_si128(self.hi.as_ptr() as *const __m128i);
+        let mask = _mm_set1_epi8(0x0F);
+        let chunks = x.len() / 16;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..chunks {
+            let xv = _mm_loadu_si128(xp.add(i * 16) as *const __m128i);
+            let lo_idx = _mm_and_si128(xv, mask);
+            let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
+            let prod = _mm_xor_si128(
+                _mm_shuffle_epi8(lo_tbl, lo_idx),
+                _mm_shuffle_epi8(hi_tbl, hi_idx),
+            );
+            let yv = _mm_loadu_si128(yp.add(i * 16) as *const __m128i);
+            _mm_storeu_si128(yp.add(i * 16) as *mut __m128i, _mm_xor_si128(yv, prod));
+        }
+        let done = chunks * 16;
+        self.mul_slice_add_scalar(&x[done..], &mut y[done..]);
+    }
+
+    /// y[i] = c * x[i] over slices.
+    #[inline]
+    pub fn mul_slice(&self, x: &[u8], y: &mut [u8]) {
+        debug_assert_eq!(x.len(), y.len());
+        y.fill(0);
+        self.mul_slice_add(x, y);
+    }
+}
+
+/// y ^= c * x without a precomputed table (used on cold paths).
+pub fn mul_slice_add(c: u8, x: &[u8], y: &mut [u8]) {
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            *yi ^= xi;
+        }
+        return;
+    }
+    MulTable::new(c).mul_slice_add(x, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Slow bit-by-bit ("Russian peasant") reference multiply.
+    fn mul_ref(mut a: u8, mut b: u8) -> u8 {
+        let mut p = 0u8;
+        while b != 0 {
+            if b & 1 != 0 {
+                p ^= a;
+            }
+            let hi = a & 0x80 != 0;
+            a <<= 1;
+            if hi {
+                a ^= (POLY & 0xFF) as u8;
+            }
+            b >>= 1;
+        }
+        p
+    }
+
+    #[test]
+    fn mul_matches_reference_everywhere() {
+        for a in 0..=255u8 {
+            for b in 0..=255u8 {
+                assert_eq!(mul(a, b), mul_ref(a, b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn field_axioms_hold() {
+        for a in 1..=255u8 {
+            assert_eq!(mul(a, inv(a)), 1, "a={a}");
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(mul(a, 0), 0);
+            assert_eq!(div(a, a), 1);
+        }
+        // Distributivity spot-check over all triples on a stride.
+        for a in (0..=255u8).step_by(7) {
+            for b in (0..=255u8).step_by(11) {
+                for c in (0..=255u8).step_by(13) {
+                    assert_eq!(mul(a, add(b, c)), add(mul(a, b), mul(a, c)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pow_consistent_with_mul() {
+        for a in 1..=255u8 {
+            let mut acc = 1u8;
+            for n in 0..=8u64 {
+                assert_eq!(pow(a, n), acc, "a={a} n={n}");
+                acc = mul(acc, a);
+            }
+            assert_eq!(pow(a, 255), 1, "Fermat: a^255 = 1");
+        }
+    }
+
+    #[test]
+    fn generator_has_full_order() {
+        let mut seen = [false; 256];
+        let mut x = 1u8;
+        for _ in 0..255 {
+            assert!(!seen[x as usize], "generator order < 255");
+            seen[x as usize] = true;
+            x = mul(x, 2);
+        }
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn mul_table_matches_mul() {
+        for c in [0u8, 1, 2, 3, 0x53, 0xCA, 0xFF] {
+            let t = MulTable::new(c);
+            let x: Vec<u8> = (0..=255).collect();
+            let mut y = vec![0u8; 256];
+            t.mul_slice(&x, &mut y);
+            for (i, &yi) in y.iter().enumerate() {
+                assert_eq!(yi, mul(c, i as u8), "c={c} x={i}");
+            }
+            // mul_slice_add accumulates.
+            let mut z = y.clone();
+            t.mul_slice_add(&x, &mut z);
+            assert!(z.iter().all(|&b| b == 0), "y ^ y must be zero");
+        }
+    }
+
+    #[test]
+    fn mul_slice_add_special_cases() {
+        let x = [1u8, 2, 3, 4];
+        let mut y = [0u8; 4];
+        mul_slice_add(0, &x, &mut y);
+        assert_eq!(y, [0, 0, 0, 0]);
+        mul_slice_add(1, &x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    #[should_panic(expected = "inverse of zero")]
+    fn inv_zero_panics() {
+        inv(0);
+    }
+}

@@ -1,0 +1,270 @@
+//! Dense matrices over GF(2^8) and the systematic RS generator matrix.
+//!
+//! The code is MDS: the generator is built from an extended Vandermonde
+//! matrix reduced so its top k×k block is the identity (systematic form),
+//! guaranteeing any k rows of the n×k generator are invertible.
+
+use super::gf256 as gf;
+
+/// Row-major dense matrix over GF(256).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<u8>,
+}
+
+impl Matrix {
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zero(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[u8]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut m = Matrix::zero(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.row_mut(i).copy_from_slice(row);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u8] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix product over GF(256).
+    pub fn mul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "dimension mismatch");
+        let mut out = Matrix::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] ^= gf::mul(a, other[(k, j)]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zero(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Invert via Gauss–Jordan elimination. Returns None when singular.
+    pub fn inverse(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "inverse of non-square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            // Find pivot.
+            let pivot = (col..n).find(|&r| a[(r, col)] != 0)?;
+            if pivot != col {
+                a.swap_rows(pivot, col);
+                inv.swap_rows(pivot, col);
+            }
+            // Normalize pivot row.
+            let p = a[(col, col)];
+            let pinv = gf::inv(p);
+            for j in 0..n {
+                a[(col, j)] = gf::mul(a[(col, j)], pinv);
+                inv[(col, j)] = gf::mul(inv[(col, j)], pinv);
+            }
+            // Eliminate all other rows.
+            for r in 0..n {
+                if r == col || a[(r, col)] == 0 {
+                    continue;
+                }
+                let f = a[(r, col)];
+                for j in 0..n {
+                    let av = gf::mul(f, a[(col, j)]);
+                    let iv = gf::mul(f, inv[(col, j)]);
+                    a[(r, j)] ^= av;
+                    inv[(r, j)] ^= iv;
+                }
+            }
+        }
+        Some(inv)
+    }
+
+    fn swap_rows(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        for c in 0..self.cols {
+            self.data.swap(i * self.cols + c, j * self.cols + c);
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = u8;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &u8 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut u8 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Extended Vandermonde matrix: n rows, k cols, entry (i, j) = i^j
+/// (with 0^0 = 1).
+pub fn vandermonde(n: usize, k: usize) -> Matrix {
+    assert!(n <= 256, "GF(256) supports at most 256 distinct rows");
+    let mut m = Matrix::zero(n, k);
+    for i in 0..n {
+        for j in 0..k {
+            m[(i, j)] = gf::pow(i as u8, j as u64);
+        }
+    }
+    m
+}
+
+/// Systematic n×k generator matrix: top k×k block is the identity, the
+/// remaining m = n−k rows are the parity rows. Any k rows are linearly
+/// independent (MDS property), proven by construction from Vandermonde.
+pub fn systematic_generator(n: usize, k: usize) -> Matrix {
+    assert!(k >= 1 && n >= k, "need n >= k >= 1");
+    let v = vandermonde(n, k);
+    let top = v.select_rows(&(0..k).collect::<Vec<_>>());
+    let top_inv = top
+        .inverse()
+        .expect("Vandermonde top block is always invertible");
+    // G = V * top^{-1} has identity in the first k rows.
+    v.mul(&top_inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn identity_is_self_inverse() {
+        let i = Matrix::identity(8);
+        assert_eq!(i.inverse().unwrap(), i);
+    }
+
+    #[test]
+    fn inverse_roundtrip_random() {
+        let mut rng = Pcg64::seeded(21);
+        for _ in 0..50 {
+            let n = rng.range(1, 12);
+            let mut m = Matrix::zero(n, n);
+            loop {
+                for r in 0..n {
+                    for c in 0..n {
+                        m[(r, c)] = rng.next_below(256) as u8;
+                    }
+                }
+                if m.inverse().is_some() {
+                    break;
+                }
+            }
+            let inv = m.inverse().unwrap();
+            assert_eq!(m.mul(&inv), Matrix::identity(n));
+            assert_eq!(inv.mul(&m), Matrix::identity(n));
+        }
+    }
+
+    #[test]
+    fn singular_matrix_returns_none() {
+        let m = Matrix::from_rows(&[&[1, 2], &[1, 2]]);
+        assert!(m.inverse().is_none());
+        let z = Matrix::zero(3, 3);
+        assert!(z.inverse().is_none());
+    }
+
+    #[test]
+    fn systematic_generator_top_is_identity() {
+        for (n, k) in [(6, 4), (32, 16), (32, 31), (4, 1)] {
+            let g = systematic_generator(n, k);
+            let top = g.select_rows(&(0..k).collect::<Vec<_>>());
+            assert_eq!(top, Matrix::identity(k), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn any_k_rows_invertible_mds() {
+        // Exhaustive over a small code, randomized over the paper's n=32.
+        let g = systematic_generator(8, 4);
+        let idx: Vec<usize> = (0..8).collect();
+        // All C(8,4)=70 subsets.
+        fn combos(n: usize, k: usize) -> Vec<Vec<usize>> {
+            if k == 0 {
+                return vec![vec![]];
+            }
+            if n < k {
+                return vec![];
+            }
+            let mut out = combos(n - 1, k);
+            for mut c in combos(n - 1, k - 1) {
+                c.push(n - 1);
+                out.push(c);
+            }
+            out
+        }
+        for subset in combos(idx.len(), 4) {
+            let sub = g.select_rows(&subset);
+            assert!(sub.inverse().is_some(), "rows {subset:?} singular");
+        }
+        let g32 = systematic_generator(32, 16);
+        let mut rng = Pcg64::seeded(33);
+        for _ in 0..200 {
+            let rows = rng.sample_indices(32, 16);
+            assert!(g32.select_rows(&rows).inverse().is_some(), "rows {rows:?}");
+        }
+    }
+
+    #[test]
+    fn vandermonde_values() {
+        let v = vandermonde(4, 3);
+        assert_eq!(v[(0, 0)], 1); // 0^0
+        assert_eq!(v[(0, 1)], 0);
+        assert_eq!(v[(2, 1)], 2);
+        assert_eq!(v[(3, 2)], gf::mul(3, 3));
+    }
+
+    #[test]
+    fn mul_dimensions_and_identity() {
+        let mut rng = Pcg64::seeded(4);
+        let mut m = Matrix::zero(3, 5);
+        for r in 0..3 {
+            for c in 0..5 {
+                m[(r, c)] = rng.next_below(256) as u8;
+            }
+        }
+        assert_eq!(Matrix::identity(3).mul(&m), m);
+        assert_eq!(m.mul(&Matrix::identity(5)), m);
+    }
+}

@@ -1,0 +1,15 @@
+//! Reed–Solomon erasure coding over GF(2^8) — the fault-tolerance
+//! substrate of Janus (paper §2.1, §3.1; substitute for liberasurecode).
+//!
+//! * [`gf256`] — field arithmetic with split-nibble slice kernels.
+//! * [`matrix`] — GF(256) linear algebra + systematic MDS generator.
+//! * [`rs`] — `(k, m)` encode / reconstruct, the FTG primitive.
+//! * [`throughput`] — measured parity-generation rate `r_ec` (§5.2.2).
+
+pub mod gf256;
+pub mod matrix;
+pub mod rs;
+pub mod throughput;
+
+pub use rs::{RsCode, RsError};
+pub use throughput::{measure_ec_rate, sweep_ec_rates, EcRate};

@@ -1,0 +1,341 @@
+//! Systematic Reed–Solomon erasure codes over GF(2^8).
+//!
+//! This is the fault-tolerance substrate of the paper (§2.1, §3.1): every
+//! `k` data fragments produce `m` parity fragments, forming a
+//! fault-tolerant group (FTG) of `n = k + m` fragments; **any** `k`
+//! surviving fragments reconstruct the originals.
+//!
+//! Stands in for liberasurecode in the paper's prototype. The encoder
+//! hot loop uses per-constant split-nibble tables ([`gf256::MulTable`])
+//! and reuses precomputed tables across FTGs via [`RsCode`], since the
+//! paper's sender encodes thousands of FTGs with the same (k, m).
+
+use super::gf256::MulTable;
+use super::matrix::{systematic_generator, Matrix};
+
+/// Errors from Reed–Solomon operations.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum RsError {
+    #[error("invalid code parameters: k={k}, m={m} (need k>=1, m>=0, k+m<=256)")]
+    BadParams { k: usize, m: usize },
+    #[error("fragment length mismatch: expected {expected}, got {got}")]
+    LengthMismatch { expected: usize, got: usize },
+    #[error("not enough fragments to reconstruct: have {have}, need {need}")]
+    NotEnough { have: usize, need: usize },
+    #[error("fragment index {idx} out of range for n={n}")]
+    BadIndex { idx: usize, n: usize },
+}
+
+/// A (k, m) systematic Reed–Solomon code with cached encode tables.
+pub struct RsCode {
+    pub k: usize,
+    pub m: usize,
+    /// n×k systematic generator (top k rows = identity).
+    generator: Matrix,
+    /// Parity rows as precomputed split-nibble tables: `parity_tables[p][j]`
+    /// multiplies data fragment `j` into parity fragment `p`.
+    parity_tables: Vec<Vec<MulTable>>,
+}
+
+impl RsCode {
+    /// Build a code with `k` data and `m` parity fragments per group.
+    pub fn new(k: usize, m: usize) -> Result<RsCode, RsError> {
+        if k < 1 || k + m > 256 {
+            return Err(RsError::BadParams { k, m });
+        }
+        let n = k + m;
+        let generator = systematic_generator(n, k);
+        let parity_tables = (0..m)
+            .map(|p| {
+                (0..k)
+                    .map(|j| MulTable::new(generator[(k + p, j)]))
+                    .collect()
+            })
+            .collect();
+        Ok(RsCode { k, m, generator, parity_tables })
+    }
+
+    /// Total fragments per group.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.k + self.m
+    }
+
+    /// Encode: given `k` equal-length data fragments, produce `m` parity
+    /// fragments.
+    pub fn encode(&self, data: &[&[u8]]) -> Result<Vec<Vec<u8>>, RsError> {
+        if data.len() != self.k {
+            return Err(RsError::NotEnough { have: data.len(), need: self.k });
+        }
+        let len = data[0].len();
+        for d in data {
+            if d.len() != len {
+                return Err(RsError::LengthMismatch { expected: len, got: d.len() });
+            }
+        }
+        let mut parity = vec![vec![0u8; len]; self.m];
+        for (p, out) in parity.iter_mut().enumerate() {
+            for (j, frag) in data.iter().enumerate() {
+                self.parity_tables[p][j].mul_slice_add(frag, out);
+            }
+        }
+        Ok(parity)
+    }
+
+    /// Encode into caller-provided parity buffers (no allocation).
+    ///
+    /// Used by the throughput benchmark and the sender hot path.
+    pub fn encode_into(&self, data: &[&[u8]], parity: &mut [Vec<u8>]) -> Result<(), RsError> {
+        if data.len() != self.k {
+            return Err(RsError::NotEnough { have: data.len(), need: self.k });
+        }
+        let len = data[0].len();
+        assert_eq!(parity.len(), self.m);
+        for (p, out) in parity.iter_mut().enumerate() {
+            out.resize(len, 0);
+            out.fill(0);
+            for (j, frag) in data.iter().enumerate() {
+                self.parity_tables[p][j].mul_slice_add(frag, out);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the original `k` data fragments from any `k` surviving
+    /// fragments.
+    ///
+    /// `shards` maps fragment index (0..n; 0..k data, k..n parity) to the
+    /// fragment bytes. Returns the `k` data fragments in order.
+    pub fn reconstruct(
+        &self,
+        shards: &[(usize, &[u8])],
+    ) -> Result<Vec<Vec<u8>>, RsError> {
+        if shards.len() < self.k {
+            return Err(RsError::NotEnough { have: shards.len(), need: self.k });
+        }
+        let len = shards[0].1.len();
+        for &(idx, frag) in shards {
+            if idx >= self.n() {
+                return Err(RsError::BadIndex { idx, n: self.n() });
+            }
+            if frag.len() != len {
+                return Err(RsError::LengthMismatch { expected: len, got: frag.len() });
+            }
+        }
+        // Fast path: all data fragments present.
+        let mut have_data = vec![None; self.k];
+        for &(idx, frag) in shards {
+            if idx < self.k {
+                have_data[idx] = Some(frag);
+            }
+        }
+        if have_data.iter().all(|f| f.is_some()) {
+            return Ok(have_data.into_iter().map(|f| f.unwrap().to_vec()).collect());
+        }
+        // General path: invert the k×k submatrix of the generator picked
+        // by the first k surviving fragment indices.
+        let chosen: Vec<&(usize, &[u8])> = shards.iter().take(self.k).collect();
+        let rows: Vec<usize> = chosen.iter().map(|(i, _)| *i).collect();
+        let sub = self.generator.select_rows(&rows);
+        let inv = sub
+            .inverse()
+            .expect("MDS property: any k rows of the generator are invertible");
+        // data[j] = sum_i inv[j][i] * chosen[i]
+        let mut out = vec![vec![0u8; len]; self.k];
+        for (j, out_frag) in out.iter_mut().enumerate() {
+            for (i, &&(_, frag)) in chosen.iter().enumerate() {
+                let c = inv[(j, i)];
+                if c != 0 {
+                    MulTable::new(c).mul_slice_add(frag, out_frag);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Convenience: encode a contiguous buffer into an FTG.
+    ///
+    /// Pads the tail with zeros to a multiple of `fragment_size` and
+    /// returns all n fragments (data first, then parity).
+    pub fn encode_buffer(
+        &self,
+        buf: &[u8],
+        fragment_size: usize,
+    ) -> Result<Vec<Vec<u8>>, RsError> {
+        assert!(fragment_size > 0);
+        let mut frags: Vec<Vec<u8>> = Vec::with_capacity(self.n());
+        for i in 0..self.k {
+            let lo = (i * fragment_size).min(buf.len());
+            let hi = ((i + 1) * fragment_size).min(buf.len());
+            let mut f = buf[lo..hi].to_vec();
+            f.resize(fragment_size, 0);
+            frags.push(f);
+        }
+        let refs: Vec<&[u8]> = frags.iter().map(|f| f.as_slice()).collect();
+        let parity = self.encode(&refs)?;
+        frags.extend(parity);
+        Ok(frags)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_fragments(rng: &mut Pcg64, k: usize, len: usize) -> Vec<Vec<u8>> {
+        (0..k)
+            .map(|_| {
+                let mut f = vec![0u8; len];
+                rng.fill_bytes(&mut f);
+                f
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_no_loss() {
+        let mut rng = Pcg64::seeded(1);
+        let code = RsCode::new(4, 2).unwrap();
+        let data = random_fragments(&mut rng, 4, 64);
+        let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+        let parity = code.encode(&refs).unwrap();
+        assert_eq!(parity.len(), 2);
+        let shards: Vec<(usize, &[u8])> =
+            data.iter().enumerate().map(|(i, f)| (i, f.as_slice())).collect();
+        let got = code.reconstruct(&shards).unwrap();
+        assert_eq!(got, data);
+        let _ = parity;
+    }
+
+    #[test]
+    fn recovers_from_any_m_losses() {
+        let mut rng = Pcg64::seeded(2);
+        for (k, m) in [(4, 2), (7, 1), (16, 16), (28, 4), (31, 1)] {
+            let code = RsCode::new(k, m).unwrap();
+            let data = random_fragments(&mut rng, k, 128);
+            let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+            let parity = code.encode(&refs).unwrap();
+            let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+            for _trial in 0..20 {
+                // Drop exactly m random fragments.
+                let lost = rng.sample_indices(k + m, m);
+                let shards: Vec<(usize, &[u8])> = (0..k + m)
+                    .filter(|i| !lost.contains(i))
+                    .map(|i| (i, all[i].as_slice()))
+                    .collect();
+                let got = code.reconstruct(&shards).unwrap();
+                assert_eq!(got, data, "k={k} m={m} lost={lost:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fails_with_fewer_than_k() {
+        let code = RsCode::new(4, 2).unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let data = random_fragments(&mut rng, 4, 32);
+        let shards: Vec<(usize, &[u8])> = data
+            .iter()
+            .take(3)
+            .enumerate()
+            .map(|(i, f)| (i, f.as_slice()))
+            .collect();
+        assert_eq!(
+            code.reconstruct(&shards),
+            Err(RsError::NotEnough { have: 3, need: 4 })
+        );
+    }
+
+    #[test]
+    fn zero_parity_code_is_passthrough() {
+        // m = 0 is legal in the paper's sweeps (no fault tolerance).
+        let code = RsCode::new(5, 0).unwrap();
+        let mut rng = Pcg64::seeded(4);
+        let data = random_fragments(&mut rng, 5, 16);
+        let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+        assert!(code.encode(&refs).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_params_rejected() {
+        assert!(RsCode::new(0, 3).is_err());
+        assert!(RsCode::new(200, 100).is_err());
+        assert!(RsCode::new(1, 0).is_ok());
+        assert!(RsCode::new(128, 128).is_ok());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let code = RsCode::new(2, 1).unwrap();
+        let a = vec![0u8; 16];
+        let b = vec![0u8; 17];
+        let refs: Vec<&[u8]> = vec![&a, &b];
+        assert!(matches!(
+            code.encode(&refs),
+            Err(RsError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn encode_buffer_pads_and_splits() {
+        let code = RsCode::new(4, 4).unwrap();
+        let buf: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
+        let frags = code.encode_buffer(&buf, 4096).unwrap();
+        assert_eq!(frags.len(), 8);
+        assert!(frags.iter().all(|f| f.len() == 4096));
+        assert_eq!(&frags[0][..1000], &buf[..]);
+        assert!(frags[0][1000..].iter().all(|&b| b == 0));
+        // Recover data from parity only + 0 data? Need any 4 of 8:
+        let shards: Vec<(usize, &[u8])> =
+            (4..8).map(|i| (i, frags[i].as_slice())).collect();
+        let got = code.reconstruct(&shards).unwrap();
+        assert_eq!(got[0], frags[0]);
+    }
+
+    #[test]
+    fn encode_into_matches_encode() {
+        let mut rng = Pcg64::seeded(5);
+        let code = RsCode::new(6, 3).unwrap();
+        let data = random_fragments(&mut rng, 6, 256);
+        let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+        let fresh = code.encode(&refs).unwrap();
+        let mut reused = vec![vec![0xAAu8; 7]; 3]; // wrong size, pre-dirtied
+        code.encode_into(&refs, &mut reused).unwrap();
+        assert_eq!(fresh, reused);
+    }
+
+    #[test]
+    fn prop_any_k_subset_reconstructs() {
+        // Property-style test over random (k, m, subset) draws.
+        use crate::util::prop::{check, no_shrink, PropConfig};
+        check(
+            &PropConfig { cases: 60, ..Default::default() },
+            |rng| {
+                let k = rng.range(1, 12);
+                let m = rng.range(0, 8);
+                let seed = rng.next_u64();
+                (k, m, seed)
+            },
+            no_shrink,
+            |&(k, m, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let code = RsCode::new(k, m).map_err(|e| e.to_string())?;
+                let data = random_fragments(&mut rng, k, 32);
+                let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+                let parity = code.encode(&refs).map_err(|e| e.to_string())?;
+                let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+                let mut idx: Vec<usize> = (0..k + m).collect();
+                rng.shuffle(&mut idx);
+                let shards: Vec<(usize, &[u8])> =
+                    idx[..k].iter().map(|&i| (i, all[i].as_slice())).collect();
+                let got = code.reconstruct(&shards).map_err(|e| e.to_string())?;
+                if got == data {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch k={k} m={m} subset={:?}", &idx[..k]))
+                }
+            },
+        );
+    }
+}

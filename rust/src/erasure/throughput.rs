@@ -1,0 +1,110 @@
+//! Parity-generation throughput measurement (`r_ec`).
+//!
+//! Reproduces the paper's §5.2.2 measurement: with n = 32 fragments of
+//! 4 096 B per FTG, liberasurecode's parity generation rate fell from
+//! 319 531 frag/s (m = 1) to 41 561 frag/s (m = 16). The sender's
+//! effective transmission rate is `r = min(r_ec, r_link)`, so this module
+//! is what feeds the optimization models with a *measured* `r_ec`.
+
+use super::rs::RsCode;
+use crate::util::Pcg64;
+use std::time::Instant;
+
+/// One (m, rate) measurement point.
+#[derive(Debug, Clone, Copy)]
+pub struct EcRate {
+    pub m: usize,
+    /// Fragments (data + parity) produced per second.
+    pub fragments_per_sec: f64,
+    /// Payload bytes encoded per second (data only).
+    pub data_bytes_per_sec: f64,
+}
+
+/// Measure parity generation rate for a single (n, m) configuration.
+///
+/// Encodes random FTGs for at least `min_duration` seconds and reports the
+/// rate in fragments/s, matching the paper's metric (total fragments of
+/// completed FTGs over elapsed time).
+pub fn measure_ec_rate(
+    n: usize,
+    m: usize,
+    fragment_size: usize,
+    min_duration_secs: f64,
+    seed: u64,
+) -> EcRate {
+    assert!(m < n, "need at least one data fragment");
+    let k = n - m;
+    let code = RsCode::new(k, m).expect("valid code");
+    let mut rng = Pcg64::seeded(seed);
+    // One FTG worth of random data, re-encoded repeatedly (matches how
+    // liberasurecode benchmarks are usually run; data content does not
+    // affect GF math throughput).
+    let data: Vec<Vec<u8>> = (0..k)
+        .map(|_| {
+            let mut f = vec![0u8; fragment_size];
+            rng.fill_bytes(&mut f);
+            f
+        })
+        .collect();
+    let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+    let mut parity: Vec<Vec<u8>> = vec![vec![0u8; fragment_size]; m];
+
+    // Warm-up.
+    code.encode_into(&refs, &mut parity).unwrap();
+
+    let start = Instant::now();
+    let mut groups = 0u64;
+    while start.elapsed().as_secs_f64() < min_duration_secs {
+        for _ in 0..8 {
+            code.encode_into(&refs, &mut parity).unwrap();
+            groups += 1;
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let fragments = groups * n as u64;
+    EcRate {
+        m,
+        fragments_per_sec: fragments as f64 / secs,
+        data_bytes_per_sec: (groups * k as u64 * fragment_size as u64) as f64 / secs,
+    }
+}
+
+/// Sweep m = 1..=max_m at fixed n, like the paper's table.
+pub fn sweep_ec_rates(
+    n: usize,
+    max_m: usize,
+    fragment_size: usize,
+    min_duration_secs: f64,
+) -> Vec<EcRate> {
+    (1..=max_m)
+        .map(|m| measure_ec_rate(n, m, fragment_size, min_duration_secs, 0xEC0DE + m as u64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_is_positive_and_m_monotonicity_roughly_holds() {
+        // Short measurements; only sanity, the bench does the real sweep.
+        let fast = measure_ec_rate(32, 1, 4096, 0.05, 1);
+        let slow = measure_ec_rate(32, 16, 4096, 0.05, 2);
+        assert!(fast.fragments_per_sec > 0.0);
+        assert!(slow.fragments_per_sec > 0.0);
+        // More parity per group => fewer fragments/s (with slack for noise).
+        assert!(
+            fast.fragments_per_sec > slow.fragments_per_sec * 1.2,
+            "m=1: {:.0}, m=16: {:.0}",
+            fast.fragments_per_sec,
+            slow.fragments_per_sec
+        );
+    }
+
+    #[test]
+    fn sweep_returns_all_points() {
+        let rates = sweep_ec_rates(8, 4, 1024, 0.01);
+        assert_eq!(rates.len(), 4);
+        assert!(rates.iter().enumerate().all(|(i, r)| r.m == i + 1));
+    }
+}

@@ -1,0 +1,25 @@
+//! # Janus
+//!
+//! A reproduction of *"JANUS: Resilient and Adaptive Data Transmission for
+//! Enabling Timely and Efficient Cross-Facility Scientific Workflows"*
+//! (CS.DC 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! Janus transfers progressively-refactored scientific data over UDP,
+//! protecting each level's fragments with Reed-Solomon parity
+//! (fault-tolerant groups), choosing redundancy by solving the paper's
+//! optimization models, and adapting to measured packet-loss rates.
+//!
+//! See `DESIGN.md` for the module inventory and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod config;
+pub mod coordinator;
+pub mod erasure;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod util;
+pub mod workflow;
+pub mod metrics;
+pub mod model;
+pub mod refactor;

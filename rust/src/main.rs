@@ -1,0 +1,284 @@
+//! `janus` — CLI for the Janus adaptive data-transmission system.
+//!
+//! Subcommands:
+//!   optimize   Solve the paper's optimization models (Eq. 8 / Eq. 12).
+//!   simulate   Run a simulated transfer (TCP / static UDP+EC / adaptive).
+//!   send       Run a real-UDP sender against a peer address.
+//!   recv       Run a real-UDP receiver.
+//!   ec-rate    Measure Reed–Solomon parity-generation throughput (r_ec).
+//!   e2e        End-to-end demo: refactor → transfer → reconstruct.
+
+use janus::config::Args;
+use janus::coordinator::{run_receiver, run_sender, Contract, ReceiverConfig, SenderConfig};
+use janus::erasure::sweep_ec_rates;
+use janus::model::{optimize_deadline_paper, optimize_parity, LevelSchedule, NetParams};
+use janus::sim::{
+    run_guaranteed_error, run_guaranteed_time, run_tcp, BernoulliLoss, DeadlinePolicy, HmmLoss,
+    ParityPolicy, StaticLoss,
+};
+use janus::transport::UdpChannel;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("optimize") => cmd_optimize(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("ec-rate") => cmd_ec_rate(&args),
+        Some("send") => cmd_send(&args),
+        Some("recv") => cmd_recv(&args),
+        Some("e2e") => cmd_e2e(&args),
+        _ => {
+            eprintln!(
+                "usage: janus <optimize|simulate|ec-rate|send|recv|e2e> [--options]\n\
+                 \n\
+                 optimize  --lambda <l/s> [--mode error-bound|deadline] [--tau <s>] [--scale <f>]\n\
+                 simulate  --protocol tcp|static|adaptive|deadline --lambda <l/s>|hmm\n\
+                 \u{20}          [--m <parity>] [--tau <s>] [--scale <f>] [--seed <n>]\n\
+                 ec-rate   [--n <frags>] [--max-m <m>] [--secs <s>]\n\
+                 send      --peer <addr:port> [--bind <addr:port>] [--deadline <s>] [--rate <pkt/s>]\n\
+                 recv      --bind <addr:port> [--t-w <s>]\n\
+                 e2e       [--dim 64] [--lambda <l/s>] [--seed <n>]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn sched_scaled(args: &Args) -> LevelSchedule {
+    let scale = args.get_u64("scale", 1);
+    if scale <= 1 {
+        LevelSchedule::paper_nyx()
+    } else {
+        LevelSchedule::paper_nyx_scaled(scale)
+    }
+}
+
+fn cmd_optimize(args: &Args) {
+    let lambda = args.get_f64("lambda", 19.0);
+    let p = NetParams::paper_default(lambda);
+    let sched = sched_scaled(args);
+    match args.get_or("mode", "error-bound") {
+        "error-bound" => {
+            let bytes = sched.total_bytes(sched.num_levels());
+            let opt = optimize_parity(&p, bytes);
+            println!(
+                "Eq.8: λ={lambda}/s → m={} (p_unrec={:.3e}) E[T_total]={:.2}s",
+                opt.m, opt.p_unrecoverable, opt.expected_time
+            );
+        }
+        "deadline" => {
+            let tau = args.get_f64("tau", 400.0);
+            match optimize_deadline_paper(&p, &sched, tau) {
+                Some(o) => println!(
+                    "Eq.12: λ={lambda}/s τ={tau}s → l={} m={:?} E[ε]={:.3e} time={:.2}s",
+                    o.levels, o.m, o.expected_error, o.time
+                ),
+                None => println!("Eq.12: τ={tau}s infeasible"),
+            }
+        }
+        other => {
+            eprintln!("unknown --mode {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let seed = args.get_u64("seed", 1);
+    let sched = sched_scaled(args);
+    let lambda_arg = args.get_or("lambda", "19");
+    let lambda_num: f64 = lambda_arg.parse().unwrap_or(383.0);
+    let p = NetParams::paper_default(lambda_num);
+    let ttl = 1.0 / p.r;
+    let levels = sched.num_levels();
+    let protocol = args.get_or("protocol", "adaptive");
+
+    let make_loss = |seed: u64| -> Box<dyn janus::sim::LossProcess> {
+        if lambda_arg == "hmm" {
+            Box::new(HmmLoss::paper_default_with_ttl(seed, ttl))
+        } else {
+            Box::new(StaticLoss::with_ttl(lambda_num, seed, ttl))
+        }
+    };
+
+    match protocol {
+        "tcp" => {
+            let frac = p.lambda / p.r;
+            let mut loss = BernoulliLoss::new(frac, seed);
+            let res = run_tcp(&mut loss, &p, sched.total_bytes(levels));
+            println!(
+                "TCP: {:.2}s sent={} lost={} retrans={} timeouts={}",
+                res.total_time,
+                res.packets_sent,
+                res.packets_lost,
+                res.retransmissions,
+                res.timeouts
+            );
+        }
+        "static" => {
+            let m = args.get_usize("m", 0);
+            let mut loss = make_loss(seed);
+            let res =
+                run_guaranteed_error(loss.as_mut(), &p, &sched, levels, &ParityPolicy::Static(m));
+            println!(
+                "UDP+EC m={m}: {:.2}s rounds={} sent={} lost={} retransFTG={}",
+                res.total_time,
+                res.rounds,
+                res.fragments_sent,
+                res.fragments_lost,
+                res.ftgs_retransmitted
+            );
+        }
+        "adaptive" => {
+            let mut loss = make_loss(seed);
+            let policy = ParityPolicy::Adaptive { t_w: 3.0, initial_lambda: p.lambda };
+            let res = run_guaranteed_error(loss.as_mut(), &p, &sched, levels, &policy);
+            println!(
+                "Adaptive (Alg.1): {:.2}s rounds={} sent={} lost={} m-changes={:?}",
+                res.total_time, res.rounds, res.fragments_sent, res.fragments_lost, res.m_changes
+            );
+        }
+        "deadline" => {
+            let tau = args.get_f64("tau", 400.0);
+            let mut loss = make_loss(seed);
+            let policy = DeadlinePolicy::Adaptive { t_w: 3.0, initial_lambda: p.lambda };
+            match run_guaranteed_time(loss.as_mut(), &p, &sched, tau, &policy) {
+                Some(res) => println!(
+                    "Deadline (Alg.2) τ={tau}: {:.2}s levels={}/{} ε={:.1e} plans={}",
+                    res.total_time,
+                    res.levels_recovered,
+                    res.levels_sent,
+                    res.achieved_eps,
+                    res.plan_changes.len()
+                ),
+                None => println!("Deadline τ={tau}: infeasible"),
+            }
+        }
+        other => {
+            eprintln!("unknown --protocol {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_ec_rate(args: &Args) {
+    let n = args.get_usize("n", 32);
+    let max_m = args.get_usize("max-m", 16);
+    let secs = args.get_f64("secs", 0.3);
+    println!("r_ec sweep: n={n}, 4096-B fragments (paper §5.2.2)");
+    println!("{:>4} {:>16} {:>14}", "m", "fragments/s", "MB/s data");
+    for rate in sweep_ec_rates(n, max_m, 4096, secs) {
+        println!(
+            "{:>4} {:>16.0} {:>14.1}",
+            rate.m,
+            rate.fragments_per_sec,
+            rate.data_bytes_per_sec / 1e6
+        );
+    }
+}
+
+fn cmd_send(args: &Args) {
+    let peer = args.get("peer").unwrap_or_else(|| {
+        eprintln!("send: --peer <addr:port> required");
+        std::process::exit(2);
+    });
+    let bind = args.get_or("bind", "0.0.0.0:0");
+    let rate = args.get_f64("rate", 19_144.0);
+    let dim = args.get_usize("dim", 64);
+    let seed = args.get_u64("seed", 1);
+    let mut chan = UdpChannel::bind_connect(bind, peer).expect("bind/connect");
+    // Synthetic refactored payload (native mirror; the PJRT artifacts are
+    // exercised by the e2e example).
+    let vol = janus::refactor::generate(dim, &janus::refactor::GrfConfig::default(), seed);
+    let levels = janus::refactor::decompose(&vol, 4);
+    let bytes = janus::refactor::levels_to_bytes(&levels);
+    let eps = measured_eps(&vol, &levels);
+    let contract = match args.get("deadline") {
+        Some(tau) => Contract::Deadline(tau.parse().expect("--deadline seconds")),
+        None => Contract::ErrorBound(eps[3]),
+    };
+    let cfg = SenderConfig {
+        net: NetParams { r: rate, ..NetParams::paper_default(args.get_f64("lambda", 19.0)) },
+        contract,
+        initial_lambda: args.get_f64("lambda", 19.0),
+        max_duration: Duration::from_secs(args.get_u64("max-secs", 600)),
+    };
+    let rep = run_sender(&mut chan, &cfg, &bytes, &eps).expect("send");
+    println!(
+        "sent {} fragments ({} data) in {:.2}s, {} retransmission passes",
+        rep.fragments_sent, rep.data_fragments, rep.duration, rep.passes
+    );
+}
+
+fn cmd_recv(args: &Args) {
+    let bind = args.get("bind").unwrap_or_else(|| {
+        eprintln!("recv: --bind <addr:port> required");
+        std::process::exit(2);
+    });
+    let sock = std::net::UdpSocket::bind(bind).expect("bind");
+    // Learn the peer from the first datagram, then connect.
+    let mut buf = [0u8; 9216];
+    let (_, peer) = sock.peek_from(&mut buf).expect("first datagram");
+    sock.connect(peer).expect("connect");
+    let mut chan = UdpChannel::from_socket(sock);
+    let cfg = ReceiverConfig {
+        t_w: args.get_f64("t-w", 3.0),
+        idle_timeout: Duration::from_secs(args.get_u64("idle-secs", 15)),
+        max_duration: Duration::from_secs(args.get_u64("max-secs", 600)),
+    };
+    let rep = run_receiver(&mut chan, &cfg).expect("recv");
+    println!(
+        "received {} fragments; levels {}/{} recovered (ε ≤ {:.1e}) in {:.2}s; RS-recovered groups: {}",
+        rep.fragments_received,
+        rep.levels_recovered,
+        rep.levels.len(),
+        rep.achieved_eps,
+        rep.duration,
+        rep.groups_recovered
+    );
+}
+
+fn cmd_e2e(args: &Args) {
+    // Compact version of examples/nyx_workflow.rs; see that example for
+    // the fully instrumented (PJRT-artifact) run.
+    let dim = args.get_usize("dim", 64);
+    let seed = args.get_u64("seed", 1);
+    let lambda = args.get_f64("lambda", 383.0);
+    let vol = janus::refactor::generate(dim, &janus::refactor::GrfConfig::default(), seed);
+    let levels = janus::refactor::decompose(&vol, 4);
+    let eps = measured_eps(&vol, &levels);
+    let sizes: Vec<u64> = levels.iter().map(|l| (l.len() * 4) as u64).collect();
+    println!("volume {dim}³, levels {sizes:?} bytes, ε {eps:?}");
+    let sched = LevelSchedule::new(sizes, eps.clone());
+    let p = NetParams::paper_default(lambda);
+    let mut loss = StaticLoss::with_ttl(lambda, seed, 1.0 / p.r);
+    let res = run_guaranteed_error(
+        &mut loss,
+        &p,
+        &sched,
+        4,
+        &ParityPolicy::Adaptive { t_w: 3.0, initial_lambda: lambda },
+    );
+    println!(
+        "adaptive transfer: {:.3}s (sim), rounds={} lost={}",
+        res.total_time, res.rounds, res.fragments_lost
+    );
+}
+
+fn measured_eps(vol: &janus::refactor::Volume, levels: &[Vec<f32>]) -> Vec<f64> {
+    let refs: Vec<&[f32]> = levels.iter().map(|l| l.as_slice()).collect();
+    let mut eps: Vec<f64> = (1..=levels.len())
+        .map(|u| {
+            let approx = janus::refactor::reconstruct(&refs, u, levels.len(), vol.d);
+            vol.linf_rel_error(&approx).max(1e-12)
+        })
+        .collect();
+    // Guard strict monotonicity for LevelSchedule.
+    for i in 1..eps.len() {
+        if eps[i] >= eps[i - 1] {
+            eps[i] = eps[i - 1] * 0.999;
+        }
+    }
+    eps
+}

@@ -1,0 +1,143 @@
+//! Minimal criterion-style bench harness (offline substitute).
+
+use crate::util::stats;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// One measured quantity across repeats.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub values: Vec<f64>,
+    pub unit: &'static str,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        stats::median(&self.values)
+    }
+    pub fn mad(&self) -> f64 {
+        stats::mad(&self.values)
+    }
+}
+
+/// A named results table for one experiment (one paper figure/table).
+pub struct BenchTable {
+    pub name: String,
+    pub columns: Vec<&'static str>,
+    rows: Vec<(String, Vec<String>)>,
+    started: Instant,
+}
+
+impl BenchTable {
+    pub fn new(name: &str, columns: Vec<&'static str>) -> Self {
+        println!("\n=== {name} ===");
+        BenchTable { name: name.to_string(), columns, rows: Vec::new(), started: Instant::now() }
+    }
+
+    /// Add a row (first column is the row label).
+    pub fn row<S: Into<String>>(&mut self, label: S, cells: Vec<String>) {
+        let label = label.into();
+        let mut line = format!("{label:<26}");
+        for c in &cells {
+            line.push_str(&format!(" {c:>14}"));
+        }
+        println!("{line}");
+        self.rows.push((label, cells));
+    }
+
+    /// Print the header line.
+    pub fn header(&self) {
+        let mut line = format!("{:<26}", self.columns.first().copied().unwrap_or(""));
+        for c in self.columns.iter().skip(1) {
+            line.push_str(&format!(" {c:>14}"));
+        }
+        println!("{line}");
+    }
+
+    /// Format a (median ± mad) cell.
+    pub fn cell(values: &[f64]) -> String {
+        if values.len() == 1 {
+            format!("{:.2}", values[0])
+        } else {
+            format!("{:.2}±{:.2}", stats::median(values), stats::mad(values))
+        }
+    }
+
+    /// Write the table as TSV under `target/bench-results/<name>.tsv`.
+    pub fn save(&self) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from("target/bench-results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.tsv", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "# {} ({:.1}s)", self.name, self.started.elapsed().as_secs_f64())?;
+        writeln!(f, "{}", self.columns.join("\t"))?;
+        for (label, cells) in &self.rows {
+            writeln!(f, "{label}\t{}", cells.join("\t"))?;
+        }
+        println!("[saved {}]", path.display());
+        Ok(path)
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Environment-controlled scale divisor for long benches
+/// (`JANUS_SCALE=1` reproduces the paper's full 26.75 GB workload).
+pub fn bench_scale(default: u64) -> u64 {
+    std::env::var("JANUS_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// Number of repetitions (`JANUS_RUNS` override).
+pub fn bench_runs(default: usize) -> usize {
+    std::env::var("JANUS_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_formats() {
+        assert_eq!(BenchTable::cell(&[2.0]), "2.00");
+        let c = BenchTable::cell(&[1.0, 2.0, 3.0]);
+        assert!(c.starts_with("2.00±"), "{c}");
+    }
+
+    #[test]
+    fn table_saves_tsv() {
+        let mut t = BenchTable::new("unit_test_table", vec!["m", "time"]);
+        t.row("0", vec!["1.23".into()]);
+        let path = t.save().unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert!(content.contains("unit_test_table"));
+        assert!(content.contains("1.23"));
+    }
+
+    #[test]
+    fn scale_defaults() {
+        assert_eq!(bench_scale(10), 10);
+        assert_eq!(bench_runs(5), 5);
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let (v, secs) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Metrics and the bench harness.
+//!
+//! `criterion` is not in the offline vendored crate set (DESIGN.md §3),
+//! so `rust/benches/*` are `harness = false` binaries built on
+//! [`bench::BenchTable`]: named rows of repeated measurements with
+//! median/MAD summaries, pretty-printed and mirrored as TSV under
+//! `target/bench-results/` for EXPERIMENTS.md.
+
+pub mod bench;
+
+pub use bench::{BenchTable, Measurement};

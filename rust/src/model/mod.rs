@@ -1,0 +1,26 @@
+//! The paper's optimization models (§3):
+//!
+//! * [`params`] — Table 1 symbols, paper-default parameters, level schedule.
+//! * [`prob`] — per-FTG unrecoverable-loss probability (Eq. 4–7).
+//! * [`time_model`] — expected total time with passive retransmission
+//!   (Eq. 2) and the guaranteed-error-bound parity optimizer (Eq. 8).
+//! * [`error_model`] — deadline-constrained expected error (Eq. 9–11) and
+//!   the guaranteed-time optimizer (Eq. 12).
+
+pub mod error_model;
+pub mod params;
+pub mod prob;
+pub mod time_model;
+
+pub use error_model::{
+    optimize_deadline_paper,
+    expected_error, expected_error_with, feasible_levels,
+    optimize_deadline_coordinate, optimize_deadline_coordinate_with,
+    optimize_deadline_exhaustive, optimize_deadline_exhaustive_with,
+    transmission_time, DeadlineOpt, ErrorFormula,
+};
+pub use params::{LevelSchedule, NetParams};
+pub use prob::{mean_losses_per_ftg, p_unrecoverable, p_unrecoverable_table};
+pub use time_model::{
+    expected_time_curve, expected_total_time, num_ftgs, optimize_parity, TimeOpt,
+};

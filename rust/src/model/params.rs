@@ -1,0 +1,167 @@
+//! Model parameters — the symbols of the paper's Table 1.
+
+/// Network and coding parameters shared by both optimization models.
+#[derive(Debug, Clone, Copy)]
+pub struct NetParams {
+    /// `t`: one-way latency of a single fragment, seconds.
+    pub t: f64,
+    /// `r`: effective fragments transmitted per second,
+    /// `min(r_ec, r_link)` (§4.1).
+    pub r: f64,
+    /// `λ`: packet-loss events per second.
+    pub lambda: f64,
+    /// `n`: fragments per fault-tolerant group (data + parity).
+    pub n: usize,
+    /// `s`: fragment payload size in bytes.
+    pub s: usize,
+}
+
+impl NetParams {
+    /// The paper's measured testbed parameters (§5.2.2): t = 0.01 s,
+    /// r_link = 19 144 packets/s of 4 096 B, n = 32.
+    pub fn paper_default(lambda: f64) -> Self {
+        NetParams { t: 0.01, r: 19_144.0, lambda, n: 32, s: 4_096 }
+    }
+
+    /// Effective rate from generation and link rates.
+    pub fn effective_rate(r_ec: f64, r_link: f64) -> f64 {
+        r_ec.min(r_link)
+    }
+
+    /// The paper's three loss regimes (§5.2.2): λ = r·0.1% (low),
+    /// r·2% (medium), r·5% (high) ⇒ 19, 383, 957 losses/s.
+    pub fn paper_lambdas() -> [f64; 3] {
+        [19.0, 383.0, 957.0]
+    }
+}
+
+/// Hierarchical level schedule from data refactoring (pMGARD-style).
+///
+/// `sizes[i]` is the byte size `S_{i+1}` of level i+1; `eps[i]` is the
+/// relative L∞ error `ε_{i+1}` when reconstructing with levels 1..=i+1.
+/// `ε_0 = 1` (nothing received) is implicit.
+#[derive(Debug, Clone)]
+pub struct LevelSchedule {
+    pub sizes: Vec<u64>,
+    pub eps: Vec<f64>,
+}
+
+impl LevelSchedule {
+    pub fn new(sizes: Vec<u64>, eps: Vec<f64>) -> Self {
+        assert_eq!(sizes.len(), eps.len(), "one ε per level");
+        assert!(
+            eps.windows(2).all(|w| w[0] > w[1]),
+            "ε must strictly decrease with more levels"
+        );
+        LevelSchedule { sizes, eps }
+    }
+
+    /// The paper's Nyx schedule (§5.1): S = 668 MB, 2.67 GB, 5.42 GB,
+    /// 17.99 GB; ε = 4e-3, 5e-4, 6e-5, 1e-7.
+    pub fn paper_nyx() -> Self {
+        LevelSchedule::new(
+            vec![
+                668 * 1024 * 1024,
+                (2.67 * 1024.0 * 1024.0 * 1024.0) as u64,
+                (5.42 * 1024.0 * 1024.0 * 1024.0) as u64,
+                (17.99 * 1024.0 * 1024.0 * 1024.0) as u64,
+            ],
+            vec![0.004, 0.0005, 0.00006, 0.0000001],
+        )
+    }
+
+    /// A proportionally-scaled schedule for fast tests/CI: same shape,
+    /// `factor` times smaller.
+    pub fn paper_nyx_scaled(factor: u64) -> Self {
+        let full = Self::paper_nyx();
+        LevelSchedule::new(
+            full.sizes.iter().map(|&s| (s / factor).max(1)).collect(),
+            full.eps,
+        )
+    }
+
+    /// Number of levels `L`.
+    pub fn num_levels(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// ε after receiving the first `levels` levels (`ε_0 = 1`).
+    pub fn eps_with_levels(&self, levels: usize) -> f64 {
+        if levels == 0 {
+            1.0
+        } else {
+            self.eps[levels.min(self.eps.len()) - 1]
+        }
+    }
+
+    /// Smallest `l` with `ε_l ≤ bound` (Alg. 1 line 1). None if even all
+    /// L levels cannot meet the bound.
+    pub fn levels_for_error_bound(&self, bound: f64) -> Option<usize> {
+        (1..=self.num_levels()).find(|&l| self.eps_with_levels(l) <= bound)
+    }
+
+    /// Total bytes of the first `l` levels.
+    pub fn total_bytes(&self, l: usize) -> u64 {
+        self.sizes[..l].iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section_5() {
+        let p = NetParams::paper_default(383.0);
+        assert_eq!(p.n, 32);
+        assert_eq!(p.s, 4096);
+        assert!((p.t - 0.01).abs() < 1e-12);
+        assert!((p.r - 19_144.0).abs() < 1e-9);
+        let s = LevelSchedule::paper_nyx();
+        assert_eq!(s.num_levels(), 4);
+        assert_eq!(s.sizes[0], 668 * 1024 * 1024);
+        assert!((s.eps[3] - 1e-7).abs() < 1e-15);
+    }
+
+    #[test]
+    fn effective_rate_is_min() {
+        assert_eq!(NetParams::effective_rate(319_531.0, 19_144.0), 19_144.0);
+        assert_eq!(NetParams::effective_rate(10.0, 19_144.0), 10.0);
+    }
+
+    #[test]
+    fn levels_for_error_bound_picks_smallest_l() {
+        let s = LevelSchedule::paper_nyx();
+        // ε: 0.004, 0.0005, 0.00006, 1e-7
+        assert_eq!(s.levels_for_error_bound(0.5), Some(1));
+        assert_eq!(s.levels_for_error_bound(0.004), Some(1));
+        assert_eq!(s.levels_for_error_bound(0.003), Some(2));
+        assert_eq!(s.levels_for_error_bound(0.00001), Some(4)); // paper §5.2.3
+        assert_eq!(s.levels_for_error_bound(1e-9), None);
+    }
+
+    #[test]
+    fn eps_with_levels_monotone() {
+        let s = LevelSchedule::paper_nyx();
+        assert_eq!(s.eps_with_levels(0), 1.0);
+        for l in 1..4 {
+            assert!(s.eps_with_levels(l) > s.eps_with_levels(l + 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly decrease")]
+    fn non_monotone_eps_rejected() {
+        LevelSchedule::new(vec![10, 10], vec![0.1, 0.1]);
+    }
+
+    #[test]
+    fn scaled_schedule_preserves_shape() {
+        let s = LevelSchedule::paper_nyx_scaled(1000);
+        let f = LevelSchedule::paper_nyx();
+        for i in 0..4 {
+            let ratio = f.sizes[i] as f64 / s.sizes[i] as f64;
+            assert!((ratio - 1000.0).abs() / 1000.0 < 0.01);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Probability that an FTG suffers unrecoverable loss — Equations 4–7.
+//!
+//! Two regimes (paper §3.2.1):
+//! * **Low loss** (`λ·n/r ≤ 1`): losses during the FTG's air time follow a
+//!   Poisson with mean `λ·T`, `T = t + (n−1)/r`; given `j` total losses
+//!   among the `u = r·t + n − 1` fragments in flight, the number landing
+//!   in one particular FTG is hypergeometric (Eq. 5); combining gives
+//!   Eq. 6.
+//! * **High loss** (`λ·n/r > 1`): losses per FTG are Poisson with mean
+//!   `λ·n/r` directly (Eq. 7), which models the correlation the
+//!   independent-FTG assumption misses.
+
+use super::params::NetParams;
+use crate::util::special::{hypergeometric_pmf, poisson_pmf, poisson_sf};
+
+/// `u = r·t + n − 1`: fragments in flight during one FTG's air time (Eq. 3).
+pub fn fragments_in_flight(p: &NetParams) -> u64 {
+    (p.r * p.t).round() as u64 + p.n as u64 - 1
+}
+
+/// FTG air time `T = t + (n−1)/r`.
+pub fn ftg_airtime(p: &NetParams) -> f64 {
+    p.t + (p.n as f64 - 1.0) / p.r
+}
+
+/// Mean fragment losses per FTG, `λ·n/r` — the regime selector of Eq. 8.
+pub fn mean_losses_per_ftg(p: &NetParams) -> f64 {
+    p.lambda * p.n as f64 / p.r
+}
+
+/// Eq. 6 — low-loss-regime probability that an FTG with `m` parity
+/// fragments is unrecoverable.
+pub fn p_unrecoverable_low(p: &NetParams, m: usize) -> f64 {
+    assert!(m < p.n, "parity must leave at least one data fragment");
+    let n = p.n as u64;
+    let u = fragments_in_flight(p);
+    let mu = p.lambda * ftg_airtime(p);
+    // Σ_{j=m+1}^{u} P(unrecoverable | v=j) · P(v=j)
+    let mut total = 0.0;
+    for j in (m as u64 + 1)..=u {
+        let pv = poisson_pmf(j, mu);
+        if pv < 1e-18 && j as f64 > mu {
+            break; // Poisson tail is negligible from here on.
+        }
+        // Σ_{w=m+1}^{min(n, j)} hypergeom(u, n, j, w)
+        let mut cond = 0.0;
+        for w in (m as u64 + 1)..=n.min(j) {
+            cond += hypergeometric_pmf(u, n, j, w);
+        }
+        total += cond * pv;
+    }
+    total.clamp(0.0, 1.0)
+}
+
+/// Eq. 7 — high-loss-regime probability: more than `m` Poisson(λ·n/r)
+/// losses hit the FTG.
+pub fn p_unrecoverable_high(p: &NetParams, m: usize) -> f64 {
+    assert!(m < p.n);
+    poisson_sf(m as u64, mean_losses_per_ftg(p))
+}
+
+/// Regime-dispatched probability (the constraint of Eq. 8).
+pub fn p_unrecoverable(p: &NetParams, m: usize) -> f64 {
+    if mean_losses_per_ftg(p) > 1.0 {
+        p_unrecoverable_high(p, m)
+    } else {
+        p_unrecoverable_low(p, m)
+    }
+}
+
+/// Precompute `p(m)` for m = 0..=max_m (solvers evaluate many m).
+pub fn p_unrecoverable_table(p: &NetParams, max_m: usize) -> Vec<f64> {
+    (0..=max_m).map(|m| p_unrecoverable(p, m)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(lambda: f64) -> NetParams {
+        NetParams::paper_default(lambda)
+    }
+
+    #[test]
+    fn in_flight_count_matches_paper_numbers() {
+        // u = 19144·0.01 + 32 − 1 ≈ 222
+        let u = fragments_in_flight(&params(19.0));
+        assert_eq!(u, 222);
+    }
+
+    #[test]
+    fn regime_selector_thresholds() {
+        // λ·n/r: 19·32/19144 ≈ 0.032 (low), 957·32/19144 ≈ 1.6 (high)
+        assert!(mean_losses_per_ftg(&params(19.0)) < 1.0);
+        assert!(mean_losses_per_ftg(&params(957.0)) > 1.0);
+    }
+
+    #[test]
+    fn p_decreases_with_more_parity() {
+        for lambda in [19.0, 383.0, 957.0] {
+            let p = params(lambda);
+            let table = p_unrecoverable_table(&p, 16);
+            for w in table.windows(2) {
+                assert!(
+                    w[1] <= w[0] + 1e-15,
+                    "λ={lambda}: p must not increase with m: {table:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p_increases_with_loss_rate() {
+        for m in [0, 2, 8] {
+            let lo = p_unrecoverable(&params(19.0), m);
+            let hi = p_unrecoverable(&params(957.0), m);
+            assert!(hi > lo, "m={m}: p(957)={hi} <= p(19)={lo}");
+        }
+    }
+
+    #[test]
+    fn p_zero_lambda_is_zero() {
+        let p = params(0.0);
+        assert_eq!(p_unrecoverable_low(&p, 0), 0.0);
+        assert_eq!(p_unrecoverable_high(&p, 0), 0.0);
+    }
+
+    #[test]
+    fn p_bounded_in_unit_interval() {
+        for lambda in [1.0, 19.0, 383.0, 957.0, 5000.0] {
+            for m in 0..=16 {
+                let v = p_unrecoverable(&params(lambda), m);
+                assert!((0.0..=1.0).contains(&v), "λ={lambda} m={m} p={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn low_regime_m0_close_to_expected_fraction() {
+        // With m=0, an FTG is unrecoverable iff ≥1 of its n fragments is
+        // lost. E[losses in T] = λT, fraction hitting this FTG ≈ n/u, so
+        // P ≈ 1 − exp(−λT·n/u) ≈ 1 − exp(−λn/r) for rt >> n.
+        let p = params(19.0);
+        let got = p_unrecoverable_low(&p, 0);
+        let approx = 1.0 - (-mean_losses_per_ftg(&p)).exp();
+        assert!(
+            (got - approx).abs() / approx < 0.15,
+            "got={got} approx={approx}"
+        );
+    }
+
+    #[test]
+    fn high_regime_matches_poisson_tail_identity() {
+        let p = params(957.0);
+        let mu = mean_losses_per_ftg(&p);
+        // m=0: P(X>0) = 1 − e^{−mu}
+        let got = p_unrecoverable_high(&p, 0);
+        assert!((got - (1.0 - (-mu).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_matches_pointwise() {
+        let p = params(383.0);
+        let table = p_unrecoverable_table(&p, 8);
+        for (m, &v) in table.iter().enumerate() {
+            assert_eq!(v, p_unrecoverable(&p, m));
+        }
+    }
+}

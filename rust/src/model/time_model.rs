@@ -1,0 +1,180 @@
+//! Expected total transmission time with passive retransmission — Eq. 2 —
+//! and the parity optimizer of Eq. 8 (guaranteed-error-bound contract).
+
+use super::params::NetParams;
+use super::prob::p_unrecoverable;
+
+/// Number of FTGs needed to carry `total_bytes` of data with `m` parity
+/// fragments per group (continuous, as in the model: `N = S / ((n−m)s)`).
+pub fn num_ftgs(total_bytes: u64, p: &NetParams, m: usize) -> f64 {
+    assert!(m < p.n);
+    total_bytes as f64 / ((p.n - m) as f64 * p.s as f64)
+}
+
+/// Eq. 2 — expected total time to deliver `N` FTGs of `n` fragments at
+/// rate `r` with per-FTG unrecoverable-loss probability `p_loss`,
+/// including the expected geometric cascade of retransmission rounds.
+pub fn expected_total_time(params: &NetParams, n_ftgs: f64, p_loss: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p_loss), "p={p_loss}");
+    let t = params.t;
+    let r = params.r;
+    let n = params.n as f64;
+    // Initial transmission: t + (nN − 1)/r.
+    let mut total = t + (n * n_ftgs - 1.0) / r;
+    if p_loss <= 0.0 || n_ftgs <= 0.0 {
+        return total;
+    }
+    // Retransmission rounds: round i retransmits ~N·p^i FTGs and occurs
+    // with probability 1 − (1−p)^{N·p^{i−1}}.
+    let mut p_pow = 1.0; // p^{i−1}
+    for _i in 1..=200 {
+        let expected_groups_prev = n_ftgs * p_pow; // N·p^{i−1}
+        let prob_round = 1.0 - (1.0 - p_loss).powf(expected_groups_prev);
+        if prob_round < 1e-15 {
+            break;
+        }
+        p_pow *= p_loss; // now p^i
+        let round_time = t + (n * n_ftgs * p_pow - 1.0).max(0.0) / r;
+        total += prob_round * round_time;
+    }
+    total
+}
+
+/// Result of the Eq. 8 search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeOpt {
+    pub m: usize,
+    pub expected_time: f64,
+    pub p_unrecoverable: f64,
+}
+
+/// Eq. 8 — choose `m ∈ {0..n/2}` minimizing `E[T_total]` for transferring
+/// `total_bytes` (the first `l` levels) under `params`.
+///
+/// `p` is computed with Eq. 7 when `λ·n/r > 1`, else Eq. 6 — dispatched
+/// inside [`p_unrecoverable`].
+pub fn optimize_parity(params: &NetParams, total_bytes: u64) -> TimeOpt {
+    let max_m = params.n / 2;
+    let mut best: Option<TimeOpt> = None;
+    for m in 0..=max_m {
+        let p_loss = p_unrecoverable(params, m);
+        let n_ftgs = num_ftgs(total_bytes, params, m);
+        let t = expected_total_time(params, n_ftgs, p_loss);
+        if best.map_or(true, |b| t < b.expected_time) {
+            best = Some(TimeOpt { m, expected_time: t, p_unrecoverable: p_loss });
+        }
+    }
+    best.expect("non-empty search space")
+}
+
+/// Expected time for every m (for Fig. 2's model curves).
+pub fn expected_time_curve(params: &NetParams, total_bytes: u64, max_m: usize) -> Vec<TimeOpt> {
+    (0..=max_m)
+        .map(|m| {
+            let p_loss = p_unrecoverable(params, m);
+            let n_ftgs = num_ftgs(total_bytes, params, m);
+            TimeOpt {
+                m,
+                expected_time: expected_total_time(params, n_ftgs, p_loss),
+                p_unrecoverable: p_loss,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::LevelSchedule;
+
+    #[test]
+    fn no_loss_time_is_wire_time() {
+        let p = NetParams::paper_default(0.0);
+        let n_ftgs = 100.0;
+        let t = expected_total_time(&p, n_ftgs, 0.0);
+        let expect = p.t + (p.n as f64 * 100.0 - 1.0) / p.r;
+        assert!((t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_increases_with_loss_probability() {
+        let p = NetParams::paper_default(383.0);
+        let t1 = expected_total_time(&p, 1000.0, 0.001);
+        let t2 = expected_total_time(&p, 1000.0, 0.01);
+        let t3 = expected_total_time(&p, 1000.0, 0.2);
+        assert!(t1 < t2 && t2 < t3);
+    }
+
+    #[test]
+    fn converges_for_high_p() {
+        let p = NetParams::paper_default(957.0);
+        let t = expected_total_time(&p, 50_000.0, 0.9);
+        assert!(t.is_finite());
+        // Geometric cascade with p=0.9 is long but finite.
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn num_ftgs_matches_formula() {
+        let p = NetParams::paper_default(19.0);
+        let s = LevelSchedule::paper_nyx();
+        let bytes = s.total_bytes(4);
+        // N = S/((n−m)·s)
+        let n0 = num_ftgs(bytes, &p, 0);
+        assert!((n0 - bytes as f64 / (32.0 * 4096.0)).abs() < 1e-9);
+        let n16 = num_ftgs(bytes, &p, 16);
+        assert!((n16 - 2.0 * n0).abs() / n0 < 1e-9);
+    }
+
+    #[test]
+    fn low_loss_prefers_little_parity() {
+        // Paper Fig. 2(a): at λ=19 the overhead of parity dominates; the
+        // optimum sits at small m.
+        let p = NetParams::paper_default(19.0);
+        let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+        let opt = optimize_parity(&p, bytes);
+        assert!(opt.m <= 3, "expected small m at low loss, got {}", opt.m);
+    }
+
+    #[test]
+    fn high_loss_prefers_more_parity_than_low_loss() {
+        let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+        let low = optimize_parity(&NetParams::paper_default(19.0), bytes);
+        let high = optimize_parity(&NetParams::paper_default(957.0), bytes);
+        assert!(
+            high.m > low.m,
+            "λ=957 chose m={} <= λ=19's m={}",
+            high.m,
+            low.m
+        );
+    }
+
+    #[test]
+    fn optimum_beats_endpoints() {
+        // Paper Fig. 2(b)/(c): an interior optimal m exists at medium/high λ.
+        let p = NetParams::paper_default(957.0);
+        let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+        let curve = expected_time_curve(&p, bytes, 16);
+        let opt = optimize_parity(&p, bytes);
+        assert!(opt.expected_time <= curve[0].expected_time);
+        assert!(opt.expected_time <= curve[16].expected_time);
+        assert!(opt.m > 0 && opt.m < 16, "interior optimum expected, m={}", opt.m);
+    }
+
+    #[test]
+    fn minimum_times_in_paper_ballpark() {
+        // Paper §5.2.3: minimum total times ≈ 378.03 s (λ=19),
+        // 401.11 s (λ=383), 429.75 s (λ=957). Our model should land in
+        // the same ballpark (±10%).
+        let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+        for (lambda, expect) in [(19.0, 378.03), (383.0, 401.11), (957.0, 429.75)] {
+            let opt = optimize_parity(&NetParams::paper_default(lambda), bytes);
+            let rel = (opt.expected_time - expect).abs() / expect;
+            assert!(
+                rel < 0.10,
+                "λ={lambda}: model {:.2}s vs paper {expect}s (rel {rel:.3})",
+                opt.expected_time
+            );
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Bitplane encoding of multilevel coefficients (paper §2.2).
+//!
+//! pMGARD stores each level's coefficients as *bitplanes* so a level can
+//! itself be truncated to a precision prefix: transmit the exponent plane
+//! and the top `b` mantissa planes and the reconstruction error within
+//! the level is bounded by `2^(max_exp − b)`. Janus uses this to split a
+//! level into sub-level precision chunks — the finest-grained unit the
+//! sender can shed under a deadline.
+//!
+//! Encoding (per block of coefficients):
+//!   * shared scale: the block's maximum absolute value fixes a common
+//!     binary exponent `e_max`;
+//!   * each coefficient is quantized to a sign + `planes`-bit magnitude
+//!     relative to `2^{e_max}`;
+//!   * magnitudes are stored transposed: plane `p` holds bit `p` of every
+//!     coefficient (MSB first), so a byte-stream prefix = a precision
+//!     prefix.
+
+/// A bitplane-encoded block of f32 coefficients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitplaneBlock {
+    /// Number of coefficients.
+    pub len: usize,
+    /// Shared binary exponent: values are reconstructed as
+    /// `sign · mantissa · 2^(e_max − PLANES)`.
+    pub e_max: i32,
+    /// Total mantissa planes encoded.
+    pub planes: u8,
+    /// Sign bits, bit-packed (1 = negative).
+    pub signs: Vec<u8>,
+    /// Mantissa planes, MSB plane first; each plane is `ceil(len/8)` bytes.
+    pub plane_bits: Vec<Vec<u8>>,
+}
+
+fn pack_bits(bits: impl Iterator<Item = bool>, len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; len.div_ceil(8)];
+    for (i, b) in bits.enumerate() {
+        if b {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+#[inline]
+fn get_bit(bytes: &[u8], i: usize) -> bool {
+    (bytes[i / 8] >> (i % 8)) & 1 == 1
+}
+
+impl BitplaneBlock {
+    /// Encode `values` with `planes` mantissa bits (1..=23 useful for f32).
+    pub fn encode(values: &[f32], planes: u8) -> BitplaneBlock {
+        assert!(planes >= 1 && planes <= 30, "planes must be 1..=30");
+        let len = values.len();
+        let max_abs = values.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        // Exponent such that max_abs < 2^{e_max}.
+        let e_max = if max_abs == 0.0 {
+            0
+        } else {
+            max_abs.log2().floor() as i32 + 1
+        };
+        let scale = (2f64).powi(planes as i32 - e_max);
+        let quantized: Vec<u32> = values
+            .iter()
+            .map(|&v| {
+                let q = (v.abs() as f64 * scale).round() as u64;
+                // Clamp: rounding can push max_abs to 2^planes.
+                q.min((1u64 << planes) - 1) as u32
+            })
+            .collect();
+        let signs = pack_bits(values.iter().map(|&v| v.is_sign_negative()), len);
+        let plane_bits = (0..planes)
+            .rev() // MSB plane first
+            .map(|p| pack_bits(quantized.iter().map(|&q| (q >> p) & 1 == 1), len))
+            .collect();
+        BitplaneBlock { len, e_max, planes, signs, plane_bits }
+    }
+
+    /// Decode using only the first `use_planes` planes (precision prefix).
+    pub fn decode_prefix(&self, use_planes: u8) -> Vec<f32> {
+        let used = use_planes.min(self.planes);
+        let inv_scale = (2f64).powi(self.e_max - self.planes as i32);
+        // Mid-tread reconstruction offset for truncated planes: half of
+        // the dropped-precision step, reduces truncation bias.
+        let dropped = self.planes - used;
+        let offset = if dropped > 0 { (1u64 << dropped) as f64 / 2.0 } else { 0.0 };
+        (0..self.len)
+            .map(|i| {
+                let mut q: u64 = 0;
+                for (pi, plane) in self.plane_bits.iter().take(used as usize).enumerate() {
+                    if get_bit(plane, i) {
+                        q |= 1 << (self.planes as usize - 1 - pi);
+                    }
+                }
+                let mag = if q == 0 && dropped == 0 {
+                    0.0
+                } else if q == 0 {
+                    // All transmitted planes zero: could be anywhere in
+                    // [0, 2^dropped); reconstruct at 0 to keep exact
+                    // zeros exact.
+                    0.0
+                } else {
+                    (q as f64 + offset) * inv_scale
+                };
+                let v = mag as f32;
+                if get_bit(&self.signs, i) {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Full-precision decode (all encoded planes).
+    pub fn decode(&self) -> Vec<f32> {
+        self.decode_prefix(self.planes)
+    }
+
+    /// Worst-case absolute error when decoding with `use_planes` planes.
+    pub fn error_bound(&self, use_planes: u8) -> f64 {
+        let used = use_planes.min(self.planes);
+        // Quantization half-step at full precision + truncation step.
+        let lsb = (2f64).powi(self.e_max - self.planes as i32);
+        let trunc = (1u64 << (self.planes - used)) as f64 * lsb;
+        0.5 * lsb + trunc
+    }
+
+    /// Serialize to bytes: header + signs + planes (MSB first), so a
+    /// *prefix* of the byte stream decodes at reduced precision.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            16 + self.signs.len() + self.plane_bits.iter().map(|p| p.len()).sum::<usize>(),
+        );
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        out.extend_from_slice(&self.e_max.to_le_bytes());
+        out.push(self.planes);
+        out.extend_from_slice(&self.signs);
+        for plane in &self.plane_bits {
+            out.extend_from_slice(plane);
+        }
+        out
+    }
+
+    /// Deserialize; tolerates a truncated plane suffix (missing planes are
+    /// simply unavailable — the progressive property).
+    pub fn from_bytes(bytes: &[u8]) -> Option<BitplaneBlock> {
+        if bytes.len() < 13 {
+            return None;
+        }
+        let len = u64::from_le_bytes(bytes[0..8].try_into().ok()?) as usize;
+        let e_max = i32::from_le_bytes(bytes[8..12].try_into().ok()?);
+        let planes = bytes[12];
+        let stride = len.div_ceil(8);
+        let mut off = 13;
+        if bytes.len() < off + stride {
+            return None;
+        }
+        let signs = bytes[off..off + stride].to_vec();
+        off += stride;
+        let mut plane_bits = Vec::new();
+        while plane_bits.len() < planes as usize && bytes.len() >= off + stride {
+            plane_bits.push(bytes[off..off + stride].to_vec());
+            off += stride;
+        }
+        let have = plane_bits.len() as u8;
+        // Missing planes decode as zeros; adjust `planes` bookkeeping by
+        // padding with zero planes so decode_prefix stays correct.
+        while plane_bits.len() < planes as usize {
+            plane_bits.push(vec![0u8; stride]);
+        }
+        let mut block = BitplaneBlock { len, e_max, planes, signs, plane_bits };
+        if have < planes {
+            // Record effective precision via error bound behaviour: callers
+            // should decode with `have` planes. We keep `planes` for scale.
+            block.plane_bits.truncate(planes as usize);
+        }
+        Some(block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_values(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n)
+            .map(|_| ((rng.next_f64() * 2.0 - 1.0) as f32) * scale)
+            .collect()
+    }
+
+    #[test]
+    fn full_decode_within_lsb() {
+        for &scale in &[1.0f32, 100.0, 1e-3] {
+            let vals = random_values(257, 1, scale);
+            let block = BitplaneBlock::encode(&vals, 20);
+            let dec = block.decode();
+            let bound = block.error_bound(20);
+            for (a, b) in vals.iter().zip(&dec) {
+                assert!(
+                    ((a - b).abs() as f64) <= bound,
+                    "scale {scale}: |{a} − {b}| > {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_error_bound_holds_for_every_prefix() {
+        let vals = random_values(500, 2, 8.0);
+        let block = BitplaneBlock::encode(&vals, 16);
+        for used in 1..=16u8 {
+            let dec = block.decode_prefix(used);
+            let bound = block.error_bound(used);
+            for (a, b) in vals.iter().zip(&dec) {
+                assert!(
+                    ((a - b).abs() as f64) <= bound,
+                    "planes {used}: |{a} − {b}| = {} > {bound}",
+                    (a - b).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_more_planes() {
+        let vals = random_values(1000, 3, 2.0);
+        let block = BitplaneBlock::encode(&vals, 20);
+        let mut prev = f64::INFINITY;
+        for used in (4..=20u8).step_by(4) {
+            let dec = block.decode_prefix(used);
+            let max_err = vals
+                .iter()
+                .zip(&dec)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0, f64::max);
+            assert!(max_err <= prev, "error grew at {used} planes");
+            prev = max_err;
+        }
+        assert!(prev < 1e-4, "20 planes should be accurate: {prev}");
+    }
+
+    #[test]
+    fn zeros_stay_exactly_zero() {
+        let vals = vec![0.0f32; 64];
+        let block = BitplaneBlock::encode(&vals, 12);
+        assert!(block.decode().iter().all(|&v| v == 0.0));
+        assert!(block.decode_prefix(3).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn byte_roundtrip_exact() {
+        let vals = random_values(123, 4, 5.0);
+        let block = BitplaneBlock::encode(&vals, 14);
+        let bytes = block.to_bytes();
+        let back = BitplaneBlock::from_bytes(&bytes).unwrap();
+        assert_eq!(back, block);
+    }
+
+    #[test]
+    fn truncated_bytes_decode_progressively() {
+        let vals = random_values(200, 5, 3.0);
+        let block = BitplaneBlock::encode(&vals, 16);
+        let bytes = block.to_bytes();
+        let stride = 200usize.div_ceil(8);
+        // Keep header + signs + 6 planes.
+        let cut = 13 + stride + 6 * stride;
+        let partial = BitplaneBlock::from_bytes(&bytes[..cut]).unwrap();
+        let dec = partial.decode_prefix(6);
+        let bound = block.error_bound(6);
+        for (a, b) in vals.iter().zip(&dec) {
+            assert!(((a - b).abs() as f64) <= bound);
+        }
+    }
+
+    #[test]
+    fn header_too_short_rejected() {
+        assert!(BitplaneBlock::from_bytes(&[0u8; 5]).is_none());
+        assert!(BitplaneBlock::from_bytes(&[]).is_none());
+    }
+
+    #[test]
+    fn signs_preserved() {
+        let vals = vec![-1.5f32, 2.5, -0.25, 0.75];
+        let block = BitplaneBlock::encode(&vals, 20);
+        let dec = block.decode();
+        for (a, b) in vals.iter().zip(&dec) {
+            assert_eq!(a.signum(), b.signum(), "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,479 @@
+//! Native Rust mirror of the L2/L1 multilevel refactorer.
+//!
+//! Bit-for-bit the same CDF(2,2)-style lifting scheme as
+//! `python/compile/kernels/lift.py` (verified against the PJRT artifacts
+//! in `rust/tests/runtime_artifacts.rs`). Used where the PJRT runtime is
+//! unnecessary (tests, pure-simulation experiments) and as the oracle for
+//! artifact validation.
+
+/// Forward lifting along contiguous rows of width `w` (even).
+///
+/// `x` is a `(rows, w)` row-major view; outputs are `(rows, w/2)` coarse
+/// and detail planes.
+pub fn lift_forward(x: &[f32], rows: usize, w: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), rows * w);
+    assert!(w % 2 == 0 && w >= 2);
+    let half = w / 2;
+    let mut coarse = vec![0f32; rows * half];
+    let mut detail = vec![0f32; rows * half];
+    for r in 0..rows {
+        let row = &x[r * w..(r + 1) * w];
+        let c = &mut coarse[r * half..(r + 1) * half];
+        let d = &mut detail[r * half..(r + 1) * half];
+        // Predict: detail_j = odd_j − (even_j + even_{j+1})/2 (clamped).
+        for j in 0..half {
+            let even = row[2 * j];
+            let right = row[2 * (j + 1).min(half - 1)];
+            d[j] = row[2 * j + 1] - 0.5 * (even + right);
+        }
+        // Update: coarse_j = even_j + (d_{j−1} + d_j)/4 (clamped).
+        for j in 0..half {
+            let dl = d[j.saturating_sub(1)];
+            c[j] = row[2 * j] + 0.25 * (dl + d[j]);
+        }
+    }
+    (coarse, detail)
+}
+
+/// Inverse lifting: `(rows, w/2)` coarse+detail → `(rows, w)` rows.
+pub fn lift_inverse(coarse: &[f32], detail: &[f32], rows: usize, half: usize) -> Vec<f32> {
+    assert_eq!(coarse.len(), rows * half);
+    assert_eq!(detail.len(), rows * half);
+    let w = half * 2;
+    let mut out = vec![0f32; rows * w];
+    let mut even = vec![0f32; half];
+    for r in 0..rows {
+        let c = &coarse[r * half..(r + 1) * half];
+        let d = &detail[r * half..(r + 1) * half];
+        for j in 0..half {
+            let dl = d[j.saturating_sub(1)];
+            even[j] = c[j] - 0.25 * (dl + d[j]);
+        }
+        let row = &mut out[r * w..(r + 1) * w];
+        for j in 0..half {
+            let right = even[(j + 1).min(half - 1)];
+            row[2 * j] = even[j];
+            row[2 * j + 1] = d[j] + 0.5 * (even[j] + right);
+        }
+    }
+    out
+}
+
+/// A (D, D, D) f32 volume, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Volume {
+    pub d: usize,
+    pub data: Vec<f32>,
+}
+
+impl Volume {
+    pub fn new(d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), d * d * d);
+        Volume { d, data }
+    }
+
+    pub fn zeros(d: usize) -> Self {
+        Volume { d, data: vec![0.0; d * d * d] }
+    }
+
+    #[inline]
+    fn at(&self, i: usize, j: usize, k: usize) -> f32 {
+        self.data[(i * self.d + j) * self.d + k]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        self.data[(i * self.d + j) * self.d + k] = v;
+    }
+
+    /// Relative L∞ error vs another volume (paper Eq. 1).
+    pub fn linf_rel_error(&self, other: &Volume) -> f64 {
+        assert_eq!(self.d, other.d);
+        let mut num = 0f32;
+        let mut den = 0f32;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num = num.max((a - b).abs());
+            den = den.max(a.abs());
+        }
+        num as f64 / den as f64
+    }
+
+    /// Transpose so the given axis becomes the contiguous (last) axis.
+    fn to_last_axis(&self, axis: usize) -> Vec<f32> {
+        let d = self.d;
+        let mut out = vec![0f32; d * d * d];
+        let mut idx = 0;
+        match axis {
+            2 => out.copy_from_slice(&self.data),
+            1 => {
+                for i in 0..d {
+                    for k in 0..d {
+                        for j in 0..d {
+                            out[idx] = self.at(i, j, k);
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+            0 => {
+                for k in 0..d {
+                    for j in 0..d {
+                        for i in 0..d {
+                            out[idx] = self.at(i, j, k);
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+            _ => panic!("axis {axis}"),
+        }
+        out
+    }
+
+    fn from_last_axis(buf: &[f32], d: usize, axis: usize) -> Volume {
+        let mut v = Volume::zeros(d);
+        let mut idx = 0;
+        match axis {
+            2 => v.data.copy_from_slice(buf),
+            1 => {
+                for i in 0..d {
+                    for k in 0..d {
+                        for j in 0..d {
+                            v.set(i, j, k, buf[idx]);
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+            0 => {
+                for k in 0..d {
+                    for j in 0..d {
+                        for i in 0..d {
+                            v.set(i, j, k, buf[idx]);
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+            _ => panic!("axis {axis}"),
+        }
+        v
+    }
+}
+
+/// One separable 3-D lift step; returns the same-shape array whose
+/// `[:h,:h,:h]` octant is coarse (h = d/2), matching the Python layout.
+pub fn lift3d_forward(x: &Volume) -> Volume {
+    let d = x.d;
+    assert!(d % 2 == 0);
+    let mut cur = x.clone();
+    for axis in [2usize, 1, 0] {
+        let rows = d * d;
+        let flat = cur.to_last_axis(axis);
+        let (c, det) = lift_forward(&flat, rows, d);
+        let mut merged = vec![0f32; d * d * d];
+        let half = d / 2;
+        for r in 0..rows {
+            merged[r * d..r * d + half].copy_from_slice(&c[r * half..(r + 1) * half]);
+            merged[r * d + half..(r + 1) * d].copy_from_slice(&det[r * half..(r + 1) * half]);
+        }
+        cur = Volume::from_last_axis(&merged, d, axis);
+    }
+    cur
+}
+
+/// Inverse of [`lift3d_forward`].
+pub fn lift3d_inverse(y: &Volume) -> Volume {
+    let d = y.d;
+    let half = d / 2;
+    let mut cur = y.clone();
+    for axis in [0usize, 1, 2] {
+        let rows = d * d;
+        let flat = cur.to_last_axis(axis);
+        let mut c = vec![0f32; rows * half];
+        let mut det = vec![0f32; rows * half];
+        for r in 0..rows {
+            c[r * half..(r + 1) * half].copy_from_slice(&flat[r * d..r * d + half]);
+            det[r * half..(r + 1) * half].copy_from_slice(&flat[r * d + half..(r + 1) * d]);
+        }
+        let inv = lift_inverse(&c, &det, rows, half);
+        cur = Volume::from_last_axis(&inv, d, axis);
+    }
+    cur
+}
+
+/// Extract the 7 detail octants in the Python layout order.
+fn detail_octants(y: &Volume) -> Vec<f32> {
+    let h = y.d / 2;
+    let mut out = Vec::with_capacity(7 * h * h * h);
+    for oi in 0..2 {
+        for oj in 0..2 {
+            for ok in 0..2 {
+                if (oi, oj, ok) == (0, 0, 0) {
+                    continue;
+                }
+                for i in 0..h {
+                    for j in 0..h {
+                        for k in 0..h {
+                            out.push(y.at(oi * h + i, oj * h + j, ok * h + k));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn coarse_octant(y: &Volume) -> Volume {
+    let h = y.d / 2;
+    let mut out = Volume::zeros(h);
+    for i in 0..h {
+        for j in 0..h {
+            for k in 0..h {
+                out.set(i, j, k, y.at(i, j, k));
+            }
+        }
+    }
+    out
+}
+
+fn unflatten_octants(coarse: &Volume, det: &[f32]) -> Volume {
+    let h = coarse.d;
+    let d = 2 * h;
+    let csize = h * h * h;
+    assert_eq!(det.len(), 7 * csize);
+    let mut y = Volume::zeros(d);
+    for i in 0..h {
+        for j in 0..h {
+            for k in 0..h {
+                y.set(i, j, k, coarse.at(i, j, k));
+            }
+        }
+    }
+    let mut idx = 0;
+    for oi in 0..2 {
+        for oj in 0..2 {
+            for ok in 0..2 {
+                if (oi, oj, ok) == (0, 0, 0) {
+                    continue;
+                }
+                for i in 0..h {
+                    for j in 0..h {
+                        for k in 0..h {
+                            y.set(oi * h + i, oj * h + j, ok * h + k, det[idx]);
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Multilevel decomposition into `levels` flat f32 buffers (level 1 =
+/// coarsest approximation; identical layout to the Python model).
+pub fn decompose(x: &Volume, levels: usize) -> Vec<Vec<f32>> {
+    assert!(levels >= 1);
+    assert!(x.d % (1 << (levels - 1)) == 0, "D must divide 2^(L−1)");
+    let mut details = Vec::new();
+    let mut cur = x.clone();
+    for _ in 0..levels - 1 {
+        let y = lift3d_forward(&cur);
+        details.push(detail_octants(&y));
+        cur = coarse_octant(&y);
+    }
+    let mut out = vec![cur.data];
+    details.reverse();
+    out.extend(details);
+    out
+}
+
+/// Progressive reconstruction from the first `levels_used` buffers;
+/// missing details are zero-filled.
+pub fn reconstruct(buffers: &[&[f32]], levels_used: usize, total_levels: usize, d: usize) -> Volume {
+    assert!(levels_used >= 1 && levels_used <= total_levels);
+    let base = d >> (total_levels - 1);
+    let mut cur = Volume::new(base, buffers[0].to_vec());
+    for i in 1..total_levels {
+        let h = cur.d;
+        let zero;
+        let det: &[f32] = if i < levels_used {
+            buffers[i]
+        } else {
+            zero = vec![0f32; 7 * h * h * h];
+            &zero
+        };
+        cur = lift3d_inverse(&unflatten_octants(&cur, det));
+    }
+    cur
+}
+
+/// Level byte sizes for a (D, D, D) f32 volume (matches the Python model).
+pub fn level_sizes(d: usize, levels: usize) -> Vec<u64> {
+    let base = d >> (levels - 1);
+    let mut sizes = vec![(base * base * base * 4) as u64];
+    let mut h = base;
+    for _ in 1..levels {
+        sizes.push((7 * h * h * h * 4) as u64);
+        h *= 2;
+    }
+    sizes
+}
+
+/// Serialize level buffers to byte vectors (little-endian f32) for the
+/// transfer path, and back.
+pub fn levels_to_bytes(levels: &[Vec<f32>]) -> Vec<Vec<u8>> {
+    levels
+        .iter()
+        .map(|l| l.iter().flat_map(|v| v.to_le_bytes()).collect())
+        .collect()
+}
+
+pub fn bytes_to_level(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 4 == 0);
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_volume(d: usize, seed: u64) -> Volume {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..d * d * d)
+            .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+            .collect();
+        Volume::new(d, data)
+    }
+
+    /// Smooth low-frequency field (decomposition error ladder needs
+    /// scale structure).
+    fn smooth_volume(d: usize, seed: u64) -> Volume {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = Volume::zeros(d);
+        let tau = 2.0 * std::f64::consts::PI / d as f64;
+        let modes: Vec<(f64, f64, f64, f64, f64)> = (0..10)
+            .map(|_| {
+                (
+                    (rng.range(1, 3)) as f64,
+                    (rng.range(1, 3)) as f64,
+                    (rng.range(1, 3)) as f64,
+                    rng.next_f64() * std::f64::consts::TAU,
+                    rng.next_f64() + 0.2,
+                )
+            })
+            .collect();
+        for i in 0..d {
+            for j in 0..d {
+                for k in 0..d {
+                    let mut val = 3.0;
+                    for &(ki, kj, kk, ph, amp) in &modes {
+                        val += amp
+                            * (ki * i as f64 * tau + ph).cos()
+                            * (kj * j as f64 * tau).cos()
+                            * (kk * k as f64 * tau).cos();
+                    }
+                    v.set(i, j, k, val as f32);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn lift_1d_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        for (rows, w) in [(1, 2), (4, 8), (16, 64), (3, 256)] {
+            let x: Vec<f32> = (0..rows * w).map(|_| rng.next_f64() as f32).collect();
+            let (c, d) = lift_forward(&x, rows, w);
+            let xi = lift_inverse(&c, &d, rows, w / 2);
+            for (a, b) in x.iter().zip(&xi) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_signal_zero_detail() {
+        let x = vec![5.0f32; 4 * 16];
+        let (c, d) = lift_forward(&x, 4, 16);
+        assert!(d.iter().all(|&v| v.abs() < 1e-6));
+        assert!(c.iter().all(|&v| (v - 5.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn lift3d_roundtrip() {
+        let x = random_volume(16, 2);
+        let y = lift3d_forward(&x);
+        let xi = lift3d_inverse(&y);
+        assert!(x.linf_rel_error(&xi) < 1e-5);
+    }
+
+    #[test]
+    fn decompose_reconstruct_exact() {
+        for (d, levels) in [(16, 2), (16, 3), (32, 4)] {
+            let x = random_volume(d, 3);
+            let bufs = decompose(&x, levels);
+            assert_eq!(bufs.len(), levels);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let xi = reconstruct(&refs, levels, levels, d);
+            assert!(
+                x.linf_rel_error(&xi) < 1e-4,
+                "d={d} L={levels}: {}",
+                x.linf_rel_error(&xi)
+            );
+        }
+    }
+
+    #[test]
+    fn progressive_error_decreases_on_smooth_field() {
+        let d = 32;
+        let x = smooth_volume(d, 4);
+        let bufs = decompose(&x, 4);
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let errs: Vec<f64> = (1..=4)
+            .map(|u| x.linf_rel_error(&reconstruct(&refs, u, 4, d)))
+            .collect();
+        for w in errs.windows(2) {
+            assert!(w[0] > w[1], "ε must decrease: {errs:?}");
+        }
+        assert!(errs[3] < 1e-5);
+    }
+
+    #[test]
+    fn level_sizes_match_buffers() {
+        let x = random_volume(32, 5);
+        let bufs = decompose(&x, 4);
+        let sizes = level_sizes(32, 4);
+        for (b, &s) in bufs.iter().zip(&sizes) {
+            assert_eq!(b.len() as u64 * 4, s);
+        }
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]), "S_i must grow");
+    }
+
+    #[test]
+    fn byte_serialization_roundtrip() {
+        let x = random_volume(16, 6);
+        let bufs = decompose(&x, 3);
+        let bytes = levels_to_bytes(&bufs);
+        for (orig, by) in bufs.iter().zip(&bytes) {
+            assert_eq!(&bytes_to_level(by), orig);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip_all_axes() {
+        let x = random_volume(8, 7);
+        for axis in 0..3 {
+            let flat = x.to_last_axis(axis);
+            let back = Volume::from_last_axis(&flat, 8, axis);
+            assert_eq!(back, x, "axis {axis}");
+        }
+    }
+}

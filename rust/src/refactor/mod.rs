@@ -1,0 +1,13 @@
+//! Multilevel data refactoring — the pMGARD substitute (paper §2.2):
+//! native lifting transform mirroring the L2/L1 JAX+Pallas pipeline,
+//! plus the synthetic Nyx-like field generator.
+
+pub mod bitplane;
+pub mod grf;
+pub mod lifting;
+
+pub use bitplane::BitplaneBlock;
+pub use grf::{generate, GrfConfig};
+pub use lifting::{
+    bytes_to_level, decompose, level_sizes, levels_to_bytes, reconstruct, Volume,
+};

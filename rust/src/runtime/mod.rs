@@ -1,0 +1,153 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`). One [`Runtime`] owns the
+//! PJRT client and a compile cache keyed by artifact name; an
+//! [`Executable`] runs with `f32` buffers in/out. Python authored the
+//! artifacts at build time (`make artifacts`); nothing here touches
+//! Python.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded artifact collection (an `artifacts/` directory with the
+/// `manifest.tsv` written by `python/compile/aot.py`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// name → (file, input arity)
+    manifest: HashMap<String, (String, usize)>,
+    cache: HashMap<String, Executable>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let mut manifest = HashMap::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 3 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            manifest.insert(
+                cols[0].to_string(),
+                (cols[1].to_string(), cols[2].parse::<usize>()?),
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Declared input arity of an artifact.
+    pub fn arity(&self, name: &str) -> Option<usize> {
+        self.manifest.get(name).map(|&(_, a)| a)
+    }
+
+    /// Load + compile an artifact (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let (file, _) = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.cache.insert(name.to_string(), Executable { exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load and run in one call.
+    pub fn run_f32(&mut self, name: &str, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        if let Some(arity) = self.arity(name) {
+            if arity != inputs.len() {
+                bail!("artifact {name} wants {arity} inputs, got {}", inputs.len());
+            }
+        }
+        self.load(name)?;
+        self.cache[name].run_f32(inputs)
+    }
+}
+
+/// One f32 input buffer with an optional shape (1-D when `dims` is None).
+pub struct F32Input<'a> {
+    pub data: &'a [f32],
+    pub dims: Option<&'a [usize]>,
+}
+
+impl<'a> F32Input<'a> {
+    pub fn vec(data: &'a [f32]) -> Self {
+        F32Input { data, dims: None }
+    }
+    pub fn shaped(data: &'a [f32], dims: &'a [usize]) -> Self {
+        F32Input { data, dims: Some(dims) }
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs; flatten every output buffer to `Vec<f32>`.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// result literal is a tuple — decomposed here.
+    pub fn run_f32(&self, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = xla::Literal::vec1(inp.data);
+            let lit = match inp.dims {
+                Some(dims) => {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    lit.reshape(&d).map_err(|e| anyhow!("reshape input: {e}"))?
+                }
+                None => lit,
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        let mut buffers = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            buffers.push(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
+        }
+        Ok(buffers)
+    }
+}
+
+/// Default artifact directory: `$JANUS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("JANUS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,234 @@
+//! Discrete-event simulation engine (SimPy substitute, DESIGN.md §3).
+//!
+//! A minimal, fast, deterministic event-queue kernel: the protocol models
+//! (`tcp`, `udp_ec`, `adaptive`, ...) define an event enum and a [`World`]
+//! that mutates its state on each event, scheduling follow-up events
+//! through the [`Scheduler`]. Ties are broken by insertion sequence so
+//! runs are fully reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated clock, in seconds.
+pub type SimTime = f64;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. NaN times
+        // are rejected at scheduling, so total order is safe here.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Pending-event queue handed to [`World::handle`].
+pub struct Scheduler<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Scheduler<E> {
+    pub fn new() -> Self {
+        Scheduler { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    #[inline]
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` to fire `delay` seconds from now.
+    #[inline]
+    pub fn schedule(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.now + delay, event)
+    }
+
+    /// Schedule `event` at an absolute time (must not be in the past).
+    #[inline]
+    pub fn schedule_at(&mut self, time: SimTime, event: E) {
+        assert!(time.is_finite(), "non-finite event time");
+        assert!(
+            time >= self.now - 1e-12,
+            "scheduling into the past: {time} < {}",
+            self.now
+        );
+        self.heap.push(Entry { time: time.max(self.now), seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    /// True when no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for Scheduler<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A simulation model: state + event handler.
+pub trait World {
+    type Event;
+    /// Handle one event at simulated time `now`. Schedule follow-ups via
+    /// `sched`. Return `false` to stop the simulation early.
+    fn handle(&mut self, now: SimTime, event: Self::Event, sched: &mut Scheduler<Self::Event>) -> bool;
+}
+
+/// Drive `world` until the queue drains, `world.handle` returns false, or
+/// `max_events` safety limit trips. Returns the final simulated time.
+pub fn run<W: World>(world: &mut W, sched: &mut Scheduler<W::Event>, max_events: u64) -> SimTime {
+    while let Some((time, event)) = sched.pop() {
+        sched.now = time;
+        sched.processed += 1;
+        if !world.handle(time, event, sched) {
+            break;
+        }
+        if sched.processed >= max_events {
+            panic!("simulation exceeded {max_events} events — runaway model?");
+        }
+    }
+    sched.now
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Ping(u32),
+        Stop,
+    }
+
+    struct Recorder {
+        seen: Vec<(SimTime, u32)>,
+    }
+
+    impl World for Recorder {
+        type Event = Ev;
+        fn handle(&mut self, now: SimTime, ev: Ev, sched: &mut Scheduler<Ev>) -> bool {
+            match ev {
+                Ev::Ping(i) => {
+                    self.seen.push((now, i));
+                    if i < 3 {
+                        sched.schedule(1.5, Ev::Ping(i + 1));
+                    }
+                    true
+                }
+                Ev::Stop => false,
+            }
+        }
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut w = Recorder { seen: vec![] };
+        let mut s = Scheduler::new();
+        s.schedule(2.0, Ev::Ping(10));
+        s.schedule(1.0, Ev::Ping(20));
+        s.schedule(3.0, Ev::Ping(30));
+        run(&mut w, &mut s, 1000);
+        let ids: Vec<u32> = w.seen.iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids, vec![20, 10, 30]);
+    }
+
+    #[test]
+    fn chained_scheduling_advances_clock() {
+        let mut w = Recorder { seen: vec![] };
+        let mut s = Scheduler::new();
+        s.schedule(0.0, Ev::Ping(0));
+        let end = run(&mut w, &mut s, 1000);
+        assert_eq!(w.seen.len(), 4);
+        assert!((end - 4.5).abs() < 1e-12, "end={end}");
+        assert!((w.seen[3].0 - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stop_event_halts_early() {
+        let mut w = Recorder { seen: vec![] };
+        let mut s = Scheduler::new();
+        s.schedule(1.0, Ev::Stop);
+        s.schedule(2.0, Ev::Ping(99));
+        run(&mut w, &mut s, 1000);
+        assert!(w.seen.is_empty());
+    }
+
+    #[test]
+    fn ties_broken_by_insertion_order() {
+        let mut w = Recorder { seen: vec![] };
+        let mut s = Scheduler::new();
+        for i in 10..20 {
+            s.schedule(1.0, Ev::Ping(i));
+        }
+        run(&mut w, &mut s, 1000);
+        let ids: Vec<u32> = w.seen.iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids, (10..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_scheduling_rejected() {
+        struct Bad;
+        impl World for Bad {
+            type Event = ();
+            fn handle(&mut self, _: SimTime, _: (), s: &mut Scheduler<()>) -> bool {
+                s.schedule_at(s.now() - 1.0, ());
+                true
+            }
+        }
+        let mut s = Scheduler::new();
+        s.schedule(5.0, ());
+        run(&mut Bad, &mut s, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "runaway")]
+    fn runaway_guard_trips() {
+        struct Loop;
+        impl World for Loop {
+            type Event = ();
+            fn handle(&mut self, _: SimTime, _: (), s: &mut Scheduler<()>) -> bool {
+                s.schedule(0.0, ());
+                true
+            }
+        }
+        let mut s = Scheduler::new();
+        s.schedule(0.0, ());
+        run(&mut Loop, &mut s, 100);
+    }
+}

@@ -1,0 +1,272 @@
+//! Time-varying packet-loss model: 3-state Gaussian HMM over a
+//! continuous-time Markov chain (paper §5.2.2).
+//!
+//! States low / medium / high with per-state Gaussian loss rates
+//! (μ, σ) = (19, 2), (383, 40), (957, 100) losses/s. Holding times are
+//! exponential with rate 0.04 (mean 25 s); on expiry the chain jumps to
+//! one of the other two states uniformly, and a fresh λ is drawn from the
+//! new state's Gaussian (truncated at 0). Within a holding period λ is
+//! constant, so loss events are generated piecewise-homogeneously.
+
+use super::loss::LossProcess;
+use crate::util::{dist, Pcg64};
+
+/// Parameters of one HMM state.
+#[derive(Debug, Clone, Copy)]
+pub struct HmmState {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+/// Configuration for the 3-state loss HMM.
+#[derive(Debug, Clone)]
+pub struct HmmConfig {
+    pub states: Vec<HmmState>,
+    /// CTMC holding-time rate (transitions/second).
+    pub transition_rate: f64,
+    /// Initial state index.
+    pub initial_state: usize,
+}
+
+impl Default for HmmConfig {
+    /// The paper's setting: low (19, 2), medium (383, 40), high (957, 100),
+    /// transition rate 0.04 (≈ every 25 s).
+    fn default() -> Self {
+        HmmConfig {
+            states: vec![
+                HmmState { mu: 19.0, sigma: 2.0 },
+                HmmState { mu: 383.0, sigma: 40.0 },
+                HmmState { mu: 957.0, sigma: 100.0 },
+            ],
+            transition_rate: 0.04,
+            initial_state: 0,
+        }
+    }
+}
+
+/// HMM-driven loss process.
+pub struct HmmLoss {
+    cfg: HmmConfig,
+    rng: Pcg64,
+    state: usize,
+    /// λ drawn for the current holding period.
+    lambda: f64,
+    /// Absolute end time of the current holding period.
+    state_end: f64,
+    /// Next pending loss event time (absolute).
+    next_loss: f64,
+    last_query: f64,
+    /// Loss events expire after this long (see [`super::loss::StaticLoss`]).
+    ttl: f64,
+}
+
+impl HmmLoss {
+    /// Paper-literal semantics: loss events never expire.
+    pub fn new(cfg: HmmConfig, seed: u64) -> Self {
+        Self::with_ttl(cfg, seed, f64::INFINITY)
+    }
+
+    /// Loss events expire `ttl` seconds after they occur (protocol
+    /// simulations use one packet service time, `1/r`).
+    pub fn with_ttl(cfg: HmmConfig, seed: u64, ttl: f64) -> Self {
+        assert!(!cfg.states.is_empty());
+        assert!(cfg.initial_state < cfg.states.len());
+        assert!(ttl > 0.0);
+        let mut rng = Pcg64::seeded(seed);
+        let state = cfg.initial_state;
+        let lambda = Self::draw_lambda(&mut rng, cfg.states[state]);
+        let state_end = dist::exponential(&mut rng, cfg.transition_rate);
+        let mut s = HmmLoss {
+            cfg,
+            rng,
+            state,
+            lambda,
+            state_end,
+            next_loss: 0.0,
+            last_query: 0.0,
+            ttl,
+        };
+        s.next_loss = s.sample_next_loss(0.0);
+        s
+    }
+
+    /// Paper default with a seed.
+    pub fn paper_default(seed: u64) -> Self {
+        Self::new(HmmConfig::default(), seed)
+    }
+
+    /// Paper default with loss-event expiry.
+    pub fn paper_default_with_ttl(seed: u64, ttl: f64) -> Self {
+        Self::with_ttl(HmmConfig::default(), seed, ttl)
+    }
+
+    fn draw_lambda(rng: &mut Pcg64, st: HmmState) -> f64 {
+        dist::normal(rng, st.mu, st.sigma).max(0.0)
+    }
+
+    /// Jump to a uniformly-chosen *different* state.
+    fn transition(&mut self, at: f64) {
+        let n = self.cfg.states.len();
+        let next = if n == 1 {
+            0
+        } else {
+            let j = self.rng.range(0, n - 1);
+            if j >= self.state {
+                j + 1
+            } else {
+                j
+            }
+        };
+        self.state = next;
+        self.lambda = Self::draw_lambda(&mut self.rng, self.cfg.states[next]);
+        self.state_end = at + dist::exponential(&mut self.rng, self.cfg.transition_rate);
+    }
+
+    /// Sample the next loss-event time from `from`, honouring state
+    /// boundaries (piecewise-homogeneous thinning-free construction).
+    fn sample_next_loss(&mut self, from: f64) -> f64 {
+        let mut t = from;
+        loop {
+            if self.lambda <= 0.0 {
+                // No losses in this state; skip to its end.
+                t = self.state_end;
+                self.transition(t);
+                continue;
+            }
+            let gap = dist::exponential(&mut self.rng, self.lambda);
+            if t + gap <= self.state_end {
+                return t + gap;
+            }
+            // Crossed a state boundary: restart from it (memorylessness).
+            t = self.state_end;
+            self.transition(t);
+        }
+    }
+
+    /// Advance the chain (without sampling losses) so `rate_at` reflects
+    /// the state at `time`.
+    fn advance_chain_to(&mut self, time: f64) {
+        while time >= self.state_end {
+            let at = self.state_end;
+            self.transition(at);
+            // The pending loss event was sampled under the old λ only up
+            // to the boundary; if it lies beyond the boundary, resample
+            // from the boundary under the new regime.
+            if self.next_loss > at {
+                self.next_loss = self.sample_next_loss(at);
+            }
+        }
+    }
+
+    /// Current state index (for tests / tracing).
+    pub fn state(&self) -> usize {
+        self.state
+    }
+}
+
+impl LossProcess for HmmLoss {
+    fn is_lost(&mut self, time: f64) -> bool {
+        debug_assert!(time >= self.last_query - 1e-9);
+        self.last_query = time;
+        self.advance_chain_to(time);
+        // Expire stale events.
+        let horizon = time - self.ttl;
+        while self.next_loss < horizon {
+            self.next_loss = self.sample_next_loss(self.next_loss);
+        }
+        if time + 1e-15 < self.next_loss {
+            return false;
+        }
+        self.next_loss = self.sample_next_loss(time);
+        true
+    }
+
+    fn rate_at(&mut self, time: f64) -> f64 {
+        self.advance_chain_to(time);
+        self.lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn states_change_over_time() {
+        let mut h = HmmLoss::paper_default(1);
+        let mut states = std::collections::HashSet::new();
+        for i in 0..600 {
+            h.rate_at(i as f64); // advance 10 minutes
+            states.insert(h.state());
+        }
+        assert!(states.len() >= 2, "chain stuck: {states:?}");
+    }
+
+    #[test]
+    fn mean_holding_time_near_25s() {
+        let mut h = HmmLoss::paper_default(5);
+        let mut transitions = 0;
+        let mut prev = h.state();
+        let horizon = 20_000.0;
+        let mut t = 0.0;
+        while t < horizon {
+            h.rate_at(t);
+            if h.state() != prev {
+                transitions += 1;
+                prev = h.state();
+            }
+            t += 0.5;
+        }
+        let mean_hold = horizon / transitions as f64;
+        assert!(
+            (20.0..32.0).contains(&mean_hold),
+            "mean holding time {mean_hold}"
+        );
+    }
+
+    #[test]
+    fn lambda_tracks_state_gaussians() {
+        let mut h = HmmLoss::paper_default(9);
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            let lam = h.rate_at(t);
+            let st = h.state();
+            let HmmState { mu, sigma } = HmmConfig::default().states[st];
+            assert!(
+                (lam - mu).abs() <= 6.0 * sigma,
+                "state {st}: λ={lam} not near μ={mu}"
+            );
+            t += 5.0;
+        }
+    }
+
+    #[test]
+    fn loss_fraction_in_low_state_near_point1_percent() {
+        // Pin to the low state by using a chain that never transitions.
+        let cfg = HmmConfig {
+            states: vec![HmmState { mu: 19.0, sigma: 0.0 }],
+            transition_rate: 1e-12,
+            initial_state: 0,
+        };
+        let mut h = HmmLoss::new(cfg, 3);
+        let r = 19144.0;
+        let n = 2_000_000;
+        let lost = (0..n).filter(|&i| h.is_lost(i as f64 / r)).count();
+        let frac = lost as f64 / n as f64;
+        let expect = 19.0 / r;
+        assert!(
+            (frac - expect).abs() / expect < 0.1,
+            "frac={frac} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = HmmLoss::paper_default(77);
+        let mut b = HmmLoss::paper_default(77);
+        for i in 0..100_000 {
+            let t = i as f64 * 0.001;
+            assert_eq!(a.is_lost(t), b.is_lost(t), "diverged at t={t}");
+        }
+    }
+}

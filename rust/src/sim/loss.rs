@@ -1,0 +1,237 @@
+//! Packet-loss processes.
+//!
+//! Mirrors the paper's simulator (§5.2.1): "The packet loss process
+//! simulates losses by generating random time intervals between losses.
+//! When a loss event occurs, the packet is marked as lost if the loss
+//! event queue is not empty. Afterward, the loss event queue is cleared."
+//!
+//! Concretely: loss events arrive as a (possibly non-homogeneous) Poisson
+//! process with rate λ(t) (losses/second, §5.2.2). The first packet sent
+//! at-or-after a pending loss event is dropped, and all loss events
+//! pending at that moment are consumed — i.e. the realized drop rate is
+//! min(λ, packet rate).
+
+use crate::util::{dist, Pcg64};
+
+/// A time-varying loss-event source consulted once per transmitted packet.
+pub trait LossProcess {
+    /// Should the packet sent at `time` be dropped?
+    ///
+    /// `time` must be non-decreasing across calls.
+    fn is_lost(&mut self, time: f64) -> bool;
+
+    /// Instantaneous configured loss rate λ(time) in losses/second —
+    /// used by oracle baselines and for logging, not by the protocols
+    /// (which must *estimate* λ from observations).
+    fn rate_at(&mut self, time: f64) -> f64;
+}
+
+/// No losses at all (sanity baseline).
+pub struct NoLoss;
+
+impl LossProcess for NoLoss {
+    fn is_lost(&mut self, _time: f64) -> bool {
+        false
+    }
+    fn rate_at(&mut self, _time: f64) -> f64 {
+        0.0
+    }
+}
+
+/// Homogeneous Poisson loss events at fixed rate λ.
+///
+/// A packet sent at time `T` is lost when a loss event is *pending*:
+/// occurred at most `ttl` seconds before `T` and not yet consumed by an
+/// earlier packet. All pending events are cleared on a loss (paper
+/// §5.2.1). The TTL bounds how long a loss event (a burst of congestion)
+/// can linger: with the paper-literal unbounded queue, the first packet
+/// sent after *any* idle gap ≳ 1/λ would deterministically die, making
+/// single-FTG retransmission tails unrecoverable at high λ. During
+/// continuous rate-`r` streaming any `ttl ≥ 1/r` is behaviour-identical
+/// to the unbounded queue.
+pub struct StaticLoss {
+    lambda: f64,
+    rng: Pcg64,
+    /// Time of the next not-yet-consumed loss event; +inf when λ = 0.
+    next_loss: f64,
+    last_query: f64,
+    ttl: f64,
+}
+
+impl StaticLoss {
+    /// Paper-literal semantics: loss events never expire.
+    pub fn new(lambda: f64, seed: u64) -> Self {
+        Self::with_ttl(lambda, seed, f64::INFINITY)
+    }
+
+    /// Loss events expire `ttl` seconds after they occur. Protocol
+    /// simulations use `ttl = 1/r` (one packet service time).
+    pub fn with_ttl(lambda: f64, seed: u64, ttl: f64) -> Self {
+        assert!(lambda >= 0.0);
+        assert!(ttl > 0.0);
+        let mut rng = Pcg64::seeded(seed);
+        let next_loss = if lambda > 0.0 {
+            dist::exponential(&mut rng, lambda)
+        } else {
+            f64::INFINITY
+        };
+        StaticLoss { lambda, rng, next_loss, last_query: 0.0, ttl }
+    }
+}
+
+impl LossProcess for StaticLoss {
+    fn is_lost(&mut self, time: f64) -> bool {
+        debug_assert!(time >= self.last_query - 1e-9, "time went backwards");
+        self.last_query = time;
+        // Expire events that are too stale to affect this packet.
+        let horizon = time - self.ttl;
+        while self.next_loss < horizon {
+            self.next_loss += dist::exponential(&mut self.rng, self.lambda);
+        }
+        if time + 1e-15 < self.next_loss {
+            return false;
+        }
+        // Consume every loss event pending at `time` (the paper clears the
+        // loss-event queue after marking one packet lost).
+        while self.next_loss <= time + 1e-15 {
+            self.next_loss += dist::exponential(&mut self.rng, self.lambda);
+        }
+        true
+    }
+
+    fn rate_at(&mut self, _time: f64) -> f64 {
+        self.lambda
+    }
+}
+
+/// Per-packet Bernoulli loss with fixed probability.
+///
+/// Used for the TCP/Globus baselines, where the meaningful quantity is a
+/// loss *fraction* (0.1% / 2% / 5%, §5.2.2): a rate-based process would
+/// make the fraction explode as TCP backs off, compounding unfairly.
+pub struct BernoulliLoss {
+    p: f64,
+    rng: Pcg64,
+}
+
+impl BernoulliLoss {
+    pub fn new(p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        BernoulliLoss { p, rng: Pcg64::seeded(seed) }
+    }
+}
+
+impl LossProcess for BernoulliLoss {
+    fn is_lost(&mut self, _time: f64) -> bool {
+        self.rng.bool_with(self.p)
+    }
+    fn rate_at(&mut self, _time: f64) -> f64 {
+        // Nominal rate if sending at full speed is p·r; callers that need
+        // a rate should use the rate-based processes instead.
+        f64::NAN
+    }
+}
+
+/// Adapter converting a rate-based process (λ losses/s) into a per-packet
+/// Bernoulli with `p(t) = λ(t) / r_ref` — i.e. the loss fraction the
+/// process would induce at the reference (full link) packet rate.
+///
+/// Lets the TCP/Globus baselines experience the *same* time-varying HMM
+/// loss regime as the UDP protocols on a fair per-packet basis.
+pub struct FractionOfRate<L: LossProcess> {
+    pub inner: L,
+    pub r_ref: f64,
+    rng: Pcg64,
+}
+
+impl<L: LossProcess> FractionOfRate<L> {
+    pub fn new(inner: L, r_ref: f64, seed: u64) -> Self {
+        assert!(r_ref > 0.0);
+        FractionOfRate { inner, r_ref, rng: Pcg64::seeded(seed) }
+    }
+}
+
+impl<L: LossProcess> LossProcess for FractionOfRate<L> {
+    fn is_lost(&mut self, time: f64) -> bool {
+        let p = (self.inner.rate_at(time) / self.r_ref).clamp(0.0, 1.0);
+        self.rng.bool_with(p)
+    }
+    fn rate_at(&mut self, time: f64) -> f64 {
+        self.inner.rate_at(time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_loss_never_drops() {
+        let mut l = NoLoss;
+        assert!(!(0..1000).any(|i| l.is_lost(i as f64 * 0.001)));
+    }
+
+    #[test]
+    fn zero_rate_never_drops() {
+        let mut l = StaticLoss::new(0.0, 1);
+        assert!(!(0..1000).any(|i| l.is_lost(i as f64 * 0.001)));
+    }
+
+    #[test]
+    fn observed_rate_matches_lambda_when_packets_fast() {
+        // Packet rate 19144/s >> λ = 383/s: drop fraction ≈ λ/r = 2%.
+        let lambda = 383.0;
+        let r = 19144.0;
+        let mut l = StaticLoss::new(lambda, 7);
+        let n = 1_000_000;
+        let lost = (0..n).filter(|&i| l.is_lost(i as f64 / r)).count();
+        let frac = lost as f64 / n as f64;
+        let expect = lambda / r;
+        assert!(
+            (frac - expect).abs() / expect < 0.05,
+            "frac={frac} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn loss_events_are_coalesced_when_packets_slow() {
+        // Packet rate 10/s << λ = 1000/s: at most every packet drops
+        // (queue cleared per drop), so drop fraction ≈ 1, not 100.
+        let mut l = StaticLoss::new(1000.0, 9);
+        let n = 10_000;
+        let lost = (0..n).filter(|&i| l.is_lost(i as f64 / 10.0)).count();
+        let frac = lost as f64 / n as f64;
+        assert!(frac > 0.99, "frac={frac}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = StaticLoss::new(100.0, 42);
+        let mut b = StaticLoss::new(100.0, 42);
+        for i in 0..10_000 {
+            let t = i as f64 * 0.0005;
+            assert_eq!(a.is_lost(t), b.is_lost(t));
+        }
+    }
+
+    #[test]
+    fn bernoulli_fraction_matches_p() {
+        let mut l = BernoulliLoss::new(0.02, 5);
+        let n = 500_000;
+        let lost = (0..n).filter(|&i| l.is_lost(i as f64)).count();
+        let frac = lost as f64 / n as f64;
+        assert!((frac - 0.02).abs() < 0.002, "frac={frac}");
+    }
+
+    #[test]
+    fn fraction_of_rate_tracks_inner_rate() {
+        // Static λ=383 at r_ref=19144 ⇒ p ≈ 2% regardless of call spacing.
+        let inner = StaticLoss::new(383.0, 1);
+        let mut l = FractionOfRate::new(inner, 19_144.0, 2);
+        let n = 500_000;
+        // Slow sender (calls far apart) still sees the 2% fraction.
+        let lost = (0..n).filter(|&i| l.is_lost(i as f64 * 0.01)).count();
+        let frac = lost as f64 / n as f64;
+        assert!((frac - 0.02).abs() < 0.002, "frac={frac}");
+    }
+}

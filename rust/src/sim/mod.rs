@@ -1,0 +1,20 @@
+//! Discrete-event network simulation: engine, loss processes, and the
+//! protocol models evaluated in the paper (§5.2).
+
+pub mod deadline;
+pub mod estimator;
+pub mod engine;
+pub mod globus;
+pub mod hmm;
+pub mod loss;
+pub mod tcp;
+pub mod udp_ec;
+
+pub use engine::{run, Scheduler, SimTime, World};
+pub use estimator::{EwmaEstimator, LambdaEstimator, WindowEstimator};
+pub use hmm::{HmmConfig, HmmLoss, HmmState};
+pub use deadline::{run_guaranteed_time, DeadlinePolicy, DeadlineResult};
+pub use globus::{run_globus, GlobusConfig, GlobusResult};
+pub use loss::{BernoulliLoss, FractionOfRate, LossProcess, NoLoss, StaticLoss};
+pub use tcp::{run_tcp, TcpResult};
+pub use udp_ec::{run_guaranteed_error, ParityPolicy, TransferResult};

@@ -1,0 +1,332 @@
+//! TCP baseline — event-driven Reno-style simulation (paper §5.2.1).
+//!
+//! The paper's baseline: "parity fragment generation is disabled, and
+//! acknowledgment and retransmission mechanisms are simulated", with the
+//! duplicate-ACK threshold at 3 and the RTO tied to the transmission
+//! latency. We model a standard Reno loop: slow start / congestion
+//! avoidance, fast retransmit on 3 dup-ACKs, timeout with exponential
+//! backoff, cumulative ACKs, link pacing at `r` fragments/s, one-way
+//! latency `t` each direction (RTT = 2t). ACKs are assumed lossless (the
+//! reverse path carries only tiny control packets).
+
+use super::engine::{run, Scheduler, SimTime, World};
+use super::loss::LossProcess;
+use crate::model::params::NetParams;
+
+/// Outcome of a simulated TCP transfer.
+#[derive(Debug, Clone)]
+pub struct TcpResult {
+    /// Time until the last byte was acknowledged, seconds.
+    pub total_time: f64,
+    /// Packets put on the wire (including retransmissions).
+    pub packets_sent: u64,
+    /// Packets dropped by the loss process.
+    pub packets_lost: u64,
+    /// Retransmissions (fast + timeout).
+    pub retransmissions: u64,
+    /// Timeout events.
+    pub timeouts: u64,
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// Data packet arrives at the receiver (survived the wire).
+    Arrive(u64),
+    /// Cumulative ACK (next expected seq) arrives at the sender.
+    Ack(u64),
+    /// RTO check, armed for a particular epoch.
+    Timeout(u64),
+    /// Sender may transmit (window/pacing opened up).
+    TrySend,
+}
+
+struct Tcp<'a> {
+    loss: &'a mut dyn LossProcess,
+    // Link.
+    r: f64,
+    t: f64,
+    next_free_tx: f64,
+    // Sender.
+    total: u64,
+    send_base: u64,
+    next_seq: u64,
+    cwnd: f64,
+    ssthresh: f64,
+    dup_acks: u32,
+    rto: f64,
+    rto_base: f64,
+    timer_epoch: u64,
+    timer_armed: bool,
+    in_fast_recovery: bool,
+    // Receiver.
+    rcv_next: u64,
+    received: Vec<u64>, // bitset
+    // Stats.
+    res: TcpResult,
+    done_at: Option<f64>,
+}
+
+impl<'a> Tcp<'a> {
+    fn bit_get(&self, seq: u64) -> bool {
+        (self.received[(seq / 64) as usize] >> (seq % 64)) & 1 == 1
+    }
+    fn bit_set(&mut self, seq: u64) {
+        self.received[(seq / 64) as usize] |= 1 << (seq % 64);
+    }
+
+    fn in_flight(&self) -> u64 {
+        // After a go-back-N reset a later cumulative ACK can advance
+        // send_base past next_seq (the receiver already held the data).
+        self.next_seq.saturating_sub(self.send_base)
+    }
+
+    /// Transmit one packet (new or retransmission) respecting pacing.
+    fn transmit(&mut self, now: SimTime, seq: u64, sched: &mut Scheduler<Ev>) {
+        let depart = now.max(self.next_free_tx);
+        self.next_free_tx = depart + 1.0 / self.r;
+        self.res.packets_sent += 1;
+        if self.loss.is_lost(depart) {
+            self.res.packets_lost += 1;
+            // Lost: no arrival event.
+        } else {
+            sched.schedule_at(depart + self.t, Ev::Arrive(seq));
+        }
+    }
+
+    fn arm_timer(&mut self, now: SimTime, sched: &mut Scheduler<Ev>) {
+        self.timer_epoch += 1;
+        self.timer_armed = true;
+        sched.schedule_at(now + self.rto, Ev::Timeout(self.timer_epoch));
+    }
+
+    /// Send as much new data as window + data allow.
+    fn pump(&mut self, now: SimTime, sched: &mut Scheduler<Ev>) {
+        let window = self.cwnd.floor().max(1.0) as u64;
+        let mut sent_any = false;
+        while self.next_seq < self.total && self.in_flight() < window {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.transmit(now, seq, sched);
+            sent_any = true;
+        }
+        if sent_any && !self.timer_armed {
+            self.arm_timer(now, sched);
+        }
+        // If pacing throttled us below the window, poll again when the
+        // link frees up.
+        if self.next_seq < self.total && self.in_flight() < window {
+            sched.schedule_at(self.next_free_tx.max(now + 1e-9), Ev::TrySend);
+        }
+    }
+}
+
+impl<'a> World for Tcp<'a> {
+    type Event = Ev;
+
+    fn handle(&mut self, now: SimTime, ev: Ev, sched: &mut Scheduler<Ev>) -> bool {
+        match ev {
+            Ev::Arrive(seq) => {
+                if !self.bit_get(seq) {
+                    self.bit_set(seq);
+                    while self.rcv_next < self.total && self.bit_get(self.rcv_next) {
+                        self.rcv_next += 1;
+                    }
+                }
+                // Cumulative ACK back to the sender (lossless, latency t).
+                sched.schedule_at(now + self.t, Ev::Ack(self.rcv_next));
+                true
+            }
+            Ev::Ack(ack) => {
+                if ack >= self.total {
+                    // Everything delivered & acknowledged.
+                    if self.done_at.is_none() {
+                        self.done_at = Some(now);
+                        self.res.total_time = now;
+                    }
+                    return false;
+                }
+                if ack > self.send_base {
+                    // New data acknowledged.
+                    self.send_base = ack;
+                    self.next_seq = self.next_seq.max(ack);
+                    self.dup_acks = 0;
+                    if self.in_fast_recovery {
+                        self.in_fast_recovery = false;
+                        self.cwnd = self.ssthresh;
+                    } else if self.cwnd < self.ssthresh {
+                        self.cwnd += 1.0; // slow start
+                    } else {
+                        self.cwnd += 1.0 / self.cwnd; // congestion avoidance
+                    }
+                    self.rto = self.rto_base; // fresh progress resets backoff
+                    self.arm_timer(now, sched);
+                    self.pump(now, sched);
+                } else if ack == self.send_base {
+                    self.dup_acks += 1;
+                    if self.dup_acks == 3 && !self.in_fast_recovery {
+                        // Fast retransmit.
+                        self.ssthresh = (self.cwnd / 2.0).max(2.0);
+                        self.cwnd = self.ssthresh;
+                        self.in_fast_recovery = true;
+                        self.res.retransmissions += 1;
+                        self.transmit(now, self.send_base, sched);
+                        self.arm_timer(now, sched);
+                    } else if self.in_fast_recovery {
+                        self.cwnd += 1.0; // inflate per extra dup
+                        self.pump(now, sched);
+                    }
+                }
+                true
+            }
+            Ev::Timeout(epoch) => {
+                if epoch != self.timer_epoch || self.send_base >= self.total {
+                    return true; // stale timer
+                }
+                // RTO: back off, shrink to one segment, go-back-N restart.
+                self.res.timeouts += 1;
+                self.res.retransmissions += 1;
+                self.ssthresh = (self.cwnd / 2.0).max(2.0);
+                self.cwnd = 1.0;
+                self.in_fast_recovery = false;
+                self.dup_acks = 0;
+                self.rto = (self.rto * 2.0).min(60.0);
+                // Go-back-N: outstanding unacked data is resent as the
+                // window re-opens.
+                self.next_seq = self.send_base;
+                self.transmit(now, self.send_base, sched);
+                self.next_seq = self.send_base + 1;
+                self.arm_timer(now, sched);
+                true
+            }
+            Ev::TrySend => {
+                self.pump(now, sched);
+                true
+            }
+        }
+    }
+}
+
+/// Simulate a TCP transfer of `total_bytes` over the link described by
+/// `params` (rate `r`, one-way latency `t`, fragment size `s`).
+///
+/// `loss` should be a per-packet-fraction process (see
+/// [`super::loss::BernoulliLoss`] / [`super::loss::FractionOfRate`]).
+pub fn run_tcp(loss: &mut dyn LossProcess, params: &NetParams, total_bytes: u64) -> TcpResult {
+    let total = total_bytes.div_ceil(params.s as u64).max(1);
+    let rtt = 2.0 * params.t;
+    // Paper: "retransmission timeout is set to twice the transmission
+    // latency". With RTT = 2t that leaves zero slack, so we interpret it
+    // as twice the round trip (2·RTT) — the smallest non-degenerate RTO.
+    let rto = 2.0 * rtt;
+    let mut world = Tcp {
+        loss,
+        r: params.r,
+        t: params.t,
+        next_free_tx: 0.0,
+        total,
+        send_base: 0,
+        next_seq: 0,
+        cwnd: 2.0,
+        ssthresh: f64::INFINITY,
+        dup_acks: 0,
+        rto,
+        rto_base: rto,
+        timer_epoch: 0,
+        timer_armed: false,
+        in_fast_recovery: false,
+        rcv_next: 0,
+        received: vec![0u64; (total as usize).div_ceil(64)],
+        res: TcpResult {
+            total_time: 0.0,
+            packets_sent: 0,
+            packets_lost: 0,
+            retransmissions: 0,
+            timeouts: 0,
+        },
+        done_at: None,
+    };
+    let mut sched = Scheduler::new();
+    sched.schedule_at(0.0, Ev::TrySend);
+    // Generous cap: ~40 events per packet covers deep-loss regimes.
+    let cap = 200_000 + total.saturating_mul(40);
+    run(&mut world, &mut sched, cap);
+    assert!(world.done_at.is_some(), "TCP transfer did not complete");
+    world.res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::loss::{BernoulliLoss, NoLoss};
+
+    fn params() -> NetParams {
+        NetParams::paper_default(0.0)
+    }
+
+    #[test]
+    fn lossless_tcp_approaches_link_rate() {
+        let p = params();
+        let bytes = 200u64 * 1024 * 1024; // 200 MB ⇒ 51200 packets
+        let res = run_tcp(&mut NoLoss, &p, bytes);
+        let wire = bytes.div_ceil(4096) as f64 / p.r;
+        assert_eq!(res.packets_lost, 0);
+        assert_eq!(res.retransmissions, 0);
+        // Slow start ramp + ACK latency overhead, but within 2% of wire.
+        assert!(
+            res.total_time < wire * 1.02 + 1.0,
+            "time {} ≫ wire {wire}",
+            res.total_time
+        );
+    }
+
+    #[test]
+    fn all_packets_delivered_exactly_once_lossless() {
+        let p = params();
+        let res = run_tcp(&mut NoLoss, &p, 10 * 1024 * 1024);
+        assert_eq!(res.packets_sent, 2560);
+    }
+
+    #[test]
+    fn loss_degrades_tcp_sharply() {
+        let p = params();
+        let bytes = 50u64 * 1024 * 1024;
+        let t_clean = run_tcp(&mut NoLoss, &p, bytes).total_time;
+        let mut l1 = BernoulliLoss::new(0.001, 3);
+        let t_low = run_tcp(&mut l1, &p, bytes).total_time;
+        let mut l2 = BernoulliLoss::new(0.02, 4);
+        let t_med = run_tcp(&mut l2, &p, bytes).total_time;
+        let mut l3 = BernoulliLoss::new(0.05, 5);
+        let t_high = run_tcp(&mut l3, &p, bytes).total_time;
+        assert!(t_clean < t_low && t_low < t_med && t_med < t_high,
+            "{t_clean} {t_low} {t_med} {t_high}");
+        // The paper's qualitative claim: transmission time increases
+        // *significantly* with loss.
+        assert!(t_med > 3.0 * t_low, "2% vs 0.1%: {t_med} vs {t_low}");
+    }
+
+    #[test]
+    fn retransmissions_and_timeouts_counted() {
+        let p = params();
+        let mut l = BernoulliLoss::new(0.05, 9);
+        let res = run_tcp(&mut l, &p, 20 * 1024 * 1024);
+        assert!(res.retransmissions > 0);
+        assert!(res.packets_lost > 0);
+        // Every lost data packet eventually got through.
+        assert!(res.packets_sent >= 5120 + res.packets_lost);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p = params();
+        let run1 = {
+            let mut l = BernoulliLoss::new(0.02, 7);
+            run_tcp(&mut l, &p, 10 * 1024 * 1024)
+        };
+        let run2 = {
+            let mut l = BernoulliLoss::new(0.02, 7);
+            run_tcp(&mut l, &p, 10 * 1024 * 1024)
+        };
+        assert!((run1.total_time - run2.total_time).abs() < 1e-9);
+        assert_eq!(run1.packets_sent, run2.packets_sent);
+    }
+}

@@ -1,0 +1,408 @@
+//! UDP + erasure-coding transfer with passive retransmission —
+//! the guaranteed-error-bound protocol (paper Alg. 1), simulated.
+//!
+//! Covers both the static-parity variant (Fig. 2) and the adaptive
+//! variant that re-solves Eq. 8 on receiver λ-updates (Fig. 4). The
+//! packet stream is rate-paced (one fragment every `1/r` seconds), so it
+//! is simulated arithmetically packet-by-packet; only the control plane
+//! (λ windows, end-of-round exchanges) needs timeline bookkeeping.
+
+use super::loss::LossProcess;
+use crate::model::params::{LevelSchedule, NetParams};
+use crate::model::time_model::optimize_parity;
+
+/// Parity policy for the guaranteed-error-bound transfer.
+#[derive(Debug, Clone)]
+pub enum ParityPolicy {
+    /// Fixed m for every FTG (the paper's "static fault tolerance").
+    Static(usize),
+    /// Alg. 1: start from Eq. 8's optimum for the initial λ estimate and
+    /// re-solve whenever the receiver reports a new λ (window `t_w`).
+    Adaptive {
+        /// Receiver measurement window `T_W`, seconds (paper: 3 s).
+        t_w: f64,
+        /// Initial λ estimate fed to the first Eq. 8 solve.
+        initial_lambda: f64,
+    },
+}
+
+/// Outcome of one simulated guaranteed-error-bound transfer.
+#[derive(Debug, Clone)]
+pub struct TransferResult {
+    /// Time until the receiver has recovered every required FTG, seconds.
+    pub total_time: f64,
+    /// Retransmission rounds needed (0 = everything recovered first pass).
+    pub rounds: usize,
+    /// Total fragments put on the wire (including parity and retries).
+    pub fragments_sent: u64,
+    /// Fragments dropped by the loss process.
+    pub fragments_lost: u64,
+    /// FTGs that needed retransmission, summed over rounds.
+    pub ftgs_retransmitted: u64,
+    /// λ estimates reported by the receiver over time (time, λ̂).
+    pub lambda_updates: Vec<(f64, f64)>,
+    /// m values used over the FTG stream (ftg_index, m) — records policy
+    /// adaptation.
+    pub m_changes: Vec<(u64, usize)>,
+}
+
+/// One FTG's bookkeeping during a pass.
+#[derive(Debug, Clone, Copy)]
+struct FtgSpec {
+    k: usize,
+    m: usize,
+}
+
+/// Simulate Alg. 1 (guaranteed error bound): transfer the first `levels`
+/// levels of `sched`, recover losses with parity, passively retransmit
+/// unrecoverable FTGs until everything needed has arrived.
+pub fn run_guaranteed_error(
+    loss: &mut dyn LossProcess,
+    params: &NetParams,
+    sched: &LevelSchedule,
+    levels: usize,
+    policy: &ParityPolicy,
+) -> TransferResult {
+    assert!(levels >= 1 && levels <= sched.num_levels());
+    let n = params.n;
+    let s = params.s as u64;
+    let r = params.r;
+    let t = params.t;
+    let total_bytes: u64 = sched.total_bytes(levels);
+    let total_data_fragments = total_bytes.div_ceil(s);
+
+    let mut result = TransferResult {
+        total_time: 0.0,
+        rounds: 0,
+        fragments_sent: 0,
+        fragments_lost: 0,
+        ftgs_retransmitted: 0,
+        lambda_updates: Vec::new(),
+        m_changes: Vec::new(),
+    };
+
+    // Current m, per policy.
+    let mut current_m = match policy {
+        ParityPolicy::Static(m) => {
+            assert!(*m <= n / 2, "m must be ≤ n/2");
+            *m
+        }
+        ParityPolicy::Adaptive { initial_lambda, .. } => {
+            let p = NetParams { lambda: *initial_lambda, ..*params };
+            optimize_parity(&p, total_bytes).m
+        }
+    };
+    result.m_changes.push((0, current_m));
+
+    // Receiver-side λ measurement window state.
+    let (t_w, adaptive) = match policy {
+        ParityPolicy::Adaptive { t_w, .. } => (*t_w, true),
+        ParityPolicy::Static(_) => (f64::INFINITY, false),
+    };
+    let mut window_start = 0.0f64;
+    let mut window_losses = 0u64;
+    // λ update in flight toward the sender: (arrival_time, lambda).
+    let mut pending_update: Option<(f64, f64)> = None;
+    let mut last_solved_lambda = match policy {
+        ParityPolicy::Adaptive { initial_lambda, .. } => *initial_lambda,
+        _ => 0.0,
+    };
+
+    // Clock: next fragment departs at `clock`; fragments depart every 1/r.
+    let mut clock = 0.0f64;
+    let step = 1.0 / r;
+
+    // Work queue for the current pass: FTGs to (re)send. First pass is
+    // generated lazily (data fragments consumed in order); retransmission
+    // passes replay recorded specs.
+    let mut data_remaining = total_data_fragments;
+    let mut first_pass_specs: Vec<FtgSpec> = Vec::new();
+    let mut lost_ftgs: Vec<FtgSpec> = Vec::new(); // unrecoverable this pass
+    let mut last_arrival = 0.0f64;
+    let mut ftg_index = 0u64;
+
+    // === First pass + retransmission rounds ===
+    // Passes: 0 = initial (generate FTGs), 1.. = retransmit lost list.
+    let mut retransmit_queue: Vec<FtgSpec> = Vec::new();
+    loop {
+        let first_pass = result.rounds == 0;
+        let mut queue_pos = 0usize;
+        loop {
+            // Produce the next FTG spec for this pass.
+            let spec = if first_pass {
+                if data_remaining == 0 {
+                    break;
+                }
+                // Apply any λ update that has reached the sender. Alg. 1
+                // recomputes m for data not yet encoded.
+                if let Some((arrive, lam)) = pending_update {
+                    if clock >= arrive {
+                        pending_update = None;
+                        // Throttle: re-solving Eq. 8 for a λ̂ within 10% of
+                        // the last solved value cannot change m enough to
+                        // matter and burns solver time on the hot path.
+                        let moved = (lam - last_solved_lambda).abs()
+                            > 0.1 * last_solved_lambda.max(1.0);
+                        if moved {
+                            last_solved_lambda = lam;
+                            let p = NetParams { lambda: lam, ..*params };
+                            let new_m = optimize_parity(&p, data_remaining * s).m;
+                            if new_m != current_m {
+                                current_m = new_m;
+                                result.m_changes.push((ftg_index, new_m));
+                            }
+                        }
+                    }
+                }
+                let k = (n - current_m).min(data_remaining.max(1) as usize);
+                data_remaining = data_remaining.saturating_sub(k as u64);
+                let spec = FtgSpec { k, m: current_m };
+                first_pass_specs.push(spec);
+                spec
+            } else {
+                if queue_pos >= retransmit_queue.len() {
+                    break;
+                }
+                queue_pos += 1;
+                retransmit_queue[queue_pos - 1]
+            };
+
+            // Transmit the FTG's k+m fragments.
+            let mut lost_in_group = 0usize;
+            for _ in 0..spec.k + spec.m {
+                let depart = clock;
+                clock += step;
+                result.fragments_sent += 1;
+                let lost = loss.is_lost(depart);
+                let arrive = depart + t;
+                if lost {
+                    result.fragments_lost += 1;
+                    lost_in_group += 1;
+                    window_losses += 1;
+                } else {
+                    last_arrival = last_arrival.max(arrive);
+                }
+                // Receiver window bookkeeping (loss detection happens at
+                // expected-arrival time via sequence gaps).
+                if adaptive && arrive - window_start >= t_w {
+                    let lambda_hat = window_losses as f64 / t_w;
+                    result.lambda_updates.push((arrive, lambda_hat));
+                    // Control message back to the sender takes t.
+                    pending_update = Some((arrive + t, lambda_hat));
+                    window_start = arrive;
+                    window_losses = 0;
+                }
+            }
+            if lost_in_group > spec.m {
+                lost_ftgs.push(spec);
+            }
+            ftg_index += 1;
+        }
+
+        // End-of-pass control exchange: END notification reaches the
+        // receiver t after the last departure; the lost-FTG list reaches
+        // the sender t later.
+        let end_at_receiver = clock + t;
+        if lost_ftgs.is_empty() {
+            // Completion: all FTGs recovered. Total time is when the last
+            // fragment arrived (paper's Eq. 2 accounting), bounded below
+            // by the END exchange.
+            result.total_time = last_arrival.max(end_at_receiver);
+            return result;
+        }
+        result.rounds += 1;
+        result.ftgs_retransmitted += lost_ftgs.len() as u64;
+        retransmit_queue = std::mem::take(&mut lost_ftgs);
+        // Sender resumes after the list arrives.
+        clock = end_at_receiver + t;
+        assert!(
+            result.rounds < 10_000,
+            "retransmission did not converge (λ too high for parity?)"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::loss::{NoLoss, StaticLoss};
+
+    const TTL: f64 = 1.0 / 19_144.0;
+
+    fn params(lambda: f64) -> NetParams {
+        NetParams::paper_default(lambda)
+    }
+
+    /// Scaled schedule so tests run in milliseconds.
+    fn sched() -> LevelSchedule {
+        LevelSchedule::paper_nyx_scaled(1000)
+    }
+
+    #[test]
+    fn lossless_transfer_matches_wire_time() {
+        let p = params(0.0);
+        let s = sched();
+        let res = run_guaranteed_error(&mut NoLoss, &p, &s, 4, &ParityPolicy::Static(0));
+        assert_eq!(res.rounds, 0);
+        assert_eq!(res.fragments_lost, 0);
+        // Expected: N groups of 32 fragments at r f/s plus latency t.
+        let frags = s.total_bytes(4).div_ceil(4096);
+        let expect = frags as f64 / p.r + p.t;
+        assert!(
+            (res.total_time - expect).abs() / expect < 0.01,
+            "time={} expect={expect}",
+            res.total_time
+        );
+    }
+
+    #[test]
+    fn parity_overhead_slows_lossless_transfer() {
+        let p = params(0.0);
+        let s = sched();
+        let t0 = run_guaranteed_error(&mut NoLoss, &p, &s, 4, &ParityPolicy::Static(0)).total_time;
+        let t8 = run_guaranteed_error(&mut NoLoss, &p, &s, 4, &ParityPolicy::Static(8)).total_time;
+        let t16 =
+            run_guaranteed_error(&mut NoLoss, &p, &s, 4, &ParityPolicy::Static(16)).total_time;
+        assert!(t0 < t8 && t8 < t16);
+        assert!((t16 / t0 - 2.0).abs() < 0.05, "m=16 should double time");
+    }
+
+    #[test]
+    fn losses_trigger_retransmission_rounds_without_parity() {
+        let p = params(383.0);
+        let s = sched();
+        let mut loss = StaticLoss::with_ttl(383.0, 42, TTL);
+        let res = run_guaranteed_error(&mut loss, &p, &s, 4, &ParityPolicy::Static(0));
+        assert!(res.rounds >= 1, "2% loss with m=0 must retransmit");
+        assert!(res.fragments_lost > 0);
+        assert!(res.ftgs_retransmitted > 0);
+    }
+
+    #[test]
+    fn parity_reduces_retransmissions_at_medium_loss() {
+        let p = params(383.0);
+        let s = sched();
+        let mut l0 = StaticLoss::with_ttl(383.0, 7, TTL);
+        let r0 = run_guaranteed_error(&mut l0, &p, &s, 4, &ParityPolicy::Static(0));
+        let mut l4 = StaticLoss::with_ttl(383.0, 7, TTL);
+        let r4 = run_guaranteed_error(&mut l4, &p, &s, 4, &ParityPolicy::Static(4));
+        assert!(
+            r4.ftgs_retransmitted < r0.ftgs_retransmitted,
+            "m=4 retrans {} !< m=0 retrans {}",
+            r4.ftgs_retransmitted,
+            r0.ftgs_retransmitted
+        );
+    }
+
+    #[test]
+    fn sim_time_matches_model_expectation() {
+        // The paper's Fig. 2 observation: theory (Eq. 2) aligns with sim.
+        use crate::model::prob::p_unrecoverable;
+        use crate::model::time_model::{expected_total_time, num_ftgs};
+        let p = params(383.0);
+        let s = sched();
+        let bytes = s.total_bytes(4);
+        for m in [2usize, 4, 8] {
+            let p_loss = p_unrecoverable(&p, m);
+            let model_t = expected_total_time(&p, num_ftgs(bytes, &p, m), p_loss);
+            let mut times = Vec::new();
+            for seed in 0..5 {
+                let mut loss = StaticLoss::with_ttl(383.0, seed, TTL);
+                times.push(
+                    run_guaranteed_error(&mut loss, &p, &s, 4, &ParityPolicy::Static(m))
+                        .total_time,
+                );
+            }
+            let sim_t = crate::util::stats::mean(&times);
+            assert!(
+                (sim_t - model_t).abs() / model_t < 0.05,
+                "m={m}: sim {sim_t:.3} vs model {model_t:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_reports_lambda_near_truth() {
+        let p = params(383.0);
+        let s = sched();
+        let mut loss = StaticLoss::with_ttl(383.0, 11, TTL);
+        let res = run_guaranteed_error(
+            &mut loss,
+            &p,
+            &s,
+            4,
+            &ParityPolicy::Adaptive { t_w: 0.05, initial_lambda: 383.0 },
+        );
+        assert!(!res.lambda_updates.is_empty());
+        let est: Vec<f64> = res.lambda_updates.iter().map(|&(_, l)| l).collect();
+        let mean = crate::util::stats::mean(&est);
+        assert!(
+            (mean - 383.0).abs() / 383.0 < 0.25,
+            "λ̂ mean {mean} far from 383"
+        );
+    }
+
+    #[test]
+    fn adaptive_switches_m_when_lambda_jumps() {
+        // Loss process that jumps from low to high mid-transfer.
+        struct Jump {
+            inner_low: StaticLoss,
+            inner_high: StaticLoss,
+            switch_at: f64,
+        }
+        impl LossProcess for Jump {
+            fn is_lost(&mut self, time: f64) -> bool {
+                // Advance both processes to keep their clocks monotone.
+                let lo = self.inner_low.is_lost(time);
+                let hi = self.inner_high.is_lost(time);
+                if time < self.switch_at {
+                    lo
+                } else {
+                    hi
+                }
+            }
+            fn rate_at(&mut self, time: f64) -> f64 {
+                if time < self.switch_at {
+                    19.0
+                } else {
+                    957.0
+                }
+            }
+        }
+        let p = params(19.0);
+        let s = LevelSchedule::paper_nyx_scaled(100); // longer run
+        let mut loss = Jump {
+            inner_low: StaticLoss::with_ttl(19.0, 3, TTL),
+            inner_high: StaticLoss::with_ttl(957.0, 4, TTL),
+            switch_at: 1.5,
+        };
+        let res = run_guaranteed_error(
+            &mut loss,
+            &p,
+            &s,
+            4,
+            &ParityPolicy::Adaptive { t_w: 0.5, initial_lambda: 19.0 },
+        );
+        assert!(
+            res.m_changes.len() >= 2,
+            "m should adapt after λ jump: {:?}",
+            res.m_changes
+        );
+        let final_m = res.m_changes.last().unwrap().1;
+        let initial_m = res.m_changes[0].1;
+        assert!(
+            final_m > initial_m,
+            "m should grow with λ: {:?}",
+            res.m_changes
+        );
+    }
+
+    #[test]
+    fn fewer_levels_transfer_faster() {
+        let p = params(0.0);
+        let s = sched();
+        let t1 = run_guaranteed_error(&mut NoLoss, &p, &s, 1, &ParityPolicy::Static(0)).total_time;
+        let t4 = run_guaranteed_error(&mut NoLoss, &p, &s, 4, &ParityPolicy::Static(0)).total_time;
+        assert!(t1 < t4 / 10.0, "level 1 is ~2.5% of the data");
+    }
+}

@@ -1,0 +1,235 @@
+//! Datagram channel abstraction.
+//!
+//! The coordinator's sender/receiver engines are transport-agnostic: they
+//! speak [`Datagram`], implemented by real UDP sockets ([`super::udp`]),
+//! an in-memory pair (tests), and a loss-injecting wrapper (the WAN
+//! substitute for the paper's real-network experiments, DESIGN.md §3).
+
+use crate::util::Pcg64;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Unreliable, unordered datagram endpoint (UDP semantics).
+pub trait Datagram: Send {
+    /// Fire-and-forget send. May silently drop (that is the point).
+    fn send(&mut self, buf: &[u8]);
+    /// Blocking receive with timeout. `None` on timeout.
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>>;
+    /// Non-blocking receive.
+    fn try_recv(&mut self) -> Option<Vec<u8>>;
+}
+
+/// In-memory datagram endpoint over std mpsc (lossless, ordered — loss is
+/// layered on with [`LossyChannel`]).
+pub struct MemChannel {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Connected pair of in-memory endpoints.
+pub fn mem_pair() -> (MemChannel, MemChannel) {
+    let (tx_a, rx_b) = std::sync::mpsc::channel();
+    let (tx_b, rx_a) = std::sync::mpsc::channel();
+    (MemChannel { tx: tx_a, rx: rx_a }, MemChannel { tx: tx_b, rx: rx_b })
+}
+
+impl Datagram for MemChannel {
+    fn send(&mut self, buf: &[u8]) {
+        // Peer gone ⇒ drop, like UDP.
+        let _ = self.tx.send(buf.to_vec());
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(b) => Some(b),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        match self.rx.try_recv() {
+            Ok(b) => Some(b),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+}
+
+/// Loss/latency-injecting wrapper: drops outgoing datagrams with
+/// probability `loss_fraction` — the controlled-WAN substitute used by the
+/// loopback experiments (Fig. 6 / Table 2).
+///
+/// Only *fragment-bearing* packets should be subjected to loss in Janus
+/// experiments; the caller decides by wrapping the data path's channel but
+/// not the control path's.
+pub struct LossyChannel<C: Datagram> {
+    pub inner: C,
+    loss_fraction: Arc<Mutex<f64>>,
+    rng: Pcg64,
+    dropped: u64,
+    sent: u64,
+}
+
+impl<C: Datagram> LossyChannel<C> {
+    pub fn new(inner: C, loss_fraction: f64, seed: u64) -> Self {
+        LossyChannel {
+            inner,
+            loss_fraction: Arc::new(Mutex::new(loss_fraction)),
+            rng: Pcg64::seeded(seed),
+            dropped: 0,
+            sent: 0,
+        }
+    }
+
+    /// Handle to adjust the loss fraction while the transfer runs
+    /// (time-varying-loss loopback experiments).
+    pub fn loss_knob(&self) -> Arc<Mutex<f64>> {
+        Arc::clone(&self.loss_fraction)
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.sent, self.dropped)
+    }
+}
+
+impl<C: Datagram> Datagram for LossyChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        self.sent += 1;
+        let p = *self.loss_fraction.lock().unwrap();
+        if self.rng.bool_with(p) {
+            self.dropped += 1;
+            return;
+        }
+        self.inner.send(buf);
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.inner.try_recv()
+    }
+}
+
+/// Reordering wrapper: buffers sends and flushes them slightly out of
+/// order — for robustness tests (UDP does not guarantee ordering).
+pub struct ReorderChannel<C: Datagram> {
+    pub inner: C,
+    window: usize,
+    rng: Pcg64,
+    queue: VecDeque<Vec<u8>>,
+}
+
+impl<C: Datagram> ReorderChannel<C> {
+    pub fn new(inner: C, window: usize, seed: u64) -> Self {
+        ReorderChannel { inner, window: window.max(1), rng: Pcg64::seeded(seed), queue: VecDeque::new() }
+    }
+    fn flush_one(&mut self) {
+        if self.queue.is_empty() {
+            return;
+        }
+        let idx = self.rng.range(0, self.queue.len());
+        let buf = self.queue.remove(idx).unwrap();
+        self.inner.send(&buf);
+    }
+    /// Flush everything still buffered (call at end of stream).
+    pub fn flush(&mut self) {
+        while !self.queue.is_empty() {
+            self.flush_one();
+        }
+    }
+}
+
+impl<C: Datagram> Datagram for ReorderChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        self.queue.push_back(buf.to_vec());
+        while self.queue.len() > self.window {
+            self.flush_one();
+        }
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.flush();
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.inner.try_recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_pair_delivers_both_ways() {
+        let (mut a, mut b) = mem_pair();
+        a.send(b"hello");
+        b.send(b"world");
+        assert_eq!(b.recv_timeout(Duration::from_millis(50)).unwrap(), b"hello");
+        assert_eq!(a.recv_timeout(Duration::from_millis(50)).unwrap(), b"world");
+        assert!(a.try_recv().is_none());
+    }
+
+    #[test]
+    fn recv_times_out() {
+        let (mut a, _b) = mem_pair();
+        let start = std::time::Instant::now();
+        assert!(a.recv_timeout(Duration::from_millis(20)).is_none());
+        assert!(start.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn lossy_drops_expected_fraction() {
+        let (a, mut b) = mem_pair();
+        let mut lossy = LossyChannel::new(a, 0.3, 42);
+        let n = 10_000;
+        for _ in 0..n {
+            lossy.send(b"x");
+        }
+        let mut got = 0;
+        while b.try_recv().is_some() {
+            got += 1;
+        }
+        let frac = 1.0 - got as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.03, "dropped frac {frac}");
+        let (sent, dropped) = lossy.stats();
+        assert_eq!(sent, n as u64);
+        assert_eq!(dropped as usize, n - got);
+    }
+
+    #[test]
+    fn loss_knob_changes_rate_live() {
+        let (a, mut b) = mem_pair();
+        let mut lossy = LossyChannel::new(a, 0.0, 1);
+        let knob = lossy.loss_knob();
+        for _ in 0..100 {
+            lossy.send(b"x");
+        }
+        *knob.lock().unwrap() = 1.0;
+        for _ in 0..100 {
+            lossy.send(b"x");
+        }
+        let mut got = 0;
+        while b.try_recv().is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 100);
+    }
+
+    #[test]
+    fn reorder_preserves_contents() {
+        let (a, mut b) = mem_pair();
+        let mut ch = ReorderChannel::new(a, 8, 3);
+        for i in 0..100u32 {
+            ch.send(&i.to_le_bytes());
+        }
+        ch.flush();
+        let mut got: Vec<u32> = Vec::new();
+        while let Some(buf) = b.try_recv() {
+            got.push(u32::from_le_bytes(buf.try_into().unwrap()));
+        }
+        assert_eq!(got.len(), 100);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(got, sorted, "window 8 should reorder something");
+    }
+}

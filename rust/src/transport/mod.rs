@@ -1,0 +1,8 @@
+//! Datagram transports: the in-memory test channel, loss/reorder
+//! injectors (the controlled-WAN substitute), and real UDP sockets.
+
+pub mod channel;
+pub mod udp;
+
+pub use channel::{mem_pair, Datagram, LossyChannel, MemChannel, ReorderChannel};
+pub use udp::{udp_pair, UdpChannel};

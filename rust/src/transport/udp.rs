@@ -1,0 +1,153 @@
+//! Real UDP transport over `std::net` (the Boost.Asio substitute for the
+//! paper's §5.3 prototype; tokio is not in the offline crate set, and the
+//! sender/receiver engines are thread-per-role anyway).
+
+use super::channel::Datagram;
+use crate::coordinator::packet::MAX_DATAGRAM;
+use std::net::{SocketAddr, ToSocketAddrs, UdpSocket};
+use std::time::Duration;
+
+/// UDP endpoint connected to a fixed peer.
+pub struct UdpChannel {
+    sock: UdpSocket,
+    buf: Vec<u8>,
+}
+
+/// Grow kernel socket buffers: Janus bursts 4 KiB datagrams at the full
+/// pacing rate, and the default SO_RCVBUF (~200 KiB) silently drops whole
+/// FTG runs on loopback whenever the receiver thread lags — losses the
+/// protocol would misattribute to the network.
+fn grow_buffers(sock: &UdpSocket) {
+    use std::os::fd::AsRawFd;
+    let fd = sock.as_raw_fd();
+    let size: libc::c_int = 16 * 1024 * 1024;
+    unsafe {
+        // Best-effort; the kernel clamps to rmem_max/wmem_max.
+        libc::setsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            libc::SO_RCVBUF,
+            &size as *const _ as *const libc::c_void,
+            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+        );
+        libc::setsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            libc::SO_SNDBUF,
+            &size as *const _ as *const libc::c_void,
+            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+        );
+    }
+}
+
+impl UdpChannel {
+    /// Bind to `local` and direct all traffic to `peer`.
+    pub fn bind_connect<A: ToSocketAddrs, B: ToSocketAddrs>(
+        local: A,
+        peer: B,
+    ) -> std::io::Result<UdpChannel> {
+        let sock = UdpSocket::bind(local)?;
+        grow_buffers(&sock);
+        sock.connect(peer)?;
+        Ok(UdpChannel { sock, buf: vec![0u8; MAX_DATAGRAM] })
+    }
+
+    /// Bind to an ephemeral localhost port (peer set later via `connect`).
+    pub fn bind_ephemeral() -> std::io::Result<UdpChannel> {
+        let sock = UdpSocket::bind(("127.0.0.1", 0))?;
+        grow_buffers(&sock);
+        Ok(UdpChannel { sock, buf: vec![0u8; MAX_DATAGRAM] })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.sock.local_addr()
+    }
+
+    pub fn connect<A: ToSocketAddrs>(&mut self, peer: A) -> std::io::Result<()> {
+        self.sock.connect(peer)
+    }
+
+    /// Wrap an already-configured socket (must be connected to a peer).
+    pub fn from_socket(sock: UdpSocket) -> UdpChannel {
+        grow_buffers(&sock);
+        UdpChannel { sock, buf: vec![0u8; MAX_DATAGRAM] }
+    }
+}
+
+impl Datagram for UdpChannel {
+    fn send(&mut self, buf: &[u8]) {
+        // UDP may fail transiently (e.g. ECONNREFUSED on loopback before
+        // the peer binds); fire-and-forget semantics swallow it.
+        let _ = self.sock.send(buf);
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.sock.set_read_timeout(Some(timeout)).ok()?;
+        match self.sock.recv(&mut self.buf) {
+            Ok(n) => Some(self.buf[..n].to_vec()),
+            Err(_) => None,
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.sock.set_nonblocking(true).ok()?;
+        let res = match self.sock.recv(&mut self.buf) {
+            Ok(n) => Some(self.buf[..n].to_vec()),
+            Err(_) => None,
+        };
+        let _ = self.sock.set_nonblocking(false);
+        res
+    }
+}
+
+/// Create a connected localhost UDP pair on ephemeral ports.
+pub fn udp_pair() -> std::io::Result<(UdpChannel, UdpChannel)> {
+    let mut a = UdpChannel::bind_ephemeral()?;
+    let mut b = UdpChannel::bind_ephemeral()?;
+    let addr_a = a.local_addr()?;
+    let addr_b = b.local_addr()?;
+    a.connect(addr_b)?;
+    b.connect(addr_a)?;
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_roundtrip() {
+        let (mut a, mut b) = udp_pair().unwrap();
+        a.send(b"ping");
+        let got = b.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(got, b"ping");
+        b.send(b"pong");
+        let got = a.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(got, b"pong");
+    }
+
+    #[test]
+    fn recv_timeout_elapses() {
+        let (mut a, _b) = udp_pair().unwrap();
+        assert!(a.recv_timeout(Duration::from_millis(30)).is_none());
+    }
+
+    #[test]
+    fn large_datagram_roundtrip() {
+        let (mut a, mut b) = udp_pair().unwrap();
+        let payload = vec![0x5Au8; 8192];
+        a.send(&payload);
+        let got = b.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let (mut a, mut b) = udp_pair().unwrap();
+        assert!(b.try_recv().is_none());
+        a.send(b"x");
+        // Give the kernel a moment on loopback.
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(b.try_recv().unwrap(), b"x");
+    }
+}

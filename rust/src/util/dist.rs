@@ -1,0 +1,170 @@
+//! Random-variate sampling for the simulator.
+//!
+//! The packet-loss process draws exponential inter-loss gaps (§5.2.2 of the
+//! paper), the HMM state-holding times are exponential, and the per-state
+//! loss rates are Gaussian. All samplers take an explicit [`Pcg64`].
+
+use super::prng::Pcg64;
+
+/// Exponential variate with rate `lambda` (mean `1/lambda`).
+#[inline]
+pub fn exponential(rng: &mut Pcg64, lambda: f64) -> f64 {
+    assert!(lambda > 0.0, "exponential rate must be positive");
+    -rng.next_f64_open().ln() / lambda
+}
+
+/// Standard normal variate via Marsaglia polar method.
+pub fn standard_normal(rng: &mut Pcg64) -> f64 {
+    loop {
+        let u = 2.0 * rng.next_f64() - 1.0;
+        let v = 2.0 * rng.next_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Gaussian variate with mean `mu` and standard deviation `sigma`.
+#[inline]
+pub fn normal(rng: &mut Pcg64, mu: f64, sigma: f64) -> f64 {
+    mu + sigma * standard_normal(rng)
+}
+
+/// Poisson variate with mean `mu`.
+///
+/// Knuth multiplication for small means; normal approximation with
+/// continuity correction above 64 (adequate for simulator use where large
+/// means only appear in aggregate-loss draws).
+pub fn poisson(rng: &mut Pcg64, mu: f64) -> u64 {
+    assert!(mu >= 0.0);
+    if mu == 0.0 {
+        return 0;
+    }
+    if mu < 64.0 {
+        let limit = (-mu).exp();
+        let mut k = 0u64;
+        let mut prod = rng.next_f64_open();
+        while prod > limit {
+            k += 1;
+            prod *= rng.next_f64_open();
+        }
+        k
+    } else {
+        let x = normal(rng, mu, mu.sqrt()).round();
+        if x < 0.0 {
+            0
+        } else {
+            x as u64
+        }
+    }
+}
+
+/// Geometric number of Bernoulli(p) failures before the first success.
+pub fn geometric(rng: &mut Pcg64, p: f64) -> u64 {
+    assert!(p > 0.0 && p <= 1.0);
+    if p >= 1.0 {
+        return 0;
+    }
+    let u = rng.next_f64_open();
+    (u.ln() / (1.0 - p).ln()).floor() as u64
+}
+
+/// Binomial(n, p) variate. Exact inversion for small n, else normal approx.
+pub fn binomial(rng: &mut Pcg64, n: u64, p: f64) -> u64 {
+    assert!((0.0..=1.0).contains(&p));
+    if p == 0.0 || n == 0 {
+        return 0;
+    }
+    if p == 1.0 {
+        return n;
+    }
+    if n <= 256 {
+        let mut count = 0;
+        for _ in 0..n {
+            if rng.bool_with(p) {
+                count += 1;
+            }
+        }
+        count
+    } else {
+        let mu = n as f64 * p;
+        let sigma = (n as f64 * p * (1.0 - p)).sqrt();
+        let x = normal(rng, mu, sigma).round();
+        x.clamp(0.0, n as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Pcg64::seeded(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| exponential(&mut r, 4.0)).collect();
+        let (m, _) = mean_var(&xs);
+        assert!((m - 0.25).abs() < 0.005, "mean={m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(2);
+        let xs: Vec<f64> = (0..200_000).map(|_| normal(&mut r, 3.0, 2.0)).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 3.0).abs() < 0.03, "mean={m}");
+        assert!((v - 4.0).abs() < 0.1, "var={v}");
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut r = Pcg64::seeded(3);
+        let xs: Vec<f64> = (0..100_000).map(|_| poisson(&mut r, 2.5) as f64).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 2.5).abs() < 0.05, "mean={m}");
+        assert!((v - 2.5).abs() < 0.1, "var={v}");
+    }
+
+    #[test]
+    fn poisson_large_mean_normal_path() {
+        let mut r = Pcg64::seeded(4);
+        let xs: Vec<f64> = (0..50_000).map(|_| poisson(&mut r, 200.0) as f64).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 200.0).abs() < 1.0, "mean={m}");
+        assert!((v - 200.0).abs() < 10.0, "var={v}");
+    }
+
+    #[test]
+    fn geometric_mean() {
+        let mut r = Pcg64::seeded(5);
+        let p = 0.2;
+        let xs: Vec<f64> = (0..100_000).map(|_| geometric(&mut r, p) as f64).collect();
+        let (m, _) = mean_var(&xs);
+        let expect = (1.0 - p) / p; // failures before success
+        assert!((m - expect).abs() < 0.1, "mean={m} expect={expect}");
+    }
+
+    #[test]
+    fn binomial_exact_and_approx_agree_in_mean() {
+        let mut r = Pcg64::seeded(6);
+        let small: Vec<f64> = (0..50_000).map(|_| binomial(&mut r, 100, 0.3) as f64).collect();
+        let (m, _) = mean_var(&small);
+        assert!((m - 30.0).abs() < 0.3, "mean={m}");
+        let big: Vec<f64> = (0..50_000).map(|_| binomial(&mut r, 10_000, 0.3) as f64).collect();
+        let (mb, _) = mean_var(&big);
+        assert!((mb - 3000.0).abs() < 5.0, "mean={mb}");
+    }
+
+    #[test]
+    fn poisson_zero_mean_is_zero() {
+        let mut r = Pcg64::seeded(7);
+        assert_eq!(poisson(&mut r, 0.0), 0);
+    }
+}

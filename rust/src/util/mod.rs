@@ -1,0 +1,13 @@
+//! Shared low-level utilities: PRNG, distributions, special functions,
+//! statistics, and the mini property-testing layer.
+//!
+//! These stand in for `rand`, `statrs`, and `proptest`, none of which are
+//! available in the offline vendored crate set (see DESIGN.md §3).
+
+pub mod dist;
+pub mod prng;
+pub mod prop;
+pub mod special;
+pub mod stats;
+
+pub use prng::Pcg64;

@@ -1,0 +1,164 @@
+//! Minimal property-based testing support.
+//!
+//! `proptest` is not in the offline vendored crate set, so this module
+//! provides the slice of it Janus' invariant tests need: a seeded case
+//! generator, a configurable number of cases, and greedy shrinking of
+//! failing integer-vector inputs. Failures report the seed and the
+//! shrunken input so they can be replayed.
+
+use super::prng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 256,
+            seed: 0xC0FFEE,
+            max_shrink_iters: 2_000,
+        }
+    }
+}
+
+/// Run `property` against `cases` inputs produced by `gen`.
+///
+/// On failure, attempts to shrink the input with `shrink` (returns
+/// candidate smaller inputs) and panics with the minimal reproduction.
+pub fn check<T, G, S, P>(cfg: &PropConfig, mut gen: G, mut shrink: S, mut property: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    S: FnMut(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg64::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = property(&input) {
+            // Shrink: repeatedly take the first failing candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                if iters >= cfg.max_shrink_iters {
+                    break;
+                }
+                for cand in shrink(&best) {
+                    iters += 1;
+                    if let Err(m) = property(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if iters >= cfg.max_shrink_iters {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={}, case={case}):\n  input: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for `Vec<u64>`-like inputs: drop elements and halve values.
+pub fn shrink_vec_u64(v: &Vec<u64>) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    // Remove halves, then single elements.
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    for i in 0..v.len().min(8) {
+        let mut w = v.clone();
+        w.remove(i);
+        out.push(w);
+    }
+    // Halve each element.
+    for i in 0..v.len().min(8) {
+        if v[i] > 0 {
+            let mut w = v.clone();
+            w[i] /= 2;
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Shrinker that never shrinks (for inputs where shrinking is meaningless).
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            &PropConfig::default(),
+            |rng| rng.next_below(100),
+            no_shrink,
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 100"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            &PropConfig { cases: 64, ..Default::default() },
+            |rng| rng.next_below(100),
+            no_shrink,
+            |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err("too big".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: sum < 100. Failing inputs shrink toward minimal sum >= 100.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                &PropConfig { cases: 200, ..Default::default() },
+                |rng| (0..10).map(|_| rng.next_below(50)).collect::<Vec<u64>>(),
+                shrink_vec_u64,
+                |v| {
+                    let s: u64 = v.iter().sum();
+                    if s < 100 {
+                        Ok(())
+                    } else {
+                        Err(format!("sum={s}"))
+                    }
+                },
+            )
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().expect("panic message");
+        // The shrunken counterexample should be small (few elements).
+        let input_line = msg.lines().find(|l| l.contains("input")).unwrap();
+        let commas = input_line.matches(',').count();
+        assert!(commas <= 4, "did not shrink: {input_line}");
+    }
+}

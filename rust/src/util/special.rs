@@ -1,0 +1,185 @@
+//! Special functions for the optimization models.
+//!
+//! Equations 4–7 of the paper involve Poisson pmfs and ratios of binomial
+//! coefficients with arguments in the hundreds (`u = r·t + n − 1 ≈ 222` at
+//! the paper's parameters). Everything is computed in log space via
+//! `ln Γ` so the hypergeometric terms never overflow.
+
+/// Natural log of the gamma function (Lanczos approximation, g = 7).
+///
+/// Accurate to ~1e-13 relative over the range used by the models.
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma domain: x > 0, got {x}");
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_1,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Size of the precomputed ln-factorial table. Covers every `u = r·t+n−1`
+/// the models see at paper-scale parameters with lots of headroom.
+const LN_FACT_TABLE: usize = 8_192;
+
+fn ln_fact_table() -> &'static [f64] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Vec<f64>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = Vec::with_capacity(LN_FACT_TABLE);
+        let mut acc = 0.0f64;
+        t.push(0.0); // ln 0! = 0
+        for n in 1..LN_FACT_TABLE {
+            acc += (n as f64).ln();
+            t.push(acc);
+        }
+        t
+    })
+}
+
+/// ln n! — table lookup below 8 192 (the models' hot path), `ln Γ` above.
+#[inline]
+pub fn ln_factorial(n: u64) -> f64 {
+    if (n as usize) < LN_FACT_TABLE {
+        ln_fact_table()[n as usize]
+    } else {
+        ln_gamma(n as f64 + 1.0)
+    }
+}
+
+/// ln C(n, k); `-inf` when the coefficient is zero (k > n).
+#[inline]
+pub fn ln_binomial(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// Poisson pmf `P(X = k)` with mean `mu`, computed in log space.
+#[inline]
+pub fn poisson_pmf(k: u64, mu: f64) -> f64 {
+    assert!(mu >= 0.0);
+    if mu == 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    (k as f64 * mu.ln() - mu - ln_factorial(k)).exp()
+}
+
+/// Poisson upper tail `P(X > m)` with mean `mu`.
+pub fn poisson_sf(m: u64, mu: f64) -> f64 {
+    // 1 - CDF(m): sum the pmf while it is non-negligible.
+    let mut cdf = 0.0;
+    for k in 0..=m {
+        cdf += poisson_pmf(k, mu);
+    }
+    (1.0 - cdf).clamp(0.0, 1.0)
+}
+
+/// Hypergeometric pmf: drawing `j` marked items out of `u` total of which
+/// `n` are special, probability exactly `w` of the marked fall in the
+/// special set: `C(n,w) C(u-n, j-w) / C(u, j)`.
+pub fn hypergeometric_pmf(u: u64, n: u64, j: u64, w: u64) -> f64 {
+    if w > n || w > j || j.saturating_sub(w) > u.saturating_sub(n) || j > u {
+        return 0.0;
+    }
+    (ln_binomial(n, w) + ln_binomial(u - n, j - w) - ln_binomial(u, j)).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!((ln_gamma(1.0)).abs() < 1e-12);
+        assert!((ln_gamma(2.0)).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        let half = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - half).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_binomial_small_exact() {
+        for n in 0..20u64 {
+            let mut row = vec![1u64];
+            for _ in 0..n {
+                let mut next = vec![1u64];
+                for w in row.windows(2) {
+                    next.push(w[0] + w[1]);
+                }
+                next.push(1);
+                row = next;
+            }
+            for (k, &exact) in row.iter().enumerate() {
+                let approx = ln_binomial(n, k as u64).exp();
+                assert!(
+                    (approx - exact as f64).abs() / (exact as f64) < 1e-9,
+                    "C({n},{k}) = {exact}, got {approx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ln_binomial_out_of_range_is_zero() {
+        assert_eq!(ln_binomial(5, 6), f64::NEG_INFINITY);
+        assert_eq!(ln_binomial(5, 6).exp(), 0.0);
+    }
+
+    #[test]
+    fn poisson_pmf_sums_to_one() {
+        for &mu in &[0.1, 1.0, 5.0, 50.0] {
+            let total: f64 = (0..(mu as u64 * 4 + 40)).map(|k| poisson_pmf(k, mu)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "mu={mu} total={total}");
+        }
+    }
+
+    #[test]
+    fn poisson_sf_complements_cdf() {
+        let mu = 3.0;
+        for m in 0..10u64 {
+            let cdf: f64 = (0..=m).map(|k| poisson_pmf(k, mu)).sum();
+            assert!((poisson_sf(m, mu) - (1.0 - cdf)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn hypergeometric_sums_to_one() {
+        let (u, n, j) = (222, 32, 10);
+        let total: f64 = (0..=j).map(|w| hypergeometric_pmf(u, n, j, w)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total={total}");
+    }
+
+    #[test]
+    fn hypergeometric_known_small_case() {
+        // Urn: 5 special of 10, draw 4, P(exactly 2 special)
+        // = C(5,2)C(5,2)/C(10,4) = 10*10/210
+        let p = hypergeometric_pmf(10, 5, 4, 2);
+        assert!((p - 100.0 / 210.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypergeometric_impossible_cases_zero() {
+        assert_eq!(hypergeometric_pmf(10, 5, 4, 6), 0.0); // w > j
+        assert_eq!(hypergeometric_pmf(10, 5, 8, 1), 0.0); // j-w > u-n
+    }
+}

@@ -1,0 +1,17 @@
+//! Cross-facility workflow orchestration — multiple concurrent Janus
+//! transfers sharing one WAN uplink.
+//!
+//! The paper's motivation (§1) is *workflows*: facilities continuously
+//! exchanging many datasets with different urgency. This module is the
+//! streaming orchestrator above the per-transfer protocols: a
+//! deficit-round-robin scheduler partitions the link rate across active
+//! jobs by weight, each job runs its own contract (guaranteed-ε with
+//! passive retransmission, or guaranteed-time), λ feedback is shared
+//! (one network ⇒ one loss process), and per-job admission/backpressure
+//! keeps the aggregate rate at `r_link`.
+
+pub mod scheduler;
+
+pub use scheduler::{
+    run_campaign, CampaignResult, Job, JobContract, JobOutcome, SchedulerConfig,
+};

@@ -1,0 +1,417 @@
+//! Weighted deficit-round-robin transfer scheduler (simulated).
+//!
+//! Jobs arrive over time; active jobs share the link in proportion to
+//! their weights at FTG granularity (one FTG ≈ n fragments is the
+//! scheduling quantum, matching the protocol's natural unit). Each job
+//! carries one of the paper's two contracts:
+//!
+//! * [`JobContract::ErrorBound`] — all levels needed for ε must arrive;
+//!   unrecoverable FTGs are re-queued (passive retransmission), and the
+//!   job's parity adapts to the shared λ̂ via Eq. 8.
+//! * [`JobContract::Deadline`] — per-level parity from Eq. 12 against the
+//!   job's *own* remaining deadline; FTGs are never re-queued; levels
+//!   with unrecoverable groups are lost.
+
+use crate::model::error_model::optimize_deadline_paper;
+use crate::model::params::{LevelSchedule, NetParams};
+use crate::model::time_model::optimize_parity;
+use crate::sim::loss::LossProcess;
+use std::collections::VecDeque;
+
+/// Transfer contract for one job.
+#[derive(Debug, Clone)]
+pub enum JobContract {
+    /// Deliver every level whose ε the user requires (bound value).
+    ErrorBound(f64),
+    /// Deliver the best prefix within `deadline` seconds of *arrival*.
+    Deadline(f64),
+}
+
+/// One dataset transfer request.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    pub sched: LevelSchedule,
+    pub contract: JobContract,
+    /// Relative share of the link while active (≥ 1).
+    pub weight: u32,
+    /// Arrival time, seconds.
+    pub arrival: f64,
+}
+
+/// Orchestrator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    pub net: NetParams,
+    /// λ measurement window (shared across jobs), seconds.
+    pub t_w: f64,
+    /// Initial λ estimate for the first solves.
+    pub initial_lambda: f64,
+}
+
+/// Per-job result.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: usize,
+    pub start: f64,
+    pub finish: f64,
+    /// Leading fully-recovered levels.
+    pub levels_recovered: usize,
+    pub levels_sent: usize,
+    pub achieved_eps: f64,
+    pub met_contract: bool,
+    pub fragments_sent: u64,
+    pub fragments_lost: u64,
+    pub retransmitted_ftgs: u64,
+}
+
+/// Whole-campaign result.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub jobs: Vec<JobOutcome>,
+    /// Time the last job finished.
+    pub makespan: f64,
+    /// Fraction of wall time the link carried fragments.
+    pub link_utilization: f64,
+    /// λ̂ reports over time.
+    pub lambda_trace: Vec<(f64, f64)>,
+}
+
+/// Scheduling quantum state for one active job.
+struct ActiveJob {
+    job: Job,
+    /// (level, k, m, is_retransmission) FTGs still to send this pass.
+    queue: VecDeque<(usize, usize, usize, bool)>,
+    /// Unrecoverable FTGs awaiting the next retransmission pass
+    /// (error-bound contract only).
+    lost: Vec<(usize, usize, usize)>,
+    level_ok: Vec<bool>,
+    levels_sent: usize,
+    deficit: i64,
+    started_at: f64,
+    fragments_sent: u64,
+    fragments_lost: u64,
+    retransmitted: u64,
+    /// Current Eq. 8 m (error-bound jobs).
+    current_m: usize,
+    done: bool,
+}
+
+impl ActiveJob {
+    /// Build the initial FTG queue for a job given λ̂ and `now`.
+    fn plan(job: Job, cfg: &SchedulerConfig, lambda: f64, now: f64) -> ActiveJob {
+        let p = NetParams { lambda, ..cfg.net };
+        let n = cfg.net.n;
+        let s = cfg.net.s as u64;
+        let mut queue = VecDeque::new();
+        let (levels_sent, per_level_m, current_m) = match &job.contract {
+            JobContract::ErrorBound(bound) => {
+                let l = job.sched.levels_for_error_bound(*bound).unwrap_or(job.sched.num_levels());
+                let m = optimize_parity(&p, job.sched.total_bytes(l)).m;
+                (l, vec![m; l], m)
+            }
+            JobContract::Deadline(tau) => {
+                let remaining = (job.arrival + tau - now).max(0.0);
+                match optimize_deadline_paper(&p, &job.sched, remaining) {
+                    Some(opt) => {
+                        let l = opt.levels;
+                        (l, opt.m, 0)
+                    }
+                    None => (0, vec![], 0), // infeasible: deliver nothing
+                }
+            }
+        };
+        for (li, &m) in per_level_m.iter().enumerate() {
+            let mut bytes = job.sched.sizes[li];
+            while bytes > 0 {
+                let k = (n - m).min(bytes.div_ceil(s).max(1) as usize);
+                bytes = bytes.saturating_sub(k as u64 * s);
+                queue.push_back((li, k, m, false));
+            }
+        }
+        let level_ok = vec![true; levels_sent];
+        ActiveJob {
+            job,
+            queue,
+            lost: Vec::new(),
+            level_ok,
+            levels_sent,
+            deficit: 0,
+            started_at: now,
+            fragments_sent: 0,
+            fragments_lost: 0,
+            retransmitted: 0,
+            current_m,
+            done: false,
+        }
+    }
+}
+
+/// Run a campaign of jobs over one shared (simulated) link.
+pub fn run_campaign(
+    cfg: &SchedulerConfig,
+    mut jobs: Vec<Job>,
+    loss: &mut dyn LossProcess,
+) -> CampaignResult {
+    jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let step = 1.0 / cfg.net.r;
+    let quantum_frags = cfg.net.n as i64; // one FTG per quantum per weight
+    let mut clock = 0.0f64;
+    let mut busy_time = 0.0f64;
+    let mut outcomes: Vec<Option<JobOutcome>> = vec![None; jobs.len()];
+    let mut pending: VecDeque<Job> = jobs.into_iter().collect();
+    let mut active: Vec<ActiveJob> = Vec::new();
+
+    // Shared λ measurement.
+    let mut lambda_hat = cfg.initial_lambda;
+    let mut window_start = 0.0f64;
+    let mut window_losses = 0u64;
+    let mut lambda_trace = Vec::new();
+
+    let mut rr_index = 0usize;
+    loop {
+        // Admit arrivals.
+        while pending.front().map_or(false, |j| j.arrival <= clock) {
+            let job = pending.pop_front().unwrap();
+            active.push(ActiveJob::plan(job, cfg, lambda_hat, clock));
+        }
+        if active.is_empty() {
+            match pending.front() {
+                Some(j) => {
+                    clock = j.arrival;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // Deficit round robin over active jobs.
+        if rr_index >= active.len() {
+            rr_index = 0;
+        }
+        let aj = &mut active[rr_index];
+        aj.deficit += quantum_frags * aj.job.weight as i64;
+
+        // Transmit whole FTGs while deficit allows.
+        while aj.deficit > 0 {
+            let (level, k, m, is_retx) = match aj.queue.pop_front() {
+                Some(f) => f,
+                None => break,
+            };
+            let total = k + m;
+            let mut lost_in_group = 0usize;
+            for _ in 0..total {
+                let depart = clock;
+                clock += step;
+                busy_time += step;
+                aj.fragments_sent += 1;
+                if loss.is_lost(depart) {
+                    aj.fragments_lost += 1;
+                    lost_in_group += 1;
+                    window_losses += 1;
+                }
+                if clock - window_start >= cfg.t_w {
+                    lambda_hat = window_losses as f64 / cfg.t_w;
+                    lambda_trace.push((clock, lambda_hat));
+                    window_start = clock;
+                    window_losses = 0;
+                }
+            }
+            aj.deficit -= total as i64;
+            if lost_in_group > m {
+                match aj.job.contract {
+                    JobContract::ErrorBound(_) => aj.lost.push((level, k, m)),
+                    JobContract::Deadline(_) => aj.level_ok[level] = false,
+                }
+            }
+            if is_retx {
+                aj.retransmitted += 1;
+            }
+        }
+        if aj.queue.is_empty() {
+            // Pass over: error-bound jobs re-queue their lost FTGs (with
+            // parity re-solved for the *current* λ̂ — adaptive behaviour).
+            if !aj.lost.is_empty() {
+                let p = NetParams { lambda: lambda_hat, ..cfg.net };
+                let bytes: u64 = aj
+                    .lost
+                    .iter()
+                    .map(|&(_, k, _)| k as u64 * cfg.net.s as u64)
+                    .sum();
+                let m_new = optimize_parity(&p, bytes.max(1)).m;
+                aj.current_m = m_new;
+                for (level, k, _) in aj.lost.drain(..) {
+                    // Re-encode with the adapted parity (k stays: the data
+                    // fragments are fixed; parity count changes).
+                    aj.queue.push_back((level, k, m_new, true));
+                }
+            } else {
+                aj.done = true;
+            }
+        }
+
+        // Retire finished jobs.
+        if active[rr_index].done {
+            let aj = active.remove(rr_index);
+            let prefix = aj.level_ok.iter().take_while(|&&ok| ok).count();
+            let achieved = aj.job.sched.eps_with_levels(prefix);
+            let met = match aj.job.contract {
+                JobContract::ErrorBound(bound) => {
+                    prefix == aj.levels_sent && achieved <= bound
+                }
+                JobContract::Deadline(tau) => clock <= aj.job.arrival + tau * 1.001,
+            };
+            outcomes[aj.job.id] = Some(JobOutcome {
+                id: aj.job.id,
+                start: aj.started_at,
+                finish: clock,
+                levels_recovered: prefix,
+                levels_sent: aj.levels_sent,
+                achieved_eps: achieved,
+                met_contract: met,
+                fragments_sent: aj.fragments_sent,
+                fragments_lost: aj.fragments_lost,
+                retransmitted_ftgs: aj.retransmitted,
+            });
+        } else {
+            rr_index += 1;
+        }
+    }
+
+    let makespan = clock;
+    CampaignResult {
+        jobs: outcomes.into_iter().map(|o| o.expect("all jobs retired")).collect(),
+        makespan,
+        link_utilization: if makespan > 0.0 { busy_time / makespan } else { 0.0 },
+        lambda_trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::loss::{NoLoss, StaticLoss};
+
+    fn cfg(lambda: f64) -> SchedulerConfig {
+        SchedulerConfig {
+            net: NetParams::paper_default(lambda),
+            t_w: 0.2,
+            initial_lambda: lambda,
+        }
+    }
+
+    fn small_sched(scale: u64) -> LevelSchedule {
+        LevelSchedule::paper_nyx_scaled(scale)
+    }
+
+    fn eb_job(id: usize, arrival: f64, weight: u32) -> Job {
+        Job {
+            id,
+            sched: small_sched(2000),
+            contract: JobContract::ErrorBound(1e-7),
+            weight,
+            arrival,
+        }
+    }
+
+    #[test]
+    fn single_job_completes_like_plain_transfer() {
+        let res = run_campaign(&cfg(0.0), vec![eb_job(0, 0.0, 1)], &mut NoLoss);
+        assert_eq!(res.jobs.len(), 1);
+        let j = &res.jobs[0];
+        assert!(j.met_contract);
+        assert_eq!(j.levels_recovered, 4);
+        assert_eq!(j.fragments_lost, 0);
+        // Wire time ≈ fragments/r.
+        let expect = j.fragments_sent as f64 / 19_144.0;
+        assert!((res.makespan - expect).abs() / expect < 0.01);
+        assert!(res.link_utilization > 0.99);
+    }
+
+    #[test]
+    fn weights_partition_the_link() {
+        // Two identical jobs, weights 3:1 — the heavy one finishes well
+        // before the light one.
+        let jobs = vec![eb_job(0, 0.0, 3), eb_job(1, 0.0, 1)];
+        let res = run_campaign(&cfg(0.0), jobs, &mut NoLoss);
+        let (a, b) = (&res.jobs[0], &res.jobs[1]);
+        assert!(
+            a.finish < b.finish * 0.75,
+            "weight-3 job should finish much earlier: {} vs {}",
+            a.finish,
+            b.finish
+        );
+        assert!(a.met_contract && b.met_contract);
+    }
+
+    #[test]
+    fn arrivals_are_respected() {
+        let mut late = eb_job(1, 5.0, 1);
+        late.arrival = 5.0;
+        let res = run_campaign(&cfg(0.0), vec![eb_job(0, 0.0, 1), late], &mut NoLoss);
+        assert!(res.jobs[1].start >= 5.0);
+        assert!(res.jobs[0].finish <= res.jobs[1].finish);
+    }
+
+    #[test]
+    fn error_bound_jobs_survive_loss() {
+        let mut loss = StaticLoss::with_ttl(383.0, 7, 1.0 / 19_144.0);
+        let jobs = vec![eb_job(0, 0.0, 1), eb_job(1, 0.0, 1)];
+        let res = run_campaign(&cfg(383.0), jobs, &mut loss);
+        for j in &res.jobs {
+            assert!(j.met_contract, "job {} failed contract", j.id);
+            assert_eq!(j.levels_recovered, 4);
+        }
+        assert!(res.jobs.iter().any(|j| j.fragments_lost > 0));
+    }
+
+    #[test]
+    fn deadline_job_meets_its_deadline_under_load() {
+        // A deadline job shares the link with a bulk job; its deadline is
+        // counted from its own arrival and must hold despite contention.
+        let sched = small_sched(2000);
+        let bulk = eb_job(0, 0.0, 1);
+        let tau = 2.0;
+        let dl = Job {
+            id: 1,
+            sched: sched.clone(),
+            contract: JobContract::Deadline(tau),
+            weight: 4,
+            arrival: 0.2,
+        };
+        let mut loss = StaticLoss::with_ttl(383.0, 9, 1.0 / 19_144.0);
+        let res = run_campaign(&cfg(383.0), vec![bulk, dl], &mut loss);
+        let j = &res.jobs[1];
+        assert!(j.met_contract, "deadline missed: finish {} τ {}", j.finish, 0.2 + tau);
+        assert!(j.levels_recovered >= 1);
+    }
+
+    #[test]
+    fn shared_lambda_estimate_tracks_network() {
+        let mut loss = StaticLoss::with_ttl(383.0, 11, 1.0 / 19_144.0);
+        let res = run_campaign(
+            &cfg(383.0),
+            vec![eb_job(0, 0.0, 1), eb_job(1, 0.0, 2)],
+            &mut loss,
+        );
+        assert!(!res.lambda_trace.is_empty());
+        let mean: f64 = res.lambda_trace.iter().map(|&(_, l)| l).sum::<f64>()
+            / res.lambda_trace.len() as f64;
+        assert!(
+            (mean - 383.0).abs() / 383.0 < 0.3,
+            "shared λ̂ mean {mean} far from 383"
+        );
+    }
+
+    #[test]
+    fn utilization_accounts_for_idle_gaps() {
+        // One tiny job at t=0, another at t=10: the link idles between.
+        let mut early = eb_job(0, 0.0, 1);
+        early.sched = small_sched(20_000);
+        let mut late = eb_job(1, 10.0, 1);
+        late.sched = small_sched(20_000);
+        let res = run_campaign(&cfg(0.0), vec![early, late], &mut NoLoss);
+        assert!(res.makespan > 10.0);
+        assert!(res.link_utilization < 0.2, "util {}", res.link_utilization);
+    }
+}

@@ -1,0 +1,222 @@
+//! Failure injection against the real coordinator engines: corrupted
+//! datagrams, reordering, silent peers, heavy loss, and contract edges.
+
+use janus::coordinator::{
+    run_receiver, run_sender, run_session, Contract, Packet, ReceiverConfig, SenderConfig,
+};
+use janus::model::params::NetParams;
+use janus::transport::channel::{mem_pair, Datagram, LossyChannel, MemChannel, ReorderChannel};
+use janus::util::Pcg64;
+use std::time::Duration;
+
+fn test_levels(seed: u64) -> (Vec<Vec<u8>>, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let sizes = [30_000usize, 120_000, 240_000, 700_000];
+    let eps = vec![0.004, 0.0005, 0.00006, 0.0000001];
+    (
+        sizes
+            .iter()
+            .map(|&sz| {
+                let mut v = vec![0u8; sz];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect(),
+        eps,
+    )
+}
+
+fn net() -> NetParams {
+    NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 }
+}
+
+fn sender_cfg(contract: Contract) -> SenderConfig {
+    SenderConfig {
+        net: net(),
+        contract,
+        initial_lambda: 0.0,
+        max_duration: Duration::from_secs(30),
+    }
+}
+
+fn receiver_cfg() -> ReceiverConfig {
+    ReceiverConfig {
+        t_w: 0.05,
+        idle_timeout: Duration::from_secs(3),
+        max_duration: Duration::from_secs(30),
+    }
+}
+
+/// Channel wrapper that flips a bit in a fraction of outgoing datagrams
+/// (CRC must catch these — they count as losses, not corruption).
+struct CorruptingChannel<C: Datagram> {
+    inner: C,
+    rng: Pcg64,
+    fraction: f64,
+}
+
+impl<C: Datagram> Datagram for CorruptingChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        if self.rng.bool_with(self.fraction) && buf.len() > 10 {
+            let mut copy = buf.to_vec();
+            let idx = self.rng.range(0, copy.len());
+            copy[idx] ^= 0x10;
+            self.inner.send(&copy);
+        } else {
+            self.inner.send(buf);
+        }
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.inner.try_recv()
+    }
+}
+
+#[test]
+fn corrupted_fragments_are_recovered_via_crc_and_parity() {
+    let (levels, eps) = test_levels(1);
+    let (a, b) = mem_pair();
+    let corrupting = CorruptingChannel { inner: a, rng: Pcg64::seeded(5), fraction: 0.02 };
+    let mut cfg = sender_cfg(Contract::ErrorBound(1e-7));
+    cfg.initial_lambda = 0.02 * cfg.net.r;
+    let (_, r) = run_session(corrupting, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
+    assert_eq!(r.levels_recovered, 4, "corruption must be transparent");
+    for (got, want) in r.levels.iter().zip(&levels) {
+        assert_eq!(got.as_ref().unwrap(), want);
+    }
+}
+
+#[test]
+fn reordered_fragments_are_reassembled() {
+    let (levels, eps) = test_levels(2);
+    let (a, b) = mem_pair();
+    let reorder = ReorderChannel::new(a, 64, 9);
+    let cfg = sender_cfg(Contract::ErrorBound(1e-7));
+    let (_, r) = run_session(reorder, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
+    assert_eq!(r.levels_recovered, 4);
+    for (got, want) in r.levels.iter().zip(&levels) {
+        assert_eq!(got.as_ref().unwrap(), want);
+    }
+}
+
+#[test]
+fn heavy_loss_still_delivers_error_bound_contract() {
+    // 15% loss — way past any reasonable WAN; Alg. 1 must converge via
+    // parity + repeated passive retransmission.
+    let (levels, eps) = test_levels(3);
+    let (a, b) = mem_pair();
+    let lossy = LossyChannel::new(a, 0.15, 21);
+    let mut cfg = sender_cfg(Contract::ErrorBound(1e-7));
+    cfg.initial_lambda = 0.15 * cfg.net.r;
+    let (s, r) = run_session(lossy, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
+    assert_eq!(r.levels_recovered, 4);
+    assert!(s.passes >= 1 || r.groups_recovered > 0);
+    for (got, want) in r.levels.iter().zip(&levels) {
+        assert_eq!(got.as_ref().unwrap(), want);
+    }
+}
+
+#[test]
+fn receiver_times_out_when_sender_never_appears() {
+    let (_a, mut b): (MemChannel, MemChannel) = mem_pair();
+    let cfg = ReceiverConfig {
+        t_w: 0.05,
+        idle_timeout: Duration::from_millis(200),
+        max_duration: Duration::from_secs(2),
+    };
+    let err = run_receiver(&mut b, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "unexpected error: {msg}");
+}
+
+#[test]
+fn sender_fails_cleanly_when_receiver_never_acks() {
+    let (mut a, _b) = mem_pair();
+    let (levels, eps) = test_levels(4);
+    let cfg = sender_cfg(Contract::ErrorBound(1e-7));
+    let err = run_sender(&mut a, &cfg, &levels, &eps).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("acknowledge"), "unexpected error: {msg}");
+}
+
+#[test]
+fn sender_rejects_unachievable_error_bound() {
+    let (mut a, _b) = mem_pair();
+    let (levels, eps) = test_levels(5);
+    let cfg = sender_cfg(Contract::ErrorBound(1e-12)); // below ε_4
+    let err = run_sender(&mut a, &cfg, &levels, &eps).unwrap_err();
+    assert!(format!("{err:#}").contains("unachievable"));
+}
+
+#[test]
+fn sender_rejects_impossible_deadline() {
+    let (mut a, _b) = mem_pair();
+    let (levels, eps) = test_levels(6);
+    let cfg = sender_cfg(Contract::Deadline(1e-9));
+    let err = run_sender(&mut a, &cfg, &levels, &eps).unwrap_err();
+    assert!(format!("{err:#}").contains("infeasible"));
+}
+
+#[test]
+fn garbage_datagrams_are_ignored() {
+    // Blast random bytes at a receiver alongside a real transfer.
+    let (levels, eps) = test_levels(7);
+    let (a, b) = mem_pair();
+
+    struct GarbageInjector<C: Datagram> {
+        inner: C,
+        rng: Pcg64,
+    }
+    impl<C: Datagram> Datagram for GarbageInjector<C> {
+        fn send(&mut self, buf: &[u8]) {
+            if self.rng.bool_with(0.05) {
+                let mut junk = vec![0u8; self.rng.range(1, 64)];
+                self.rng.fill_bytes(&mut junk);
+                self.inner.send(&junk);
+            }
+            self.inner.send(buf);
+        }
+        fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+            self.inner.recv_timeout(timeout)
+        }
+        fn try_recv(&mut self) -> Option<Vec<u8>> {
+            self.inner.try_recv()
+        }
+    }
+
+    let inj = GarbageInjector { inner: a, rng: Pcg64::seeded(13) };
+    let cfg = sender_cfg(Contract::ErrorBound(1e-7));
+    let (_, r) = run_session(inj, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
+    assert_eq!(r.levels_recovered, 4);
+}
+
+#[test]
+fn wire_format_fuzz_never_panics() {
+    // Random byte soup into the packet decoder: errors allowed, panics not.
+    let mut rng = Pcg64::seeded(99);
+    for _ in 0..20_000 {
+        let len = rng.range(0, 256);
+        let mut buf = vec![0u8; len];
+        rng.fill_bytes(&mut buf);
+        let _ = Packet::decode(&buf);
+    }
+    // Truncations of a valid packet.
+    let valid = Packet::Fragment(
+        janus::coordinator::FragmentHeader {
+            level: 1,
+            ftg: 7,
+            index: 3,
+            k: 28,
+            m: 4,
+            seq: 42,
+            pass: 0,
+        },
+        vec![0xAB; 512],
+    )
+    .encode();
+    for cut in 0..valid.len() {
+        let _ = Packet::decode(&valid[..cut]);
+    }
+}

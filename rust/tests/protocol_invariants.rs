@@ -1,0 +1,268 @@
+//! Property-based invariants of the protocol simulators and models
+//! (mini-prop framework; proptest is not in the offline crate set).
+
+use janus::model::params::{LevelSchedule, NetParams};
+use janus::model::prob::{p_unrecoverable, p_unrecoverable_table};
+use janus::model::time_model::{expected_total_time, num_ftgs, optimize_parity};
+use janus::model::{
+    expected_error, feasible_levels, optimize_deadline_exhaustive, transmission_time,
+};
+use janus::sim::{
+    run_guaranteed_error, run_guaranteed_time, DeadlinePolicy, ParityPolicy, StaticLoss,
+};
+use janus::util::prop::{check, no_shrink, PropConfig};
+use janus::util::Pcg64;
+
+fn random_params(rng: &mut Pcg64) -> NetParams {
+    NetParams {
+        t: 0.001 + rng.next_f64() * 0.05,
+        r: 1_000.0 + rng.next_f64() * 50_000.0,
+        lambda: rng.next_f64() * 1_000.0,
+        n: 2 * rng.range(2, 33), // even n, 4..=64
+        s: 1 << rng.range(8, 13),
+    }
+}
+
+fn random_sched(rng: &mut Pcg64) -> LevelSchedule {
+    let levels = rng.range(1, 5);
+    let mut sizes = Vec::new();
+    let mut size = (1u64 << 16) + rng.next_below(1 << 18);
+    let mut eps = Vec::new();
+    let mut e = 0.01 * (1.0 + rng.next_f64());
+    for _ in 0..levels {
+        sizes.push(size);
+        eps.push(e);
+        size *= 2 + rng.next_below(3);
+        e /= 5.0 + rng.next_f64() * 10.0;
+    }
+    LevelSchedule::new(sizes, eps)
+}
+
+#[test]
+fn prop_p_unrecoverable_is_probability_and_monotone_in_m() {
+    check(
+        &PropConfig { cases: 80, ..Default::default() },
+        |rng| {
+            let p = random_params(rng);
+            (p.t, p.r, p.lambda, p.n, p.s)
+        },
+        no_shrink,
+        |&(t, r, lambda, n, s)| {
+            let p = NetParams { t, r, lambda, n, s };
+            let table = p_unrecoverable_table(&p, n / 2);
+            for (m, &v) in table.iter().enumerate() {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!("p({m}) = {v} outside [0,1]"));
+                }
+            }
+            for w in table.windows(2) {
+                if w[1] > w[0] + 1e-12 {
+                    return Err(format!("p not monotone: {table:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_expected_time_at_least_wire_time() {
+    check(
+        &PropConfig { cases: 80, ..Default::default() },
+        |rng| {
+            let p = random_params(rng);
+            let bytes = (1u64 << 20) + rng.next_below(1 << 24);
+            let m = rng.range(0, p.n / 2 + 1);
+            (p.t, p.r, p.lambda, p.n, p.s, bytes, m)
+        },
+        no_shrink,
+        |&(t, r, lambda, n, s, bytes, m)| {
+            let p = NetParams { t, r, lambda, n, s };
+            let groups = num_ftgs(bytes, &p, m);
+            let p_loss = p_unrecoverable(&p, m);
+            let total = expected_total_time(&p, groups, p_loss);
+            let wire = t + (n as f64 * groups - 1.0) / r;
+            if total + 1e-9 < wire {
+                return Err(format!("E[T]={total} < wire time {wire}"));
+            }
+            if !total.is_finite() {
+                return Err("E[T] not finite".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_optimizer_never_worse_than_any_candidate() {
+    check(
+        &PropConfig { cases: 30, ..Default::default() },
+        |rng| {
+            let p = random_params(rng);
+            let bytes = (1u64 << 22) + rng.next_below(1 << 26);
+            let probe_m = rng.range(0, p.n / 2 + 1);
+            (p.t, p.r, p.lambda, p.n, p.s, bytes, probe_m)
+        },
+        no_shrink,
+        |&(t, r, lambda, n, s, bytes, probe_m)| {
+            let p = NetParams { t, r, lambda, n, s };
+            let best = optimize_parity(&p, bytes);
+            let probe_groups = num_ftgs(bytes, &p, probe_m);
+            let probe =
+                expected_total_time(&p, probe_groups, p_unrecoverable(&p, probe_m));
+            if best.expected_time > probe + 1e-9 {
+                return Err(format!(
+                    "optimizer m={} ({}) worse than probe m={probe_m} ({probe})",
+                    best.m, best.expected_time
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deadline_solution_always_feasible() {
+    check(
+        &PropConfig { cases: 25, ..Default::default() },
+        |rng| {
+            let seed = rng.next_u64();
+            seed
+        },
+        no_shrink,
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed);
+            let p = random_params(&mut rng);
+            let sched = random_sched(&mut rng);
+            let min_time = transmission_time(&p, &sched, &vec![0; sched.num_levels()]);
+            let tau = min_time * (0.3 + rng.next_f64() * 2.0);
+            match optimize_deadline_exhaustive(&p, &sched, tau) {
+                Some(opt) => {
+                    if opt.time > tau + 1e-9 {
+                        return Err(format!("solution time {} > τ {tau}", opt.time));
+                    }
+                    if opt.m.len() != opt.levels {
+                        return Err("plan length != levels".into());
+                    }
+                    let feas = feasible_levels(&p, &sched, tau);
+                    if !feas.contains(&opt.levels) {
+                        return Err(format!("levels {} not feasible {feas:?}", opt.levels));
+                    }
+                    // E[ε] within [min ε, 1].
+                    if opt.expected_error > 1.0 + 1e-9 {
+                        return Err(format!("E[ε] = {} > 1", opt.expected_error));
+                    }
+                    Ok(())
+                }
+                None => {
+                    // Infeasible only if even l=1 with m=0 misses τ.
+                    let t1 = transmission_time(&p, &sched, &[0]);
+                    if t1 <= tau {
+                        return Err(format!("τ={tau} feasible (t1={t1}) but solver said no"));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_expected_error_is_convex_combination() {
+    check(
+        &PropConfig { cases: 60, ..Default::default() },
+        |rng| rng.next_u64(),
+        no_shrink,
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed);
+            let sched = random_sched(&mut rng);
+            let l = sched.num_levels();
+            let probs: Vec<f64> = (0..l).map(|_| rng.next_f64() * 0.2).collect();
+            let groups: Vec<f64> = (0..l).map(|_| 1.0 + rng.next_f64() * 1e4).collect();
+            let e = expected_error(&sched, &probs, &groups);
+            let lo = sched.eps_with_levels(l);
+            if !(lo - 1e-12..=1.0 + 1e-12).contains(&e) {
+                return Err(format!("E[ε]={e} outside [{lo}, 1]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_guaranteed_error_always_delivers() {
+    // Fundamental Alg. 1 invariant: whatever the loss rate, the transfer
+    // terminates with every required FTG recovered (fragment accounting
+    // balances).
+    check(
+        &PropConfig { cases: 12, ..Default::default() },
+        |rng| {
+            (
+                rng.next_u64(),
+                [19.0, 383.0, 957.0][rng.range(0, 3)],
+                rng.range(0, 9),
+            )
+        },
+        no_shrink,
+        |&(seed, lambda, m)| {
+            let p = NetParams::paper_default(lambda);
+            let sched = LevelSchedule::paper_nyx_scaled(2000);
+            let mut loss = StaticLoss::with_ttl(lambda, seed, 1.0 / p.r);
+            let res = run_guaranteed_error(&mut loss, &p, &sched, 4, &ParityPolicy::Static(m));
+            if !res.total_time.is_finite() || res.total_time <= 0.0 {
+                return Err(format!("bad total time {}", res.total_time));
+            }
+            // Fragments sent ≥ data fragments needed.
+            let data_frags = sched.total_bytes(4).div_ceil(p.s as u64);
+            let min_sent = data_frags as f64 * (p.n as f64 / (p.n - m) as f64);
+            if (res.fragments_sent as f64) < min_sent * 0.999 {
+                return Err(format!(
+                    "sent {} < minimum {min_sent:.0}",
+                    res.fragments_sent
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_deadline_never_exceeds_tau_meaningfully() {
+    check(
+        &PropConfig { cases: 12, ..Default::default() },
+        |rng| (rng.next_u64(), [19.0, 383.0, 957.0][rng.range(0, 3)]),
+        no_shrink,
+        |&(seed, lambda)| {
+            let p = NetParams::paper_default(lambda);
+            let sched = LevelSchedule::paper_nyx_scaled(2000);
+            let tau = 0.25; // generous for the scaled workload
+            let mut loss = StaticLoss::with_ttl(lambda, seed, 1.0 / p.r);
+            match run_guaranteed_time(
+                &mut loss,
+                &p,
+                &sched,
+                tau,
+                &DeadlinePolicy::Adaptive { t_w: 0.05, initial_lambda: lambda },
+            ) {
+                Some(res) => {
+                    if res.total_time > tau * 1.05 + 2.0 * p.t {
+                        return Err(format!("time {} ≫ τ {tau}", res.total_time));
+                    }
+                    if res.levels_recovered > res.levels_sent {
+                        return Err("recovered more levels than sent".into());
+                    }
+                    // Achieved ε consistent with recovered prefix.
+                    let want = sched.eps_with_levels(res.levels_recovered);
+                    if (res.achieved_eps - want).abs() > 1e-12 {
+                        return Err(format!(
+                            "ε mismatch: {} vs {want}",
+                            res.achieved_eps
+                        ));
+                    }
+                    Ok(())
+                }
+                None => Err("τ unexpectedly infeasible".into()),
+            }
+        },
+    );
+}

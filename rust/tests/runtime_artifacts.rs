@@ -1,0 +1,130 @@
+//! Integration: PJRT-loaded HLO artifacts vs the native Rust refactorer.
+//!
+//! This is the cross-layer correctness seal: the artifacts were authored
+//! by JAX+Pallas (L2/L1), and the Rust mirror must agree bit-for-bit (to
+//! f32 tolerance) when executed through the `xla` crate's PJRT client —
+//! proving the three layers compose.
+//!
+//! Requires `make artifacts` (the default D=64, L=4 set).
+
+use janus::refactor::{decompose, generate, reconstruct, GrfConfig, Volume};
+use janus::runtime::{default_artifact_dir, F32Input, Runtime};
+
+const D: usize = 64;
+const L: usize = 4;
+
+fn runtime() -> Runtime {
+    let dir = default_artifact_dir();
+    assert!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts missing at {dir:?} — run `make artifacts` first"
+    );
+    Runtime::open(dir).expect("open artifact runtime")
+}
+
+fn test_volume(seed: u64) -> Volume {
+    generate(D, &GrfConfig::default(), seed)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+#[test]
+fn artifact_refactor_matches_native() {
+    let mut rt = runtime();
+    let vol = test_volume(11);
+    let name = format!("refactor_d{D}_l{L}");
+    let outs = rt
+        .run_f32(&name, &[F32Input::shaped(&vol.data, &[D, D, D])])
+        .expect("run refactor artifact");
+    assert_eq!(outs.len(), L, "one buffer per level");
+    let native = decompose(&vol, L);
+    for (i, (pjrt, nat)) in outs.iter().zip(&native).enumerate() {
+        assert_close(pjrt, nat, 1e-4, &format!("level {}", i + 1));
+    }
+}
+
+#[test]
+fn artifact_reconstruct_full_roundtrip() {
+    let mut rt = runtime();
+    let vol = test_volume(12);
+    let refactor_name = format!("refactor_d{D}_l{L}");
+    let levels = rt
+        .run_f32(&refactor_name, &[F32Input::shaped(&vol.data, &[D, D, D])])
+        .unwrap();
+    let recon_name = format!("reconstruct_d{D}_l{L}_u{L}");
+    let inputs: Vec<F32Input> = levels.iter().map(|l| F32Input::vec(l)).collect();
+    let out = rt.run_f32(&recon_name, &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_close(&out[0], &vol.data, 2e-4, "full reconstruction");
+}
+
+#[test]
+fn artifact_progressive_reconstruction_matches_native_and_ladder() {
+    let mut rt = runtime();
+    let vol = test_volume(13);
+    let native_levels = decompose(&vol, L);
+    let mut prev_err = f64::INFINITY;
+    for used in 1..=L {
+        let name = format!("reconstruct_d{D}_l{L}_u{used}");
+        let inputs: Vec<F32Input> = native_levels[..used]
+            .iter()
+            .map(|l| F32Input::vec(l))
+            .collect();
+        let out = rt.run_f32(&name, &inputs).unwrap();
+        // Native mirror agrees with the artifact.
+        let refs: Vec<&[f32]> = native_levels[..used].iter().map(|l| l.as_slice()).collect();
+        let native = reconstruct(&refs, used, L, D);
+        assert_close(&out[0], &native.data, 2e-4, &format!("reconstruct u={used}"));
+        // And the ε ladder decreases.
+        let approx = Volume::new(D, out[0].clone());
+        let err = vol.linf_rel_error(&approx);
+        assert!(err < prev_err, "ε did not decrease at u={used}: {err} vs {prev_err}");
+        prev_err = err;
+    }
+    assert!(prev_err < 1e-4, "full reconstruction ε too high: {prev_err}");
+}
+
+#[test]
+fn artifact_error_metric_matches_native() {
+    let mut rt = runtime();
+    let a = test_volume(14);
+    let mut b = a.clone();
+    for v in b.data.iter_mut().take(1000) {
+        *v += 0.01;
+    }
+    let name = format!("linf_error_d{D}");
+    let out = rt
+        .run_f32(
+            &name,
+            &[
+                F32Input::shaped(&a.data, &[D, D, D]),
+                F32Input::shaped(&b.data, &[D, D, D]),
+            ],
+        )
+        .unwrap();
+    let native = a.linf_rel_error(&Volume::new(D, b.data.clone())) as f32;
+    assert!(
+        (out[0][0] - native).abs() < 1e-6,
+        "pjrt {} vs native {native}",
+        out[0][0]
+    );
+}
+
+#[test]
+fn manifest_exposes_expected_artifacts() {
+    let rt = runtime();
+    let names = rt.names();
+    assert!(names.contains(&format!("refactor_d{D}_l{L}").as_str()));
+    for u in 1..=L {
+        assert!(names.contains(&format!("reconstruct_d{D}_l{L}_u{u}").as_str()));
+    }
+    assert_eq!(rt.arity(&format!("refactor_d{D}_l{L}")), Some(1));
+    assert_eq!(rt.arity(&format!("reconstruct_d{D}_l{L}_u3")), Some(3));
+}
