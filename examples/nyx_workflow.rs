@@ -26,7 +26,7 @@ use janus::sim::{
 const D: usize = 64;
 const L: usize = 4;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> janus::util::err::Result<()> {
     let seed = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         tau,
         &DeadlinePolicy::Adaptive { t_w: 3.0, initial_lambda: 383.0 },
     )
-    .ok_or_else(|| anyhow::anyhow!("τ infeasible"))?;
+    .ok_or_else(|| janus::anyhow!("τ infeasible"))?;
     println!(
         "[3b] Alg.2 (τ = {tau:.3}s): finished {:.3}s, recovered {}/{} levels",
         res2.total_time, res2.levels_recovered, res2.levels_sent

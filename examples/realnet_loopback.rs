@@ -16,7 +16,7 @@ use janus::refactor::{decompose, generate, levels_to_bytes, reconstruct, GrfConf
 use janus::transport::{udp_pair, LossyChannel};
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> janus::util::err::Result<()> {
     let dim = 64;
     let vol = generate(dim, &GrfConfig::default(), 7);
     let levels = decompose(&vol, 4);

@@ -16,7 +16,7 @@ use janus::workflow::{run_campaign, Job, JobContract, SchedulerConfig};
 
 fn main() {
     let net = NetParams::paper_default(383.0);
-    let cfg = SchedulerConfig { net, t_w: 3.0, initial_lambda: 383.0 };
+    let cfg = SchedulerConfig { net, t_w: 3.0, initial_lambda: 383.0, streams: 1 };
     let sched_big = LevelSchedule::paper_nyx_scaled(200); // ~134 MB each
     let sched_small = LevelSchedule::paper_nyx_scaled(1000); // ~27 MB each
 

@@ -20,7 +20,7 @@ use janus::transport::{udp_pair, LossyChannel};
 use janus::util::{stats, Pcg64};
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> janus::util::err::Result<()> {
     // Real-socket workload: scaled-down level schedule carried as bytes.
     let scale = bench_scale(1000); // 26.75 GB / 1000 ≈ 27 MB on loopback
     let sched = LevelSchedule::paper_nyx_scaled(scale);

@@ -85,7 +85,7 @@ fn main() {
     );
 
     // --- Wire format ---
-    let hdr = FragmentHeader { level: 1, ftg: 9, index: 3, k: 28, m: 4, seq: 77, pass: 0 };
+    let hdr = FragmentHeader { level: 1, stream: 0, ftg: 9, index: 3, k: 28, m: 4, seq: 77, pass: 0 };
     let payload = vec![0xABu8; 4096];
     let mut out = Vec::with_capacity(4200);
     let reps = 300_000;

@@ -1,0 +1,154 @@
+//! Multi-stream TransferPool throughput vs the single-stream session
+//! path (acceptance gate: ≥ 2× aggregate encode+transfer throughput on
+//! the same input with 4 streams).
+//!
+//! Both paths carry the same dataset over in-memory channels with the
+//! same per-stream pacing rate; the pool's win comes from N concurrent
+//! paced endpoints and N parallel Reed–Solomon encoders — exactly the
+//! Petascale-DTN many-streams effect the tentpole reproduces. A second
+//! table isolates the encode side via `measure_parallel_ec_rate`.
+
+use janus::coordinator::{
+    run_session, Contract, PoolConfig, ReceiverConfig, SenderConfig, TransferPool,
+};
+use janus::erasure::{measure_ec_rate, measure_parallel_ec_rate};
+use janus::metrics::bench::{bench_runs, bench_scale, BenchTable};
+use janus::model::NetParams;
+use janus::testkit::{pool_fixture, LossTrace};
+use janus::transport::channel::mem_pair;
+use janus::util::{stats, Pcg64};
+use std::time::{Duration, Instant};
+
+fn dataset(total: usize) -> (Vec<Vec<u8>>, Vec<f64>) {
+    let mut rng = Pcg64::seeded(0x9001);
+    let sizes = [total / 10, total * 3 / 10, total * 6 / 10];
+    let eps = vec![0.004, 0.0005, 0.0000001];
+    (
+        sizes
+            .iter()
+            .map(|&sz| {
+                let mut v = vec![0u8; sz.max(1)];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect(),
+        eps,
+    )
+}
+
+fn main() {
+    // Default ≈ 12 MB; JANUS_SCALE=1 runs ~120 MB.
+    let scale = bench_scale(10);
+    let runs = bench_runs(3);
+    let total = 120 * 1024 * 1024 / scale as usize;
+    let (levels, eps) = dataset(total);
+    let bytes: usize = levels.iter().map(|l| l.len()).sum();
+    let per_stream_rate = 100_000.0; // fragments/s, 4 KiB each
+    let net = NetParams { t: 0.0005, r: per_stream_rate, lambda: 0.0, n: 32, s: 4096 };
+    println!(
+        "pool_throughput: {:.1} MB dataset, per-stream rate {per_stream_rate:.0} frag/s, {runs} runs",
+        bytes as f64 / 1e6
+    );
+
+    let mut table = BenchTable::new(
+        "pool_throughput",
+        vec!["path", "MB_per_s", "wall_s", "passes"],
+    );
+    table.header();
+
+    // --- Single-stream baseline: the plain session engine. ---
+    let mut single_mbps = Vec::new();
+    for _ in 0..runs {
+        let (a, b) = mem_pair();
+        let scfg = SenderConfig {
+            net,
+            contract: Contract::ErrorBound(1e-7),
+            initial_lambda: 0.0,
+            max_duration: Duration::from_secs(600),
+        };
+        let rcfg = ReceiverConfig {
+            t_w: 0.25,
+            idle_timeout: Duration::from_secs(30),
+            max_duration: Duration::from_secs(600),
+        };
+        let t0 = Instant::now();
+        let (_s, r) = run_session(a, b, scfg, rcfg, levels.clone(), eps.clone()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(r.levels_recovered, 3, "baseline must deliver");
+        single_mbps.push(bytes as f64 / 1e6 / wall);
+    }
+    table.row(
+        "single-stream session",
+        vec![BenchTable::cell(&single_mbps), "-".into(), "0".into()],
+    );
+
+    // --- Pool at 1, 2, 4, 8 streams. ---
+    let pool_mbps_at = |streams: usize| -> Vec<f64> {
+        let mut out = Vec::new();
+        for _ in 0..runs {
+            let pool = TransferPool::new(PoolConfig {
+                net,
+                streams,
+                error_bound: 1e-7,
+                initial_lambda: 0.0,
+                max_duration: Duration::from_secs(600),
+            })
+            .unwrap();
+            let (mut sc, sd, mut rc, rd) = pool_fixture(streams, |_| LossTrace::None);
+            let rcfg = ReceiverConfig {
+                t_w: 0.25,
+                idle_timeout: Duration::from_secs(30),
+                max_duration: Duration::from_secs(600),
+            };
+            let t0 = Instant::now();
+            let (s_rep, r_rep) = pool
+                .run_session(&mut sc, sd, &mut rc, rd, &rcfg, &levels, &eps)
+                .unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            assert_eq!(r_rep.levels_recovered, 3, "pool must deliver");
+            assert_eq!(s_rep.passes, 0);
+            out.push(bytes as f64 / 1e6 / wall);
+        }
+        out
+    };
+    let mut by_streams = Vec::new();
+    for streams in [1usize, 2, 4, 8] {
+        let mbps = pool_mbps_at(streams);
+        table.row(
+            format!("pool {streams} streams"),
+            vec![BenchTable::cell(&mbps), "-".into(), "0".into()],
+        );
+        by_streams.push((streams, stats::median(&mbps)));
+    }
+    table.save().unwrap();
+
+    // --- Encode-side isolation: parallel worker-pool RS throughput. ---
+    let mut enc = BenchTable::new(
+        "pool_encode_scaling",
+        vec!["workers", "frag_per_s", "speedup"],
+    );
+    enc.header();
+    let base = measure_ec_rate(32, 8, 4096, 0.3, 1).fragments_per_sec;
+    enc.row("1", vec![format!("{base:.0}"), "1.00x".into()]);
+    for workers in [2usize, 4, 8] {
+        let r = measure_parallel_ec_rate(32, 8, 4096, 0.3, 1, workers).fragments_per_sec;
+        enc.row(
+            format!("{workers}"),
+            vec![format!("{r:.0}"), format!("{:.2}x", r / base)],
+        );
+    }
+    enc.save().unwrap();
+
+    // --- Acceptance gates ---
+    let single = stats::median(&single_mbps);
+    let four = by_streams.iter().find(|&&(s, _)| s == 4).unwrap().1;
+    println!(
+        "\nsingle-stream {single:.1} MB/s vs pool×4 {four:.1} MB/s ({:.2}x)",
+        four / single
+    );
+    assert!(
+        four >= 2.0 * single,
+        "pool×4 ({four:.1} MB/s) must be ≥ 2× single-stream ({single:.1} MB/s)"
+    );
+    println!("pool_throughput complete.");
+}

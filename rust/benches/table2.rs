@@ -13,7 +13,7 @@ use janus::transport::{udp_pair, LossyChannel};
 use janus::util::Pcg64;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> janus::util::err::Result<()> {
     let scale = bench_scale(1000);
     let sched = LevelSchedule::paper_nyx_scaled(scale);
     let eps = sched.eps.clone();

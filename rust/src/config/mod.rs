@@ -77,6 +77,17 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got {v:?}")))
             .unwrap_or(default)
     }
+
+    /// Integer option constrained to an inclusive range (e.g. `--streams`
+    /// for the transfer pool, which the wire format caps at 255).
+    pub fn get_usize_in(&self, name: &str, default: usize, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = self.get_usize(name, default);
+        if !(lo..=hi).contains(&v) {
+            panic!("--{name} must be in {lo}..={hi}, got {v}");
+        }
+        v
+    }
 }
 
 #[cfg(test)]
@@ -124,5 +135,18 @@ mod tests {
     #[should_panic(expected = "must be a number")]
     fn bad_number_panics() {
         parse("x --lambda abc").get_f64("lambda", 0.0);
+    }
+
+    #[test]
+    fn ranged_getter_accepts_in_range() {
+        let a = parse("pool --streams 8");
+        assert_eq!(a.get_usize_in("streams", 4, 1, 255), 8);
+        assert_eq!(a.get_usize_in("missing", 4, 1, 255), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be in 1..=255")]
+    fn ranged_getter_rejects_out_of_range() {
+        parse("pool --streams 0").get_usize_in("streams", 4, 1, 255);
     }
 }

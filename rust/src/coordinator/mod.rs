@@ -9,13 +9,20 @@
 //! * [`receiver`] — FTG reassembly, Reed–Solomon recovery, λ measurement
 //!   window, lost-FTG feedback.
 //! * [`session`] — run a sender/receiver pair over connected channels.
+//! * [`pool`] — multi-stream parallel transfer engine ([`pool::TransferPool`]):
+//!   N sender workers with per-stream paced endpoints and worker-pool RS
+//!   encoding, a demultiplexing receiver, and one shared λ̂ estimator.
 
 pub mod packet;
+pub mod pool;
 pub mod receiver;
 pub mod sender;
 pub mod session;
 
 pub use packet::{FragmentHeader, Manifest, Packet, WireError};
+pub use pool::{
+    PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport, RecvPassRecord, TransferPool,
+};
 pub use receiver::{run_receiver, ReceiverConfig, ReceiverReport};
 pub use sender::{run_sender, Contract, SenderConfig, SenderReport};
 pub use session::run_session;

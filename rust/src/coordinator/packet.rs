@@ -5,12 +5,24 @@
 //! use a hand-rolled fixed layout (little-endian) with a CRC32 trailer:
 //! no proto toolchain in the offline environment, and a fixed layout
 //! keeps the per-packet encode/decode cost off the hot path's heap.
+//!
+//! Multi-stream extension: every fragment carries a `stream` id so a
+//! [`crate::coordinator::pool::TransferPool`] receiver can demultiplex N
+//! concurrent sender workers, and the control plane gains per-stream
+//! end-of-pass markers ([`Packet::StreamEnd`]) plus aggregate pass loss
+//! statistics ([`Packet::PassStats`]) feeding the shared λ̂ estimator.
 
-use crc32fast::Hasher;
+use crate::util::crc32::Hasher;
 
 /// Maximum datagram we ever emit (fragment header + 4 KiB payload fits
 /// comfortably; control messages are small).
 pub const MAX_DATAGRAM: usize = 9 * 1024;
+
+/// Largest lost-FTG count one [`Packet::LostList`] may carry: senders of
+/// the list truncate to this so the datagram always fits [`MAX_DATAGRAM`]
+/// (kind + pass + count + 5 bytes/entry + CRC). The remainder is simply
+/// reported on the next pass — passes iterate until the list drains.
+pub const MAX_LOST_PER_MSG: usize = 1500;
 
 /// A parsed Janus packet.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,14 +33,21 @@ pub enum Packet {
     LambdaUpdate { lambda: f64 },
     /// Sender → receiver: pass `pass` finished (0 = initial transmission).
     EndOfPass { pass: u32 },
-    /// Receiver → sender: FTGs with unrecoverable losses in this pass.
-    LostList { ftgs: Vec<(u8, u32)> },
+    /// Receiver → sender: FTGs with unrecoverable losses after `pass`
+    /// (the tag lets retried end-of-pass exchanges discard stale lists).
+    LostList { pass: u32, ftgs: Vec<(u8, u32)> },
     /// Receiver → sender: transfer complete.
     Done,
     /// Sender → receiver: transfer manifest (must precede fragments).
     Manifest(Manifest),
     /// Receiver → sender: manifest acknowledged, start sending.
     ManifestAck,
+    /// Sender → receiver, per data stream: stream `stream` has finished
+    /// transmitting pass `pass` after sending `sent` fragments in it.
+    StreamEnd { stream: u8, pass: u32, sent: u64 },
+    /// Receiver → sender: of the `expected` fragments announced for
+    /// `pass`, `received` survived the wire (λ̂ input at the sender).
+    PassStats { pass: u32, expected: u64, received: u64 },
 }
 
 /// Fragment metadata (the paper's per-packet erasure-coding metadata).
@@ -36,6 +55,9 @@ pub enum Packet {
 pub struct FragmentHeader {
     /// Refactoring level this fragment belongs to (0-based).
     pub level: u8,
+    /// Sender stream that paced this fragment (0 for single-stream
+    /// sessions; the pool demultiplexes on this).
+    pub stream: u8,
     /// FTG index within the level.
     pub ftg: u32,
     /// Fragment index within the FTG: `0..k` data, `k..k+m` parity.
@@ -44,7 +66,7 @@ pub struct FragmentHeader {
     pub k: u8,
     /// Parity fragments in this FTG (the redundancy metadata of §4.2).
     pub m: u8,
-    /// Global wire sequence number (loss detection at the receiver).
+    /// Per-stream wire sequence number (loss detection at the receiver).
     pub seq: u64,
     /// Retransmission pass that produced this copy.
     pub pass: u32,
@@ -57,6 +79,8 @@ pub struct Manifest {
     pub n: u8,
     /// Fragment payload size in bytes.
     pub s: u32,
+    /// Concurrent sender streams (1 for plain sessions).
+    pub streams: u8,
     /// Per-level (byte size, ε) pairs, in transmission order.
     pub levels: Vec<(u64, f64)>,
     /// Contract: 0 = guaranteed error bound (Alg. 1, retransmission on),
@@ -71,11 +95,23 @@ const KIND_LOST: u8 = 4;
 const KIND_DONE: u8 = 5;
 const KIND_MANIFEST: u8 = 6;
 const KIND_MANIFEST_ACK: u8 = 7;
+const KIND_STREAM_END: u8 = 8;
+const KIND_PASS_STATS: u8 = 9;
+
+/// Fragment wire header length after the kind byte.
+const FRAGMENT_HEADER: usize = 1 + 1 + 4 + 1 + 1 + 1 + 8 + 4 + 4;
 
 fn crc(buf: &[u8]) -> u32 {
     let mut h = Hasher::new();
     h.update(buf);
     h.finalize()
+}
+
+/// Cheap peek: is this (unvalidated) datagram a data fragment? Loss
+/// injectors use it to drop only the data path, like the paper's WAN
+/// substitute — control packets model a reliable side channel.
+pub fn is_fragment(buf: &[u8]) -> bool {
+    buf.first() == Some(&KIND_FRAGMENT)
 }
 
 /// Serialize a fragment without constructing a [`Packet`] (the sender hot
@@ -84,6 +120,7 @@ pub fn encode_fragment_into(h: &FragmentHeader, payload: &[u8], out: &mut Vec<u8
     out.clear();
     out.push(KIND_FRAGMENT);
     out.push(h.level);
+    out.push(h.stream);
     out.extend_from_slice(&h.ftg.to_le_bytes());
     out.push(h.index);
     out.push(h.k);
@@ -97,15 +134,24 @@ pub fn encode_fragment_into(h: &FragmentHeader, payload: &[u8], out: &mut Vec<u8
 }
 
 /// Packet (de)serialization error.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum WireError {
-    #[error("datagram too short ({0} bytes)")]
     Truncated(usize),
-    #[error("bad checksum")]
     BadChecksum,
-    #[error("unknown packet kind {0}")]
     UnknownKind(u8),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated(n) => write!(f, "datagram too short ({n} bytes)"),
+            WireError::BadChecksum => write!(f, "bad checksum"),
+            WireError::UnknownKind(k) => write!(f, "unknown packet kind {k}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 impl Packet {
     /// Serialize into a fresh buffer.
@@ -122,6 +168,7 @@ impl Packet {
             Packet::Fragment(h, payload) => {
                 out.push(KIND_FRAGMENT);
                 out.push(h.level);
+                out.push(h.stream);
                 out.extend_from_slice(&h.ftg.to_le_bytes());
                 out.push(h.index);
                 out.push(h.k);
@@ -139,8 +186,9 @@ impl Packet {
                 out.push(KIND_END);
                 out.extend_from_slice(&pass.to_le_bytes());
             }
-            Packet::LostList { ftgs } => {
+            Packet::LostList { pass, ftgs } => {
                 out.push(KIND_LOST);
+                out.extend_from_slice(&pass.to_le_bytes());
                 out.extend_from_slice(&(ftgs.len() as u32).to_le_bytes());
                 for &(level, ftg) in ftgs {
                     out.push(level);
@@ -153,6 +201,7 @@ impl Packet {
                 out.push(m.n);
                 out.extend_from_slice(&m.s.to_le_bytes());
                 out.push(m.contract);
+                out.push(m.streams);
                 out.extend_from_slice(&(m.levels.len() as u32).to_le_bytes());
                 for &(size, eps) in &m.levels {
                     out.extend_from_slice(&size.to_le_bytes());
@@ -160,6 +209,18 @@ impl Packet {
                 }
             }
             Packet::ManifestAck => out.push(KIND_MANIFEST_ACK),
+            Packet::StreamEnd { stream, pass, sent } => {
+                out.push(KIND_STREAM_END);
+                out.push(*stream);
+                out.extend_from_slice(&pass.to_le_bytes());
+                out.extend_from_slice(&sent.to_le_bytes());
+            }
+            Packet::PassStats { pass, expected, received } => {
+                out.push(KIND_PASS_STATS);
+                out.extend_from_slice(&pass.to_le_bytes());
+                out.extend_from_slice(&expected.to_le_bytes());
+                out.extend_from_slice(&received.to_le_bytes());
+            }
         }
         let c = crc(out);
         out.extend_from_slice(&c.to_le_bytes());
@@ -186,21 +247,22 @@ impl Packet {
         };
         match kind {
             KIND_FRAGMENT => {
-                need(1 + 4 + 1 + 1 + 1 + 8 + 4 + 4)?;
+                need(FRAGMENT_HEADER)?;
                 let level = rest[0];
-                let ftg = u32::from_le_bytes(rest[1..5].try_into().unwrap());
-                let index = rest[5];
-                let k = rest[6];
-                let m = rest[7];
-                let seq = u64::from_le_bytes(rest[8..16].try_into().unwrap());
-                let pass = u32::from_le_bytes(rest[16..20].try_into().unwrap());
-                let len = u32::from_le_bytes(rest[20..24].try_into().unwrap()) as usize;
-                if rest.len() < 24 + len {
+                let stream = rest[1];
+                let ftg = u32::from_le_bytes(rest[2..6].try_into().unwrap());
+                let index = rest[6];
+                let k = rest[7];
+                let m = rest[8];
+                let seq = u64::from_le_bytes(rest[9..17].try_into().unwrap());
+                let pass = u32::from_le_bytes(rest[17..21].try_into().unwrap());
+                let len = u32::from_le_bytes(rest[21..25].try_into().unwrap()) as usize;
+                if rest.len() < FRAGMENT_HEADER + len {
                     return Err(WireError::Truncated(buf.len()));
                 }
                 Ok(Packet::Fragment(
-                    FragmentHeader { level, ftg, index, k, m, seq, pass },
-                    rest[24..24 + len].to_vec(),
+                    FragmentHeader { level, stream, ftg, index, k, m, seq, pass },
+                    rest[FRAGMENT_HEADER..FRAGMENT_HEADER + len].to_vec(),
                 ))
             }
             KIND_LAMBDA => {
@@ -216,38 +278,56 @@ impl Packet {
                 })
             }
             KIND_LOST => {
-                need(4)?;
-                let count = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
-                need(4 + count * 5)?;
+                need(8)?;
+                let pass = u32::from_le_bytes(rest[..4].try_into().unwrap());
+                let count = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+                need(8 + count * 5)?;
                 let mut ftgs = Vec::with_capacity(count);
                 for i in 0..count {
-                    let off = 4 + i * 5;
+                    let off = 8 + i * 5;
                     ftgs.push((
                         rest[off],
                         u32::from_le_bytes(rest[off + 1..off + 5].try_into().unwrap()),
                     ));
                 }
-                Ok(Packet::LostList { ftgs })
+                Ok(Packet::LostList { pass, ftgs })
             }
             KIND_DONE => Ok(Packet::Done),
             KIND_MANIFEST => {
-                need(1 + 4 + 1 + 4)?;
+                need(1 + 4 + 1 + 1 + 4)?;
                 let n = rest[0];
                 let s = u32::from_le_bytes(rest[1..5].try_into().unwrap());
                 let contract = rest[5];
-                let count = u32::from_le_bytes(rest[6..10].try_into().unwrap()) as usize;
-                need(10 + count * 16)?;
+                let streams = rest[6];
+                let count = u32::from_le_bytes(rest[7..11].try_into().unwrap()) as usize;
+                need(11 + count * 16)?;
                 let mut levels = Vec::with_capacity(count);
                 for i in 0..count {
-                    let off = 10 + i * 16;
+                    let off = 11 + i * 16;
                     levels.push((
                         u64::from_le_bytes(rest[off..off + 8].try_into().unwrap()),
                         f64::from_le_bytes(rest[off + 8..off + 16].try_into().unwrap()),
                     ));
                 }
-                Ok(Packet::Manifest(Manifest { n, s, levels, contract }))
+                Ok(Packet::Manifest(Manifest { n, s, streams, levels, contract }))
             }
             KIND_MANIFEST_ACK => Ok(Packet::ManifestAck),
+            KIND_STREAM_END => {
+                need(1 + 4 + 8)?;
+                Ok(Packet::StreamEnd {
+                    stream: rest[0],
+                    pass: u32::from_le_bytes(rest[1..5].try_into().unwrap()),
+                    sent: u64::from_le_bytes(rest[5..13].try_into().unwrap()),
+                })
+            }
+            KIND_PASS_STATS => {
+                need(4 + 8 + 8)?;
+                Ok(Packet::PassStats {
+                    pass: u32::from_le_bytes(rest[..4].try_into().unwrap()),
+                    expected: u64::from_le_bytes(rest[4..12].try_into().unwrap()),
+                    received: u64::from_le_bytes(rest[12..20].try_into().unwrap()),
+                })
+            }
             k => Err(WireError::UnknownKind(k)),
         }
     }
@@ -267,7 +347,16 @@ mod tests {
     #[test]
     fn fragment_roundtrip() {
         roundtrip(Packet::Fragment(
-            FragmentHeader { level: 2, ftg: 12345, index: 31, k: 24, m: 8, seq: 987654321, pass: 3 },
+            FragmentHeader {
+                level: 2,
+                stream: 5,
+                ftg: 12345,
+                index: 31,
+                k: 24,
+                m: 8,
+                seq: 987654321,
+                pass: 3,
+            },
             vec![0xAB; 4096],
         ));
     }
@@ -275,7 +364,7 @@ mod tests {
     #[test]
     fn empty_payload_fragment() {
         roundtrip(Packet::Fragment(
-            FragmentHeader { level: 0, ftg: 0, index: 0, k: 1, m: 0, seq: 0, pass: 0 },
+            FragmentHeader { level: 0, stream: 0, ftg: 0, index: 0, k: 1, m: 0, seq: 0, pass: 0 },
             vec![],
         ));
     }
@@ -284,16 +373,24 @@ mod tests {
     fn control_roundtrips() {
         roundtrip(Packet::LambdaUpdate { lambda: 383.25 });
         roundtrip(Packet::EndOfPass { pass: 7 });
-        roundtrip(Packet::LostList { ftgs: vec![(0, 1), (3, 99999)] });
-        roundtrip(Packet::LostList { ftgs: vec![] });
+        roundtrip(Packet::LostList { pass: 2, ftgs: vec![(0, 1), (3, 99999)] });
+        roundtrip(Packet::LostList { pass: 0, ftgs: vec![] });
+        // A maximally-sized lost list must fit one datagram.
+        roundtrip(Packet::LostList {
+            pass: 9,
+            ftgs: (0..MAX_LOST_PER_MSG).map(|i| (3u8, i as u32)).collect(),
+        });
         roundtrip(Packet::Done);
         roundtrip(Packet::ManifestAck);
         roundtrip(Packet::Manifest(Manifest {
             n: 32,
             s: 4096,
+            streams: 4,
             levels: vec![(668 << 20, 0.004), (2867 << 20, 0.0005)],
             contract: 1,
         }));
+        roundtrip(Packet::StreamEnd { stream: 3, pass: 2, sent: 123_456 });
+        roundtrip(Packet::PassStats { pass: 1, expected: 50_000, received: 49_500 });
     }
 
     #[test]
@@ -333,5 +430,26 @@ mod tests {
         Packet::LambdaUpdate { lambda: 2.0 }.encode_into(&mut buf);
         assert_ne!(buf.len(), len1);
         assert_eq!(Packet::decode(&buf).unwrap(), Packet::LambdaUpdate { lambda: 2.0 });
+    }
+
+    #[test]
+    fn fragment_fast_path_matches_enum_encoding() {
+        let h = FragmentHeader {
+            level: 1,
+            stream: 2,
+            ftg: 42,
+            index: 7,
+            k: 28,
+            m: 4,
+            seq: 1_000_000,
+            pass: 1,
+        };
+        let payload = vec![0x5Au8; 777];
+        let mut fast = Vec::new();
+        encode_fragment_into(&h, &payload, &mut fast);
+        assert_eq!(fast, Packet::Fragment(h, payload).encode());
+        assert!(is_fragment(&fast));
+        assert!(!is_fragment(&Packet::Done.encode()));
+        assert!(!is_fragment(&[]));
     }
 }

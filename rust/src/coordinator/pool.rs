@@ -1,0 +1,951 @@
+//! Multi-stream parallel transfer engine — [`TransferPool`].
+//!
+//! The Petascale-DTN lesson (PAPERS.md) is that single-stream transfers
+//! cannot saturate a fat WAN pipe: real facility-to-facility deployments
+//! reach line rate only with many concurrent streams. This module shards
+//! a dataset's fault-tolerant groups across `N` sender workers, each with
+//! its own paced [`Datagram`] endpoint and its own Reed–Solomon encoder
+//! (worker-pool parity generation), while a receiver demultiplexes
+//! fragments by the wire-format's stream id and reassembles one shared
+//! group table.
+//!
+//! ## Adaptation: one λ̂ for all streams
+//!
+//! All streams traverse the same WAN, so there is one loss process and
+//! one estimate. The pool measures λ̂ at **pass barriers**: each worker
+//! announces how many fragments it sent ([`Packet::StreamEnd`]); the
+//! receiver answers the end-of-pass exchange with aggregate
+//! expected/received counts ([`Packet::PassStats`]); the sender converts
+//! the surviving fraction into λ̂ = loss_fraction · (N·r) and re-solves
+//! Eq. 8 ([`optimize_parity`]) for the retransmission pass's parity.
+//! Because adaptation happens only at barriers and every per-stream send
+//! order is fixed at planning time, the complete transfer trace is a
+//! deterministic function of (config, dataset, channel seeds) — asserted
+//! by `rust/tests/pool_e2e.rs` and exploited by `testkit`.
+//!
+//! ## Retransmission without retention
+//!
+//! Workers re-encode lost FTGs from the source level buffers instead of
+//! retaining every encoded fragment (the single-stream sender's
+//! approach): parity rows of the systematic generator are nested in m
+//! (row `k+p` is identical for every parity count), so a retransmission
+//! pass may *raise* m for the lost groups and the receiver can combine
+//! parity fragments from different passes in one decode.
+//!
+//! ## Transport assumptions (current limitation)
+//!
+//! Data-path fragments may be dropped arbitrarily, but the end-of-pass
+//! barrier assumes `StreamEnd` markers and control replies eventually get
+//! through: markers are sent in triplicate but never re-announced, so a
+//! transport that can swallow all copies (raw UDP under receive-buffer
+//! overflow) can wedge a pass until `max_duration` aborts it. In-process
+//! channels and the testkit (which drops only fragment datagrams, the
+//! convention the loopback experiments already follow) satisfy the
+//! assumption; a marker re-announcement round is future work for the
+//! real-UDP pool deployment.
+
+use super::packet::{encode_fragment_into, FragmentHeader, Manifest, Packet, MAX_LOST_PER_MSG};
+use super::receiver::ReceiverConfig;
+use super::sender::pace_until;
+use crate::erasure::RsCode;
+use crate::model::params::{LevelSchedule, NetParams};
+use crate::model::time_model::optimize_parity;
+use crate::transport::channel::Datagram;
+use crate::util::err::Result;
+use crate::{anyhow, bail};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Configuration for a multi-stream pool transfer (guaranteed-error-bound
+/// contract, the paper's Alg. 1 generalized to N streams).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Network/coding parameters; `net.r` is the **per-stream** pacing
+    /// rate, so the aggregate nominal rate is `streams · net.r`.
+    pub net: NetParams,
+    /// Concurrent sender workers (≥ 1; 1 degenerates to a single-stream
+    /// engine with the pool protocol).
+    pub streams: usize,
+    /// Deliver every level needed for this relative L∞ bound.
+    pub error_bound: f64,
+    /// Initial λ estimate feeding the first Eq. 8 solve (losses/s over
+    /// the aggregate link).
+    pub initial_lambda: f64,
+    /// Abort the transfer after this much wall time.
+    pub max_duration: Duration,
+}
+
+impl PoolConfig {
+    fn validate(&self) -> Result<()> {
+        if self.streams < 1 || self.streams > 255 {
+            bail!("pool streams must be in 1..=255, got {}", self.streams);
+        }
+        if self.net.n < 2 || self.net.n > 128 {
+            bail!("pool n must be in 2..=128, got {}", self.net.n);
+        }
+        if self.net.s == 0 {
+            bail!("fragment size must be positive");
+        }
+        Ok(())
+    }
+
+    /// Aggregate network parameters (what the Eq. 8 solver sees).
+    fn aggregate_net(&self, lambda: f64) -> NetParams {
+        NetParams { lambda, r: self.net.r * self.streams as f64, ..self.net }
+    }
+}
+
+/// One sender pass, as recorded in the deterministic transfer trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PassRecord {
+    /// Pass number (0 = initial transmission).
+    pub pass: u32,
+    /// Parity fragments per FTG used for groups encoded this pass.
+    pub m: usize,
+    /// FTGs transmitted this pass.
+    pub ftgs: u64,
+    /// Fragments put on the wire this pass, summed over streams.
+    pub fragments: u64,
+    /// Per-stream fragment counts (length = streams).
+    pub per_stream: Vec<u64>,
+    /// λ̂ computed from this pass's receiver statistics.
+    pub lambda_hat: f64,
+    /// FTGs the receiver reported unrecoverable after this pass.
+    pub lost_ftgs: u64,
+}
+
+/// Sender-side outcome of a pool transfer.
+#[derive(Debug, Clone)]
+pub struct PoolSenderReport {
+    pub fragments_sent: u64,
+    pub data_fragments: u64,
+    /// Retransmission passes (0 = everything recovered first pass).
+    pub passes: u32,
+    pub duration: f64,
+    /// Per-pass records; identical across runs with identical seeds.
+    pub trace: Vec<PassRecord>,
+    /// λ̂ after each pass (same values as in `trace`, flat for plotting).
+    pub lambda_history: Vec<f64>,
+}
+
+/// One receiver pass, as recorded in the deterministic transfer trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecvPassRecord {
+    pub pass: u32,
+    /// Fragments the sender announced for this pass.
+    pub expected: u64,
+    /// Fragments that survived the wire.
+    pub received: u64,
+    /// FTGs still undecodable when the pass closed.
+    pub lost_ftgs: u64,
+}
+
+/// Receiver-side outcome of a pool transfer.
+#[derive(Debug, Clone)]
+pub struct PoolReceiverReport {
+    /// Recovered level buffers (exact original bytes).
+    pub levels: Vec<Option<Vec<u8>>>,
+    /// Leading fully-recovered levels.
+    pub levels_recovered: usize,
+    /// ε of the recovered prefix (1.0 when nothing usable).
+    pub achieved_eps: f64,
+    pub fragments_received: u64,
+    /// FTGs that needed Reed–Solomon recovery (vs. arriving complete).
+    pub groups_recovered: u64,
+    pub duration: f64,
+    /// Per-pass records; identical across runs with identical seeds.
+    pub trace: Vec<RecvPassRecord>,
+}
+
+/// One planned fault-tolerant group: `k` data fragments sliced from a
+/// level buffer at `offset`. Parity count is chosen per pass.
+#[derive(Debug, Clone, Copy)]
+struct FtgJob {
+    level: u8,
+    ftg: u32,
+    offset: usize,
+    k: usize,
+}
+
+/// Multi-stream parallel transfer engine (see module docs).
+#[derive(Debug, Clone)]
+pub struct TransferPool {
+    cfg: PoolConfig,
+}
+
+impl TransferPool {
+    pub fn new(cfg: PoolConfig) -> Result<TransferPool> {
+        cfg.validate()?;
+        Ok(TransferPool { cfg })
+    }
+
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    /// Run the sender side. `control` carries the handshake and pass
+    /// exchanges; `data[w]` is stream `w`'s paced endpoint
+    /// (`data.len()` must equal `cfg.streams`).
+    pub fn run_sender<C, D>(
+        &self,
+        control: &mut C,
+        data: &mut [D],
+        levels: &[Vec<u8>],
+        eps: &[f64],
+    ) -> Result<PoolSenderReport>
+    where
+        C: Datagram,
+        D: Datagram,
+    {
+        let cfg = &self.cfg;
+        assert_eq!(levels.len(), eps.len());
+        if data.len() != cfg.streams {
+            bail!("pool wants {} data channels, got {}", cfg.streams, data.len());
+        }
+        let start = Instant::now();
+        let n = cfg.net.n;
+        let s = cfg.net.s;
+        let sched =
+            LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec());
+        let send_levels = sched.levels_for_error_bound(cfg.error_bound).ok_or_else(|| {
+            anyhow!("error bound {} unachievable: ε_L = {}", cfg.error_bound, eps[eps.len() - 1])
+        })?;
+        let total_bytes = sched.total_bytes(send_levels);
+
+        // === Handshake ===
+        let manifest = Packet::Manifest(Manifest {
+            n: n as u8,
+            s: s as u32,
+            streams: cfg.streams as u8,
+            levels: (0..send_levels).map(|i| (levels[i].len() as u64, eps[i])).collect(),
+            contract: 0,
+        });
+        let mut acked = false;
+        for _ in 0..50 {
+            control.send(&manifest.encode());
+            if let Some(buf) = control.recv_timeout(Duration::from_millis(100)) {
+                if matches!(Packet::decode(&buf), Ok(Packet::ManifestAck)) {
+                    acked = true;
+                    break;
+                }
+            }
+        }
+        if !acked {
+            bail!("pool receiver did not acknowledge manifest");
+        }
+
+        // === Pass-0 plan: fixed m per pass keeps the trace deterministic;
+        // λ̂ feedback adapts the *next* pass (Eq. 8 re-solve). ===
+        let mut lambda_hat = cfg.initial_lambda;
+        let mut m = optimize_parity(&cfg.aggregate_net(lambda_hat), total_bytes.max(1)).m;
+
+        let mut jobs: Vec<FtgJob> = Vec::new();
+        for (li, level) in levels.iter().enumerate().take(send_levels) {
+            let mut offset = 0usize;
+            let mut ftg = 0u32;
+            while offset < level.len() {
+                let remaining = level.len() - offset;
+                let k = (n - m).min(remaining.div_ceil(s)).max(1);
+                jobs.push(FtgJob { level: li as u8, ftg, offset, k });
+                offset += k * s;
+                ftg += 1;
+            }
+        }
+        let data_fragments: u64 = jobs.iter().map(|j| j.k as u64).sum();
+
+        let mut report = PoolSenderReport {
+            fragments_sent: 0,
+            data_fragments,
+            passes: 0,
+            duration: 0.0,
+            trace: Vec::new(),
+            lambda_history: Vec::new(),
+        };
+
+        // Per-stream wire sequence numbers, monotone across passes.
+        let mut seqs = vec![0u64; cfg.streams];
+        // Jobs (indices) to transmit this pass; pass 0 sends everything.
+        let mut todo: Vec<usize> = (0..jobs.len()).collect();
+        let mut pass = 0u32;
+
+        loop {
+            if start.elapsed() > cfg.max_duration {
+                bail!("pool sender exceeded max duration");
+            }
+            // Deterministic shard: round-robin over the pass's job list.
+            let shards: Vec<Vec<usize>> = (0..cfg.streams)
+                .map(|w| todo.iter().copied().skip(w).step_by(cfg.streams).collect())
+                .collect();
+
+            // === Fan out: one worker per stream, own channel + encoder ===
+            let pace = Duration::from_secs_f64(1.0 / cfg.net.r);
+            let net = cfg.net;
+            let jobs_ref = &jobs;
+            let sent_counts: Vec<u64> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(cfg.streams);
+                for (w, chan) in data.iter_mut().enumerate() {
+                    let shard = &shards[w];
+                    let seq0 = seqs[w];
+                    handles.push(scope.spawn(move || {
+                        send_shard(chan, w as u8, pass, m, shard, jobs_ref, levels, &net, pace, seq0)
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("pool worker panicked"))
+                    .collect()
+            });
+            let per_stream: Vec<u64> = sent_counts.clone();
+            let pass_sent: u64 = per_stream.iter().sum();
+            for (w, &c) in per_stream.iter().enumerate() {
+                seqs[w] += c;
+            }
+            report.fragments_sent += pass_sent;
+
+            // === Barrier: end-of-pass exchange on the control channel ===
+            let mut stats: Option<(u64, u64)> = None;
+            let mut lost: Option<Vec<(u8, u32)>> = None;
+            let mut finished = false;
+            'exchange: for _ in 0..200 {
+                control.send(&Packet::EndOfPass { pass }.encode());
+                let wait_until = Instant::now() + Duration::from_millis(200);
+                while Instant::now() < wait_until {
+                    let buf = match control.recv_timeout(Duration::from_millis(50)) {
+                        Some(b) => b,
+                        None => break,
+                    };
+                    match Packet::decode(&buf) {
+                        Ok(Packet::PassStats { pass: p, expected, received }) if p == pass => {
+                            stats = Some((expected, received));
+                        }
+                        Ok(Packet::LostList { pass: p, ftgs }) if p == pass => {
+                            lost = Some(ftgs);
+                        }
+                        Ok(Packet::Done) => {
+                            finished = true;
+                        }
+                        _ => {}
+                    }
+                    if stats.is_some() && lost.is_some() {
+                        break 'exchange;
+                    }
+                }
+                if start.elapsed() > cfg.max_duration {
+                    bail!("pool sender timed out awaiting pass {pass} feedback");
+                }
+            }
+            let (expected, received) = stats.ok_or_else(|| {
+                anyhow!("no PassStats for pass {pass} (receiver gone?)")
+            })?;
+            let lost = lost.ok_or_else(|| anyhow!("no LostList for pass {pass}"))?;
+
+            // === Shared λ̂ update + Eq. 8 re-solve for the next pass ===
+            let loss_frac = if expected == 0 {
+                0.0
+            } else {
+                (1.0 - received as f64 / expected as f64).clamp(0.0, 1.0)
+            };
+            lambda_hat = loss_frac * cfg.net.r * cfg.streams as f64;
+            report.lambda_history.push(lambda_hat);
+            report.trace.push(PassRecord {
+                pass,
+                m,
+                ftgs: todo.len() as u64,
+                fragments: pass_sent,
+                per_stream,
+                lambda_hat,
+                lost_ftgs: lost.len() as u64,
+            });
+
+            if finished || lost.is_empty() {
+                break;
+            }
+
+            // Map the lost (level, ftg) ids back to job indices.
+            let index: HashMap<(u8, u32), usize> = jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| ((j.level, j.ftg), i))
+                .collect();
+            let mut next: Vec<usize> = Vec::with_capacity(lost.len());
+            for key in &lost {
+                match index.get(key) {
+                    Some(&i) => next.push(i),
+                    None => bail!("receiver reported unknown FTG {key:?}"),
+                }
+            }
+            let lost_bytes: u64 = next.iter().map(|&i| jobs[i].k as u64 * s as u64).sum();
+            m = optimize_parity(&cfg.aggregate_net(lambda_hat), lost_bytes.max(1)).m;
+            todo = next;
+            pass += 1;
+            report.passes = pass;
+            if pass > 10_000 {
+                bail!("pool retransmission did not converge");
+            }
+        }
+
+        report.duration = start.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Run the receiver side: demultiplex `data` endpoints by stream id
+    /// into one shared reassembly table, answer pass barriers with
+    /// aggregate loss statistics, and reconstruct the levels on `Done`.
+    pub fn run_receiver<C, D>(
+        control: &mut C,
+        data: Vec<D>,
+        rcfg: &ReceiverConfig,
+    ) -> Result<PoolReceiverReport>
+    where
+        C: Datagram,
+        D: Datagram + Send,
+    {
+        let start = Instant::now();
+
+        // === Handshake ===
+        let manifest: Manifest = loop {
+            if start.elapsed() > rcfg.max_duration {
+                bail!("pool receiver: no manifest");
+            }
+            match control.recv_timeout(rcfg.idle_timeout) {
+                Some(buf) => match Packet::decode(&buf) {
+                    Ok(Packet::Manifest(m)) => {
+                        control.send(&Packet::ManifestAck.encode());
+                        break m;
+                    }
+                    _ => continue,
+                },
+                None => bail!("pool receiver: timed out waiting for manifest"),
+            }
+        };
+        let streams = manifest.streams as usize;
+        if data.len() != streams {
+            bail!("manifest announces {streams} streams, receiver has {}", data.len());
+        }
+        let s = manifest.s as usize;
+        let num_levels = manifest.levels.len();
+
+        let mut report = PoolReceiverReport {
+            levels: vec![None; num_levels],
+            levels_recovered: 0,
+            achieved_eps: 1.0,
+            fragments_received: 0,
+            groups_recovered: 0,
+            duration: 0.0,
+            trace: Vec::new(),
+        };
+
+        let mut groups: HashMap<(u8, u32), GroupBuf> = HashMap::new();
+        // Per-pass statistics: announced (per stream) and received counts.
+        let mut announced: HashMap<u32, HashMap<u8, u64>> = HashMap::new();
+        let mut received_in_pass: HashMap<u32, u64> = HashMap::new();
+        // Cached reply to the last finalized pass: duplicate EndOfPass
+        // retries must get byte-identical answers even after later
+        // fragments arrive (recomputing would break the pass protocol).
+        let mut last_reply: Option<(u32, u64, u64, Vec<(u8, u32)>)> = None;
+        // An EndOfPass that arrived before every stream's marker did —
+        // finalized the moment the last marker drains from the fan-in.
+        let mut pending_end: Option<u32> = None;
+
+        // === Demux fan-in: one reader thread per data endpoint ===
+        let shutdown = AtomicBool::new(false);
+        let (fan_tx, fan_rx) = mpsc::channel::<Vec<u8>>();
+        let done = std::thread::scope(|scope| -> Result<()> {
+            for mut chan in data {
+                let tx = fan_tx.clone();
+                let stop = &shutdown;
+                scope.spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        if let Some(buf) = chan.recv_timeout(Duration::from_millis(50)) {
+                            if tx.send(buf).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+            drop(fan_tx);
+
+            // Answer an end-of-pass barrier whose stream markers have all
+            // arrived. Returns true when the transfer is complete.
+            // Idempotent: a duplicate EndOfPass resends the cached reply;
+            // passes older than the cache are ignored.
+            let finalize = |pass: u32,
+                                control: &mut C,
+                                groups: &HashMap<(u8, u32), GroupBuf>,
+                                announced: &HashMap<u32, HashMap<u8, u64>>,
+                                received_in_pass: &HashMap<u32, u64>,
+                                last_reply: &mut Option<(u32, u64, u64, Vec<(u8, u32)>)>,
+                                report: &mut PoolReceiverReport|
+             -> bool {
+                if let Some((p, expected, received, lost)) = last_reply.as_ref() {
+                    if pass < *p {
+                        return false; // stale retry of an older pass
+                    }
+                    if pass == *p {
+                        let (expected, received) = (*expected, *received);
+                        control
+                            .send(&Packet::PassStats { pass, expected, received }.encode());
+                        control.send(&Packet::LostList { pass, ftgs: lost.clone() }.encode());
+                        if lost.is_empty() {
+                            control.send(&Packet::Done.encode());
+                            return true;
+                        }
+                        return false;
+                    }
+                }
+                let expected: u64 = announced[&pass].values().sum();
+                let received = *received_in_pass.get(&pass).unwrap_or(&0);
+                let lost = collect_lost(&manifest, groups, s);
+                report.trace.push(RecvPassRecord {
+                    pass,
+                    expected,
+                    received,
+                    lost_ftgs: lost.len() as u64,
+                });
+                // Cap the wire list to one datagram; the tail is simply
+                // re-reported on the next pass (nonempty ⇒ capped
+                // nonempty, so the Done decision is unaffected).
+                let wire: Vec<(u8, u32)> =
+                    lost.iter().take(MAX_LOST_PER_MSG).copied().collect();
+                *last_reply = Some((pass, expected, received, wire.clone()));
+                control.send(&Packet::PassStats { pass, expected, received }.encode());
+                control.send(&Packet::LostList { pass, ftgs: wire }.encode());
+                if lost.is_empty() {
+                    control.send(&Packet::Done.encode());
+                    return true;
+                }
+                false
+            };
+
+            let marker_complete = |announced: &HashMap<u32, HashMap<u8, u64>>, pass: u32| {
+                announced.get(&pass).map_or(false, |e| e.len() >= streams)
+            };
+
+            let mut last_packet = Instant::now();
+            let result = 'pump: loop {
+                if start.elapsed() > rcfg.max_duration {
+                    break Err(anyhow!("pool receiver exceeded max duration"));
+                }
+                if last_packet.elapsed() > rcfg.idle_timeout {
+                    break Err(anyhow!("pool receiver: sender went silent"));
+                }
+                // Control plane (cheap nonblocking poll): note the barrier
+                // request; it is answered only once every stream's marker
+                // has drained from the fan-in, because per-channel FIFO
+                // then guarantees all surviving fragments of the pass are
+                // already in `groups`.
+                while let Some(buf) = control.try_recv() {
+                    last_packet = Instant::now();
+                    if let Ok(Packet::EndOfPass { pass }) = Packet::decode(&buf) {
+                        pending_end = Some(pass);
+                    }
+                }
+                if let Some(pass) = pending_end {
+                    if marker_complete(&announced, pass) {
+                        pending_end = None;
+                        if finalize(
+                            pass,
+                            control,
+                            &groups,
+                            &announced,
+                            &received_in_pass,
+                            &mut last_reply,
+                            &mut report,
+                        ) {
+                            break 'pump Ok(());
+                        }
+                    }
+                }
+                // Data plane: fragments + stream-end markers.
+                match fan_rx.recv_timeout(Duration::from_millis(2)) {
+                    Ok(buf) => {
+                        last_packet = Instant::now();
+                        match Packet::decode(&buf) {
+                            Ok(Packet::Fragment(h, payload)) => {
+                                report.fragments_received += 1;
+                                *received_in_pass.entry(h.pass).or_insert(0) += 1;
+                                store_fragment(&mut groups, &h, payload);
+                            }
+                            Ok(Packet::StreamEnd { stream, pass, sent }) => {
+                                announced.entry(pass).or_default().insert(stream, sent);
+                            }
+                            _ => {}
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        break Err(anyhow!("pool receiver: demux threads died"));
+                    }
+                }
+            };
+            shutdown.store(true, Ordering::Relaxed);
+            result
+        });
+        shutdown.store(true, Ordering::Relaxed);
+        done?;
+
+        // === Reconstruct levels (shared group table) ===
+        reconstruct_levels(&manifest, &groups, s, &mut report)?;
+        report.duration = start.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Convenience harness: run a full pool transfer across connected
+    /// channel sets in threads and collect both reports.
+    #[allow(clippy::type_complexity)]
+    pub fn run_session<C, DS, DR>(
+        &self,
+        sender_control: &mut C,
+        mut sender_data: Vec<DS>,
+        receiver_control: &mut C,
+        receiver_data: Vec<DR>,
+        rcfg: &ReceiverConfig,
+        levels: &[Vec<u8>],
+        eps: &[f64],
+    ) -> Result<(PoolSenderReport, PoolReceiverReport)>
+    where
+        C: Datagram,
+        DS: Datagram,
+        DR: Datagram + Send,
+    {
+        std::thread::scope(|scope| {
+            let recv = scope.spawn(move || Self::run_receiver(receiver_control, receiver_data, rcfg));
+            let send_report = self.run_sender(sender_control, &mut sender_data, levels, eps)?;
+            let recv_report = recv
+                .join()
+                .map_err(|_| anyhow!("pool receiver thread panicked"))??;
+            Ok((send_report, recv_report))
+        })
+    }
+}
+
+/// Worker body: RS-encode and pace this stream's share of the pass.
+/// Returns the number of fragments sent.
+#[allow(clippy::too_many_arguments)]
+fn send_shard<D: Datagram>(
+    chan: &mut D,
+    stream: u8,
+    pass: u32,
+    m: usize,
+    shard: &[usize],
+    jobs: &[FtgJob],
+    levels: &[Vec<u8>],
+    net: &NetParams,
+    pace: Duration,
+    seq0: u64,
+) -> u64 {
+    let s = net.s;
+    let mut codes: HashMap<(usize, usize), RsCode> = HashMap::new();
+    let mut out = Vec::with_capacity(s + 64);
+    let mut seq = seq0;
+    let mut next_send = Instant::now();
+    for &ji in shard {
+        let job = jobs[ji];
+        let level_bytes = &levels[job.level as usize];
+        // Parity never shrinks a group below its planned k.
+        let m_eff = m.min(255usize.saturating_sub(job.k));
+        // Slice k data fragments (pad the tail with zeros).
+        let mut frags: Vec<Vec<u8>> = Vec::with_capacity(job.k + m_eff);
+        for i in 0..job.k {
+            let lo = (job.offset + i * s).min(level_bytes.len());
+            let hi = (job.offset + (i + 1) * s).min(level_bytes.len());
+            let mut f = level_bytes[lo..hi].to_vec();
+            f.resize(s, 0);
+            frags.push(f);
+        }
+        let code = codes
+            .entry((job.k, m_eff))
+            .or_insert_with(|| RsCode::new(job.k, m_eff).expect("valid k,m"));
+        let refs: Vec<&[u8]> = frags.iter().map(|f| f.as_slice()).collect();
+        let parity = code.encode(&refs).expect("encode");
+        frags.extend(parity);
+        for (idx, frag) in frags.iter().enumerate() {
+            let hdr = FragmentHeader {
+                level: job.level,
+                stream,
+                ftg: job.ftg,
+                index: idx as u8,
+                k: job.k as u8,
+                m: m_eff as u8,
+                seq,
+                pass,
+            };
+            seq += 1;
+            encode_fragment_into(&hdr, frag, &mut out);
+            pace_until(next_send);
+            next_send = Instant::now().max(next_send) + pace;
+            chan.send(&out);
+        }
+    }
+    let sent = seq - seq0;
+    // Announce this stream's pass total on the data path (FIFO after the
+    // fragments); duplicated for robustness on real lossy transports.
+    let end = Packet::StreamEnd { stream, pass, sent }.encode();
+    for _ in 0..3 {
+        chan.send(&end);
+    }
+    sent
+}
+
+/// Shared reassembly buffer for one FTG. Grows when later passes raise m.
+struct GroupBuf {
+    k: u8,
+    frags: Vec<Option<Vec<u8>>>,
+    have_data: u8,
+    have_total: u8,
+}
+
+fn store_fragment(groups: &mut HashMap<(u8, u32), GroupBuf>, h: &FragmentHeader, payload: Vec<u8>) {
+    let g = groups.entry((h.level, h.ftg)).or_insert_with(|| GroupBuf {
+        k: h.k,
+        frags: vec![None; h.k as usize + h.m as usize],
+        have_data: 0,
+        have_total: 0,
+    });
+    let idx = h.index as usize;
+    if idx >= g.frags.len() {
+        // A retransmission pass raised m; parity rows nest, so growing
+        // the table keeps earlier fragments valid.
+        g.frags.resize(idx + 1, None);
+    }
+    if g.frags[idx].is_none() {
+        if idx < g.k as usize {
+            g.have_data += 1;
+        }
+        g.have_total += 1;
+        g.frags[idx] = Some(payload);
+    }
+}
+
+/// FTGs (per manifest byte accounting) that cannot currently be decoded.
+fn collect_lost(
+    manifest: &Manifest,
+    groups: &HashMap<(u8, u32), GroupBuf>,
+    s: usize,
+) -> Vec<(u8, u32)> {
+    let n = manifest.n as usize;
+    let mut lost = Vec::new();
+    for (li, &(size, _)) in manifest.levels.iter().enumerate() {
+        let mut covered = 0u64;
+        let mut ftg = 0u32;
+        while covered < size {
+            match groups.get(&(li as u8, ftg)) {
+                Some(g) => {
+                    if g.have_total < g.k {
+                        lost.push((li as u8, ftg));
+                    }
+                    covered += g.k as u64 * s as u64;
+                }
+                None => {
+                    // Never seen: unrecoverable by definition; stride by
+                    // the worst case since its true k is unknown.
+                    lost.push((li as u8, ftg));
+                    covered += n as u64 * s as u64;
+                }
+            }
+            ftg += 1;
+        }
+    }
+    lost
+}
+
+/// Rebuild the exact level bytes from the shared group table.
+fn reconstruct_levels(
+    manifest: &Manifest,
+    groups: &HashMap<(u8, u32), GroupBuf>,
+    s: usize,
+    report: &mut PoolReceiverReport,
+) -> Result<()> {
+    let mut codes: HashMap<(u8, u8), RsCode> = HashMap::new();
+    for (li, &(size, _eps)) in manifest.levels.iter().enumerate() {
+        let mut out = Vec::with_capacity(size as usize);
+        let mut ok = true;
+        let mut ftg = 0u32;
+        while (out.len() as u64) < size {
+            match groups.get(&(li as u8, ftg)) {
+                Some(g) if g.have_data == g.k => {
+                    for f in g.frags.iter().take(g.k as usize) {
+                        out.extend_from_slice(f.as_ref().unwrap());
+                    }
+                }
+                Some(g) if g.have_total >= g.k => {
+                    // Reed–Solomon recovery over whatever mix of passes'
+                    // fragments arrived (parity rows nest in m).
+                    let m_seen = (g.frags.len() - g.k as usize) as u8;
+                    let code = codes.entry((g.k, m_seen)).or_insert_with(|| {
+                        RsCode::new(g.k as usize, m_seen as usize).expect("valid k,m")
+                    });
+                    let shards: Vec<(usize, &[u8])> = g
+                        .frags
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, f)| f.as_ref().map(|f| (i, f.as_slice())))
+                        .collect();
+                    match code.reconstruct(&shards) {
+                        Ok(data) => {
+                            report.groups_recovered += 1;
+                            for f in &data {
+                                out.extend_from_slice(f);
+                            }
+                        }
+                        Err(_) => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                _ => {
+                    ok = false;
+                    break;
+                }
+            }
+            ftg += 1;
+        }
+        if ok {
+            out.truncate(size as usize);
+            report.levels[li] = Some(out);
+        }
+    }
+    let mut prefix = 0;
+    for l in &report.levels {
+        if l.is_some() {
+            prefix += 1;
+        } else {
+            break;
+        }
+    }
+    report.levels_recovered = prefix;
+    report.achieved_eps = if prefix == 0 { 1.0 } else { manifest.levels[prefix - 1].1 };
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::channel::{mem_pair, MemChannel};
+    use crate::util::Pcg64;
+
+    fn pool_channels(streams: usize) -> (MemChannel, Vec<MemChannel>, MemChannel, Vec<MemChannel>) {
+        let (sc, rc) = mem_pair();
+        let mut sd = Vec::new();
+        let mut rd = Vec::new();
+        for _ in 0..streams {
+            let (a, b) = mem_pair();
+            sd.push(a);
+            rd.push(b);
+        }
+        (sc, sd, rc, rd)
+    }
+
+    fn test_levels(seed: u64) -> (Vec<Vec<u8>>, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        let sizes = [50_000usize, 200_000, 400_000];
+        let eps = vec![0.004, 0.0005, 0.0000001];
+        (
+            sizes
+                .iter()
+                .map(|&sz| {
+                    let mut v = vec![0u8; sz];
+                    rng.fill_bytes(&mut v);
+                    v
+                })
+                .collect(),
+            eps,
+        )
+    }
+
+    fn cfg(streams: usize) -> PoolConfig {
+        PoolConfig {
+            net: NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 },
+            streams,
+            error_bound: 1e-7,
+            initial_lambda: 0.0,
+            max_duration: Duration::from_secs(60),
+        }
+    }
+
+    fn rcfg() -> ReceiverConfig {
+        ReceiverConfig {
+            t_w: 0.25,
+            idle_timeout: Duration::from_secs(5),
+            max_duration: Duration::from_secs(60),
+        }
+    }
+
+    #[test]
+    fn lossless_pool_delivers_exact_bytes_four_streams() {
+        let (levels, eps) = test_levels(1);
+        let pool = TransferPool::new(cfg(4)).unwrap();
+        let (mut sc, sd, mut rc, rd) = pool_channels(4);
+        let (s_rep, r_rep) = pool
+            .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        assert_eq!(r_rep.levels_recovered, 3);
+        for (got, want) in r_rep.levels.iter().zip(&levels) {
+            assert_eq!(got.as_ref().unwrap(), want);
+        }
+        assert_eq!(s_rep.passes, 0);
+        assert_eq!(s_rep.trace.len(), 1);
+        assert_eq!(s_rep.trace[0].lambda_hat, 0.0);
+        assert_eq!(s_rep.trace[0].per_stream.len(), 4);
+        // Every stream carried a share of the load.
+        assert!(s_rep.trace[0].per_stream.iter().all(|&c| c > 0));
+        assert_eq!(
+            s_rep.trace[0].per_stream.iter().sum::<u64>(),
+            s_rep.fragments_sent
+        );
+    }
+
+    #[test]
+    fn single_stream_pool_degenerates_cleanly() {
+        let (levels, eps) = test_levels(2);
+        let pool = TransferPool::new(cfg(1)).unwrap();
+        let (mut sc, sd, mut rc, rd) = pool_channels(1);
+        let (_s, r) = pool
+            .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        assert_eq!(r.levels_recovered, 3);
+        for (got, want) in r.levels.iter().zip(&levels) {
+            assert_eq!(got.as_ref().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn error_bound_limits_transmitted_levels() {
+        let (levels, eps) = test_levels(3);
+        let mut c = cfg(2);
+        c.error_bound = 0.004; // level 1 suffices
+        let pool = TransferPool::new(c).unwrap();
+        let (mut sc, sd, mut rc, rd) = pool_channels(2);
+        let (_s, r) = pool
+            .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        assert_eq!(r.levels.len(), 1, "only level 1 in manifest");
+        assert_eq!(r.levels[0].as_ref().unwrap(), &levels[0]);
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let mut c = cfg(0);
+        assert!(TransferPool::new(c.clone()).is_err());
+        c.streams = 4;
+        c.net.n = 1;
+        assert!(TransferPool::new(c.clone()).is_err());
+        c.net.n = 32;
+        assert!(TransferPool::new(c).is_ok());
+    }
+
+    #[test]
+    fn mismatched_channel_count_is_an_error() {
+        let (levels, eps) = test_levels(4);
+        let pool = TransferPool::new(cfg(3)).unwrap();
+        let (mut sc, mut sd, _rc, _rd) = pool_channels(2); // too few
+        let err = pool
+            .run_sender(&mut sc, &mut sd, &levels, &eps)
+            .unwrap_err();
+        assert!(format!("{err}").contains("data channels"), "{err}");
+    }
+}

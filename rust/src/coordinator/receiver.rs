@@ -7,10 +7,11 @@
 //! end-of-transmission notifications with the lost-FTG list (Alg. 1) or
 //! finalizes immediately (Alg. 2).
 
-use super::packet::{Manifest, Packet};
+use super::packet::{Manifest, Packet, MAX_LOST_PER_MSG};
 use crate::erasure::RsCode;
 use crate::transport::channel::Datagram;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::err::Result;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -160,13 +161,17 @@ pub fn run_receiver(chan: &mut dyn Datagram, cfg: &ReceiverConfig) -> Result<Rec
                     g.frags[idx] = Some(payload);
                 }
             }
-            Ok(Packet::EndOfPass { .. }) => {
+            Ok(Packet::EndOfPass { pass }) => {
                 // Evaluate recoverability of every group seen; also detect
                 // levels with missing tails (groups never seen at all are
                 // only knowable via byte accounting below).
                 let lost = collect_lost(&manifest, &groups, s);
                 if retransmitting {
-                    chan.send(&Packet::LostList { ftgs: lost.clone() }.encode());
+                    // Cap the wire list so it always fits one datagram;
+                    // the tail is re-reported on the next pass.
+                    let wire: Vec<(u8, u32)> =
+                        lost.iter().take(MAX_LOST_PER_MSG).copied().collect();
+                    chan.send(&Packet::LostList { pass, ftgs: wire }.encode());
                     if lost.is_empty() {
                         chan.send(&Packet::Done.encode());
                         break;

@@ -13,7 +13,8 @@ use crate::model::error_model::optimize_deadline_paper;
 use crate::model::params::{LevelSchedule, NetParams};
 use crate::model::time_model::optimize_parity;
 use crate::transport::channel::Datagram;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::err::{Context, Result};
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
@@ -109,6 +110,7 @@ pub fn run_sender(
     let manifest = Packet::Manifest(Manifest {
         n: n as u8,
         s: s as u32,
+        streams: 1,
         levels: (0..send_levels).map(|i| (levels[i].len() as u64, eps[i])).collect(),
         contract: match cfg.contract {
             Contract::ErrorBound(_) => 0,
@@ -312,6 +314,7 @@ fn transmit_loop(
         for (idx, frag) in ftg.fragments.iter().enumerate() {
             let hdr = FragmentHeader {
                 level: ftg.level,
+                stream: 0,
                 ftg: ftg.ftg,
                 index: idx as u8,
                 k: ftg.k,
@@ -356,7 +359,7 @@ fn transmit_loop(
             while Instant::now() < deadline_wait {
                 match chan.recv_timeout(Duration::from_millis(50)) {
                     Some(buf) => match Packet::decode(&buf) {
-                        Ok(Packet::LostList { ftgs }) => {
+                        Ok(Packet::LostList { pass: p, ftgs }) if p == pass => {
                             lost = Some(ftgs);
                             break;
                         }
@@ -399,6 +402,7 @@ fn transmit_loop(
                 for (idx, frag) in ftg.fragments.iter().enumerate() {
                     let hdr = FragmentHeader {
                         level: ftg.level,
+                        stream: 0,
                         ftg: ftg.ftg,
                         index: idx as u8,
                         k: ftg.k,
@@ -423,8 +427,9 @@ fn transmit_loop(
 
 /// Sleep-then-spin until `deadline`: coarse sleep to within 200 µs, then
 /// spin for precision — keeps the achieved wire rate at the nominal `r`.
+/// Shared with the multi-stream pool workers.
 #[inline]
-fn pace_until(deadline: Instant) {
+pub(crate) fn pace_until(deadline: Instant) {
     let now = Instant::now();
     if deadline <= now {
         return;

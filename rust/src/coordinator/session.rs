@@ -5,7 +5,7 @@
 use super::receiver::{run_receiver, ReceiverConfig, ReceiverReport};
 use super::sender::{run_sender, SenderConfig, SenderReport};
 use crate::transport::channel::Datagram;
-use anyhow::Result;
+use crate::util::err::Result;
 
 /// Run a full transfer across two already-connected channels.
 ///
@@ -28,7 +28,7 @@ where
     let send_report = run_sender(&mut sender_chan, &sender_cfg, &levels, &eps)?;
     let recv_report = recv_handle
         .join()
-        .map_err(|_| anyhow::anyhow!("receiver thread panicked"))??;
+        .map_err(|_| crate::anyhow!("receiver thread panicked"))??;
     Ok((send_report, recv_report))
 }
 

@@ -231,11 +231,14 @@ mod tests {
             assert_eq!(mul(a, 0), 0);
             assert_eq!(div(a, a), 1);
         }
-        // Distributivity spot-check over all triples on a stride.
+        // Associativity + distributivity over all triples on a stride
+        // (the full randomized sweep lives in tests/erasure_props.rs).
         for a in (0..=255u8).step_by(7) {
             for b in (0..=255u8).step_by(11) {
                 for c in (0..=255u8).step_by(13) {
                     assert_eq!(mul(a, add(b, c)), add(mul(a, b), mul(a, c)));
+                    assert_eq!(mul(mul(a, b), c), mul(a, mul(b, c)));
+                    assert_eq!(add(add(a, b), c), add(a, add(b, c)));
                 }
             }
         }

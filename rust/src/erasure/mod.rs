@@ -12,4 +12,4 @@ pub mod rs;
 pub mod throughput;
 
 pub use rs::{RsCode, RsError};
-pub use throughput::{measure_ec_rate, sweep_ec_rates, EcRate};
+pub use throughput::{measure_ec_rate, measure_parallel_ec_rate, sweep_ec_rates, EcRate};

@@ -14,17 +14,34 @@ use super::gf256::MulTable;
 use super::matrix::{systematic_generator, Matrix};
 
 /// Errors from Reed–Solomon operations.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum RsError {
-    #[error("invalid code parameters: k={k}, m={m} (need k>=1, m>=0, k+m<=256)")]
     BadParams { k: usize, m: usize },
-    #[error("fragment length mismatch: expected {expected}, got {got}")]
     LengthMismatch { expected: usize, got: usize },
-    #[error("not enough fragments to reconstruct: have {have}, need {need}")]
     NotEnough { have: usize, need: usize },
-    #[error("fragment index {idx} out of range for n={n}")]
     BadIndex { idx: usize, n: usize },
 }
+
+impl std::fmt::Display for RsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RsError::BadParams { k, m } => {
+                write!(f, "invalid code parameters: k={k}, m={m} (need k>=1, m>=0, k+m<=256)")
+            }
+            RsError::LengthMismatch { expected, got } => {
+                write!(f, "fragment length mismatch: expected {expected}, got {got}")
+            }
+            RsError::NotEnough { have, need } => {
+                write!(f, "not enough fragments to reconstruct: have {have}, need {need}")
+            }
+            RsError::BadIndex { idx, n } => {
+                write!(f, "fragment index {idx} out of range for n={n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RsError {}
 
 /// A (k, m) systematic Reed–Solomon code with cached encode tables.
 pub struct RsCode {

@@ -15,11 +15,12 @@
 pub mod config;
 pub mod coordinator;
 pub mod erasure;
-pub mod runtime;
-pub mod sim;
-pub mod transport;
-pub mod util;
-pub mod workflow;
 pub mod metrics;
 pub mod model;
 pub mod refactor;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod transport;
+pub mod util;
+pub mod workflow;

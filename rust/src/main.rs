@@ -7,6 +7,8 @@
 //!   recv       Run a real-UDP receiver.
 //!   ec-rate    Measure Reed–Solomon parity-generation throughput (r_ec).
 //!   e2e        End-to-end demo: refactor → transfer → reconstruct.
+//!   pool       Multi-stream TransferPool demo over lossy in-memory
+//!              channels (deterministic; see coordinator::pool).
 
 use janus::config::Args;
 use janus::coordinator::{run_receiver, run_sender, Contract, ReceiverConfig, SenderConfig};
@@ -28,9 +30,10 @@ fn main() {
         Some("send") => cmd_send(&args),
         Some("recv") => cmd_recv(&args),
         Some("e2e") => cmd_e2e(&args),
+        Some("pool") => cmd_pool(&args),
         _ => {
             eprintln!(
-                "usage: janus <optimize|simulate|ec-rate|send|recv|e2e> [--options]\n\
+                "usage: janus <optimize|simulate|ec-rate|send|recv|e2e|pool> [--options]\n\
                  \n\
                  optimize  --lambda <l/s> [--mode error-bound|deadline] [--tau <s>] [--scale <f>]\n\
                  simulate  --protocol tcp|static|adaptive|deadline --lambda <l/s>|hmm\n\
@@ -38,7 +41,9 @@ fn main() {
                  ec-rate   [--n <frags>] [--max-m <m>] [--secs <s>]\n\
                  send      --peer <addr:port> [--bind <addr:port>] [--deadline <s>] [--rate <pkt/s>]\n\
                  recv      --bind <addr:port> [--t-w <s>]\n\
-                 e2e       [--dim 64] [--lambda <l/s>] [--seed <n>]"
+                 e2e       [--dim 64] [--lambda <l/s>] [--seed <n>]\n\
+                 pool      [--streams <n>] [--loss <frac>] [--mb <MB>] [--rate <frag/s>]\n\
+                 \u{20}          [--seed <n>]"
             );
             std::process::exit(2);
         }
@@ -263,6 +268,80 @@ fn cmd_e2e(args: &Args) {
     println!(
         "adaptive transfer: {:.3}s (sim), rounds={} lost={}",
         res.total_time, res.rounds, res.fragments_lost
+    );
+}
+
+fn cmd_pool(args: &Args) {
+    use janus::coordinator::{PoolConfig, ReceiverConfig, TransferPool};
+    use janus::testkit::{pool_fixture, LossTrace};
+
+    let streams = args.get_usize_in("streams", 4, 1, 255);
+    let loss = args.get_f64("loss", 0.02);
+    let mb = args.get_usize("mb", 8);
+    let seed = args.get_u64("seed", 1);
+    let rate = args.get_f64("rate", 100_000.0);
+
+    // Synthetic levels with the Nyx ε ladder shape.
+    let mut rng = janus::util::Pcg64::seeded(seed);
+    let total = mb * 1024 * 1024;
+    let sizes = [total / 10, total * 3 / 10, total * 6 / 10];
+    let eps = vec![0.004, 0.0005, 0.0000001];
+    let levels: Vec<Vec<u8>> = sizes
+        .iter()
+        .map(|&sz| {
+            let mut v = vec![0u8; sz.max(1)];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect();
+
+    let pool = TransferPool::new(PoolConfig {
+        net: janus::model::NetParams { t: 0.0005, r: rate, lambda: 0.0, n: 32, s: 4096 },
+        streams,
+        error_bound: 1e-7,
+        initial_lambda: loss * rate * streams as f64,
+        max_duration: std::time::Duration::from_secs(600),
+    })
+    .expect("pool config");
+    let (mut sc, sd, mut rc, rd) =
+        pool_fixture(streams, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1)));
+    let rcfg = ReceiverConfig {
+        t_w: 0.25,
+        idle_timeout: std::time::Duration::from_secs(10),
+        max_duration: std::time::Duration::from_secs(600),
+    };
+    let start = std::time::Instant::now();
+    let (s_rep, r_rep) = pool
+        .run_session(&mut sc, sd, &mut rc, rd, &rcfg, &levels, &eps)
+        .expect("pool transfer");
+    let wall = start.elapsed().as_secs_f64();
+    let bytes: usize = levels.iter().map(|l| l.len()).sum();
+    for (got, want) in r_rep.levels.iter().zip(&levels) {
+        assert_eq!(got.as_ref().unwrap(), want, "delivery must be byte-exact");
+    }
+    println!(
+        "pool: {streams} streams × {rate:.0} frag/s, {:.1} MB at {:.1}% loss",
+        bytes as f64 / 1e6,
+        loss * 100.0
+    );
+    println!(
+        "  sender: {} fragments ({} data) in {} pass(es), λ̂ history {:?}",
+        s_rep.fragments_sent,
+        s_rep.data_fragments,
+        s_rep.passes + 1,
+        s_rep
+            .lambda_history
+            .iter()
+            .map(|l| format!("{l:.0}"))
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "  receiver: {} fragments, {} RS-recovered groups, {} levels byte-exact",
+        r_rep.fragments_received, r_rep.groups_recovered, r_rep.levels_recovered
+    );
+    println!(
+        "  throughput: {:.1} MB/s aggregate ({wall:.2}s wall)",
+        bytes as f64 / 1e6 / wall
     );
 }
 

@@ -7,14 +7,24 @@
 //! [`Executable`] runs with `f32` buffers in/out. Python authored the
 //! artifacts at build time (`make artifacts`); nothing here touches
 //! Python.
+//!
+//! The `xla` crate is not part of the offline vendored set, so all PJRT
+//! execution is gated behind the `pjrt` cargo feature. Without it the
+//! manifest still parses (so callers can enumerate artifacts) but
+//! `load`/`run_f32` return a descriptive error; the native mirror in
+//! [`crate::refactor`] covers every code path the tests exercise.
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::anyhow;
+use crate::bail;
+use crate::util::err::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// A loaded artifact collection (an `artifacts/` directory with the
 /// `manifest.tsv` written by `python/compile/aot.py`).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     /// name → (file, input arity)
@@ -24,6 +34,7 @@ pub struct Runtime {
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -48,8 +59,15 @@ impl Runtime {
                 (cols[1].to_string(), cols[2].parse::<usize>()?),
             );
         }
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+        Ok(Runtime {
+            #[cfg(feature = "pjrt")]
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
     }
 
     /// Artifact names available in the manifest.
@@ -63,6 +81,7 @@ impl Runtime {
     }
 
     /// Load + compile an artifact (cached after the first call).
+    #[cfg(feature = "pjrt")]
     pub fn load(&mut self, name: &str) -> Result<&Executable> {
         if !self.cache.contains_key(name) {
             let (file, _) = self
@@ -82,6 +101,17 @@ impl Runtime {
             self.cache.insert(name.to_string(), Executable { exe });
         }
         Ok(&self.cache[name])
+    }
+
+    /// Without the `pjrt` feature compilation is unavailable.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.manifest.contains_key(name) {
+            bail!("artifact {name:?} not in manifest");
+        }
+        let _ = &self.dir;
+        let _ = &self.cache;
+        bail!("PJRT runtime unavailable: build with `--features pjrt` (artifact {name:?})")
     }
 
     /// Convenience: load and run in one call.
@@ -116,6 +146,7 @@ impl Executable {
     ///
     /// Artifacts are lowered with `return_tuple=True`, so the single
     /// result literal is a tuple — decomposed here.
+    #[cfg(feature = "pjrt")]
     pub fn run_f32(&self, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
         let mut literals = Vec::with_capacity(inputs.len());
         for inp in inputs {
@@ -142,6 +173,12 @@ impl Executable {
             buffers.push(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
         }
         Ok(buffers)
+    }
+
+    /// Without the `pjrt` feature execution is unavailable.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, _inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        bail!("PJRT runtime unavailable: build with `--features pjrt`")
     }
 }
 

@@ -1,0 +1,316 @@
+//! Deterministic in-process test harness for the transfer engines.
+//!
+//! Wall-clock loss injection (drop with probability p whenever `send` is
+//! called) makes end-to-end traces depend on thread scheduling. This
+//! module removes that: loss decisions are driven by a **virtual clock**
+//! that advances one tick per transmitted fragment, so which fragments
+//! die is a pure function of (loss trace, per-channel seed, fragment
+//! ordinal) — never of pacing, scheduler jitter, or host load. Control
+//! packets model a reliable side channel and are never dropped (the
+//! convention the loopback experiments already follow, see
+//! [`crate::transport::channel::LossyChannel`] docs).
+//!
+//! Building blocks:
+//! * [`LossTrace`] — scripted per-fragment drop decisions: seeded
+//!   Bernoulli, explicit scripts, or phased (time-varying) schedules.
+//! * [`VirtualClock`] — fragment-count time base shared by a channel.
+//! * [`FragmentLossChannel`] — a [`Datagram`] wrapper dropping only
+//!   fragment datagrams according to its trace.
+//! * [`pool_fixture`] — one-call construction of the control + N-stream
+//!   channel sets a [`crate::coordinator::pool::TransferPool`] needs.
+
+use crate::coordinator::packet::is_fragment;
+use crate::transport::channel::{mem_pair, Datagram, MemChannel};
+use crate::util::Pcg64;
+use std::time::Duration;
+
+/// Virtual time base: one tick per fragment pushed through the channel.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    ticks: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { ticks: 0 }
+    }
+
+    /// Advance by one fragment and return the new tick count.
+    pub fn tick(&mut self) -> u64 {
+        self.ticks += 1;
+        self.ticks
+    }
+
+    /// Fragments seen so far.
+    pub fn now(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Virtual seconds at a nominal pacing rate (fragments/s).
+    pub fn now_secs(&self, rate: f64) -> f64 {
+        self.ticks as f64 / rate
+    }
+}
+
+/// Scripted per-fragment loss decisions.
+#[derive(Debug, Clone)]
+pub enum LossTrace {
+    /// Never drop.
+    None,
+    /// Independent Bernoulli(fraction) per fragment, from a seeded PRNG.
+    Seeded { fraction: f64, rng: Pcg64 },
+    /// Explicit decision list (true = drop); beyond the end, deliver.
+    Script(Vec<bool>),
+    /// Piecewise Bernoulli: `(fragments, fraction)` phases in virtual
+    /// time, cycling on exhaustion — models regime changes (the HMM's
+    /// low/medium/high states) deterministically.
+    Phased { phases: Vec<(u64, f64)>, rng: Pcg64 },
+}
+
+impl LossTrace {
+    /// Seeded Bernoulli trace.
+    pub fn seeded(fraction: f64, seed: u64) -> LossTrace {
+        assert!((0.0..=1.0).contains(&fraction), "fraction {fraction}");
+        LossTrace::Seeded { fraction, rng: Pcg64::seeded(seed) }
+    }
+
+    /// Phased (time-varying) trace.
+    pub fn phased(phases: Vec<(u64, f64)>, seed: u64) -> LossTrace {
+        assert!(!phases.is_empty());
+        assert!(phases.iter().all(|&(n, f)| n > 0 && (0.0..=1.0).contains(&f)));
+        LossTrace::Phased { phases, rng: Pcg64::seeded(seed) }
+    }
+
+    /// Decide the fate of the fragment at virtual time `tick` (0-based
+    /// ordinal of this fragment on its channel).
+    pub fn drop_at(&mut self, tick: u64) -> bool {
+        match self {
+            LossTrace::None => false,
+            LossTrace::Seeded { fraction, rng } => rng.bool_with(*fraction),
+            LossTrace::Script(script) => {
+                script.get(tick as usize).copied().unwrap_or(false)
+            }
+            LossTrace::Phased { phases, rng } => {
+                let cycle: u64 = phases.iter().map(|&(n, _)| n).sum();
+                let mut pos = tick % cycle;
+                let mut fraction = phases[phases.len() - 1].1;
+                for &(n, f) in phases.iter() {
+                    if pos < n {
+                        fraction = f;
+                        break;
+                    }
+                    pos -= n;
+                }
+                rng.bool_with(fraction)
+            }
+        }
+    }
+}
+
+/// [`Datagram`] wrapper that drops only fragment datagrams, per a
+/// deterministic [`LossTrace`] over its own [`VirtualClock`].
+pub struct FragmentLossChannel<C: Datagram> {
+    pub inner: C,
+    trace: LossTrace,
+    clock: VirtualClock,
+    fragments_sent: u64,
+    fragments_dropped: u64,
+}
+
+impl<C: Datagram> FragmentLossChannel<C> {
+    pub fn new(inner: C, trace: LossTrace) -> Self {
+        FragmentLossChannel {
+            inner,
+            trace,
+            clock: VirtualClock::new(),
+            fragments_sent: 0,
+            fragments_dropped: 0,
+        }
+    }
+
+    /// (fragments offered, fragments dropped).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.fragments_sent, self.fragments_dropped)
+    }
+
+    /// The channel's virtual clock (fragments offered so far).
+    pub fn clock(&self) -> &VirtualClock {
+        &self.clock
+    }
+}
+
+impl<C: Datagram> Datagram for FragmentLossChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        if is_fragment(buf) {
+            let tick = self.clock.now();
+            self.clock.tick();
+            self.fragments_sent += 1;
+            if self.trace.drop_at(tick) {
+                self.fragments_dropped += 1;
+                return;
+            }
+        }
+        self.inner.send(buf);
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.inner.try_recv()
+    }
+}
+
+/// Everything a pool transfer needs, with per-stream deterministic loss on
+/// the sender→receiver data paths: `(sender_control, sender_data,
+/// receiver_control, receiver_data)`.
+///
+/// `make_trace(stream)` builds each data stream's loss trace; control is
+/// lossless both ways.
+#[allow(clippy::type_complexity)]
+pub fn pool_fixture(
+    streams: usize,
+    mut make_trace: impl FnMut(usize) -> LossTrace,
+) -> (
+    MemChannel,
+    Vec<FragmentLossChannel<MemChannel>>,
+    MemChannel,
+    Vec<MemChannel>,
+) {
+    let (sender_control, receiver_control) = mem_pair();
+    let mut sender_data = Vec::with_capacity(streams);
+    let mut receiver_data = Vec::with_capacity(streams);
+    for w in 0..streams {
+        let (a, b) = mem_pair();
+        sender_data.push(FragmentLossChannel::new(a, make_trace(w)));
+        receiver_data.push(b);
+    }
+    (sender_control, sender_data, receiver_control, receiver_data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::packet::{encode_fragment_into, FragmentHeader, Packet};
+
+    fn fragment_buf(seq: u64) -> Vec<u8> {
+        let mut out = Vec::new();
+        let hdr = FragmentHeader {
+            level: 0,
+            stream: 0,
+            ftg: 0,
+            index: 0,
+            k: 1,
+            m: 0,
+            seq,
+            pass: 0,
+        };
+        encode_fragment_into(&hdr, &[0xAA; 32], &mut out);
+        out
+    }
+
+    #[test]
+    fn control_packets_never_dropped() {
+        let (a, mut b) = mem_pair();
+        let mut ch = FragmentLossChannel::new(a, LossTrace::seeded(1.0, 1));
+        for _ in 0..50 {
+            ch.send(&Packet::Done.encode());
+            ch.send(&fragment_buf(0));
+        }
+        let mut control = 0;
+        let mut frags = 0;
+        while let Some(buf) = b.try_recv() {
+            if is_fragment(&buf) {
+                frags += 1;
+            } else {
+                control += 1;
+            }
+        }
+        assert_eq!(control, 50, "control must always survive");
+        assert_eq!(frags, 0, "fraction 1.0 must kill every fragment");
+        assert_eq!(ch.stats(), (50, 50));
+    }
+
+    #[test]
+    fn seeded_trace_is_deterministic() {
+        let run = || {
+            let (a, mut b) = mem_pair();
+            let mut ch = FragmentLossChannel::new(a, LossTrace::seeded(0.3, 99));
+            for i in 0..1000 {
+                ch.send(&fragment_buf(i));
+            }
+            let mut got = Vec::new();
+            while let Some(buf) = b.try_recv() {
+                if let Ok(Packet::Fragment(h, _)) = Packet::decode(&buf) {
+                    got.push(h.seq);
+                }
+            }
+            got
+        };
+        let first = run();
+        assert_eq!(first, run(), "identical seeds must survive identically");
+        assert!(first.len() > 500 && first.len() < 900, "≈70% survive");
+    }
+
+    #[test]
+    fn script_trace_follows_script_exactly() {
+        let (a, mut b) = mem_pair();
+        let script = vec![true, false, false, true, false];
+        let mut ch = FragmentLossChannel::new(a, LossTrace::Script(script));
+        for i in 0..7 {
+            ch.send(&fragment_buf(i));
+        }
+        let mut got = Vec::new();
+        while let Some(buf) = b.try_recv() {
+            if let Ok(Packet::Fragment(h, _)) = Packet::decode(&buf) {
+                got.push(h.seq);
+            }
+        }
+        // Dropped: ordinals 0 and 3; beyond the script everything lives.
+        assert_eq!(got, vec![1, 2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn phased_trace_switches_regimes() {
+        // 500 lossless fragments then 500 at 100% loss, cycling.
+        let mut trace = LossTrace::phased(vec![(500, 0.0), (500, 1.0)], 7);
+        let first: Vec<bool> = (0..500).map(|t| trace.drop_at(t)).collect();
+        let second: Vec<bool> = (500..1000).map(|t| trace.drop_at(t)).collect();
+        let third: Vec<bool> = (1000..1500).map(|t| trace.drop_at(t)).collect();
+        assert!(first.iter().all(|&d| !d));
+        assert!(second.iter().all(|&d| d));
+        assert!(third.iter().all(|&d| !d), "phases must cycle");
+    }
+
+    #[test]
+    fn virtual_clock_counts_fragments_only() {
+        let (a, _b) = mem_pair();
+        let mut ch = FragmentLossChannel::new(a, LossTrace::None);
+        ch.send(&Packet::Done.encode());
+        ch.send(&fragment_buf(0));
+        ch.send(&Packet::Done.encode());
+        ch.send(&fragment_buf(1));
+        assert_eq!(ch.clock().now(), 2);
+        assert!((ch.clock().now_secs(1000.0) - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_fixture_wires_streams_both_ways() {
+        let (mut sc, mut sd, mut rc, mut rd) = pool_fixture(3, |_| LossTrace::None);
+        assert_eq!(sd.len(), 3);
+        assert_eq!(rd.len(), 3);
+        sc.send(b"ctl");
+        assert_eq!(rc.recv_timeout(Duration::from_millis(50)).unwrap(), b"ctl");
+        rc.send(b"ack");
+        assert_eq!(sc.recv_timeout(Duration::from_millis(50)).unwrap(), b"ack");
+        for (i, ch) in sd.iter_mut().enumerate() {
+            ch.send(&fragment_buf(i as u64));
+        }
+        for (i, ch) in rd.iter_mut().enumerate() {
+            let buf = ch.recv_timeout(Duration::from_millis(50)).unwrap();
+            match Packet::decode(&buf).unwrap() {
+                Packet::Fragment(h, _) => assert_eq!(h.seq, i as u64),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+}

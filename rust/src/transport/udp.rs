@@ -17,28 +17,49 @@ pub struct UdpChannel {
 /// pacing rate, and the default SO_RCVBUF (~200 KiB) silently drops whole
 /// FTG runs on loopback whenever the receiver thread lags — losses the
 /// protocol would misattribute to the network.
+///
+/// The `libc` crate is not in the offline vendored set, so the syscall is
+/// declared directly against the C library std already links (Linux-only;
+/// a no-op elsewhere — correctness never depends on it, only loopback
+/// throughput headroom).
+#[cfg(target_os = "linux")]
 fn grow_buffers(sock: &UdpSocket) {
     use std::os::fd::AsRawFd;
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const std::ffi::c_void,
+            optlen: u32,
+        ) -> i32;
+    }
+    const SOL_SOCKET: i32 = 1;
+    const SO_RCVBUF: i32 = 8;
+    const SO_SNDBUF: i32 = 7;
     let fd = sock.as_raw_fd();
-    let size: libc::c_int = 16 * 1024 * 1024;
+    let size: i32 = 16 * 1024 * 1024;
     unsafe {
         // Best-effort; the kernel clamps to rmem_max/wmem_max.
-        libc::setsockopt(
+        setsockopt(
             fd,
-            libc::SOL_SOCKET,
-            libc::SO_RCVBUF,
-            &size as *const _ as *const libc::c_void,
-            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            SOL_SOCKET,
+            SO_RCVBUF,
+            &size as *const i32 as *const std::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
         );
-        libc::setsockopt(
+        setsockopt(
             fd,
-            libc::SOL_SOCKET,
-            libc::SO_SNDBUF,
-            &size as *const _ as *const libc::c_void,
-            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            SOL_SOCKET,
+            SO_SNDBUF,
+            &size as *const i32 as *const std::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
         );
     }
 }
+
+#[cfg(not(target_os = "linux"))]
+fn grow_buffers(_sock: &UdpSocket) {}
 
 impl UdpChannel {
     /// Bind to `local` and direct all traffic to `peer`.

@@ -1,0 +1,159 @@
+//! Minimal error type + context plumbing (`anyhow` substitute).
+//!
+//! The offline vendored crate set has no `anyhow`, so this module carries
+//! the slice of it Janus uses: a cheap string-backed [`Error`], a
+//! [`Result`] alias, the [`anyhow!`]/[`bail!`] macros, and a [`Context`]
+//! extension trait for `Result`/`Option`. Errors render their context
+//! chain as `outer: inner` in both `{}` and `{:#}` (anyhow's `{:#}`
+//! behaviour, which the failure-injection tests match against).
+
+use std::fmt;
+
+/// String-backed error with a context chain.
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<D: fmt::Display>(msg: D) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prepend a context layer (`context: self`).
+    pub fn wrap<D: fmt::Display>(self, context: D) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`,
+// which is what makes this blanket conversion coherent alongside the
+// reflexive `From<Error> for Error` (the same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to errors (and to `None`), anyhow-style.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<D: fmt::Display>(self, context: D) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, context: D) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, context: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)? // exercises the blanket From<std::error::Error>
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e}"), "bad value 42");
+        assert_eq!(format!("{e:#}"), "bad value 42");
+        assert_eq!(format!("{e:?}"), "bad value 42");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero input");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(0).unwrap_err()).contains("zero"));
+    }
+
+    #[test]
+    fn context_chains_outer_to_inner() {
+        let e = io_fail().context("reading manifest").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.contains("reading manifest"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+        assert!(s.find("reading").unwrap() < s.find("gone").unwrap());
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32> = Ok(7);
+        let got = ok.with_context(|| panic!("must not run")).unwrap();
+        assert_eq!(got, 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing key").unwrap_err();
+        assert!(format!("{e}").contains("missing key"));
+        assert_eq!(Some(5).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_on_own_error() {
+        fn inner() -> Result<()> {
+            bail!("inner fault")
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert!(format!("{}", outer().unwrap_err()).contains("inner fault"));
+    }
+}

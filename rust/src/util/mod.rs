@@ -4,7 +4,9 @@
 //! These stand in for `rand`, `statrs`, and `proptest`, none of which are
 //! available in the offline vendored crate set (see DESIGN.md §3).
 
+pub mod crc32;
 pub mod dist;
+pub mod err;
 pub mod prng;
 pub mod prop;
 pub mod special;

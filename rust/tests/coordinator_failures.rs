@@ -206,6 +206,7 @@ fn wire_format_fuzz_never_panics() {
     let valid = Packet::Fragment(
         janus::coordinator::FragmentHeader {
             level: 1,
+            stream: 0,
             ftg: 7,
             index: 3,
             k: 28,

@@ -1,0 +1,218 @@
+//! Property tests for the erasure-coding substrate: Reed–Solomon
+//! recovery under *every* admissible erasure pattern, and the GF(2^8)
+//! field axioms (mini-prop framework; proptest is not in the offline
+//! vendored crate set).
+
+use janus::erasure::gf256;
+use janus::erasure::RsCode;
+use janus::util::prop::{check, no_shrink, PropConfig};
+use janus::util::Pcg64;
+
+/// All index subsets of `{0..n}` with exactly `j` elements.
+fn combinations(n: usize, j: usize) -> Vec<Vec<usize>> {
+    if j == 0 {
+        return vec![vec![]];
+    }
+    if n < j {
+        return vec![];
+    }
+    let mut out = combinations(n - 1, j);
+    for mut c in combinations(n - 1, j - 1) {
+        c.push(n - 1);
+        out.push(c);
+    }
+    out
+}
+
+#[test]
+fn prop_rs_roundtrips_under_every_erasure_pattern_up_to_m() {
+    // For random small (k, m): encode random data, then for EVERY loss
+    // pattern of 0..=m erasures the survivors must reconstruct the data
+    // exactly (the MDS guarantee the protocol's recovery relies on).
+    check(
+        &PropConfig { cases: 40, ..Default::default() },
+        |rng| {
+            let k = rng.range(1, 7); // 1..=6
+            let m = rng.range(0, 5); // 0..=4
+            (k, m, rng.next_u64())
+        },
+        no_shrink,
+        |&(k, m, seed)| {
+            let n = k + m;
+            let mut rng = Pcg64::seeded(seed);
+            let code = RsCode::new(k, m).map_err(|e| e.to_string())?;
+            let data: Vec<Vec<u8>> = (0..k)
+                .map(|_| {
+                    let mut f = vec![0u8; 24];
+                    rng.fill_bytes(&mut f);
+                    f
+                })
+                .collect();
+            let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+            let parity = code.encode(&refs).map_err(|e| e.to_string())?;
+            let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+            for j in 0..=m {
+                for lost in combinations(n, j) {
+                    let shards: Vec<(usize, &[u8])> = (0..n)
+                        .filter(|i| !lost.contains(i))
+                        .map(|i| (i, all[i].as_slice()))
+                        .collect();
+                    let got = code.reconstruct(&shards).map_err(|e| {
+                        format!("k={k} m={m} lost={lost:?}: {e}")
+                    })?;
+                    if got != data {
+                        return Err(format!("wrong bytes: k={k} m={m} lost={lost:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rs_exhaustive_patterns_at_paper_shape() {
+    // One fixed paper-flavoured geometry, exhaustively: (k, m) = (8, 3),
+    // every pattern of exactly m = 3 losses (C(11,3) = 165).
+    let (k, m) = (8usize, 3usize);
+    let code = RsCode::new(k, m).unwrap();
+    let mut rng = Pcg64::seeded(0xE5A);
+    let data: Vec<Vec<u8>> = (0..k)
+        .map(|_| {
+            let mut f = vec![0u8; 128];
+            rng.fill_bytes(&mut f);
+            f
+        })
+        .collect();
+    let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+    let parity = code.encode(&refs).unwrap();
+    let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+    let mut patterns = 0;
+    for lost in combinations(k + m, m) {
+        let shards: Vec<(usize, &[u8])> = (0..k + m)
+            .filter(|i| !lost.contains(i))
+            .map(|i| (i, all[i].as_slice()))
+            .collect();
+        assert_eq!(code.reconstruct(&shards).unwrap(), data, "lost={lost:?}");
+        patterns += 1;
+    }
+    assert_eq!(patterns, 165);
+}
+
+#[test]
+fn prop_rs_fails_loudly_beyond_m_losses() {
+    // m+1 erasures leave < k shards when we also drop data: the API must
+    // return an error, never fabricate data.
+    check(
+        &PropConfig { cases: 40, ..Default::default() },
+        |rng| (rng.range(2, 8), rng.range(1, 4), rng.next_u64()),
+        no_shrink,
+        |&(k, m, seed)| {
+            let code = RsCode::new(k, m).map_err(|e| e.to_string())?;
+            let mut rng = Pcg64::seeded(seed);
+            let data: Vec<Vec<u8>> = (0..k)
+                .map(|_| {
+                    let mut f = vec![0u8; 16];
+                    rng.fill_bytes(&mut f);
+                    f
+                })
+                .collect();
+            let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+            let parity = code.encode(&refs).map_err(|e| e.to_string())?;
+            let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+            // Keep only k-1 shards: reconstruction must be refused.
+            let shards: Vec<(usize, &[u8])> =
+                (0..k - 1).map(|i| (i, all[i].as_slice())).collect();
+            match code.reconstruct(&shards) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("k={k} m={m}: reconstructed from k-1 shards")),
+            }
+        },
+    );
+}
+
+// === GF(2^8) field axioms ===
+
+#[test]
+fn prop_gf256_field_axioms() {
+    check(
+        &PropConfig { cases: 512, ..Default::default() },
+        |rng| {
+            (
+                rng.next_below(256) as u8,
+                rng.next_below(256) as u8,
+                rng.next_below(256) as u8,
+            )
+        },
+        no_shrink,
+        |&(a, b, c)| {
+            // Commutativity.
+            if gf256::add(a, b) != gf256::add(b, a) {
+                return Err(format!("add not commutative: {a} {b}"));
+            }
+            if gf256::mul(a, b) != gf256::mul(b, a) {
+                return Err(format!("mul not commutative: {a} {b}"));
+            }
+            // Associativity.
+            if gf256::add(gf256::add(a, b), c) != gf256::add(a, gf256::add(b, c)) {
+                return Err(format!("add not associative: {a} {b} {c}"));
+            }
+            if gf256::mul(gf256::mul(a, b), c) != gf256::mul(a, gf256::mul(b, c)) {
+                return Err(format!("mul not associative: {a} {b} {c}"));
+            }
+            // Distributivity.
+            if gf256::mul(a, gf256::add(b, c))
+                != gf256::add(gf256::mul(a, b), gf256::mul(a, c))
+            {
+                return Err(format!("not distributive: {a} {b} {c}"));
+            }
+            // Identities and inverses.
+            if gf256::add(a, 0) != a || gf256::mul(a, 1) != a {
+                return Err(format!("identity broken at {a}"));
+            }
+            if gf256::add(a, a) != 0 {
+                return Err(format!("additive inverse broken at {a}"));
+            }
+            if a != 0 {
+                let inv = gf256::inv(a);
+                if gf256::mul(a, inv) != 1 {
+                    return Err(format!("multiplicative inverse broken at {a}"));
+                }
+                if gf256::div(b, a) != gf256::mul(b, inv) {
+                    return Err(format!("div inconsistent at {b}/{a}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gf256_mul_associativity_exhaustive_on_stride() {
+    // Deterministic lattice sweep complements the random prop: every
+    // (a, b, c) on a stride-5/7/11 grid (~110k triples).
+    for a in (0..=255u16).step_by(5) {
+        for b in (0..=255u16).step_by(7) {
+            for c in (0..=255u16).step_by(11) {
+                let (a, b, c) = (a as u8, b as u8, c as u8);
+                assert_eq!(
+                    gf256::mul(gf256::mul(a, b), c),
+                    gf256::mul(a, gf256::mul(b, c)),
+                    "({a}·{b})·{c} ≠ {a}·({b}·{c})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gf256_every_nonzero_element_has_unique_inverse() {
+    let mut seen = [false; 256];
+    for a in 1..=255u8 {
+        let inv = gf256::inv(a);
+        assert_eq!(gf256::mul(a, inv), 1, "a={a}");
+        assert!(!seen[inv as usize] || inv == a && a == 1, "inverse collision at {a}");
+        seen[inv as usize] = true;
+    }
+    assert!(!seen[0], "zero can never be an inverse");
+}
