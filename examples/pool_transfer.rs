@@ -1,15 +1,16 @@
-//! Multi-stream TransferPool walkthrough — shard a refactored dataset
-//! across 4 concurrent paced streams over a deterministic lossy WAN
-//! substitute, watch the shared λ̂ estimator converge, and verify the
-//! delivery is byte-exact.
+//! Multi-stream transfer walkthrough over the `janus::api` facade —
+//! shard a refactored dataset across 4 concurrent paced streams over a
+//! deterministic lossy WAN substitute, watch the shared λ̂ estimator
+//! converge through typed observer events, and verify the delivery is
+//! byte-exact.
 //!
 //! Run: `cargo run --release --example pool_transfer [-- --streams 8]`
 
+use janus::api::{run_pair, Contract, Dataset, EventLog, TransferEvent, TransferSpec};
 use janus::config::Args;
-use janus::coordinator::{PoolConfig, ReceiverConfig, TransferPool};
 use janus::model::NetParams;
 use janus::refactor::{decompose, generate, levels_to_bytes, GrfConfig};
-use janus::testkit::{pool_fixture, LossTrace};
+use janus::testkit::{loss_transport_pair, LossTrace};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -24,64 +25,78 @@ fn main() {
     let levels = decompose(&vol, 4);
     let bytes = levels_to_bytes(&levels);
     let eps = vec![0.004, 0.0005, 0.00006, 0.0000001];
-    let total: usize = bytes.iter().map(|b| b.len()).sum();
+    let dataset = Dataset::new(bytes, eps).expect("well-formed dataset");
+    let total = dataset.total_bytes();
     println!(
         "dataset: {dim}³ field → {} levels, {:.1} MB total",
-        bytes.len(),
+        dataset.levels.len(),
         total as f64 / 1e6
     );
 
-    // 2. A pool over N streams, each paced independently.
+    // 2. One spec describes the whole transfer: contract, streams, pacing.
     let rate = 100_000.0;
-    let pool = TransferPool::new(PoolConfig {
-        net: NetParams { t: 0.0005, r: rate, lambda: 0.0, n: 32, s: 4096 },
-        streams,
-        error_bound: 1e-7,
-        initial_lambda: loss * rate * streams as f64,
-        max_duration: Duration::from_secs(300),
-    })
-    .expect("valid pool config");
+    let spec = TransferSpec::builder()
+        .contract(Contract::Fidelity(1e-7))
+        .streams(streams)
+        .net(NetParams { t: 0.0005, r: rate, lambda: 0.0, n: 32, s: 4096 })
+        .initial_lambda(loss * rate * streams as f64)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(10))
+        .max_duration(Duration::from_secs(300))
+        .build()
+        .expect("valid transfer spec");
 
-    // 3. Deterministic loss on every data stream; lossless control.
-    let (mut sc, sd, mut rc, rd) =
-        pool_fixture(streams, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1)));
-    let rcfg = ReceiverConfig {
-        t_w: 0.25,
-        idle_timeout: Duration::from_secs(10),
-        max_duration: Duration::from_secs(300),
-    };
+    // 3. Deterministic loss on every data stream; lossless control. The
+    //    observer sees the protocol live: passes, parity, λ̂, streams.
+    let (sender_t, receiver_t) =
+        loss_transport_pair(streams, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1)));
+    let mut events = EventLog::new();
     let t0 = Instant::now();
-    let (s_rep, r_rep) = pool
-        .run_session(&mut sc, sd, &mut rc, rd, &rcfg, &bytes, &eps)
+    let report = run_pair(&spec, sender_t, receiver_t, &dataset, Some(&mut events), None)
         .expect("pool transfer");
     let wall = t0.elapsed().as_secs_f64();
 
     // 4. Byte-exactness + the per-pass adaptation story.
-    for (li, (got, want)) in r_rep.levels.iter().zip(&bytes).enumerate() {
+    for (li, (got, want)) in report.received.levels.iter().zip(&dataset.levels).enumerate() {
         assert_eq!(got.as_ref().unwrap(), want, "level {li} must be exact");
     }
-    println!(
-        "\n{:<6} {:>4} {:>10} {:>10} {:>12} {:>10}",
-        "pass", "m", "ftgs", "fragments", "λ̂ (loss/s)", "lost ftgs"
-    );
-    for p in &s_rep.trace {
+    if let Some(trace) = report.sent.trace() {
         println!(
-            "{:<6} {:>4} {:>10} {:>10} {:>12.0} {:>10}",
-            p.pass, p.m, p.ftgs, p.fragments, p.lambda_hat, p.lost_ftgs
+            "\n{:<6} {:>4} {:>10} {:>10} {:>12} {:>10}",
+            "pass", "m", "ftgs", "fragments", "λ̂ (loss/s)", "lost ftgs"
         );
+        for p in trace {
+            println!(
+                "{:<6} {:>4} {:>10} {:>10} {:>12.0} {:>10}",
+                p.pass, p.m, p.ftgs, p.fragments, p.lambda_hat, p.lost_ftgs
+            );
+        }
     }
+    let stream_events = events
+        .filtered(|e| matches!(e, TransferEvent::StreamFinished { .. }))
+        .len();
+    let lambda_events = events
+        .filtered(|e| matches!(e, TransferEvent::LambdaUpdated { .. }))
+        .len();
     println!(
-        "\n{} streams delivered {:.1} MB byte-exact in {wall:.2}s \
+        "\nobserver saw {} events ({} StreamFinished, {} LambdaUpdated)",
+        events.events.len(),
+        stream_events,
+        lambda_events
+    );
+    println!(
+        "{} streams delivered {:.1} MB byte-exact in {wall:.2}s \
          ({:.1} MB/s aggregate; {} RS-recovered groups, {} retransmission passes)",
         streams,
         total as f64 / 1e6,
         total as f64 / 1e6 / wall,
-        r_rep.groups_recovered,
-        s_rep.passes
+        report.received.groups_recovered,
+        report.sent.passes
     );
     let expect_lambda = loss * rate * streams as f64;
-    println!(
-        "shared λ̂ after pass 0: {:.0} losses/s (injected regime ≈ {expect_lambda:.0})",
-        s_rep.lambda_history[0]
-    );
+    if let Some(first) = report.sent.lambda_history.first() {
+        println!(
+            "shared λ̂ after pass 0: {first:.0} losses/s (injected regime ≈ {expect_lambda:.0})"
+        );
+    }
 }

@@ -1,16 +1,18 @@
-//! Real-network (loopback) experiment — the Fig. 6 / Table 2 path.
+//! Real-network (loopback) experiment — the Fig. 6 / Table 2 path,
+//! driven through the `janus::api` facade.
 //!
 //! Runs the actual coordinator engines (threads, real UDP sockets on
 //! localhost, Reed–Solomon codec, wire format) with injected fragment
 //! loss as the controlled-WAN substitute:
 //!
-//!   * Alg. 1 (guaranteed error bound) with adaptive redundancy;
-//!   * Alg. 2 (guaranteed time) at 90% of Alg. 1's duration;
+//!   * `Contract::Fidelity` (Alg. 1, guaranteed error bound) with
+//!     adaptive redundancy;
+//!   * `Contract::Deadline` (Alg. 2) at 90% of Alg. 1's duration;
 //!   * repeated over several loss fractions like the paper's five runs.
 //!
 //! Run: `cargo run --release --example realnet_loopback`
 
-use janus::coordinator::{Contract, ReceiverConfig, SenderConfig};
+use janus::api::{run_pair, ChannelTransport, Contract, Dataset, TransferSpec};
 use janus::model::NetParams;
 use janus::refactor::{decompose, generate, levels_to_bytes, reconstruct, GrfConfig};
 use janus::transport::{udp_pair, LossyChannel};
@@ -30,7 +32,8 @@ fn main() -> janus::util::err::Result<()> {
             eps[i] = eps[i - 1] * 0.999;
         }
     }
-    let total: u64 = bytes.iter().map(|b| b.len() as u64).sum();
+    let dataset = Dataset::new(bytes, eps.clone())?;
+    let total = dataset.total_bytes();
     println!(
         "payload: {dim}³ field → 4 levels, {total} bytes total, ε {:?}",
         eps.iter().map(|e| format!("{e:.1e}")).collect::<Vec<_>>()
@@ -39,6 +42,17 @@ fn main() -> janus::util::err::Result<()> {
     // Pacing low enough that loopback never overruns socket buffers.
     let rate = 30_000.0;
     let net = NetParams { t: 0.0005, r: rate, n: 32, s: 4096, lambda: 0.0 };
+    let spec_for = |contract: Contract, initial_lambda: f64| {
+        TransferSpec::builder()
+            .contract(contract)
+            .net(net)
+            .initial_lambda(initial_lambda)
+            .lambda_window(0.25)
+            .idle_timeout(Duration::from_secs(10))
+            .max_duration(Duration::from_secs(120))
+            .build()
+            .expect("loopback spec")
+    };
 
     println!(
         "\n{:<8} {:>10} {:>12} {:>10} {:>12} {:>8}",
@@ -47,29 +61,14 @@ fn main() -> janus::util::err::Result<()> {
     for (run, loss_fraction) in [0.001, 0.01, 0.02, 0.03, 0.05].iter().enumerate() {
         // ---- Alg. 1: guaranteed error bound over lossy UDP ----
         let (tx, rx) = udp_pair()?;
-        let lossy = LossyChannel::new(tx, *loss_fraction, 1000 + run as u64);
-        let scfg = SenderConfig {
-            net,
-            contract: Contract::ErrorBound(eps[3]),
-            initial_lambda: loss_fraction * rate,
-            max_duration: Duration::from_secs(120),
-        };
-        let rcfg = ReceiverConfig {
-            t_w: 0.25,
-            idle_timeout: Duration::from_secs(10),
-            max_duration: Duration::from_secs(120),
-        };
-        let (s1, r1) = janus::coordinator::run_session(
-            lossy,
-            rx,
-            scfg,
-            rcfg.clone(),
-            bytes.clone(),
-            eps.clone(),
-        )?;
-        assert_eq!(r1.levels_recovered, 4, "Alg.1 must deliver everything");
+        let sender_t = ChannelTransport::new(LossyChannel::new(tx, *loss_fraction, 1000 + run as u64));
+        let receiver_t = ChannelTransport::new(rx);
+        let spec = spec_for(Contract::Fidelity(eps[3]), loss_fraction * rate);
+        let r1 = run_pair(&spec, sender_t, receiver_t, &dataset, None, None)?;
+        assert_eq!(r1.received.levels_recovered, 4, "Alg.1 must deliver everything");
         // Verify the delivered bytes decode to the exact field.
         let got: Vec<Vec<f32>> = r1
+            .received
             .levels
             .iter()
             .map(|l| janus::refactor::bytes_to_level(l.as_ref().unwrap()))
@@ -80,30 +79,20 @@ fn main() -> janus::util::err::Result<()> {
         assert!(err <= eps[3] * 1.001, "ε violated after real transfer: {err}");
 
         // ---- Alg. 2: deadline at 90% of Alg. 1's wall time ----
-        let tau = 0.9 * r1.duration;
+        let tau = 0.9 * r1.received.duration;
         let (tx2, rx2) = udp_pair()?;
-        let lossy2 = LossyChannel::new(tx2, *loss_fraction, 2000 + run as u64);
-        let scfg2 = SenderConfig {
-            net,
-            contract: Contract::Deadline(tau),
-            initial_lambda: loss_fraction * rate,
-            max_duration: Duration::from_secs(120),
-        };
-        let (_s2, r2) = janus::coordinator::run_session(
-            lossy2,
-            rx2,
-            scfg2,
-            rcfg,
-            bytes.clone(),
-            eps.clone(),
-        )?;
+        let sender_t2 =
+            ChannelTransport::new(LossyChannel::new(tx2, *loss_fraction, 2000 + run as u64));
+        let receiver_t2 = ChannelTransport::new(rx2);
+        let spec2 = spec_for(Contract::Deadline(tau), loss_fraction * rate);
+        let r2 = run_pair(&spec2, sender_t2, receiver_t2, &dataset, None, None)?;
         println!(
             "{:<8} {:>10.3} {:>12} {:>10.3} {:>12} {:>8}",
             format!("{:.1}%", loss_fraction * 100.0),
-            r1.duration,
-            s1.passes,
-            r2.duration,
-            format!("{}/{}", r2.levels_recovered, r2.levels.len()),
+            r1.received.duration,
+            r1.sent.passes,
+            r2.received.duration,
+            format!("{}/{}", r2.received.levels_recovered, r2.received.levels.len()),
             if err <= eps[3] * 1.001 { "✓" } else { "✗" },
         );
     }

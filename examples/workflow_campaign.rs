@@ -10,9 +10,10 @@
 //!
 //! Run: `cargo run --release --example workflow_campaign`
 
+use janus::api::Contract;
 use janus::model::{LevelSchedule, NetParams};
 use janus::sim::HmmLoss;
-use janus::workflow::{run_campaign, Job, JobContract, SchedulerConfig};
+use janus::workflow::{run_campaign, Job, SchedulerConfig};
 
 fn main() {
     let net = NetParams::paper_default(383.0);
@@ -21,12 +22,12 @@ fn main() {
     let sched_small = LevelSchedule::paper_nyx_scaled(1000); // ~27 MB each
 
     let jobs = vec![
-        Job { id: 0, sched: sched_big.clone(), contract: JobContract::ErrorBound(1e-7), weight: 1, arrival: 0.0 },
-        Job { id: 1, sched: sched_big.clone(), contract: JobContract::ErrorBound(1e-7), weight: 1, arrival: 0.0 },
-        Job { id: 2, sched: sched_small.clone(), contract: JobContract::Deadline(20.0), weight: 4, arrival: 2.0 },
-        Job { id: 3, sched: sched_big.clone(), contract: JobContract::ErrorBound(1e-7), weight: 1, arrival: 5.0 },
-        Job { id: 4, sched: sched_small.clone(), contract: JobContract::Deadline(15.0), weight: 4, arrival: 30.0 },
-        Job { id: 5, sched: sched_big, contract: JobContract::ErrorBound(1e-7), weight: 3, arrival: 40.0 },
+        Job { id: 0, sched: sched_big.clone(), contract: Contract::Fidelity(1e-7), weight: 1, arrival: 0.0 },
+        Job { id: 1, sched: sched_big.clone(), contract: Contract::Fidelity(1e-7), weight: 1, arrival: 0.0 },
+        Job { id: 2, sched: sched_small.clone(), contract: Contract::Deadline(20.0), weight: 4, arrival: 2.0 },
+        Job { id: 3, sched: sched_big.clone(), contract: Contract::Fidelity(1e-7), weight: 1, arrival: 5.0 },
+        Job { id: 4, sched: sched_small.clone(), contract: Contract::Deadline(15.0), weight: 4, arrival: 30.0 },
+        Job { id: 5, sched: sched_big, contract: Contract::Fidelity(1e-7), weight: 3, arrival: 40.0 },
     ];
 
     let mut loss = HmmLoss::paper_default_with_ttl(2026, 1.0 / net.r);

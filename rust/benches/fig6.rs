@@ -11,7 +11,7 @@
 //! Paper claim: TCP/Globus vary wildly across runs; Janus is faster and
 //! far more stable.
 
-use janus::coordinator::{run_session, Contract, ReceiverConfig, SenderConfig};
+use janus::api::{run_pair, ChannelTransport, Contract, Dataset, TransferSpec};
 use janus::metrics::bench::{bench_scale, BenchTable};
 use janus::model::{LevelSchedule, NetParams};
 use janus::sim::globus::{run_globus, GlobusConfig};
@@ -36,6 +36,7 @@ fn main() -> janus::util::err::Result<()> {
         })
         .collect();
     let total: u64 = sched.sizes.iter().sum();
+    let dataset = Dataset::new(levels.clone(), eps.clone())?;
 
     // Loopback pacing: fast enough to finish quickly, slow enough that
     // the kernel never drops for us (we inject losses ourselves).
@@ -70,22 +71,21 @@ fn main() -> janus::util::err::Result<()> {
         )
         .total_time;
 
-        // Janus over real UDP sockets.
+        // Janus over real UDP sockets, driven through the api facade.
         let (tx, rx) = udp_pair()?;
-        let lossy = LossyChannel::new(tx, frac, 7_000 + run as u64);
-        let scfg = SenderConfig {
-            net,
-            contract: Contract::ErrorBound(eps[3]),
-            initial_lambda: frac * rate,
-            max_duration: Duration::from_secs(300),
-        };
-        let rcfg = ReceiverConfig {
-            t_w: 0.25,
-            idle_timeout: Duration::from_secs(15),
-            max_duration: Duration::from_secs(300),
-        };
-        let (s_rep, r_rep) =
-            run_session(lossy, rx, scfg, rcfg, levels.clone(), eps.clone())?;
+        let sender_t = ChannelTransport::new(LossyChannel::new(tx, frac, 7_000 + run as u64));
+        let receiver_t = ChannelTransport::new(rx);
+        let spec = TransferSpec::builder()
+            .contract(Contract::Fidelity(eps[3]))
+            .net(net)
+            .initial_lambda(frac * rate)
+            .lambda_window(0.25)
+            .idle_timeout(Duration::from_secs(15))
+            .max_duration(Duration::from_secs(300))
+            .build()
+            .expect("fig6 spec");
+        let rep = run_pair(&spec, sender_t, receiver_t, &dataset, None, None)?;
+        let (s_rep, r_rep) = (&rep.sent, &rep.received);
         assert_eq!(r_rep.levels_recovered, 4, "run {run}: Janus must deliver all levels");
         for (got, want) in r_rep.levels.iter().zip(&levels) {
             assert_eq!(got.as_ref().unwrap(), want, "run {run}: bytes must be exact");

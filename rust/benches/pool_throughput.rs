@@ -1,6 +1,7 @@
-//! Multi-stream TransferPool throughput vs the single-stream session
-//! path (acceptance gate: ≥ 2× aggregate encode+transfer throughput on
-//! the same input with 4 streams).
+//! Multi-stream transfer throughput vs the single-stream path, both
+//! driven through the `janus::api` facade (acceptance gate: ≥ 2×
+//! aggregate encode+transfer throughput on the same input with 4
+//! streams).
 //!
 //! Both paths carry the same dataset over in-memory channels with the
 //! same per-stream pacing rate; the pool's win comes from N concurrent
@@ -8,22 +9,18 @@
 //! Petascale-DTN many-streams effect the tentpole reproduces. A second
 //! table isolates the encode side via `measure_parallel_ec_rate`.
 
-use janus::coordinator::{
-    run_session, Contract, PoolConfig, ReceiverConfig, SenderConfig, TransferPool,
-};
+use janus::api::{mem_transport_pair, run_pair, Contract, Dataset, TransferSpec};
 use janus::erasure::{measure_ec_rate, measure_parallel_ec_rate};
 use janus::metrics::bench::{bench_runs, bench_scale, BenchTable};
 use janus::model::NetParams;
-use janus::testkit::{pool_fixture, LossTrace};
-use janus::transport::channel::mem_pair;
 use janus::util::{stats, Pcg64};
 use std::time::{Duration, Instant};
 
-fn dataset(total: usize) -> (Vec<Vec<u8>>, Vec<f64>) {
+fn dataset(total: usize) -> Dataset {
     let mut rng = Pcg64::seeded(0x9001);
     let sizes = [total / 10, total * 3 / 10, total * 6 / 10];
     let eps = vec![0.004, 0.0005, 0.0000001];
-    (
+    Dataset::new(
         sizes
             .iter()
             .map(|&sz| {
@@ -34,6 +31,7 @@ fn dataset(total: usize) -> (Vec<Vec<u8>>, Vec<f64>) {
             .collect(),
         eps,
     )
+    .expect("bench dataset")
 }
 
 fn main() {
@@ -41,8 +39,8 @@ fn main() {
     let scale = bench_scale(10);
     let runs = bench_runs(3);
     let total = 120 * 1024 * 1024 / scale as usize;
-    let (levels, eps) = dataset(total);
-    let bytes: usize = levels.iter().map(|l| l.len()).sum();
+    let dataset = dataset(total);
+    let bytes = dataset.total_bytes() as usize;
     let per_stream_rate = 100_000.0; // fragments/s, 4 KiB each
     let net = NetParams { t: 0.0005, r: per_stream_rate, lambda: 0.0, n: 32, s: 4096 };
     println!(
@@ -50,70 +48,49 @@ fn main() {
         bytes as f64 / 1e6
     );
 
+    let spec_at = |streams: usize| {
+        TransferSpec::builder()
+            .contract(Contract::Fidelity(1e-7))
+            .streams(streams)
+            .net(net)
+            .lambda_window(0.25)
+            .idle_timeout(Duration::from_secs(30))
+            .max_duration(Duration::from_secs(600))
+            .build()
+            .expect("bench spec")
+    };
+    let mbps_at = |streams: usize| -> Vec<f64> {
+        let spec = spec_at(streams);
+        let mut out = Vec::new();
+        for _ in 0..runs {
+            let (sender_t, receiver_t) = mem_transport_pair(streams);
+            let t0 = Instant::now();
+            let rep = run_pair(&spec, sender_t, receiver_t, &dataset, None, None).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            assert_eq!(rep.received.levels_recovered, 3, "must deliver");
+            assert_eq!(rep.sent.passes, 0);
+            out.push(bytes as f64 / 1e6 / wall);
+        }
+        out
+    };
+
     let mut table = BenchTable::new(
         "pool_throughput",
         vec!["path", "MB_per_s", "wall_s", "passes"],
     );
     table.header();
 
-    // --- Single-stream baseline: the plain session engine. ---
-    let mut single_mbps = Vec::new();
-    for _ in 0..runs {
-        let (a, b) = mem_pair();
-        let scfg = SenderConfig {
-            net,
-            contract: Contract::ErrorBound(1e-7),
-            initial_lambda: 0.0,
-            max_duration: Duration::from_secs(600),
-        };
-        let rcfg = ReceiverConfig {
-            t_w: 0.25,
-            idle_timeout: Duration::from_secs(30),
-            max_duration: Duration::from_secs(600),
-        };
-        let t0 = Instant::now();
-        let (_s, r) = run_session(a, b, scfg, rcfg, levels.clone(), eps.clone()).unwrap();
-        let wall = t0.elapsed().as_secs_f64();
-        assert_eq!(r.levels_recovered, 3, "baseline must deliver");
-        single_mbps.push(bytes as f64 / 1e6 / wall);
-    }
+    // --- Single-stream baseline: the facade's streams = 1 route. ---
+    let single_mbps = mbps_at(1);
     table.row(
         "single-stream session",
         vec![BenchTable::cell(&single_mbps), "-".into(), "0".into()],
     );
 
-    // --- Pool at 1, 2, 4, 8 streams. ---
-    let pool_mbps_at = |streams: usize| -> Vec<f64> {
-        let mut out = Vec::new();
-        for _ in 0..runs {
-            let pool = TransferPool::new(PoolConfig {
-                net,
-                streams,
-                error_bound: 1e-7,
-                initial_lambda: 0.0,
-                max_duration: Duration::from_secs(600),
-            })
-            .unwrap();
-            let (mut sc, sd, mut rc, rd) = pool_fixture(streams, |_| LossTrace::None);
-            let rcfg = ReceiverConfig {
-                t_w: 0.25,
-                idle_timeout: Duration::from_secs(30),
-                max_duration: Duration::from_secs(600),
-            };
-            let t0 = Instant::now();
-            let (s_rep, r_rep) = pool
-                .run_session(&mut sc, sd, &mut rc, rd, &rcfg, &levels, &eps)
-                .unwrap();
-            let wall = t0.elapsed().as_secs_f64();
-            assert_eq!(r_rep.levels_recovered, 3, "pool must deliver");
-            assert_eq!(s_rep.passes, 0);
-            out.push(bytes as f64 / 1e6 / wall);
-        }
-        out
-    };
-    let mut by_streams = Vec::new();
-    for streams in [1usize, 2, 4, 8] {
-        let mbps = pool_mbps_at(streams);
+    // --- Pool at 2, 4, 8 streams (the facade's pooled route). ---
+    let mut by_streams = vec![(1usize, stats::median(&single_mbps))];
+    for streams in [2usize, 4, 8] {
+        let mbps = mbps_at(streams);
         table.row(
             format!("pool {streams} streams"),
             vec![BenchTable::cell(&mbps), "-".into(), "0".into()],

@@ -6,7 +6,7 @@
 //! 4 of 5 runs land at ε_2, one at ε_1 — i.e. the deadline is always met
 //! at the cost of one or two tail levels.
 
-use janus::coordinator::{run_session, Contract, ReceiverConfig, SenderConfig};
+use janus::api::{run_pair, ChannelTransport, Contract, Dataset, TransferSpec};
 use janus::metrics::bench::{bench_scale, BenchTable};
 use janus::model::{LevelSchedule, NetParams};
 use janus::transport::{udp_pair, LossyChannel};
@@ -27,6 +27,7 @@ fn main() -> janus::util::err::Result<()> {
             v
         })
         .collect();
+    let dataset = Dataset::new(levels.clone(), eps.clone())?;
 
     let rate = 30_000.0;
     let net = NetParams { t: 0.0005, r: rate, n: 32, s: 4096, lambda: 0.0 };
@@ -38,37 +39,34 @@ fn main() -> janus::util::err::Result<()> {
     );
     table.header();
 
-    let rcfg = ReceiverConfig {
-        t_w: 0.25,
-        idle_timeout: Duration::from_secs(15),
-        max_duration: Duration::from_secs(300),
+    let spec_for = |contract: Contract, frac: f64| {
+        TransferSpec::builder()
+            .contract(contract)
+            .net(net)
+            .initial_lambda(frac * rate)
+            .lambda_window(0.25)
+            .idle_timeout(Duration::from_secs(15))
+            .max_duration(Duration::from_secs(300))
+            .build()
+            .expect("table2 spec")
     };
     let mut met_deadline = 0;
     for (run, &frac) in run_loss.iter().enumerate() {
         // Alg. 1 first (its duration sets the deadline).
         let (tx, rx) = udp_pair()?;
-        let lossy = LossyChannel::new(tx, frac, 100 + run as u64);
-        let scfg = SenderConfig {
-            net,
-            contract: Contract::ErrorBound(eps[3]),
-            initial_lambda: frac * rate,
-            max_duration: Duration::from_secs(300),
-        };
-        let (_, r1) =
-            run_session(lossy, rx, scfg, rcfg.clone(), levels.clone(), eps.clone())?;
+        let sender_t = ChannelTransport::new(LossyChannel::new(tx, frac, 100 + run as u64));
+        let spec1 = spec_for(Contract::Fidelity(eps[3]), frac);
+        let rep1 = run_pair(&spec1, sender_t, ChannelTransport::new(rx), &dataset, None, None)?;
+        let r1 = &rep1.received;
         let tau = 0.9 * r1.duration;
 
         // Alg. 2 at 90% of that time.
         let (tx2, rx2) = udp_pair()?;
-        let lossy2 = LossyChannel::new(tx2, frac, 200 + run as u64);
-        let scfg2 = SenderConfig {
-            net,
-            contract: Contract::Deadline(tau),
-            initial_lambda: frac * rate,
-            max_duration: Duration::from_secs(300),
-        };
-        let (_, r2) =
-            run_session(lossy2, rx2, scfg2, rcfg.clone(), levels.clone(), eps.clone())?;
+        let sender_t2 = ChannelTransport::new(LossyChannel::new(tx2, frac, 200 + run as u64));
+        let spec2 = spec_for(Contract::Deadline(tau), frac);
+        let rep2 =
+            run_pair(&spec2, sender_t2, ChannelTransport::new(rx2), &dataset, None, None)?;
+        let r2 = &rep2.received;
         let eps_label = format!("eps_{}", r2.levels_recovered);
         if r2.duration <= tau * 1.25 {
             // 25% slack for wall-clock noise on loopback.

@@ -1,0 +1,146 @@
+//! [`Endpoint`] — the one entry pair (`send` / `receive`) every Janus
+//! transfer goes through.
+
+use super::observer::{EventSink, TransferEvent, TransferObserver};
+use super::report::{ReceiveSummary, SendSummary};
+use super::spec::{Contract, Dataset, TransferSpec};
+use super::transport::Transport;
+use crate::coordinator::pool::{PoolConfig, TransferPool};
+use crate::coordinator::receiver::{transfer_receiver, ReceiverConfig};
+use crate::coordinator::sender::{transfer_sender, SenderConfig};
+use crate::transport::channel::Datagram;
+use crate::util::err::Result;
+use crate::bail;
+use std::sync::Mutex;
+
+/// One side of a transfer, bound to a validated [`TransferSpec`].
+///
+/// `send` and `receive` route internally: `streams == 1` runs the
+/// single-stream engine (all three contracts) over the transport's
+/// control channel; `streams > 1` runs the multi-stream
+/// [`TransferPool`] (retransmitting contracts only — enforced when the
+/// spec is built) over control + per-stream data channels.
+#[derive(Debug, Clone)]
+pub struct Endpoint {
+    spec: TransferSpec,
+}
+
+impl Endpoint {
+    pub fn new(spec: TransferSpec) -> Endpoint {
+        Endpoint { spec }
+    }
+
+    pub fn spec(&self) -> &TransferSpec {
+        &self.spec
+    }
+
+    /// Run this endpoint as the sender of `dataset`. Blocks until the
+    /// contract is fulfilled (or fails). `observer`, when given, receives
+    /// typed [`TransferEvent`]s as the transfer progresses.
+    pub fn send(
+        &self,
+        transport: &mut dyn Transport,
+        dataset: &Dataset,
+        observer: Option<&mut dyn TransferObserver>,
+    ) -> Result<SendSummary> {
+        with_sink(observer, |sink| self.send_inner(transport, dataset, sink))
+    }
+
+    /// Run this endpoint as the receiver. Blocks until the sender closes
+    /// the transfer (or a timeout in the spec fires).
+    pub fn receive(
+        &self,
+        transport: &mut dyn Transport,
+        observer: Option<&mut dyn TransferObserver>,
+    ) -> Result<ReceiveSummary> {
+        with_sink(observer, |sink| self.receive_inner(transport, sink))
+    }
+
+    fn send_inner(
+        &self,
+        transport: &mut dyn Transport,
+        dataset: &Dataset,
+        sink: EventSink<'_>,
+    ) -> Result<SendSummary> {
+        let spec = &self.spec;
+        let mut control = transport.open_control()?;
+        if spec.streams() == 1 {
+            let cfg = SenderConfig {
+                net: spec.net(),
+                contract: spec.contract(),
+                initial_lambda: spec.initial_lambda(),
+                max_duration: spec.max_duration(),
+            };
+            let rep = transfer_sender(control.as_mut(), &cfg, &dataset.levels, &dataset.eps, sink)?;
+            Ok(rep.into())
+        } else {
+            let bound = match spec.contract() {
+                Contract::Fidelity(b) => b,
+                Contract::BestEffort => dataset.finest_eps(),
+                // Unreachable: TransferSpecBuilder::build rejects it.
+                Contract::Deadline(_) => bail!("deadline contracts are single-stream"),
+            };
+            let pool = TransferPool::new(PoolConfig {
+                net: spec.net(),
+                streams: spec.streams(),
+                error_bound: bound,
+                initial_lambda: spec.initial_lambda(),
+                max_duration: spec.max_duration(),
+            })?;
+            let mut data = open_data_channels(transport, spec.streams())?;
+            let rep =
+                pool.pooled_sender(&mut control, &mut data, &dataset.levels, &dataset.eps, sink)?;
+            Ok(rep.into())
+        }
+    }
+
+    fn receive_inner(
+        &self,
+        transport: &mut dyn Transport,
+        sink: EventSink<'_>,
+    ) -> Result<ReceiveSummary> {
+        let spec = &self.spec;
+        let rcfg = ReceiverConfig {
+            t_w: spec.lambda_window(),
+            idle_timeout: spec.idle_timeout(),
+            max_duration: spec.max_duration(),
+        };
+        let mut control = transport.open_control()?;
+        if spec.streams() == 1 {
+            let rep = transfer_receiver(control.as_mut(), &rcfg, sink)?;
+            Ok(rep.into())
+        } else {
+            let data = open_data_channels(transport, spec.streams())?;
+            let rep = TransferPool::pooled_receiver(&mut control, data, &rcfg, sink)?;
+            Ok(rep.into())
+        }
+    }
+}
+
+fn open_data_channels(
+    transport: &mut dyn Transport,
+    streams: usize,
+) -> Result<Vec<Box<dyn Datagram>>> {
+    (0..streams).map(|w| transport.open_data(w)).collect()
+}
+
+/// Bridge the caller's `&mut` observer into the engines' `Fn + Sync`
+/// sink: worker threads serialize delivery through a mutex, so
+/// `on_event` is never entered concurrently.
+fn with_sink<R>(
+    observer: Option<&mut dyn TransferObserver>,
+    f: impl FnOnce(EventSink<'_>) -> Result<R>,
+) -> Result<R> {
+    match observer {
+        None => f(None),
+        Some(obs) => {
+            let cell = Mutex::new(obs);
+            let sink = move |event: TransferEvent| {
+                if let Ok(mut o) = cell.lock() {
+                    o.on_event(&event);
+                }
+            };
+            f(Some(&sink))
+        }
+    }
+}

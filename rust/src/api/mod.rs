@@ -1,0 +1,94 @@
+//! # `janus::api` — the transfer facade
+//!
+//! The one public way to run a Janus transfer. Callers declare an intent
+//! — *deliver this dataset under this contract* — and the facade picks
+//! the engine, the streams, and the redundancy (PAPER.md §3, Eq. 8):
+//!
+//! ```text
+//! TransferSpec::builder() ──build()──▶ TransferSpec (validated, immutable)
+//!                                           │
+//!                      Endpoint::new(spec) ─┤─ Transport (UDP / mem / testkit)
+//!                                           ▼
+//!                 Endpoint::send(…) / Endpoint::receive(…)
+//!                   │ streams == 1 → single-stream engine (all contracts)
+//!                   │ streams  > 1 → TransferPool        (retransmitting)
+//!                   ▼
+//!        TransferObserver ◀─ typed events (PassStarted, LambdaUpdated,
+//!                             ParityAdapted, GroupRecovered, StreamFinished)
+//!                   ▼
+//!        SendSummary / ReceiveSummary / TransferReport
+//! ```
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use janus::api::{mem_transport_pair, run_pair, Contract, Dataset, TransferSpec};
+//!
+//! let dataset = Dataset::new(
+//!     vec![vec![1u8; 40_000], vec![2u8; 160_000]],
+//!     vec![0.004, 0.0000001],
+//! )?;
+//! let spec = TransferSpec::builder()
+//!     .contract(Contract::Fidelity(1e-7))
+//!     .streams(4)
+//!     .pacing_rate(100_000.0)
+//!     .build()?;
+//! let (sender_t, receiver_t) = mem_transport_pair(spec.streams());
+//! let report = run_pair(&spec, sender_t, receiver_t, &dataset, None, None)?;
+//! assert_eq!(report.received.levels_recovered, 2);
+//! # Ok::<(), janus::util::err::Error>(())
+//! ```
+//!
+//! The pre-facade free functions (`coordinator::run_sender`,
+//! `run_receiver`, `run_session`, `TransferPool::run_*`) survive only as
+//! `#[deprecated]` shims; CI builds the examples with `-D deprecated` so
+//! migrated call sites cannot regress onto them.
+
+pub mod endpoint;
+pub mod observer;
+pub mod report;
+pub mod spec;
+pub mod transport;
+
+pub use endpoint::Endpoint;
+pub use observer::{EventLog, FnObserver, TransferEvent, TransferObserver};
+pub use report::{ReceiveDetail, ReceiveSummary, SendDetail, SendSummary, TransferReport};
+pub use spec::{Contract, Dataset, SpecError, TransferSpec, TransferSpecBuilder};
+pub use transport::{
+    mem_transport_pair, ChannelTransport, StagedTransport, Transport, UdpTransport,
+};
+
+use crate::anyhow;
+use crate::util::err::Result;
+
+/// Run a full transfer in-process: the receiver on a spawned thread, the
+/// sender on the caller's, both built from the same `spec`. This is the
+/// harness behind the examples, the loopback benches, and the e2e tests.
+///
+/// Observers are per-side (events from the two endpoints would otherwise
+/// interleave nondeterministically).
+pub fn run_pair<TS, TR>(
+    spec: &TransferSpec,
+    mut sender_transport: TS,
+    mut receiver_transport: TR,
+    dataset: &Dataset,
+    sender_observer: Option<&mut dyn TransferObserver>,
+    receiver_observer: Option<&mut dyn TransferObserver>,
+) -> Result<TransferReport>
+where
+    TS: Transport,
+    TR: Transport,
+{
+    let sender_ep = Endpoint::new(spec.clone());
+    let receiver_ep = Endpoint::new(spec.clone());
+    std::thread::scope(|scope| {
+        let recv = scope.spawn(move || {
+            receiver_ep.receive(&mut receiver_transport, receiver_observer)
+        });
+        let sent = sender_ep.send(&mut sender_transport, dataset, sender_observer)?;
+        let received = recv
+            .join()
+            .map_err(|_| anyhow!("receiver thread panicked"))??;
+        Ok(TransferReport { sent, received })
+    })
+}

@@ -1,0 +1,129 @@
+//! Typed transfer events and the observer interface.
+//!
+//! The engines used to report what happened only after the fact, through
+//! ad-hoc per-engine report structs. [`TransferObserver`] replaces that
+//! with a push interface: the facade delivers [`TransferEvent`]s while the
+//! transfer runs, so callers can log, plot λ̂ live, or assert protocol
+//! ordering in tests without reaching into engine internals.
+//!
+//! Ordering guarantees (per endpoint):
+//! * `PassStarted { pass }` precedes every other event of that pass.
+//! * `ParityAdapted { pass, .. }` follows its `PassStarted` and precedes
+//!   the pass's `StreamFinished` events.
+//! * All `StreamFinished { pass, .. }` of a pass precede the
+//!   `LambdaUpdated` derived from that pass's statistics (pooled runs).
+//! * `StreamFinished` events of *different* streams in the same pass may
+//!   interleave in any order (they come from concurrent workers).
+//! * `GroupRecovered` events are receiver-side and are emitted in
+//!   (level, group) reconstruction order.
+
+/// One protocol-level occurrence inside a running transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransferEvent {
+    /// A transmission pass began (pass 0 = initial, >0 = retransmission).
+    PassStarted { pass: u32 },
+    /// The shared loss estimate λ̂ changed (receiver feedback on the
+    /// single-stream path, pass-barrier statistics on the pooled path).
+    LambdaUpdated { lambda: f64 },
+    /// Eq. 8 / Eq. 12 (re-)solved the redundancy for a pass.
+    ParityAdapted { pass: u32, m: usize },
+    /// A fault-tolerant group needed Reed–Solomon recovery and succeeded.
+    GroupRecovered { level: u8, ftg: u32 },
+    /// One stream finished its share of a pass.
+    StreamFinished { stream: u8, pass: u32, fragments: u64 },
+}
+
+/// Receives [`TransferEvent`]s while a transfer runs.
+///
+/// Implementations must be `Send`: events can originate from engine
+/// worker threads (delivery is serialized — `on_event` is never called
+/// concurrently for one observer).
+pub trait TransferObserver: Send {
+    fn on_event(&mut self, event: &TransferEvent);
+}
+
+/// Adapter turning any `FnMut(&TransferEvent) + Send` closure into an
+/// observer: `FnObserver(|e| println!("{e:?}"))`.
+pub struct FnObserver<F: FnMut(&TransferEvent) + Send>(pub F);
+
+impl<F: FnMut(&TransferEvent) + Send> TransferObserver for FnObserver<F> {
+    fn on_event(&mut self, event: &TransferEvent) {
+        (self.0)(event)
+    }
+}
+
+/// Observer that records every event — the assertion workhorse for
+/// integration tests and a convenient building block for callers.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<TransferEvent>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    /// Events matching a predicate, in delivery order.
+    pub fn filtered(&self, pred: impl Fn(&TransferEvent) -> bool) -> Vec<&TransferEvent> {
+        self.events.iter().filter(|e| pred(e)).collect()
+    }
+}
+
+impl TransferObserver for EventLog {
+    fn on_event(&mut self, event: &TransferEvent) {
+        self.events.push(event.clone());
+    }
+}
+
+/// Internal fan-in point the engines emit into: a shared, thread-safe
+/// callback (the facade wraps the caller's observer in a mutex). `None`
+/// compiles the emission down to a no-op.
+pub(crate) type EventSink<'a> = Option<&'a (dyn Fn(TransferEvent) + Sync)>;
+
+/// Emit `event` into `sink` if one is installed.
+#[inline]
+pub(crate) fn emit(sink: EventSink<'_>, event: TransferEvent) {
+    if let Some(f) = sink {
+        f(event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_log_records_in_order() {
+        let mut log = EventLog::new();
+        log.on_event(&TransferEvent::PassStarted { pass: 0 });
+        log.on_event(&TransferEvent::LambdaUpdated { lambda: 42.0 });
+        assert_eq!(
+            log.events,
+            vec![
+                TransferEvent::PassStarted { pass: 0 },
+                TransferEvent::LambdaUpdated { lambda: 42.0 },
+            ]
+        );
+        assert_eq!(
+            log.filtered(|e| matches!(e, TransferEvent::PassStarted { .. })).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn closures_are_observers_via_fn_observer() {
+        let mut count = 0usize;
+        {
+            let mut obs = FnObserver(|_: &TransferEvent| count += 1);
+            obs.on_event(&TransferEvent::PassStarted { pass: 0 });
+            obs.on_event(&TransferEvent::PassStarted { pass: 1 });
+        }
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn emit_into_none_is_a_noop() {
+        emit(None, TransferEvent::PassStarted { pass: 0 });
+    }
+}

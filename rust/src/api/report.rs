@@ -1,0 +1,183 @@
+//! One report shape for every transfer, single-stream or pooled.
+//!
+//! The common questions — how many fragments, how many passes, what got
+//! delivered, at what fidelity — live in [`SendSummary`] /
+//! [`ReceiveSummary`] regardless of which engine ran. Engine-specific
+//! depth (per-pass traces, λ̂ feedback logs, adaptation history) stays
+//! available through the `detail` enums.
+
+use crate::coordinator::pool::{PassRecord, PoolReceiverReport, PoolSenderReport, RecvPassRecord};
+use crate::coordinator::receiver::ReceiverReport;
+use crate::coordinator::sender::SenderReport;
+
+/// Engine-specific sender detail.
+#[derive(Debug, Clone)]
+pub enum SendDetail {
+    SingleStream(SenderReport),
+    Pooled(PoolSenderReport),
+}
+
+/// Sender-side outcome of a transfer, engine-agnostic.
+#[derive(Debug, Clone)]
+pub struct SendSummary {
+    /// Fragments put on the wire (data + parity, all passes).
+    pub fragments_sent: u64,
+    /// Data fragments among them.
+    pub data_fragments: u64,
+    /// Retransmission passes (0 = everything accepted first pass).
+    pub passes: u32,
+    /// Wall-clock seconds.
+    pub duration: f64,
+    /// λ̂ values observed over the transfer, in order.
+    pub lambda_history: Vec<f64>,
+    /// Full engine report.
+    pub detail: SendDetail,
+}
+
+impl SendSummary {
+    /// Per-pass trace (pooled runs only).
+    pub fn trace(&self) -> Option<&[PassRecord]> {
+        match &self.detail {
+            SendDetail::Pooled(r) => Some(&r.trace),
+            SendDetail::SingleStream(_) => None,
+        }
+    }
+
+    pub fn pooled(&self) -> Option<&PoolSenderReport> {
+        match &self.detail {
+            SendDetail::Pooled(r) => Some(r),
+            SendDetail::SingleStream(_) => None,
+        }
+    }
+
+    pub fn single_stream(&self) -> Option<&SenderReport> {
+        match &self.detail {
+            SendDetail::SingleStream(r) => Some(r),
+            SendDetail::Pooled(_) => None,
+        }
+    }
+}
+
+impl From<SenderReport> for SendSummary {
+    fn from(r: SenderReport) -> SendSummary {
+        SendSummary {
+            fragments_sent: r.fragments_sent,
+            data_fragments: r.data_fragments,
+            passes: r.passes,
+            duration: r.duration,
+            lambda_history: r.lambda_updates.clone(),
+            detail: SendDetail::SingleStream(r),
+        }
+    }
+}
+
+impl From<PoolSenderReport> for SendSummary {
+    fn from(r: PoolSenderReport) -> SendSummary {
+        SendSummary {
+            fragments_sent: r.fragments_sent,
+            data_fragments: r.data_fragments,
+            passes: r.passes,
+            duration: r.duration,
+            lambda_history: r.lambda_history.clone(),
+            detail: SendDetail::Pooled(r),
+        }
+    }
+}
+
+/// Engine-specific receiver detail. The recovered level buffers are moved
+/// into [`ReceiveSummary::levels`]; the `levels` field inside these
+/// reports is left empty to avoid double-buffering large transfers.
+#[derive(Debug, Clone)]
+pub enum ReceiveDetail {
+    SingleStream(ReceiverReport),
+    Pooled(PoolReceiverReport),
+}
+
+/// Receiver-side outcome of a transfer, engine-agnostic.
+#[derive(Debug, Clone)]
+pub struct ReceiveSummary {
+    /// Recovered level buffers (exact original bytes); `None` where a
+    /// level had unrecoverable groups (possible only under `Deadline`).
+    pub levels: Vec<Option<Vec<u8>>>,
+    /// Leading fully-recovered levels.
+    pub levels_recovered: usize,
+    /// ε of the recovered prefix (1.0 when nothing usable arrived).
+    pub achieved_eps: f64,
+    pub fragments_received: u64,
+    /// Groups that needed Reed–Solomon recovery (vs. arriving complete).
+    pub groups_recovered: u64,
+    /// Wall-clock seconds.
+    pub duration: f64,
+    /// Full engine report (with `levels` drained — see [`ReceiveDetail`]).
+    pub detail: ReceiveDetail,
+}
+
+impl ReceiveSummary {
+    /// Per-pass trace (pooled runs only).
+    pub fn trace(&self) -> Option<&[RecvPassRecord]> {
+        match &self.detail {
+            ReceiveDetail::Pooled(r) => Some(&r.trace),
+            ReceiveDetail::SingleStream(_) => None,
+        }
+    }
+
+    pub fn pooled(&self) -> Option<&PoolReceiverReport> {
+        match &self.detail {
+            ReceiveDetail::Pooled(r) => Some(r),
+            ReceiveDetail::SingleStream(_) => None,
+        }
+    }
+
+    pub fn single_stream(&self) -> Option<&ReceiverReport> {
+        match &self.detail {
+            ReceiveDetail::SingleStream(r) => Some(r),
+            ReceiveDetail::Pooled(_) => None,
+        }
+    }
+
+    /// The recovered prefix as byte slices (levels beyond the prefix are
+    /// excluded even if present, matching the ε accounting).
+    pub fn recovered_prefix(&self) -> Vec<&[u8]> {
+        self.levels[..self.levels_recovered]
+            .iter()
+            .map(|l| l.as_ref().expect("prefix levels are present").as_slice())
+            .collect()
+    }
+}
+
+impl From<ReceiverReport> for ReceiveSummary {
+    fn from(mut r: ReceiverReport) -> ReceiveSummary {
+        let levels = std::mem::take(&mut r.levels);
+        ReceiveSummary {
+            levels,
+            levels_recovered: r.levels_recovered,
+            achieved_eps: r.achieved_eps,
+            fragments_received: r.fragments_received,
+            groups_recovered: r.groups_recovered,
+            duration: r.duration,
+            detail: ReceiveDetail::SingleStream(r),
+        }
+    }
+}
+
+impl From<PoolReceiverReport> for ReceiveSummary {
+    fn from(mut r: PoolReceiverReport) -> ReceiveSummary {
+        let levels = std::mem::take(&mut r.levels);
+        ReceiveSummary {
+            levels,
+            levels_recovered: r.levels_recovered,
+            achieved_eps: r.achieved_eps,
+            fragments_received: r.fragments_received,
+            groups_recovered: r.groups_recovered,
+            duration: r.duration,
+            detail: ReceiveDetail::Pooled(r),
+        }
+    }
+}
+
+/// Both sides of an in-process transfer (see [`crate::api::run_pair`]).
+#[derive(Debug, Clone)]
+pub struct TransferReport {
+    pub sent: SendSummary,
+    pub received: ReceiveSummary,
+}

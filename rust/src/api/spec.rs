@@ -1,0 +1,492 @@
+//! The transfer contract, dataset description, and the validated
+//! [`TransferSpec`] every Janus transfer is built from.
+
+use crate::model::params::{LevelSchedule, NetParams};
+use std::fmt;
+use std::time::Duration;
+
+/// What the user asks Janus to guarantee (PAPER.md §3.2) — the single
+/// contract type shared by the facade, the engines, and the workflow
+/// scheduler (it replaces the old `sender::Contract` /
+/// `scheduler::JobContract` pair, which had silently drifted apart).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Contract {
+    /// Guaranteed fidelity (Alg. 1): deliver every level needed for this
+    /// relative L∞ error bound, retransmitting until recovered.
+    Fidelity(f64),
+    /// Guaranteed time (Alg. 2): deliver the best level prefix possible
+    /// within this many seconds; no retransmission.
+    Deadline(f64),
+    /// No constraint declared: deliver the full dataset reliably (every
+    /// level, retransmitting as needed), with parity still adapted to the
+    /// measured loss rate.
+    BestEffort,
+}
+
+impl Contract {
+    /// Whether this contract runs passive retransmission passes
+    /// (everything except `Deadline`).
+    pub fn retransmits(&self) -> bool {
+        !matches!(self, Contract::Deadline(_))
+    }
+}
+
+/// A validated-at-construction transfer specification error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// `streams` must be ≥ 1.
+    ZeroStreams,
+    /// `streams` must fit the wire format's u8 stream id.
+    TooManyStreams(usize),
+    /// Group size `n = k + m` must be ≥ 2 (one data + one slot).
+    GroupTooSmall(usize),
+    /// Group size `n = k + m` must fit the wire format's u8 index
+    /// (≤ 255; ≤ 128 for pooled runs).
+    GroupTooLarge(usize),
+    /// Fragment payload size must be positive.
+    ZeroFragmentSize,
+    /// Pacing rate (fragments/s) must be positive and finite.
+    BadPacingRate(f64),
+    /// A `Deadline` contract needs a positive number of seconds.
+    ZeroDeadline,
+    /// A `Fidelity` bound is a relative error and must lie in (0, 1).
+    FidelityOutOfRange(f64),
+    /// The initial λ estimate cannot be negative.
+    NegativeLambda(f64),
+    /// The λ measurement window must be positive.
+    ZeroWindow,
+    /// The deadline engine is single-stream; use `streams(1)`.
+    DeadlineNeedsSingleStream,
+    /// A dataset needs at least one level.
+    EmptyDataset,
+    /// One ε per level, strictly decreasing, each in (0, 1].
+    BadEpsilonLadder,
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::ZeroStreams => write!(f, "spec: streams must be >= 1"),
+            SpecError::TooManyStreams(n) => {
+                write!(f, "spec: streams must be <= 255 (wire u8 stream id), got {n}")
+            }
+            SpecError::GroupTooSmall(n) => {
+                write!(f, "spec: group size k+m must be >= 2, got {n}")
+            }
+            SpecError::GroupTooLarge(n) => write!(
+                f,
+                "spec: group size k+m must be <= 255 (<= 128 pooled), got {n}"
+            ),
+            SpecError::ZeroFragmentSize => write!(f, "spec: fragment size must be positive"),
+            SpecError::BadPacingRate(r) => {
+                write!(f, "spec: pacing rate must be positive and finite, got {r}")
+            }
+            SpecError::ZeroDeadline => {
+                write!(f, "spec: deadline contract needs a positive number of seconds")
+            }
+            SpecError::FidelityOutOfRange(b) => {
+                write!(f, "spec: fidelity bound must be in (0, 1), got {b}")
+            }
+            SpecError::NegativeLambda(l) => {
+                write!(f, "spec: initial lambda cannot be negative, got {l}")
+            }
+            SpecError::ZeroWindow => write!(f, "spec: lambda window must be positive"),
+            SpecError::DeadlineNeedsSingleStream => {
+                write!(f, "spec: deadline contracts run single-stream; set streams(1)")
+            }
+            SpecError::EmptyDataset => write!(f, "dataset: at least one level required"),
+            SpecError::BadEpsilonLadder => write!(
+                f,
+                "dataset: need one epsilon per level, strictly decreasing, each in (0, 1]"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// The refactored payload: level byte buffers (largest-error-reduction
+/// first) plus the error ladder `eps[i]` = relative L∞ error after
+/// receiving levels `0..=i`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub levels: Vec<Vec<u8>>,
+    pub eps: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(levels: Vec<Vec<u8>>, eps: Vec<f64>) -> Result<Dataset, SpecError> {
+        if levels.is_empty() {
+            return Err(SpecError::EmptyDataset);
+        }
+        if levels.len() != eps.len()
+            || eps.iter().any(|&e| e.is_nan() || e <= 0.0 || e > 1.0)
+            || eps.windows(2).any(|w| w[0] <= w[1])
+        {
+            return Err(SpecError::BadEpsilonLadder);
+        }
+        Ok(Dataset { levels, eps })
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.len() as u64).sum()
+    }
+
+    /// The model-layer view of this dataset.
+    pub fn schedule(&self) -> LevelSchedule {
+        LevelSchedule::new(
+            self.levels.iter().map(|l| l.len() as u64).collect(),
+            self.eps.clone(),
+        )
+    }
+
+    /// Tightest error bound this dataset can achieve (ε of the full
+    /// ladder) — what [`Contract::BestEffort`] delivers.
+    pub fn finest_eps(&self) -> f64 {
+        *self.eps.last().expect("validated non-empty")
+    }
+}
+
+/// An immutable, validated transfer plan: contract + streams + network
+/// and coding parameters + timeouts. Built via [`TransferSpec::builder`];
+/// construction is the only place validation happens, so every
+/// [`TransferSpec`] in flight is known-good.
+#[derive(Debug, Clone)]
+pub struct TransferSpec {
+    contract: Contract,
+    streams: usize,
+    net: NetParams,
+    initial_lambda: f64,
+    t_w: f64,
+    idle_timeout: Duration,
+    max_duration: Duration,
+}
+
+impl TransferSpec {
+    pub fn builder() -> TransferSpecBuilder {
+        TransferSpecBuilder::default()
+    }
+
+    pub fn contract(&self) -> Contract {
+        self.contract
+    }
+
+    /// Concurrent streams (1 = the single-stream engine; >1 = pooled).
+    pub fn streams(&self) -> usize {
+        self.streams
+    }
+
+    /// Network/coding parameters; `net.r` is the **per-stream** pacing
+    /// rate and `net.lambda` mirrors the initial λ estimate.
+    pub fn net(&self) -> NetParams {
+        self.net
+    }
+
+    pub fn initial_lambda(&self) -> f64 {
+        self.initial_lambda
+    }
+
+    /// λ measurement window `T_W`, seconds.
+    pub fn lambda_window(&self) -> f64 {
+        self.t_w
+    }
+
+    pub fn idle_timeout(&self) -> Duration {
+        self.idle_timeout
+    }
+
+    pub fn max_duration(&self) -> Duration {
+        self.max_duration
+    }
+}
+
+/// Builder for [`TransferSpec`]. Defaults: `BestEffort`, 1 stream, the
+/// paper's measured testbed parameters ([`NetParams::paper_default`]),
+/// λ₀ = 0, T_W = 3 s, 10 s idle timeout, 600 s overall cap.
+#[derive(Debug, Clone)]
+pub struct TransferSpecBuilder {
+    contract: Contract,
+    streams: usize,
+    net: NetParams,
+    initial_lambda: f64,
+    t_w: f64,
+    idle_timeout: Duration,
+    max_duration: Duration,
+}
+
+impl Default for TransferSpecBuilder {
+    fn default() -> Self {
+        TransferSpecBuilder {
+            contract: Contract::BestEffort,
+            streams: 1,
+            net: NetParams::paper_default(0.0),
+            initial_lambda: 0.0,
+            t_w: 3.0,
+            idle_timeout: Duration::from_secs(10),
+            max_duration: Duration::from_secs(600),
+        }
+    }
+}
+
+impl TransferSpecBuilder {
+    pub fn contract(mut self, contract: Contract) -> Self {
+        self.contract = contract;
+        self
+    }
+
+    pub fn streams(mut self, streams: usize) -> Self {
+        self.streams = streams;
+        self
+    }
+
+    /// Replace all network/coding parameters at once.
+    pub fn net(mut self, net: NetParams) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Per-stream pacing rate `r_link`, fragments/s.
+    pub fn pacing_rate(mut self, r: f64) -> Self {
+        self.net.r = r;
+        self
+    }
+
+    /// Fragment payload size `s`, bytes.
+    pub fn fragment_bytes(mut self, s: usize) -> Self {
+        self.net.s = s;
+        self
+    }
+
+    /// Fault-tolerant group size `n = k + m` (the EC bound).
+    pub fn group_fragments(mut self, n: usize) -> Self {
+        self.net.n = n;
+        self
+    }
+
+    /// One-way fragment latency `t`, seconds.
+    pub fn latency(mut self, t: f64) -> Self {
+        self.net.t = t;
+        self
+    }
+
+    /// Initial λ estimate feeding the first Eq. 8 / Eq. 12 solve.
+    pub fn initial_lambda(mut self, lambda: f64) -> Self {
+        self.initial_lambda = lambda;
+        self
+    }
+
+    /// λ measurement window `T_W`, seconds (paper: 3 s).
+    pub fn lambda_window(mut self, t_w: f64) -> Self {
+        self.t_w = t_w;
+        self
+    }
+
+    pub fn idle_timeout(mut self, d: Duration) -> Self {
+        self.idle_timeout = d;
+        self
+    }
+
+    pub fn max_duration(mut self, d: Duration) -> Self {
+        self.max_duration = d;
+        self
+    }
+
+    /// Validate into an immutable [`TransferSpec`].
+    pub fn build(self) -> Result<TransferSpec, SpecError> {
+        if self.streams == 0 {
+            return Err(SpecError::ZeroStreams);
+        }
+        if self.streams > 255 {
+            return Err(SpecError::TooManyStreams(self.streams));
+        }
+        if self.net.n < 2 {
+            return Err(SpecError::GroupTooSmall(self.net.n));
+        }
+        // k + m is carried in u8 wire fields; the pooled engine further
+        // caps n at 128.
+        if self.net.n > 255 || (self.streams > 1 && self.net.n > 128) {
+            return Err(SpecError::GroupTooLarge(self.net.n));
+        }
+        if self.net.s == 0 {
+            return Err(SpecError::ZeroFragmentSize);
+        }
+        if !self.net.r.is_finite() || self.net.r <= 0.0 {
+            return Err(SpecError::BadPacingRate(self.net.r));
+        }
+        if self.initial_lambda.is_nan() || self.initial_lambda < 0.0 {
+            return Err(SpecError::NegativeLambda(self.initial_lambda));
+        }
+        if self.t_w.is_nan() || self.t_w <= 0.0 {
+            return Err(SpecError::ZeroWindow);
+        }
+        match self.contract {
+            Contract::Deadline(tau) => {
+                if tau.is_nan() || tau <= 0.0 {
+                    return Err(SpecError::ZeroDeadline);
+                }
+                if self.streams > 1 {
+                    return Err(SpecError::DeadlineNeedsSingleStream);
+                }
+            }
+            Contract::Fidelity(bound) => {
+                if bound.is_nan() || bound <= 0.0 || bound >= 1.0 {
+                    return Err(SpecError::FidelityOutOfRange(bound));
+                }
+            }
+            Contract::BestEffort => {}
+        }
+        let mut net = self.net;
+        net.lambda = self.initial_lambda;
+        Ok(TransferSpec {
+            contract: self.contract,
+            streams: self.streams,
+            net,
+            initial_lambda: self.initial_lambda,
+            t_w: self.t_w,
+            idle_timeout: self.idle_timeout,
+            max_duration: self.max_duration,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build() {
+        let spec = TransferSpec::builder().build().unwrap();
+        assert_eq!(spec.contract(), Contract::BestEffort);
+        assert_eq!(spec.streams(), 1);
+        assert_eq!(spec.net().n, 32);
+        assert!((spec.lambda_window() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_streams_rejected() {
+        let err = TransferSpec::builder().streams(0).build().unwrap_err();
+        assert_eq!(err, SpecError::ZeroStreams);
+    }
+
+    #[test]
+    fn too_many_streams_rejected() {
+        let err = TransferSpec::builder().streams(256).build().unwrap_err();
+        assert_eq!(err, SpecError::TooManyStreams(256));
+    }
+
+    #[test]
+    fn group_over_255_rejected() {
+        // k + m > 255 cannot be carried in the wire format's u8 fields.
+        let err = TransferSpec::builder().group_fragments(256).build().unwrap_err();
+        assert_eq!(err, SpecError::GroupTooLarge(256));
+    }
+
+    #[test]
+    fn pooled_group_over_128_rejected() {
+        let err = TransferSpec::builder()
+            .streams(4)
+            .contract(Contract::Fidelity(1e-7))
+            .group_fragments(200)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::GroupTooLarge(200));
+        // The same n is fine single-stream.
+        assert!(TransferSpec::builder().group_fragments(200).build().is_ok());
+    }
+
+    #[test]
+    fn zero_deadline_rejected() {
+        let err = TransferSpec::builder()
+            .contract(Contract::Deadline(0.0))
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::ZeroDeadline);
+        // NaN deadlines are equally meaningless.
+        let err = TransferSpec::builder()
+            .contract(Contract::Deadline(f64::NAN))
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::ZeroDeadline);
+    }
+
+    #[test]
+    fn deadline_requires_single_stream() {
+        let err = TransferSpec::builder()
+            .contract(Contract::Deadline(10.0))
+            .streams(4)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::DeadlineNeedsSingleStream);
+    }
+
+    #[test]
+    fn fidelity_bound_must_be_a_relative_error() {
+        for bad in [0.0, 1.0, 1.5, -0.1] {
+            let err = TransferSpec::builder()
+                .contract(Contract::Fidelity(bad))
+                .build()
+                .unwrap_err();
+            assert_eq!(err, SpecError::FidelityOutOfRange(bad));
+        }
+        assert!(TransferSpec::builder()
+            .contract(Contract::Fidelity(1e-7))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn bad_rates_and_sizes_rejected() {
+        assert_eq!(
+            TransferSpec::builder().fragment_bytes(0).build().unwrap_err(),
+            SpecError::ZeroFragmentSize
+        );
+        assert_eq!(
+            TransferSpec::builder().pacing_rate(0.0).build().unwrap_err(),
+            SpecError::BadPacingRate(0.0)
+        );
+        assert_eq!(
+            TransferSpec::builder().group_fragments(1).build().unwrap_err(),
+            SpecError::GroupTooSmall(1)
+        );
+        assert_eq!(
+            TransferSpec::builder().initial_lambda(-1.0).build().unwrap_err(),
+            SpecError::NegativeLambda(-1.0)
+        );
+        assert_eq!(
+            TransferSpec::builder().lambda_window(0.0).build().unwrap_err(),
+            SpecError::ZeroWindow
+        );
+    }
+
+    #[test]
+    fn spec_mirrors_lambda_into_net() {
+        let spec = TransferSpec::builder().initial_lambda(383.0).build().unwrap();
+        assert!((spec.net().lambda - 383.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dataset_validation() {
+        assert_eq!(Dataset::new(vec![], vec![]).unwrap_err(), SpecError::EmptyDataset);
+        // Mismatched lengths.
+        assert_eq!(
+            Dataset::new(vec![vec![0u8; 4]], vec![0.1, 0.01]).unwrap_err(),
+            SpecError::BadEpsilonLadder
+        );
+        // Non-decreasing ladder.
+        assert_eq!(
+            Dataset::new(vec![vec![0u8; 4], vec![0u8; 4]], vec![0.1, 0.1]).unwrap_err(),
+            SpecError::BadEpsilonLadder
+        );
+        let d = Dataset::new(vec![vec![1u8; 4], vec![2u8; 8]], vec![0.1, 0.01]).unwrap();
+        assert_eq!(d.total_bytes(), 12);
+        assert!((d.finest_eps() - 0.01).abs() < 1e-15);
+        assert_eq!(d.schedule().num_levels(), 2);
+    }
+
+    #[test]
+    fn contract_retransmits() {
+        assert!(Contract::Fidelity(1e-7).retransmits());
+        assert!(Contract::BestEffort.retransmits());
+        assert!(!Contract::Deadline(5.0).retransmits());
+    }
+}

@@ -1,0 +1,222 @@
+//! Transport factories — how an [`crate::api::Endpoint`] obtains its
+//! datagram channels.
+//!
+//! The engines are generic over [`Datagram`], but threading those
+//! generics through every public signature made each new channel type a
+//! breaking change. A [`Transport`] instead hands the facade boxed
+//! channels at construction time: real UDP sockets, in-memory pairs, the
+//! testkit's deterministic loss channels, or any custom wrapper are
+//! interchangeable without touching a single engine signature.
+//!
+//! Channel layout convention:
+//! * **control** — the handshake/feedback channel. Single-stream runs
+//!   (`streams == 1`) carry *everything* (fragments included) on it,
+//!   matching the single-socket deployment of the paper's prototype.
+//! * **data `w`** — pooled runs additionally open one paced channel per
+//!   stream `w ∈ 0..streams`.
+
+use crate::transport::channel::Datagram;
+use crate::transport::udp::UdpChannel;
+use crate::util::err::Result;
+use crate::{anyhow, bail};
+use std::net::{SocketAddr, ToSocketAddrs};
+
+/// Factory for the channels one endpoint of a transfer uses.
+pub trait Transport: Send {
+    /// Open the control channel. Called once per transfer.
+    fn open_control(&mut self) -> Result<Box<dyn Datagram>>;
+    /// Open the data channel for `stream` (pooled runs only).
+    fn open_data(&mut self, stream: usize) -> Result<Box<dyn Datagram>>;
+}
+
+/// Adapt one prebuilt channel (of any [`Datagram`] impl — a connected
+/// UDP socket, a loss-injecting wrapper, …) into a single-stream
+/// [`Transport`].
+pub struct ChannelTransport {
+    chan: Option<Box<dyn Datagram>>,
+}
+
+impl ChannelTransport {
+    pub fn new(chan: impl Datagram + 'static) -> ChannelTransport {
+        ChannelTransport { chan: Some(Box::new(chan)) }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn open_control(&mut self) -> Result<Box<dyn Datagram>> {
+        self.chan
+            .take()
+            .ok_or_else(|| anyhow!("channel transport: control already opened"))
+    }
+
+    fn open_data(&mut self, stream: usize) -> Result<Box<dyn Datagram>> {
+        bail!("channel transport is single-stream; no data channel {stream}")
+    }
+}
+
+/// A [`Transport`] over pre-staged channels — the construction used by
+/// in-process pairs (memory channels, testkit loss channels).
+pub struct StagedTransport {
+    control: Option<Box<dyn Datagram>>,
+    data: Vec<Option<Box<dyn Datagram>>>,
+}
+
+impl StagedTransport {
+    pub fn new(
+        control: impl Datagram + 'static,
+        data: Vec<Box<dyn Datagram>>,
+    ) -> StagedTransport {
+        StagedTransport {
+            control: Some(Box::new(control)),
+            data: data.into_iter().map(Some).collect(),
+        }
+    }
+}
+
+impl Transport for StagedTransport {
+    fn open_control(&mut self) -> Result<Box<dyn Datagram>> {
+        self.control
+            .take()
+            .ok_or_else(|| anyhow!("staged transport: control already opened"))
+    }
+
+    fn open_data(&mut self, stream: usize) -> Result<Box<dyn Datagram>> {
+        match self.data.get_mut(stream) {
+            Some(slot) => slot
+                .take()
+                .ok_or_else(|| anyhow!("staged transport: data channel {stream} already opened")),
+            None => bail!(
+                "staged transport has {} data channels, stream {stream} requested",
+                self.data.len()
+            ),
+        }
+    }
+}
+
+/// Connected pair of in-memory transports: lossless control plus
+/// `streams` lossless data channels each way. The loss-injecting sibling
+/// lives in [`crate::testkit::loss_transport_pair`].
+pub fn mem_transport_pair(streams: usize) -> (StagedTransport, StagedTransport) {
+    use crate::transport::channel::mem_pair;
+    let (ac, bc) = mem_pair();
+    let mut ad: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    let mut bd: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    for _ in 0..streams {
+        let (a, b) = mem_pair();
+        ad.push(Box::new(a));
+        bd.push(Box::new(b));
+    }
+    (StagedTransport::new(ac, ad), StagedTransport::new(bc, bd))
+}
+
+/// Real-UDP transport addressed by a (local, peer) socket-address pair.
+///
+/// Port convention: the control channel binds/connects the given ports;
+/// data stream `w` uses `port + 1 + w` on both sides. Both endpoints must
+/// therefore be constructed from the same spec so the port maps agree.
+pub struct UdpTransport {
+    local: SocketAddr,
+    peer: SocketAddr,
+}
+
+impl UdpTransport {
+    pub fn new(local: impl ToSocketAddrs, peer: impl ToSocketAddrs) -> Result<UdpTransport> {
+        let local = local
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("udp transport: local address resolved to nothing"))?;
+        let peer = peer
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("udp transport: peer address resolved to nothing"))?;
+        Ok(UdpTransport { local, peer })
+    }
+
+    fn offset(addr: SocketAddr, by: u16) -> Result<SocketAddr> {
+        let mut out = addr;
+        // An ephemeral local port (0) stays ephemeral on every channel.
+        if addr.port() != 0 {
+            let port = addr
+                .port()
+                .checked_add(by)
+                .ok_or_else(|| anyhow!("udp transport: port {} + {by} overflows", addr.port()))?;
+            out.set_port(port);
+        }
+        Ok(out)
+    }
+}
+
+impl Transport for UdpTransport {
+    fn open_control(&mut self) -> Result<Box<dyn Datagram>> {
+        Ok(Box::new(UdpChannel::bind_connect(self.local, self.peer)?))
+    }
+
+    fn open_data(&mut self, stream: usize) -> Result<Box<dyn Datagram>> {
+        if self.peer.port() == 0 {
+            bail!("udp transport: pooled data channels need a fixed peer port");
+        }
+        let by = 1 + u16::try_from(stream)
+            .map_err(|_| anyhow!("udp transport: stream index {stream} out of range"))?;
+        let local = Self::offset(self.local, by)?;
+        let peer = Self::offset(self.peer, by)?;
+        Ok(Box::new(UdpChannel::bind_connect(local, peer)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::channel::mem_pair;
+    use std::time::Duration;
+
+    #[test]
+    fn channel_transport_opens_once() {
+        let (a, _b) = mem_pair();
+        let mut t = ChannelTransport::new(a);
+        assert!(t.open_control().is_ok());
+        assert!(t.open_control().is_err(), "second open must fail");
+        assert!(t.open_data(0).is_err(), "single-stream: no data channels");
+    }
+
+    #[test]
+    fn mem_transport_pair_is_wired_both_ways() {
+        let (mut s, mut r) = mem_transport_pair(2);
+        let mut sc = s.open_control().unwrap();
+        let mut rc = r.open_control().unwrap();
+        sc.send(b"ctl");
+        assert_eq!(rc.recv_timeout(Duration::from_millis(100)).unwrap(), b"ctl");
+        rc.send(b"ack");
+        assert_eq!(sc.recv_timeout(Duration::from_millis(100)).unwrap(), b"ack");
+        for w in 0..2 {
+            let mut sd = s.open_data(w).unwrap();
+            let mut rd = r.open_data(w).unwrap();
+            sd.send(&[w as u8]);
+            assert_eq!(
+                rd.recv_timeout(Duration::from_millis(100)).unwrap(),
+                vec![w as u8]
+            );
+        }
+        assert!(s.open_data(2).is_err(), "only 2 staged data channels");
+        assert!(s.open_data(0).is_err(), "channel 0 already taken");
+    }
+
+    #[test]
+    fn udp_transport_port_convention() {
+        let t = UdpTransport::new("127.0.0.1:9000", "127.0.0.1:9100").unwrap();
+        assert_eq!(t.local.port(), 9000);
+        assert_eq!(t.peer.port(), 9100);
+        // Data stream w lives at port + 1 + w; ephemeral (0) stays 0.
+        assert_eq!(UdpTransport::offset(t.local, 3).unwrap().port(), 9003);
+        let eph = UdpTransport::new("127.0.0.1:0", "127.0.0.1:9100").unwrap();
+        assert_eq!(UdpTransport::offset(eph.local, 3).unwrap().port(), 0);
+        // Overflowing port maps are an error, not a wrap.
+        let hi = UdpTransport::new("127.0.0.1:65535", "127.0.0.1:9100").unwrap();
+        assert!(UdpTransport::offset(hi.local, 1).is_err());
+    }
+
+    #[test]
+    fn udp_transport_rejects_pooled_ephemeral_peer() {
+        let mut t = UdpTransport::new("127.0.0.1:0", "127.0.0.1:0").unwrap();
+        assert!(t.open_data(0).is_err());
+    }
+}

@@ -88,6 +88,107 @@ impl Args {
         }
         v
     }
+
+    /// Names of every `--option` present (valued options and bare flags),
+    /// for validation against a [`CommandSpec`].
+    pub fn option_names(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|k| k.as_str()).chain(self.flags.iter().map(|f| f.as_str()))
+    }
+}
+
+/// One `--option` a subcommand accepts.
+#[derive(Debug, Clone, Copy)]
+pub struct OptSpec {
+    /// Option name without the leading `--`.
+    pub name: &'static str,
+    /// Value placeholder shown in help (`None` = boolean flag).
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Declarative description of one CLI subcommand: drives the generated
+/// `--help` text and the unknown-option rejection (typos used to be
+/// silently ignored).
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Positional argument placeholders, e.g. `["input.bin"]`.
+    pub positional: &'static [&'static str],
+    pub opts: &'static [OptSpec],
+}
+
+impl CommandSpec {
+    /// Generated `--help` text for this subcommand.
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("janus {} — {}\n\nusage: janus {}", self.name, self.summary, self.name));
+        for p in self.positional {
+            out.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            out.push_str(" [options]\n\noptions:\n");
+            for o in self.opts {
+                let lhs = match o.value {
+                    Some(v) => format!("--{} <{v}>", o.name),
+                    None => format!("--{}", o.name),
+                };
+                out.push_str(&format!("  {lhs:<24} {}\n", o.help));
+            }
+        } else {
+            out.push('\n');
+        }
+        out.push_str("  --help                   show this help\n");
+        out
+    }
+
+    /// Reject options this subcommand does not declare, valued options
+    /// missing their value, and boolean flags given one. The error names
+    /// the offender and (for unknown names) lists every valid option.
+    pub fn validate(&self, args: &Args) -> Result<(), String> {
+        for name in args.option_names() {
+            if name == "help" || self.opts.iter().any(|o| o.name == name) {
+                continue;
+            }
+            let mut valid: Vec<&str> = self.opts.iter().map(|o| o.name).collect();
+            valid.sort_unstable();
+            let valid = valid
+                .iter()
+                .map(|v| format!("--{v}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            return Err(format!(
+                "janus {}: unknown option --{name}\nvalid options: {}",
+                self.name,
+                if valid.is_empty() { "(none, only --help)".to_string() } else { valid }
+            ));
+        }
+        // Arity: a declared valued option parsed as a bare flag means its
+        // value is missing (it would otherwise be silently defaulted —
+        // the failure mode this validation exists to kill), and a boolean
+        // flag that swallowed a value means the command line is off by a
+        // token.
+        for o in self.opts {
+            match o.value {
+                Some(placeholder) if args.flag(o.name) => {
+                    return Err(format!(
+                        "janus {}: --{} requires a value <{placeholder}>",
+                        self.name, o.name
+                    ));
+                }
+                None => {
+                    if let Some(v) = args.get(o.name) {
+                        return Err(format!(
+                            "janus {}: --{} is a flag and takes no value (got {v:?})",
+                            self.name, o.name
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +249,104 @@ mod tests {
     #[should_panic(expected = "must be in 1..=255")]
     fn ranged_getter_rejects_out_of_range() {
         parse("pool --streams 0").get_usize_in("streams", 4, 1, 255);
+    }
+
+    #[test]
+    fn ranged_getter_accepts_boundaries() {
+        assert_eq!(parse("pool --streams 1").get_usize_in("streams", 4, 1, 255), 1);
+        assert_eq!(parse("pool --streams 255").get_usize_in("streams", 4, 1, 255), 255);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be in 1..=255")]
+    fn ranged_getter_rejects_above_hi() {
+        parse("pool --streams 256").get_usize_in("streams", 4, 1, 255);
+    }
+
+    #[test]
+    fn empty_equals_value_is_kept_as_empty_string() {
+        let a = parse("x --mode=");
+        assert_eq!(a.get("mode"), Some(""));
+        // Empty is not a number: the typed getter must say so, not
+        // silently fall back to the default.
+        let r = std::panic::catch_unwind(|| a.get_f64("mode", 1.0));
+        assert!(r.is_err(), "empty value must not parse as a number");
+    }
+
+    #[test]
+    fn repeated_option_last_one_wins() {
+        let a = parse("x --m 2 --m 7");
+        assert_eq!(a.get_usize("m", 0), 7);
+    }
+
+    #[test]
+    fn repeated_flags_are_deduplicated_by_flag_query() {
+        let a = parse("x --verbose --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.option_names().filter(|&n| n == "verbose").count(), 2);
+    }
+
+    #[test]
+    fn option_names_cover_opts_and_flags() {
+        let a = parse("x --m=2 --adaptive");
+        let mut names: Vec<&str> = a.option_names().collect();
+        names.sort_unstable();
+        assert_eq!(names, vec!["adaptive", "m"]);
+    }
+
+    const TEST_SPEC: CommandSpec = CommandSpec {
+        name: "simulate",
+        summary: "run a simulated transfer",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "lambda", value: Some("l/s"), help: "loss rate" },
+            OptSpec { name: "adaptive", value: None, help: "adaptive parity" },
+        ],
+    };
+
+    #[test]
+    fn command_spec_accepts_declared_options() {
+        let a = parse("simulate --lambda 19 --adaptive");
+        assert!(TEST_SPEC.validate(&a).is_ok());
+        // --help is always accepted.
+        assert!(TEST_SPEC.validate(&parse("simulate --help")).is_ok());
+    }
+
+    #[test]
+    fn command_spec_rejects_valued_option_without_value() {
+        // `--lambda` at end of line parses as a bare flag; defaulting it
+        // silently would reintroduce the typo-swallowing this fixes.
+        let a = parse("simulate --adaptive --lambda");
+        let err = TEST_SPEC.validate(&a).unwrap_err();
+        assert!(err.contains("--lambda requires a value"), "{err}");
+        // Same when the valued option precedes another option.
+        let a = parse("simulate --lambda --adaptive");
+        assert!(TEST_SPEC.validate(&a).is_err());
+    }
+
+    #[test]
+    fn command_spec_rejects_flag_with_value() {
+        // Greedy parsing makes `--adaptive 19` swallow the next token.
+        let a = parse("simulate --adaptive 19");
+        let err = TEST_SPEC.validate(&a).unwrap_err();
+        assert!(err.contains("takes no value"), "{err}");
+    }
+
+    #[test]
+    fn command_spec_rejects_unknown_option_listing_valid_ones() {
+        let a = parse("simulate --lambada 19");
+        let err = TEST_SPEC.validate(&a).unwrap_err();
+        assert!(err.contains("--lambada"), "{err}");
+        assert!(err.contains("--lambda"), "must list valid options: {err}");
+        assert!(err.contains("--adaptive"), "must list valid options: {err}");
+    }
+
+    #[test]
+    fn command_spec_help_text_mentions_every_option() {
+        let h = TEST_SPEC.help_text();
+        assert!(h.contains("janus simulate"));
+        assert!(h.contains("--lambda <l/s>"));
+        assert!(h.contains("--adaptive"));
+        assert!(h.contains("--help"));
     }
 }

@@ -1,17 +1,30 @@
 //! The Janus coordinator — the paper's system contribution over real
-//! transports (§4, §5.3): adaptive sender/receiver protocol engines,
-//! wire format, and session harness.
+//! transports (§4, §5.3): the adaptive sender/receiver protocol engines,
+//! the wire format, and the multi-stream transfer pool.
+//!
+//! These are the **engines**, not the public surface: user code runs
+//! transfers through the [`crate::api`] facade
+//! ([`crate::api::Endpoint::send`] / [`crate::api::Endpoint::receive`] /
+//! [`crate::api::run_pair`]), which validates a
+//! [`crate::api::TransferSpec`], opens channels via a
+//! [`crate::api::Transport`], routes to the right engine, and delivers
+//! typed [`crate::api::TransferEvent`]s. The free functions this module
+//! still exports (`run_sender`, `run_receiver`, `run_session`,
+//! `TransferPool::run_*`) are `#[deprecated]` one-line shims kept for
+//! source compatibility.
 //!
 //! * [`packet`] — fragment + control wire format (Protobuf substitute).
-//! * [`sender`] — Alg. 1/Alg. 2 sender: parity-generation thread feeding a
-//!   paced transmission thread, λ-adaptive redundancy, passive
+//! * [`sender`] — Alg. 1/Alg. 2 sender engine: a parity-generation thread
+//!   feeding a paced transmission thread, λ-adaptive redundancy, passive
 //!   retransmission.
 //! * [`receiver`] — FTG reassembly, Reed–Solomon recovery, λ measurement
 //!   window, lost-FTG feedback.
-//! * [`session`] — run a sender/receiver pair over connected channels.
-//! * [`pool`] — multi-stream parallel transfer engine ([`pool::TransferPool`]):
-//!   N sender workers with per-stream paced endpoints and worker-pool RS
-//!   encoding, a demultiplexing receiver, and one shared λ̂ estimator.
+//! * [`session`] — deprecated single-pair harness (see
+//!   [`crate::api::run_pair`]).
+//! * [`pool`] — multi-stream parallel transfer engine
+//!   ([`pool::TransferPool`]): N sender workers with per-stream paced
+//!   endpoints and worker-pool RS encoding, a demultiplexing receiver,
+//!   and one shared λ̂ estimator.
 
 pub mod packet;
 pub mod pool;
@@ -19,10 +32,16 @@ pub mod receiver;
 pub mod sender;
 pub mod session;
 
+pub use crate::api::Contract;
 pub use packet::{FragmentHeader, Manifest, Packet, WireError};
 pub use pool::{
     PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport, RecvPassRecord, TransferPool,
 };
-pub use receiver::{run_receiver, ReceiverConfig, ReceiverReport};
-pub use sender::{run_sender, Contract, SenderConfig, SenderReport};
+#[allow(deprecated)]
+pub use receiver::run_receiver;
+pub use receiver::{ReceiverConfig, ReceiverReport};
+#[allow(deprecated)]
+pub use sender::run_sender;
+pub use sender::{SenderConfig, SenderReport};
+#[allow(deprecated)]
 pub use session::run_session;

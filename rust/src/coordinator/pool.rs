@@ -47,6 +47,8 @@
 use super::packet::{encode_fragment_into, FragmentHeader, Manifest, Packet, MAX_LOST_PER_MSG};
 use super::receiver::ReceiverConfig;
 use super::sender::pace_until;
+use crate::api::observer::{emit, EventSink};
+use crate::api::TransferEvent;
 use crate::erasure::RsCode;
 use crate::model::params::{LevelSchedule, NetParams};
 use crate::model::time_model::optimize_parity;
@@ -185,15 +187,33 @@ impl TransferPool {
         &self.cfg
     }
 
-    /// Run the sender side. `control` carries the handshake and pass
-    /// exchanges; `data[w]` is stream `w`'s paced endpoint
-    /// (`data.len()` must equal `cfg.streams`).
+    /// Run the sender side.
+    #[deprecated(note = "use janus::api::Endpoint::send")]
     pub fn run_sender<C, D>(
         &self,
         control: &mut C,
         data: &mut [D],
         levels: &[Vec<u8>],
         eps: &[f64],
+    ) -> Result<PoolSenderReport>
+    where
+        C: Datagram,
+        D: Datagram,
+    {
+        self.pooled_sender(control, data, levels, eps, None)
+    }
+
+    /// Pooled sender engine. `control` carries the handshake and pass
+    /// exchanges; `data[w]` is stream `w`'s paced endpoint
+    /// (`data.len()` must equal `cfg.streams`). Public entry:
+    /// [`crate::api::Endpoint::send`].
+    pub(crate) fn pooled_sender<C, D>(
+        &self,
+        control: &mut C,
+        data: &mut [D],
+        levels: &[Vec<u8>],
+        eps: &[f64],
+        events: EventSink<'_>,
     ) -> Result<PoolSenderReport>
     where
         C: Datagram,
@@ -274,6 +294,8 @@ impl TransferPool {
             if start.elapsed() > cfg.max_duration {
                 bail!("pool sender exceeded max duration");
             }
+            emit(events, TransferEvent::PassStarted { pass });
+            emit(events, TransferEvent::ParityAdapted { pass, m });
             // Deterministic shard: round-robin over the pass's job list.
             let shards: Vec<Vec<usize>> = (0..cfg.streams)
                 .map(|w| todo.iter().copied().skip(w).step_by(cfg.streams).collect())
@@ -289,7 +311,10 @@ impl TransferPool {
                     let shard = &shards[w];
                     let seq0 = seqs[w];
                     handles.push(scope.spawn(move || {
-                        send_shard(chan, w as u8, pass, m, shard, jobs_ref, levels, &net, pace, seq0)
+                        send_shard(
+                            chan, w as u8, pass, m, shard, jobs_ref, levels, &net, pace, seq0,
+                            events,
+                        )
                     }));
                 }
                 handles
@@ -349,6 +374,7 @@ impl TransferPool {
             };
             lambda_hat = loss_frac * cfg.net.r * cfg.streams as f64;
             report.lambda_history.push(lambda_hat);
+            emit(events, TransferEvent::LambdaUpdated { lambda: lambda_hat });
             report.trace.push(PassRecord {
                 pass,
                 m,
@@ -390,13 +416,29 @@ impl TransferPool {
         Ok(report)
     }
 
-    /// Run the receiver side: demultiplex `data` endpoints by stream id
-    /// into one shared reassembly table, answer pass barriers with
-    /// aggregate loss statistics, and reconstruct the levels on `Done`.
+    /// Run the receiver side.
+    #[deprecated(note = "use janus::api::Endpoint::receive")]
     pub fn run_receiver<C, D>(
         control: &mut C,
         data: Vec<D>,
         rcfg: &ReceiverConfig,
+    ) -> Result<PoolReceiverReport>
+    where
+        C: Datagram,
+        D: Datagram + Send,
+    {
+        Self::pooled_receiver(control, data, rcfg, None)
+    }
+
+    /// Pooled receiver engine: demultiplex `data` endpoints by stream id
+    /// into one shared reassembly table, answer pass barriers with
+    /// aggregate loss statistics, and reconstruct the levels on `Done`.
+    /// Public entry: [`crate::api::Endpoint::receive`].
+    pub(crate) fn pooled_receiver<C, D>(
+        control: &mut C,
+        data: Vec<D>,
+        rcfg: &ReceiverConfig,
+        events: EventSink<'_>,
     ) -> Result<PoolReceiverReport>
     where
         C: Datagram,
@@ -588,15 +630,36 @@ impl TransferPool {
         done?;
 
         // === Reconstruct levels (shared group table) ===
-        reconstruct_levels(&manifest, &groups, s, &mut report)?;
+        reconstruct_levels(&manifest, &groups, s, &mut report, events)?;
         report.duration = start.elapsed().as_secs_f64();
         Ok(report)
     }
 
-    /// Convenience harness: run a full pool transfer across connected
-    /// channel sets in threads and collect both reports.
+    /// Convenience harness: run a full pool transfer in threads.
+    #[deprecated(note = "use janus::api::run_pair")]
     #[allow(clippy::type_complexity)]
     pub fn run_session<C, DS, DR>(
+        &self,
+        sender_control: &mut C,
+        sender_data: Vec<DS>,
+        receiver_control: &mut C,
+        receiver_data: Vec<DR>,
+        rcfg: &ReceiverConfig,
+        levels: &[Vec<u8>],
+        eps: &[f64],
+    ) -> Result<(PoolSenderReport, PoolReceiverReport)>
+    where
+        C: Datagram,
+        DS: Datagram,
+        DR: Datagram + Send,
+    {
+        self.pooled_session(sender_control, sender_data, receiver_control, receiver_data, rcfg, levels, eps)
+    }
+
+    /// Session engine: run a full pool transfer across connected channel
+    /// sets in threads and collect both reports.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn pooled_session<C, DS, DR>(
         &self,
         sender_control: &mut C,
         mut sender_data: Vec<DS>,
@@ -612,8 +675,10 @@ impl TransferPool {
         DR: Datagram + Send,
     {
         std::thread::scope(|scope| {
-            let recv = scope.spawn(move || Self::run_receiver(receiver_control, receiver_data, rcfg));
-            let send_report = self.run_sender(sender_control, &mut sender_data, levels, eps)?;
+            let recv = scope
+                .spawn(move || Self::pooled_receiver(receiver_control, receiver_data, rcfg, None));
+            let send_report =
+                self.pooled_sender(sender_control, &mut sender_data, levels, eps, None)?;
             let recv_report = recv
                 .join()
                 .map_err(|_| anyhow!("pool receiver thread panicked"))??;
@@ -636,6 +701,7 @@ fn send_shard<D: Datagram>(
     net: &NetParams,
     pace: Duration,
     seq0: u64,
+    events: EventSink<'_>,
 ) -> u64 {
     let s = net.s;
     let mut codes: HashMap<(usize, usize), RsCode> = HashMap::new();
@@ -687,6 +753,7 @@ fn send_shard<D: Datagram>(
     for _ in 0..3 {
         chan.send(&end);
     }
+    emit(events, TransferEvent::StreamFinished { stream, pass, fragments: sent });
     sent
 }
 
@@ -758,6 +825,7 @@ fn reconstruct_levels(
     groups: &HashMap<(u8, u32), GroupBuf>,
     s: usize,
     report: &mut PoolReceiverReport,
+    events: EventSink<'_>,
 ) -> Result<()> {
     let mut codes: HashMap<(u8, u8), RsCode> = HashMap::new();
     for (li, &(size, _eps)) in manifest.levels.iter().enumerate() {
@@ -787,6 +855,10 @@ fn reconstruct_levels(
                     match code.reconstruct(&shards) {
                         Ok(data) => {
                             report.groups_recovered += 1;
+                            emit(
+                                events,
+                                TransferEvent::GroupRecovered { level: li as u8, ftg },
+                            );
                             for f in &data {
                                 out.extend_from_slice(f);
                             }
@@ -881,7 +953,7 @@ mod tests {
         let pool = TransferPool::new(cfg(4)).unwrap();
         let (mut sc, sd, mut rc, rd) = pool_channels(4);
         let (s_rep, r_rep) = pool
-            .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
             .unwrap();
         assert_eq!(r_rep.levels_recovered, 3);
         for (got, want) in r_rep.levels.iter().zip(&levels) {
@@ -905,7 +977,7 @@ mod tests {
         let pool = TransferPool::new(cfg(1)).unwrap();
         let (mut sc, sd, mut rc, rd) = pool_channels(1);
         let (_s, r) = pool
-            .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
             .unwrap();
         assert_eq!(r.levels_recovered, 3);
         for (got, want) in r.levels.iter().zip(&levels) {
@@ -921,7 +993,7 @@ mod tests {
         let pool = TransferPool::new(c).unwrap();
         let (mut sc, sd, mut rc, rd) = pool_channels(2);
         let (_s, r) = pool
-            .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
             .unwrap();
         assert_eq!(r.levels.len(), 1, "only level 1 in manifest");
         assert_eq!(r.levels[0].as_ref().unwrap(), &levels[0]);
@@ -944,7 +1016,7 @@ mod tests {
         let pool = TransferPool::new(cfg(3)).unwrap();
         let (mut sc, mut sd, _rc, _rd) = pool_channels(2); // too few
         let err = pool
-            .run_sender(&mut sc, &mut sd, &levels, &eps)
+            .pooled_sender(&mut sc, &mut sd, &levels, &eps, None)
             .unwrap_err();
         assert!(format!("{err}").contains("data channels"), "{err}");
     }

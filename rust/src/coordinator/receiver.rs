@@ -8,9 +8,11 @@
 //! finalizes immediately (Alg. 2).
 
 use super::packet::{Manifest, Packet, MAX_LOST_PER_MSG};
+use crate::api::observer::{emit, EventSink};
+use crate::api::TransferEvent;
+use crate::bail;
 use crate::erasure::RsCode;
 use crate::transport::channel::Datagram;
-use crate::bail;
 use crate::util::err::Result;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -37,7 +39,7 @@ impl Default for ReceiverConfig {
 }
 
 /// Transfer outcome at the receiver.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct ReceiverReport {
     /// Recovered level buffers (exact original bytes) — `None` when the
     /// level had unrecoverable FTGs (possible only under Alg. 2).
@@ -63,10 +65,21 @@ struct GroupBuf {
     have_total: u8,
 }
 
-/// Run a transfer as the receiver. Blocks until the transfer completes
-/// (Alg. 1: all FTGs of all levels recovered; Alg. 2: sender signalled the
-/// end and everything received was processed).
+/// Run a transfer as the receiver.
+#[deprecated(note = "use janus::api::Endpoint::receive")]
 pub fn run_receiver(chan: &mut dyn Datagram, cfg: &ReceiverConfig) -> Result<ReceiverReport> {
+    transfer_receiver(chan, cfg, None)
+}
+
+/// Single-stream receiver engine. Blocks until the transfer completes
+/// (Alg. 1: all FTGs of all levels recovered; Alg. 2: sender signalled the
+/// end and everything received was processed). Public entry:
+/// [`crate::api::Endpoint::receive`].
+pub(crate) fn transfer_receiver(
+    chan: &mut dyn Datagram,
+    cfg: &ReceiverConfig,
+    events: EventSink<'_>,
+) -> Result<ReceiverReport> {
     // === Handshake ===
     let start = Instant::now();
     let manifest: Manifest = loop {
@@ -140,6 +153,7 @@ pub fn run_receiver(chan: &mut dyn Datagram, cfg: &ReceiverConfig) -> Result<Rec
                     let lambda_hat = lost as f64 / elapsed;
                     report.lambda_reports.push(lambda_hat);
                     chan.send(&Packet::LambdaUpdate { lambda: lambda_hat }.encode());
+                    emit(events, TransferEvent::LambdaUpdated { lambda: lambda_hat });
                     window_start = Instant::now();
                     window_received = 0;
                     window_first_seq = None;
@@ -212,6 +226,10 @@ pub fn run_receiver(chan: &mut dyn Datagram, cfg: &ReceiverConfig) -> Result<Rec
                     match code.reconstruct(&shards) {
                         Ok(data) => {
                             report.groups_recovered += 1;
+                            emit(
+                                events,
+                                TransferEvent::GroupRecovered { level: li as u8, ftg },
+                            );
                             for f in &data {
                                 out.extend_from_slice(f);
                             }

@@ -8,6 +8,8 @@
 //! (λ updates, lost-FTG lists) and drives passive retransmission.
 
 use super::packet::{encode_fragment_into, FragmentHeader, Manifest, Packet};
+use crate::api::observer::{emit, EventSink};
+use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
 use crate::model::error_model::optimize_deadline_paper;
 use crate::model::params::{LevelSchedule, NetParams};
@@ -20,17 +22,6 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-/// Transfer contract (the paper's two user requirements, §3.2).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Contract {
-    /// Alg. 1: deliver every level needed for `error_bound`, retransmit
-    /// until recovered.
-    ErrorBound(f64),
-    /// Alg. 2: deliver the best prefix possible within `deadline` seconds,
-    /// no retransmission.
-    Deadline(f64),
-}
 
 /// Sender configuration.
 #[derive(Debug, Clone)]
@@ -70,14 +61,26 @@ struct EncodedFtg {
     fragments: Vec<Vec<u8>>,
 }
 
-/// Run a transfer as the sender. `levels` are the refactored level byte
-/// buffers (largest-error-reduction first), `eps[i]` the error bound after
-/// receiving levels `0..=i`.
+/// Run a transfer as the sender.
+#[deprecated(note = "use janus::api::Endpoint::send")]
 pub fn run_sender(
     chan: &mut dyn Datagram,
     cfg: &SenderConfig,
     levels: &[Vec<u8>],
     eps: &[f64],
+) -> Result<SenderReport> {
+    transfer_sender(chan, cfg, levels, eps, None)
+}
+
+/// Single-stream sender engine. `levels` are the refactored level byte
+/// buffers (largest-error-reduction first), `eps[i]` the error bound after
+/// receiving levels `0..=i`. Public entry: [`crate::api::Endpoint::send`].
+pub(crate) fn transfer_sender(
+    chan: &mut dyn Datagram,
+    cfg: &SenderConfig,
+    levels: &[Vec<u8>],
+    eps: &[f64],
+    events: EventSink<'_>,
 ) -> Result<SenderReport> {
     assert_eq!(levels.len(), eps.len());
     let start = Instant::now();
@@ -87,12 +90,13 @@ pub fn run_sender(
 
     // Contract-dependent level count and plan.
     let (send_levels, deadline) = match cfg.contract {
-        Contract::ErrorBound(bound) => {
+        Contract::Fidelity(bound) => {
             let l = sched
                 .levels_for_error_bound(bound)
                 .ok_or_else(|| anyhow!("error bound {bound} unachievable: ε_L = {}", eps[eps.len() - 1]))?;
             (l, None)
         }
+        Contract::BestEffort => (levels.len(), None),
         Contract::Deadline(tau) => {
             let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
             let opt = optimize_deadline_paper(&p, &sched, tau)
@@ -112,10 +116,7 @@ pub fn run_sender(
         s: s as u32,
         streams: 1,
         levels: (0..send_levels).map(|i| (levels[i].len() as u64, eps[i])).collect(),
-        contract: match cfg.contract {
-            Contract::ErrorBound(_) => 0,
-            Contract::Deadline(_) => 1,
-        },
+        contract: if cfg.contract.retransmits() { 0 } else { 1 },
     });
     let mut acked = false;
     for _ in 0..50 {
@@ -157,6 +158,9 @@ pub fn run_sender(
     let enc_stats2 = Arc::clone(&enc_stats);
     let sched2 = sched.clone();
 
+    // Emitted before the parity thread spawns so PassStarted is always
+    // the first event of the transfer.
+    emit(events, TransferEvent::PassStarted { pass: 0 });
     let result: Result<SenderReport> = std::thread::scope(|scope| {
         // === Parity generation thread ===
         let levels_ref = levels;
@@ -168,18 +172,20 @@ pub fn run_sender(
             let enc_start = Instant::now();
 
             // Current redundancy: Alg. 1 keeps a single m; Alg. 2 a plan.
-            let mut current_m = match contract {
-                Contract::ErrorBound(_) => {
-                    let p = NetParams {
-                        lambda: f64::from_bits(enc_lambda.load(Ordering::Relaxed)),
-                        ..net
-                    };
-                    optimize_parity(&p, sched2.total_bytes(send_levels)).m
-                }
-                Contract::Deadline(_) => 0,
+            let mut current_m = if contract.retransmits() {
+                let p = NetParams {
+                    lambda: f64::from_bits(enc_lambda.load(Ordering::Relaxed)),
+                    ..net
+                };
+                optimize_parity(&p, sched2.total_bytes(send_levels)).m
+            } else {
+                0
             };
             let plan = deadline_plan.as_ref().map(|(_, m)| m.clone());
             history.push((0, current_m));
+            if contract.retransmits() {
+                emit(events, TransferEvent::ParityAdapted { pass: 0, m: current_m });
+            }
 
             'levels: for (li, level_bytes) in levels_ref.iter().enumerate().take(send_levels) {
                 let mut offset = 0usize;
@@ -193,7 +199,7 @@ pub fn run_sender(
                     let epoch = enc_epoch.load(Ordering::Acquire);
                     if epoch != seen_epoch {
                         seen_epoch = epoch;
-                        if matches!(contract, Contract::ErrorBound(_)) {
+                        if contract.retransmits() {
                             let lam = f64::from_bits(enc_lambda.load(Ordering::Relaxed));
                             let p = NetParams { lambda: lam, ..net };
                             let left = remaining as u64
@@ -202,12 +208,15 @@ pub fn run_sender(
                             if m_new != current_m {
                                 current_m = m_new;
                                 history.push((frag_counter, m_new));
+                                emit(events, TransferEvent::ParityAdapted { pass: 0, m: m_new });
                             }
                         }
                     }
-                    let m = match (&plan, contract) {
-                        (Some(p), Contract::Deadline(_)) => p[li],
-                        _ => current_m,
+                    // Deadline plans fix m per level; otherwise use the
+                    // λ̂-adapted value.
+                    let m = match &plan {
+                        Some(p) => p[li],
+                        None => current_m,
                     };
                     let k = (n - m).min(remaining.div_ceil(s).max(1));
                     let code = codes
@@ -256,6 +265,7 @@ pub fn run_sender(
             deadline.as_ref().map(|(tau, _)| *tau),
             start,
             &mut report,
+            events,
         );
         // Unblock the parity thread if the tx loop exited early (error or
         // deadline): dropping the receiver makes its send() fail fast;
@@ -282,13 +292,14 @@ fn transmit_loop(
     deadline: Option<f64>,
     start: Instant,
     report: &mut SenderReport,
+    events: EventSink<'_>,
 ) -> Result<()> {
     let pace = Duration::from_secs_f64(1.0 / cfg.net.r);
     let mut next_send = Instant::now();
     let mut seq = 0u64;
     let mut out = Vec::with_capacity(cfg.net.s + 64);
     // Retained FTGs for retransmission (Alg. 1 only).
-    let retain = matches!(cfg.contract, Contract::ErrorBound(_));
+    let retain = cfg.contract.retransmits();
     let mut buf_store: HashMap<(u8, u32), EncodedFtg> = HashMap::new();
 
     let poll_feedback = |chan: &mut dyn Datagram, report: &mut SenderReport| {
@@ -297,6 +308,7 @@ fn transmit_loop(
                 report.lambda_updates.push(lambda);
                 lambda_bits.store(lambda.to_bits(), Ordering::Relaxed);
                 lambda_epoch.fetch_add(1, Ordering::Release);
+                emit(events, TransferEvent::LambdaUpdated { lambda });
             }
         }
     };
@@ -350,6 +362,10 @@ fn transmit_loop(
 
     // === End-of-pass + retransmission rounds (Alg. 1) ===
     let mut pass = 0u32;
+    emit(
+        events,
+        TransferEvent::StreamFinished { stream: 0, pass: 0, fragments: report.fragments_sent },
+    );
     loop {
         // Notify end of pass; await the lost list (re-notify on timeout).
         let mut lost: Option<Vec<(u8, u32)>> = None;
@@ -368,6 +384,7 @@ fn transmit_loop(
                             report.lambda_updates.push(lambda);
                             lambda_bits.store(lambda.to_bits(), Ordering::Relaxed);
                             lambda_epoch.fetch_add(1, Ordering::Release);
+                            emit(events, TransferEvent::LambdaUpdated { lambda });
                         }
                         _ => {}
                     },
@@ -384,7 +401,7 @@ fn transmit_loop(
         let lost = match lost {
             Some(l) => l,
             None => {
-                if matches!(cfg.contract, Contract::Deadline(_)) {
+                if !cfg.contract.retransmits() {
                     // No retransmission contract: peer may simply be done.
                     return Ok(());
                 }
@@ -397,6 +414,8 @@ fn transmit_loop(
         // Retransmit the lost FTGs.
         pass += 1;
         report.passes = pass;
+        emit(events, TransferEvent::PassStarted { pass });
+        let pass_start_fragments = report.fragments_sent;
         for key in &lost {
             if let Some(ftg) = buf_store.get(key) {
                 for (idx, frag) in ftg.fragments.iter().enumerate() {
@@ -419,6 +438,14 @@ fn transmit_loop(
                 }
             }
         }
+        emit(
+            events,
+            TransferEvent::StreamFinished {
+                stream: 0,
+                pass,
+                fragments: report.fragments_sent - pass_start_fragments,
+            },
+        );
         if start.elapsed() > cfg.max_duration {
             bail!("sender exceeded max duration during retransmission");
         }

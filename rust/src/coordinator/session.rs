@@ -1,17 +1,35 @@
-//! Session helpers: run a sender/receiver pair over a channel pair in
-//! threads and collect both reports — the harness used by examples,
-//! integration tests, and the loopback (Fig. 6 / Table 2) benches.
+//! Session helper: run a sender/receiver pair over a channel pair in
+//! threads and collect both reports.
+//!
+//! Superseded by the [`crate::api`] facade ([`crate::api::run_pair`]);
+//! kept as the engine behind the deprecated [`run_session`] shim.
 
-use super::receiver::{run_receiver, ReceiverConfig, ReceiverReport};
-use super::sender::{run_sender, SenderConfig, SenderReport};
+use super::receiver::{transfer_receiver, ReceiverConfig, ReceiverReport};
+use super::sender::{transfer_sender, SenderConfig, SenderReport};
 use crate::transport::channel::Datagram;
 use crate::util::err::Result;
 
 /// Run a full transfer across two already-connected channels.
-///
-/// `sender_chan` and `receiver_chan` are the two ends (wrap the sender end
-/// in [`crate::transport::channel::LossyChannel`] to inject loss).
+#[deprecated(note = "use janus::api::run_pair")]
 pub fn run_session<CS, CR>(
+    sender_chan: CS,
+    receiver_chan: CR,
+    sender_cfg: SenderConfig,
+    receiver_cfg: ReceiverConfig,
+    levels: Vec<Vec<u8>>,
+    eps: Vec<f64>,
+) -> Result<(SenderReport, ReceiverReport)>
+where
+    CS: Datagram + 'static,
+    CR: Datagram + 'static,
+{
+    transfer_session(sender_chan, receiver_chan, sender_cfg, receiver_cfg, levels, eps)
+}
+
+/// Session engine: receiver on a spawned thread, sender on the caller's.
+/// `sender_chan` and `receiver_chan` are the two ends (wrap the sender
+/// end in [`crate::transport::channel::LossyChannel`] to inject loss).
+pub(crate) fn transfer_session<CS, CR>(
     mut sender_chan: CS,
     mut receiver_chan: CR,
     sender_cfg: SenderConfig,
@@ -24,156 +42,10 @@ where
     CR: Datagram + 'static,
 {
     let recv_handle =
-        std::thread::spawn(move || run_receiver(&mut receiver_chan, &receiver_cfg));
-    let send_report = run_sender(&mut sender_chan, &sender_cfg, &levels, &eps)?;
+        std::thread::spawn(move || transfer_receiver(&mut receiver_chan, &receiver_cfg, None));
+    let send_report = transfer_sender(&mut sender_chan, &sender_cfg, &levels, &eps, None)?;
     let recv_report = recv_handle
         .join()
         .map_err(|_| crate::anyhow!("receiver thread panicked"))??;
     Ok((send_report, recv_report))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::coordinator::sender::Contract;
-    use crate::model::params::NetParams;
-    use crate::transport::channel::{mem_pair, LossyChannel};
-    use crate::util::Pcg64;
-    use std::time::Duration;
-
-    fn test_levels(seed: u64) -> (Vec<Vec<u8>>, Vec<f64>) {
-        let mut rng = Pcg64::seeded(seed);
-        let sizes = [40_000usize, 160_000, 320_000, 1_000_000];
-        let eps = vec![0.004, 0.0005, 0.00006, 0.0000001];
-        let levels = sizes
-            .iter()
-            .map(|&sz| {
-                let mut v = vec![0u8; sz];
-                rng.fill_bytes(&mut v);
-                v
-            })
-            .collect();
-        (levels, eps)
-    }
-
-    fn fast_net(lambda: f64) -> NetParams {
-        // High pacing rate so tests finish quickly; small fragments keep
-        // group counts realistic.
-        NetParams { t: 0.0005, r: 200_000.0, lambda, n: 32, s: 1024 }
-    }
-
-    fn sender_cfg(contract: Contract) -> SenderConfig {
-        SenderConfig {
-            net: fast_net(0.0),
-            contract,
-            initial_lambda: 0.0,
-            max_duration: Duration::from_secs(60),
-        }
-    }
-
-    fn receiver_cfg() -> ReceiverConfig {
-        ReceiverConfig {
-            t_w: 0.25,
-            idle_timeout: Duration::from_secs(5),
-            max_duration: Duration::from_secs(60),
-        }
-    }
-
-    #[test]
-    fn lossless_error_bound_transfer_delivers_exact_bytes() {
-        let (levels, eps) = test_levels(1);
-        let (a, b) = mem_pair();
-        let (s_rep, r_rep) = run_session(
-            a,
-            b,
-            sender_cfg(Contract::ErrorBound(1e-7)),
-            receiver_cfg(),
-            levels.clone(),
-            eps,
-        )
-        .unwrap();
-        assert_eq!(r_rep.levels_recovered, 4);
-        for (got, want) in r_rep.levels.iter().zip(&levels) {
-            assert_eq!(got.as_ref().unwrap(), want, "level bytes must match");
-        }
-        assert_eq!(s_rep.passes, 0);
-        assert!((r_rep.achieved_eps - 1e-7).abs() < 1e-15);
-    }
-
-    #[test]
-    fn error_bound_contract_sends_only_needed_levels() {
-        let (levels, eps) = test_levels(2);
-        let (a, b) = mem_pair();
-        let (_s, r) = run_session(
-            a,
-            b,
-            sender_cfg(Contract::ErrorBound(0.004)), // level 1 suffices
-            receiver_cfg(),
-            levels.clone(),
-            eps,
-        )
-        .unwrap();
-        assert_eq!(r.levels.len(), 1, "only level 1 in manifest");
-        assert_eq!(r.levels[0].as_ref().unwrap(), &levels[0]);
-    }
-
-    #[test]
-    fn lossy_error_bound_transfer_recovers_exactly() {
-        let (levels, eps) = test_levels(3);
-        let (a, b) = mem_pair();
-        // 2% fragment loss on the sender's outgoing data path.
-        let lossy = LossyChannel::new(a, 0.02, 99);
-        let mut cfg = sender_cfg(Contract::ErrorBound(1e-7));
-        cfg.initial_lambda = 0.02 * cfg.net.r; // honest initial estimate
-        let (s_rep, r_rep) =
-            run_session(lossy, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
-        assert_eq!(r_rep.levels_recovered, 4, "all levels must be recovered");
-        for (got, want) in r_rep.levels.iter().zip(&levels) {
-            assert_eq!(got.as_ref().unwrap(), want);
-        }
-        // With 2% loss some groups needed RS recovery or retransmission.
-        assert!(r_rep.groups_recovered > 0 || s_rep.passes > 0);
-    }
-
-    #[test]
-    fn deadline_contract_returns_prefix_under_heavy_loss() {
-        let (levels, eps) = test_levels(4);
-        let (a, b) = mem_pair();
-        let lossy = LossyChannel::new(a, 0.05, 7);
-        let mut cfg = sender_cfg(Contract::Deadline(60.0));
-        cfg.initial_lambda = 0.05 * cfg.net.r;
-        let (s_rep, r_rep) =
-            run_session(lossy, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
-        assert_eq!(s_rep.passes, 0, "no retransmission under deadline contract");
-        // Whatever prefix was recovered must be byte-exact.
-        for i in 0..r_rep.levels_recovered {
-            assert_eq!(r_rep.levels[i].as_ref().unwrap(), &levels[i]);
-        }
-        // The plan protects early levels: level 1 should essentially
-        // always survive 5% loss.
-        assert!(r_rep.levels_recovered >= 1, "level 1 must survive");
-    }
-
-    #[test]
-    fn receiver_reports_lambda_estimates() {
-        let (levels, eps) = test_levels(5);
-        let (a, b) = mem_pair();
-        let lossy = LossyChannel::new(a, 0.03, 13);
-        let mut cfg = sender_cfg(Contract::ErrorBound(1e-7));
-        cfg.initial_lambda = 0.03 * cfg.net.r;
-        // Tiny window: the whole scaled transfer lasts ~10 ms of wall time.
-        let rcfg = ReceiverConfig { t_w: 0.002, ..receiver_cfg() };
-        let (s_rep, r_rep) = run_session(lossy, b, cfg, rcfg, levels, eps).unwrap();
-        assert!(!r_rep.lambda_reports.is_empty(), "λ̂ must be reported");
-        assert!(!s_rep.lambda_updates.is_empty(), "sender must see λ̂");
-        // λ̂ should track the loss fraction times the *achieved* wire rate
-        // (sleep-granularity pacing undershoots the nominal r).
-        let achieved_rate = s_rep.fragments_sent as f64 / s_rep.duration;
-        let expect = 0.03 * achieved_rate;
-        let mean = crate::util::stats::mean(&r_rep.lambda_reports);
-        assert!(
-            mean > 0.2 * expect && mean < 3.0 * expect,
-            "λ̂ mean {mean} vs expected ≈{expect}"
-        );
-    }
 }

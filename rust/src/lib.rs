@@ -9,9 +9,13 @@
 //! (fault-tolerant groups), choosing redundancy by solving the paper's
 //! optimization models, and adapting to measured packet-loss rates.
 //!
-//! See `DESIGN.md` for the module inventory and `EXPERIMENTS.md` for the
-//! reproduced tables/figures.
+//! The public entry point is the [`api`] facade: build a
+//! [`api::TransferSpec`], hand an [`api::Endpoint`] a transport, and run
+//! `send`/`receive` (or [`api::run_pair`] in-process). See `DESIGN.md`
+//! for the module inventory and `EXPERIMENTS.md` for the reproduced
+//! tables/figures.
 
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod erasure;

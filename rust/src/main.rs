@@ -1,5 +1,9 @@
 //! `janus` — CLI for the Janus adaptive data-transmission system.
 //!
+//! Every transfer-running subcommand goes through the `janus::api`
+//! facade (spec → endpoint → transport); the model/simulation
+//! subcommands call the `model`/`sim` layers directly.
+//!
 //! Subcommands:
 //!   optimize   Solve the paper's optimization models (Eq. 8 / Eq. 12).
 //!   simulate   Run a simulated transfer (TCP / static UDP+EC / adaptive).
@@ -7,11 +11,16 @@
 //!   recv       Run a real-UDP receiver.
 //!   ec-rate    Measure Reed–Solomon parity-generation throughput (r_ec).
 //!   e2e        End-to-end demo: refactor → transfer → reconstruct.
-//!   pool       Multi-stream TransferPool demo over lossy in-memory
+//!   pool       Multi-stream transfer demo over lossy in-memory
 //!              channels (deterministic; see coordinator::pool).
+//!
+//! `janus <subcommand> --help` prints generated help; unknown options
+//! are rejected with the valid list (typos used to be silently ignored).
 
-use janus::config::Args;
-use janus::coordinator::{run_receiver, run_sender, Contract, ReceiverConfig, SenderConfig};
+use janus::api::{
+    run_pair, ChannelTransport, Contract, Dataset, Endpoint, TransferSpec, UdpTransport,
+};
+use janus::config::{Args, CommandSpec, OptSpec};
 use janus::erasure::sweep_ec_rates;
 use janus::model::{optimize_deadline_paper, optimize_parity, LevelSchedule, NetParams};
 use janus::sim::{
@@ -21,32 +30,138 @@ use janus::sim::{
 use janus::transport::UdpChannel;
 use std::time::Duration;
 
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "optimize",
+        summary: "solve the paper's optimization models (Eq. 8 / Eq. 12)",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "lambda", value: Some("l/s"), help: "packet-loss rate" },
+            OptSpec { name: "mode", value: Some("error-bound|deadline"), help: "which model to solve" },
+            OptSpec { name: "tau", value: Some("s"), help: "deadline for --mode deadline" },
+            OptSpec { name: "scale", value: Some("f"), help: "shrink the Nyx schedule by this factor" },
+        ],
+    },
+    CommandSpec {
+        name: "simulate",
+        summary: "run a simulated transfer over a synthetic loss process",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "protocol", value: Some("tcp|static|adaptive|deadline"), help: "protocol under test" },
+            OptSpec { name: "lambda", value: Some("l/s|hmm"), help: "loss rate, or 'hmm' for the 3-state model" },
+            OptSpec { name: "m", value: Some("parity"), help: "static parity count (--protocol static)" },
+            OptSpec { name: "tau", value: Some("s"), help: "deadline (--protocol deadline)" },
+            OptSpec { name: "scale", value: Some("f"), help: "shrink the Nyx schedule by this factor" },
+            OptSpec { name: "seed", value: Some("n"), help: "loss-process seed" },
+        ],
+    },
+    CommandSpec {
+        name: "ec-rate",
+        summary: "measure Reed–Solomon parity-generation throughput (r_ec)",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "n", value: Some("frags"), help: "fragments per group" },
+            OptSpec { name: "max-m", value: Some("m"), help: "largest parity count to sweep" },
+            OptSpec { name: "secs", value: Some("s"), help: "measurement time per point" },
+        ],
+    },
+    CommandSpec {
+        name: "send",
+        summary: "send a synthetic refactored dataset to a real-UDP peer",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "peer", value: Some("addr:port"), help: "receiver address (required)" },
+            OptSpec { name: "bind", value: Some("addr:port"), help: "local bind address" },
+            OptSpec { name: "deadline", value: Some("s"), help: "use a Deadline contract instead of Fidelity" },
+            OptSpec { name: "rate", value: Some("pkt/s"), help: "pacing rate" },
+            OptSpec { name: "lambda", value: Some("l/s"), help: "initial loss estimate" },
+            OptSpec { name: "dim", value: Some("d"), help: "synthetic volume dimension" },
+            OptSpec { name: "seed", value: Some("n"), help: "synthetic volume seed" },
+            OptSpec { name: "max-secs", value: Some("s"), help: "abort after this long" },
+        ],
+    },
+    CommandSpec {
+        name: "recv",
+        summary: "receive a transfer on a real-UDP socket",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "bind", value: Some("addr:port"), help: "listen address (required)" },
+            OptSpec { name: "t-w", value: Some("s"), help: "lambda measurement window" },
+            OptSpec { name: "idle-secs", value: Some("s"), help: "give up after this much silence" },
+            OptSpec { name: "max-secs", value: Some("s"), help: "abort after this long" },
+        ],
+    },
+    CommandSpec {
+        name: "e2e",
+        summary: "end-to-end demo: refactor, simulated transfer, reconstruct",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "dim", value: Some("d"), help: "synthetic volume dimension" },
+            OptSpec { name: "lambda", value: Some("l/s"), help: "loss rate" },
+            OptSpec { name: "seed", value: Some("n"), help: "synthetic volume seed" },
+        ],
+    },
+    CommandSpec {
+        name: "pool",
+        summary: "multi-stream transfer demo over deterministic lossy channels",
+        positional: &[],
+        opts: &[
+            OptSpec { name: "streams", value: Some("n"), help: "concurrent streams (1..=255)" },
+            OptSpec { name: "loss", value: Some("frac"), help: "injected fragment-loss fraction" },
+            OptSpec { name: "mb", value: Some("MB"), help: "dataset size" },
+            OptSpec { name: "rate", value: Some("frag/s"), help: "per-stream pacing rate" },
+            OptSpec { name: "seed", value: Some("n"), help: "loss-trace seed" },
+        ],
+    },
+];
+
+fn global_usage() -> String {
+    let mut out = String::from("usage: janus <subcommand> [--options]\n\nsubcommands:\n");
+    for c in COMMANDS {
+        out.push_str(&format!("  {:<10} {}\n", c.name, c.summary));
+    }
+    out.push_str("\n`janus <subcommand> --help` lists that subcommand's options.\n");
+    out
+}
+
 fn main() {
     let args = Args::from_env();
-    match args.command.as_deref() {
-        Some("optimize") => cmd_optimize(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("ec-rate") => cmd_ec_rate(&args),
-        Some("send") => cmd_send(&args),
-        Some("recv") => cmd_recv(&args),
-        Some("e2e") => cmd_e2e(&args),
-        Some("pool") => cmd_pool(&args),
-        _ => {
-            eprintln!(
-                "usage: janus <optimize|simulate|ec-rate|send|recv|e2e|pool> [--options]\n\
-                 \n\
-                 optimize  --lambda <l/s> [--mode error-bound|deadline] [--tau <s>] [--scale <f>]\n\
-                 simulate  --protocol tcp|static|adaptive|deadline --lambda <l/s>|hmm\n\
-                 \u{20}          [--m <parity>] [--tau <s>] [--scale <f>] [--seed <n>]\n\
-                 ec-rate   [--n <frags>] [--max-m <m>] [--secs <s>]\n\
-                 send      --peer <addr:port> [--bind <addr:port>] [--deadline <s>] [--rate <pkt/s>]\n\
-                 recv      --bind <addr:port> [--t-w <s>]\n\
-                 e2e       [--dim 64] [--lambda <l/s>] [--seed <n>]\n\
-                 pool      [--streams <n>] [--loss <frac>] [--mb <MB>] [--rate <frag/s>]\n\
-                 \u{20}          [--seed <n>]"
-            );
+    let cmd = match args.command.as_deref() {
+        Some(c) => c,
+        None => {
+            if args.flag("help") {
+                print!("{}", global_usage());
+                return;
+            }
+            eprint!("{}", global_usage());
             std::process::exit(2);
         }
+    };
+    let spec = match COMMANDS.iter().find(|s| s.name == cmd) {
+        Some(s) => s,
+        None => {
+            eprintln!("janus: unknown subcommand `{cmd}`\n");
+            eprint!("{}", global_usage());
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        print!("{}", spec.help_text());
+        return;
+    }
+    if let Err(e) = spec.validate(&args) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    match cmd {
+        "optimize" => cmd_optimize(&args),
+        "simulate" => cmd_simulate(&args),
+        "ec-rate" => cmd_ec_rate(&args),
+        "send" => cmd_send(&args),
+        "recv" => cmd_recv(&args),
+        "e2e" => cmd_e2e(&args),
+        "pool" => cmd_pool(&args),
+        _ => unreachable!("spec lookup covers every command"),
     }
 }
 
@@ -192,7 +307,6 @@ fn cmd_send(args: &Args) {
     let rate = args.get_f64("rate", 19_144.0);
     let dim = args.get_usize("dim", 64);
     let seed = args.get_u64("seed", 1);
-    let mut chan = UdpChannel::bind_connect(bind, peer).expect("bind/connect");
     // Synthetic refactored payload (native mirror; the PJRT artifacts are
     // exercised by the e2e example).
     let vol = janus::refactor::generate(dim, &janus::refactor::GrfConfig::default(), seed);
@@ -201,15 +315,20 @@ fn cmd_send(args: &Args) {
     let eps = measured_eps(&vol, &levels);
     let contract = match args.get("deadline") {
         Some(tau) => Contract::Deadline(tau.parse().expect("--deadline seconds")),
-        None => Contract::ErrorBound(eps[3]),
+        None => Contract::Fidelity(eps[3]),
     };
-    let cfg = SenderConfig {
-        net: NetParams { r: rate, ..NetParams::paper_default(args.get_f64("lambda", 19.0)) },
-        contract,
-        initial_lambda: args.get_f64("lambda", 19.0),
-        max_duration: Duration::from_secs(args.get_u64("max-secs", 600)),
-    };
-    let rep = run_sender(&mut chan, &cfg, &bytes, &eps).expect("send");
+    let dataset = Dataset::new(bytes, eps).expect("synthetic dataset is well-formed");
+    let spec = TransferSpec::builder()
+        .contract(contract)
+        .net(NetParams { r: rate, ..NetParams::paper_default(args.get_f64("lambda", 19.0)) })
+        .initial_lambda(args.get_f64("lambda", 19.0))
+        .max_duration(Duration::from_secs(args.get_u64("max-secs", 600)))
+        .build()
+        .expect("send spec");
+    let mut transport = UdpTransport::new(bind, peer).expect("resolve addresses");
+    let rep = Endpoint::new(spec)
+        .send(&mut transport, &dataset, None)
+        .expect("send");
     println!(
         "sent {} fragments ({} data) in {:.2}s, {} retransmission passes",
         rep.fragments_sent, rep.data_fragments, rep.duration, rep.passes
@@ -226,13 +345,17 @@ fn cmd_recv(args: &Args) {
     let mut buf = [0u8; 9216];
     let (_, peer) = sock.peek_from(&mut buf).expect("first datagram");
     sock.connect(peer).expect("connect");
-    let mut chan = UdpChannel::from_socket(sock);
-    let cfg = ReceiverConfig {
-        t_w: args.get_f64("t-w", 3.0),
-        idle_timeout: Duration::from_secs(args.get_u64("idle-secs", 15)),
-        max_duration: Duration::from_secs(args.get_u64("max-secs", 600)),
-    };
-    let rep = run_receiver(&mut chan, &cfg).expect("recv");
+    let chan = UdpChannel::from_socket(sock);
+    let spec = TransferSpec::builder()
+        .lambda_window(args.get_f64("t-w", 3.0))
+        .idle_timeout(Duration::from_secs(args.get_u64("idle-secs", 15)))
+        .max_duration(Duration::from_secs(args.get_u64("max-secs", 600)))
+        .build()
+        .expect("recv spec");
+    let mut transport = ChannelTransport::new(chan);
+    let rep = Endpoint::new(spec)
+        .receive(&mut transport, None)
+        .expect("recv");
     println!(
         "received {} fragments; levels {}/{} recovered (ε ≤ {:.1e}) in {:.2}s; RS-recovered groups: {}",
         rep.fragments_received,
@@ -272,8 +395,7 @@ fn cmd_e2e(args: &Args) {
 }
 
 fn cmd_pool(args: &Args) {
-    use janus::coordinator::{PoolConfig, ReceiverConfig, TransferPool};
-    use janus::testkit::{pool_fixture, LossTrace};
+    use janus::testkit::{loss_transport_pair, LossTrace};
 
     let streams = args.get_usize_in("streams", 4, 1, 255);
     let loss = args.get_f64("loss", 0.02);
@@ -294,42 +416,39 @@ fn cmd_pool(args: &Args) {
             v
         })
         .collect();
+    let dataset = Dataset::new(levels, eps).expect("synthetic dataset is well-formed");
 
-    let pool = TransferPool::new(PoolConfig {
-        net: janus::model::NetParams { t: 0.0005, r: rate, lambda: 0.0, n: 32, s: 4096 },
-        streams,
-        error_bound: 1e-7,
-        initial_lambda: loss * rate * streams as f64,
-        max_duration: std::time::Duration::from_secs(600),
-    })
-    .expect("pool config");
-    let (mut sc, sd, mut rc, rd) =
-        pool_fixture(streams, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1)));
-    let rcfg = ReceiverConfig {
-        t_w: 0.25,
-        idle_timeout: std::time::Duration::from_secs(10),
-        max_duration: std::time::Duration::from_secs(600),
-    };
+    let spec = TransferSpec::builder()
+        .contract(Contract::Fidelity(1e-7))
+        .streams(streams)
+        .net(NetParams { t: 0.0005, r: rate, lambda: 0.0, n: 32, s: 4096 })
+        .initial_lambda(loss * rate * streams as f64)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(10))
+        .max_duration(Duration::from_secs(600))
+        .build()
+        .expect("pool spec");
+    let (st, rt) =
+        loss_transport_pair(streams, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1)));
     let start = std::time::Instant::now();
-    let (s_rep, r_rep) = pool
-        .run_session(&mut sc, sd, &mut rc, rd, &rcfg, &levels, &eps)
-        .expect("pool transfer");
+    let report = run_pair(&spec, st, rt, &dataset, None, None).expect("pool transfer");
     let wall = start.elapsed().as_secs_f64();
-    let bytes: usize = levels.iter().map(|l| l.len()).sum();
-    for (got, want) in r_rep.levels.iter().zip(&levels) {
+    let bytes = dataset.total_bytes() as f64;
+    for (got, want) in report.received.levels.iter().zip(&dataset.levels) {
         assert_eq!(got.as_ref().unwrap(), want, "delivery must be byte-exact");
     }
     println!(
         "pool: {streams} streams × {rate:.0} frag/s, {:.1} MB at {:.1}% loss",
-        bytes as f64 / 1e6,
+        bytes / 1e6,
         loss * 100.0
     );
     println!(
         "  sender: {} fragments ({} data) in {} pass(es), λ̂ history {:?}",
-        s_rep.fragments_sent,
-        s_rep.data_fragments,
-        s_rep.passes + 1,
-        s_rep
+        report.sent.fragments_sent,
+        report.sent.data_fragments,
+        report.sent.passes + 1,
+        report
+            .sent
             .lambda_history
             .iter()
             .map(|l| format!("{l:.0}"))
@@ -337,11 +456,13 @@ fn cmd_pool(args: &Args) {
     );
     println!(
         "  receiver: {} fragments, {} RS-recovered groups, {} levels byte-exact",
-        r_rep.fragments_received, r_rep.groups_recovered, r_rep.levels_recovered
+        report.received.fragments_received,
+        report.received.groups_recovered,
+        report.received.levels_recovered
     );
     println!(
         "  throughput: {:.1} MB/s aggregate ({wall:.2}s wall)",
-        bytes as f64 / 1e6 / wall
+        bytes / 1e6 / wall
     );
 }
 

@@ -18,7 +18,10 @@
 //!   fragment datagrams according to its trace.
 //! * [`pool_fixture`] — one-call construction of the control + N-stream
 //!   channel sets a [`crate::coordinator::pool::TransferPool`] needs.
+//! * [`loss_transport_pair`] — the same wiring packaged as a pair of
+//!   [`crate::api::Transport`]s for the `janus::api` facade.
 
+use crate::api::transport::StagedTransport;
 use crate::coordinator::packet::is_fragment;
 use crate::transport::channel::{mem_pair, Datagram, MemChannel};
 use crate::util::Pcg64;
@@ -187,6 +190,42 @@ pub fn pool_fixture(
     (sender_control, sender_data, receiver_control, receiver_data)
 }
 
+/// The deterministic-loss wiring packaged for the [`crate::api`] facade:
+/// `(sender_transport, receiver_transport)` built from the same spec
+/// shape the facade expects.
+///
+/// * `streams == 1` (single-stream route): the transfer runs entirely on
+///   the control channel, so the sender's control end is wrapped in a
+///   [`FragmentLossChannel`] driven by `make_trace(0)` — control packets
+///   still never drop, only fragments.
+/// * `streams > 1` (pooled route): control is lossless both ways; data
+///   stream `w` drops per `make_trace(w)` on the sender→receiver path.
+pub fn loss_transport_pair(
+    streams: usize,
+    mut make_trace: impl FnMut(usize) -> LossTrace,
+) -> (StagedTransport, StagedTransport) {
+    assert!(streams >= 1, "at least one stream");
+    let (sc, rc) = mem_pair();
+    if streams == 1 {
+        let lossy = FragmentLossChannel::new(sc, make_trace(0));
+        return (
+            StagedTransport::new(lossy, Vec::new()),
+            StagedTransport::new(rc, Vec::new()),
+        );
+    }
+    let mut sender_data: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    let mut receiver_data: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    for w in 0..streams {
+        let (a, b) = mem_pair();
+        sender_data.push(Box::new(FragmentLossChannel::new(a, make_trace(w))));
+        receiver_data.push(Box::new(b));
+    }
+    (
+        StagedTransport::new(sc, sender_data),
+        StagedTransport::new(rc, receiver_data),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +330,43 @@ mod tests {
         ch.send(&fragment_buf(1));
         assert_eq!(ch.clock().now(), 2);
         assert!((ch.clock().now_secs(1000.0) - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_transport_pair_wraps_control_when_single_stream() {
+        use crate::api::transport::Transport;
+        let (mut s, mut r) = loss_transport_pair(1, |_| LossTrace::seeded(1.0, 3));
+        let mut sc = s.open_control().unwrap();
+        let mut rc = r.open_control().unwrap();
+        sc.send(&Packet::Done.encode());
+        sc.send(&fragment_buf(0));
+        assert!(!is_fragment(
+            &rc.recv_timeout(Duration::from_millis(50)).unwrap()
+        ));
+        assert!(
+            rc.recv_timeout(Duration::from_millis(50)).is_none(),
+            "fraction 1.0 must kill the fragment"
+        );
+        assert!(s.open_data(0).is_err(), "single-stream: no data channels");
+    }
+
+    #[test]
+    fn loss_transport_pair_spares_control_when_pooled() {
+        use crate::api::transport::Transport;
+        let (mut s, mut r) = loss_transport_pair(2, |_| LossTrace::seeded(1.0, 9));
+        let mut sc = s.open_control().unwrap();
+        let mut rc = r.open_control().unwrap();
+        sc.send(&fragment_buf(7));
+        assert!(
+            rc.recv_timeout(Duration::from_millis(50)).is_some(),
+            "pooled control is lossless"
+        );
+        let mut sd = s.open_data(1).unwrap();
+        let mut rd = r.open_data(1).unwrap();
+        sd.send(&fragment_buf(8));
+        assert!(rd.recv_timeout(Duration::from_millis(50)).is_none());
+        sd.send(&Packet::Done.encode());
+        assert!(rd.recv_timeout(Duration::from_millis(50)).is_some());
     }
 
     #[test]

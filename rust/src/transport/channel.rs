@@ -21,6 +21,20 @@ pub trait Datagram: Send {
     fn try_recv(&mut self) -> Option<Vec<u8>>;
 }
 
+/// Boxed channels are channels — what lets [`crate::api::Transport`]
+/// hand `Box<dyn Datagram>` to the engines' generic entry points.
+impl<C: Datagram + ?Sized> Datagram for Box<C> {
+    fn send(&mut self, buf: &[u8]) {
+        (**self).send(buf)
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        (**self).recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        (**self).try_recv()
+    }
+}
+
 /// In-memory datagram endpoint over std mpsc (lossless, ordered — loss is
 /// layered on with [`LossyChannel`]).
 pub struct MemChannel {
@@ -111,6 +125,8 @@ impl<C: Datagram> Datagram for LossyChannel<C> {
 
 /// Reordering wrapper: buffers sends and flushes them slightly out of
 /// order — for robustness tests (UDP does not guarantee ordering).
+/// Anything still buffered is flushed on `Drop`, so a sender that
+/// finishes (or aborts) early cannot strand its last `window` datagrams.
 pub struct ReorderChannel<C: Datagram> {
     pub inner: C,
     window: usize,
@@ -151,6 +167,12 @@ impl<C: Datagram> Datagram for ReorderChannel<C> {
     }
     fn try_recv(&mut self) -> Option<Vec<u8>> {
         self.inner.try_recv()
+    }
+}
+
+impl<C: Datagram> Drop for ReorderChannel<C> {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -212,6 +234,34 @@ mod tests {
             got += 1;
         }
         assert_eq!(got, 100);
+    }
+
+    #[test]
+    fn reorder_flushes_buffered_datagrams_on_drop() {
+        // Regression: a sender that finished early used to strand up to
+        // `window` datagrams in the reorder buffer forever.
+        let (a, mut b) = mem_pair();
+        let mut ch = ReorderChannel::new(a, 8, 5);
+        for i in 0..5u32 {
+            ch.send(&i.to_le_bytes()); // all 5 stay buffered (window 8)
+        }
+        drop(ch); // no explicit flush()
+        let mut got: Vec<u32> = Vec::new();
+        while let Some(buf) = b.try_recv() {
+            got.push(u32::from_le_bytes(buf.try_into().unwrap()));
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..5).collect::<Vec<_>>(), "drop must flush the tail");
+    }
+
+    #[test]
+    fn boxed_channels_are_channels() {
+        let (a, b) = mem_pair();
+        let mut a: Box<dyn Datagram> = Box::new(a);
+        let mut b: Box<dyn Datagram> = Box::new(b);
+        a.send(b"via box");
+        assert_eq!(b.recv_timeout(Duration::from_millis(50)).unwrap(), b"via box");
+        assert!(a.try_recv().is_none());
     }
 
     #[test]

@@ -12,6 +12,5 @@
 
 pub mod scheduler;
 
-pub use scheduler::{
-    run_campaign, CampaignResult, Job, JobContract, JobOutcome, SchedulerConfig,
-};
+pub use crate::api::Contract;
+pub use scheduler::{run_campaign, CampaignResult, Job, JobOutcome, SchedulerConfig};

@@ -3,40 +3,50 @@
 //! Jobs arrive over time; active jobs share the link in proportion to
 //! their weights at FTG granularity (one FTG ≈ n fragments is the
 //! scheduling quantum, matching the protocol's natural unit). Each job
-//! carries one of the paper's two contracts:
+//! carries a [`Contract`] — the same unified type the `janus::api`
+//! facade uses (the scheduler's private `JobContract` twin is gone):
 //!
-//! * [`JobContract::ErrorBound`] — all levels needed for ε must arrive;
+//! * [`Contract::Fidelity`] — all levels needed for ε must arrive;
 //!   unrecoverable FTGs are re-queued (passive retransmission), and the
 //!   job's parity adapts to the shared λ̂ via Eq. 8.
-//! * [`JobContract::Deadline`] — per-level parity from Eq. 12 against the
-//!   job's *own* remaining deadline; FTGs are never re-queued; levels
-//!   with unrecoverable groups are lost.
+//! * [`Contract::Deadline`] — per-level parity from Eq. 12 against the
+//!   job's *own* remaining deadline (measured from *arrival*); FTGs are
+//!   never re-queued; levels with unrecoverable groups are lost.
+//! * [`Contract::BestEffort`] — deliver every level reliably (the
+//!   Fidelity machinery at the schedule's finest ε).
 
+use crate::api::{Contract, TransferSpec};
 use crate::model::error_model::optimize_deadline_paper;
 use crate::model::params::{LevelSchedule, NetParams};
 use crate::model::time_model::optimize_parity;
 use crate::sim::loss::LossProcess;
 use std::collections::VecDeque;
 
-/// Transfer contract for one job.
-#[derive(Debug, Clone)]
-pub enum JobContract {
-    /// Deliver every level whose ε the user requires (bound value).
-    ErrorBound(f64),
-    /// Deliver the best prefix within `deadline` seconds of *arrival*.
-    Deadline(f64),
-}
-
 /// One dataset transfer request.
 #[derive(Debug, Clone)]
 pub struct Job {
     pub id: usize,
     pub sched: LevelSchedule,
-    pub contract: JobContract,
+    pub contract: Contract,
     /// Relative share of the link while active (≥ 1).
     pub weight: u32,
     /// Arrival time, seconds.
     pub arrival: f64,
+}
+
+impl Job {
+    /// Schedule a transfer described by an API [`TransferSpec`]: the
+    /// job inherits the spec's contract; link-level parameters stay in
+    /// [`SchedulerConfig`] (one shared uplink for the whole campaign).
+    pub fn from_spec(
+        id: usize,
+        sched: LevelSchedule,
+        spec: &TransferSpec,
+        weight: u32,
+        arrival: f64,
+    ) -> Job {
+        Job { id, sched, contract: spec.contract(), weight, arrival }
+    }
 }
 
 /// Orchestrator parameters.
@@ -111,12 +121,18 @@ impl ActiveJob {
         let s = cfg.net.s as u64;
         let mut queue = VecDeque::new();
         let (levels_sent, per_level_m, current_m) = match &job.contract {
-            JobContract::ErrorBound(bound) => {
+            Contract::Fidelity(bound) => {
                 let l = job.sched.levels_for_error_bound(*bound).unwrap_or(job.sched.num_levels());
                 let m = optimize_parity(&p, job.sched.total_bytes(l)).m;
                 (l, vec![m; l], m)
             }
-            JobContract::Deadline(tau) => {
+            Contract::BestEffort => {
+                // Deliver everything: the Fidelity machinery at ε_L.
+                let l = job.sched.num_levels();
+                let m = optimize_parity(&p, job.sched.total_bytes(l)).m;
+                (l, vec![m; l], m)
+            }
+            Contract::Deadline(tau) => {
                 let remaining = (job.arrival + tau - now).max(0.0);
                 match optimize_deadline_paper(&p, &job.sched, remaining) {
                     Some(opt) => {
@@ -229,9 +245,10 @@ pub fn run_campaign(
             }
             aj.deficit -= total as i64;
             if lost_in_group > m {
-                match aj.job.contract {
-                    JobContract::ErrorBound(_) => aj.lost.push((level, k, m)),
-                    JobContract::Deadline(_) => aj.level_ok[level] = false,
+                if aj.job.contract.retransmits() {
+                    aj.lost.push((level, k, m));
+                } else {
+                    aj.level_ok[level] = false;
                 }
             }
             if is_retx {
@@ -266,10 +283,9 @@ pub fn run_campaign(
             let prefix = aj.level_ok.iter().take_while(|&&ok| ok).count();
             let achieved = aj.job.sched.eps_with_levels(prefix);
             let met = match aj.job.contract {
-                JobContract::ErrorBound(bound) => {
-                    prefix == aj.levels_sent && achieved <= bound
-                }
-                JobContract::Deadline(tau) => clock <= aj.job.arrival + tau * 1.001,
+                Contract::Fidelity(bound) => prefix == aj.levels_sent && achieved <= bound,
+                Contract::BestEffort => prefix == aj.levels_sent,
+                Contract::Deadline(tau) => clock <= aj.job.arrival + tau * 1.001,
             };
             outcomes[aj.job.id] = Some(JobOutcome {
                 id: aj.job.id,
@@ -319,7 +335,7 @@ mod tests {
         Job {
             id,
             sched: small_sched(2000),
-            contract: JobContract::ErrorBound(1e-7),
+            contract: Contract::Fidelity(1e-7),
             weight,
             arrival,
         }
@@ -365,6 +381,37 @@ mod tests {
     }
 
     #[test]
+    fn best_effort_job_delivers_everything() {
+        let mut loss = StaticLoss::with_ttl(383.0, 17, 1.0 / 19_144.0);
+        let job = Job {
+            id: 0,
+            sched: small_sched(2000),
+            contract: Contract::BestEffort,
+            weight: 1,
+            arrival: 0.0,
+        };
+        let res = run_campaign(&cfg(383.0), vec![job], &mut loss);
+        let j = &res.jobs[0];
+        assert!(j.met_contract, "best effort must deliver all levels");
+        assert_eq!(j.levels_recovered, 4);
+        assert_eq!(j.levels_sent, 4);
+    }
+
+    #[test]
+    fn jobs_can_be_built_from_transfer_specs() {
+        let spec = TransferSpec::builder()
+            .contract(Contract::Fidelity(1e-7))
+            .build()
+            .unwrap();
+        let job = Job::from_spec(3, small_sched(2000), &spec, 2, 1.5);
+        assert_eq!(job.id, 3);
+        assert_eq!(job.contract, Contract::Fidelity(1e-7));
+        assert_eq!(job.weight, 2);
+        let res = run_campaign(&cfg(0.0), vec![Job { id: 0, ..job }], &mut NoLoss);
+        assert!(res.jobs[0].met_contract);
+    }
+
+    #[test]
     fn error_bound_jobs_survive_loss() {
         let mut loss = StaticLoss::with_ttl(383.0, 7, 1.0 / 19_144.0);
         let jobs = vec![eb_job(0, 0.0, 1), eb_job(1, 0.0, 1)];
@@ -386,7 +433,7 @@ mod tests {
         let dl = Job {
             id: 1,
             sched: sched.clone(),
-            contract: JobContract::Deadline(tau),
+            contract: Contract::Deadline(tau),
             weight: 4,
             arrival: 0.2,
         };

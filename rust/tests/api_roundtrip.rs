@@ -1,0 +1,364 @@
+//! Roundtrip matrix for the `janus::api` facade — the acceptance test of
+//! the unified-API redesign. Deadline and Fidelity contracts run over
+//! both the lossless in-memory transport and a 5%-loss deterministic
+//! testkit channel, single-stream and pooled, with byte-exact delivery
+//! and observer events asserted in order.
+
+use janus::api::{
+    mem_transport_pair, run_pair, Contract, Dataset, EventLog, TransferEvent, TransferSpec,
+};
+use janus::model::NetParams;
+use janus::testkit::{loss_transport_pair, LossTrace};
+use janus::util::Pcg64;
+use std::time::Duration;
+
+fn test_dataset(seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let sizes = [40_000usize, 160_000, 320_000, 1_000_000];
+    let eps = vec![0.004, 0.0005, 0.00006, 0.0000001];
+    Dataset::new(
+        sizes
+            .iter()
+            .map(|&sz| {
+                let mut v = vec![0u8; sz];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect(),
+        eps,
+    )
+    .unwrap()
+}
+
+fn spec(contract: Contract, streams: usize, initial_lambda: f64) -> TransferSpec {
+    TransferSpec::builder()
+        .contract(contract)
+        .streams(streams)
+        .net(NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(initial_lambda)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(5))
+        .max_duration(Duration::from_secs(60))
+        .build()
+        .unwrap()
+}
+
+fn assert_byte_exact(levels: &[Option<Vec<u8>>], want: &Dataset) {
+    assert_eq!(levels.len(), want.levels.len());
+    for (li, (got, want)) in levels.iter().zip(&want.levels).enumerate() {
+        assert_eq!(got.as_ref().expect("level delivered"), want, "level {li} differs");
+    }
+}
+
+// ---------------------------------------------------------------- Fidelity
+
+#[test]
+fn fidelity_over_mem_single_stream_is_byte_exact() {
+    let data = test_dataset(1);
+    let (st, rt) = mem_transport_pair(1);
+    let rep = run_pair(&spec(Contract::Fidelity(1e-7), 1, 0.0), st, rt, &data, None, None)
+        .unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+    assert_eq!(rep.received.levels_recovered, 4);
+    assert_eq!(rep.sent.passes, 0);
+    assert!((rep.received.achieved_eps - 1e-7).abs() < 1e-15);
+    assert!(rep.sent.single_stream().is_some(), "streams=1 routes single-stream");
+}
+
+#[test]
+fn fidelity_over_mem_pooled_is_byte_exact() {
+    let data = test_dataset(2);
+    let (st, rt) = mem_transport_pair(4);
+    let rep = run_pair(&spec(Contract::Fidelity(1e-7), 4, 0.0), st, rt, &data, None, None)
+        .unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+    assert!(rep.sent.pooled().is_some(), "streams=4 routes pooled");
+    let trace = rep.sent.trace().unwrap();
+    assert_eq!(trace[0].per_stream.len(), 4);
+    assert!(trace[0].per_stream.iter().all(|&c| c > 0), "every stream carried load");
+}
+
+#[test]
+fn fidelity_sends_only_needed_levels() {
+    let data = test_dataset(3);
+    let (st, rt) = mem_transport_pair(1);
+    // ε = 0.004 is satisfied by level 1 alone.
+    let rep = run_pair(&spec(Contract::Fidelity(0.004), 1, 0.0), st, rt, &data, None, None)
+        .unwrap();
+    assert_eq!(rep.received.levels.len(), 1, "only level 1 in manifest");
+    assert_eq!(rep.received.levels[0].as_ref().unwrap(), &data.levels[0]);
+}
+
+#[test]
+fn fidelity_over_lossy_testkit_single_stream_recovers_exactly() {
+    let data = test_dataset(4);
+    // 5% deterministic fragment loss on the single (control) channel.
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(0.05, 99));
+    let s = spec(Contract::Fidelity(1e-7), 1, 0.05 * 200_000.0);
+    let rep = run_pair(&s, st, rt, &data, None, None).unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+    assert!(
+        rep.received.groups_recovered > 0 || rep.sent.passes > 0,
+        "5% loss must exercise recovery"
+    );
+}
+
+#[test]
+fn fidelity_over_lossy_testkit_pooled_recovers_exactly() {
+    let data = test_dataset(5);
+    let (st, rt) = loss_transport_pair(4, |w| LossTrace::seeded(0.05, 7 ^ (w as u64 + 1)));
+    let s = spec(Contract::Fidelity(1e-7), 4, 0.05 * 4.0 * 200_000.0);
+    let rep = run_pair(&s, st, rt, &data, None, None).unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+    assert!(rep.received.groups_recovered > 0 || rep.sent.passes > 0);
+}
+
+// ---------------------------------------------------------------- Deadline
+
+#[test]
+fn deadline_over_mem_delivers_everything_within_budget() {
+    let data = test_dataset(6);
+    let (st, rt) = mem_transport_pair(1);
+    let rep = run_pair(&spec(Contract::Deadline(60.0), 1, 0.0), st, rt, &data, None, None)
+        .unwrap();
+    // Lossless + generous τ: the full ladder arrives byte-exact.
+    assert_byte_exact(&rep.received.levels, &data);
+    assert_eq!(rep.sent.passes, 0, "deadline never retransmits");
+}
+
+#[test]
+fn deadline_over_lossy_testkit_returns_exact_prefix() {
+    let data = test_dataset(7);
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(0.05, 1234));
+    let s = spec(Contract::Deadline(60.0), 1, 0.05 * 200_000.0);
+    let rep = run_pair(&s, st, rt, &data, None, None).unwrap();
+    assert_eq!(rep.sent.passes, 0, "no retransmission under deadline contract");
+    // Whatever prefix was recovered must be byte-exact.
+    for i in 0..rep.received.levels_recovered {
+        assert_eq!(rep.received.levels[i].as_ref().unwrap(), &data.levels[i]);
+    }
+    // The plan protects early levels: level 1 survives 5% loss.
+    assert!(rep.received.levels_recovered >= 1, "level 1 must survive");
+}
+
+// -------------------------------------------------------------- BestEffort
+
+#[test]
+fn best_effort_delivers_full_ladder() {
+    let data = test_dataset(8);
+    let (st, rt) = loss_transport_pair(4, |w| LossTrace::seeded(0.02, 40 + w as u64));
+    let s = spec(Contract::BestEffort, 4, 0.02 * 4.0 * 200_000.0);
+    let rep = run_pair(&s, st, rt, &data, None, None).unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+    assert_eq!(rep.received.levels_recovered, 4);
+}
+
+// -------------------------------------------------------- Observer events
+
+#[test]
+fn lambda_reports_flow_back_to_the_sender() {
+    let data = test_dataset(9);
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(0.03, 13));
+    let s = TransferSpec::builder()
+        .contract(Contract::Fidelity(1e-7))
+        .net(NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(0.03 * 200_000.0)
+        // Tiny window: the whole transfer lasts ~10 ms of wall time.
+        .lambda_window(0.002)
+        .idle_timeout(Duration::from_secs(5))
+        .max_duration(Duration::from_secs(60));
+    let mut sender_log = EventLog::new();
+    let mut receiver_log = EventLog::new();
+    let rep = run_pair(
+        &s.build().unwrap(),
+        st,
+        rt,
+        &data,
+        Some(&mut sender_log),
+        Some(&mut receiver_log),
+    )
+    .unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+    assert!(
+        !rep.sent.lambda_history.is_empty(),
+        "sender must see λ̂ feedback"
+    );
+    // Both sides observed the λ̂ flow as typed events.
+    let recv_lambda: Vec<f64> = receiver_log
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TransferEvent::LambdaUpdated { lambda } => Some(*lambda),
+            _ => None,
+        })
+        .collect();
+    assert!(!recv_lambda.is_empty(), "receiver emits LambdaUpdated");
+    assert!(
+        !sender_log
+            .filtered(|e| matches!(e, TransferEvent::LambdaUpdated { .. }))
+            .is_empty(),
+        "sender emits LambdaUpdated on feedback"
+    );
+    // Quantitative accuracy (ported from the deleted session.rs test):
+    // λ̂ must track the loss fraction times the *achieved* wire rate
+    // (sleep-granularity pacing undershoots the nominal r).
+    let achieved_rate = rep.sent.fragments_sent as f64 / rep.sent.duration;
+    let expect = 0.03 * achieved_rate;
+    let mean = janus::util::stats::mean(&recv_lambda);
+    assert!(
+        mean > 0.2 * expect && mean < 3.0 * expect,
+        "λ̂ mean {mean} vs expected ≈{expect}"
+    );
+}
+
+#[test]
+fn single_stream_events_arrive_in_protocol_order() {
+    let data = test_dataset(10);
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(0.05, 55));
+    let s = spec(Contract::Fidelity(1e-7), 1, 0.05 * 200_000.0);
+    let mut sender_log = EventLog::new();
+    let mut receiver_log = EventLog::new();
+    let rep = run_pair(&s, st, rt, &data, Some(&mut sender_log), Some(&mut receiver_log))
+        .unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+
+    let ev = &sender_log.events;
+    assert!(!ev.is_empty());
+    assert_eq!(ev[0], TransferEvent::PassStarted { pass: 0 }, "first event: pass 0");
+    // PassStarted events strictly increase.
+    let passes: Vec<u32> = ev
+        .iter()
+        .filter_map(|e| match e {
+            TransferEvent::PassStarted { pass } => Some(*pass),
+            _ => None,
+        })
+        .collect();
+    assert!(passes.windows(2).all(|w| w[1] == w[0] + 1), "passes in order: {passes:?}");
+    assert_eq!(passes.len() as u32, rep.sent.passes + 1, "one PassStarted per pass");
+    // Each pass's StreamFinished follows its PassStarted.
+    for &p in &passes {
+        let started = ev
+            .iter()
+            .position(|e| *e == TransferEvent::PassStarted { pass: p })
+            .unwrap();
+        let finished = ev
+            .iter()
+            .position(|e| matches!(e, TransferEvent::StreamFinished { pass, .. } if *pass == p))
+            .unwrap_or_else(|| panic!("no StreamFinished for pass {p}"));
+        assert!(started < finished, "pass {p}: start before finish");
+    }
+    // The initial ParityAdapted comes after PassStarted{0} (fidelity
+    // contracts always solve Eq. 8 at least once).
+    let parity = ev
+        .iter()
+        .position(|e| matches!(e, TransferEvent::ParityAdapted { .. }))
+        .expect("fidelity emits ParityAdapted");
+    assert!(parity >= 1, "ParityAdapted after PassStarted");
+
+    // Receiver side: groups recovered under loss, emitted during
+    // reconstruction (after all LambdaUpdated events).
+    if rep.received.groups_recovered > 0 {
+        let rev = &receiver_log.events;
+        let first_group = rev
+            .iter()
+            .position(|e| matches!(e, TransferEvent::GroupRecovered { .. }))
+            .unwrap();
+        let last_lambda = rev
+            .iter()
+            .rposition(|e| matches!(e, TransferEvent::LambdaUpdated { .. }));
+        if let Some(l) = last_lambda {
+            assert!(l < first_group, "λ̂ events precede reconstruction events");
+        }
+        assert_eq!(
+            rev.iter()
+                .filter(|e| matches!(e, TransferEvent::GroupRecovered { .. }))
+                .count() as u64,
+            rep.received.groups_recovered,
+            "one GroupRecovered per recovered group"
+        );
+    }
+}
+
+#[test]
+fn pooled_events_arrive_in_protocol_order() {
+    let data = test_dataset(11);
+    let streams = 4usize;
+    let (st, rt) = loss_transport_pair(streams, |w| LossTrace::seeded(0.05, 70 + w as u64));
+    let s = spec(Contract::Fidelity(1e-7), streams, 0.05 * 4.0 * 200_000.0);
+    let mut sender_log = EventLog::new();
+    let mut receiver_log = EventLog::new();
+    let rep = run_pair(&s, st, rt, &data, Some(&mut sender_log), Some(&mut receiver_log))
+        .unwrap();
+    assert_byte_exact(&rep.received.levels, &data);
+
+    let ev = &sender_log.events;
+    assert_eq!(ev[0], TransferEvent::PassStarted { pass: 0 });
+    assert_eq!(
+        ev[1],
+        TransferEvent::ParityAdapted {
+            pass: 0,
+            m: rep.sent.trace().unwrap()[0].m
+        },
+        "pass 0 parity follows pass start"
+    );
+    let total_passes = rep.sent.passes + 1;
+    for p in 0..total_passes {
+        let started = ev
+            .iter()
+            .position(|e| *e == TransferEvent::PassStarted { pass: p })
+            .unwrap_or_else(|| panic!("no PassStarted for pass {p}"));
+        // Exactly one ParityAdapted per pass, right at the barrier.
+        let adapted = ev
+            .iter()
+            .position(|e| matches!(e, TransferEvent::ParityAdapted { pass, .. } if *pass == p))
+            .unwrap();
+        assert!(started < adapted);
+        // Every stream reports StreamFinished for the pass, all after
+        // ParityAdapted and before the pass's LambdaUpdated.
+        let stream_idx: Vec<usize> = ev
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| match e {
+                TransferEvent::StreamFinished { pass, .. } if *pass == p => Some(i),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(stream_idx.len(), streams, "pass {p}: one finish per stream");
+        assert!(stream_idx.iter().all(|&i| i > adapted));
+        // The λ̂ barrier update for this pass comes after every stream.
+        let lambda_after: Vec<usize> = ev
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| match e {
+                TransferEvent::LambdaUpdated { .. } if i > adapted => Some(i),
+                _ => None,
+            })
+            .collect();
+        let pass_lambda = lambda_after
+            .iter()
+            .find(|&&i| stream_idx.iter().all(|&sidx| sidx < i))
+            .copied()
+            .unwrap_or_else(|| panic!("pass {p}: no barrier LambdaUpdated"));
+        assert!(stream_idx.iter().all(|&i| i < pass_lambda));
+    }
+    // One barrier λ̂ per pass, matching the report's history.
+    let lambdas: Vec<f64> = ev
+        .iter()
+        .filter_map(|e| match e {
+            TransferEvent::LambdaUpdated { lambda } => Some(*lambda),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(lambdas, rep.sent.lambda_history, "events mirror the λ̂ history");
+
+    // Receiver side: every RS recovery shows up as a typed event.
+    assert_eq!(
+        receiver_log
+            .events
+            .iter()
+            .filter(|e| matches!(e, TransferEvent::GroupRecovered { .. }))
+            .count() as u64,
+        rep.received.groups_recovered
+    );
+    assert!(rep.received.groups_recovered > 0, "5% loss must recover groups");
+}

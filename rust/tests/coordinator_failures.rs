@@ -1,19 +1,19 @@
-//! Failure injection against the real coordinator engines: corrupted
-//! datagrams, reordering, silent peers, heavy loss, and contract edges.
+//! Failure injection against the real engines through the `janus::api`
+//! facade: corrupted datagrams, reordering, silent peers, heavy loss,
+//! and contract edges.
 
-use janus::coordinator::{
-    run_receiver, run_sender, run_session, Contract, Packet, ReceiverConfig, SenderConfig,
-};
+use janus::api::{run_pair, ChannelTransport, Contract, Dataset, Endpoint, TransferSpec};
+use janus::coordinator::Packet;
 use janus::model::params::NetParams;
 use janus::transport::channel::{mem_pair, Datagram, LossyChannel, MemChannel, ReorderChannel};
 use janus::util::Pcg64;
 use std::time::Duration;
 
-fn test_levels(seed: u64) -> (Vec<Vec<u8>>, Vec<f64>) {
+fn test_dataset(seed: u64) -> Dataset {
     let mut rng = Pcg64::seeded(seed);
     let sizes = [30_000usize, 120_000, 240_000, 700_000];
     let eps = vec![0.004, 0.0005, 0.00006, 0.0000001];
-    (
+    Dataset::new(
         sizes
             .iter()
             .map(|&sz| {
@@ -24,27 +24,23 @@ fn test_levels(seed: u64) -> (Vec<Vec<u8>>, Vec<f64>) {
             .collect(),
         eps,
     )
+    .unwrap()
 }
 
 fn net() -> NetParams {
     NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 }
 }
 
-fn sender_cfg(contract: Contract) -> SenderConfig {
-    SenderConfig {
-        net: net(),
-        contract,
-        initial_lambda: 0.0,
-        max_duration: Duration::from_secs(30),
-    }
-}
-
-fn receiver_cfg() -> ReceiverConfig {
-    ReceiverConfig {
-        t_w: 0.05,
-        idle_timeout: Duration::from_secs(3),
-        max_duration: Duration::from_secs(30),
-    }
+fn spec(contract: Contract, initial_lambda: f64) -> TransferSpec {
+    TransferSpec::builder()
+        .contract(contract)
+        .net(net())
+        .initial_lambda(initial_lambda)
+        .lambda_window(0.05)
+        .idle_timeout(Duration::from_secs(3))
+        .max_duration(Duration::from_secs(30))
+        .build()
+        .unwrap()
 }
 
 /// Channel wrapper that flips a bit in a fraction of outgoing datagrams
@@ -76,27 +72,42 @@ impl<C: Datagram> Datagram for CorruptingChannel<C> {
 
 #[test]
 fn corrupted_fragments_are_recovered_via_crc_and_parity() {
-    let (levels, eps) = test_levels(1);
+    let data = test_dataset(1);
     let (a, b) = mem_pair();
     let corrupting = CorruptingChannel { inner: a, rng: Pcg64::seeded(5), fraction: 0.02 };
-    let mut cfg = sender_cfg(Contract::ErrorBound(1e-7));
-    cfg.initial_lambda = 0.02 * cfg.net.r;
-    let (_, r) = run_session(corrupting, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
-    assert_eq!(r.levels_recovered, 4, "corruption must be transparent");
-    for (got, want) in r.levels.iter().zip(&levels) {
+    let s = spec(Contract::Fidelity(1e-7), 0.02 * net().r);
+    let rep = run_pair(
+        &s,
+        ChannelTransport::new(corrupting),
+        ChannelTransport::new(b),
+        &data,
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.received.levels_recovered, 4, "corruption must be transparent");
+    for (got, want) in rep.received.levels.iter().zip(&data.levels) {
         assert_eq!(got.as_ref().unwrap(), want);
     }
 }
 
 #[test]
 fn reordered_fragments_are_reassembled() {
-    let (levels, eps) = test_levels(2);
+    let data = test_dataset(2);
     let (a, b) = mem_pair();
     let reorder = ReorderChannel::new(a, 64, 9);
-    let cfg = sender_cfg(Contract::ErrorBound(1e-7));
-    let (_, r) = run_session(reorder, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
-    assert_eq!(r.levels_recovered, 4);
-    for (got, want) in r.levels.iter().zip(&levels) {
+    let s = spec(Contract::Fidelity(1e-7), 0.0);
+    let rep = run_pair(
+        &s,
+        ChannelTransport::new(reorder),
+        ChannelTransport::new(b),
+        &data,
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.received.levels_recovered, 4);
+    for (got, want) in rep.received.levels.iter().zip(&data.levels) {
         assert_eq!(got.as_ref().unwrap(), want);
     }
 }
@@ -105,64 +116,80 @@ fn reordered_fragments_are_reassembled() {
 fn heavy_loss_still_delivers_error_bound_contract() {
     // 15% loss — way past any reasonable WAN; Alg. 1 must converge via
     // parity + repeated passive retransmission.
-    let (levels, eps) = test_levels(3);
+    let data = test_dataset(3);
     let (a, b) = mem_pair();
     let lossy = LossyChannel::new(a, 0.15, 21);
-    let mut cfg = sender_cfg(Contract::ErrorBound(1e-7));
-    cfg.initial_lambda = 0.15 * cfg.net.r;
-    let (s, r) = run_session(lossy, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
-    assert_eq!(r.levels_recovered, 4);
-    assert!(s.passes >= 1 || r.groups_recovered > 0);
-    for (got, want) in r.levels.iter().zip(&levels) {
+    let s = spec(Contract::Fidelity(1e-7), 0.15 * net().r);
+    let rep = run_pair(
+        &s,
+        ChannelTransport::new(lossy),
+        ChannelTransport::new(b),
+        &data,
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.received.levels_recovered, 4);
+    assert!(rep.sent.passes >= 1 || rep.received.groups_recovered > 0);
+    for (got, want) in rep.received.levels.iter().zip(&data.levels) {
         assert_eq!(got.as_ref().unwrap(), want);
     }
 }
 
 #[test]
 fn receiver_times_out_when_sender_never_appears() {
-    let (_a, mut b): (MemChannel, MemChannel) = mem_pair();
-    let cfg = ReceiverConfig {
-        t_w: 0.05,
-        idle_timeout: Duration::from_millis(200),
-        max_duration: Duration::from_secs(2),
-    };
-    let err = run_receiver(&mut b, &cfg).unwrap_err();
+    let (_a, b): (MemChannel, MemChannel) = mem_pair();
+    let s = TransferSpec::builder()
+        .lambda_window(0.05)
+        .idle_timeout(Duration::from_millis(200))
+        .max_duration(Duration::from_secs(2))
+        .build()
+        .unwrap();
+    let err = Endpoint::new(s)
+        .receive(&mut ChannelTransport::new(b), None)
+        .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("manifest"), "unexpected error: {msg}");
 }
 
 #[test]
 fn sender_fails_cleanly_when_receiver_never_acks() {
-    let (mut a, _b) = mem_pair();
-    let (levels, eps) = test_levels(4);
-    let cfg = sender_cfg(Contract::ErrorBound(1e-7));
-    let err = run_sender(&mut a, &cfg, &levels, &eps).unwrap_err();
+    let (a, _b) = mem_pair();
+    let data = test_dataset(4);
+    let s = spec(Contract::Fidelity(1e-7), 0.0);
+    let err = Endpoint::new(s)
+        .send(&mut ChannelTransport::new(a), &data, None)
+        .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("acknowledge"), "unexpected error: {msg}");
 }
 
 #[test]
 fn sender_rejects_unachievable_error_bound() {
-    let (mut a, _b) = mem_pair();
-    let (levels, eps) = test_levels(5);
-    let cfg = sender_cfg(Contract::ErrorBound(1e-12)); // below ε_4
-    let err = run_sender(&mut a, &cfg, &levels, &eps).unwrap_err();
+    let (a, _b) = mem_pair();
+    let data = test_dataset(5);
+    let s = spec(Contract::Fidelity(1e-12), 0.0); // below ε_4
+    let err = Endpoint::new(s)
+        .send(&mut ChannelTransport::new(a), &data, None)
+        .unwrap_err();
     assert!(format!("{err:#}").contains("unachievable"));
 }
 
 #[test]
 fn sender_rejects_impossible_deadline() {
-    let (mut a, _b) = mem_pair();
-    let (levels, eps) = test_levels(6);
-    let cfg = sender_cfg(Contract::Deadline(1e-9));
-    let err = run_sender(&mut a, &cfg, &levels, &eps).unwrap_err();
+    let (a, _b) = mem_pair();
+    let data = test_dataset(6);
+    let s = spec(Contract::Deadline(1e-9), 0.0);
+    let err = Endpoint::new(s)
+        .send(&mut ChannelTransport::new(a), &data, None)
+        .unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"));
 }
 
 #[test]
 fn garbage_datagrams_are_ignored() {
     // Blast random bytes at a receiver alongside a real transfer.
-    let (levels, eps) = test_levels(7);
+    let data = test_dataset(7);
     let (a, b) = mem_pair();
 
     struct GarbageInjector<C: Datagram> {
@@ -187,9 +214,17 @@ fn garbage_datagrams_are_ignored() {
     }
 
     let inj = GarbageInjector { inner: a, rng: Pcg64::seeded(13) };
-    let cfg = sender_cfg(Contract::ErrorBound(1e-7));
-    let (_, r) = run_session(inj, b, cfg, receiver_cfg(), levels.clone(), eps).unwrap();
-    assert_eq!(r.levels_recovered, 4);
+    let s = spec(Contract::Fidelity(1e-7), 0.0);
+    let rep = run_pair(
+        &s,
+        ChannelTransport::new(inj),
+        ChannelTransport::new(b),
+        &data,
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.received.levels_recovered, 4);
 }
 
 #[test]

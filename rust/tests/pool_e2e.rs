@@ -1,21 +1,23 @@
-//! End-to-end matrix for the multi-stream [`TransferPool`] over the
-//! deterministic testkit: byte-exact delivery at loss rates
-//! {0, 1%, 5%, 20%}, λ̂ convergence to the injected loss rate, and
-//! bit-identical transfer traces for identical seeds.
+//! End-to-end matrix for the multi-stream pooled path of the
+//! `janus::api` facade over the deterministic testkit: byte-exact
+//! delivery at loss rates {0, 1%, 5%, 20%}, λ̂ convergence to the
+//! injected loss rate, and bit-identical transfer traces for identical
+//! seeds.
 
-use janus::coordinator::{PoolConfig, PoolReceiverReport, PoolSenderReport, ReceiverConfig, TransferPool};
+use janus::api::{run_pair, Contract, Dataset, StagedTransport, TransferReport, TransferSpec};
 use janus::model::NetParams;
-use janus::testkit::{pool_fixture, LossTrace};
+use janus::testkit::{loss_transport_pair, LossTrace};
 use janus::util::Pcg64;
 use std::time::Duration;
 
 const STREAMS: usize = 4;
+const RATE: f64 = 200_000.0;
 
-fn sized_dataset(seed: u64, scale: usize) -> (Vec<Vec<u8>>, Vec<f64>) {
+fn sized_dataset(seed: u64, scale: usize) -> Dataset {
     let mut rng = Pcg64::seeded(seed);
     let sizes = [60_000usize * scale, 250_000 * scale, 500_000 * scale];
     let eps = vec![0.004, 0.0005, 0.0000001];
-    (
+    Dataset::new(
         sizes
             .iter()
             .map(|&sz| {
@@ -26,98 +28,93 @@ fn sized_dataset(seed: u64, scale: usize) -> (Vec<Vec<u8>>, Vec<f64>) {
             .collect(),
         eps,
     )
-}
-
-fn dataset(seed: u64) -> (Vec<Vec<u8>>, Vec<f64>) {
-    sized_dataset(seed, 1)
-}
-
-fn pool(initial_lambda: f64) -> TransferPool {
-    TransferPool::new(PoolConfig {
-        net: NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 },
-        streams: STREAMS,
-        error_bound: 1e-7,
-        initial_lambda,
-        max_duration: Duration::from_secs(120),
-    })
     .unwrap()
 }
 
-fn rcfg() -> ReceiverConfig {
-    ReceiverConfig {
-        t_w: 0.25,
-        idle_timeout: Duration::from_secs(10),
-        max_duration: Duration::from_secs(120),
-    }
+fn dataset(seed: u64) -> Dataset {
+    sized_dataset(seed, 1)
 }
 
-fn run_at(
-    loss: f64,
-    seed: u64,
-    initial_lambda: f64,
-) -> (PoolSenderReport, PoolReceiverReport) {
-    run_at_scaled(loss, seed, initial_lambda, 1)
+fn spec(initial_lambda: f64) -> TransferSpec {
+    TransferSpec::builder()
+        .contract(Contract::Fidelity(1e-7))
+        .streams(STREAMS)
+        .net(NetParams { t: 0.0005, r: RATE, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(initial_lambda)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(10))
+        .max_duration(Duration::from_secs(120))
+        .build()
+        .unwrap()
 }
 
-fn run_at_scaled(
-    loss: f64,
-    seed: u64,
+fn run_with(
+    data: &Dataset,
     initial_lambda: f64,
-    scale: usize,
-) -> (PoolSenderReport, PoolReceiverReport) {
-    let (levels, eps) = sized_dataset(0xDA7A ^ seed, scale);
-    let p = pool(initial_lambda);
-    let (mut sc, sd, mut rc, rd) =
-        pool_fixture(STREAMS, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1) * 0x9E37));
-    let (s_rep, r_rep) = p
-        .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
-        .unwrap();
+    transports: (StagedTransport, StagedTransport),
+) -> TransferReport {
+    let (sender_t, receiver_t) = transports;
+    let report = run_pair(&spec(initial_lambda), sender_t, receiver_t, data, None, None).unwrap();
     // Byte-exactness is part of every matrix point.
-    for (li, (got, want)) in r_rep.levels.iter().zip(&levels).enumerate() {
+    for (li, (got, want)) in report.received.levels.iter().zip(&data.levels).enumerate() {
         assert_eq!(
             got.as_ref().expect("level must be delivered"),
             want,
-            "loss={loss}: level {li} bytes differ"
+            "level {li} bytes differ"
         );
     }
-    assert_eq!(r_rep.levels_recovered, levels.len());
-    (s_rep, r_rep)
+    assert_eq!(report.received.levels_recovered, data.levels.len());
+    report
+}
+
+fn run_at(loss: f64, seed: u64, initial_lambda: f64) -> TransferReport {
+    run_at_scaled(loss, seed, initial_lambda, 1)
+}
+
+fn run_at_scaled(loss: f64, seed: u64, initial_lambda: f64, scale: usize) -> TransferReport {
+    let data = sized_dataset(0xDA7A ^ seed, scale);
+    let transports =
+        loss_transport_pair(STREAMS, |w| LossTrace::seeded(loss, seed ^ (w as u64 + 1) * 0x9E37));
+    run_with(&data, initial_lambda, transports)
 }
 
 #[test]
 fn matrix_lossless_delivers_in_one_pass() {
-    let (s, r) = run_at(0.0, 11, 0.0);
-    assert_eq!(s.passes, 0, "no loss ⇒ no retransmission");
+    let rep = run_at(0.0, 11, 0.0);
+    let s = rep.sent.pooled().unwrap();
+    let r = rep.received.pooled().unwrap();
+    assert_eq!(rep.sent.passes, 0, "no loss ⇒ no retransmission");
     assert_eq!(s.trace.len(), 1);
     assert_eq!(s.trace[0].m, 0, "λ̂=0 ⇒ Eq.8 picks m=0");
     assert_eq!(s.trace[0].lambda_hat, 0.0);
     assert_eq!(r.trace.len(), 1);
     assert_eq!(r.trace[0].expected, r.trace[0].received);
-    assert_eq!(r.groups_recovered, 0, "nothing to RS-recover");
+    assert_eq!(rep.received.groups_recovered, 0, "nothing to RS-recover");
 }
 
 #[test]
 fn matrix_one_percent_loss() {
     // Honest initial estimate: λ₀ = f · N · r.
-    let (s, r) = run_at(0.01, 22, 0.01 * 200_000.0 * STREAMS as f64);
+    let rep = run_at(0.01, 22, 0.01 * RATE * STREAMS as f64);
+    let s = rep.sent.pooled().unwrap();
     assert!(s.trace[0].m >= 1, "1% loss should buy parity, m={}", s.trace[0].m);
     // Mostly recovered by parity in-pass; a few groups may need retries.
-    assert!(s.passes <= 3, "1% loss needed {} passes", s.passes);
-    assert!(r.groups_recovered > 0 || s.passes > 0);
+    assert!(rep.sent.passes <= 3, "1% loss needed {} passes", rep.sent.passes);
+    assert!(rep.received.groups_recovered > 0 || rep.sent.passes > 0);
 }
 
 #[test]
 fn matrix_five_percent_loss() {
-    let (s, _r) = run_at(0.05, 33, 0.05 * 200_000.0 * STREAMS as f64);
-    assert!(s.passes <= 6, "5% loss needed {} passes", s.passes);
+    let rep = run_at(0.05, 33, 0.05 * RATE * STREAMS as f64);
+    assert!(rep.sent.passes <= 6, "5% loss needed {} passes", rep.sent.passes);
 }
 
 #[test]
 fn matrix_twenty_percent_loss() {
-    let (s, _r) = run_at(0.20, 44, 0.20 * 200_000.0 * STREAMS as f64);
-    // Brutal loss: correctness (asserted in run_at) is the headline;
+    let rep = run_at(0.20, 44, 0.20 * RATE * STREAMS as f64);
+    // Brutal loss: correctness (asserted in run_with) is the headline;
     // convergence must still be quick thanks to λ̂-adapted parity.
-    assert!(s.passes <= 12, "20% loss needed {} passes", s.passes);
+    assert!(rep.sent.passes <= 12, "20% loss needed {} passes", rep.sent.passes);
 }
 
 #[test]
@@ -128,8 +125,10 @@ fn lambda_hat_converges_to_injected_rate() {
     // dataset (~8k fragments): 0.40 relative tolerance is then ≥ 3.5σ
     // at every loss rate tested.
     for (loss, seed) in [(0.01, 5u64), (0.05, 6), (0.20, 7)] {
-        let (s, r) = run_at_scaled(loss, seed, 0.0, 10);
-        let expect = loss * 200_000.0 * STREAMS as f64;
+        let rep = run_at_scaled(loss, seed, 0.0, 10);
+        let s = rep.sent.pooled().unwrap();
+        let r = rep.received.pooled().unwrap();
+        let expect = loss * RATE * STREAMS as f64;
         let got = s.trace[0].lambda_hat;
         let rel = (got - expect).abs() / expect;
         assert!(
@@ -139,7 +138,7 @@ fn lambda_hat_converges_to_injected_rate() {
         // Internal consistency: λ̂ is exactly the surviving-fraction
         // estimate over the aggregate nominal rate.
         let (e, rc) = (r.trace[0].expected, r.trace[0].received);
-        let reconstructed = (1.0 - rc as f64 / e as f64) * 200_000.0 * STREAMS as f64;
+        let reconstructed = (1.0 - rc as f64 / e as f64) * RATE * STREAMS as f64;
         assert!(
             (got - reconstructed).abs() < 1e-6,
             "λ̂ {got} vs reconstructed {reconstructed}"
@@ -152,9 +151,10 @@ fn lambda_mismeasure_heals_after_first_pass() {
     // Lie badly about λ₀ (claim lossless on a 5% link): pass 0 goes out
     // with m=0, the barrier measures the truth, and the retransmission
     // pass gets Eq.8-sized parity. The transfer still completes exactly.
-    let (s, _r) = run_at(0.05, 55, 0.0);
+    let rep = run_at(0.05, 55, 0.0);
+    let s = rep.sent.pooled().unwrap();
     assert_eq!(s.trace[0].m, 0, "λ₀=0 ⇒ first pass unprotected");
-    assert!(s.passes >= 1, "5% loss with m=0 must retransmit");
+    assert!(rep.sent.passes >= 1, "5% loss with m=0 must retransmit");
     assert!(
         s.trace[1].m >= 1,
         "measured λ̂ must buy parity on retransmission: {:?}",
@@ -168,14 +168,22 @@ fn identical_seeds_produce_identical_traces() {
     // same seeds ⇒ the full sender AND receiver traces are equal, at
     // every loss rate in the matrix.
     for loss in [0.0, 0.01, 0.05, 0.20] {
-        let (s1, r1) = run_at(loss, 99, 0.0);
-        let (s2, r2) = run_at(loss, 99, 0.0);
-        assert_eq!(s1.trace, s2.trace, "sender trace diverged at loss={loss}");
-        assert_eq!(r1.trace, r2.trace, "receiver trace diverged at loss={loss}");
-        assert_eq!(s1.fragments_sent, s2.fragments_sent);
-        assert_eq!(s1.lambda_history, s2.lambda_history);
-        assert_eq!(r1.fragments_received, r2.fragments_received);
-        assert_eq!(r1.groups_recovered, r2.groups_recovered);
+        let r1 = run_at(loss, 99, 0.0);
+        let r2 = run_at(loss, 99, 0.0);
+        assert_eq!(
+            r1.sent.pooled().unwrap().trace,
+            r2.sent.pooled().unwrap().trace,
+            "sender trace diverged at loss={loss}"
+        );
+        assert_eq!(
+            r1.received.pooled().unwrap().trace,
+            r2.received.pooled().unwrap().trace,
+            "receiver trace diverged at loss={loss}"
+        );
+        assert_eq!(r1.sent.fragments_sent, r2.sent.fragments_sent);
+        assert_eq!(r1.sent.lambda_history, r2.sent.lambda_history);
+        assert_eq!(r1.received.fragments_received, r2.received.fragments_received);
+        assert_eq!(r1.received.groups_recovered, r2.received.groups_recovered);
     }
 }
 
@@ -184,10 +192,11 @@ fn different_seeds_produce_different_traces_under_loss() {
     // Sanity for the determinism assertion above: the trace actually
     // depends on the loss realization (i.e. the equality test is not
     // vacuously comparing constants).
-    let (s1, _) = run_at(0.05, 101, 0.0);
-    let (s2, _) = run_at(0.05, 202, 0.0);
+    let r1 = run_at(0.05, 101, 0.0);
+    let r2 = run_at(0.05, 202, 0.0);
     assert_ne!(
-        s1.trace, s2.trace,
+        r1.sent.pooled().unwrap().trace,
+        r2.sent.pooled().unwrap().trace,
         "5% loss with different seeds should differ somewhere"
     );
 }
@@ -197,24 +206,18 @@ fn per_stream_loss_asymmetry_is_handled() {
     // Stream 2 loses 30% while others are clean — the shared estimator
     // sees the aggregate, and the lost FTGs (all from one stream's
     // shard) still converge via re-sharded retransmission.
-    let (levels, eps) = dataset(0xA5);
-    let p = pool(0.0);
-    let (mut sc, sd, mut rc, rd) = pool_fixture(STREAMS, |w| {
+    let data = dataset(0xA5);
+    let transports = loss_transport_pair(STREAMS, |w| {
         if w == 2 {
             LossTrace::seeded(0.30, 777)
         } else {
             LossTrace::None
         }
     });
-    let (s_rep, r_rep) = p
-        .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
-        .unwrap();
-    for (got, want) in r_rep.levels.iter().zip(&levels) {
-        assert_eq!(got.as_ref().unwrap(), want);
-    }
+    let rep = run_with(&data, 0.0, transports);
     // Aggregate λ̂ ≈ (0.30 / 4) · N·r.
-    let expect = 0.30 / STREAMS as f64 * 200_000.0 * STREAMS as f64;
-    let got = s_rep.trace[0].lambda_hat;
+    let expect = 0.30 / STREAMS as f64 * RATE * STREAMS as f64;
+    let got = rep.sent.pooled().unwrap().trace[0].lambda_hat;
     assert!(
         (got - expect).abs() / expect < 0.40,
         "asymmetric λ̂ {got:.0} vs {expect:.0}"
@@ -225,16 +228,10 @@ fn per_stream_loss_asymmetry_is_handled() {
 fn phased_loss_trace_drives_adaptation() {
     // Virtual-time regime change: pass 0 mostly clean, the retransmitted
     // tail heavily lossy. Transfer must still complete byte-exactly.
-    let (levels, eps) = dataset(0xB6);
-    let p = pool(0.0);
-    let (mut sc, sd, mut rc, rd) = pool_fixture(STREAMS, |w| {
+    let data = dataset(0xB6);
+    let transports = loss_transport_pair(STREAMS, |w| {
         LossTrace::phased(vec![(100, 0.002), (100, 0.15)], 1000 + w as u64)
     });
-    let (s_rep, r_rep) = p
-        .run_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
-        .unwrap();
-    for (got, want) in r_rep.levels.iter().zip(&levels) {
-        assert_eq!(got.as_ref().unwrap(), want);
-    }
-    assert!(s_rep.duration > 0.0);
+    let rep = run_with(&data, 0.0, transports);
+    assert!(rep.sent.duration > 0.0);
 }
