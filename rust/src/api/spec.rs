@@ -45,6 +45,9 @@ pub enum SpecError {
     GroupTooLarge(usize),
     /// Fragment payload size must be positive.
     ZeroFragmentSize,
+    /// Fragment payload size must fit one wire datagram
+    /// ([`crate::coordinator::packet::MAX_FRAGMENT_PAYLOAD`]).
+    FragmentTooLarge(usize),
     /// Pacing rate (fragments/s) must be positive and finite.
     BadPacingRate(f64),
     /// A `Deadline` contract needs a positive number of seconds.
@@ -78,6 +81,11 @@ impl fmt::Display for SpecError {
                 "spec: group size k+m must be <= 255 (<= 128 pooled), got {n}"
             ),
             SpecError::ZeroFragmentSize => write!(f, "spec: fragment size must be positive"),
+            SpecError::FragmentTooLarge(s) => write!(
+                f,
+                "spec: fragment size {s} exceeds the {}-byte datagram payload limit",
+                crate::coordinator::packet::MAX_FRAGMENT_PAYLOAD
+            ),
             SpecError::BadPacingRate(r) => {
                 write!(f, "spec: pacing rate must be positive and finite, got {r}")
             }
@@ -310,6 +318,11 @@ impl TransferSpecBuilder {
         if self.net.s == 0 {
             return Err(SpecError::ZeroFragmentSize);
         }
+        // Channels truncate datagrams at MAX_DATAGRAM (UDP semantics);
+        // an oversized s would corrupt every fragment on the wire.
+        if self.net.s > crate::coordinator::packet::MAX_FRAGMENT_PAYLOAD {
+            return Err(SpecError::FragmentTooLarge(self.net.s));
+        }
         if !self.net.r.is_finite() || self.net.r <= 0.0 {
             return Err(SpecError::BadPacingRate(self.net.r));
         }
@@ -440,6 +453,15 @@ mod tests {
             TransferSpec::builder().fragment_bytes(0).build().unwrap_err(),
             SpecError::ZeroFragmentSize
         );
+        assert_eq!(
+            TransferSpec::builder().fragment_bytes(16384).build().unwrap_err(),
+            SpecError::FragmentTooLarge(16384),
+            "fragments must fit one MAX_DATAGRAM datagram"
+        );
+        assert!(TransferSpec::builder()
+            .fragment_bytes(crate::coordinator::packet::MAX_FRAGMENT_PAYLOAD)
+            .build()
+            .is_ok());
         assert_eq!(
             TransferSpec::builder().pacing_rate(0.0).build().unwrap_err(),
             SpecError::BadPacingRate(0.0)

@@ -14,6 +14,11 @@
 //!   matching the single-socket deployment of the paper's prototype.
 //! * **data `w`** — pooled runs additionally open one paced channel per
 //!   stream `w ∈ 0..streams`.
+//!
+//! The engines drain every channel through the allocation-free
+//! [`Datagram::recv_into`] primitive (DESIGN.md §6); boxed channels
+//! forward it, so custom `Transport` impls inherit the zero-copy path
+//! for free when their channels implement it.
 
 use crate::transport::channel::Datagram;
 use crate::transport::udp::UdpChannel;

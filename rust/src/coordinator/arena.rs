@@ -1,0 +1,284 @@
+//! Strided fault-tolerant-group arenas — one allocation per FTG.
+//!
+//! The group tables used to hold every FTG as `Vec<Option<Vec<u8>>>`
+//! (k+m separate heap fragments plus `have_*` counters), and the
+//! sender's parity thread built k+m fresh `Vec`s per group. An
+//! [`FtgArena`] packs all `k + m` fragments of one group into a single
+//! strided buffer — slot `i` lives at bytes `[i·s, (i+1)·s)` — with a
+//! presence bitmap instead of `Option`s. One allocation per group,
+//! recyclable in place via [`FtgArena::reset`], and laid out exactly how
+//! [`crate::erasure::RsCode::encode_strided`] and
+//! [`crate::erasure::RsCode::reconstruct_into`] want their operands
+//! (DESIGN.md §6).
+
+use crate::erasure::{RsCode, RsError};
+
+/// Presence bitmap width: wire fragment indices are `u8`, so 256 bits
+/// cover every legal slot.
+const BITMAP_WORDS: usize = 4;
+
+/// All fragments of one fault-tolerant group in a single strided buffer
+/// plus a presence bitmap.
+#[derive(Debug, Clone)]
+pub struct FtgArena {
+    k: u8,
+    s: usize,
+    buf: Vec<u8>,
+    present: [u64; BITMAP_WORDS],
+}
+
+impl FtgArena {
+    /// Arena for a `(k, m)` group with fragment payloads of `s` bytes.
+    pub fn new(k: u8, m: u8, s: usize) -> FtgArena {
+        let slots = k as usize + m as usize;
+        FtgArena { k, s, buf: vec![0u8; slots * s], present: [0; BITMAP_WORDS] }
+    }
+
+    /// Re-geometry the arena in place, keeping the allocation: presence
+    /// bits clear, slot contents stale (callers fully overwrite a slot
+    /// before marking it present).
+    pub fn reset(&mut self, k: u8, m: u8, s: usize) {
+        self.k = k;
+        self.s = s;
+        self.present = [0; BITMAP_WORDS];
+        let want = (k as usize + m as usize) * s;
+        if self.buf.len() < want {
+            self.buf.resize(want, 0);
+        } else {
+            self.buf.truncate(want);
+        }
+    }
+
+    /// Data fragments in the group.
+    #[inline]
+    pub fn k(&self) -> u8 {
+        self.k
+    }
+
+    /// Fragment payload size in bytes.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.s
+    }
+
+    /// Fragment slots this arena currently holds (k + m, grown when a
+    /// later pass raised m).
+    #[inline]
+    pub fn slots(&self) -> usize {
+        if self.s == 0 {
+            0
+        } else {
+            self.buf.len() / self.s
+        }
+    }
+
+    #[inline]
+    fn bit(idx: usize) -> (usize, u64) {
+        (idx / 64, 1u64 << (idx % 64))
+    }
+
+    /// Is fragment `idx` present?
+    #[inline]
+    pub fn contains(&self, idx: usize) -> bool {
+        if idx >= 64 * BITMAP_WORDS {
+            return false;
+        }
+        let (w, b) = Self::bit(idx);
+        self.present[w] & b != 0
+    }
+
+    /// Grow the buffer to cover `slots` fragments (a later pass raised
+    /// m; parity rows nest, so existing fragments stay valid).
+    pub fn ensure_slots(&mut self, slots: usize) {
+        let want = slots * self.s;
+        if self.buf.len() < want {
+            self.buf.resize(want, 0);
+        }
+    }
+
+    /// Copy `payload` into slot `idx` (zero-padding the tail) and mark
+    /// it present. Returns `false` — and copies nothing — for
+    /// duplicates, out-of-range indices, or over-long payloads.
+    pub fn insert(&mut self, idx: usize, payload: &[u8]) -> bool {
+        if idx >= 64 * BITMAP_WORDS || payload.len() > self.s || self.contains(idx) {
+            return false;
+        }
+        self.ensure_slots(idx + 1);
+        let slot = &mut self.buf[idx * self.s..(idx + 1) * self.s];
+        slot[..payload.len()].copy_from_slice(payload);
+        slot[payload.len()..].fill(0);
+        let (w, b) = Self::bit(idx);
+        self.present[w] |= b;
+        true
+    }
+
+    /// Fragments present, any index.
+    pub fn have_total(&self) -> usize {
+        self.present.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Data fragments (index < k) present.
+    pub fn have_data(&self) -> usize {
+        let k = self.k as usize;
+        let mut count = 0;
+        for (w, word) in self.present.iter().enumerate() {
+            let lo = w * 64;
+            if k <= lo {
+                break;
+            }
+            let mask = if k >= lo + 64 { u64::MAX } else { (1u64 << (k - lo)) - 1 };
+            count += (word & mask).count_ones() as usize;
+        }
+        count
+    }
+
+    /// All data fragments present (pure-copy reassembly)?
+    #[inline]
+    pub fn data_complete(&self) -> bool {
+        self.have_data() == self.k as usize
+    }
+
+    /// Enough fragments (any mix of data/parity) to decode?
+    #[inline]
+    pub fn decodable(&self) -> bool {
+        self.have_total() >= self.k as usize
+    }
+
+    /// Slot `idx` bytes regardless of presence (sender-side access to
+    /// fully-populated arenas).
+    #[inline]
+    pub fn slot(&self, idx: usize) -> &[u8] {
+        &self.buf[idx * self.s..(idx + 1) * self.s]
+    }
+
+    /// Mutable slot `idx` (fill, then [`FtgArena::mark_present`]).
+    #[inline]
+    pub fn slot_mut(&mut self, idx: usize) -> &mut [u8] {
+        let s = self.s;
+        &mut self.buf[idx * s..(idx + 1) * s]
+    }
+
+    /// Mark slot `idx` present without copying (for slots filled in
+    /// place via [`FtgArena::slot_mut`] / `encode_strided`).
+    pub fn mark_present(&mut self, idx: usize) {
+        assert!(idx < 64 * BITMAP_WORDS, "fragment index {idx} out of bitmap range");
+        assert!((idx + 1) * self.s <= self.buf.len(), "slot {idx} beyond arena");
+        let (w, b) = Self::bit(idx);
+        self.present[w] |= b;
+    }
+
+    /// Fragment `idx`, when present.
+    pub fn fragment(&self, idx: usize) -> Option<&[u8]> {
+        if self.contains(idx) && (idx + 1) * self.s <= self.buf.len() {
+            Some(self.slot(idx))
+        } else {
+            None
+        }
+    }
+
+    /// Present fragments in index order, as `reconstruct`-shaped shards.
+    pub fn iter_present(&self) -> impl Iterator<Item = (usize, &[u8])> + '_ {
+        (0..self.slots()).filter_map(move |i| self.fragment(i).map(|f| (i, f)))
+    }
+
+    /// Raw strided buffer — `k` data slots then parity slots — for
+    /// [`RsCode::encode_strided`].
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Reed–Solomon-encode the parity slots from the data slots in place
+    /// and mark every slot present (the sender's one-allocation path).
+    pub fn encode_parity(&mut self, code: &RsCode) -> Result<(), RsError> {
+        let s = self.s;
+        code.encode_strided(&mut self.buf, s)?;
+        let n = self.slots();
+        for idx in 0..n {
+            self.mark_present(idx);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_tracks_presence_and_pads() {
+        let mut a = FtgArena::new(3, 2, 8);
+        assert_eq!(a.slots(), 5);
+        assert_eq!(a.have_total(), 0);
+        assert!(a.insert(1, b"hello"));
+        assert!(!a.insert(1, b"again"), "duplicates rejected");
+        assert!(a.insert(4, &[9u8; 8]));
+        assert!(!a.insert(300, b"x"), "out-of-range index rejected");
+        assert!(!a.insert(2, &[0u8; 9]), "over-long payload rejected");
+        assert_eq!(a.have_total(), 2);
+        assert_eq!(a.have_data(), 1);
+        assert!(!a.data_complete());
+        assert_eq!(a.fragment(1).unwrap(), b"hello\0\0\0");
+        assert!(a.fragment(0).is_none());
+        let shards: Vec<usize> = a.iter_present().map(|(i, _)| i).collect();
+        assert_eq!(shards, vec![1, 4]);
+    }
+
+    #[test]
+    fn grows_when_later_pass_raises_m() {
+        let mut a = FtgArena::new(2, 1, 4);
+        assert_eq!(a.slots(), 3);
+        assert!(a.insert(5, &[7u8; 4]), "index beyond slots grows the arena");
+        assert_eq!(a.slots(), 6);
+        assert_eq!(a.fragment(5).unwrap(), &[7u8; 4]);
+        assert!(a.insert(0, &[1u8; 4]));
+        assert_eq!(a.have_data(), 1);
+        assert_eq!(a.have_total(), 2);
+    }
+
+    #[test]
+    fn reset_reuses_the_allocation() {
+        let mut a = FtgArena::new(4, 4, 16);
+        a.insert(0, &[1u8; 16]);
+        let cap = a.as_slice().len();
+        a.reset(2, 2, 16);
+        assert_eq!(a.slots(), 4);
+        assert_eq!(a.have_total(), 0, "reset clears presence");
+        assert!(cap >= a.as_slice().len());
+        a.reset(4, 4, 16);
+        assert_eq!(a.slots(), 8);
+    }
+
+    #[test]
+    fn have_data_counts_only_below_k() {
+        let mut a = FtgArena::new(65, 10, 2);
+        for i in 0..65usize {
+            assert!(a.insert(i, &[i as u8; 2]));
+        }
+        assert!(a.data_complete(), "k spanning a bitmap word boundary");
+        assert_eq!(a.have_data(), 65);
+        a.insert(70, &[0u8; 2]);
+        assert_eq!(a.have_data(), 65);
+        assert_eq!(a.have_total(), 66);
+    }
+
+    #[test]
+    fn encode_parity_fills_and_marks_all_slots() {
+        let code = RsCode::new(4, 2).unwrap();
+        let mut a = FtgArena::new(4, 2, 32);
+        for i in 0..4usize {
+            a.slot_mut(i).fill(i as u8 + 1);
+        }
+        a.encode_parity(&code).unwrap();
+        assert_eq!(a.have_total(), 6);
+        assert!(a.data_complete());
+        // Parity must match the Vec-based encoder.
+        let data: Vec<&[u8]> = (0..4).map(|i| a.slot(i)).collect();
+        let parity = code.encode(&data).unwrap();
+        assert_eq!(a.slot(4), &parity[0][..]);
+        assert_eq!(a.slot(5), &parity[1][..]);
+    }
+}

@@ -13,7 +13,11 @@
 //! `TransferPool::run_*`) are `#[deprecated]` one-line shims kept for
 //! source compatibility.
 //!
-//! * [`packet`] — fragment + control wire format (Protobuf substitute).
+//! * [`arena`] — strided per-FTG fragment arenas with presence bitmaps
+//!   (one allocation per group; the engines' reassembly tables and the
+//!   parity pipeline's unit of transfer).
+//! * [`packet`] — fragment + control wire format (Protobuf substitute),
+//!   including the borrowing [`packet::PacketView`] hot-path decode.
 //! * [`sender`] — Alg. 1/Alg. 2 sender engine: a parity-generation thread
 //!   feeding a paced transmission thread, λ-adaptive redundancy, passive
 //!   retransmission.
@@ -26,6 +30,7 @@
 //!   endpoints and worker-pool RS encoding, a demultiplexing receiver,
 //!   and one shared λ̂ estimator.
 
+pub mod arena;
 pub mod packet;
 pub mod pool;
 pub mod receiver;
@@ -33,7 +38,8 @@ pub mod sender;
 pub mod session;
 
 pub use crate::api::Contract;
-pub use packet::{FragmentHeader, Manifest, Packet, WireError};
+pub use arena::FtgArena;
+pub use packet::{FragmentHeader, FragmentView, Manifest, Packet, PacketView, WireError};
 pub use pool::{
     PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport, RecvPassRecord, TransferPool,
 };

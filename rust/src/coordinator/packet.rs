@@ -18,6 +18,26 @@ use crate::util::crc32::Hasher;
 /// comfortably; control messages are small).
 pub const MAX_DATAGRAM: usize = 9 * 1024;
 
+/// Largest fragment payload that still fits one [`MAX_DATAGRAM`]
+/// datagram (kind byte + fragment header + payload + CRC32 trailer).
+/// [`crate::api::TransferSpec`] validation rejects larger `s`, since
+/// channels truncate at [`MAX_DATAGRAM`] like a UDP socket would.
+pub const MAX_FRAGMENT_PAYLOAD: usize = MAX_DATAGRAM - FRAGMENT_HEADER - 5;
+
+/// The one engine-side gate for fragment payload sizes: channels
+/// truncate at [`MAX_DATAGRAM`], so an oversized `s` would corrupt
+/// every fragment on the wire — fail loudly instead. (The typed
+/// [`crate::api::TransferSpec`] builder rejects this earlier on the
+/// public path; deprecated direct entry points land here.)
+pub fn validate_fragment_size(s: usize) -> crate::util::err::Result<()> {
+    if s > MAX_FRAGMENT_PAYLOAD {
+        crate::bail!(
+            "fragment size {s} exceeds the {MAX_FRAGMENT_PAYLOAD}-byte datagram payload limit"
+        );
+    }
+    Ok(())
+}
+
 /// Largest lost-FTG count one [`Packet::LostList`] may carry: senders of
 /// the list truncate to this so the datagram always fits [`MAX_DATAGRAM`]
 /// (kind + pass + count + 5 bytes/entry + CRC). The remainder is simply
@@ -112,6 +132,76 @@ fn crc(buf: &[u8]) -> u32 {
 /// substitute — control packets model a reliable side channel.
 pub fn is_fragment(buf: &[u8]) -> bool {
     buf.first() == Some(&KIND_FRAGMENT)
+}
+
+/// Validate the length and CRC32 trailer, returning the body (kind byte
+/// + fields).
+fn checked_body(buf: &[u8]) -> Result<&[u8], WireError> {
+    if buf.len() < 5 {
+        return Err(WireError::Truncated(buf.len()));
+    }
+    let (body, trailer) = buf.split_at(buf.len() - 4);
+    let want = u32::from_le_bytes(trailer.try_into().unwrap());
+    if crc(body) != want {
+        return Err(WireError::BadChecksum);
+    }
+    Ok(body)
+}
+
+/// Parse a fragment body (everything after the kind byte), borrowing the
+/// payload. `total` is the datagram length, for error reporting.
+fn parse_fragment(rest: &[u8], total: usize) -> Result<(FragmentHeader, &[u8]), WireError> {
+    if rest.len() < FRAGMENT_HEADER {
+        return Err(WireError::Truncated(total));
+    }
+    let level = rest[0];
+    let stream = rest[1];
+    let ftg = u32::from_le_bytes(rest[2..6].try_into().unwrap());
+    let index = rest[6];
+    let k = rest[7];
+    let m = rest[8];
+    let seq = u64::from_le_bytes(rest[9..17].try_into().unwrap());
+    let pass = u32::from_le_bytes(rest[17..21].try_into().unwrap());
+    let len = u32::from_le_bytes(rest[21..25].try_into().unwrap()) as usize;
+    if rest.len() < FRAGMENT_HEADER + len {
+        return Err(WireError::Truncated(total));
+    }
+    Ok((
+        FragmentHeader { level, stream, ftg, index, k, m, seq, pass },
+        &rest[FRAGMENT_HEADER..FRAGMENT_HEADER + len],
+    ))
+}
+
+/// Borrowed view of one fragment: header parsed, payload still sitting
+/// in the receive buffer — the receiver copies it exactly once, into its
+/// [`crate::coordinator::arena::FtgArena`] slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FragmentView<'a> {
+    pub header: FragmentHeader,
+    pub payload: &'a [u8],
+}
+
+/// Zero-copy decode of a datagram: fragments borrow their payload from
+/// the input buffer; control packets (small, off the hot path) decode to
+/// the owned [`Packet`].
+#[derive(Debug, PartialEq)]
+pub enum PacketView<'a> {
+    Fragment(FragmentView<'a>),
+    Control(Packet),
+}
+
+impl<'a> PacketView<'a> {
+    /// Parse a datagram (checks the CRC32 trailer) without copying
+    /// fragment payloads.
+    pub fn decode(buf: &'a [u8]) -> Result<PacketView<'a>, WireError> {
+        let body = checked_body(buf)?;
+        if body[0] == KIND_FRAGMENT {
+            let (header, payload) = parse_fragment(&body[1..], buf.len())?;
+            Ok(PacketView::Fragment(FragmentView { header, payload }))
+        } else {
+            Ok(PacketView::Control(Packet::decode_body(body, buf.len())?))
+        }
+    }
 }
 
 /// Serialize a fragment without constructing a [`Packet`] (the sender hot
@@ -228,42 +318,26 @@ impl Packet {
 
     /// Parse a datagram (checks the CRC32 trailer).
     pub fn decode(buf: &[u8]) -> Result<Packet, WireError> {
-        if buf.len() < 5 {
-            return Err(WireError::Truncated(buf.len()));
-        }
-        let (body, trailer) = buf.split_at(buf.len() - 4);
-        let want = u32::from_le_bytes(trailer.try_into().unwrap());
-        if crc(body) != want {
-            return Err(WireError::BadChecksum);
-        }
+        let body = checked_body(buf)?;
+        Self::decode_body(body, buf.len())
+    }
+
+    /// Parse a CRC-validated body. `total` is the datagram length, for
+    /// error reporting.
+    fn decode_body(body: &[u8], total: usize) -> Result<Packet, WireError> {
         let kind = body[0];
         let rest = &body[1..];
         let need = |n: usize| {
             if rest.len() < n {
-                Err(WireError::Truncated(buf.len()))
+                Err(WireError::Truncated(total))
             } else {
                 Ok(())
             }
         };
         match kind {
             KIND_FRAGMENT => {
-                need(FRAGMENT_HEADER)?;
-                let level = rest[0];
-                let stream = rest[1];
-                let ftg = u32::from_le_bytes(rest[2..6].try_into().unwrap());
-                let index = rest[6];
-                let k = rest[7];
-                let m = rest[8];
-                let seq = u64::from_le_bytes(rest[9..17].try_into().unwrap());
-                let pass = u32::from_le_bytes(rest[17..21].try_into().unwrap());
-                let len = u32::from_le_bytes(rest[21..25].try_into().unwrap()) as usize;
-                if rest.len() < FRAGMENT_HEADER + len {
-                    return Err(WireError::Truncated(buf.len()));
-                }
-                Ok(Packet::Fragment(
-                    FragmentHeader { level, stream, ftg, index, k, m, seq, pass },
-                    rest[FRAGMENT_HEADER..FRAGMENT_HEADER + len].to_vec(),
-                ))
+                let (header, payload) = parse_fragment(rest, total)?;
+                Ok(Packet::Fragment(header, payload.to_vec()))
             }
             KIND_LAMBDA => {
                 need(8)?;
@@ -430,6 +504,79 @@ mod tests {
         Packet::LambdaUpdate { lambda: 2.0 }.encode_into(&mut buf);
         assert_ne!(buf.len(), len1);
         assert_eq!(Packet::decode(&buf).unwrap(), Packet::LambdaUpdate { lambda: 2.0 });
+    }
+
+    #[test]
+    fn view_decode_borrows_fragment_payload() {
+        let h = FragmentHeader {
+            level: 3,
+            stream: 1,
+            ftg: 77,
+            index: 9,
+            k: 24,
+            m: 8,
+            seq: 42,
+            pass: 2,
+        };
+        let payload = vec![0xC3u8; 2048];
+        let buf = Packet::Fragment(h, payload.clone()).encode();
+        match PacketView::decode(&buf).unwrap() {
+            PacketView::Fragment(view) => {
+                assert_eq!(view.header, h);
+                assert_eq!(view.payload, &payload[..]);
+                // Borrowed straight from the datagram, no copy.
+                let base = buf.as_ptr() as usize;
+                let p = view.payload.as_ptr() as usize;
+                assert!(p >= base && p < base + buf.len());
+            }
+            other => panic!("expected fragment view, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn view_decode_matches_owned_decode() {
+        let frames = vec![
+            Packet::Fragment(
+                FragmentHeader {
+                    level: 0,
+                    stream: 0,
+                    ftg: 1,
+                    index: 2,
+                    k: 4,
+                    m: 2,
+                    seq: 5,
+                    pass: 0,
+                },
+                vec![7u8; 100],
+            ),
+            Packet::LambdaUpdate { lambda: 1.5 },
+            Packet::Done,
+            Packet::LostList { pass: 1, ftgs: vec![(0, 3)] },
+            Packet::StreamEnd { stream: 2, pass: 0, sent: 10 },
+        ];
+        for p in frames {
+            let buf = p.encode();
+            match (PacketView::decode(&buf).unwrap(), Packet::decode(&buf).unwrap()) {
+                (PacketView::Fragment(view), Packet::Fragment(h, payload)) => {
+                    assert_eq!(view.header, h);
+                    assert_eq!(view.payload, &payload[..]);
+                }
+                (PacketView::Control(c), owned) => assert_eq!(c, owned),
+                (view, owned) => panic!("mismatch: {view:?} vs {owned:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn view_decode_rejects_malformed_input() {
+        assert_eq!(PacketView::decode(&[]), Err(WireError::Truncated(0)));
+        let mut buf = Packet::Fragment(
+            FragmentHeader { level: 0, stream: 0, ftg: 0, index: 0, k: 1, m: 0, seq: 0, pass: 0 },
+            vec![1, 2, 3],
+        )
+        .encode();
+        buf[7] ^= 0xFF;
+        assert_eq!(PacketView::decode(&buf), Err(WireError::BadChecksum));
     }
 
     #[test]

@@ -44,7 +44,11 @@
 //! assumption; a marker re-announcement round is future work for the
 //! real-UDP pool deployment.
 
-use super::packet::{encode_fragment_into, FragmentHeader, Manifest, Packet, MAX_LOST_PER_MSG};
+use super::arena::FtgArena;
+use super::packet::{
+    encode_fragment_into, FragmentHeader, Manifest, Packet, PacketView, MAX_DATAGRAM,
+    MAX_LOST_PER_MSG,
+};
 use super::receiver::ReceiverConfig;
 use super::sender::pace_until;
 use crate::api::observer::{emit, EventSink};
@@ -52,12 +56,13 @@ use crate::api::TransferEvent;
 use crate::erasure::RsCode;
 use crate::model::params::{LevelSchedule, NetParams};
 use crate::model::time_model::optimize_parity;
-use crate::transport::channel::Datagram;
+use crate::transport::channel::{Datagram, FrameQueue};
+use crate::transport::frame::FramePool;
 use crate::util::err::Result;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Configuration for a multi-stream pool transfer (guaranteed-error-bound
@@ -90,6 +95,7 @@ impl PoolConfig {
         if self.net.s == 0 {
             bail!("fragment size must be positive");
         }
+        super::packet::validate_fragment_size(self.net.s)?;
         Ok(())
     }
 
@@ -322,7 +328,7 @@ impl TransferPool {
                     .map(|h| h.join().expect("pool worker panicked"))
                     .collect()
             });
-            let per_stream: Vec<u64> = sent_counts.clone();
+            let per_stream = sent_counts; // moved, not cloned (ISSUE 3)
             let pass_sent: u64 = per_stream.iter().sum();
             for (w, &c) in per_stream.iter().enumerate() {
                 seqs[w] += c;
@@ -467,6 +473,7 @@ impl TransferPool {
             bail!("manifest announces {streams} streams, receiver has {}", data.len());
         }
         let s = manifest.s as usize;
+        super::packet::validate_fragment_size(s)?;
         let num_levels = manifest.levels.len();
 
         let mut report = PoolReceiverReport {
@@ -479,36 +486,46 @@ impl TransferPool {
             trace: Vec::new(),
         };
 
-        let mut groups: HashMap<(u8, u32), GroupBuf> = HashMap::new();
+        let mut groups: HashMap<(u8, u32), FtgArena> = HashMap::new();
         // Per-pass statistics: announced (per stream) and received counts.
         let mut announced: HashMap<u32, HashMap<u8, u64>> = HashMap::new();
         let mut received_in_pass: HashMap<u32, u64> = HashMap::new();
-        // Cached reply to the last finalized pass: duplicate EndOfPass
-        // retries must get byte-identical answers even after later
-        // fragments arrive (recomputing would break the pass protocol).
-        let mut last_reply: Option<(u32, u64, u64, Vec<(u8, u32)>)> = None;
+        // Cached reply to the last finalized pass, pre-encoded once:
+        // duplicate EndOfPass retries must get byte-identical answers
+        // even after later fragments arrive, and resending reuses the
+        // same wire bytes instead of re-cloning the lost list
+        // (pass, stats datagram, lost-list datagram, lost-list empty).
+        let mut last_reply: Option<(u32, Vec<u8>, Vec<u8>, bool)> = None;
         // An EndOfPass that arrived before every stream's marker did —
         // finalized the moment the last marker drains from the fan-in.
         let mut pending_end: Option<u32> = None;
 
         // === Demux fan-in: one reader thread per data endpoint ===
+        // Readers receive into pooled frames (recycled on drop) and hand
+        // them over on a condvar FrameQueue, so the steady-state fan-in
+        // allocates nothing per datagram (mpsc would allocate a block
+        // per batch of messages).
+        let frames = FramePool::new();
         let shutdown = AtomicBool::new(false);
-        let (fan_tx, fan_rx) = mpsc::channel::<Vec<u8>>();
+        let fan = FrameQueue::new();
         let done = std::thread::scope(|scope| -> Result<()> {
             for mut chan in data {
-                let tx = fan_tx.clone();
                 let stop = &shutdown;
+                let pool = Arc::clone(&frames);
+                let q = Arc::clone(&fan);
                 scope.spawn(move || {
                     while !stop.load(Ordering::Relaxed) {
-                        if let Some(buf) = chan.recv_timeout(Duration::from_millis(50)) {
-                            if tx.send(buf).is_err() {
-                                break;
+                        let mut frame = pool.lease();
+                        match chan.recv_into(frame.buf_mut(), Duration::from_millis(50)) {
+                            Some(n) => {
+                                frame.set_len(n);
+                                q.push(frame);
                             }
+                            None => {} // timeout: frame drops back into the pool
                         }
                     }
                 });
             }
-            drop(fan_tx);
 
             // Answer an end-of-pass barrier whose stream markers have all
             // arrived. Returns true when the transfer is complete.
@@ -516,22 +533,21 @@ impl TransferPool {
             // passes older than the cache are ignored.
             let finalize = |pass: u32,
                                 control: &mut C,
-                                groups: &HashMap<(u8, u32), GroupBuf>,
+                                groups: &HashMap<(u8, u32), FtgArena>,
                                 announced: &HashMap<u32, HashMap<u8, u64>>,
                                 received_in_pass: &HashMap<u32, u64>,
-                                last_reply: &mut Option<(u32, u64, u64, Vec<(u8, u32)>)>,
+                                last_reply: &mut Option<(u32, Vec<u8>, Vec<u8>, bool)>,
                                 report: &mut PoolReceiverReport|
              -> bool {
-                if let Some((p, expected, received, lost)) = last_reply.as_ref() {
+                if let Some((p, stats_buf, lost_buf, lost_empty)) = last_reply.as_ref() {
                     if pass < *p {
                         return false; // stale retry of an older pass
                     }
                     if pass == *p {
-                        let (expected, received) = (*expected, *received);
-                        control
-                            .send(&Packet::PassStats { pass, expected, received }.encode());
-                        control.send(&Packet::LostList { pass, ftgs: lost.clone() }.encode());
-                        if lost.is_empty() {
+                        // Resend the pre-encoded reply bytes verbatim.
+                        control.send(stats_buf);
+                        control.send(lost_buf);
+                        if *lost_empty {
                             control.send(&Packet::Done.encode());
                             return true;
                         }
@@ -549,13 +565,17 @@ impl TransferPool {
                 });
                 // Cap the wire list to one datagram; the tail is simply
                 // re-reported on the next pass (nonempty ⇒ capped
-                // nonempty, so the Done decision is unaffected).
+                // nonempty, so the Done decision is unaffected). Encoded
+                // once per pass — retries reuse the bytes.
                 let wire: Vec<(u8, u32)> =
                     lost.iter().take(MAX_LOST_PER_MSG).copied().collect();
-                *last_reply = Some((pass, expected, received, wire.clone()));
-                control.send(&Packet::PassStats { pass, expected, received }.encode());
-                control.send(&Packet::LostList { pass, ftgs: wire }.encode());
-                if lost.is_empty() {
+                let lost_empty = lost.is_empty();
+                let stats_buf = Packet::PassStats { pass, expected, received }.encode();
+                let lost_buf = Packet::LostList { pass, ftgs: wire }.encode();
+                control.send(&stats_buf);
+                control.send(&lost_buf);
+                *last_reply = Some((pass, stats_buf, lost_buf, lost_empty));
+                if lost_empty {
                     control.send(&Packet::Done.encode());
                     return true;
                 }
@@ -567,6 +587,7 @@ impl TransferPool {
             };
 
             let mut last_packet = Instant::now();
+            let mut ctl_buf = vec![0u8; MAX_DATAGRAM];
             let result = 'pump: loop {
                 if start.elapsed() > rcfg.max_duration {
                     break Err(anyhow!("pool receiver exceeded max duration"));
@@ -579,9 +600,9 @@ impl TransferPool {
                 // has drained from the fan-in, because per-channel FIFO
                 // then guarantees all surviving fragments of the pass are
                 // already in `groups`.
-                while let Some(buf) = control.try_recv() {
+                while let Some(n) = control.try_recv_into(&mut ctl_buf) {
                     last_packet = Instant::now();
-                    if let Ok(Packet::EndOfPass { pass }) = Packet::decode(&buf) {
+                    if let Ok(Packet::EndOfPass { pass }) = Packet::decode(&ctl_buf[..n]) {
                         pending_end = Some(pass);
                     }
                 }
@@ -601,26 +622,32 @@ impl TransferPool {
                         }
                     }
                 }
-                // Data plane: fragments + stream-end markers.
-                match fan_rx.recv_timeout(Duration::from_millis(2)) {
-                    Ok(buf) => {
+                // Data plane: fragments + stream-end markers. Frames are
+                // decoded in place (borrowing view) and recycled on drop.
+                match fan.pop_timeout(Duration::from_millis(2)) {
+                    Some(frame) => {
                         last_packet = Instant::now();
-                        match Packet::decode(&buf) {
-                            Ok(Packet::Fragment(h, payload)) => {
+                        match PacketView::decode(&frame) {
+                            Ok(PacketView::Fragment(view)) => {
+                                let h = view.header;
                                 report.fragments_received += 1;
                                 *received_in_pass.entry(h.pass).or_insert(0) += 1;
-                                store_fragment(&mut groups, &h, payload);
+                                let g = groups
+                                    .entry((h.level, h.ftg))
+                                    .or_insert_with(|| FtgArena::new(h.k, h.m, s));
+                                g.insert(h.index as usize, view.payload);
                             }
-                            Ok(Packet::StreamEnd { stream, pass, sent }) => {
+                            Ok(PacketView::Control(Packet::StreamEnd {
+                                stream,
+                                pass,
+                                sent,
+                            })) => {
                                 announced.entry(pass).or_default().insert(stream, sent);
                             }
                             _ => {}
                         }
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        break Err(anyhow!("pool receiver: demux threads died"));
-                    }
+                    None => {} // poll timeout
                 }
             };
             shutdown.store(true, Ordering::Relaxed);
@@ -706,6 +733,10 @@ fn send_shard<D: Datagram>(
     let s = net.s;
     let mut codes: HashMap<(usize, usize), RsCode> = HashMap::new();
     let mut out = Vec::with_capacity(s + 64);
+    // One strided arena reused across the shard's FTGs: the worker's
+    // steady state allocates nothing per group (the buffer only regrows
+    // when (k+m)·s grows).
+    let mut arena = FtgArena::new(0, 0, s);
     let mut seq = seq0;
     let mut next_send = Instant::now();
     for &ji in shard {
@@ -713,22 +744,21 @@ fn send_shard<D: Datagram>(
         let level_bytes = &levels[job.level as usize];
         // Parity never shrinks a group below its planned k.
         let m_eff = m.min(255usize.saturating_sub(job.k));
-        // Slice k data fragments (pad the tail with zeros).
-        let mut frags: Vec<Vec<u8>> = Vec::with_capacity(job.k + m_eff);
+        // Slice k data fragments into the arena (zero-padding tails —
+        // the arena is reused, so stale bytes must be overwritten).
+        arena.reset(job.k as u8, m_eff as u8, s);
         for i in 0..job.k {
             let lo = (job.offset + i * s).min(level_bytes.len());
             let hi = (job.offset + (i + 1) * s).min(level_bytes.len());
-            let mut f = level_bytes[lo..hi].to_vec();
-            f.resize(s, 0);
-            frags.push(f);
+            let slot = arena.slot_mut(i);
+            slot[..hi - lo].copy_from_slice(&level_bytes[lo..hi]);
+            slot[hi - lo..].fill(0);
         }
         let code = codes
             .entry((job.k, m_eff))
             .or_insert_with(|| RsCode::new(job.k, m_eff).expect("valid k,m"));
-        let refs: Vec<&[u8]> = frags.iter().map(|f| f.as_slice()).collect();
-        let parity = code.encode(&refs).expect("encode");
-        frags.extend(parity);
-        for (idx, frag) in frags.iter().enumerate() {
+        arena.encode_parity(code).expect("encode");
+        for idx in 0..arena.slots() {
             let hdr = FragmentHeader {
                 level: job.level,
                 stream,
@@ -740,7 +770,7 @@ fn send_shard<D: Datagram>(
                 pass,
             };
             seq += 1;
-            encode_fragment_into(&hdr, frag, &mut out);
+            encode_fragment_into(&hdr, arena.slot(idx), &mut out);
             pace_until(next_send);
             next_send = Instant::now().max(next_send) + pace;
             chan.send(&out);
@@ -757,40 +787,12 @@ fn send_shard<D: Datagram>(
     sent
 }
 
-/// Shared reassembly buffer for one FTG. Grows when later passes raise m.
-struct GroupBuf {
-    k: u8,
-    frags: Vec<Option<Vec<u8>>>,
-    have_data: u8,
-    have_total: u8,
-}
-
-fn store_fragment(groups: &mut HashMap<(u8, u32), GroupBuf>, h: &FragmentHeader, payload: Vec<u8>) {
-    let g = groups.entry((h.level, h.ftg)).or_insert_with(|| GroupBuf {
-        k: h.k,
-        frags: vec![None; h.k as usize + h.m as usize],
-        have_data: 0,
-        have_total: 0,
-    });
-    let idx = h.index as usize;
-    if idx >= g.frags.len() {
-        // A retransmission pass raised m; parity rows nest, so growing
-        // the table keeps earlier fragments valid.
-        g.frags.resize(idx + 1, None);
-    }
-    if g.frags[idx].is_none() {
-        if idx < g.k as usize {
-            g.have_data += 1;
-        }
-        g.have_total += 1;
-        g.frags[idx] = Some(payload);
-    }
-}
-
 /// FTGs (per manifest byte accounting) that cannot currently be decoded.
+/// (Reassembly state lives in [`FtgArena`]s — one strided allocation per
+/// group with a presence bitmap, growing when later passes raise m.)
 fn collect_lost(
     manifest: &Manifest,
-    groups: &HashMap<(u8, u32), GroupBuf>,
+    groups: &HashMap<(u8, u32), FtgArena>,
     s: usize,
 ) -> Vec<(u8, u32)> {
     let n = manifest.n as usize;
@@ -801,10 +803,10 @@ fn collect_lost(
         while covered < size {
             match groups.get(&(li as u8, ftg)) {
                 Some(g) => {
-                    if g.have_total < g.k {
+                    if !g.decodable() {
                         lost.push((li as u8, ftg));
                     }
-                    covered += g.k as u64 * s as u64;
+                    covered += g.k() as u64 * s as u64;
                 }
                 None => {
                     // Never seen: unrecoverable by definition; stride by
@@ -822,7 +824,7 @@ fn collect_lost(
 /// Rebuild the exact level bytes from the shared group table.
 fn reconstruct_levels(
     manifest: &Manifest,
-    groups: &HashMap<(u8, u32), GroupBuf>,
+    groups: &HashMap<(u8, u32), FtgArena>,
     s: usize,
     report: &mut PoolReceiverReport,
     events: EventSink<'_>,
@@ -834,36 +836,34 @@ fn reconstruct_levels(
         let mut ftg = 0u32;
         while (out.len() as u64) < size {
             match groups.get(&(li as u8, ftg)) {
-                Some(g) if g.have_data == g.k => {
-                    for f in g.frags.iter().take(g.k as usize) {
-                        out.extend_from_slice(f.as_ref().unwrap());
+                Some(g) if g.data_complete() => {
+                    for i in 0..g.k() as usize {
+                        out.extend_from_slice(g.slot(i));
                     }
                 }
-                Some(g) if g.have_total >= g.k => {
+                Some(g) if g.decodable() => {
                     // Reed–Solomon recovery over whatever mix of passes'
-                    // fragments arrived (parity rows nest in m).
-                    let m_seen = (g.frags.len() - g.k as usize) as u8;
-                    let code = codes.entry((g.k, m_seen)).or_insert_with(|| {
-                        RsCode::new(g.k as usize, m_seen as usize).expect("valid k,m")
+                    // fragments arrived (parity rows nest in m), decoded
+                    // straight into the level buffer with the
+                    // survivor-pattern matrix cache.
+                    let k = g.k();
+                    let m_seen = (g.slots() - k as usize) as u8;
+                    let code = codes.entry((k, m_seen)).or_insert_with(|| {
+                        RsCode::new(k as usize, m_seen as usize).expect("valid k,m")
                     });
-                    let shards: Vec<(usize, &[u8])> = g
-                        .frags
-                        .iter()
-                        .enumerate()
-                        .filter_map(|(i, f)| f.as_ref().map(|f| (i, f.as_slice())))
-                        .collect();
-                    match code.reconstruct(&shards) {
-                        Ok(data) => {
+                    let shards: Vec<(usize, &[u8])> = g.iter_present().collect();
+                    let start_len = out.len();
+                    out.resize(start_len + k as usize * s, 0);
+                    match code.reconstruct_into(&shards, &mut out[start_len..]) {
+                        Ok(()) => {
                             report.groups_recovered += 1;
                             emit(
                                 events,
                                 TransferEvent::GroupRecovered { level: li as u8, ftg },
                             );
-                            for f in &data {
-                                out.extend_from_slice(f);
-                            }
                         }
                         Err(_) => {
+                            out.truncate(start_len);
                             ok = false;
                             break;
                         }

@@ -7,7 +7,10 @@
 //! end-of-transmission notifications with the lost-FTG list (Alg. 1) or
 //! finalizes immediately (Alg. 2).
 
-use super::packet::{Manifest, Packet, MAX_LOST_PER_MSG};
+use super::arena::FtgArena;
+use super::packet::{
+    validate_fragment_size, Manifest, Packet, PacketView, MAX_DATAGRAM, MAX_LOST_PER_MSG,
+};
 use crate::api::observer::{emit, EventSink};
 use crate::api::TransferEvent;
 use crate::bail;
@@ -57,14 +60,6 @@ pub struct ReceiverReport {
     pub duration: f64,
 }
 
-struct GroupBuf {
-    k: u8,
-    m: u8,
-    frags: Vec<Option<Vec<u8>>>,
-    have_data: u8,
-    have_total: u8,
-}
-
 /// Run a transfer as the receiver.
 #[deprecated(note = "use janus::api::Endpoint::receive")]
 pub fn run_receiver(chan: &mut dyn Datagram, cfg: &ReceiverConfig) -> Result<ReceiverReport> {
@@ -100,9 +95,10 @@ pub(crate) fn transfer_receiver(
     };
     let retransmitting = manifest.contract == 0;
     let s = manifest.s as usize;
+    validate_fragment_size(s)?;
     let num_levels = manifest.levels.len();
 
-    let mut groups: HashMap<(u8, u32), GroupBuf> = HashMap::new();
+    let mut groups: HashMap<(u8, u32), FtgArena> = HashMap::new();
     let mut codes: HashMap<(u8, u8), RsCode> = HashMap::new();
     let mut report = ReceiverReport {
         levels: vec![None; num_levels],
@@ -121,13 +117,17 @@ pub(crate) fn transfer_receiver(
     let mut window_max_seq = 0u64;
 
     let mut last_packet = Instant::now();
+    // One receive buffer for the whole transfer: the steady-state loop
+    // (recv_into → PacketView → arena insert) allocates nothing per
+    // fragment (asserted by rust/tests/alloc_datapath.rs).
+    let mut rbuf = vec![0u8; MAX_DATAGRAM];
 
     loop {
         if start.elapsed() > cfg.max_duration {
             bail!("receiver exceeded max duration");
         }
-        let buf = match chan.recv_timeout(Duration::from_millis(50)) {
-            Some(b) => b,
+        let n = match chan.recv_into(&mut rbuf, Duration::from_millis(50)) {
+            Some(n) => n,
             None => {
                 if last_packet.elapsed() > cfg.idle_timeout {
                     bail!("receiver: sender went silent");
@@ -136,8 +136,9 @@ pub(crate) fn transfer_receiver(
             }
         };
         last_packet = Instant::now();
-        match Packet::decode(&buf) {
-            Ok(Packet::Fragment(h, payload)) => {
+        match PacketView::decode(&rbuf[..n]) {
+            Ok(PacketView::Fragment(view)) => {
+                let h = view.header;
                 report.fragments_received += 1;
                 // λ window bookkeeping.
                 window_received += 1;
@@ -158,24 +159,19 @@ pub(crate) fn transfer_receiver(
                     window_received = 0;
                     window_first_seq = None;
                 }
-                // Store the fragment.
-                let g = groups.entry((h.level, h.ftg)).or_insert_with(|| GroupBuf {
-                    k: h.k,
-                    m: h.m,
-                    frags: vec![None; h.k as usize + h.m as usize],
-                    have_data: 0,
-                    have_total: 0,
-                });
-                let idx = h.index as usize;
-                if idx < g.frags.len() && g.frags[idx].is_none() {
-                    if idx < g.k as usize {
-                        g.have_data += 1;
-                    }
-                    g.have_total += 1;
-                    g.frags[idx] = Some(payload);
+                // Copy the payload exactly once: receive buffer → arena.
+                // Single-stream m is fixed per group (retransmissions
+                // resend identical fragments), so an index beyond the
+                // group's geometry is a stray datagram — dropped, never
+                // grown into a phantom shard.
+                let g = groups
+                    .entry((h.level, h.ftg))
+                    .or_insert_with(|| FtgArena::new(h.k, h.m, s));
+                if (h.index as usize) < g.slots() {
+                    g.insert(h.index as usize, view.payload);
                 }
             }
-            Ok(Packet::EndOfPass { pass }) => {
+            Ok(PacketView::Control(Packet::EndOfPass { pass })) => {
                 // Evaluate recoverability of every group seen; also detect
                 // levels with missing tails (groups never seen at all are
                 // only knowable via byte accounting below).
@@ -207,34 +203,32 @@ pub(crate) fn transfer_receiver(
         let mut ftg = 0u32;
         while (out.len() as u64) < size {
             match groups.get(&(li as u8, ftg)) {
-                Some(g) if g.have_data == g.k => {
-                    for f in g.frags.iter().take(g.k as usize) {
-                        out.extend_from_slice(f.as_ref().unwrap());
+                Some(g) if g.data_complete() => {
+                    for i in 0..g.k() as usize {
+                        out.extend_from_slice(g.slot(i));
                     }
                 }
-                Some(g) if g.have_total >= g.k => {
-                    // Reed–Solomon recovery.
+                Some(g) if g.decodable() => {
+                    // Reed–Solomon recovery, straight into the level
+                    // buffer (cached decode matrices across groups).
+                    let k = g.k();
+                    let m_seen = (g.slots() - k as usize) as u8;
                     let code = codes
-                        .entry((g.k, g.m))
-                        .or_insert_with(|| RsCode::new(g.k as usize, g.m as usize).unwrap());
-                    let shards: Vec<(usize, &[u8])> = g
-                        .frags
-                        .iter()
-                        .enumerate()
-                        .filter_map(|(i, f)| f.as_ref().map(|f| (i, f.as_slice())))
-                        .collect();
-                    match code.reconstruct(&shards) {
-                        Ok(data) => {
+                        .entry((k, m_seen))
+                        .or_insert_with(|| RsCode::new(k as usize, m_seen as usize).unwrap());
+                    let shards: Vec<(usize, &[u8])> = g.iter_present().collect();
+                    let start_len = out.len();
+                    out.resize(start_len + k as usize * s, 0);
+                    match code.reconstruct_into(&shards, &mut out[start_len..]) {
+                        Ok(()) => {
                             report.groups_recovered += 1;
                             emit(
                                 events,
                                 TransferEvent::GroupRecovered { level: li as u8, ftg },
                             );
-                            for f in &data {
-                                out.extend_from_slice(f);
-                            }
                         }
                         Err(_) => {
+                            out.truncate(start_len);
                             ok = false;
                             break;
                         }
@@ -275,7 +269,7 @@ pub(crate) fn transfer_receiver(
 /// FTGs (per manifest byte accounting) that cannot currently be decoded.
 fn collect_lost(
     manifest: &Manifest,
-    groups: &HashMap<(u8, u32), GroupBuf>,
+    groups: &HashMap<(u8, u32), FtgArena>,
     s: usize,
 ) -> Vec<(u8, u32)> {
     let n = manifest.n as usize;
@@ -292,10 +286,10 @@ fn collect_lost(
         while covered < size {
             match groups.get(&(li as u8, ftg)) {
                 Some(g) => {
-                    if g.have_total < g.k {
+                    if !g.decodable() {
                         lost.push((li as u8, ftg));
                     }
-                    covered += g.k as u64 * s as u64;
+                    covered += g.k() as u64 * s as u64;
                 }
                 None => {
                     lost.push((li as u8, ftg));

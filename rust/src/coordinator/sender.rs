@@ -7,7 +7,8 @@
 //! the wire at `r = min(r_ec, r_link)`, processes receiver feedback
 //! (λ updates, lost-FTG lists) and drives passive retransmission.
 
-use super::packet::{encode_fragment_into, FragmentHeader, Manifest, Packet};
+use super::arena::FtgArena;
+use super::packet::{encode_fragment_into, validate_fragment_size, FragmentHeader, Manifest, Packet};
 use crate::api::observer::{emit, EventSink};
 use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
@@ -52,13 +53,15 @@ pub struct SenderReport {
     pub lambda_updates: Vec<f64>,
 }
 
-/// One encoded FTG traveling from the parity thread to the tx thread.
+/// One encoded FTG traveling from the parity thread to the tx thread:
+/// all k+m fragments in one strided arena (one allocation per group,
+/// not k+m+2 — ISSUE 3).
 struct EncodedFtg {
     level: u8,
     ftg: u32,
     k: u8,
     m: u8,
-    fragments: Vec<Vec<u8>>,
+    arena: FtgArena,
 }
 
 /// Run a transfer as the sender.
@@ -86,6 +89,7 @@ pub(crate) fn transfer_sender(
     let start = Instant::now();
     let n = cfg.net.n;
     let s = cfg.net.s;
+    validate_fragment_size(s)?;
     let sched = LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec());
 
     // Contract-dependent level count and plan.
@@ -222,30 +226,28 @@ pub(crate) fn transfer_sender(
                     let code = codes
                         .entry((k, m))
                         .or_insert_with(|| RsCode::new(k, m).expect("valid k,m"));
-                    // Slice k data fragments (pad the tail with zeros).
-                    let mut frags: Vec<Vec<u8>> = Vec::with_capacity(k + m);
-                    for _ in 0..k {
+                    // Slice k data fragments straight into one strided
+                    // arena (fresh arena → slots pre-zeroed, so the tail
+                    // padding is already there) and encode parity in
+                    // place.
+                    let mut arena = FtgArena::new(k as u8, m as u8, s);
+                    for i in 0..k {
                         let lo = offset.min(level_bytes.len());
                         let hi = (offset + s).min(level_bytes.len());
-                        let mut f = level_bytes[lo..hi].to_vec();
-                        f.resize(s, 0);
-                        frags.push(f);
+                        arena.slot_mut(i)[..hi - lo].copy_from_slice(&level_bytes[lo..hi]);
                         offset += s;
                         remaining = remaining.saturating_sub(s);
                     }
-                    let refs: Vec<&[u8]> = frags.iter().map(|f| f.as_slice()).collect();
-                    let parity = code.encode(&refs).expect("encode");
-                    frags.extend(parity);
-                    frag_counter += frags.len() as u64;
+                    arena.encode_parity(code).expect("encode");
+                    frag_counter += arena.slots() as u64;
                     enc_stats2.store(
                         (frag_counter as f64 / enc_start.elapsed().as_secs_f64().max(1e-9))
                             as u64,
                         Ordering::Relaxed,
                     );
-                    if ftg_tx
-                        .send(EncodedFtg { level: li as u8, ftg: ftg_id, k: k as u8, m: m as u8, fragments: frags })
-                        .is_err()
-                    {
+                    let encoded =
+                        EncodedFtg { level: li as u8, ftg: ftg_id, k: k as u8, m: m as u8, arena };
+                    if ftg_tx.send(encoded).is_err() {
                         break 'levels; // tx thread gone (abort)
                     }
                     ftg_id += 1;
@@ -323,7 +325,7 @@ fn transmit_loop(
             Err(RecvTimeoutError::Disconnected) => break,
             Err(RecvTimeoutError::Timeout) => continue,
         };
-        for (idx, frag) in ftg.fragments.iter().enumerate() {
+        for idx in 0..ftg.arena.slots() {
             let hdr = FragmentHeader {
                 level: ftg.level,
                 stream: 0,
@@ -335,7 +337,7 @@ fn transmit_loop(
                 pass: 0,
             };
             seq += 1;
-            encode_fragment_into(&hdr, frag, &mut out);
+            encode_fragment_into(&hdr, ftg.arena.slot(idx), &mut out);
             // Pace to r_link (hybrid sleep+spin: plain sleep overshoots
             // by the timer granularity and starves the nominal rate).
             pace_until(next_send);
@@ -418,7 +420,7 @@ fn transmit_loop(
         let pass_start_fragments = report.fragments_sent;
         for key in &lost {
             if let Some(ftg) = buf_store.get(key) {
-                for (idx, frag) in ftg.fragments.iter().enumerate() {
+                for idx in 0..ftg.arena.slots() {
                     let hdr = FragmentHeader {
                         level: ftg.level,
                         stream: 0,
@@ -430,7 +432,7 @@ fn transmit_loop(
                         pass,
                     };
                     seq += 1;
-                    encode_fragment_into(&hdr, frag, &mut out);
+                    encode_fragment_into(&hdr, ftg.arena.slot(idx), &mut out);
                     pace_until(next_send);
                     next_send = Instant::now().max(next_send) + pace;
                     chan.send(&out);

@@ -170,12 +170,51 @@ impl MulTable {
         self.mul_slice_add_scalar(&x[done..], &mut y[done..]);
     }
 
-    /// y[i] = c * x[i] over slices.
+    /// y[i] = c * x[i] over slices — overwrites `y`, no pre-zeroing
+    /// needed (write-once kernel; pairs with [`MulTable::mul_slice_add`]
+    /// so decode accumulation never double-touches the output).
     #[inline]
     pub fn mul_slice(&self, x: &[u8], y: &mut [u8]) {
         debug_assert_eq!(x.len(), y.len());
-        y.fill(0);
-        self.mul_slice_add(x, y);
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("ssse3") {
+                unsafe { self.mul_slice_set_ssse3(x, y) };
+                return;
+            }
+        }
+        self.mul_slice_set_scalar(x, y);
+    }
+
+    #[inline]
+    fn mul_slice_set_scalar(&self, x: &[u8], y: &mut [u8]) {
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            *yi = self.lo[(xi & 0x0F) as usize] ^ self.hi[(xi >> 4) as usize];
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "ssse3")]
+    unsafe fn mul_slice_set_ssse3(&self, x: &[u8], y: &mut [u8]) {
+        use std::arch::x86_64::*;
+        let lo_tbl = _mm_loadu_si128(self.lo.as_ptr() as *const __m128i);
+        let hi_tbl = _mm_loadu_si128(self.hi.as_ptr() as *const __m128i);
+        let mask = _mm_set1_epi8(0x0F);
+        let chunks = x.len() / 16;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..chunks {
+            let xv = _mm_loadu_si128(xp.add(i * 16) as *const __m128i);
+            let lo_idx = _mm_and_si128(xv, mask);
+            let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
+            let prod = _mm_xor_si128(
+                _mm_shuffle_epi8(lo_tbl, lo_idx),
+                _mm_shuffle_epi8(hi_tbl, hi_idx),
+            );
+            _mm_storeu_si128(yp.add(i * 16) as *mut __m128i, prod);
+        }
+        let done = chunks * 16;
+        self.mul_slice_set_scalar(&x[done..], &mut y[done..]);
     }
 }
 

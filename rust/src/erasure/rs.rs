@@ -43,6 +43,89 @@ impl std::fmt::Display for RsError {
 
 impl std::error::Error for RsError {}
 
+/// One cached inverted decode submatrix for a survivor-index pattern.
+struct DecodeEntry {
+    /// Survivor fragment indices (the first k shards' indices, in order).
+    rows: Vec<u8>,
+    /// Inverted k×k submatrix of the generator for those rows.
+    inv: Matrix,
+    /// `inv` as precomputed split-nibble tables: `tables[j][i]` applies
+    /// coefficient `inv[(j, i)]`.
+    tables: Vec<Vec<MulTable>>,
+    /// LRU stamp (last lookup that touched this entry).
+    stamp: u64,
+}
+
+/// Small LRU of inverted decode submatrices keyed by survivor pattern.
+///
+/// A steady loss regime repeats the same few patterns across thousands
+/// of FTGs; without the cache every [`RsCode::reconstruct`] re-inverts
+/// the submatrix and rebuilds a [`MulTable`] per nonzero cell.
+struct DecodeCache {
+    entries: Vec<DecodeEntry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+const DECODE_CACHE_CAP: usize = 32;
+
+impl DecodeCache {
+    fn new() -> DecodeCache {
+        DecodeCache { entries: Vec::new(), clock: 0, hits: 0, misses: 0 }
+    }
+
+    /// Index of the entry for `chosen`'s survivor pattern, building (and
+    /// possibly evicting the LRU entry) on a miss. Allocation-free on a
+    /// hit: the comparison walks the shard indices directly.
+    fn lookup_or_build(
+        &mut self,
+        generator: &Matrix,
+        k: usize,
+        chosen: &[(usize, &[u8])],
+    ) -> usize {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(i) = self.entries.iter().position(|e| {
+            e.rows.len() == k
+                && e.rows.iter().zip(chosen).all(|(&r, &(idx, _))| r as usize == idx)
+        }) {
+            self.hits += 1;
+            self.entries[i].stamp = clock;
+            return i;
+        }
+        self.misses += 1;
+        let rows: Vec<usize> = chosen.iter().map(|&(idx, _)| idx).collect();
+        let sub = generator.select_rows(&rows);
+        let inv = sub
+            .inverse()
+            .expect("MDS property: any k rows of the generator are invertible");
+        let tables: Vec<Vec<MulTable>> = (0..k)
+            .map(|j| (0..k).map(|i| MulTable::new(inv[(j, i)])).collect())
+            .collect();
+        let entry = DecodeEntry {
+            rows: rows.iter().map(|&r| r as u8).collect(),
+            inv,
+            tables,
+            stamp: clock,
+        };
+        if self.entries.len() < DECODE_CACHE_CAP {
+            self.entries.push(entry);
+            self.entries.len() - 1
+        } else {
+            let evict = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries[evict] = entry;
+            evict
+        }
+    }
+}
+
 /// A (k, m) systematic Reed–Solomon code with cached encode tables.
 pub struct RsCode {
     pub k: usize,
@@ -52,6 +135,8 @@ pub struct RsCode {
     /// Parity rows as precomputed split-nibble tables: `parity_tables[p][j]`
     /// multiplies data fragment `j` into parity fragment `p`.
     parity_tables: Vec<Vec<MulTable>>,
+    /// LRU of inverted decode submatrices (see [`DecodeCache`]).
+    decode_cache: DecodeCache,
 }
 
 impl RsCode {
@@ -69,7 +154,7 @@ impl RsCode {
                     .collect()
             })
             .collect();
-        Ok(RsCode { k, m, generator, parity_tables })
+        Ok(RsCode { k, m, generator, parity_tables, decode_cache: DecodeCache::new() })
     }
 
     /// Total fragments per group.
@@ -109,13 +194,122 @@ impl RsCode {
         let len = data[0].len();
         assert_eq!(parity.len(), self.m);
         for (p, out) in parity.iter_mut().enumerate() {
+            // resize already zero-fills any growth; only the retained
+            // prefix needs clearing (no double zero-fill).
+            let keep = out.len().min(len);
             out.resize(len, 0);
-            out.fill(0);
+            out[..keep].fill(0);
             for (j, frag) in data.iter().enumerate() {
                 self.parity_tables[p][j].mul_slice_add(frag, out);
             }
         }
         Ok(())
+    }
+
+    /// Encode within a strided group buffer (the
+    /// [`crate::coordinator::arena::FtgArena`] layout): `buf` holds the
+    /// `k` data fragments followed by the `m` parity slots, each
+    /// `stride` bytes. Parity is computed in place — the sender's
+    /// zero-allocation path.
+    pub fn encode_strided(&self, buf: &mut [u8], stride: usize) -> Result<(), RsError> {
+        if stride == 0 || buf.len() != self.n() * stride {
+            return Err(RsError::LengthMismatch {
+                expected: self.n() * stride,
+                got: buf.len(),
+            });
+        }
+        let (data, parity) = buf.split_at_mut(self.k * stride);
+        parity.fill(0);
+        for p in 0..self.m {
+            let out = &mut parity[p * stride..(p + 1) * stride];
+            for j in 0..self.k {
+                self.parity_tables[p][j]
+                    .mul_slice_add(&data[j * stride..(j + 1) * stride], out);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the `k` data fragments into one contiguous strided
+    /// output buffer (`out.len()` must equal `k · fragment_len`),
+    /// reusing a cached inverted decode matrix when the survivor-index
+    /// pattern repeats (`&mut self`: the LRU cache lives in the code).
+    ///
+    /// Byte-for-byte equivalent to [`RsCode::reconstruct`] (asserted by
+    /// `rust/tests/erasure_props.rs`), minus its per-call allocations.
+    pub fn reconstruct_into(
+        &mut self,
+        shards: &[(usize, &[u8])],
+        out: &mut [u8],
+    ) -> Result<(), RsError> {
+        if shards.len() < self.k {
+            return Err(RsError::NotEnough { have: shards.len(), need: self.k });
+        }
+        let len = shards[0].1.len();
+        for &(idx, frag) in shards {
+            if idx >= self.n() {
+                return Err(RsError::BadIndex { idx, n: self.n() });
+            }
+            if frag.len() != len {
+                return Err(RsError::LengthMismatch { expected: len, got: frag.len() });
+            }
+        }
+        if out.len() != self.k * len {
+            return Err(RsError::LengthMismatch { expected: self.k * len, got: out.len() });
+        }
+        // Fast path: all data fragments present — pure copies.
+        let mut seen = [0u64; 4];
+        let mut have_data = 0usize;
+        for &(idx, _) in shards {
+            if idx < self.k {
+                let (w, b) = (idx / 64, 1u64 << (idx % 64));
+                if seen[w] & b == 0 {
+                    seen[w] |= b;
+                    have_data += 1;
+                }
+            }
+        }
+        if have_data == self.k {
+            for &(idx, frag) in shards {
+                if idx < self.k {
+                    out[idx * len..(idx + 1) * len].copy_from_slice(frag);
+                }
+            }
+            return Ok(());
+        }
+        // General path: cached inverse of the k×k submatrix picked by
+        // the first k surviving fragment indices. The first nonzero
+        // term overwrites (write-once `mul_slice`), the rest accumulate
+        // — `out` needs no pre-zeroing and is touched exactly once per
+        // term.
+        let chosen = &shards[..self.k];
+        let e = self.decode_cache.lookup_or_build(&self.generator, self.k, chosen);
+        let entry = &self.decode_cache.entries[e];
+        for j in 0..self.k {
+            let out_frag = &mut out[j * len..(j + 1) * len];
+            let mut written = false;
+            for (i, &(_, frag)) in chosen.iter().enumerate() {
+                if entry.inv[(j, i)] != 0 {
+                    if written {
+                        entry.tables[j][i].mul_slice_add(frag, out_frag);
+                    } else {
+                        entry.tables[j][i].mul_slice(frag, out_frag);
+                        written = true;
+                    }
+                }
+            }
+            if !written {
+                // Unreachable for an MDS inverse (no zero rows), but
+                // stay well-defined on arbitrary matrices.
+                out_frag.fill(0);
+            }
+        }
+        Ok(())
+    }
+
+    /// (hits, misses) of the decode-matrix cache.
+    pub fn decode_cache_stats(&self) -> (u64, u64) {
+        (self.decode_cache.hits, self.decode_cache.misses)
     }
 
     /// Reconstruct the original `k` data fragments from any `k` surviving
@@ -320,6 +514,93 @@ mod tests {
         let mut reused = vec![vec![0xAAu8; 7]; 3]; // wrong size, pre-dirtied
         code.encode_into(&refs, &mut reused).unwrap();
         assert_eq!(fresh, reused);
+    }
+
+    #[test]
+    fn encode_strided_matches_encode() {
+        let mut rng = Pcg64::seeded(6);
+        for (k, m, s) in [(4usize, 2usize, 64usize), (8, 3, 100), (1, 0, 16), (5, 5, 33)] {
+            let code = RsCode::new(k, m).unwrap();
+            let data = random_fragments(&mut rng, k, s);
+            let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+            let parity = code.encode(&refs).unwrap();
+            let mut buf = vec![0u8; (k + m) * s];
+            for (i, d) in data.iter().enumerate() {
+                buf[i * s..(i + 1) * s].copy_from_slice(d);
+            }
+            // Pre-dirty the parity region: encode_strided must overwrite.
+            buf[k * s..].fill(0xEE);
+            code.encode_strided(&mut buf, s).unwrap();
+            for (p, want) in parity.iter().enumerate() {
+                assert_eq!(&buf[(k + p) * s..(k + p + 1) * s], &want[..], "k={k} m={m} p={p}");
+            }
+            // Data region untouched.
+            for (i, d) in data.iter().enumerate() {
+                assert_eq!(&buf[i * s..(i + 1) * s], &d[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_strided_rejects_bad_geometry() {
+        let code = RsCode::new(4, 2).unwrap();
+        let mut buf = vec![0u8; 5 * 16];
+        assert!(matches!(
+            code.encode_strided(&mut buf, 16),
+            Err(RsError::LengthMismatch { .. })
+        ));
+        assert!(matches!(
+            code.encode_strided(&mut [], 0),
+            Err(RsError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn reconstruct_into_matches_reconstruct_and_caches() {
+        let mut rng = Pcg64::seeded(7);
+        let (k, m, s) = (6usize, 3usize, 128usize);
+        let mut code = RsCode::new(k, m).unwrap();
+        let data = random_fragments(&mut rng, k, s);
+        let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+        let parity = code.encode(&refs).unwrap();
+        let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+        // Same loss pattern thrice: one miss, then hits, identical bytes.
+        let lost = [1usize, 4];
+        let shards: Vec<(usize, &[u8])> = (0..k + m)
+            .filter(|i| !lost.contains(i))
+            .map(|i| (i, all[i].as_slice()))
+            .collect();
+        let want = code.reconstruct(&shards).unwrap();
+        let flat_want: Vec<u8> = want.concat();
+        let mut out = vec![0xAAu8; k * s];
+        for round in 0..3 {
+            out.fill(0xAA);
+            code.reconstruct_into(&shards, &mut out).unwrap();
+            assert_eq!(out, flat_want, "round {round}");
+        }
+        let (hits, misses) = code.decode_cache_stats();
+        assert_eq!(misses, 1, "one inversion for a repeated pattern");
+        assert_eq!(hits, 2);
+        // All-data fast path never touches the cache.
+        let shards_all: Vec<(usize, &[u8])> =
+            (0..k).map(|i| (i, all[i].as_slice())).collect();
+        out.fill(0);
+        code.reconstruct_into(&shards_all, &mut out).unwrap();
+        assert_eq!(out, flat_want);
+        assert_eq!(code.decode_cache_stats(), (hits, misses));
+    }
+
+    #[test]
+    fn reconstruct_into_validates_output_length() {
+        let mut code = RsCode::new(2, 1).unwrap();
+        let a = [1u8; 8];
+        let b = [2u8; 8];
+        let shards: Vec<(usize, &[u8])> = vec![(0, &a[..]), (1, &b[..])];
+        let mut short = vec![0u8; 15];
+        assert!(matches!(
+            code.reconstruct_into(&shards, &mut short),
+            Err(RsError::LengthMismatch { .. })
+        ));
     }
 
     #[test]

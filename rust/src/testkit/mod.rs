@@ -155,6 +155,12 @@ impl<C: Datagram> Datagram for FragmentLossChannel<C> {
         }
         self.inner.send(buf);
     }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        self.inner.recv_into(buf, timeout)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        self.inner.try_recv_into(buf)
+    }
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
         self.inner.recv_timeout(timeout)
     }

@@ -4,21 +4,54 @@
 //! speak [`Datagram`], implemented by real UDP sockets ([`super::udp`]),
 //! an in-memory pair (tests), and a loss-injecting wrapper (the WAN
 //! substitute for the paper's real-network experiments, DESIGN.md §3).
+//!
+//! The hot-path receive primitive is [`Datagram::recv_into`]: the caller
+//! owns the buffer, so a steady-state receiver never allocates per
+//! datagram (DESIGN.md §6). The legacy `Vec`-returning methods survive
+//! as default shims over the `*_into` primitives and allocate only when
+//! a datagram is actually delivered.
 
+use super::frame::{Frame, FramePool};
+use crate::coordinator::packet::MAX_DATAGRAM;
 use crate::util::Pcg64;
 use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Unreliable, unordered datagram endpoint (UDP semantics).
+///
+/// Implementors provide `send` plus the buffer-filling `recv_into` /
+/// `try_recv_into` primitives (wrappers usually just forward to their
+/// inner channel). The legacy `Vec`-returning methods are default
+/// shims over those.
 pub trait Datagram: Send {
     /// Fire-and-forget send. May silently drop (that is the point).
     fn send(&mut self, buf: &[u8]);
-    /// Blocking receive with timeout. `None` on timeout.
-    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>>;
-    /// Non-blocking receive.
-    fn try_recv(&mut self) -> Option<Vec<u8>>;
+
+    /// Blocking receive into a caller-provided buffer; returns the
+    /// datagram length, `None` on timeout. Datagrams longer than `buf`
+    /// are truncated, like a UDP socket read.
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize>;
+
+    /// Non-blocking receive into a caller-provided buffer.
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize>;
+
+    /// Blocking receive with timeout, allocating. `None` on timeout.
+    /// The shim stages through a stack buffer so an *empty* poll costs
+    /// no heap allocation — only a delivered datagram does.
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        let mut buf = [0u8; MAX_DATAGRAM];
+        let n = self.recv_into(&mut buf, timeout)?;
+        Some(buf[..n].to_vec())
+    }
+
+    /// Non-blocking receive, allocating (empty polls allocate nothing).
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        let mut buf = [0u8; MAX_DATAGRAM];
+        let n = self.try_recv_into(&mut buf)?;
+        Some(buf[..n].to_vec())
+    }
 }
 
 /// Boxed channels are channels — what lets [`crate::api::Transport`]
@@ -26,6 +59,12 @@ pub trait Datagram: Send {
 impl<C: Datagram + ?Sized> Datagram for Box<C> {
     fn send(&mut self, buf: &[u8]) {
         (**self).send(buf)
+    }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        (**self).recv_into(buf, timeout)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        (**self).try_recv_into(buf)
     }
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
         (**self).recv_timeout(timeout)
@@ -35,36 +74,151 @@ impl<C: Datagram + ?Sized> Datagram for Box<C> {
     }
 }
 
-/// In-memory datagram endpoint over std mpsc (lossless, ordered — loss is
-/// layered on with [`LossyChannel`]).
+/// Unbounded FIFO of pooled frames with a condvar for blocking receives
+/// — the crate's allocation-free frame hand-off (also the pool
+/// receiver's demux fan-in). `closed` mirrors mpsc disconnection:
+/// either endpoint of the pair going away marks both queues, so sends
+/// to a dead peer drop instead of accumulating and receives from a dead
+/// peer return promptly once drained.
+pub(crate) struct FrameQueue {
+    q: Mutex<VecDeque<Frame>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl FrameQueue {
+    pub(crate) fn new() -> Arc<FrameQueue> {
+        Arc::new(FrameQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn push(&self, frame: Frame) {
+        self.q.lock().unwrap().push_back(frame);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Frame> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    pub(crate) fn pop_timeout(&self, timeout: Duration) -> Option<Frame> {
+        // Clamp so `now + timeout` cannot overflow Instant arithmetic.
+        let timeout = timeout.min(Duration::from_secs(3600));
+        let deadline = Instant::now() + timeout;
+        let mut g = self.q.lock().unwrap();
+        loop {
+            // Drain queued frames even after the producer went away
+            // (mpsc delivers the backlog before reporting Disconnected).
+            if let Some(f) = g.pop_front() {
+                return Some(f);
+            }
+            if self.closed.load(Ordering::Relaxed) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+}
+
+/// In-memory datagram endpoint (lossless, ordered — loss is layered on
+/// with [`LossyChannel`]). Datagrams travel as [`Frame`]s leased from a
+/// [`FramePool`] shared by the pair, so a warmed-up channel moves
+/// traffic with zero allocations per datagram.
 pub struct MemChannel {
-    tx: Sender<Vec<u8>>,
-    rx: Receiver<Vec<u8>>,
+    tx: Arc<FrameQueue>,
+    rx: Arc<FrameQueue>,
+    pool: Arc<FramePool>,
 }
 
 /// Connected pair of in-memory endpoints.
 pub fn mem_pair() -> (MemChannel, MemChannel) {
-    let (tx_a, rx_b) = std::sync::mpsc::channel();
-    let (tx_b, rx_a) = std::sync::mpsc::channel();
-    (MemChannel { tx: tx_a, rx: rx_a }, MemChannel { tx: tx_b, rx: rx_b })
+    let pool = FramePool::new();
+    let ab = FrameQueue::new();
+    let ba = FrameQueue::new();
+    (
+        MemChannel { tx: Arc::clone(&ab), rx: Arc::clone(&ba), pool: Arc::clone(&pool) },
+        MemChannel { tx: ba, rx: ab, pool },
+    )
+}
+
+impl MemChannel {
+    /// The pair's shared frame pool (benchmarks and the allocation tests
+    /// inspect its recycle statistics).
+    pub fn frame_pool(&self) -> &Arc<FramePool> {
+        &self.pool
+    }
+
+    /// Receive the raw pooled frame (zero-copy; `MemChannel`-specific).
+    pub fn recv_frame(&mut self, timeout: Duration) -> Option<Frame> {
+        self.rx.pop_timeout(timeout)
+    }
+}
+
+impl Drop for MemChannel {
+    fn drop(&mut self) {
+        // Either endpoint going away "disconnects" the pair: the peer's
+        // sends start dropping (no consumer) and its blocked receives
+        // wake promptly (no producer) — the mpsc semantics the engines'
+        // error paths rely on.
+        self.tx.close();
+        self.rx.close();
+    }
 }
 
 impl Datagram for MemChannel {
     fn send(&mut self, buf: &[u8]) {
-        // Peer gone ⇒ drop, like UDP.
-        let _ = self.tx.send(buf.to_vec());
-    }
-    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(b) => Some(b),
-            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        if self.tx.closed.load(Ordering::Relaxed) {
+            return; // peer gone ⇒ drop, like UDP
         }
+        let mut frame = self.pool.lease();
+        frame.copy_from(buf);
+        self.tx.push(frame);
+    }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        let frame = self.rx.pop_timeout(timeout)?;
+        let n = frame.len().min(buf.len());
+        buf[..n].copy_from_slice(&frame[..n]);
+        Some(n)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        let frame = self.rx.pop()?;
+        let n = frame.len().min(buf.len());
+        buf[..n].copy_from_slice(&frame[..n]);
+        Some(n)
+    }
+    /// Zero-extra-copy override of the allocating receive: hand the
+    /// pooled frame's bytes out as an exact-size `Vec`.
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.rx.pop_timeout(timeout).map(|f| f.to_vec())
     }
     fn try_recv(&mut self) -> Option<Vec<u8>> {
-        match self.rx.try_recv() {
-            Ok(b) => Some(b),
-            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
-        }
+        self.rx.pop().map(|f| f.to_vec())
+    }
+}
+
+/// Handle for adjusting a [`LossyChannel`]'s loss fraction while the
+/// transfer runs (time-varying-loss loopback experiments).
+#[derive(Clone)]
+pub struct LossKnob(Arc<AtomicU64>);
+
+impl LossKnob {
+    pub fn set(&self, fraction: f64) {
+        self.0.store(fraction.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }
 
@@ -75,9 +229,12 @@ impl Datagram for MemChannel {
 /// Only *fragment-bearing* packets should be subjected to loss in Janus
 /// experiments; the caller decides by wrapping the data path's channel but
 /// not the control path's.
+///
+/// The fraction is stored as `AtomicU64` f64-bits (no mutex on the send
+/// path) and a zero fraction skips the RNG draw entirely.
 pub struct LossyChannel<C: Datagram> {
     pub inner: C,
-    loss_fraction: Arc<Mutex<f64>>,
+    loss_bits: Arc<AtomicU64>,
     rng: Pcg64,
     dropped: u64,
     sent: u64,
@@ -87,7 +244,7 @@ impl<C: Datagram> LossyChannel<C> {
     pub fn new(inner: C, loss_fraction: f64, seed: u64) -> Self {
         LossyChannel {
             inner,
-            loss_fraction: Arc::new(Mutex::new(loss_fraction)),
+            loss_bits: Arc::new(AtomicU64::new(loss_fraction.to_bits())),
             rng: Pcg64::seeded(seed),
             dropped: 0,
             sent: 0,
@@ -96,8 +253,8 @@ impl<C: Datagram> LossyChannel<C> {
 
     /// Handle to adjust the loss fraction while the transfer runs
     /// (time-varying-loss loopback experiments).
-    pub fn loss_knob(&self) -> Arc<Mutex<f64>> {
-        Arc::clone(&self.loss_fraction)
+    pub fn loss_knob(&self) -> LossKnob {
+        LossKnob(Arc::clone(&self.loss_bits))
     }
 
     pub fn stats(&self) -> (u64, u64) {
@@ -108,12 +265,18 @@ impl<C: Datagram> LossyChannel<C> {
 impl<C: Datagram> Datagram for LossyChannel<C> {
     fn send(&mut self, buf: &[u8]) {
         self.sent += 1;
-        let p = *self.loss_fraction.lock().unwrap();
-        if self.rng.bool_with(p) {
+        let p = f64::from_bits(self.loss_bits.load(Ordering::Relaxed));
+        if p > 0.0 && self.rng.bool_with(p) {
             self.dropped += 1;
             return;
         }
         self.inner.send(buf);
+    }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        self.inner.recv_into(buf, timeout)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        self.inner.try_recv_into(buf)
     }
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
         self.inner.recv_timeout(timeout)
@@ -161,6 +324,13 @@ impl<C: Datagram> Datagram for ReorderChannel<C> {
             self.flush_one();
         }
     }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        self.flush();
+        self.inner.recv_into(buf, timeout)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        self.inner.try_recv_into(buf)
+    }
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
         self.flush();
         self.inner.recv_timeout(timeout)
@@ -199,6 +369,78 @@ mod tests {
     }
 
     #[test]
+    fn recv_into_reuses_caller_buffer() {
+        let (mut a, mut b) = mem_pair();
+        a.send(b"first");
+        a.send(b"second!");
+        let mut buf = [0u8; MAX_DATAGRAM];
+        let n = b.recv_into(&mut buf, Duration::from_millis(50)).unwrap();
+        assert_eq!(&buf[..n], b"first");
+        let n = b.try_recv_into(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"second!");
+        assert!(b.try_recv_into(&mut buf).is_none());
+    }
+
+    #[test]
+    fn mem_channel_recycles_frames() {
+        let (mut a, mut b) = mem_pair();
+        let mut buf = [0u8; MAX_DATAGRAM];
+        // Warm-up: the first send allocates one frame...
+        a.send(b"x");
+        b.recv_into(&mut buf, Duration::from_millis(50)).unwrap();
+        let (fresh, _) = a.frame_pool().stats();
+        // ...which every later ping-pong recycles.
+        for _ in 0..100 {
+            a.send(b"y");
+            b.recv_into(&mut buf, Duration::from_millis(50)).unwrap();
+        }
+        assert_eq!(a.frame_pool().stats().0, fresh, "steady state must not allocate frames");
+    }
+
+    #[test]
+    fn recv_frame_is_zero_copy() {
+        let (mut a, mut b) = mem_pair();
+        a.send(b"payload");
+        let frame = b.recv_frame(Duration::from_millis(50)).unwrap();
+        assert_eq!(&*frame, b"payload");
+        drop(frame);
+        assert_eq!(b.frame_pool().idle(), 1, "dropped frame parks in the pool");
+    }
+
+    #[test]
+    fn dropped_peer_disconnects_the_pair() {
+        // Sends to a dead receiver must drop (no unbounded frame
+        // build-up), and receives from a dead sender must return
+        // promptly after the backlog drains — mpsc semantics.
+        let (mut a, mut b) = mem_pair();
+        a.send(b"backlog");
+        let (fresh_before, _) = a.frame_pool().stats();
+        drop(b);
+        for _ in 0..100 {
+            a.send(b"into the void");
+        }
+        assert_eq!(
+            a.frame_pool().stats().0,
+            fresh_before,
+            "sends to a dropped peer must not lease frames"
+        );
+        let (mut c, mut d) = mem_pair();
+        d.send(b"last words");
+        drop(d);
+        assert_eq!(
+            c.recv_timeout(Duration::from_secs(30)).unwrap(),
+            b"last words",
+            "backlog delivers after the sender dropped"
+        );
+        let start = std::time::Instant::now();
+        assert!(c.recv_timeout(Duration::from_secs(30)).is_none());
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "disconnected receive must not wait out the timeout"
+        );
+    }
+
+    #[test]
     fn lossy_drops_expected_fraction() {
         let (a, mut b) = mem_pair();
         let mut lossy = LossyChannel::new(a, 0.3, 42);
@@ -222,10 +464,11 @@ mod tests {
         let (a, mut b) = mem_pair();
         let mut lossy = LossyChannel::new(a, 0.0, 1);
         let knob = lossy.loss_knob();
+        assert_eq!(knob.get(), 0.0);
         for _ in 0..100 {
             lossy.send(b"x");
         }
-        *knob.lock().unwrap() = 1.0;
+        knob.set(1.0);
         for _ in 0..100 {
             lossy.send(b"x");
         }

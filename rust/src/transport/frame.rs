@@ -1,0 +1,193 @@
+//! Recycled datagram frame buffers — the allocation-free receive path.
+//!
+//! Every datagram that crossed a [`super::channel::Datagram`] endpoint
+//! used to cost at least one fresh `Vec<u8>`; at the paper's pacing
+//! rates (§5.2.2 argues the coding kernels must outrun the wire) the
+//! allocator, not the GF(256) kernels, became the receiver's bottleneck.
+//! A [`FramePool`] keeps a freelist of `MAX_DATAGRAM`-sized buffers; a
+//! [`Frame`] is one leased buffer that returns itself to the pool on
+//! drop, so a warmed-up data path recycles the same handful of
+//! allocations forever (the steady-state zero-allocation invariant,
+//! asserted by `rust/tests/alloc_datapath.rs`).
+
+use crate::coordinator::packet::MAX_DATAGRAM;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared freelist of fixed-size datagram buffers.
+///
+/// Lease with [`FramePool::lease`]; buffers come back automatically when
+/// the [`Frame`] drops. The pool never shrinks and never blocks: an
+/// empty freelist just means one fresh allocation (counted, so tests can
+/// assert the steady state stops allocating).
+pub struct FramePool {
+    free: Mutex<Vec<Vec<u8>>>,
+    fresh: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl FramePool {
+    /// New empty pool (buffers are allocated on first lease, then
+    /// recycled).
+    pub fn new() -> Arc<FramePool> {
+        Arc::new(FramePool {
+            free: Mutex::new(Vec::new()),
+            fresh: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        })
+    }
+
+    /// Pool pre-warmed with `frames` ready buffers.
+    pub fn with_frames(frames: usize) -> Arc<FramePool> {
+        let pool = FramePool::new();
+        {
+            let mut free = pool.free.lock().unwrap();
+            for _ in 0..frames {
+                free.push(vec![0u8; MAX_DATAGRAM]);
+            }
+        }
+        pool
+    }
+
+    /// Lease a frame: recycled when available, freshly allocated
+    /// otherwise.
+    pub fn lease(self: &Arc<Self>) -> Frame {
+        let recycled = self.free.lock().unwrap().pop();
+        let buf = match recycled {
+            Some(b) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0u8; MAX_DATAGRAM]
+            }
+        };
+        Frame { buf, len: 0, pool: Arc::clone(self) }
+    }
+
+    /// (fresh allocations, recycled leases) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.fresh.load(Ordering::Relaxed), self.recycled.load(Ordering::Relaxed))
+    }
+
+    /// Buffers currently parked in the freelist.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// One leased datagram buffer; dereferences to the datagram bytes and
+/// returns to its pool when dropped.
+///
+/// The backing buffer is always `MAX_DATAGRAM` bytes; `len` tracks how
+/// much of it is actual datagram content.
+pub struct Frame {
+    buf: Vec<u8>,
+    len: usize,
+    pool: Arc<FramePool>,
+}
+
+impl Frame {
+    /// Copy a datagram into the frame. Oversized payloads are truncated
+    /// at `MAX_DATAGRAM`, like a UDP socket buffer would.
+    pub fn copy_from(&mut self, src: &[u8]) {
+        let n = src.len().min(self.buf.len());
+        self.buf[..n].copy_from_slice(&src[..n]);
+        self.len = n;
+    }
+
+    /// The whole backing buffer, for `recv_into`-style fills; pair with
+    /// [`Frame::set_len`].
+    pub fn buf_mut(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+
+    /// Record how many bytes of the backing buffer are datagram content.
+    pub fn set_len(&mut self, n: usize) {
+        assert!(n <= self.buf.len(), "frame content exceeds MAX_DATAGRAM");
+        self.len = n;
+    }
+
+    /// Datagram length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Deref for Frame {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.buf[..self.len]
+    }
+}
+
+impl std::fmt::Debug for Frame {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Frame({} bytes)", self.len)
+    }
+}
+
+impl Drop for Frame {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        // Pool invariant: only full-size buffers park in the freelist.
+        if buf.len() == MAX_DATAGRAM {
+            self.pool.free.lock().unwrap().push(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_recycles_buffers() {
+        let pool = FramePool::new();
+        let f = pool.lease();
+        assert_eq!(pool.stats(), (1, 0));
+        drop(f);
+        assert_eq!(pool.idle(), 1);
+        let f = pool.lease();
+        assert_eq!(pool.stats(), (1, 1), "second lease must recycle");
+        drop(f);
+    }
+
+    #[test]
+    fn with_frames_prewarms() {
+        let pool = FramePool::with_frames(4);
+        assert_eq!(pool.idle(), 4);
+        let a = pool.lease();
+        let b = pool.lease();
+        assert_eq!(pool.stats(), (0, 2), "no fresh allocations needed");
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 4);
+    }
+
+    #[test]
+    fn copy_from_sets_content_and_truncates() {
+        let pool = FramePool::new();
+        let mut f = pool.lease();
+        assert!(f.is_empty());
+        f.copy_from(b"hello");
+        assert_eq!(&*f, b"hello");
+        let huge = vec![0xAB; MAX_DATAGRAM + 100];
+        f.copy_from(&huge);
+        assert_eq!(f.len(), MAX_DATAGRAM, "oversized datagrams truncate");
+    }
+
+    #[test]
+    fn buf_mut_set_len_roundtrip() {
+        let pool = FramePool::new();
+        let mut f = pool.lease();
+        f.buf_mut()[..3].copy_from_slice(b"abc");
+        f.set_len(3);
+        assert_eq!(&*f, b"abc");
+    }
+}

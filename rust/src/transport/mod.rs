@@ -1,8 +1,11 @@
 //! Datagram transports: the in-memory test channel, loss/reorder
-//! injectors (the controlled-WAN substitute), and real UDP sockets.
+//! injectors (the controlled-WAN substitute), real UDP sockets, and the
+//! recycled frame buffers behind the allocation-free receive path.
 
 pub mod channel;
+pub mod frame;
 pub mod udp;
 
-pub use channel::{mem_pair, Datagram, LossyChannel, MemChannel, ReorderChannel};
+pub use channel::{mem_pair, Datagram, LossKnob, LossyChannel, MemChannel, ReorderChannel};
+pub use frame::{Frame, FramePool};
 pub use udp::{udp_pair, UdpChannel};

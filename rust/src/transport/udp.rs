@@ -3,14 +3,14 @@
 //! sender/receiver engines are thread-per-role anyway).
 
 use super::channel::Datagram;
-use crate::coordinator::packet::MAX_DATAGRAM;
 use std::net::{SocketAddr, ToSocketAddrs, UdpSocket};
 use std::time::Duration;
 
-/// UDP endpoint connected to a fixed peer.
+/// UDP endpoint connected to a fixed peer. Receives go straight into the
+/// caller's buffer ([`Datagram::recv_into`]) — no per-datagram staging
+/// copy or allocation.
 pub struct UdpChannel {
     sock: UdpSocket,
-    buf: Vec<u8>,
 }
 
 /// Grow kernel socket buffers: Janus bursts 4 KiB datagrams at the full
@@ -70,14 +70,14 @@ impl UdpChannel {
         let sock = UdpSocket::bind(local)?;
         grow_buffers(&sock);
         sock.connect(peer)?;
-        Ok(UdpChannel { sock, buf: vec![0u8; MAX_DATAGRAM] })
+        Ok(UdpChannel { sock })
     }
 
     /// Bind to an ephemeral localhost port (peer set later via `connect`).
     pub fn bind_ephemeral() -> std::io::Result<UdpChannel> {
         let sock = UdpSocket::bind(("127.0.0.1", 0))?;
         grow_buffers(&sock);
-        Ok(UdpChannel { sock, buf: vec![0u8; MAX_DATAGRAM] })
+        Ok(UdpChannel { sock })
     }
 
     pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
@@ -91,7 +91,7 @@ impl UdpChannel {
     /// Wrap an already-configured socket (must be connected to a peer).
     pub fn from_socket(sock: UdpSocket) -> UdpChannel {
         grow_buffers(&sock);
-        UdpChannel { sock, buf: vec![0u8; MAX_DATAGRAM] }
+        UdpChannel { sock }
     }
 }
 
@@ -102,20 +102,14 @@ impl Datagram for UdpChannel {
         let _ = self.sock.send(buf);
     }
 
-    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
         self.sock.set_read_timeout(Some(timeout)).ok()?;
-        match self.sock.recv(&mut self.buf) {
-            Ok(n) => Some(self.buf[..n].to_vec()),
-            Err(_) => None,
-        }
+        self.sock.recv(buf).ok()
     }
 
-    fn try_recv(&mut self) -> Option<Vec<u8>> {
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
         self.sock.set_nonblocking(true).ok()?;
-        let res = match self.sock.recv(&mut self.buf) {
-            Ok(n) => Some(self.buf[..n].to_vec()),
-            Err(_) => None,
-        };
+        let res = self.sock.recv(buf).ok();
         let _ = self.sock.set_nonblocking(false);
         res
     }

@@ -62,11 +62,11 @@ impl<C: Datagram> Datagram for CorruptingChannel<C> {
             self.inner.send(buf);
         }
     }
-    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
-        self.inner.recv_timeout(timeout)
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        self.inner.recv_into(buf, timeout)
     }
-    fn try_recv(&mut self) -> Option<Vec<u8>> {
-        self.inner.try_recv()
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        self.inner.try_recv_into(buf)
     }
 }
 
@@ -205,11 +205,11 @@ fn garbage_datagrams_are_ignored() {
             }
             self.inner.send(buf);
         }
-        fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
-            self.inner.recv_timeout(timeout)
+        fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+            self.inner.recv_into(buf, timeout)
         }
-        fn try_recv(&mut self) -> Option<Vec<u8>> {
-            self.inner.try_recv()
+        fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+            self.inner.try_recv_into(buf)
         }
     }
 

@@ -131,6 +131,132 @@ fn prop_rs_fails_loudly_beyond_m_losses() {
     );
 }
 
+// === Arena-native kernels (ISSUE 3) ===
+
+#[test]
+fn prop_encode_strided_matches_encode() {
+    // The strided in-place encoder must produce byte-identical parity to
+    // the Vec-based reference across random (k, m, stride) draws.
+    check(
+        &PropConfig { cases: 60, ..Default::default() },
+        |rng| {
+            let k = rng.range(1, 12);
+            let m = rng.range(0, 8);
+            let s = rng.range(1, 200);
+            (k, m, s, rng.next_u64())
+        },
+        no_shrink,
+        |&(k, m, s, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let code = RsCode::new(k, m).map_err(|e| e.to_string())?;
+            let data: Vec<Vec<u8>> = (0..k)
+                .map(|_| {
+                    let mut f = vec![0u8; s];
+                    rng.fill_bytes(&mut f);
+                    f
+                })
+                .collect();
+            let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+            let parity = code.encode(&refs).map_err(|e| e.to_string())?;
+            let mut buf = vec![0xDDu8; (k + m) * s]; // pre-dirtied
+            for (i, d) in data.iter().enumerate() {
+                buf[i * s..(i + 1) * s].copy_from_slice(d);
+            }
+            code.encode_strided(&mut buf, s).map_err(|e| e.to_string())?;
+            for (p, want) in parity.iter().enumerate() {
+                if buf[(k + p) * s..(k + p + 1) * s] != want[..] {
+                    return Err(format!("parity {p} differs: k={k} m={m} s={s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reconstruct_into_matches_reconstruct() {
+    // Arena-native decode must agree byte-for-byte with the Vec-based
+    // reference across random loss patterns — and a second call with the
+    // same pattern (cache hit) must return the identical bytes.
+    check(
+        &PropConfig { cases: 60, ..Default::default() },
+        |rng| {
+            let k = rng.range(1, 10);
+            let m = rng.range(1, 7);
+            (k, m, rng.next_u64())
+        },
+        no_shrink,
+        |&(k, m, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let s = 48;
+            let mut code = RsCode::new(k, m).map_err(|e| e.to_string())?;
+            let data: Vec<Vec<u8>> = (0..k)
+                .map(|_| {
+                    let mut f = vec![0u8; s];
+                    rng.fill_bytes(&mut f);
+                    f
+                })
+                .collect();
+            let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+            let parity = code.encode(&refs).map_err(|e| e.to_string())?;
+            let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+            // Drop up to m random fragments.
+            let lose = rng.range(0, m + 1);
+            let lost = rng.sample_indices(k + m, lose);
+            let shards: Vec<(usize, &[u8])> = (0..k + m)
+                .filter(|i| !lost.contains(i))
+                .map(|i| (i, all[i].as_slice()))
+                .collect();
+            let want = code.reconstruct(&shards).map_err(|e| e.to_string())?;
+            let flat: Vec<u8> = want.concat();
+            let mut out = vec![0x55u8; k * s];
+            for round in 0..2 {
+                out.fill(0x55);
+                code.reconstruct_into(&shards, &mut out).map_err(|e| e.to_string())?;
+                if out != flat {
+                    return Err(format!(
+                        "mismatch k={k} m={m} lost={lost:?} round={round} (hit≠miss)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn decode_matrix_cache_hits_across_groups_with_same_pattern() {
+    // Thousands of FTGs losing the same fragments (a steady loss regime)
+    // must invert the submatrix once.
+    let (k, m, s) = (8usize, 3usize, 64usize);
+    let mut code = RsCode::new(k, m).unwrap();
+    let mut rng = Pcg64::seeded(0xCAFE);
+    let lost = [2usize, 9];
+    let mut out = vec![0u8; k * s];
+    for _group in 0..50 {
+        let data: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut f = vec![0u8; s];
+                rng.fill_bytes(&mut f);
+                f
+            })
+            .collect();
+        let refs: Vec<&[u8]> = data.iter().map(|f| f.as_slice()).collect();
+        let parity = code.encode(&refs).unwrap();
+        let all: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+        let shards: Vec<(usize, &[u8])> = (0..k + m)
+            .filter(|i| !lost.contains(i))
+            .map(|i| (i, all[i].as_slice()))
+            .collect();
+        code.reconstruct_into(&shards, &mut out).unwrap();
+        let flat: Vec<u8> = data.concat();
+        assert_eq!(out, flat);
+    }
+    let (hits, misses) = code.decode_cache_stats();
+    assert_eq!(misses, 1, "one inversion for 50 identically-lossy groups");
+    assert_eq!(hits, 49);
+}
+
 // === GF(2^8) field axioms ===
 
 #[test]
