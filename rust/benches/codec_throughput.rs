@@ -1,0 +1,142 @@
+//! Progressive-codec throughput + ε gate (EXPERIMENTS.md §Codec).
+//!
+//! Measures the encode path (lifting + bitplane + planner + container)
+//! and the progressive decode path at every rung prefix, then asserts
+//! the codec's contract: every recorded rung ε meets its request, every
+//! prefix's ground-truth error stays within the recorded bound, and the
+//! container undercuts the raw f32 volume. Emits
+//! `target/bench-results/BENCH_codec.json` (uploaded by CI as the
+//! `BENCH_codec` artifact alongside `BENCH_datapath.json`).
+//!
+//! `JANUS_SCALE` ≥ 10 shrinks the volume for CI smoke runs.
+
+use janus::codec::{encode, CodecConfig, Decoder};
+use janus::metrics::bench::{bench_scale, time_it, BenchTable};
+use janus::refactor::{generate, GrfConfig};
+use std::io::Write;
+use std::path::PathBuf;
+
+fn write_codec_json(
+    d: usize,
+    rungs: usize,
+    raw_bytes: u64,
+    container_bytes: u64,
+    encode_mb_s: f64,
+    decode_mb_s: f64,
+    eps: &[f64],
+) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_codec.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"codec\",")?;
+    writeln!(f, "  \"d\": {d},")?;
+    writeln!(f, "  \"rungs\": {rungs},")?;
+    writeln!(f, "  \"raw_bytes\": {raw_bytes},")?;
+    writeln!(f, "  \"container_bytes\": {container_bytes},")?;
+    writeln!(
+        f,
+        "  \"compression_ratio\": {:.4},",
+        container_bytes as f64 / raw_bytes as f64
+    )?;
+    writeln!(f, "  \"encode_mb_per_s\": {encode_mb_s:.2},")?;
+    writeln!(f, "  \"decode_mb_per_s\": {decode_mb_s:.2},")?;
+    let eps_list: Vec<String> = eps.iter().map(|e| format!("{e:.6e}")).collect();
+    writeln!(f, "  \"achieved_eps\": [{}]", eps_list.join(", "))?;
+    writeln!(f, "}}")?;
+    println!("[saved {}]", path.display());
+    Ok(path)
+}
+
+fn main() {
+    let mut table = BenchTable::new("codec_throughput", vec!["path", "metric", "value"]);
+    table.header();
+
+    // Scale-aware geometry: d = 64 full, 32 under CI smoke (`JANUS_SCALE`).
+    let d = if bench_scale(1) >= 10 { 32 } else { 64 };
+    let cfg = CodecConfig { levels: 4, ladder: vec![4e-3, 5e-4, 6e-5], max_planes: 24 };
+    let vol = generate(d, &GrfConfig::default(), 7);
+    let raw_bytes = (d * d * d * 4) as u64;
+
+    // --- Encode (lifting + planes + planner + serialization) ---
+    let runs = 3usize;
+    let (enc, secs) = time_it(|| {
+        let mut last = None;
+        for _ in 0..runs {
+            last = Some(encode(&vol, &cfg).expect("encode"));
+        }
+        last.expect("ran at least once")
+    });
+    let encode_mb_s = runs as f64 * raw_bytes as f64 / secs / 1e6;
+    table.row(
+        "codec encode",
+        vec!["MB/s raw".into(), format!("{encode_mb_s:.1}")],
+    );
+    table.row(
+        "container ratio",
+        vec![
+            "frac of raw".into(),
+            format!("{:.3}", enc.total_bytes() as f64 / raw_bytes as f64),
+        ],
+    );
+
+    // --- Progressive decode at every rung prefix ---
+    let refs: Vec<&[u8]> = enc.rungs.iter().map(|r| r.as_slice()).collect();
+    let mut decoded_bytes = 0u64;
+    let (outs, secs) = time_it(|| {
+        let mut outs = Vec::new();
+        for used in 1..=refs.len() {
+            outs.push(Decoder::decode(&refs[..used]).expect("decode prefix"));
+        }
+        outs
+    });
+    for used in 1..=refs.len() {
+        decoded_bytes += refs[..used].iter().map(|r| r.len() as u64).sum::<u64>();
+    }
+    let decode_mb_s = decoded_bytes as f64 / secs / 1e6;
+    table.row(
+        "codec decode (all prefixes)",
+        vec!["MB/s container".into(), format!("{decode_mb_s:.1}")],
+    );
+
+    // --- The codec's contract, asserted ---
+    for (r, ((rec, req), out)) in enc.eps.iter().zip(&cfg.ladder).zip(&outs).enumerate() {
+        assert!(rec <= req, "rung {r}: recorded ε {rec} exceeds requested {req}");
+        let true_err = vol.linf_rel_error(&out.volume);
+        assert!(
+            true_err <= out.achieved_eps + 1e-12,
+            "rung {r}: ground truth {true_err} exceeds reported {}",
+            out.achieved_eps
+        );
+        assert!(
+            (out.achieved_eps - rec).abs() < 1e-15,
+            "rung {r}: decoder reports the recorded ε"
+        );
+        table.row(
+            &format!("rung {} ε", r + 1),
+            vec!["achieved".into(), format!("{:.3e}", out.achieved_eps)],
+        );
+    }
+    assert!(
+        enc.total_bytes() < raw_bytes,
+        "container must undercut raw f32: {} vs {raw_bytes}",
+        enc.total_bytes()
+    );
+    // Loose smoke floor: even a debug-adjacent CI runner encodes a small
+    // volume faster than 1 MB/s; the JSON records the real number.
+    assert!(encode_mb_s > 1.0, "encode collapsed: {encode_mb_s:.2} MB/s");
+
+    write_codec_json(
+        d,
+        enc.rungs.len(),
+        raw_bytes,
+        enc.total_bytes(),
+        encode_mb_s,
+        decode_mb_s,
+        &enc.eps,
+    )
+    .unwrap();
+    table.save().unwrap();
+    println!("\ncodec_throughput complete.");
+}

@@ -1,10 +1,11 @@
 //! [`Endpoint`] — the one entry pair (`send` / `receive`) every Janus
 //! transfer goes through.
 
-use super::observer::{EventSink, TransferEvent, TransferObserver};
-use super::report::{ReceiveSummary, SendSummary};
+use super::observer::{emit, EventSink, TransferEvent, TransferObserver};
+use super::report::{CodecSummary, ReceiveSummary, SendSummary};
 use super::spec::{Contract, Dataset, TransferSpec};
 use super::transport::Transport;
+use crate::codec::Decoder;
 use crate::coordinator::pool::{PoolConfig, TransferPool};
 use crate::coordinator::receiver::{transfer_receiver, ReceiverConfig};
 use crate::coordinator::sender::{transfer_sender, SenderConfig};
@@ -70,6 +71,7 @@ impl Endpoint {
                 contract: spec.contract(),
                 initial_lambda: spec.initial_lambda(),
                 max_duration: spec.max_duration(),
+                plane_cuts: dataset.cuts.clone(),
             };
             let rep = transfer_sender(control.as_mut(), &cfg, &dataset.levels, &dataset.eps, sink)?;
             Ok(rep.into())
@@ -106,15 +108,62 @@ impl Endpoint {
             max_duration: spec.max_duration(),
         };
         let mut control = transport.open_control()?;
-        if spec.streams() == 1 {
-            let rep = transfer_receiver(control.as_mut(), &rcfg, sink)?;
-            Ok(rep.into())
+        let mut summary: ReceiveSummary = if spec.streams() == 1 {
+            transfer_receiver(control.as_mut(), &rcfg, sink)?.into()
         } else {
             let data = open_data_channels(transport, spec.streams())?;
-            let rep = TransferPool::pooled_receiver(&mut control, data, &rcfg, sink)?;
-            Ok(rep.into())
+            TransferPool::pooled_receiver(&mut control, data, &rcfg, sink)?.into()
+        };
+        attach_codec_summary(&mut summary, sink);
+        Ok(summary)
+    }
+}
+
+/// Receiver-side progressive reconstruction: when the delivered bytes
+/// are a codec stream, replay the recovered rung prefix through the
+/// progressive decoder, emitting one [`TransferEvent::LevelDecoded`]
+/// per rung (in level order, after the engine's events) and recording
+/// the decode certificate in [`ReceiveSummary::codec`].
+///
+/// Certification is all-or-nothing over the recovered prefix: if *any*
+/// recovered rung fails to parse (corruption, or a raw dataset whose
+/// first bytes merely collide with the codec magic), no events are
+/// emitted and no certificate is attached — exactly the prefixes this
+/// function certifies are the ones [`ReceiveSummary::decode_volume`]
+/// can reconstruct.
+fn attach_codec_summary(summary: &mut ReceiveSummary, sink: EventSink<'_>) {
+    if !summary.is_codec_stream() {
+        return;
+    }
+    // Headers-only replay: every structural/CRC check runs, nothing is
+    // copied — reconstruction stays on-demand via `decode_volume`.
+    let mut dec = Decoder::headers_only();
+    let mut events = Vec::new();
+    for (idx, rung) in summary.recovered_prefix().into_iter().enumerate() {
+        match dec.push_rung(rung) {
+            Ok(achieved_eps) => {
+                events.push(TransferEvent::LevelDecoded { level: idx as u8, achieved_eps });
+            }
+            // Not (entirely) a codec stream after all: certify nothing.
+            Err(_) => return,
         }
     }
+    if events.is_empty() {
+        return;
+    }
+    let rungs_decoded = events.len();
+    for event in events {
+        emit(sink, event);
+    }
+    let header = dec.header().expect("rung 0 applied");
+    summary.codec = Some(CodecSummary {
+        rungs_decoded,
+        achieved_eps: dec.achieved_eps(),
+        planes_used: dec.planes_used(),
+        d: header.d,
+        lifting_levels: header.levels,
+        segments_applied: dec.segments_applied(),
+    });
 }
 
 fn open_data_channels(

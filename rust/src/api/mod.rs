@@ -39,6 +39,15 @@
 //! # Ok::<(), janus::util::err::Error>(())
 //! ```
 //!
+//! Raw f32 volumes enter through [`Dataset::from_volume`] — the
+//! `janus::codec` progressive encoder — so a transfer can start from a
+//! scientific array instead of opaque bytes: levels become measured ε
+//! rungs, the receiver emits [`TransferEvent::LevelDecoded`] as the
+//! delivered prefix decodes, and
+//! [`ReceiveSummary::decode_volume`] reconstructs the volume together
+//! with its certified achieved ε. [`Dataset::raw`] keeps today's
+//! byte-level path.
+//!
 //! The pre-facade free functions (`coordinator::run_sender`,
 //! `run_receiver`, `run_session`, `TransferPool::run_*`) survive only as
 //! `#[deprecated]` shims; CI builds the examples with `-D deprecated` so
@@ -52,8 +61,14 @@ pub mod transport;
 
 pub use endpoint::Endpoint;
 pub use observer::{EventLog, FnObserver, TransferEvent, TransferObserver};
-pub use report::{ReceiveDetail, ReceiveSummary, SendDetail, SendSummary, TransferReport};
+pub use report::{
+    CodecSummary, ReceiveDetail, ReceiveSummary, SendDetail, SendSummary, TransferReport,
+};
 pub use spec::{Contract, Dataset, SpecError, TransferSpec, TransferSpecBuilder};
+
+// The codec types a facade caller needs for `Dataset::from_volume` and
+// `ReceiveSummary::decode_volume`.
+pub use crate::codec::{CodecConfig, CodecError, DecodeOutput};
 pub use transport::{
     mem_transport_pair, ChannelTransport, StagedTransport, Transport, UdpTransport,
 };

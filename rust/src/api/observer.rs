@@ -16,6 +16,10 @@
 //!   interleave in any order (they come from concurrent workers).
 //! * `GroupRecovered` events are receiver-side and are emitted in
 //!   (level, group) reconstruction order.
+//! * `LevelDecoded` events are receiver-side, follow every
+//!   `GroupRecovered`, and arrive in level (rung) order — one per
+//!   delivered codec rung, carrying the recorded achieved ε of the
+//!   prefix up to that rung. Raw (non-codec) datasets emit none.
 
 /// One protocol-level occurrence inside a running transfer.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,6 +35,11 @@ pub enum TransferEvent {
     GroupRecovered { level: u8, ftg: u32 },
     /// One stream finished its share of a pass.
     StreamFinished { stream: u8, pass: u32, fragments: u64 },
+    /// Receiver-side progressive reconstruction applied one codec rung:
+    /// the delivered prefix now decodes at the recorded `achieved_eps`
+    /// (measured at encode time). Emitted in level order after the
+    /// transfer's `GroupRecovered` events; codec datasets only.
+    LevelDecoded { level: u8, achieved_eps: f64 },
 }
 
 /// Receives [`TransferEvent`]s while a transfer runs.

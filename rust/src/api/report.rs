@@ -6,6 +6,7 @@
 //! depth (per-pass traces, λ̂ feedback logs, adaptation history) stays
 //! available through the `detail` enums.
 
+use crate::codec::{CodecError, DecodeOutput, Decoder};
 use crate::coordinator::pool::{PassRecord, PoolReceiverReport, PoolSenderReport, RecvPassRecord};
 use crate::coordinator::receiver::ReceiverReport;
 use crate::coordinator::sender::SenderReport;
@@ -93,6 +94,26 @@ pub enum ReceiveDetail {
     Pooled(PoolReceiverReport),
 }
 
+/// Receiver-side view of a delivered codec stream: what the progressive
+/// decoder certified about the recovered prefix. Present only when the
+/// dataset came through [`crate::api::Dataset::from_volume`] (the
+/// facade sniffs the codec magic in level 0 and replays the rungs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecSummary {
+    /// Rungs the progressive decoder applied (delivered prefix).
+    pub rungs_decoded: usize,
+    /// Recorded (measured-at-encode) ε of the applied prefix.
+    pub achieved_eps: f64,
+    /// Contiguous mantissa-plane prefix applied per lifting level.
+    pub planes_used: Vec<u8>,
+    /// Volume dimension from the stream header.
+    pub d: usize,
+    /// Lifting levels from the stream header.
+    pub lifting_levels: usize,
+    /// Total CRC-valid segments applied.
+    pub segments_applied: usize,
+}
+
 /// Receiver-side outcome of a transfer, engine-agnostic.
 #[derive(Debug, Clone)]
 pub struct ReceiveSummary {
@@ -108,6 +129,8 @@ pub struct ReceiveSummary {
     pub groups_recovered: u64,
     /// Wall-clock seconds.
     pub duration: f64,
+    /// Progressive-decode certificate for codec datasets (None for raw).
+    pub codec: Option<CodecSummary>,
     /// Full engine report (with `levels` drained — see [`ReceiveDetail`]).
     pub detail: ReceiveDetail,
 }
@@ -143,6 +166,38 @@ impl ReceiveSummary {
             .map(|l| l.as_ref().expect("prefix levels are present").as_slice())
             .collect()
     }
+
+    /// Whether the delivered bytes look like a codec stream (level 0
+    /// opens with the container magic).
+    pub fn is_codec_stream(&self) -> bool {
+        matches!(
+            self.levels.first(),
+            Some(Some(l0)) if l0.starts_with(&crate::codec::container::STREAM_MAGIC)
+        )
+    }
+
+    /// Reconstruct the volume from the delivered codec prefix. `None`
+    /// when the payload is not a codec stream (raw datasets, or level 0
+    /// undelivered); otherwise the progressive decode result, including
+    /// the recorded achieved ε and the reconstructed volume itself.
+    ///
+    /// This replays the container from `levels` each call rather than
+    /// caching the receive-time decoder: keeping that state would hold
+    /// a second copy of every plane in memory for the (common) callers
+    /// who never reconstruct. Decode the volume once and keep the
+    /// [`DecodeOutput`] if you need it repeatedly.
+    pub fn decode_volume(&self) -> Option<Result<DecodeOutput, CodecError>> {
+        if !self.is_codec_stream() {
+            return None;
+        }
+        let mut dec = Decoder::new();
+        for rung in self.recovered_prefix() {
+            if let Err(e) = dec.push_rung(rung) {
+                return Some(Err(e));
+            }
+        }
+        Some(dec.reconstruct())
+    }
 }
 
 impl From<ReceiverReport> for ReceiveSummary {
@@ -155,6 +210,7 @@ impl From<ReceiverReport> for ReceiveSummary {
             fragments_received: r.fragments_received,
             groups_recovered: r.groups_recovered,
             duration: r.duration,
+            codec: None,
             detail: ReceiveDetail::SingleStream(r),
         }
     }
@@ -170,6 +226,7 @@ impl From<PoolReceiverReport> for ReceiveSummary {
             fragments_received: r.fragments_received,
             groups_recovered: r.groups_recovered,
             duration: r.duration,
+            codec: None,
             detail: ReceiveDetail::Pooled(r),
         }
     }

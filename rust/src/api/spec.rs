@@ -1,7 +1,9 @@
 //! The transfer contract, dataset description, and the validated
 //! [`TransferSpec`] every Janus transfer is built from.
 
-use crate::model::params::{LevelSchedule, NetParams};
+use crate::codec::{self, CodecConfig, CodecError, Encoded};
+use crate::model::params::{LevelSchedule, NetParams, PlaneCut};
+use crate::refactor::Volume;
 use std::fmt;
 use std::time::Duration;
 
@@ -116,10 +118,22 @@ impl std::error::Error for SpecError {}
 /// The refactored payload: level byte buffers (largest-error-reduction
 /// first) plus the error ladder `eps[i]` = relative L∞ error after
 /// receiving levels `0..=i`.
+///
+/// Two front doors:
+/// * [`Dataset::from_volume`] — the codec path: a raw f32 volume is
+///   progressively encoded against a requested ε ladder; levels become
+///   precision rungs with *measured* ε and sub-level [`PlaneCut`]s.
+/// * [`Dataset::raw`] — the byte-level escape hatch (today's path):
+///   caller-supplied opaque buffers and ε ladder, no codec semantics.
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub levels: Vec<Vec<u8>>,
     pub eps: Vec<f64>,
+    /// Sub-level shed points per level (codec datasets; empty for raw).
+    /// Crate-private: only the codec encoder can establish the cut
+    /// invariants (`LevelSchedule::with_cuts` asserts them), so callers
+    /// read via [`Dataset::cuts`] instead of mutating.
+    pub(crate) cuts: Vec<Vec<PlaneCut>>,
 }
 
 impl Dataset {
@@ -133,19 +147,51 @@ impl Dataset {
         {
             return Err(SpecError::BadEpsilonLadder);
         }
-        Ok(Dataset { levels, eps })
+        let cuts = vec![Vec::new(); levels.len()];
+        Ok(Dataset { levels, eps, cuts })
+    }
+
+    /// Byte-level escape hatch: identical to [`Dataset::new`], named so
+    /// call sites read as the deliberate non-codec path.
+    pub fn raw(levels: Vec<Vec<u8>>, eps: Vec<f64>) -> Result<Dataset, SpecError> {
+        Dataset::new(levels, eps)
+    }
+
+    /// Run `vol` through the `janus::codec` progressive encoder: each ε
+    /// rung of `cfg.ladder` becomes one transfer level whose recorded ε
+    /// is **measured** against the original volume, and every interior
+    /// bitplane-segment boundary becomes a [`PlaneCut`] the Deadline
+    /// contract can shed to.
+    pub fn from_volume(vol: &Volume, cfg: &CodecConfig) -> Result<Dataset, CodecError> {
+        Ok(Dataset::from_encoded(codec::encode(vol, cfg)?))
+    }
+
+    /// Wrap an already-encoded codec container.
+    pub fn from_encoded(enc: Encoded) -> Dataset {
+        let Encoded { rungs, eps, cuts, .. } = enc;
+        let mut dataset =
+            Dataset::new(rungs, eps).expect("codec encoder guarantees a valid ε ladder");
+        dataset.cuts = cuts;
+        dataset
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.levels.iter().map(|l| l.len() as u64).sum()
     }
 
-    /// The model-layer view of this dataset.
+    /// Sub-level plane cuts per level (codec datasets; empty lists for
+    /// [`Dataset::raw`]).
+    pub fn cuts(&self) -> &[Vec<PlaneCut>] {
+        &self.cuts
+    }
+
+    /// The model-layer view of this dataset (plane cuts included).
     pub fn schedule(&self) -> LevelSchedule {
         LevelSchedule::new(
             self.levels.iter().map(|l| l.len() as u64).collect(),
             self.eps.clone(),
         )
+        .with_cuts(self.cuts.clone())
     }
 
     /// Tightest error bound this dataset can achieve (ε of the full
@@ -503,6 +549,25 @@ mod tests {
         assert_eq!(d.total_bytes(), 12);
         assert!((d.finest_eps() - 0.01).abs() < 1e-15);
         assert_eq!(d.schedule().num_levels(), 2);
+    }
+
+    #[test]
+    fn dataset_from_volume_measures_its_ladder() {
+        use crate::refactor::{generate, GrfConfig};
+        let vol = generate(16, &GrfConfig::default(), 5);
+        let cfg = CodecConfig { levels: 3, ladder: vec![8e-3, 4e-4], max_planes: 22 };
+        let d = Dataset::from_volume(&vol, &cfg).unwrap();
+        assert_eq!(d.levels.len(), 2, "one transfer level per ε rung");
+        for (rec, req) in d.eps.iter().zip(&cfg.ladder) {
+            assert!(rec <= req, "recorded {rec} vs requested {req}");
+        }
+        // The schedule view carries the plane cuts along.
+        let sched = d.schedule();
+        assert_eq!(sched.cuts, d.cuts);
+        // The raw escape hatch has no codec semantics.
+        let r = Dataset::raw(vec![vec![0u8; 8]], vec![0.1]).unwrap();
+        assert!(r.cuts.iter().all(|c| c.is_empty()));
+        assert!(Dataset::from_volume(&Volume::zeros(16), &cfg).is_err());
     }
 
     #[test]

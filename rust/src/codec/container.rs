@@ -1,0 +1,524 @@
+//! The codec container format — self-describing progressive segments.
+//!
+//! A codec stream is a sequence of *rungs* (the transfer levels of a
+//! [`crate::api::Dataset`]); each rung is a sequence of *segments*, and
+//! each segment carries one contiguous bitplane range of one lifting
+//! level. Rung 0 additionally opens with a stream header. Every header
+//! is self-describing (level, plane range, shared exponent, coefficient
+//! count, recorded ε) and every payload is CRC32-protected, so a
+//! receiver can decode any prefix of the stream without out-of-band
+//! metadata — the progressive-precision property of PAPER.md §2.2.
+//!
+//! ```text
+//! rung 0: [stream header][segment][segment]…
+//! rung r: [segment][segment]…
+//! segment: JSEG | level | plane_lo | plane_hi | planes_total |
+//!          e_max (i32) | coeff_count (u64) | eps_after (f64) |
+//!          payload_len (u32) | crc32(header ++ payload) |
+//!          payload = [signs iff plane_lo == 0] ++ planes[lo..hi)
+//! ```
+//!
+//! Both CRCs cover their header fields as well as the body: a bit flip
+//! in `e_max`, `eps_after`, or the ε ladder would otherwise silently
+//! corrupt the decode *certificate* (the recorded measured ε), which is
+//! the one thing this container exists to protect.
+//!
+//! `eps_after` is the relative L∞ error **measured at encode time** when
+//! reconstructing from everything up to and including this segment in
+//! stream order — what lets a decoder *report* (not guess) the achieved
+//! error bound of any delivered prefix.
+
+use super::CodecError;
+use crate::util::crc32::Hasher;
+
+/// Magic opening rung 0 of every codec stream.
+pub const STREAM_MAGIC: [u8; 4] = *b"JNSC";
+/// Magic opening every segment.
+pub const SEGMENT_MAGIC: [u8; 4] = *b"JSEG";
+/// Container format version.
+pub const VERSION: u8 = 1;
+/// Stream header size before the per-rung ε ladder (includes the CRC).
+pub const STREAM_HEADER_FIXED: usize = 16;
+/// Serialized segment header size (payload follows).
+pub const SEGMENT_HEADER_LEN: usize = 36;
+/// Largest volume dimension a stream header may declare. Headers come
+/// off the wire, so the decoder must not size allocations (or compute
+/// `d³`) from an unbounded claim: 1024³ f32 (4 GiB, the paper's Nyx
+/// snapshots are 512³) is the ceiling; anything above is rejected as
+/// inconsistent before any geometry arithmetic runs.
+pub const MAX_DIM: usize = 1024;
+
+/// The stream-level metadata at the front of rung 0: geometry plus the
+/// *requested* ε ladder (one entry per rung; the achieved ε of a prefix
+/// comes from the segments' measured `eps_after`, not from here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamHeader {
+    /// Volume dimension (the payload is a `(d, d, d)` f32 volume).
+    pub d: usize,
+    /// Lifting levels in the decomposition.
+    pub levels: usize,
+    /// Requested relative-L∞ ε per rung.
+    pub ladder: Vec<f64>,
+}
+
+impl StreamHeader {
+    pub fn encoded_len(&self) -> usize {
+        STREAM_HEADER_FIXED + 8 * self.ladder.len()
+    }
+
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(&STREAM_MAGIC);
+        out.push(VERSION);
+        out.push(self.levels as u8);
+        out.push(self.ladder.len() as u8);
+        out.push(0); // reserved
+        out.extend_from_slice(&(self.d as u32).to_le_bytes());
+        let crc_at = out.len();
+        out.extend_from_slice(&[0u8; 4]); // CRC patched below
+        for &e in &self.ladder {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        let mut h = Hasher::new();
+        h.update(&out[start..crc_at]);
+        h.update(&out[crc_at + 4..]);
+        let crc = h.finalize();
+        out[crc_at..crc_at + 4].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Parse a stream header; returns the header and the bytes consumed.
+    pub fn decode(bytes: &[u8]) -> Result<(StreamHeader, usize), CodecError> {
+        if bytes.len() < STREAM_HEADER_FIXED {
+            return Err(CodecError::Truncated);
+        }
+        if bytes[0..4] != STREAM_MAGIC {
+            return Err(CodecError::BadMagic);
+        }
+        if bytes[4] != VERSION {
+            return Err(CodecError::UnsupportedVersion(bytes[4]));
+        }
+        let levels = bytes[5] as usize;
+        let rungs = bytes[6] as usize;
+        let d = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes")) as usize;
+        if levels == 0 || rungs == 0 || d == 0 {
+            return Err(CodecError::Inconsistent("empty stream header".into()));
+        }
+        if d > MAX_DIM {
+            return Err(CodecError::Inconsistent(format!(
+                "declared dimension {d} exceeds the {MAX_DIM} ceiling"
+            )));
+        }
+        let need = STREAM_HEADER_FIXED + 8 * rungs;
+        if bytes.len() < need {
+            return Err(CodecError::Truncated);
+        }
+        let crc_stored = u32::from_le_bytes(bytes[12..16].try_into().expect("4 bytes"));
+        let mut h = Hasher::new();
+        h.update(&bytes[..12]);
+        h.update(&bytes[STREAM_HEADER_FIXED..need]);
+        if h.finalize() != crc_stored {
+            return Err(CodecError::CrcMismatch { level: 0, plane_lo: 0 });
+        }
+        let ladder = (0..rungs)
+            .map(|i| {
+                let off = STREAM_HEADER_FIXED + 8 * i;
+                f64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"))
+            })
+            .collect();
+        Ok((StreamHeader { d, levels, ladder }, need))
+    }
+}
+
+/// Metadata of one segment: a contiguous bitplane range of one level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentHeader {
+    /// Lifting level this range belongs to (0 = coarsest approximation).
+    pub level: u8,
+    /// First plane of the range (0 = MSB plane; a range starting at 0
+    /// also carries the level's sign bitmap).
+    pub plane_lo: u8,
+    /// One past the last plane of the range.
+    pub plane_hi: u8,
+    /// Total mantissa planes the level was quantized to (fixes the
+    /// reconstruction scale `2^(e_max − planes_total)`).
+    pub planes_total: u8,
+    /// Shared binary exponent of the level's coefficients.
+    pub e_max: i32,
+    /// Coefficients in the level.
+    pub coeff_count: u64,
+    /// Measured relative L∞ error after applying the stream up to and
+    /// including this segment.
+    pub eps_after: f64,
+}
+
+impl SegmentHeader {
+    /// Bytes per plane (and per sign bitmap): one bit per coefficient.
+    pub fn stride(&self) -> usize {
+        (self.coeff_count as usize).div_ceil(8)
+    }
+
+    /// Payload length implied by the header.
+    pub fn payload_len(&self) -> usize {
+        let signs = if self.plane_lo == 0 { self.stride() } else { 0 };
+        signs + (self.plane_hi - self.plane_lo) as usize * self.stride()
+    }
+
+    fn validate(&self) -> Result<(), CodecError> {
+        // `planes_total` sizes the decoder's zero-padding, so a wire
+        // value beyond the encoder's hard ceiling is a memory-
+        // amplification vector, not a precision claim.
+        if self.planes_total == 0 || self.planes_total > super::MAX_PLANES {
+            return Err(CodecError::Inconsistent(format!(
+                "segment level {} declares {} total planes (max {})",
+                self.level,
+                self.planes_total,
+                super::MAX_PLANES
+            )));
+        }
+        if self.plane_lo >= self.plane_hi || self.plane_hi > self.planes_total {
+            return Err(CodecError::Inconsistent(format!(
+                "segment level {} has empty or out-of-range plane window [{}, {}) of {}",
+                self.level, self.plane_lo, self.plane_hi, self.planes_total
+            )));
+        }
+        if self.coeff_count == 0 || self.coeff_count > (MAX_DIM * MAX_DIM * MAX_DIM) as u64 {
+            return Err(CodecError::Inconsistent(format!(
+                "segment level {} carries an impossible coefficient count {}",
+                self.level, self.coeff_count
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Serialize one segment (header + CRC + payload) onto `out`.
+///
+/// `signs` must be `Some` exactly when `hdr.plane_lo == 0`; `planes`
+/// holds the `[plane_lo, plane_hi)` bitplane slices, each
+/// `hdr.stride()` bytes.
+pub fn write_segment(
+    out: &mut Vec<u8>,
+    hdr: &SegmentHeader,
+    signs: Option<&[u8]>,
+    planes: &[&[u8]],
+) {
+    debug_assert_eq!(signs.is_some(), hdr.plane_lo == 0);
+    debug_assert_eq!(planes.len(), (hdr.plane_hi - hdr.plane_lo) as usize);
+    let seg_start = out.len();
+    out.extend_from_slice(&SEGMENT_MAGIC);
+    out.push(hdr.level);
+    out.push(hdr.plane_lo);
+    out.push(hdr.plane_hi);
+    out.push(hdr.planes_total);
+    out.extend_from_slice(&hdr.e_max.to_le_bytes());
+    out.extend_from_slice(&hdr.coeff_count.to_le_bytes());
+    out.extend_from_slice(&hdr.eps_after.to_le_bytes());
+    out.extend_from_slice(&(hdr.payload_len() as u32).to_le_bytes());
+    let crc_at = out.len();
+    out.extend_from_slice(&[0u8; 4]); // CRC patched below
+    let payload_start = out.len();
+    if let Some(s) = signs {
+        debug_assert_eq!(s.len(), hdr.stride());
+        out.extend_from_slice(s);
+    }
+    for p in planes {
+        debug_assert_eq!(p.len(), hdr.stride());
+        out.extend_from_slice(p);
+    }
+    // CRC over header fields AND payload (see the module docs).
+    let mut h = Hasher::new();
+    h.update(&out[seg_start..crc_at]);
+    h.update(&out[payload_start..]);
+    let crc = h.finalize();
+    out[crc_at..crc_at + 4].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// One parsed segment borrowing its payload from the input buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedSegment<'a> {
+    pub header: SegmentHeader,
+    /// Present iff the range starts at plane 0.
+    pub signs: Option<&'a [u8]>,
+    /// The `[plane_lo, plane_hi)` plane slices, MSB-first order.
+    pub planes: Vec<&'a [u8]>,
+}
+
+/// Parse the segment starting at `bytes[0]`; returns the segment and the
+/// bytes consumed. [`CodecError::Truncated`] means the buffer ends
+/// mid-segment — tolerable at the end of a progressive prefix, fatal
+/// anywhere else (the caller decides).
+pub fn parse_segment(bytes: &[u8]) -> Result<(ParsedSegment<'_>, usize), CodecError> {
+    // Magic before length: 4+ bytes of non-JSEG tail is corruption
+    // (BadMagic), not a truncated segment — a genuine mid-segment cut
+    // always leaves the magic intact.
+    if bytes.len() >= 4 && bytes[0..4] != SEGMENT_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    if bytes.len() < SEGMENT_HEADER_LEN {
+        return Err(CodecError::Truncated);
+    }
+    let header = SegmentHeader {
+        level: bytes[4],
+        plane_lo: bytes[5],
+        plane_hi: bytes[6],
+        planes_total: bytes[7],
+        e_max: i32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes")),
+        coeff_count: u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes")),
+        eps_after: f64::from_le_bytes(bytes[20..28].try_into().expect("8 bytes")),
+    };
+    header.validate()?;
+    let payload_len = u32::from_le_bytes(bytes[28..32].try_into().expect("4 bytes")) as usize;
+    let crc_stored = u32::from_le_bytes(bytes[32..36].try_into().expect("4 bytes"));
+    if payload_len != header.payload_len() {
+        return Err(CodecError::Inconsistent(format!(
+            "segment level {} declares {payload_len} payload bytes, geometry needs {}",
+            header.level,
+            header.payload_len()
+        )));
+    }
+    let end = SEGMENT_HEADER_LEN + payload_len;
+    if bytes.len() < end {
+        return Err(CodecError::Truncated);
+    }
+    let payload = &bytes[SEGMENT_HEADER_LEN..end];
+    let mut h = Hasher::new();
+    h.update(&bytes[..SEGMENT_HEADER_LEN - 4]);
+    h.update(payload);
+    if h.finalize() != crc_stored {
+        return Err(CodecError::CrcMismatch { level: header.level, plane_lo: header.plane_lo });
+    }
+    let stride = header.stride();
+    let (signs, planes_bytes) = if header.plane_lo == 0 {
+        (Some(&payload[..stride]), &payload[stride..])
+    } else {
+        (None, payload)
+    };
+    let planes = planes_bytes.chunks_exact(stride).collect();
+    Ok((ParsedSegment { header, signs, planes }, end))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_header() -> SegmentHeader {
+        SegmentHeader {
+            level: 2,
+            plane_lo: 0,
+            plane_hi: 3,
+            planes_total: 12,
+            e_max: -4,
+            coeff_count: 29, // stride 4 with a ragged tail
+            eps_after: 3.25e-4,
+        }
+    }
+
+    #[test]
+    fn stream_header_roundtrip() {
+        let h = StreamHeader { d: 64, levels: 4, ladder: vec![4e-3, 5e-4, 6e-5] };
+        let mut buf = Vec::new();
+        h.encode_into(&mut buf);
+        // Trailing bytes (the first segment) must not confuse the parse.
+        buf.extend_from_slice(b"JSEGxxxx");
+        let (back, used) = StreamHeader::decode(&buf).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(used, h.encoded_len());
+    }
+
+    #[test]
+    fn stream_header_rejects_garbage() {
+        assert_eq!(StreamHeader::decode(&[0u8; 4]).unwrap_err(), CodecError::Truncated);
+        let mut buf = Vec::new();
+        StreamHeader { d: 8, levels: 2, ladder: vec![0.1] }.encode_into(&mut buf);
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert_eq!(StreamHeader::decode(&bad).unwrap_err(), CodecError::BadMagic);
+        let mut wrong_ver = buf.clone();
+        wrong_ver[4] = 9;
+        assert_eq!(
+            StreamHeader::decode(&wrong_ver).unwrap_err(),
+            CodecError::UnsupportedVersion(9)
+        );
+        // Ladder truncated away.
+        assert_eq!(
+            StreamHeader::decode(&buf[..STREAM_HEADER_FIXED + 3]).unwrap_err(),
+            CodecError::Truncated
+        );
+    }
+
+    #[test]
+    fn absurd_wire_geometry_rejected_before_any_allocation() {
+        // A crafted header claiming a u32-max dimension must be a typed
+        // error, not a d³ overflow or a multi-GB allocation downstream.
+        let mut buf = Vec::new();
+        StreamHeader { d: 8, levels: 2, ladder: vec![0.1] }.encode_into(&mut buf);
+        buf[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            StreamHeader::decode(&buf),
+            Err(CodecError::Inconsistent(_))
+        ));
+        // Just over the ceiling fails; the ceiling itself parses.
+        let mut over = Vec::new();
+        StreamHeader { d: MAX_DIM + 1, levels: 2, ladder: vec![0.1] }.encode_into(&mut over);
+        assert!(StreamHeader::decode(&over).is_err());
+        let mut at = Vec::new();
+        StreamHeader { d: MAX_DIM, levels: 2, ladder: vec![0.1] }.encode_into(&mut at);
+        assert!(StreamHeader::decode(&at).is_ok());
+
+        // Same for a segment claiming an impossible coefficient count.
+        let mut hdr = sample_header();
+        hdr.coeff_count = u64::MAX;
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&SEGMENT_MAGIC);
+        seg.push(hdr.level);
+        seg.push(hdr.plane_lo);
+        seg.push(hdr.plane_hi);
+        seg.push(hdr.planes_total);
+        seg.extend_from_slice(&hdr.e_max.to_le_bytes());
+        seg.extend_from_slice(&hdr.coeff_count.to_le_bytes());
+        seg.extend_from_slice(&hdr.eps_after.to_le_bytes());
+        seg.extend_from_slice(&0u32.to_le_bytes());
+        seg.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(parse_segment(&seg), Err(CodecError::Inconsistent(_))));
+    }
+
+    #[test]
+    fn segment_roundtrip_with_and_without_signs() {
+        let hdr = sample_header();
+        let stride = hdr.stride();
+        let signs = vec![0xA5u8; stride];
+        let planes: Vec<Vec<u8>> = (0..3).map(|i| vec![i as u8 + 1; stride]).collect();
+        let plane_refs: Vec<&[u8]> = planes.iter().map(|p| p.as_slice()).collect();
+        let mut buf = Vec::new();
+        write_segment(&mut buf, &hdr, Some(&signs), &plane_refs);
+        let (seg, used) = parse_segment(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(seg.header, hdr);
+        assert_eq!(seg.signs.unwrap(), signs.as_slice());
+        assert_eq!(seg.planes.len(), 3);
+        for (got, want) in seg.planes.iter().zip(&planes) {
+            assert_eq!(*got, want.as_slice());
+        }
+
+        // A continuation range (plane_lo > 0) has no sign bitmap.
+        let cont = SegmentHeader { plane_lo: 3, plane_hi: 5, ..hdr };
+        let cont_planes: Vec<Vec<u8>> = (0..2).map(|i| vec![0x10 + i as u8; stride]).collect();
+        let cont_refs: Vec<&[u8]> = cont_planes.iter().map(|p| p.as_slice()).collect();
+        let mut buf2 = Vec::new();
+        write_segment(&mut buf2, &cont, None, &cont_refs);
+        let (seg2, _) = parse_segment(&buf2).unwrap();
+        assert!(seg2.signs.is_none());
+        assert_eq!(seg2.planes.len(), 2);
+    }
+
+    #[test]
+    fn segment_crc_catches_payload_corruption() {
+        let hdr = sample_header();
+        let stride = hdr.stride();
+        let signs = vec![0u8; stride];
+        let planes: Vec<Vec<u8>> = (0..3).map(|_| vec![7u8; stride]).collect();
+        let refs: Vec<&[u8]> = planes.iter().map(|p| p.as_slice()).collect();
+        let mut buf = Vec::new();
+        write_segment(&mut buf, &hdr, Some(&signs), &refs);
+        let last = buf.len() - 1;
+        buf[last] ^= 0x40;
+        assert_eq!(
+            parse_segment(&buf).unwrap_err(),
+            CodecError::CrcMismatch { level: 2, plane_lo: 0 }
+        );
+    }
+
+    #[test]
+    fn header_field_corruption_is_detected() {
+        // A flip in a segment's eps_after (header bytes, not payload)
+        // must fail the CRC — the recorded ε IS the certificate.
+        let hdr = sample_header();
+        let stride = hdr.stride();
+        let signs = vec![0x11u8; stride];
+        let planes: Vec<Vec<u8>> = (0..3).map(|_| vec![0x22u8; stride]).collect();
+        let refs: Vec<&[u8]> = planes.iter().map(|p| p.as_slice()).collect();
+        let mut buf = Vec::new();
+        write_segment(&mut buf, &hdr, Some(&signs), &refs);
+        buf[20] ^= 0x01; // inside eps_after
+        assert!(matches!(parse_segment(&buf), Err(CodecError::CrcMismatch { .. })));
+
+        // Same for the stream header's ε ladder.
+        let mut sbuf = Vec::new();
+        StreamHeader { d: 16, levels: 3, ladder: vec![0.1, 0.01] }.encode_into(&mut sbuf);
+        let last = sbuf.len() - 1;
+        sbuf[last] ^= 0x01;
+        assert!(matches!(
+            StreamHeader::decode(&sbuf),
+            Err(CodecError::CrcMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn segment_truncation_is_typed() {
+        let hdr = sample_header();
+        let stride = hdr.stride();
+        let signs = vec![0u8; stride];
+        let planes: Vec<Vec<u8>> = (0..3).map(|_| vec![7u8; stride]).collect();
+        let refs: Vec<&[u8]> = planes.iter().map(|p| p.as_slice()).collect();
+        let mut buf = Vec::new();
+        write_segment(&mut buf, &hdr, Some(&signs), &refs);
+        for cut in [3usize, SEGMENT_HEADER_LEN - 1, SEGMENT_HEADER_LEN + 1, buf.len() - 1] {
+            assert_eq!(
+                parse_segment(&buf[..cut]).unwrap_err(),
+                CodecError::Truncated,
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn short_garbage_tail_is_bad_magic_not_truncation() {
+        // 4..35 bytes of non-JSEG garbage must read as corruption; only
+        // a genuine mid-segment cut (magic intact) is Truncated.
+        assert_eq!(parse_segment(&[0xAAu8; 20]).unwrap_err(), CodecError::BadMagic);
+        assert_eq!(parse_segment(b"JSE").unwrap_err(), CodecError::Truncated);
+        let mut keeps_magic = vec![0u8; 20];
+        keeps_magic[..4].copy_from_slice(&SEGMENT_MAGIC);
+        assert_eq!(parse_segment(&keeps_magic).unwrap_err(), CodecError::Truncated);
+    }
+
+    #[test]
+    fn wire_plane_budget_is_bounded() {
+        // planes_total beyond the encoder ceiling is a decoder zero-pad
+        // amplification vector: typed error, never an allocation.
+        let mut hdr = sample_header();
+        hdr.planes_total = 255;
+        hdr.plane_hi = 3;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&SEGMENT_MAGIC);
+        buf.push(hdr.level);
+        buf.push(hdr.plane_lo);
+        buf.push(hdr.plane_hi);
+        buf.push(hdr.planes_total);
+        buf.extend_from_slice(&hdr.e_max.to_le_bytes());
+        buf.extend_from_slice(&hdr.coeff_count.to_le_bytes());
+        buf.extend_from_slice(&hdr.eps_after.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(parse_segment(&buf), Err(CodecError::Inconsistent(_))));
+    }
+
+    #[test]
+    fn segment_rejects_inconsistent_geometry() {
+        let mut bad = sample_header();
+        bad.plane_hi = bad.plane_lo; // empty window
+        let mut buf = Vec::new();
+        // Build manually: write_segment debug-asserts, so craft bytes.
+        buf.extend_from_slice(&SEGMENT_MAGIC);
+        buf.push(bad.level);
+        buf.push(bad.plane_lo);
+        buf.push(bad.plane_hi);
+        buf.push(bad.planes_total);
+        buf.extend_from_slice(&bad.e_max.to_le_bytes());
+        buf.extend_from_slice(&bad.coeff_count.to_le_bytes());
+        buf.extend_from_slice(&bad.eps_after.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(parse_segment(&buf), Err(CodecError::Inconsistent(_))));
+    }
+}

@@ -1,0 +1,398 @@
+//! Progressive decoder: rebuild a volume from any rung/plane prefix.
+//!
+//! Rungs are pushed in stream order ([`Decoder::push_rung`]); each push
+//! applies the rung's CRC-valid segments to the per-level plane state
+//! and advances the *recorded* achieved ε (the `eps_after` measured at
+//! encode time). [`Decoder::reconstruct`] then inverts the bitplane and
+//! lifting transforms over whatever has arrived: absent levels decode
+//! as zeros (exactly the zero-filled details the lifting reconstruction
+//! expects) and truncated plane budgets decode at reduced precision.
+
+use super::container::{parse_segment, StreamHeader};
+use super::CodecError;
+use crate::refactor::bitplane::BitplaneBlock;
+use crate::refactor::lifting::{level_coeff_counts, try_reconstruct, Volume};
+
+/// What a reconstruction yields.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    /// The reconstructed `(d, d, d)` volume.
+    pub volume: Volume,
+    /// Recorded relative L∞ error of the applied prefix (measured at
+    /// encode time; 1.0 when nothing has been applied).
+    pub achieved_eps: f64,
+    /// Fully applied rungs.
+    pub rungs_applied: usize,
+    /// Contiguous mantissa-plane prefix applied per lifting level.
+    pub planes_used: Vec<u8>,
+}
+
+/// Per-level accumulation state.
+#[derive(Debug, Clone)]
+struct LevelState {
+    e_max: i32,
+    planes_total: u8,
+    coeff_count: usize,
+    /// Contiguous plane prefix applied so far (headers always tracked).
+    applied: u8,
+    /// Sign bitmap — empty in headers-only mode.
+    signs: Vec<u8>,
+    /// Applied planes, MSB-first; empty in headers-only mode.
+    planes: Vec<Vec<u8>>,
+}
+
+/// Progressive codec-stream decoder. See the module docs for the
+/// push/reconstruct protocol.
+#[derive(Debug, Clone)]
+pub struct Decoder {
+    header: Option<StreamHeader>,
+    counts: Vec<usize>,
+    states: Vec<Option<LevelState>>,
+    rungs_applied: usize,
+    segments_applied: usize,
+    achieved_eps: f64,
+    /// When false, payload bytes are validated (CRC) but not stored —
+    /// full metadata at zero copies, no reconstruction.
+    collect: bool,
+}
+
+impl Default for Decoder {
+    fn default() -> Decoder {
+        Decoder::new()
+    }
+}
+
+impl Decoder {
+    pub fn new() -> Decoder {
+        Decoder {
+            header: None,
+            counts: Vec::new(),
+            states: Vec::new(),
+            rungs_applied: 0,
+            segments_applied: 0,
+            achieved_eps: 1.0,
+            collect: true,
+        }
+    }
+
+    /// A decoder that runs every structural/CRC check and tracks the
+    /// full metadata (achieved ε, plane counts, geometry) without
+    /// copying any payload bytes. [`Decoder::reconstruct`] is
+    /// unavailable in this mode; everything else behaves identically —
+    /// a prefix this decoder accepts is exactly one a collecting
+    /// decoder can reconstruct.
+    pub fn headers_only() -> Decoder {
+        Decoder { collect: false, ..Decoder::new() }
+    }
+
+    /// The stream header, once rung 0 has been pushed.
+    pub fn header(&self) -> Option<&StreamHeader> {
+        self.header.as_ref()
+    }
+
+    /// Recorded ε after the last applied segment (1.0 before any).
+    pub fn achieved_eps(&self) -> f64 {
+        if self.segments_applied == 0 { 1.0 } else { self.achieved_eps }
+    }
+
+    pub fn rungs_applied(&self) -> usize {
+        self.rungs_applied
+    }
+
+    pub fn segments_applied(&self) -> usize {
+        self.segments_applied
+    }
+
+    /// Contiguous plane prefix applied per level (empty before rung 0).
+    pub fn planes_used(&self) -> Vec<u8> {
+        self.states
+            .iter()
+            .map(|s| s.as_ref().map_or(0, |st| st.applied))
+            .collect()
+    }
+
+    /// Apply the next rung in stream order (rung 0 must open with the
+    /// stream header). Whole CRC-valid segments are applied; a
+    /// *trailing* truncated segment is tolerated — that is the
+    /// progressive prefix property — but corruption (bad magic, CRC or
+    /// geometry mismatches) is an error. Returns the recorded ε after
+    /// this rung's last applied segment.
+    pub fn push_rung(&mut self, bytes: &[u8]) -> Result<f64, CodecError> {
+        let mut off = 0usize;
+        if self.header.is_none() {
+            let (header, used) = StreamHeader::decode(bytes)?;
+            self.counts = level_coeff_counts(header.d, header.levels)?;
+            self.states = vec![None; header.levels];
+            self.header = Some(header);
+            off = used;
+        } else if self.rungs_applied >= self.header.as_ref().expect("set").ladder.len() {
+            return Err(CodecError::OutOfOrder {
+                expected: self.header.as_ref().expect("set").ladder.len(),
+                got: self.rungs_applied,
+            });
+        }
+        while off < bytes.len() {
+            match parse_segment(&bytes[off..]) {
+                Ok((seg, used)) => {
+                    self.apply_segment(&seg)?;
+                    off += used;
+                }
+                // The tail of a shed (deadline) or truncated prefix.
+                Err(CodecError::Truncated) => break,
+                Err(e) => return Err(e),
+            }
+        }
+        self.rungs_applied += 1;
+        Ok(self.achieved_eps())
+    }
+
+    fn apply_segment(
+        &mut self,
+        seg: &super::container::ParsedSegment<'_>,
+    ) -> Result<(), CodecError> {
+        let h = &seg.header;
+        let li = h.level as usize;
+        let levels = self.states.len();
+        if li >= levels {
+            return Err(CodecError::Inconsistent(format!(
+                "segment level {li} outside the stream's {levels} levels"
+            )));
+        }
+        if h.coeff_count as usize != self.counts[li] {
+            return Err(CodecError::Inconsistent(format!(
+                "level {li} has {} coefficients, geometry needs {}",
+                h.coeff_count, self.counts[li]
+            )));
+        }
+        let collect = self.collect;
+        match &mut self.states[li] {
+            slot @ None => {
+                if h.plane_lo != 0 {
+                    return Err(CodecError::Inconsistent(format!(
+                        "level {li} starts at plane {} (expected 0)",
+                        h.plane_lo
+                    )));
+                }
+                let signs = seg.signs.expect("plane_lo == 0 carries signs");
+                *slot = Some(LevelState {
+                    e_max: h.e_max,
+                    planes_total: h.planes_total,
+                    coeff_count: h.coeff_count as usize,
+                    applied: h.plane_hi,
+                    signs: if collect { signs.to_vec() } else { Vec::new() },
+                    planes: if collect {
+                        seg.planes.iter().map(|p| p.to_vec()).collect()
+                    } else {
+                        Vec::new()
+                    },
+                });
+            }
+            Some(state) => {
+                if state.e_max != h.e_max || state.planes_total != h.planes_total {
+                    return Err(CodecError::Inconsistent(format!(
+                        "level {li} metadata changed mid-stream"
+                    )));
+                }
+                if h.plane_lo != state.applied {
+                    return Err(CodecError::Inconsistent(format!(
+                        "level {li} plane window starts at {} but {} planes are applied",
+                        h.plane_lo, state.applied
+                    )));
+                }
+                state.applied = h.plane_hi;
+                if collect {
+                    state.planes.extend(seg.planes.iter().map(|p| p.to_vec()));
+                }
+            }
+        }
+        self.achieved_eps = h.eps_after;
+        self.segments_applied += 1;
+        Ok(())
+    }
+
+    /// Invert bitplanes + lifting over everything applied so far.
+    /// Unavailable on a [`Decoder::headers_only`] decoder (the payloads
+    /// were deliberately not kept).
+    pub fn reconstruct(&self) -> Result<DecodeOutput, CodecError> {
+        let header = self.header.as_ref().ok_or(CodecError::MissingHeader)?;
+        if !self.collect {
+            return Err(CodecError::Inconsistent(
+                "headers-only decoder holds no payloads to reconstruct from".into(),
+            ));
+        }
+        let bufs: Vec<Vec<f32>> = self
+            .states
+            .iter()
+            .zip(&self.counts)
+            .map(|(state, &count)| match state {
+                Some(st) if !st.planes.is_empty() => {
+                    let avail = st.planes.len() as u8;
+                    let stride = st.coeff_count.div_ceil(8);
+                    let mut plane_bits = st.planes.clone();
+                    while plane_bits.len() < st.planes_total as usize {
+                        plane_bits.push(vec![0u8; stride]);
+                    }
+                    let block = BitplaneBlock {
+                        len: st.coeff_count,
+                        e_max: st.e_max,
+                        planes: st.planes_total,
+                        signs: st.signs.clone(),
+                        plane_bits,
+                    };
+                    block.decode_prefix(avail)
+                }
+                _ => vec![0f32; count],
+            })
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let volume = try_reconstruct(&refs, header.levels, header.levels, header.d)?;
+        Ok(DecodeOutput {
+            volume,
+            achieved_eps: self.achieved_eps(),
+            rungs_applied: self.rungs_applied,
+            planes_used: self.planes_used(),
+        })
+    }
+
+    /// One-shot decode of a delivered rung prefix.
+    pub fn decode(rungs: &[&[u8]]) -> Result<DecodeOutput, CodecError> {
+        let mut dec = Decoder::new();
+        for rung in rungs {
+            dec.push_rung(rung)?;
+        }
+        dec.reconstruct()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encoder::encode;
+    use super::super::{CodecConfig, CodecError};
+    use super::*;
+    use crate::refactor::{generate, GrfConfig};
+
+    fn encoded_fixture() -> (Volume, super::super::Encoded, CodecConfig) {
+        let vol = generate(16, &GrfConfig::default(), 42);
+        let cfg = CodecConfig { levels: 3, ladder: vec![8e-3, 8e-4, 2e-4], max_planes: 22 };
+        let enc = encode(&vol, &cfg).unwrap();
+        (vol, enc, cfg)
+    }
+
+    #[test]
+    fn full_prefix_reaches_recorded_eps() {
+        let (vol, enc, _) = encoded_fixture();
+        let refs: Vec<&[u8]> = enc.rungs.iter().map(|r| r.as_slice()).collect();
+        let out = Decoder::decode(&refs).unwrap();
+        assert_eq!(out.rungs_applied, enc.rungs.len());
+        let last = *enc.eps.last().unwrap();
+        assert!((out.achieved_eps - last).abs() < 1e-15, "reported ε is the recorded one");
+        // The reported ε is *measured*, so the true error matches it.
+        let true_err = vol.linf_rel_error(&out.volume);
+        assert!(true_err <= out.achieved_eps + 1e-12, "{true_err} vs {}", out.achieved_eps);
+    }
+
+    #[test]
+    fn every_rung_prefix_decodes_at_its_recorded_eps() {
+        let (vol, enc, _) = encoded_fixture();
+        for used in 1..=enc.rungs.len() {
+            let refs: Vec<&[u8]> = enc.rungs[..used].iter().map(|r| r.as_slice()).collect();
+            let out = Decoder::decode(&refs).unwrap();
+            assert_eq!(out.rungs_applied, used);
+            assert!((out.achieved_eps - enc.eps[used - 1]).abs() < 1e-15);
+            let true_err = vol.linf_rel_error(&out.volume);
+            assert!(
+                true_err <= out.achieved_eps + 1e-12,
+                "prefix {used}: {true_err} > {}",
+                out.achieved_eps
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_trailing_segment_is_a_progressive_prefix() {
+        let (vol, enc, _) = encoded_fixture();
+        let mut dec = Decoder::new();
+        dec.push_rung(&enc.rungs[0]).unwrap();
+        let full = Decoder::decode(&[&enc.rungs[0]]).unwrap();
+        // Chop the second rung mid-payload: applied segments only.
+        let cut = enc.rungs[1].len() - 5;
+        let eps = dec.push_rung(&enc.rungs[1][..cut]).unwrap();
+        assert!(eps <= enc.eps[0] + 1e-15, "partial rung cannot be worse than rung 1");
+        let out = dec.reconstruct().unwrap();
+        let true_err = vol.linf_rel_error(&out.volume);
+        assert!(true_err <= out.achieved_eps + 1e-12);
+        // And it is no worse than stopping at rung 1 entirely.
+        assert!(out.achieved_eps <= full.achieved_eps + 1e-15);
+    }
+
+    #[test]
+    fn corruption_is_detected_not_absorbed() {
+        let (_, enc, _) = encoded_fixture();
+        // Flip the last byte of rung 0: always inside the final
+        // segment's CRC-protected payload.
+        let mut bad = enc.rungs[0].clone();
+        let idx = bad.len() - 1;
+        bad[idx] ^= 0x10;
+        let mut dec = Decoder::new();
+        let err = dec.push_rung(&bad).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                CodecError::CrcMismatch { .. }
+                    | CodecError::Inconsistent(_)
+                    | CodecError::BadMagic
+            ),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn non_codec_bytes_rejected() {
+        let mut dec = Decoder::new();
+        assert_eq!(dec.push_rung(&[0u8; 64]).unwrap_err(), CodecError::BadMagic);
+        assert_eq!(dec.push_rung(b"JN").unwrap_err(), CodecError::Truncated);
+        assert_eq!(Decoder::new().reconstruct().unwrap_err(), CodecError::MissingHeader);
+    }
+
+    #[test]
+    fn pushing_past_the_ladder_is_out_of_order() {
+        let (_, enc, _) = encoded_fixture();
+        let mut dec = Decoder::new();
+        for r in &enc.rungs {
+            dec.push_rung(r).unwrap();
+        }
+        assert!(matches!(
+            dec.push_rung(&enc.rungs[0]).unwrap_err(),
+            CodecError::OutOfOrder { .. }
+        ));
+    }
+
+    #[test]
+    fn headers_only_mode_tracks_identical_metadata_without_payloads() {
+        let (_, enc, _) = encoded_fixture();
+        let mut full = Decoder::new();
+        let mut light = Decoder::headers_only();
+        for rung in &enc.rungs {
+            let a = full.push_rung(rung).unwrap();
+            let b = light.push_rung(rung).unwrap();
+            assert!((a - b).abs() < 1e-18, "identical recorded ε");
+        }
+        assert_eq!(full.planes_used(), light.planes_used());
+        assert_eq!(full.segments_applied(), light.segments_applied());
+        assert_eq!(full.rungs_applied(), light.rungs_applied());
+        assert_eq!(full.header(), light.header());
+        assert!(full.reconstruct().is_ok());
+        assert!(
+            matches!(light.reconstruct(), Err(CodecError::Inconsistent(_))),
+            "headers-only cannot reconstruct"
+        );
+    }
+
+    #[test]
+    fn empty_decoder_state_reports_unit_eps() {
+        let dec = Decoder::new();
+        assert!((dec.achieved_eps() - 1.0).abs() < 1e-15);
+        assert_eq!(dec.rungs_applied(), 0);
+        assert!(dec.planes_used().is_empty());
+    }
+}

@@ -1,0 +1,327 @@
+//! Encoder + error planner: volume → rungs of CRC'd plane segments.
+//!
+//! The planner maps the requested relative-L∞ ε ladder to per-level
+//! plane counts. Seeding uses the bitplane truncation bound — a level
+//! decoded with `b` of its planes is off by at most `2^(e_max − b)` per
+//! coefficient, amplified by at most `4×` per inverse 3-D lifting step —
+//! then every rung is **verified by measurement** against the original
+//! volume, bumping the worst-residual level until the measured ε meets
+//! the request. The recorded ε of every rung (and of every interior
+//! segment boundary, the [`PlaneCut`]s the Deadline contract sheds at)
+//! is therefore a measured bound, not a model estimate.
+
+use super::container::{SegmentHeader, StreamHeader};
+use super::{CodecConfig, CodecError};
+use crate::model::params::PlaneCut;
+use crate::refactor::bitplane::BitplaneBlock;
+use crate::refactor::lifting::{try_decompose, try_reconstruct, Volume};
+
+/// Floor for recorded ε values (a `Dataset` ladder must stay in (0, 1]).
+const EPS_FLOOR: f64 = 1e-12;
+
+/// The serialized progressive container plus its measured metadata.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    /// Volume dimension.
+    pub d: usize,
+    /// Lifting levels `L`.
+    pub levels: usize,
+    /// One byte buffer per ε rung — the transfer levels of a
+    /// [`crate::api::Dataset`]. Rung 0 opens with the stream header.
+    pub rungs: Vec<Vec<u8>>,
+    /// Measured relative L∞ error after each rung; strictly decreasing,
+    /// each at or below its requested ladder entry.
+    pub eps: Vec<f64>,
+    /// Plane counts per rung per level (`planes[r][l]`), cumulative.
+    pub planes: Vec<Vec<u8>>,
+    /// Interior segment boundaries per rung: byte offsets into the rung
+    /// at which a prefix stays decodable, with the measured ε there —
+    /// the bitplane-granularity shed points for the Deadline contract.
+    pub cuts: Vec<Vec<PlaneCut>>,
+}
+
+impl Encoded {
+    /// Total container bytes across all rungs.
+    pub fn total_bytes(&self) -> u64 {
+        self.rungs.iter().map(|r| r.len() as u64).sum()
+    }
+
+    /// Bytes of the raw f32 volume the container encodes.
+    pub fn raw_bytes(&self) -> u64 {
+        (self.d * self.d * self.d * 4) as u64
+    }
+}
+
+struct LevelCtx {
+    block: BitplaneBlock,
+    max_abs: f32,
+    /// Conservative L∞ amplification of this level's coefficient error
+    /// through the inverse lifting chain (4× per 3-D step).
+    amp: f64,
+}
+
+/// Encode `vol` against the config's ε ladder. Fails with a typed error
+/// on unsupported shapes, degenerate volumes, or rungs the plane budget
+/// cannot reach.
+pub fn encode(vol: &Volume, cfg: &CodecConfig) -> Result<Encoded, CodecError> {
+    cfg.validate()?;
+    if vol.data.iter().any(|v| !v.is_finite()) {
+        return Err(CodecError::BadConfig("volume values must be finite"));
+    }
+    let den = vol.data.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    if den == 0.0 {
+        return Err(CodecError::BadConfig(
+            "an all-zero volume has no relative error scale",
+        ));
+    }
+    let l = cfg.levels;
+    let coeffs = try_decompose(vol, l)?;
+    let ctxs: Vec<LevelCtx> = coeffs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let max_abs = c.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            // The coarse buffer passes through all L−1 inverse steps;
+            // detail buffer i enters at step i and passes through the
+            // remaining L−i.
+            let steps = if i == 0 { l - 1 } else { l - i };
+            LevelCtx {
+                block: BitplaneBlock::encode(c, cfg.max_planes),
+                max_abs,
+                amp: 4f64.powi(steps as i32),
+            }
+        })
+        .collect();
+
+    // Measured relative L∞ error of a plane-count vector (0 = absent).
+    let measure = |b: &[u8]| -> Result<f64, CodecError> {
+        let bufs: Vec<Vec<f32>> = ctxs
+            .iter()
+            .zip(b)
+            .map(|(ctx, &bi)| {
+                if bi == 0 {
+                    vec![0f32; ctx.block.len]
+                } else {
+                    ctx.block.decode_prefix(bi)
+                }
+            })
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let rec = try_reconstruct(&refs, l, l, vol.d)?;
+        Ok(vol.linf_rel_error(&rec))
+    };
+
+    // Add one plane to the level with the largest residual error bound.
+    let bump = |b: &mut [u8]| -> bool {
+        let mut best = None;
+        let mut best_residual = f64::NEG_INFINITY;
+        for (i, ctx) in ctxs.iter().enumerate() {
+            if ctx.max_abs == 0.0 || b[i] >= cfg.max_planes {
+                continue;
+            }
+            let residual = ctx.amp * (2f64).powi(ctx.block.e_max - b[i] as i32);
+            if residual > best_residual {
+                best_residual = residual;
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                b[i] += 1;
+                true
+            }
+            None => false,
+        }
+    };
+
+    // Theory seed: planes so each level's amplified truncation error
+    // stays under an equal share of the rung's absolute budget.
+    let seed = |eps_req: f64, prev: &[u8]| -> Vec<u8> {
+        let budget = eps_req * den as f64 / l as f64;
+        ctxs.iter()
+            .enumerate()
+            .map(|(i, ctx)| {
+                if ctx.max_abs == 0.0 {
+                    return prev[i];
+                }
+                let need = ctx.block.e_max as f64 - (budget / ctx.amp).log2();
+                (need.ceil().clamp(0.0, cfg.max_planes as f64) as u8).max(prev[i])
+            })
+            .collect()
+    };
+
+    let mut prev_b = vec![0u8; l];
+    let mut prev_eps = 1.0f64;
+    let mut rungs = Vec::with_capacity(cfg.ladder.len());
+    let mut eps_rec = Vec::with_capacity(cfg.ladder.len());
+    let mut planes_plan = Vec::with_capacity(cfg.ladder.len());
+    let mut cuts_all = Vec::with_capacity(cfg.ladder.len());
+
+    for (r, &eps_req) in cfg.ladder.iter().enumerate() {
+        let mut b = seed(eps_req, &prev_b);
+        if b == prev_b && !bump(&mut b) {
+            return Err(CodecError::UnachievableEps { rung: r, requested: eps_req, best: prev_eps });
+        }
+        let mut measured = measure(&b)?;
+        // Verify against the original; the rung must beat both its
+        // request and the previous rung (the Dataset ladder is strict).
+        while !(measured <= eps_req && measured < prev_eps) {
+            if !bump(&mut b) {
+                return Err(CodecError::UnachievableEps {
+                    rung: r,
+                    requested: eps_req,
+                    best: measured,
+                });
+            }
+            measured = measure(&b)?;
+        }
+        let measured = measured.max(EPS_FLOOR);
+        if measured >= prev_eps {
+            // Only reachable when an earlier rung already hit the floor.
+            return Err(CodecError::UnachievableEps { rung: r, requested: eps_req, best: measured });
+        }
+
+        // Serialize the rung: one segment per level that gained planes,
+        // coarse level first, each stamped with the measured ε of the
+        // stream prefix ending at it.
+        let mut bytes = Vec::new();
+        if r == 0 {
+            StreamHeader { d: vol.d, levels: l, ladder: cfg.ladder.clone() }
+                .encode_into(&mut bytes);
+        }
+        let new_levels: Vec<usize> = (0..l).filter(|&i| b[i] > prev_b[i]).collect();
+        let mut cuts = Vec::new();
+        let mut cur = prev_b.clone();
+        let mut last_boundary_eps = prev_eps;
+        for (si, &i) in new_levels.iter().enumerate() {
+            cur[i] = b[i];
+            let last = si + 1 == new_levels.len();
+            let eps_after =
+                if last { measured } else { measure(&cur)?.max(EPS_FLOOR) };
+            let ctx = &ctxs[i];
+            let hdr = SegmentHeader {
+                level: i as u8,
+                plane_lo: prev_b[i],
+                plane_hi: b[i],
+                planes_total: ctx.block.planes,
+                e_max: ctx.block.e_max,
+                coeff_count: ctx.block.len as u64,
+                eps_after,
+            };
+            let plane_refs: Vec<&[u8]> = ctx.block.plane_bits
+                [prev_b[i] as usize..b[i] as usize]
+                .iter()
+                .map(|p| p.as_slice())
+                .collect();
+            let signs =
+                if prev_b[i] == 0 { Some(ctx.block.signs.as_slice()) } else { None };
+            super::container::write_segment(&mut bytes, &hdr, signs, &plane_refs);
+            // An interior boundary is a usable shed point only if it
+            // strictly improves on the previous boundary and is still
+            // strictly worse than delivering the whole rung.
+            if !last && eps_after < last_boundary_eps && eps_after > measured {
+                cuts.push(PlaneCut { bytes: bytes.len() as u64, eps: eps_after });
+                last_boundary_eps = eps_after;
+            }
+        }
+        rungs.push(bytes);
+        eps_rec.push(measured);
+        planes_plan.push(b.clone());
+        cuts_all.push(cuts);
+        prev_b = b;
+        prev_eps = measured;
+    }
+
+    Ok(Encoded { d: vol.d, levels: l, rungs, eps: eps_rec, planes: planes_plan, cuts: cuts_all })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::refactor::{generate, GrfConfig};
+
+    #[test]
+    fn recorded_ladder_meets_every_request() {
+        let vol = generate(32, &GrfConfig::default(), 7);
+        let cfg = CodecConfig { levels: 4, ladder: vec![4e-3, 5e-4, 8e-5], max_planes: 24 };
+        let enc = encode(&vol, &cfg).unwrap();
+        assert_eq!(enc.rungs.len(), 3);
+        assert_eq!(enc.eps.len(), 3);
+        for (rec, req) in enc.eps.iter().zip(&cfg.ladder) {
+            assert!(rec <= req, "recorded {rec} exceeds requested {req}");
+            assert!(*rec > 0.0);
+        }
+        assert!(enc.eps.windows(2).all(|w| w[0] > w[1]), "strict ladder: {:?}", enc.eps);
+        // Plane counts are cumulative and never shrink.
+        for r in 1..enc.planes.len() {
+            for (a, b) in enc.planes[r - 1].iter().zip(&enc.planes[r]) {
+                assert!(a <= b);
+            }
+        }
+    }
+
+    #[test]
+    fn container_is_smaller_than_raw_f32() {
+        let vol = generate(32, &GrfConfig::default(), 8);
+        let cfg = CodecConfig::default();
+        let enc = encode(&vol, &cfg).unwrap();
+        assert!(
+            enc.total_bytes() < enc.raw_bytes(),
+            "{} vs raw {}",
+            enc.total_bytes(),
+            enc.raw_bytes()
+        );
+    }
+
+    #[test]
+    fn cuts_sit_strictly_inside_their_rung() {
+        let vol = generate(32, &GrfConfig::default(), 9);
+        let cfg = CodecConfig { levels: 4, ladder: vec![4e-3, 2e-4], max_planes: 24 };
+        let enc = encode(&vol, &cfg).unwrap();
+        for (r, cuts) in enc.cuts.iter().enumerate() {
+            let rung_len = enc.rungs[r].len() as u64;
+            let upper = if r == 0 { 1.0 } else { enc.eps[r - 1] };
+            let mut last_bytes = 0u64;
+            let mut last_eps = upper;
+            for cut in cuts {
+                assert!(cut.bytes > last_bytes && cut.bytes < rung_len);
+                assert!(cut.eps < last_eps && cut.eps > enc.eps[r]);
+                last_bytes = cut.bytes;
+                last_eps = cut.eps;
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        let zero = Volume::zeros(16);
+        assert!(matches!(
+            encode(&zero, &CodecConfig::default()),
+            Err(CodecError::BadConfig(_))
+        ));
+        let mut nan = generate(16, &GrfConfig::default(), 1);
+        nan.data[0] = f32::NAN;
+        assert!(matches!(
+            encode(&nan, &CodecConfig::default()),
+            Err(CodecError::BadConfig(_))
+        ));
+        // Odd dimension: typed shape error, not a panic.
+        let odd = generate(16, &GrfConfig::default(), 2);
+        let cfg = CodecConfig { levels: 6, ..CodecConfig::default() }; // 16 / 2^5 == 0
+        assert!(matches!(encode(&odd, &cfg), Err(CodecError::Shape(_))));
+    }
+
+    #[test]
+    fn unachievable_rung_is_a_typed_error() {
+        let vol = generate(16, &GrfConfig::default(), 3);
+        // One plane cannot reach 1e-9.
+        let cfg = CodecConfig { levels: 2, ladder: vec![1e-9], max_planes: 1 };
+        match encode(&vol, &cfg) {
+            Err(CodecError::UnachievableEps { rung: 0, requested, best }) => {
+                assert!((requested - 1e-9).abs() < 1e-24);
+                assert!(best > 1e-9);
+            }
+            other => panic!("expected UnachievableEps, got {other:?}"),
+        }
+    }
+}

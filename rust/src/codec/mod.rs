@@ -1,0 +1,185 @@
+//! # `janus::codec` — the end-to-end error-bounded progressive codec
+//!
+//! The paper's headline claim (§2.2, abstract) is that a transfer can
+//! *balance transmission time and accuracy* by combining erasure coding
+//! with error-bounded lossy compression. This module closes the gap
+//! between the raw refactoring primitives (`refactor::{lifting,
+//! bitplane}`) and the transfer facade: it turns an f32 volume into a
+//! progressive, self-describing byte stream whose prefixes decode at
+//! known, *measured* error bounds — and back.
+//!
+//! Pipeline (one direction):
+//!
+//! ```text
+//! Volume (d³ f32)
+//!   │ refactor::try_decompose           (L lifting levels)
+//!   ▼
+//! coefficient buffers ──BitplaneBlock::encode──▶ sign + mantissa planes
+//!   │
+//!   │ planner: requested ε ladder → per-level plane counts via the
+//!   │ 2^(e_max − b) bound, then verified by measurement (the encoder
+//!   │ holds the original, so every recorded ε is measured, not modeled)
+//!   ▼
+//! rungs (one per ε rung) of CRC'd segments   ──▶ api::Dataset levels
+//!   ▼                                             (→ FTGs → fragments)
+//! Decoder::push_rung × delivered prefix ──▶ Volume + achieved ε
+//! ```
+//!
+//! * [`encode`] / [`Encoded`] — build the container from a volume.
+//! * [`Decoder`] / [`DecodeOutput`] — progressive reconstruction from
+//!   any rung/plane prefix, reporting the recorded achieved ε.
+//! * [`container`] — the segment wire format.
+//! * The facade integration lives in `api` ([`crate::api::Dataset::from_volume`],
+//!   `TransferEvent::LevelDecoded`, `ReceiveSummary::decode_volume`).
+
+pub mod container;
+pub mod decoder;
+pub mod encoder;
+
+pub use container::{ParsedSegment, SegmentHeader, StreamHeader};
+pub use decoder::{DecodeOutput, Decoder};
+pub use encoder::{encode, Encoded};
+
+use crate::refactor::ShapeError;
+use std::fmt;
+
+/// How many mantissa planes [`crate::refactor::BitplaneBlock`] accepts.
+pub const MAX_PLANES: u8 = 30;
+
+/// Everything that can go wrong encoding or decoding a codec stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecError {
+    /// The volume shape cannot go through the lifting pipeline.
+    Shape(ShapeError),
+    /// Invalid [`CodecConfig`] (empty/non-decreasing ladder, bad planes).
+    BadConfig(&'static str),
+    /// The requested ε rung cannot be met even at full precision.
+    UnachievableEps { rung: usize, requested: f64, best: f64 },
+    /// Bytes do not start with the codec (or segment) magic.
+    BadMagic,
+    /// Container version this build does not understand.
+    UnsupportedVersion(u8),
+    /// Bytes end mid-header or mid-payload (acceptable only as the tail
+    /// of a progressive prefix).
+    Truncated,
+    /// A segment's CRC32 does not match its payload.
+    CrcMismatch { level: u8, plane_lo: u8 },
+    /// Self-contradictory metadata (geometry, plane windows, lengths).
+    Inconsistent(String),
+    /// Rungs must be pushed to the decoder in stream order.
+    OutOfOrder { expected: usize, got: usize },
+    /// Decoder operation that needs the stream header before rung 0.
+    MissingHeader,
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Shape(e) => write!(f, "codec: {e}"),
+            CodecError::BadConfig(why) => write!(f, "codec: bad config: {why}"),
+            CodecError::UnachievableEps { rung, requested, best } => write!(
+                f,
+                "codec: rung {rung} requests eps {requested:.3e} but full precision reaches only {best:.3e}"
+            ),
+            CodecError::BadMagic => write!(f, "codec: not a codec stream (bad magic)"),
+            CodecError::UnsupportedVersion(v) => {
+                write!(f, "codec: unsupported container version {v}")
+            }
+            CodecError::Truncated => write!(f, "codec: bytes end mid-segment"),
+            CodecError::CrcMismatch { level, plane_lo } => write!(
+                f,
+                "codec: CRC mismatch in segment (level {level}, plane {plane_lo})"
+            ),
+            CodecError::Inconsistent(why) => write!(f, "codec: inconsistent container: {why}"),
+            CodecError::OutOfOrder { expected, got } => {
+                write!(f, "codec: rung {got} pushed, decoder expects rung {expected}")
+            }
+            CodecError::MissingHeader => write!(f, "codec: stream header (rung 0) not seen yet"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+impl From<ShapeError> for CodecError {
+    fn from(e: ShapeError) -> CodecError {
+        CodecError::Shape(e)
+    }
+}
+
+/// Encoder parameters: lifting depth, the requested ε ladder (one rung
+/// per entry, strictly decreasing), and the quantization plane budget.
+#[derive(Debug, Clone)]
+pub struct CodecConfig {
+    /// Lifting levels `L` (the volume dimension must divide `2^(L−1)`).
+    pub levels: usize,
+    /// Requested relative-L∞ ε per rung, strictly decreasing, each in
+    /// (0, 1). The encoder guarantees the *measured* ε of every rung is
+    /// at or below its request (or fails with
+    /// [`CodecError::UnachievableEps`]).
+    pub ladder: Vec<f64>,
+    /// Mantissa planes per level (1..=[`MAX_PLANES`]); the precision
+    /// ceiling of the whole stream.
+    pub max_planes: u8,
+}
+
+impl Default for CodecConfig {
+    fn default() -> Self {
+        CodecConfig { levels: 3, ladder: vec![4e-3, 5e-4, 5e-5], max_planes: 24 }
+    }
+}
+
+impl CodecConfig {
+    pub(crate) fn validate(&self) -> Result<(), CodecError> {
+        if self.levels == 0 {
+            return Err(CodecError::BadConfig("at least one lifting level required"));
+        }
+        if self.levels > 250 {
+            return Err(CodecError::BadConfig("lifting levels must fit a u8"));
+        }
+        if self.max_planes == 0 || self.max_planes > MAX_PLANES {
+            return Err(CodecError::BadConfig("max_planes must be 1..=30"));
+        }
+        if self.ladder.is_empty() || self.ladder.len() > 255 {
+            return Err(CodecError::BadConfig("ladder needs 1..=255 rungs"));
+        }
+        if self
+            .ladder
+            .iter()
+            .any(|&e| !e.is_finite() || e <= 0.0 || e >= 1.0)
+            || self.ladder.windows(2).any(|w| w[0] <= w[1])
+        {
+            return Err(CodecError::BadConfig(
+                "ladder must be strictly decreasing with every eps in (0, 1)",
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        assert!(CodecConfig::default().validate().is_ok());
+        let bad = CodecConfig { levels: 0, ..CodecConfig::default() };
+        assert!(matches!(bad.validate(), Err(CodecError::BadConfig(_))));
+        let bad = CodecConfig { max_planes: 31, ..CodecConfig::default() };
+        assert!(matches!(bad.validate(), Err(CodecError::BadConfig(_))));
+        let bad = CodecConfig { ladder: vec![], ..CodecConfig::default() };
+        assert!(matches!(bad.validate(), Err(CodecError::BadConfig(_))));
+        let bad = CodecConfig { ladder: vec![1e-3, 1e-3], ..CodecConfig::default() };
+        assert!(matches!(bad.validate(), Err(CodecError::BadConfig(_))));
+        let bad = CodecConfig { ladder: vec![1.5], ..CodecConfig::default() };
+        assert!(matches!(bad.validate(), Err(CodecError::BadConfig(_))));
+    }
+
+    #[test]
+    fn shape_errors_convert() {
+        let e: CodecError = ShapeError::ZeroLevels.into();
+        assert!(matches!(e, CodecError::Shape(ShapeError::ZeroLevels)));
+        assert!(format!("{e}").contains("lifting"));
+    }
+}

@@ -12,8 +12,8 @@ use super::packet::{encode_fragment_into, validate_fragment_size, FragmentHeader
 use crate::api::observer::{emit, EventSink};
 use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
-use crate::model::error_model::optimize_deadline_paper;
-use crate::model::params::{LevelSchedule, NetParams};
+use crate::model::error_model::optimize_deadline_bitplane;
+use crate::model::params::{LevelSchedule, NetParams, PlaneCut};
 use crate::model::time_model::optimize_parity;
 use crate::transport::channel::Datagram;
 use crate::util::err::{Context, Result};
@@ -34,6 +34,10 @@ pub struct SenderConfig {
     pub initial_lambda: f64,
     /// Abort the transfer after this much wall time.
     pub max_duration: Duration,
+    /// Sub-level [`PlaneCut`]s per level (codec datasets; empty = whole-
+    /// level granularity). Lets the Deadline contract shed the final
+    /// level to a decodable bitplane prefix instead of dropping it.
+    pub plane_cuts: Vec<Vec<PlaneCut>>,
 }
 
 /// What the sender did.
@@ -90,22 +94,37 @@ pub(crate) fn transfer_sender(
     let n = cfg.net.n;
     let s = cfg.net.s;
     validate_fragment_size(s)?;
-    let sched = LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec());
+    let sched = LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec())
+        .with_cuts(cfg.plane_cuts.clone());
 
-    // Contract-dependent level count and plan.
+    // Contract-dependent level count and plan. The Deadline contract may
+    // shed the final level to a decodable plane-prefix (codec datasets
+    // carry `plane_cuts`), so each level also gets a byte limit and a
+    // manifest ε: full levels keep theirs, a partial level advertises the
+    // cut's measured ε and its truncated size.
+    let mut limits: Vec<usize> = levels.iter().map(|l| l.len()).collect();
+    let mut manifest_eps = eps.to_vec();
     let (send_levels, deadline) = match cfg.contract {
         Contract::Fidelity(bound) => {
-            let l = sched
-                .levels_for_error_bound(bound)
-                .ok_or_else(|| anyhow!("error bound {bound} unachievable: ε_L = {}", eps[eps.len() - 1]))?;
+            let l = sched.levels_for_error_bound(bound).ok_or_else(|| {
+                anyhow!("error bound {bound} unachievable: ε_L = {}", eps[eps.len() - 1])
+            })?;
             (l, None)
         }
         Contract::BestEffort => (levels.len(), None),
         Contract::Deadline(tau) => {
             let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
-            let opt = optimize_deadline_paper(&p, &sched, tau)
+            let plan = optimize_deadline_bitplane(&p, &sched, tau)
                 .ok_or_else(|| anyhow!("deadline {tau}s infeasible for this schedule"))?;
-            (opt.levels, Some((tau, opt.m)))
+            let mut m = plan.base.m.clone();
+            let mut send = plan.base.levels;
+            if let Some((li, cut)) = plan.partial {
+                limits[li] = cut.bytes as usize;
+                manifest_eps[li] = cut.eps;
+                m.push(0); // partial level ships unprotected (§5.2.3)
+                send = li + 1;
+            }
+            (send, Some((tau, m)))
         }
     };
 
@@ -119,7 +138,7 @@ pub(crate) fn transfer_sender(
         n: n as u8,
         s: s as u32,
         streams: 1,
-        levels: (0..send_levels).map(|i| (levels[i].len() as u64, eps[i])).collect(),
+        levels: (0..send_levels).map(|i| (limits[i] as u64, manifest_eps[i])).collect(),
         contract: if cfg.contract.retransmits() { 0 } else { 1 },
     });
     let mut acked = false;
@@ -192,9 +211,12 @@ pub(crate) fn transfer_sender(
             }
 
             'levels: for (li, level_bytes) in levels_ref.iter().enumerate().take(send_levels) {
+                // Deadline shedding may cap the level at a plane-cut
+                // byte prefix; everything else sends the full buffer.
+                let limit = limits[li].min(level_bytes.len());
                 let mut offset = 0usize;
                 let mut ftg_id = 0u32;
-                let mut remaining = level_bytes.len();
+                let mut remaining = limit;
                 while remaining > 0 {
                     // Adapt on fresh λ (Alg. 1 path; Alg. 2 re-solve of the
                     // remaining levels happens in the tx thread via plan
@@ -232,8 +254,8 @@ pub(crate) fn transfer_sender(
                     // place.
                     let mut arena = FtgArena::new(k as u8, m as u8, s);
                     for i in 0..k {
-                        let lo = offset.min(level_bytes.len());
-                        let hi = (offset + s).min(level_bytes.len());
+                        let lo = offset.min(limit);
+                        let hi = (offset + s).min(limit);
                         arena.slot_mut(i)[..hi - lo].copy_from_slice(&level_bytes[lo..hi]);
                         offset += s;
                         remaining = remaining.saturating_sub(s);

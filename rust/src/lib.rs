@@ -11,11 +11,15 @@
 //!
 //! The public entry point is the [`api`] facade: build a
 //! [`api::TransferSpec`], hand an [`api::Endpoint`] a transport, and run
-//! `send`/`receive` (or [`api::run_pair`] in-process). See `DESIGN.md`
-//! for the module inventory and `EXPERIMENTS.md` for the reproduced
-//! tables/figures.
+//! `send`/`receive` (or [`api::run_pair`] in-process). Raw f32 volumes
+//! enter through the [`codec`] progressive encoder
+//! ([`api::Dataset::from_volume`]), which maps a requested ε ladder to
+//! bitplane-truncated precision rungs and lets receivers report the
+//! achieved error bound. See `DESIGN.md` for the module inventory and
+//! `EXPERIMENTS.md` for the reproduced tables/figures.
 
 pub mod api;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod erasure;

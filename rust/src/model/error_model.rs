@@ -10,7 +10,7 @@
 //! Eq. 12 uses the full Eq. 9 (`t + (n·ΣN_j − 1)/r ≤ τ`); the paper's
 //! display drops the `n`.
 
-use super::params::{LevelSchedule, NetParams};
+use super::params::{LevelSchedule, NetParams, PlaneCut};
 use super::prob::p_unrecoverable_table;
 
 /// Per-level configuration chosen by the Eq. 12 solver.
@@ -226,6 +226,61 @@ pub fn optimize_deadline_paper(
     best
 }
 
+/// Alg. 2 extended to *bitplane* granularity: the whole-level Eq. 12
+/// solve plus, when the schedule carries codec [`PlaneCut`]s, the
+/// largest plane-prefix of the first excluded level that still fits the
+/// leftover deadline budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitplaneDeadlinePlan {
+    /// The whole-level optimum ([`optimize_deadline_paper`]).
+    pub base: DeadlineOpt,
+    /// `(level, cut)` when a plane-prefix of level `base.levels` fits
+    /// in the remaining budget; the partial level ships with `m = 0`.
+    pub partial: Option<(usize, PlaneCut)>,
+}
+
+impl BitplaneDeadlinePlan {
+    /// ε of the full plan (the partial cut's measured ε when present).
+    pub fn planned_eps(&self, sched: &LevelSchedule) -> f64 {
+        match &self.partial {
+            Some((_, cut)) => cut.eps,
+            None => sched.eps_with_levels(self.base.levels),
+        }
+    }
+}
+
+/// Eq. 12 at bitplane granularity. Solves the paper's whole-level model
+/// first, then spends the deadline slack on a decodable plane-prefix of
+/// the next level (chosen from the schedule's [`PlaneCut`]s, sent with
+/// `m = 0` — the Eq. 12 optima leave the final, largest level
+/// unprotected anyway, see §5.2.3). Schedules without cuts degrade to
+/// exactly [`optimize_deadline_paper`].
+pub fn optimize_deadline_bitplane(
+    params: &NetParams,
+    sched: &LevelSchedule,
+    tau: f64,
+) -> Option<BitplaneDeadlinePlan> {
+    let base = optimize_deadline_paper(params, sched, tau)?;
+    let next = base.levels;
+    let mut partial = None;
+    if next < sched.num_levels() {
+        let left = tau - base.time;
+        if left > 0.0 {
+            // With m = 0 every fragment is data: the slack buys
+            // floor(left·r) fragments of s bytes each, and any byte
+            // prefix B needs ceil(B/s) ≤ floor(left·r) fragments.
+            let frags = (left * params.r).floor();
+            if frags >= 1.0 {
+                let budget_bytes = (frags as u64).saturating_mul(params.s as u64);
+                if let Some(cut) = sched.best_cut_within(next, budget_bytes) {
+                    partial = Some((next, cut));
+                }
+            }
+        }
+    }
+    Some(BitplaneDeadlinePlan { base, partial })
+}
+
 /// [`optimize_deadline_coordinate_with`] using the corrected Eq. 11.
 pub fn optimize_deadline_coordinate(
     params: &NetParams,
@@ -344,10 +399,10 @@ mod tests {
     fn prob_partition_sums_to_one() {
         // Replace ε_i with 1 everywhere: expected "error" must then be
         // exactly 1 regardless of p — i.e. branch probabilities partition.
-        let ones = LevelSchedule {
-            sizes: vec![1 << 20, 2 << 20, 3 << 20],
-            eps: vec![0.3, 0.2, 0.1], // unused below
-        };
+        let ones = LevelSchedule::new(
+            vec![1 << 20, 2 << 20, 3 << 20],
+            vec![0.3, 0.2, 0.1], // unused below
+        );
         struct Fake;
         let p: [f64; 3] = [0.02, 0.05, 0.4];
         let n: [f64; 3] = [10.0, 20.0, 30.0];
@@ -483,6 +538,51 @@ mod tests {
         assert!((corrected - s.eps[2]).abs() / s.eps[2] < 0.05, "corrected={corrected}");
         // The printed formula drops the level-4-failure branch entirely.
         assert!(printed < corrected, "printed={printed} corrected={corrected}");
+    }
+
+    #[test]
+    fn bitplane_plan_degrades_to_whole_levels_without_cuts() {
+        let (p, s) = setup(383.0);
+        let tau = 401.11;
+        let plan = optimize_deadline_bitplane(&p, &s, tau).unwrap();
+        assert_eq!(plan.base, optimize_deadline_paper(&p, &s, tau).unwrap());
+        assert!(plan.partial.is_none(), "no cuts ⇒ whole-level shedding");
+        assert!((plan.planned_eps(&s) - s.eps_with_levels(plan.base.levels)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn bitplane_plan_spends_slack_on_a_plane_prefix() {
+        let p = NetParams { t: 0.001, r: 1000.0, lambda: 0.0, n: 32, s: 1024 };
+        // Level 2 is too big to finish by τ, but carries two cuts.
+        let sched = LevelSchedule::new(vec![32 * 1024, 512 * 1024], vec![0.01, 0.0001])
+            .with_cuts(vec![
+                vec![],
+                vec![
+                    PlaneCut { bytes: 40 * 1024, eps: 0.004 },
+                    PlaneCut { bytes: 200 * 1024, eps: 0.0009 },
+                ],
+            ]);
+        // Level 1 alone: 32 groups of fragments → 32 KiB / 1 KiB = 32
+        // fragments at m = 0 ⇒ ~0.033 s. Full level 2 needs 512 more
+        // fragments (~0.512 s). Pick τ between: level 2 infeasible
+        // whole, but its 40 KiB cut (40 fragments) fits the slack.
+        let tau = 0.15;
+        let plan = optimize_deadline_bitplane(&p, &sched, tau).unwrap();
+        assert_eq!(plan.base.levels, 1, "whole level 2 cannot meet τ");
+        let (level, cut) = plan.partial.expect("slack fits the 40 KiB cut");
+        assert_eq!(level, 1);
+        assert_eq!(cut.bytes, 40 * 1024);
+        assert!((plan.planned_eps(&sched) - 0.004).abs() < 1e-15);
+        // The next-larger cut must genuinely not fit: 200 KiB needs 200
+        // fragments and the slack only buys ⌊left·r⌋ < 200.
+        let left = tau - plan.base.time;
+        assert!((left * p.r).floor() < 200.0, "slack buys {} fragments", left * p.r);
+
+        // A tighter τ that cannot even fit the small cut sheds to
+        // whole-level granularity.
+        let tight = plan.base.time + 0.01;
+        let tight_plan = optimize_deadline_bitplane(&p, &sched, tight).unwrap();
+        assert!(tight_plan.partial.is_none(), "10 ms slack < 40 fragments");
     }
 
     #[test]

@@ -13,13 +13,13 @@ pub mod prob;
 pub mod time_model;
 
 pub use error_model::{
-    optimize_deadline_paper,
+    optimize_deadline_bitplane, optimize_deadline_paper,
     expected_error, expected_error_with, feasible_levels,
     optimize_deadline_coordinate, optimize_deadline_coordinate_with,
     optimize_deadline_exhaustive, optimize_deadline_exhaustive_with,
-    transmission_time, DeadlineOpt, ErrorFormula,
+    transmission_time, BitplaneDeadlinePlan, DeadlineOpt, ErrorFormula,
 };
-pub use params::{LevelSchedule, NetParams};
+pub use params::{LevelSchedule, NetParams, PlaneCut};
 pub use prob::{mean_losses_per_ftg, p_unrecoverable, p_unrecoverable_table};
 pub use time_model::{
     expected_time_curve, expected_total_time, num_ftgs, optimize_parity, TimeOpt,

@@ -35,15 +35,32 @@ impl NetParams {
     }
 }
 
+/// A sub-level shed point inside one transfer level: delivering the
+/// level's first `bytes` bytes still decodes (the codec cuts only at
+/// segment boundaries) and achieves the measured relative L∞ error
+/// `eps`. Produced by `janus::codec` (one cut per interior bitplane
+/// segment boundary); consumed by the Deadline solver so Alg. 2 can
+/// shed at *bitplane* granularity instead of whole levels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlaneCut {
+    /// Decodable byte prefix of the level.
+    pub bytes: u64,
+    /// Measured ε when reconstruction stops at this prefix; strictly
+    /// between the level's own ε and the previous level's.
+    pub eps: f64,
+}
+
 /// Hierarchical level schedule from data refactoring (pMGARD-style).
 ///
 /// `sizes[i]` is the byte size `S_{i+1}` of level i+1; `eps[i]` is the
 /// relative L∞ error `ε_{i+1}` when reconstructing with levels 1..=i+1.
-/// `ε_0 = 1` (nothing received) is implicit.
+/// `ε_0 = 1` (nothing received) is implicit. `cuts[i]` optionally lists
+/// the level's interior [`PlaneCut`]s (empty = whole-level granularity).
 #[derive(Debug, Clone)]
 pub struct LevelSchedule {
     pub sizes: Vec<u64>,
     pub eps: Vec<f64>,
+    pub cuts: Vec<Vec<PlaneCut>>,
 }
 
 impl LevelSchedule {
@@ -53,7 +70,48 @@ impl LevelSchedule {
             eps.windows(2).all(|w| w[0] > w[1]),
             "ε must strictly decrease with more levels"
         );
-        LevelSchedule { sizes, eps }
+        let cuts = vec![Vec::new(); sizes.len()];
+        LevelSchedule { sizes, eps, cuts }
+    }
+
+    /// Attach sub-level plane cuts (one list per level, possibly empty).
+    /// Each list must be strictly increasing in bytes, strictly
+    /// decreasing in ε, inside the level's byte size, and strictly
+    /// between the neighbouring whole-level ε values.
+    pub fn with_cuts(mut self, cuts: Vec<Vec<PlaneCut>>) -> Self {
+        if cuts.is_empty() {
+            return self;
+        }
+        assert_eq!(cuts.len(), self.sizes.len(), "one cut list per level");
+        for (li, list) in cuts.iter().enumerate() {
+            let mut last_bytes = 0u64;
+            let mut last_eps = self.eps_with_levels(li); // ε before this level
+            for cut in list {
+                assert!(
+                    cut.bytes > last_bytes && cut.bytes < self.sizes[li],
+                    "level {li}: cut bytes must be strictly inside the level"
+                );
+                assert!(
+                    cut.eps < last_eps && cut.eps > self.eps[li],
+                    "level {li}: cut ε must interpolate the level's ε range"
+                );
+                last_bytes = cut.bytes;
+                last_eps = cut.eps;
+            }
+        }
+        self.cuts = cuts;
+        self
+    }
+
+    /// The largest plane cut of `level` whose prefix fits `budget_bytes`
+    /// (None when the level has no cuts or none fit).
+    pub fn best_cut_within(&self, level: usize, budget_bytes: u64) -> Option<PlaneCut> {
+        self.cuts
+            .get(level)?
+            .iter()
+            .rev()
+            .find(|c| c.bytes <= budget_bytes)
+            .copied()
     }
 
     /// The paper's Nyx schedule (§5.1): S = 668 MB, 2.67 GB, 5.42 GB,
@@ -153,6 +211,41 @@ mod tests {
     #[should_panic(expected = "strictly decrease")]
     fn non_monotone_eps_rejected() {
         LevelSchedule::new(vec![10, 10], vec![0.1, 0.1]);
+    }
+
+    #[test]
+    fn plane_cuts_validate_and_select() {
+        let s = LevelSchedule::new(vec![100, 1000], vec![0.01, 0.0001]).with_cuts(vec![
+            vec![],
+            vec![
+                PlaneCut { bytes: 200, eps: 0.005 },
+                PlaneCut { bytes: 600, eps: 0.0008 },
+            ],
+        ]);
+        // Largest cut fitting the budget wins; too-small budgets yield none.
+        assert_eq!(s.best_cut_within(1, 150), None);
+        assert_eq!(s.best_cut_within(1, 250).unwrap().bytes, 200);
+        assert_eq!(s.best_cut_within(1, 10_000).unwrap().bytes, 600);
+        assert_eq!(s.best_cut_within(0, 1_000), None, "no cuts on level 0");
+        assert_eq!(s.best_cut_within(5, 1_000), None, "out of range is None");
+        // A cut-free schedule stays cut-free.
+        let plain = LevelSchedule::paper_nyx();
+        assert!(plain.cuts.iter().all(|c| c.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly inside")]
+    fn cut_beyond_level_size_rejected() {
+        LevelSchedule::new(vec![100], vec![0.01])
+            .with_cuts(vec![vec![PlaneCut { bytes: 100, eps: 0.05 }]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "interpolate")]
+    fn cut_eps_outside_level_range_rejected() {
+        // ε must sit strictly between ε_0 = 1 and the level's 0.01.
+        LevelSchedule::new(vec![100], vec![0.01])
+            .with_cuts(vec![vec![PlaneCut { bytes: 50, eps: 0.005 }]]);
     }
 
     #[test]

@@ -6,6 +6,103 @@
 //! unnecessary (tests, pure-simulation experiments) and as the oracle for
 //! artifact validation.
 
+use std::fmt;
+
+/// Why a volume shape cannot go through the multilevel lifting pipeline.
+///
+/// `decompose`/`reconstruct` used to `assert!` on bad shapes, which turns
+/// a malformed user input (CLI `--dim`, a foreign dataset) into a panic
+/// deep inside the transform. The checked entry points
+/// ([`try_decompose`], [`try_reconstruct`]) reject instead; the panicking
+/// wrappers remain for trusted in-tree callers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShapeError {
+    /// At least one lifting level is required.
+    ZeroLevels,
+    /// The volume dimension must be positive.
+    ZeroDim,
+    /// Lifting halves the dimension per level, so `d` must be divisible
+    /// by `2^(levels−1)`; odd or non-divisible dimensions (e.g. d = 15,
+    /// or d = 24 with 4 levels) have no well-defined coarse octant.
+    NotDivisible { d: usize, levels: usize },
+    /// Each lifting step needs rows of width ≥ 2: `d / 2^(levels−1)`
+    /// must stay ≥ 1 (too many levels for this dimension).
+    TooManyLevels { d: usize, levels: usize },
+    /// A coefficient buffer's length does not match the `(d, levels)`
+    /// geometry it claims.
+    BadBufferLen { level: usize, expected: usize, got: usize },
+    /// `levels_used` must satisfy `1 ≤ levels_used ≤ total_levels`.
+    LevelRange { levels_used: usize, total_levels: usize },
+    /// Fewer coefficient buffers supplied than `levels_used` requires.
+    MissingBuffers { have: usize, need: usize },
+}
+
+impl fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShapeError::ZeroLevels => write!(f, "lifting: at least one level required"),
+            ShapeError::ZeroDim => write!(f, "lifting: volume dimension must be positive"),
+            ShapeError::NotDivisible { d, levels } => write!(
+                f,
+                "lifting: dimension {d} not divisible by 2^(levels-1) = {} for {levels} levels",
+                1usize << (levels - 1)
+            ),
+            ShapeError::TooManyLevels { d, levels } => {
+                write!(f, "lifting: {levels} levels leave no coarse octant for dimension {d}")
+            }
+            ShapeError::BadBufferLen { level, expected, got } => write!(
+                f,
+                "lifting: level {level} buffer has {got} coefficients, geometry needs {expected}"
+            ),
+            ShapeError::LevelRange { levels_used, total_levels } => write!(
+                f,
+                "lifting: levels_used {levels_used} outside 1..={total_levels}"
+            ),
+            ShapeError::MissingBuffers { have, need } => {
+                write!(f, "lifting: {have} coefficient buffers supplied, {need} required")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+/// Check that a `(d, d, d)` volume supports `levels` lifting levels.
+pub fn validate_shape(d: usize, levels: usize) -> Result<(), ShapeError> {
+    if levels == 0 {
+        return Err(ShapeError::ZeroLevels);
+    }
+    if d == 0 {
+        return Err(ShapeError::ZeroDim);
+    }
+    if levels > 1 {
+        let div = 1usize
+            .checked_shl(levels as u32 - 1)
+            .ok_or(ShapeError::TooManyLevels { d, levels })?;
+        if d / div == 0 {
+            return Err(ShapeError::TooManyLevels { d, levels });
+        }
+        if d % div != 0 {
+            return Err(ShapeError::NotDivisible { d, levels });
+        }
+    }
+    Ok(())
+}
+
+/// Coefficient count of each level buffer for a `(d, levels)` geometry:
+/// `[base³, 7·base³, 7·(2·base)³, …]` with `base = d / 2^(levels−1)`.
+pub fn level_coeff_counts(d: usize, levels: usize) -> Result<Vec<usize>, ShapeError> {
+    validate_shape(d, levels)?;
+    let base = d >> (levels - 1);
+    let mut counts = vec![base * base * base];
+    let mut h = base;
+    for _ in 1..levels {
+        counts.push(7 * h * h * h);
+        h *= 2;
+    }
+    Ok(counts)
+}
+
 /// Forward lifting along contiguous rows of width `w` (even).
 ///
 /// `x` is a `(rows, w)` row-major view; outputs are `(rows, w/2)` coarse
@@ -274,9 +371,10 @@ fn unflatten_octants(coarse: &Volume, det: &[f32]) -> Volume {
 
 /// Multilevel decomposition into `levels` flat f32 buffers (level 1 =
 /// coarsest approximation; identical layout to the Python model).
-pub fn decompose(x: &Volume, levels: usize) -> Vec<Vec<f32>> {
-    assert!(levels >= 1);
-    assert!(x.d % (1 << (levels - 1)) == 0, "D must divide 2^(L−1)");
+/// Rejects shapes the lifting scheme cannot halve (odd / non-divisible
+/// dimensions) with a typed [`ShapeError`].
+pub fn try_decompose(x: &Volume, levels: usize) -> Result<Vec<Vec<f32>>, ShapeError> {
+    validate_shape(x.d, levels)?;
     let mut details = Vec::new();
     let mut cur = x.clone();
     for _ in 0..levels - 1 {
@@ -287,13 +385,35 @@ pub fn decompose(x: &Volume, levels: usize) -> Vec<Vec<f32>> {
     let mut out = vec![cur.data];
     details.reverse();
     out.extend(details);
-    out
+    Ok(out)
+}
+
+/// Panicking wrapper over [`try_decompose`] for trusted in-tree shapes.
+pub fn decompose(x: &Volume, levels: usize) -> Vec<Vec<f32>> {
+    try_decompose(x, levels).expect("decompose: unsupported shape")
 }
 
 /// Progressive reconstruction from the first `levels_used` buffers;
-/// missing details are zero-filled.
-pub fn reconstruct(buffers: &[&[f32]], levels_used: usize, total_levels: usize, d: usize) -> Volume {
-    assert!(levels_used >= 1 && levels_used <= total_levels);
+/// missing details are zero-filled. Rejects bad geometry and
+/// buffer-length mismatches with a typed [`ShapeError`].
+pub fn try_reconstruct(
+    buffers: &[&[f32]],
+    levels_used: usize,
+    total_levels: usize,
+    d: usize,
+) -> Result<Volume, ShapeError> {
+    let counts = level_coeff_counts(d, total_levels)?;
+    if levels_used < 1 || levels_used > total_levels {
+        return Err(ShapeError::LevelRange { levels_used, total_levels });
+    }
+    if buffers.len() < levels_used {
+        return Err(ShapeError::MissingBuffers { have: buffers.len(), need: levels_used });
+    }
+    for (li, (buf, &want)) in buffers.iter().zip(&counts).enumerate().take(levels_used) {
+        if buf.len() != want {
+            return Err(ShapeError::BadBufferLen { level: li, expected: want, got: buf.len() });
+        }
+    }
     let base = d >> (total_levels - 1);
     let mut cur = Volume::new(base, buffers[0].to_vec());
     for i in 1..total_levels {
@@ -307,7 +427,13 @@ pub fn reconstruct(buffers: &[&[f32]], levels_used: usize, total_levels: usize, 
         };
         cur = lift3d_inverse(&unflatten_octants(&cur, det));
     }
-    cur
+    Ok(cur)
+}
+
+/// Panicking wrapper over [`try_reconstruct`] for trusted in-tree shapes.
+pub fn reconstruct(buffers: &[&[f32]], levels_used: usize, total_levels: usize, d: usize) -> Volume {
+    try_reconstruct(buffers, levels_used, total_levels, d)
+        .expect("reconstruct: unsupported shape")
 }
 
 /// Level byte sizes for a (D, D, D) f32 volume (matches the Python model).
@@ -464,6 +590,89 @@ mod tests {
         let bytes = levels_to_bytes(&bufs);
         for (orig, by) in bufs.iter().zip(&bytes) {
             assert_eq!(&bytes_to_level(by), orig);
+        }
+    }
+
+    #[test]
+    fn unsupported_shapes_rejected_with_typed_error() {
+        // Odd dimension: no first halving.
+        let odd = Volume::zeros(15);
+        assert_eq!(
+            try_decompose(&odd, 2).unwrap_err(),
+            ShapeError::NotDivisible { d: 15, levels: 2 }
+        );
+        // Even but not divisible deep enough: 24 = 8·3 supports 4 levels
+        // (24 % 8 == 0) but not 5 (24 % 16 != 0).
+        let v24 = Volume::zeros(24);
+        assert!(try_decompose(&v24, 4).is_ok());
+        assert_eq!(
+            try_decompose(&v24, 5).unwrap_err(),
+            ShapeError::NotDivisible { d: 24, levels: 5 }
+        );
+        // Degenerate requests.
+        assert_eq!(try_decompose(&v24, 0).unwrap_err(), ShapeError::ZeroLevels);
+        assert_eq!(validate_shape(0, 1).unwrap_err(), ShapeError::ZeroDim);
+        // More levels than halvings: 8 / 2^4 == 0.
+        assert_eq!(
+            validate_shape(8, 5).unwrap_err(),
+            ShapeError::TooManyLevels { d: 8, levels: 5 }
+        );
+        // Buffer-length mismatch is a typed error, not a panic.
+        let bufs = decompose(&Volume::zeros(16), 2);
+        let mut short = bufs[1].clone();
+        short.pop();
+        let refs: Vec<&[f32]> = vec![&bufs[0], &short];
+        assert!(matches!(
+            try_reconstruct(&refs, 2, 2, 16).unwrap_err(),
+            ShapeError::BadBufferLen { level: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn non_power_of_two_dimensions_roundtrip() {
+        // 24 = 2³·3 and 12 = 2²·3 exercise the boundary clamps on rows
+        // whose width is not a power of two.
+        for (d, levels) in [(24usize, 3usize), (12, 2), (24, 4), (6, 2)] {
+            let x = random_volume(d, 11 + d as u64);
+            let bufs = try_decompose(&x, levels).unwrap();
+            let counts = level_coeff_counts(d, levels).unwrap();
+            for (b, &c) in bufs.iter().zip(&counts) {
+                assert_eq!(b.len(), c, "d={d} L={levels}");
+            }
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let xi = try_reconstruct(&refs, levels, levels, d).unwrap();
+            assert!(
+                x.linf_rel_error(&xi) < 1e-4,
+                "d={d} L={levels}: {}",
+                x.linf_rel_error(&xi)
+            );
+        }
+    }
+
+    #[test]
+    fn boundary_clamp_rows_roundtrip_at_minimal_width() {
+        // w = 2 makes half = 1, so the right-neighbour clamp
+        // `(j+1).min(half-1)` and the left clamp `saturating_sub` are
+        // active on every sample — the worst case for the mirrored
+        // boundary handling.
+        let mut rng = Pcg64::seeded(21);
+        for rows in [1usize, 3, 16] {
+            let x: Vec<f32> = (0..rows * 2).map(|_| rng.next_f64() as f32).collect();
+            let (c, d) = lift_forward(&x, rows, 2);
+            let xi = lift_inverse(&c, &d, rows, 1);
+            for (a, b) in x.iter().zip(&xi) {
+                assert!((a - b).abs() < 1e-5, "w=2 rows={rows}: {a} vs {b}");
+            }
+        }
+        // The clamps must also be exact where they engage mid-row: the
+        // last even sample of every row uses its own value as the
+        // "right" neighbour. A linear ramp makes any asymmetry visible.
+        let w = 6;
+        let ramp: Vec<f32> = (0..w).map(|i| i as f32).collect();
+        let (c, d) = lift_forward(&ramp, 1, w);
+        let back = lift_inverse(&c, &d, 1, w / 2);
+        for (a, b) in ramp.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-5, "ramp: {a} vs {b}");
         }
     }
 

@@ -9,5 +9,6 @@ pub mod lifting;
 pub use bitplane::BitplaneBlock;
 pub use grf::{generate, GrfConfig};
 pub use lifting::{
-    bytes_to_level, decompose, level_sizes, levels_to_bytes, reconstruct, Volume,
+    bytes_to_level, decompose, level_coeff_counts, level_sizes, levels_to_bytes, reconstruct,
+    try_decompose, try_reconstruct, validate_shape, ShapeError, Volume,
 };

@@ -1,0 +1,319 @@
+//! Acceptance matrix for the `janus::codec` subsystem (ISSUE 4): a
+//! GRF-generated f32 volume travels through the `janus::api` facade
+//! over a 5%-loss deterministic testkit wire under every `Contract`
+//! variant, and the receiver's *reported* achieved ε is checked against
+//! the contract — and against the ground truth.
+
+use janus::api::{
+    run_pair, CodecConfig, Contract, Dataset, EventLog, TransferEvent, TransferSpec,
+};
+use janus::model::{optimize_deadline_bitplane, NetParams};
+use janus::refactor::{generate, GrfConfig, Volume};
+use janus::testkit::{loss_transport_pair, LossTrace};
+use std::time::Duration;
+
+const LOSS: f64 = 0.05;
+const RATE: f64 = 200_000.0;
+
+fn volume_dataset(seed: u64) -> (Volume, Dataset) {
+    let vol = generate(32, &GrfConfig::default(), seed);
+    let cfg = CodecConfig { levels: 4, ladder: vec![4e-3, 5e-4, 8e-5], max_planes: 24 };
+    let data = Dataset::from_volume(&vol, &cfg).expect("encodable fixture");
+    (vol, data)
+}
+
+fn spec(contract: Contract, streams: usize, initial_lambda: f64) -> TransferSpec {
+    TransferSpec::builder()
+        .contract(contract)
+        .streams(streams)
+        .net(NetParams { t: 0.0005, r: RATE, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(initial_lambda)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(5))
+        .max_duration(Duration::from_secs(60))
+        .build()
+        .unwrap()
+}
+
+/// The delivered prefix's LevelDecoded events, in delivery order.
+fn level_decoded(log: &EventLog) -> Vec<(u8, f64)> {
+    log.events
+        .iter()
+        .filter_map(|e| match e {
+            TransferEvent::LevelDecoded { level, achieved_eps } => Some((*level, *achieved_eps)),
+            _ => None,
+        })
+        .collect()
+}
+
+fn assert_certified(vol: &Volume, rep: &janus::api::TransferReport) -> f64 {
+    let out = rep
+        .received
+        .decode_volume()
+        .expect("codec stream")
+        .expect("delivered prefix decodes");
+    let true_err = vol.linf_rel_error(&out.volume);
+    assert!(
+        true_err <= out.achieved_eps + 1e-12,
+        "reported ε {} must bound the ground truth {true_err}",
+        out.achieved_eps
+    );
+    out.achieved_eps
+}
+
+// --------------------------------------------------------------- Fidelity
+
+#[test]
+fn fidelity_over_lossy_wire_certifies_the_contracted_eps() {
+    let (vol, data) = volume_dataset(1);
+    let contracted = *data.eps.last().unwrap();
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(LOSS, 101));
+    let mut rlog = EventLog::new();
+    let rep = run_pair(
+        &spec(Contract::Fidelity(contracted), 1, LOSS * RATE),
+        st,
+        rt,
+        &data,
+        None,
+        Some(&mut rlog),
+    )
+    .unwrap();
+
+    // Byte-exact per delivered segment (every rung, under Fidelity).
+    for (li, (got, want)) in rep.received.levels.iter().zip(&data.levels).enumerate() {
+        assert_eq!(got.as_ref().expect("delivered"), want, "rung {li}");
+    }
+    let achieved = assert_certified(&vol, &rep);
+    assert!(achieved <= contracted + 1e-15, "{achieved} > contracted {contracted}");
+    assert!((rep.received.achieved_eps - achieved).abs() < 1e-15, "summary agrees");
+
+    // LevelDecoded: one per rung, in level order, ε tightening to the
+    // recorded ladder, after every GroupRecovered.
+    let lv = level_decoded(&rlog);
+    assert_eq!(lv.len(), data.levels.len());
+    for (i, (level, eps)) in lv.iter().enumerate() {
+        assert_eq!(*level as usize, i, "level order");
+        assert!((eps - data.eps[i]).abs() < 1e-15, "recorded ε replayed");
+    }
+    let first_decode = rlog
+        .events
+        .iter()
+        .position(|e| matches!(e, TransferEvent::LevelDecoded { .. }))
+        .unwrap();
+    if let Some(last_group) = rlog
+        .events
+        .iter()
+        .rposition(|e| matches!(e, TransferEvent::GroupRecovered { .. }))
+    {
+        assert!(last_group < first_decode, "decode events follow recovery events");
+    }
+    let codec = rep.received.codec.as_ref().expect("codec summary");
+    assert_eq!(codec.rungs_decoded, data.levels.len());
+    assert_eq!(codec.d, 32);
+    assert_eq!(codec.lifting_levels, 4);
+}
+
+#[test]
+fn fidelity_coarse_bound_ships_only_the_needed_rungs() {
+    let (vol, data) = volume_dataset(2);
+    // ε request satisfied by rung 1 alone (its recorded ε ≤ 4e-3).
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(LOSS, 55));
+    let mut rlog = EventLog::new();
+    let rep = run_pair(
+        &spec(Contract::Fidelity(4e-3), 1, LOSS * RATE),
+        st,
+        rt,
+        &data,
+        None,
+        Some(&mut rlog),
+    )
+    .unwrap();
+    assert_eq!(rep.received.levels.len(), 1, "only rung 1 in the manifest");
+    assert_eq!(rep.received.levels[0].as_ref().unwrap(), &data.levels[0]);
+    let achieved = assert_certified(&vol, &rep);
+    assert!((achieved - data.eps[0]).abs() < 1e-15);
+    assert_eq!(level_decoded(&rlog).len(), 1);
+}
+
+// ------------------------------------------------------------- BestEffort
+
+#[test]
+fn best_effort_over_lossy_wire_delivers_the_full_ladder() {
+    let (vol, data) = volume_dataset(3);
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(LOSS, 202));
+    let mut rlog = EventLog::new();
+    let rep = run_pair(
+        &spec(Contract::BestEffort, 1, LOSS * RATE),
+        st,
+        rt,
+        &data,
+        None,
+        Some(&mut rlog),
+    )
+    .unwrap();
+    for (got, want) in rep.received.levels.iter().zip(&data.levels) {
+        assert_eq!(got.as_ref().unwrap(), want);
+    }
+    let achieved = assert_certified(&vol, &rep);
+    assert!((achieved - *data.eps.last().unwrap()).abs() < 1e-15);
+    let lv = level_decoded(&rlog);
+    assert_eq!(lv.len(), data.levels.len());
+    assert!(lv.windows(2).all(|w| w[0].1 > w[1].1), "ε tightens rung by rung");
+}
+
+// --------------------------------------------------------------- Deadline
+
+#[test]
+fn deadline_sheds_to_the_maximal_plane_prefix() {
+    let (vol, data) = volume_dataset(4);
+    assert!(data.levels.len() >= 2);
+    assert!(
+        data.cuts().iter().any(|c| !c.is_empty()),
+        "the encoder must expose plane cuts somewhere"
+    );
+
+    // Find a boundary rung `ri` (the first excluded one) and a τ
+    // strictly below whole-rung-`ri+1` feasibility whose slack (after
+    // the whole-level solve spends its parity budget) fits one of rung
+    // ri's plane cuts — probing the exact solver the engine runs. Scan
+    // from the largest candidates down: maximal slack buys generous
+    // parity for the full rungs and wall-clock headroom.
+    let net = NetParams { t: 0.0005, r: 2_000.0, lambda: 0.0, n: 32, s: 1024 };
+    let initial_lambda = LOSS * net.r;
+    let sched = data.schedule();
+    let p = NetParams { lambda: initial_lambda, ..net };
+    let steps = 200;
+    let mut found = None;
+    'boundary: for ri in (1..data.levels.len()).rev() {
+        if data.cuts()[ri].is_empty() {
+            continue;
+        }
+        let m_lo = vec![0usize; ri];
+        let m_hi = vec![0usize; ri + 1];
+        let t_lo = janus::model::transmission_time(&p, &sched, &m_lo);
+        let t_hi = janus::model::transmission_time(&p, &sched, &m_hi);
+        for i in (0..steps).rev() {
+            let tau = t_lo + (t_hi - t_lo) * (i as f64 + 0.5) / steps as f64;
+            if let Some(plan) = optimize_deadline_bitplane(&p, &sched, tau) {
+                if plan.base.levels == ri && plan.partial.is_some() {
+                    found = Some((ri, tau, plan));
+                    break 'boundary;
+                }
+            }
+        }
+    }
+    let (ri, tau, plan) = found.expect("some τ admits a plane-prefix shed");
+    let (plevel, cut) = plan.partial.expect("selected for a partial");
+    assert_eq!(plevel, ri);
+    // Maximality for this τ: the chosen cut fits the slack budget and
+    // no larger cut does.
+    let slack = tau - plan.base.time;
+    let budget_bytes = (slack * p.r).floor() as u64 * p.s as u64;
+    assert!(cut.bytes <= budget_bytes, "chosen cut must fit the slack");
+    let cuts_r = &data.cuts()[ri];
+    let idx = cuts_r.iter().position(|c| *c == cut).expect("cut from the schedule");
+    for bigger in &cuts_r[idx + 1..] {
+        assert!(
+            bigger.bytes > budget_bytes,
+            "a larger cut ({} B) would fit the {budget_bytes} B budget — not maximal",
+            bigger.bytes
+        );
+    }
+
+    let build_spec = || {
+        TransferSpec::builder()
+            .contract(Contract::Deadline(tau))
+            .streams(1)
+            .net(net)
+            .initial_lambda(initial_lambda)
+            .lambda_window(0.25)
+            .idle_timeout(Duration::from_secs(5))
+            .max_duration(Duration::from_secs(60))
+            .build()
+            .unwrap()
+    };
+    let mut expected: Vec<&[u8]> = data.levels[..ri].iter().map(|l| l.as_slice()).collect();
+    expected.push(&data.levels[ri][..cut.bytes as usize]);
+    let mut expect_eps: Vec<f64> = data.eps[..ri].to_vec();
+    expect_eps.push(cut.eps);
+
+    // --- 5%-loss wire: delivery depends on the parity the plan bought,
+    // but the manifest commitment and any recovered prefix are exact.
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::seeded(LOSS, 404));
+    let mut rlog = EventLog::new();
+    let rep = run_pair(&build_spec(), st, rt, &data, None, Some(&mut rlog)).unwrap();
+    assert_eq!(
+        rep.received.levels.len(),
+        ri + 1,
+        "manifest: {ri} full rungs + the partial"
+    );
+    assert_eq!(rep.sent.passes, 0, "deadline never retransmits");
+    for li in 0..rep.received.levels_recovered {
+        assert_eq!(
+            rep.received.levels[li].as_ref().unwrap().as_slice(),
+            expected[li],
+            "rung {li} must be byte-exact"
+        );
+    }
+    if rep.received.levels_recovered > 0 {
+        let want = expect_eps[rep.received.levels_recovered - 1];
+        assert!(
+            (rep.received.achieved_eps - want).abs() < 1e-15,
+            "achieved {} vs {want}",
+            rep.received.achieved_eps
+        );
+        let achieved = assert_certified(&vol, &rep);
+        assert!((achieved - want).abs() < 1e-15, "decoder certifies the same ε");
+        let lv = level_decoded(&rlog);
+        assert_eq!(lv.len(), rep.received.levels_recovered, "one decode event per rung");
+        for (i, (level, _)) in lv.iter().enumerate() {
+            assert_eq!(*level as usize, i);
+        }
+    }
+
+    // --- Lossless wire, same plan: the planned shed arrives in full —
+    // the delivered plane prefix IS the maximal one for this deadline.
+    let (st, rt) = loss_transport_pair(1, |_| LossTrace::None);
+    let mut rlog = EventLog::new();
+    let rep = run_pair(&build_spec(), st, rt, &data, None, Some(&mut rlog)).unwrap();
+    assert!(rep.received.levels_recovered >= ri, "full rungs arrive losslessly");
+    for li in 0..rep.received.levels_recovered {
+        assert_eq!(rep.received.levels[li].as_ref().unwrap().as_slice(), expected[li]);
+    }
+    if rep.received.levels_recovered == ri + 1 {
+        assert!((rep.received.achieved_eps - cut.eps).abs() < 1e-15);
+        let achieved = assert_certified(&vol, &rep);
+        assert!((achieved - cut.eps).abs() < 1e-15, "cut ε certified end to end");
+    }
+    let lv = level_decoded(&rlog);
+    assert_eq!(lv.len(), rep.received.levels_recovered);
+    assert!(lv.windows(2).all(|w| w[0].0 + 1 == w[1].0), "level order");
+}
+
+// ----------------------------------------------------------------- Pooled
+
+#[test]
+fn pooled_fidelity_certifies_over_asymmetric_loss() {
+    let (vol, data) = volume_dataset(5);
+    let contracted = *data.eps.last().unwrap();
+    let streams = 4usize;
+    let (st, rt) =
+        loss_transport_pair(streams, |w| LossTrace::seeded(LOSS, 500 + w as u64));
+    let mut rlog = EventLog::new();
+    let rep = run_pair(
+        &spec(Contract::Fidelity(contracted), streams, LOSS * RATE * streams as f64),
+        st,
+        rt,
+        &data,
+        None,
+        Some(&mut rlog),
+    )
+    .unwrap();
+    for (got, want) in rep.received.levels.iter().zip(&data.levels) {
+        assert_eq!(got.as_ref().unwrap(), want);
+    }
+    let achieved = assert_certified(&vol, &rep);
+    assert!(achieved <= contracted + 1e-15);
+    assert_eq!(level_decoded(&rlog).len(), data.levels.len());
+    assert!(rep.sent.pooled().is_some(), "streams=4 routes pooled");
+}

@@ -235,3 +235,41 @@ fn phased_loss_trace_drives_adaptation() {
     let rep = run_with(&data, 0.0, transports);
     assert!(rep.sent.duration > 0.0);
 }
+
+#[test]
+fn codec_volume_survives_the_pooled_lossy_matrix() {
+    // The codec path rides the pooled engine untouched: rungs are just
+    // levels on the wire. 5% loss, 4 streams, byte-exact per delivered
+    // segment, and the receive side certifies the contracted ε.
+    use janus::api::CodecConfig;
+    use janus::refactor::{generate, GrfConfig};
+
+    let vol = generate(32, &GrfConfig::default(), 0xC0DEC);
+    let cfg = CodecConfig { levels: 4, ladder: vec![4e-3, 5e-4, 8e-5], max_planes: 24 };
+    let data = Dataset::from_volume(&vol, &cfg).unwrap();
+    let contracted = *data.eps.last().unwrap();
+    let spec = TransferSpec::builder()
+        .contract(Contract::Fidelity(contracted))
+        .streams(STREAMS)
+        .net(NetParams { t: 0.0005, r: RATE, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(0.05 * RATE * STREAMS as f64)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(10))
+        .max_duration(Duration::from_secs(120))
+        .build()
+        .unwrap();
+    let (sender_t, receiver_t) =
+        loss_transport_pair(STREAMS, |w| LossTrace::seeded(0.05, 0xC0DEC ^ (w as u64 + 1)));
+    let rep = run_pair(&spec, sender_t, receiver_t, &data, None, None).unwrap();
+    for (li, (got, want)) in rep.received.levels.iter().zip(&data.levels).enumerate() {
+        assert_eq!(got.as_ref().expect("rung delivered"), want, "rung {li} differs");
+    }
+    let codec = rep.received.codec.as_ref().expect("codec summary attached");
+    assert_eq!(codec.rungs_decoded, data.levels.len());
+    assert!(codec.achieved_eps <= contracted + 1e-15);
+    let out = rep.received.decode_volume().expect("codec stream").expect("decodes");
+    assert!(
+        vol.linf_rel_error(&out.volume) <= out.achieved_eps + 1e-12,
+        "certified bound must hold against ground truth"
+    );
+}

@@ -1,0 +1,183 @@
+//! Property tests for the refactoring primitives (ISSUE 4 satellites):
+//! the bitplane truncation bound `2^(e_max − b)` over random, all-zero,
+//! extreme-value and negative-heavy blocks; exact roundtrips for values
+//! representable in the plane budget; and lifting roundtrips across the
+//! full set of supported (d, levels) shapes.
+
+use janus::refactor::{
+    generate, try_decompose, try_reconstruct, validate_shape, BitplaneBlock, GrfConfig,
+};
+use janus::util::prop::{check, no_shrink, PropConfig};
+use janus::util::Pcg64;
+
+/// One generated bitplane case: values + (planes, truncation) budgets.
+#[derive(Debug, Clone)]
+struct BitplaneCase {
+    values: Vec<f32>,
+    planes: u8,
+    keep: u8,
+}
+
+fn gen_case(rng: &mut Pcg64) -> BitplaneCase {
+    let n = 1 + rng.next_below(300) as usize;
+    let planes = (4 + rng.next_below(20)) as u8; // 4..=23
+    let keep = (1 + rng.next_below(planes as u64)) as u8; // 1..=planes
+    let kind = rng.next_below(4);
+    let scale = 10f64.powi(rng.range(0, 7) as i32 - 3) as f32; // 1e-3..=1e3
+    let values: Vec<f32> = match kind {
+        // All-zero block: exact zeros must stay exact at any prefix.
+        0 => vec![0.0; n],
+        // One NaN-free extreme among ordinary values: the shared e_max
+        // is pinned by the outlier, flushing the rest toward zero.
+        1 => {
+            let mut v: Vec<f32> = (0..n)
+                .map(|_| ((rng.next_f64() * 2.0 - 1.0) as f32) * scale)
+                .collect();
+            let idx = rng.next_below(n as u64) as usize;
+            v[idx] = 1.0e30;
+            v
+        }
+        // Negative-heavy block: sign-plane handling under truncation.
+        2 => (0..n)
+            .map(|_| {
+                let mag = rng.next_f64() as f32 * scale;
+                if rng.bool_with(0.9) { -mag } else { mag }
+            })
+            .collect(),
+        // Plain random block.
+        _ => (0..n)
+            .map(|_| ((rng.next_f64() * 2.0 - 1.0) as f32) * scale)
+            .collect(),
+    };
+    BitplaneCase { values, planes, keep }
+}
+
+#[test]
+fn truncated_decode_error_bounded_by_pow2_emax_minus_b() {
+    check(
+        &PropConfig { cases: 300, seed: 0xB17, ..Default::default() },
+        gen_case,
+        no_shrink,
+        |case| {
+            let block = BitplaneBlock::encode(&case.values, case.planes);
+            // Serialize, truncate the byte stream to `keep` planes, and
+            // decode the prefix — the full transport-shaped path.
+            let bytes = block.to_bytes();
+            let stride = case.values.len().div_ceil(8);
+            let cut = 13 + stride + case.keep as usize * stride;
+            let partial = BitplaneBlock::from_bytes(&bytes[..cut])
+                .ok_or_else(|| "truncated parse failed".to_string())?;
+            let decoded = partial.decode_prefix(case.keep);
+            let bound = (2f64).powi(block.e_max - case.keep as i32);
+            for (i, (a, b)) in case.values.iter().zip(&decoded).enumerate() {
+                let err = (a - b).abs() as f64;
+                if err > bound {
+                    return Err(format!(
+                        "coeff {i}: |{a} − {b}| = {err:.3e} > 2^({} − {}) = {bound:.3e}",
+                        block.e_max, case.keep
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn the_bound_itself_halves_per_restored_plane() {
+    // The per-step *worst case* `2^(e_max − b)` halves with every extra
+    // plane — the property the codec's error planner relies on. (The
+    // realized error of one coefficient is not monotone step-to-step:
+    // mid-tread reconstruction can locally lose up to half a step when
+    // a plane lands; only the bound contracts.)
+    check(
+        &PropConfig { cases: 100, seed: 0x5EED, ..Default::default() },
+        gen_case,
+        no_shrink,
+        |case| {
+            let block = BitplaneBlock::encode(&case.values, case.planes);
+            for used in 1..=case.planes {
+                let decoded = block.decode_prefix(used);
+                let bound = (2f64).powi(block.e_max - used as i32);
+                for (a, b) in case.values.iter().zip(&decoded) {
+                    let err = (a - b).abs() as f64;
+                    if err > bound {
+                        return Err(format!(
+                            "{used} planes: err {err:.3e} > bound {bound:.3e}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn roundtrip_exact_for_values_representable_in_the_plane_budget() {
+    // Values of the form q·2^(e − p) with q < 2^p quantize exactly, so
+    // a full-plane decode must reproduce them bit for bit.
+    check(
+        &PropConfig { cases: 200, seed: 0xE8AC7, ..Default::default() },
+        |rng| {
+            let n = 2 + rng.next_below(200) as usize;
+            let p = (3 + rng.next_below(18)) as u8; // 3..=20 (fits f32 exactly)
+            let e = rng.range(0, 9) as i32 - 4; // -4..=4
+            let mut q: Vec<u32> = (0..n)
+                .map(|_| rng.next_below(1u64 << p) as u32)
+                .collect();
+            // Pin e_max by making the largest magnitude top out.
+            let idx = rng.next_below(n as u64) as usize;
+            q[idx] = (1u32 << p) - 1;
+            let signs: Vec<bool> = (0..n).map(|_| rng.bool_with(0.5)).collect();
+            (p, e, q, signs)
+        },
+        no_shrink,
+        |(p, e, q, signs)| {
+            let lsb = (2f64).powi(*e - *p as i32);
+            let values: Vec<f32> = q
+                .iter()
+                .zip(signs)
+                .map(|(&qi, &neg)| {
+                    let v = (qi as f64 * lsb) as f32;
+                    if neg {
+                        -v
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let block = BitplaneBlock::encode(&values, *p);
+            if block.e_max != *e {
+                return Err(format!("e_max {} (expected {e})", block.e_max));
+            }
+            let decoded = block.decode();
+            for (i, (a, b)) in values.iter().zip(&decoded).enumerate() {
+                // Exact equality; ±0.0 compare equal, which is fine.
+                if a != b {
+                    return Err(format!("coeff {i}: {a} != {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lifting_roundtrip_over_all_supported_shapes() {
+    // Every (d, levels) accepted by validate_shape must reconstruct to
+    // float accuracy — including non-power-of-two dimensions.
+    for d in [2usize, 4, 6, 8, 12, 16, 20, 24] {
+        for levels in 1..=5usize {
+            if validate_shape(d, levels).is_err() {
+                continue;
+            }
+            let vol = generate(d, &GrfConfig::default(), (d * 31 + levels) as u64);
+            let bufs = try_decompose(&vol, levels).expect("validated shape");
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let back = try_reconstruct(&refs, levels, levels, d).expect("same shape");
+            let err = vol.linf_rel_error(&back);
+            assert!(err < 1e-4, "d={d} L={levels}: roundtrip ε = {err}");
+        }
+    }
+}
