@@ -13,7 +13,10 @@ use janus::api::{mem_transport_pair, run_pair, Contract, Dataset, TransferSpec};
 use janus::erasure::{measure_ec_rate, measure_parallel_ec_rate};
 use janus::metrics::bench::{bench_runs, bench_scale, BenchTable};
 use janus::model::NetParams;
+use janus::testkit::{loss_transport_pair, LossTrace};
 use janus::util::{stats, Pcg64};
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 fn dataset(total: usize) -> Dataset {
@@ -116,6 +119,49 @@ fn main() {
     }
     enc.save().unwrap();
 
+    // --- Pooled Deadline: pass-barrier τ accounting on 4 streams over
+    // a 5%-loss deterministic testkit wire (tentpole gate: τ met in
+    // virtual time with retransmission absorbed by the budget, receiver
+    // ε equal to the advertisement). Emits BENCH_pool_deadline.json,
+    // uploaded by the CI bench-smoke step. ---
+    let dl_streams = 4usize;
+    let dl_loss = 0.05;
+    let tau = 600.0; // generous virtual budget: nothing should be shed
+    let dl_spec = TransferSpec::builder()
+        .contract(Contract::Deadline(tau))
+        .streams(dl_streams)
+        .net(net)
+        .initial_lambda(dl_loss * per_stream_rate * dl_streams as f64)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(30))
+        .max_duration(Duration::from_secs(600))
+        .build()
+        .expect("pooled deadline spec");
+    let (st, rt) =
+        loss_transport_pair(dl_streams, |w| LossTrace::seeded(dl_loss, 0xD1 + w as u64));
+    let t0 = Instant::now();
+    let rep = run_pair(&dl_spec, st, rt, &dataset, None, None).expect("pooled deadline run");
+    let wall = t0.elapsed().as_secs_f64();
+    let dl = rep.sent.deadline().expect("deadline outcome").clone();
+    let dl_mbps = bytes as f64 / 1e6 / wall;
+    println!(
+        "\npool-deadline 4 streams @ {:.0}% loss: {dl_mbps:.1} MB/s, virtual {:.4}s / τ {tau}s ({}), \
+         advertised ε ≤ {:.1e}, receiver ε ≤ {:.1e}",
+        dl_loss * 100.0,
+        dl.virtual_elapsed,
+        if dl.met { "met" } else { "MISSED" },
+        dl.advertised_eps,
+        rep.received.achieved_eps,
+    );
+    write_deadline_json(dl_streams, dl_loss, &dl, dl_mbps, rep.received.achieved_eps)
+        .expect("write BENCH_pool_deadline.json");
+    assert!(dl.met, "generous τ must be met in virtual time: {dl:?}");
+    assert!(
+        (rep.received.achieved_eps - dl.advertised_eps).abs() < 1e-15,
+        "receiver must certify the advertisement"
+    );
+    assert_eq!(rep.received.levels_recovered, 3, "nothing shed under a generous τ");
+
     // --- Acceptance gates ---
     let single = stats::median(&single_mbps);
     let four = by_streams.iter().find(|&&(s, _)| s == 4).unwrap().1;
@@ -128,4 +174,33 @@ fn main() {
         "pool×4 ({four:.1} MB/s) must be ≥ 2× single-stream ({single:.1} MB/s)"
     );
     println!("pool_throughput complete.");
+}
+
+/// Save the pooled-deadline gate numbers as JSON (CI uploads this
+/// artifact as `BENCH_pool_deadline`).
+fn write_deadline_json(
+    streams: usize,
+    loss: f64,
+    dl: &janus::api::DeadlineOutcome,
+    mbps: f64,
+    receiver_eps: f64,
+) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_pool_deadline.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"pool_deadline\",")?;
+    writeln!(f, "  \"streams\": {streams},")?;
+    writeln!(f, "  \"loss\": {loss},")?;
+    writeln!(f, "  \"tau_s\": {},", dl.tau)?;
+    writeln!(f, "  \"virtual_elapsed_s\": {:.6},", dl.virtual_elapsed)?;
+    writeln!(f, "  \"met\": {},", dl.met)?;
+    writeln!(f, "  \"planned_eps\": {:e},", dl.planned_eps)?;
+    writeln!(f, "  \"advertised_eps\": {:e},", dl.advertised_eps)?;
+    writeln!(f, "  \"receiver_eps\": {receiver_eps:e},")?;
+    writeln!(f, "  \"mb_per_s\": {mbps:.2}")?;
+    writeln!(f, "}}")?;
+    println!("[saved {}]", path.display());
+    Ok(path)
 }

@@ -3,7 +3,7 @@
 
 use super::observer::{emit, EventSink, TransferEvent, TransferObserver};
 use super::report::{CodecSummary, ReceiveSummary, SendSummary};
-use super::spec::{Contract, Dataset, TransferSpec};
+use super::spec::{Dataset, SpecError, TransferSpec};
 use super::transport::Transport;
 use crate::codec::Decoder;
 use crate::coordinator::pool::{PoolConfig, TransferPool};
@@ -11,16 +11,16 @@ use crate::coordinator::receiver::{transfer_receiver, ReceiverConfig};
 use crate::coordinator::sender::{transfer_sender, SenderConfig};
 use crate::transport::channel::Datagram;
 use crate::util::err::Result;
-use crate::bail;
 use std::sync::Mutex;
 
 /// One side of a transfer, bound to a validated [`TransferSpec`].
 ///
 /// `send` and `receive` route internally: `streams == 1` runs the
-/// single-stream engine (all three contracts) over the transport's
-/// control channel; `streams > 1` runs the multi-stream
-/// [`TransferPool`] (retransmitting contracts only — enforced when the
-/// spec is built) over control + per-stream data channels.
+/// single-stream engine over the transport's control channel;
+/// `streams > 1` runs the multi-stream [`TransferPool`] over control +
+/// per-stream data channels. All three contracts run on either route —
+/// pooled `Deadline` debits a virtual τ budget at pass barriers and
+/// sheds work that no longer fits (see [`SendSummary::deadline`]).
 #[derive(Debug, Clone)]
 pub struct Endpoint {
     spec: TransferSpec,
@@ -64,6 +64,24 @@ impl Endpoint {
         sink: EventSink<'_>,
     ) -> Result<SendSummary> {
         let spec = &self.spec;
+        // `Dataset`'s constructors validate all of this, but `levels`
+        // and `eps` are public fields: re-check here so a mutated
+        // dataset surfaces as a typed error instead of a panic in the
+        // engines' schedule asserts.
+        if dataset.levels.is_empty() {
+            return Err(SpecError::EmptyDataset.into());
+        }
+        if dataset.levels.len() != dataset.eps.len()
+            || dataset.eps.iter().any(|e| e.is_nan() || *e <= 0.0 || *e > 1.0)
+            || dataset.eps.windows(2).any(|w| w[0] <= w[1])
+        {
+            return Err(SpecError::BadEpsilonLadder.into());
+        }
+        // Codec plane cuts must still describe these exact levels; a
+        // mutation that invalidated them costs the Deadline contract its
+        // bitplane shed granularity, not a panic.
+        let plane_cuts =
+            if cuts_describe(dataset) { dataset.cuts.clone() } else { Vec::new() };
         let mut control = transport.open_control()?;
         if spec.streams() == 1 {
             let cfg = SenderConfig {
@@ -71,23 +89,21 @@ impl Endpoint {
                 contract: spec.contract(),
                 initial_lambda: spec.initial_lambda(),
                 max_duration: spec.max_duration(),
-                plane_cuts: dataset.cuts.clone(),
+                plane_cuts,
             };
             let rep = transfer_sender(control.as_mut(), &cfg, &dataset.levels, &dataset.eps, sink)?;
             Ok(rep.into())
         } else {
-            let bound = match spec.contract() {
-                Contract::Fidelity(b) => b,
-                Contract::BestEffort => dataset.finest_eps(),
-                // Unreachable: TransferSpecBuilder::build rejects it.
-                Contract::Deadline(_) => bail!("deadline contracts are single-stream"),
-            };
+            // All three contracts route to the pool; Deadline runs the
+            // pass-barrier τ accounting (Fidelity narrows the level set
+            // inside the engine, BestEffort ships the full ladder).
             let pool = TransferPool::new(PoolConfig {
                 net: spec.net(),
                 streams: spec.streams(),
-                error_bound: bound,
+                contract: spec.contract(),
                 initial_lambda: spec.initial_lambda(),
                 max_duration: spec.max_duration(),
+                plane_cuts,
             })?;
             let mut data = open_data_channels(transport, spec.streams())?;
             let rep =
@@ -164,6 +180,34 @@ fn attach_codec_summary(summary: &mut ReceiveSummary, sink: EventSink<'_>) {
         lifting_levels: header.levels,
         segments_applied: dec.segments_applied(),
     });
+}
+
+/// Do the dataset's plane cuts still describe its (publicly mutable)
+/// levels and ε ladder? Mirrors `LevelSchedule::with_cuts`'s asserts —
+/// the codec encoder guarantees all of this at construction, but a
+/// caller who truncated `levels` or edited `eps` afterwards would
+/// otherwise trip those asserts deep inside an engine.
+fn cuts_describe(dataset: &Dataset) -> bool {
+    let cuts = dataset.cuts();
+    if cuts.len() != dataset.levels.len() {
+        return false;
+    }
+    for (li, (list, level)) in cuts.iter().zip(&dataset.levels).enumerate() {
+        let mut last_bytes = 0u64;
+        let mut last_eps = if li == 0 { 1.0 } else { dataset.eps[li - 1] };
+        for cut in list {
+            if cut.bytes <= last_bytes
+                || cut.bytes >= level.len() as u64
+                || cut.eps >= last_eps
+                || cut.eps <= dataset.eps[li]
+            {
+                return false;
+            }
+            last_bytes = cut.bytes;
+            last_eps = cut.eps;
+        }
+    }
+    true
 }
 
 fn open_data_channels(

@@ -64,6 +64,9 @@ pub use observer::{EventLog, FnObserver, TransferEvent, TransferObserver};
 pub use report::{
     CodecSummary, ReceiveDetail, ReceiveSummary, SendDetail, SendSummary, TransferReport,
 };
+// Pooled Deadline τ accounting, reachable from `SendSummary::deadline`
+// and the pooled pass trace.
+pub use crate::coordinator::pool::{DeadlineOutcome, ShedDecision};
 pub use spec::{Contract, Dataset, SpecError, TransferSpec, TransferSpecBuilder};
 
 // The codec types a facade caller needs for `Dataset::from_volume` and

@@ -14,6 +14,8 @@
 //!   `LambdaUpdated` derived from that pass's statistics (pooled runs).
 //! * `StreamFinished` events of *different* streams in the same pass may
 //!   interleave in any order (they come from concurrent workers).
+//! * `LevelShed { pass, .. }` events (pooled Deadline) follow the
+//!   pass's `LambdaUpdated` and precede the next `PassStarted`.
 //! * `GroupRecovered` events are receiver-side and are emitted in
 //!   (level, group) reconstruction order.
 //! * `LevelDecoded` events are receiver-side, follow every
@@ -40,6 +42,14 @@ pub enum TransferEvent {
     /// (measured at encode time). Emitted in level order after the
     /// transfer's `GroupRecovered` events; codec datasets only.
     LevelDecoded { level: u8, achieved_eps: f64 },
+    /// A pooled Deadline pass barrier shed work: level `level`'s
+    /// advertised prefix shrank to `kept_bytes` (0 = the level was
+    /// abandoned) because the residual τ budget could not afford its
+    /// retransmission. `eps` is the relative L∞ error the transfer
+    /// prefix achieves after the shed (the plane cut's measured ε for a
+    /// partial shed). Emitted after the pass's `LambdaUpdated`, before
+    /// the next `PassStarted`.
+    LevelShed { pass: u32, level: u8, kept_bytes: u64, eps: f64 },
 }
 
 /// Receives [`TransferEvent`]s while a transfer runs.

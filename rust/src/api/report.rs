@@ -7,7 +7,9 @@
 //! available through the `detail` enums.
 
 use crate::codec::{CodecError, DecodeOutput, Decoder};
-use crate::coordinator::pool::{PassRecord, PoolReceiverReport, PoolSenderReport, RecvPassRecord};
+use crate::coordinator::pool::{
+    DeadlineOutcome, PassRecord, PoolReceiverReport, PoolSenderReport, RecvPassRecord,
+};
 use crate::coordinator::receiver::ReceiverReport;
 use crate::coordinator::sender::SenderReport;
 
@@ -40,6 +42,18 @@ impl SendSummary {
     pub fn trace(&self) -> Option<&[PassRecord]> {
         match &self.detail {
             SendDetail::Pooled(r) => Some(&r.trace),
+            SendDetail::SingleStream(_) => None,
+        }
+    }
+
+    /// τ accounting of a pooled Deadline transfer: virtual time spent
+    /// against the contracted deadline and the ε the final (post-shed)
+    /// advertisement promises. `None` for other contracts and for the
+    /// single-stream route (whose Deadline plan is fixed up front — see
+    /// `plan_history` in [`SenderReport`]).
+    pub fn deadline(&self) -> Option<&DeadlineOutcome> {
+        match &self.detail {
+            SendDetail::Pooled(r) => r.deadline.as_ref(),
             SendDetail::SingleStream(_) => None,
         }
     }

@@ -17,7 +17,10 @@ pub enum Contract {
     /// relative L∞ error bound, retransmitting until recovered.
     Fidelity(f64),
     /// Guaranteed time (Alg. 2): deliver the best level prefix possible
-    /// within this many seconds; no retransmission.
+    /// within this many seconds. Single-stream: one pass, no
+    /// retransmission. Pooled (`streams > 1`): retransmission passes run
+    /// while a virtual τ budget lasts, shedding late levels (and plane-
+    /// cut tails) at pass barriers when it no longer does.
     Deadline(f64),
     /// No constraint declared: deliver the full dataset reliably (every
     /// level, retransmitting as needed), with parity still adapted to the
@@ -26,8 +29,9 @@ pub enum Contract {
 }
 
 impl Contract {
-    /// Whether this contract runs passive retransmission passes
-    /// (everything except `Deadline`).
+    /// Whether this contract retransmits until everything is recovered
+    /// (everything except `Deadline`, whose retransmission — pooled
+    /// engine only — is bounded by the τ budget instead).
     pub fn retransmits(&self) -> bool {
         !matches!(self, Contract::Deadline(_))
     }
@@ -60,8 +64,6 @@ pub enum SpecError {
     NegativeLambda(f64),
     /// The λ measurement window must be positive.
     ZeroWindow,
-    /// The deadline engine is single-stream; use `streams(1)`.
-    DeadlineNeedsSingleStream,
     /// A dataset needs at least one level.
     EmptyDataset,
     /// One ε per level, strictly decreasing, each in (0, 1].
@@ -101,9 +103,6 @@ impl fmt::Display for SpecError {
                 write!(f, "spec: initial lambda cannot be negative, got {l}")
             }
             SpecError::ZeroWindow => write!(f, "spec: lambda window must be positive"),
-            SpecError::DeadlineNeedsSingleStream => {
-                write!(f, "spec: deadline contracts run single-stream; set streams(1)")
-            }
             SpecError::EmptyDataset => write!(f, "dataset: at least one level required"),
             SpecError::BadEpsilonLadder => write!(
                 f,
@@ -380,11 +379,10 @@ impl TransferSpecBuilder {
         }
         match self.contract {
             Contract::Deadline(tau) => {
-                if tau.is_nan() || tau <= 0.0 {
+                // Finite too: the pooled engine's τ budget arithmetic
+                // rejects ∞, so catch it here as a typed error.
+                if !tau.is_finite() || tau <= 0.0 {
                     return Err(SpecError::ZeroDeadline);
-                }
-                if self.streams > 1 {
-                    return Err(SpecError::DeadlineNeedsSingleStream);
                 }
             }
             Contract::Fidelity(bound) => {
@@ -460,22 +458,28 @@ mod tests {
             .build()
             .unwrap_err();
         assert_eq!(err, SpecError::ZeroDeadline);
-        // NaN deadlines are equally meaningless.
-        let err = TransferSpec::builder()
-            .contract(Contract::Deadline(f64::NAN))
-            .build()
-            .unwrap_err();
-        assert_eq!(err, SpecError::ZeroDeadline);
+        // NaN and infinite deadlines are equally meaningless (the pool's
+        // τ budget arithmetic needs a finite number).
+        for bad in [f64::NAN, f64::INFINITY] {
+            let err = TransferSpec::builder()
+                .contract(Contract::Deadline(bad))
+                .build()
+                .unwrap_err();
+            assert_eq!(err, SpecError::ZeroDeadline);
+        }
     }
 
     #[test]
-    fn deadline_requires_single_stream() {
-        let err = TransferSpec::builder()
+    fn deadline_builds_pooled() {
+        // The single-stream restriction is gone: Deadline contracts run
+        // on the multi-stream pool with pass-barrier tau accounting.
+        let spec = TransferSpec::builder()
             .contract(Contract::Deadline(10.0))
             .streams(4)
             .build()
-            .unwrap_err();
-        assert_eq!(err, SpecError::DeadlineNeedsSingleStream);
+            .unwrap();
+        assert_eq!(spec.streams(), 4);
+        assert_eq!(spec.contract(), Contract::Deadline(10.0));
     }
 
     #[test]

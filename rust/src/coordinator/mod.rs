@@ -39,9 +39,12 @@ pub mod session;
 
 pub use crate::api::Contract;
 pub use arena::FtgArena;
-pub use packet::{FragmentHeader, FragmentView, Manifest, Packet, PacketView, WireError};
+pub use packet::{
+    FragmentHeader, FragmentView, Manifest, ManifestLevel, Packet, PacketView, WireError,
+};
 pub use pool::{
-    PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport, RecvPassRecord, TransferPool,
+    DeadlineOutcome, PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport,
+    RecvPassRecord, ShedDecision, TransferPool,
 };
 #[allow(deprecated)]
 pub use receiver::run_receiver;

@@ -68,6 +68,12 @@ pub enum Packet {
     /// Receiver → sender: of the `expected` fragments announced for
     /// `pass`, `received` survived the wire (λ̂ input at the sender).
     PassStats { pass: u32, expected: u64, received: u64 },
+    /// Sender → receiver (pooled Deadline): a pass barrier shed level
+    /// `level` — its advertised prefix shrinks to `bytes` (0 = the level
+    /// is abandoned entirely) with measured ε `eps`. Idempotent: re-sent
+    /// ahead of every later `EndOfPass` so a lossy control path
+    /// converges on the same manifest state.
+    LevelShed { level: u8, bytes: u64, eps: f64 },
 }
 
 /// Fragment metadata (the paper's per-packet erasure-coding metadata).
@@ -92,6 +98,24 @@ pub struct FragmentHeader {
     pub pass: u32,
 }
 
+/// One level entry of the transfer manifest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ManifestLevel {
+    /// Advertised byte size (a plane-cut prefix when `cut` is set).
+    pub size: u64,
+    /// Relative L∞ error after receiving levels up to this one.
+    pub eps: f64,
+    /// Pass-0 parity the sender planned this level's FTG geometry with:
+    /// every group except the level tail slices `k = n − m0` data
+    /// fragments, so a receiver can recompute the exact group strides
+    /// for FTGs it never saw (whole-level first-pass loss) instead of
+    /// guessing the worst case `k = n`.
+    pub m0: u8,
+    /// The advertised size is a decodable plane-cut prefix of a larger
+    /// level (Deadline shedding at bitplane granularity).
+    pub cut: bool,
+}
+
 /// Transfer manifest: level schedule + coding geometry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
@@ -101,10 +125,10 @@ pub struct Manifest {
     pub s: u32,
     /// Concurrent sender streams (1 for plain sessions).
     pub streams: u8,
-    /// Per-level (byte size, ε) pairs, in transmission order.
-    pub levels: Vec<(u64, f64)>,
+    /// Per-level entries, in transmission order.
+    pub levels: Vec<ManifestLevel>,
     /// Contract: 0 = guaranteed error bound (Alg. 1, retransmission on),
-    /// 1 = guaranteed time (Alg. 2, no retransmission).
+    /// 1 = guaranteed time (Alg. 2 / pooled pass-barrier τ accounting).
     pub contract: u8,
 }
 
@@ -117,6 +141,10 @@ const KIND_MANIFEST: u8 = 6;
 const KIND_MANIFEST_ACK: u8 = 7;
 const KIND_STREAM_END: u8 = 8;
 const KIND_PASS_STATS: u8 = 9;
+const KIND_LEVEL_SHED: u8 = 10;
+
+/// Bytes per manifest level entry on the wire: size + ε + m0 + cut flag.
+const MANIFEST_LEVEL_BYTES: usize = 8 + 8 + 1 + 1;
 
 /// Fragment wire header length after the kind byte.
 const FRAGMENT_HEADER: usize = 1 + 1 + 4 + 1 + 1 + 1 + 8 + 4 + 4;
@@ -293,9 +321,11 @@ impl Packet {
                 out.push(m.contract);
                 out.push(m.streams);
                 out.extend_from_slice(&(m.levels.len() as u32).to_le_bytes());
-                for &(size, eps) in &m.levels {
-                    out.extend_from_slice(&size.to_le_bytes());
-                    out.extend_from_slice(&eps.to_le_bytes());
+                for level in &m.levels {
+                    out.extend_from_slice(&level.size.to_le_bytes());
+                    out.extend_from_slice(&level.eps.to_le_bytes());
+                    out.push(level.m0);
+                    out.push(level.cut as u8);
                 }
             }
             Packet::ManifestAck => out.push(KIND_MANIFEST_ACK),
@@ -310,6 +340,12 @@ impl Packet {
                 out.extend_from_slice(&pass.to_le_bytes());
                 out.extend_from_slice(&expected.to_le_bytes());
                 out.extend_from_slice(&received.to_le_bytes());
+            }
+            Packet::LevelShed { level, bytes, eps } => {
+                out.push(KIND_LEVEL_SHED);
+                out.push(*level);
+                out.extend_from_slice(&bytes.to_le_bytes());
+                out.extend_from_slice(&eps.to_le_bytes());
             }
         }
         let c = crc(out);
@@ -374,14 +410,16 @@ impl Packet {
                 let contract = rest[5];
                 let streams = rest[6];
                 let count = u32::from_le_bytes(rest[7..11].try_into().unwrap()) as usize;
-                need(11 + count * 16)?;
+                need(11 + count.saturating_mul(MANIFEST_LEVEL_BYTES))?;
                 let mut levels = Vec::with_capacity(count);
                 for i in 0..count {
-                    let off = 11 + i * 16;
-                    levels.push((
-                        u64::from_le_bytes(rest[off..off + 8].try_into().unwrap()),
-                        f64::from_le_bytes(rest[off + 8..off + 16].try_into().unwrap()),
-                    ));
+                    let off = 11 + i * MANIFEST_LEVEL_BYTES;
+                    levels.push(ManifestLevel {
+                        size: u64::from_le_bytes(rest[off..off + 8].try_into().unwrap()),
+                        eps: f64::from_le_bytes(rest[off + 8..off + 16].try_into().unwrap()),
+                        m0: rest[off + 16],
+                        cut: rest[off + 17] != 0,
+                    });
                 }
                 Ok(Packet::Manifest(Manifest { n, s, streams, levels, contract }))
             }
@@ -400,6 +438,14 @@ impl Packet {
                     pass: u32::from_le_bytes(rest[..4].try_into().unwrap()),
                     expected: u64::from_le_bytes(rest[4..12].try_into().unwrap()),
                     received: u64::from_le_bytes(rest[12..20].try_into().unwrap()),
+                })
+            }
+            KIND_LEVEL_SHED => {
+                need(1 + 8 + 8)?;
+                Ok(Packet::LevelShed {
+                    level: rest[0],
+                    bytes: u64::from_le_bytes(rest[1..9].try_into().unwrap()),
+                    eps: f64::from_le_bytes(rest[9..17].try_into().unwrap()),
                 })
             }
             k => Err(WireError::UnknownKind(k)),
@@ -460,11 +506,16 @@ mod tests {
             n: 32,
             s: 4096,
             streams: 4,
-            levels: vec![(668 << 20, 0.004), (2867 << 20, 0.0005)],
+            levels: vec![
+                ManifestLevel { size: 668 << 20, eps: 0.004, m0: 5, cut: false },
+                ManifestLevel { size: 2867 << 20, eps: 0.0005, m0: 0, cut: true },
+            ],
             contract: 1,
         }));
         roundtrip(Packet::StreamEnd { stream: 3, pass: 2, sent: 123_456 });
         roundtrip(Packet::PassStats { pass: 1, expected: 50_000, received: 49_500 });
+        roundtrip(Packet::LevelShed { level: 3, bytes: 40 * 1024, eps: 0.0042 });
+        roundtrip(Packet::LevelShed { level: 0, bytes: 0, eps: 1.0 });
     }
 
     #[test]

@@ -46,27 +46,29 @@
 
 use super::arena::FtgArena;
 use super::packet::{
-    encode_fragment_into, FragmentHeader, Manifest, Packet, PacketView, MAX_DATAGRAM,
-    MAX_LOST_PER_MSG,
+    encode_fragment_into, FragmentHeader, Manifest, ManifestLevel, Packet, PacketView,
+    MAX_DATAGRAM, MAX_LOST_PER_MSG,
 };
 use super::receiver::ReceiverConfig;
 use super::sender::pace_until;
 use crate::api::observer::{emit, EventSink};
-use crate::api::TransferEvent;
+use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
-use crate::model::params::{LevelSchedule, NetParams};
+use crate::model::error_model::{optimize_deadline_bitplane, BitplaneDeadlinePlan};
+use crate::model::params::{LevelSchedule, NetParams, PlaneCut};
 use crate::model::time_model::optimize_parity;
 use crate::transport::channel::{Datagram, FrameQueue};
 use crate::transport::frame::FramePool;
 use crate::util::err::Result;
 use crate::{anyhow, bail};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Configuration for a multi-stream pool transfer (guaranteed-error-bound
-/// contract, the paper's Alg. 1 generalized to N streams).
+/// Configuration for a multi-stream pool transfer: the paper's Alg. 1
+/// generalized to N streams, plus pass-barrier τ accounting for the
+/// Deadline contract (Alg. 2 with bounded retransmission).
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Network/coding parameters; `net.r` is the **per-stream** pacing
@@ -75,13 +77,20 @@ pub struct PoolConfig {
     /// Concurrent sender workers (≥ 1; 1 degenerates to a single-stream
     /// engine with the pool protocol).
     pub streams: usize,
-    /// Deliver every level needed for this relative L∞ bound.
-    pub error_bound: f64,
-    /// Initial λ estimate feeding the first Eq. 8 solve (losses/s over
-    /// the aggregate link).
+    /// What the transfer guarantees: `Fidelity`/`BestEffort` retransmit
+    /// until every needed level is recovered; `Deadline(τ)` debits a
+    /// virtual τ budget at each pass barrier and sheds work that no
+    /// longer fits ([`DeadlineOutcome`]).
+    pub contract: Contract,
+    /// Initial λ estimate feeding the first Eq. 8 / Eq. 12 solve
+    /// (losses/s over the aggregate link).
     pub initial_lambda: f64,
     /// Abort the transfer after this much wall time.
     pub max_duration: Duration,
+    /// Sub-level [`PlaneCut`]s per level (codec datasets; empty = whole-
+    /// level shed granularity). Lets a Deadline transfer keep a decodable
+    /// bitplane prefix of a level it cannot afford in full.
+    pub plane_cuts: Vec<Vec<PlaneCut>>,
 }
 
 impl PoolConfig {
@@ -96,13 +105,62 @@ impl PoolConfig {
             bail!("fragment size must be positive");
         }
         super::packet::validate_fragment_size(self.net.s)?;
+        match self.contract {
+            Contract::Deadline(tau) => {
+                if !tau.is_finite() || tau <= 0.0 {
+                    bail!("pool deadline must be positive and finite, got {tau}");
+                }
+            }
+            Contract::Fidelity(bound) => {
+                if bound.is_nan() || bound <= 0.0 || bound >= 1.0 {
+                    bail!("pool fidelity bound must be in (0, 1), got {bound}");
+                }
+            }
+            Contract::BestEffort => {}
+        }
         Ok(())
     }
 
-    /// Aggregate network parameters (what the Eq. 8 solver sees).
+    /// Aggregate network parameters (what the Eq. 8 / Eq. 12 solvers see).
     fn aggregate_net(&self, lambda: f64) -> NetParams {
         NetParams { lambda, r: self.net.r * self.streams as f64, ..self.net }
     }
+}
+
+/// One shed decision taken at a pass barrier: level `level`'s advertised
+/// prefix shrank to `kept_bytes` (0 = the level was abandoned entirely)
+/// because the residual τ budget could not afford its retransmission.
+/// `eps` is the relative L∞ error the transfer prefix achieves after the
+/// shed (the cut's measured ε for a partial shed; the preceding usable
+/// prefix's ε for a full shed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedDecision {
+    pub level: u8,
+    pub kept_bytes: u64,
+    pub eps: f64,
+}
+
+/// Sender-side account of a pooled Deadline transfer: how the virtual τ
+/// budget was spent and what the final advertisement promises.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeadlineOutcome {
+    /// The contracted deadline τ, seconds.
+    pub tau: f64,
+    /// Virtual seconds consumed: per pass, Eq. 9's aggregate air time
+    /// (fragments sent over `N·r`) plus one-way latency — a pure
+    /// function of the deterministic fragment counts, never of
+    /// wall-clock jitter, and priced exactly like the Eq. 12 solves.
+    pub virtual_elapsed: f64,
+    /// `virtual_elapsed ≤ τ` at completion, within the plan's
+    /// group-count rounding (Eq. 12 prices fractional groups; the wire
+    /// sends whole ones — at most one data fragment plus the pass-0
+    /// parity per level of deterministic slack).
+    pub met: bool,
+    /// ε the initial Eq. 12 bitplane plan promised.
+    pub planned_eps: f64,
+    /// ε of the final advertisement after all pass-barrier sheds (what
+    /// the receiver certifies when the transfer completes).
+    pub advertised_eps: f64,
 }
 
 /// One sender pass, as recorded in the deterministic transfer trace.
@@ -110,7 +168,8 @@ impl PoolConfig {
 pub struct PassRecord {
     /// Pass number (0 = initial transmission).
     pub pass: u32,
-    /// Parity fragments per FTG used for groups encoded this pass.
+    /// Parity fragments per FTG used for groups encoded this pass (the
+    /// maximum per-level parity when a Deadline plan differentiates).
     pub m: usize,
     /// FTGs transmitted this pass.
     pub ftgs: u64,
@@ -122,6 +181,9 @@ pub struct PassRecord {
     pub lambda_hat: f64,
     /// FTGs the receiver reported unrecoverable after this pass.
     pub lost_ftgs: u64,
+    /// Shed decisions taken at this pass's barrier (Deadline only; part
+    /// of the determinism contract asserted by `pool_e2e`).
+    pub shed: Vec<ShedDecision>,
 }
 
 /// Sender-side outcome of a pool transfer.
@@ -136,6 +198,8 @@ pub struct PoolSenderReport {
     pub trace: Vec<PassRecord>,
     /// λ̂ after each pass (same values as in `trace`, flat for plotting).
     pub lambda_history: Vec<f64>,
+    /// τ accounting for Deadline transfers (`None` otherwise).
+    pub deadline: Option<DeadlineOutcome>,
 }
 
 /// One receiver pass, as recorded in the deterministic transfer trace.
@@ -168,13 +232,219 @@ pub struct PoolReceiverReport {
 }
 
 /// One planned fault-tolerant group: `k` data fragments sliced from a
-/// level buffer at `offset`. Parity count is chosen per pass.
+/// level buffer at `offset`. `k` is fixed at pass 0 (the manifest's
+/// per-level `m0` lets the receiver recompute it); the parity count `m`
+/// is re-chosen per pass (parity rows nest, so later passes may raise
+/// it and the receiver combines fragments across passes).
 #[derive(Debug, Clone, Copy)]
 struct FtgJob {
     level: u8,
     ftg: u32,
     offset: usize,
     k: usize,
+    m: u8,
+}
+
+/// Pass-barrier τ accounting state for a pooled Deadline transfer.
+#[derive(Debug)]
+struct DeadlineState {
+    tau: f64,
+    planned_eps: f64,
+    /// Virtual seconds consumed so far (see [`DeadlineOutcome`]).
+    virtual_elapsed: f64,
+    /// Advertised per-level byte limits, shrunk by sheds (0 = abandoned).
+    limits: Vec<u64>,
+    /// Advertised per-level ε (a shed cut's measured ε after a partial).
+    adv_eps: Vec<f64>,
+    abandoned: Vec<bool>,
+    /// Levels advertised as a plane-cut prefix. A cut level is the
+    /// *last* usable rung: later rungs cannot refine the reconstruction
+    /// without its shed bitplanes, so the ε accounting must stop there
+    /// even when later levels happen to be fully delivered.
+    cut: Vec<bool>,
+    /// Encoded [`Packet::LevelShed`] advertisements, re-sent ahead of
+    /// every `EndOfPass` so a lossy control path converges.
+    shed_pkts: Vec<Vec<u8>>,
+}
+
+impl DeadlineState {
+    fn new(
+        tau: f64,
+        planned_eps: f64,
+        limits: Vec<u64>,
+        adv_eps: Vec<f64>,
+        cut: Vec<bool>,
+    ) -> DeadlineState {
+        let n = limits.len();
+        DeadlineState {
+            tau,
+            planned_eps,
+            virtual_elapsed: 0.0,
+            limits,
+            adv_eps,
+            abandoned: vec![false; n],
+            cut,
+            shed_pkts: Vec::new(),
+        }
+    }
+
+    /// ε of the advertised usable prefix: the last non-abandoned level's
+    /// advertised ε (1.0 when even level 0 was abandoned). The prefix
+    /// ends at the first plane-cut level — its missing bitplanes gate
+    /// every later rung (mirrored by the receiver's prefix walk).
+    fn advertised_eps(&self) -> f64 {
+        let mut eps = 1.0;
+        for ((gone, level_eps), is_cut) in
+            self.abandoned.iter().zip(&self.adv_eps).zip(&self.cut)
+        {
+            if *gone {
+                break;
+            }
+            eps = *level_eps;
+            if *is_cut {
+                break;
+            }
+        }
+        eps
+    }
+
+    /// Re-solve the deadline plan against the residual budget for the
+    /// pending retransmission set `next` (job indices into `jobs`), at
+    /// the barrier's λ̂. Mutates the kept jobs' per-pass parity, drops
+    /// shed jobs from `next` (marking them dead in `alive`), queues
+    /// [`Packet::LevelShed`] advertisements, and returns the decisions
+    /// for the pass trace. Deterministic: every input is a pure function
+    /// of (config, dataset, channel seeds).
+    fn replan(
+        &mut self,
+        cfg: &PoolConfig,
+        jobs: &mut [FtgJob],
+        alive: &mut [bool],
+        next: &mut Vec<usize>,
+        lambda_hat: f64,
+    ) -> Vec<ShedDecision> {
+        let s = cfg.net.s as u64;
+        // Reserve the closing barrier pass (one latency for the empty
+        // pass that converges the Done exchange after a shed) plus one
+        // group's air time of ceil-rounding slack — the Eq. 12 cost
+        // model prices fractional group counts.
+        let budget =
+            self.tau - self.virtual_elapsed - cfg.net.t - cfg.net.n as f64 / cfg.net.r;
+
+        // Pending retransmission set grouped by level, in level order.
+        let mut by_level: BTreeMap<u8, Vec<usize>> = BTreeMap::new();
+        for &i in next.iter() {
+            by_level.entry(jobs[i].level).or_default().push(i);
+        }
+        if by_level.is_empty() {
+            return Vec::new();
+        }
+        let order: Vec<u8> = by_level.keys().copied().collect();
+        let sizes: Vec<u64> = order
+            .iter()
+            .map(|l| by_level[l].iter().map(|&i| jobs[i].k as u64 * s).sum())
+            .collect();
+        let res_eps: Vec<f64> = order.iter().map(|&l| self.adv_eps[l as usize]).collect();
+
+        // Remap each level's plane cuts into residual (pending-byte)
+        // space: a cut at original offset C keeps the pending jobs with
+        // `offset < C`, so its residual cost is their byte mass. Cuts
+        // already outside the current advertisement, or collapsing to an
+        // empty/full pending set, are dropped; equal kept-masses keep the
+        // largest original cut (same retransmission cost, tighter ε).
+        let mut res_cuts: Vec<Vec<(PlaneCut, PlaneCut)>> = Vec::with_capacity(order.len());
+        for (oi, &l) in order.iter().enumerate() {
+            let li = l as usize;
+            let prev_eps = if oi == 0 { 1.0 } else { res_eps[oi - 1] };
+            let pending = &by_level[&l];
+            let mut list: Vec<(PlaneCut, PlaneCut)> = Vec::new();
+            for cut in cfg.plane_cuts.get(li).map(|v| v.as_slice()).unwrap_or(&[]) {
+                if cut.bytes >= self.limits[li] || cut.eps >= prev_eps || cut.eps <= res_eps[oi]
+                {
+                    continue;
+                }
+                let kept: u64 = pending
+                    .iter()
+                    .filter(|&&i| (jobs[i].offset as u64) < cut.bytes)
+                    .map(|&i| jobs[i].k as u64 * s)
+                    .sum();
+                if kept == 0 || kept >= sizes[oi] {
+                    continue;
+                }
+                let residual = PlaneCut { bytes: kept, eps: cut.eps };
+                match list.last_mut() {
+                    Some(last) if last.0.bytes == kept => *last = (residual, *cut),
+                    _ => list.push((residual, *cut)),
+                }
+            }
+            res_cuts.push(list);
+        }
+
+        let mut rsched = LevelSchedule::new(sizes, res_eps);
+        if res_cuts.iter().any(|c| !c.is_empty()) {
+            let remapped = res_cuts.iter().map(|c| c.iter().map(|p| p.0).collect()).collect();
+            rsched = rsched.with_cuts(remapped);
+        }
+        let plan = BitplaneDeadlinePlan::replan_residual(
+            &cfg.aggregate_net(lambda_hat),
+            &rsched,
+            budget,
+        );
+        let (kept_levels, base_m, partial) = match plan {
+            Some(p) => (p.base.levels, p.base.m, p.partial),
+            None => (0, Vec::new(), None),
+        };
+
+        let mut decisions = Vec::new();
+        let mut keep: Vec<usize> = Vec::new();
+        for (oi, &l) in order.iter().enumerate() {
+            let li = l as usize;
+            if oi < kept_levels {
+                let m_new = base_m[oi].min(255) as u8;
+                for &i in &by_level[&l] {
+                    jobs[i].m = m_new;
+                    keep.push(i);
+                }
+            } else if partial.as_ref().map_or(false, |(pi, _)| *pi == oi) {
+                // Keep the plane-cut prefix of the first excluded level
+                // (sent unprotected, matching the §5.2.3 optima).
+                let rcut = partial.as_ref().unwrap().1;
+                let orig = res_cuts[oi]
+                    .iter()
+                    .find(|(rc, _)| *rc == rcut)
+                    .map(|(_, o)| *o)
+                    .expect("residual cut originates from the remap");
+                for &i in &by_level[&l] {
+                    if (jobs[i].offset as u64) < orig.bytes {
+                        jobs[i].m = 0;
+                        keep.push(i);
+                    } else {
+                        alive[i] = false;
+                    }
+                }
+                self.limits[li] = orig.bytes;
+                self.adv_eps[li] = orig.eps;
+                self.cut[li] = true;
+                self.shed_pkts.push(
+                    Packet::LevelShed { level: l, bytes: orig.bytes, eps: orig.eps }.encode(),
+                );
+                decisions.push(ShedDecision { level: l, kept_bytes: orig.bytes, eps: orig.eps });
+            } else {
+                // The residual budget cannot afford this level at all.
+                for &i in &by_level[&l] {
+                    alive[i] = false;
+                }
+                self.abandoned[li] = true;
+                self.limits[li] = 0;
+                let eps_after = self.advertised_eps();
+                self.shed_pkts
+                    .push(Packet::LevelShed { level: l, bytes: 0, eps: eps_after }.encode());
+                decisions.push(ShedDecision { level: l, kept_bytes: 0, eps: eps_after });
+            }
+        }
+        *next = keep;
+        decisions
+    }
 }
 
 /// Multi-stream parallel transfer engine (see module docs).
@@ -226,27 +496,96 @@ impl TransferPool {
         D: Datagram,
     {
         let cfg = &self.cfg;
-        assert_eq!(levels.len(), eps.len());
+        if levels.len() != eps.len() {
+            bail!("pool sender: {} levels but {} epsilons", levels.len(), eps.len());
+        }
+        if levels.is_empty() {
+            bail!("pool sender: dataset has no levels");
+        }
+        if !cfg.plane_cuts.is_empty() && cfg.plane_cuts.len() != levels.len() {
+            bail!(
+                "pool sender: {} plane-cut lists for {} levels",
+                cfg.plane_cuts.len(),
+                levels.len()
+            );
+        }
         if data.len() != cfg.streams {
             bail!("pool wants {} data channels, got {}", cfg.streams, data.len());
         }
         let start = Instant::now();
         let n = cfg.net.n;
         let s = cfg.net.s;
-        let sched =
+        let mut sched =
             LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec());
-        let send_levels = sched.levels_for_error_bound(cfg.error_bound).ok_or_else(|| {
-            anyhow!("error bound {} unachievable: ε_L = {}", cfg.error_bound, eps[eps.len() - 1])
-        })?;
-        let total_bytes = sched.total_bytes(send_levels);
+        if !cfg.plane_cuts.is_empty() {
+            sched = sched.with_cuts(cfg.plane_cuts.clone());
+        }
+
+        // === Pass-0 plan ===
+        // Contract-dependent: how many levels go out, each level's byte
+        // limit (a Deadline plan may cap the last at a plane-cut prefix),
+        // the advertised ε, and the per-level pass-0 parity m0 — which
+        // the manifest carries so the receiver can recompute the exact
+        // FTG geometry of groups it never saw.
+        let lambda_hat0 = cfg.initial_lambda;
+        let mut limits: Vec<usize> = levels.iter().map(|l| l.len()).collect();
+        let mut adv_eps: Vec<f64> = eps.to_vec();
+        let mut cut_flag: Vec<bool> = vec![false; levels.len()];
+        let (send_levels, m0, mut deadline) = match cfg.contract {
+            Contract::Fidelity(bound) => {
+                let l = sched.levels_for_error_bound(bound).ok_or_else(|| {
+                    anyhow!("error bound {bound} unachievable: ε_L = {}", eps[eps.len() - 1])
+                })?;
+                let m =
+                    optimize_parity(&cfg.aggregate_net(lambda_hat0), sched.total_bytes(l).max(1))
+                        .m;
+                (l, vec![m; l], None)
+            }
+            Contract::BestEffort => {
+                let l = levels.len();
+                let m =
+                    optimize_parity(&cfg.aggregate_net(lambda_hat0), sched.total_bytes(l).max(1))
+                        .m;
+                (l, vec![m; l], None)
+            }
+            Contract::Deadline(tau) => {
+                let plan = optimize_deadline_bitplane(&cfg.aggregate_net(lambda_hat0), &sched, tau)
+                    .ok_or_else(|| anyhow!("deadline {tau}s infeasible for this schedule"))?;
+                let mut m = plan.base.m.clone();
+                let mut send = plan.base.levels;
+                if let Some((li, cut)) = plan.partial {
+                    limits[li] = cut.bytes as usize;
+                    adv_eps[li] = cut.eps;
+                    cut_flag[li] = true;
+                    m.push(0); // the partial level ships unprotected (§5.2.3)
+                    send = li + 1;
+                }
+                let planned_eps = plan.planned_eps(&sched);
+                let state = DeadlineState::new(
+                    tau,
+                    planned_eps,
+                    (0..send).map(|i| limits[i].min(levels[i].len()) as u64).collect(),
+                    adv_eps[..send].to_vec(),
+                    cut_flag[..send].to_vec(),
+                );
+                (send, m, Some(state))
+            }
+        };
 
         // === Handshake ===
         let manifest = Packet::Manifest(Manifest {
             n: n as u8,
             s: s as u32,
             streams: cfg.streams as u8,
-            levels: (0..send_levels).map(|i| (levels[i].len() as u64, eps[i])).collect(),
-            contract: 0,
+            levels: (0..send_levels)
+                .map(|i| ManifestLevel {
+                    size: limits[i].min(levels[i].len()) as u64,
+                    eps: adv_eps[i],
+                    m0: m0[i] as u8,
+                    cut: cut_flag[i],
+                })
+                .collect(),
+            contract: u8::from(!cfg.contract.retransmits()),
         });
         let mut acked = false;
         for _ in 0..50 {
@@ -262,24 +601,27 @@ impl TransferPool {
             bail!("pool receiver did not acknowledge manifest");
         }
 
-        // === Pass-0 plan: fixed m per pass keeps the trace deterministic;
-        // λ̂ feedback adapts the *next* pass (Eq. 8 re-solve). ===
-        let mut lambda_hat = cfg.initial_lambda;
-        let mut m = optimize_parity(&cfg.aggregate_net(lambda_hat), total_bytes.max(1)).m;
+        // Fixed per-pass parity keeps the trace deterministic; λ̂
+        // feedback adapts the *next* pass (Eq. 8 / Eq. 12 re-solve).
+        let mut lambda_hat = lambda_hat0;
 
         let mut jobs: Vec<FtgJob> = Vec::new();
         for (li, level) in levels.iter().enumerate().take(send_levels) {
+            let limit = limits[li].min(level.len());
             let mut offset = 0usize;
             let mut ftg = 0u32;
-            while offset < level.len() {
-                let remaining = level.len() - offset;
-                let k = (n - m).min(remaining.div_ceil(s)).max(1);
-                jobs.push(FtgJob { level: li as u8, ftg, offset, k });
+            while offset < limit {
+                let remaining = limit - offset;
+                let k = (n - m0[li]).min(remaining.div_ceil(s)).max(1);
+                jobs.push(FtgJob { level: li as u8, ftg, offset, k, m: m0[li] as u8 });
                 offset += k * s;
                 ftg += 1;
             }
         }
         let data_fragments: u64 = jobs.iter().map(|j| j.k as u64).sum();
+        // Jobs shed at a barrier stay dead even if a stale lost list
+        // mentions them again.
+        let mut alive = vec![true; jobs.len()];
 
         let mut report = PoolSenderReport {
             fragments_sent: 0,
@@ -288,6 +630,7 @@ impl TransferPool {
             duration: 0.0,
             trace: Vec::new(),
             lambda_history: Vec::new(),
+            deadline: None,
         };
 
         // Per-stream wire sequence numbers, monotone across passes.
@@ -300,8 +643,11 @@ impl TransferPool {
             if start.elapsed() > cfg.max_duration {
                 bail!("pool sender exceeded max duration");
             }
+            // The pass's representative parity: uniform for retransmitting
+            // contracts, the per-level maximum under a Deadline plan.
+            let pass_m: usize = todo.iter().map(|&i| jobs[i].m as usize).max().unwrap_or(0);
             emit(events, TransferEvent::PassStarted { pass });
-            emit(events, TransferEvent::ParityAdapted { pass, m });
+            emit(events, TransferEvent::ParityAdapted { pass, m: pass_m });
             // Deterministic shard: round-robin over the pass's job list.
             let shards: Vec<Vec<usize>> = (0..cfg.streams)
                 .map(|w| todo.iter().copied().skip(w).step_by(cfg.streams).collect())
@@ -318,7 +664,7 @@ impl TransferPool {
                     let seq0 = seqs[w];
                     handles.push(scope.spawn(move || {
                         send_shard(
-                            chan, w as u8, pass, m, shard, jobs_ref, levels, &net, pace, seq0,
+                            chan, w as u8, pass, shard, jobs_ref, levels, &net, pace, seq0,
                             events,
                         )
                     }));
@@ -340,6 +686,14 @@ impl TransferPool {
             let mut lost: Option<Vec<(u8, u32)>> = None;
             let mut finished = false;
             'exchange: for _ in 0..200 {
+                // Re-advertise pending sheds ahead of the barrier: the
+                // receiver must price lost FTGs against the *current*
+                // manifest, and LevelShed datagrams are idempotent.
+                if let Some(dl) = &deadline {
+                    for pkt in &dl.shed_pkts {
+                        control.send(pkt);
+                    }
+                }
                 control.send(&Packet::EndOfPass { pass }.encode());
                 let wait_until = Instant::now() + Duration::from_millis(200);
                 while Instant::now() < wait_until {
@@ -359,7 +713,10 @@ impl TransferPool {
                         }
                         _ => {}
                     }
-                    if stats.is_some() && lost.is_some() {
+                    if (stats.is_some() && lost.is_some()) || finished {
+                        // Done is terminal: the receiver certified
+                        // completion and may already be gone — never spin
+                        // the retry budget waiting for dropped stats.
                         break 'exchange;
                     }
                 }
@@ -367,49 +724,102 @@ impl TransferPool {
                     bail!("pool sender timed out awaiting pass {pass} feedback");
                 }
             }
-            let (expected, received) = stats.ok_or_else(|| {
-                anyhow!("no PassStats for pass {pass} (receiver gone?)")
-            })?;
-            let lost = lost.ok_or_else(|| anyhow!("no LostList for pass {pass}"))?;
-
-            // === Shared λ̂ update + Eq. 8 re-solve for the next pass ===
-            let loss_frac = if expected == 0 {
-                0.0
+            let (expected, received, lost) = if finished && (stats.is_none() || lost.is_none())
+            {
+                // A completed transfer whose PassStats/LostList datagrams
+                // were dropped: synthesize the final trace record instead
+                // of aborting on "no PassStats".
+                let (e, r) = stats.unwrap_or((0, 0));
+                (e, r, Vec::new())
             } else {
-                (1.0 - received as f64 / expected as f64).clamp(0.0, 1.0)
+                let (e, r) = stats
+                    .ok_or_else(|| anyhow!("no PassStats for pass {pass} (receiver gone?)"))?;
+                (e, r, lost.ok_or_else(|| anyhow!("no LostList for pass {pass}"))?)
             };
-            lambda_hat = loss_frac * cfg.net.r * cfg.streams as f64;
+
+            // === Shared λ̂ update (kept when no fresh statistics came) ===
+            if !finished || expected > 0 {
+                let loss_frac = if expected == 0 {
+                    0.0
+                } else {
+                    (1.0 - received as f64 / expected as f64).clamp(0.0, 1.0)
+                };
+                lambda_hat = loss_frac * cfg.net.r * cfg.streams as f64;
+            }
             report.lambda_history.push(lambda_hat);
             emit(events, TransferEvent::LambdaUpdated { lambda: lambda_hat });
+
+            // === Virtual-clock debit: Eq. 9 for the pass — aggregate
+            // air time over N·r plus one-way latency. Deterministic
+            // (a pure function of the fragment counts, unlike wall
+            // time) and priced like the Eq. 12 solves that planned the
+            // pass — modulo the whole-group ceil rounding the final
+            // `met` verdict and the replans' reserve account for. ===
+            let pass_secs = cfg.net.t
+                + pass_sent as f64 / (cfg.net.r * cfg.streams as f64);
+            if let Some(dl) = deadline.as_mut() {
+                dl.virtual_elapsed += pass_secs;
+            }
+
+            // === Next pass: map lost ids to jobs, re-solve, shed ===
+            let mut shed: Vec<ShedDecision> = Vec::new();
+            let mut next: Vec<usize> = Vec::new();
+            if !finished && !lost.is_empty() {
+                let index: HashMap<(u8, u32), usize> = jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, j)| ((j.level, j.ftg), i))
+                    .collect();
+                for key in &lost {
+                    match index.get(key) {
+                        Some(&i) => {
+                            if alive[i] {
+                                next.push(i);
+                            }
+                        }
+                        None => bail!("receiver reported unknown FTG {key:?}"),
+                    }
+                }
+                if let Some(dl) = deadline.as_mut() {
+                    // Pass-barrier τ accounting: price the pending set
+                    // under the fresh λ̂ against the residual budget and
+                    // shed what no longer fits (Eq. 12 re-solve).
+                    shed = dl.replan(cfg, &mut jobs, &mut alive, &mut next, lambda_hat);
+                } else {
+                    let lost_bytes: u64 =
+                        next.iter().map(|&i| jobs[i].k as u64 * s as u64).sum();
+                    let m_new =
+                        optimize_parity(&cfg.aggregate_net(lambda_hat), lost_bytes.max(1)).m;
+                    for &i in &next {
+                        jobs[i].m = m_new as u8;
+                    }
+                }
+            }
             report.trace.push(PassRecord {
                 pass,
-                m,
+                m: pass_m,
                 ftgs: todo.len() as u64,
                 fragments: pass_sent,
                 per_stream,
                 lambda_hat,
                 lost_ftgs: lost.len() as u64,
+                shed: shed.clone(),
             });
+            for d in &shed {
+                emit(
+                    events,
+                    TransferEvent::LevelShed {
+                        pass,
+                        level: d.level,
+                        kept_bytes: d.kept_bytes,
+                        eps: d.eps,
+                    },
+                );
+            }
 
             if finished || lost.is_empty() {
                 break;
             }
-
-            // Map the lost (level, ftg) ids back to job indices.
-            let index: HashMap<(u8, u32), usize> = jobs
-                .iter()
-                .enumerate()
-                .map(|(i, j)| ((j.level, j.ftg), i))
-                .collect();
-            let mut next: Vec<usize> = Vec::with_capacity(lost.len());
-            for key in &lost {
-                match index.get(key) {
-                    Some(&i) => next.push(i),
-                    None => bail!("receiver reported unknown FTG {key:?}"),
-                }
-            }
-            let lost_bytes: u64 = next.iter().map(|&i| jobs[i].k as u64 * s as u64).sum();
-            m = optimize_parity(&cfg.aggregate_net(lambda_hat), lost_bytes.max(1)).m;
             todo = next;
             pass += 1;
             report.passes = pass;
@@ -418,6 +828,23 @@ impl TransferPool {
             }
         }
 
+        if let Some(dl) = &deadline {
+            // Eq. 12 prices *fractional* group counts; the wire sends
+            // whole groups, so a plan that exactly saturates τ can land
+            // the virtual clock up to one data fragment plus m0 parity
+            // fragments per level above the fractional cost. Allow that
+            // deterministic rounding before calling τ missed (the
+            // replans' retransmission passes carry their own reserve).
+            let rounding = (send_levels + m0.iter().sum::<usize>() + 2) as f64
+                / (cfg.net.r * cfg.streams as f64);
+            report.deadline = Some(DeadlineOutcome {
+                tau: dl.tau,
+                virtual_elapsed: dl.virtual_elapsed,
+                met: dl.virtual_elapsed <= dl.tau + rounding,
+                planned_eps: dl.planned_eps,
+                advertised_eps: dl.advertised_eps(),
+            });
+        }
         report.duration = start.elapsed().as_secs_f64();
         Ok(report)
     }
@@ -453,7 +880,9 @@ impl TransferPool {
         let start = Instant::now();
 
         // === Handshake ===
-        let manifest: Manifest = loop {
+        // Mutable: Deadline senders shrink level advertisements mid-
+        // transfer via [`Packet::LevelShed`].
+        let mut manifest: Manifest = loop {
             if start.elapsed() > rcfg.max_duration {
                 bail!("pool receiver: no manifest");
             }
@@ -474,7 +903,18 @@ impl TransferPool {
         }
         let s = manifest.s as usize;
         super::packet::validate_fragment_size(s)?;
+        if manifest.n < 2 {
+            bail!("manifest group size n={} is malformed", manifest.n);
+        }
+        for (li, entry) in manifest.levels.iter().enumerate() {
+            if entry.m0 >= manifest.n {
+                bail!("manifest level {li} claims m0={} >= n={}", entry.m0, manifest.n);
+            }
+        }
         let num_levels = manifest.levels.len();
+        // Levels the sender abandoned at a pass barrier (never usable,
+        // as opposed to shrunk to a plane-cut prefix).
+        let mut abandoned = vec![false; num_levels];
 
         let mut report = PoolReceiverReport {
             levels: vec![None; num_levels],
@@ -530,9 +970,12 @@ impl TransferPool {
             // Answer an end-of-pass barrier whose stream markers have all
             // arrived. Returns true when the transfer is complete.
             // Idempotent: a duplicate EndOfPass resends the cached reply;
-            // passes older than the cache are ignored.
+            // passes older than the cache are ignored. The manifest is a
+            // parameter (not a capture) because LevelShed advertisements
+            // mutate it between barriers.
             let finalize = |pass: u32,
                                 control: &mut C,
+                                manifest: &Manifest,
                                 groups: &HashMap<(u8, u32), FtgArena>,
                                 announced: &HashMap<u32, HashMap<u8, u64>>,
                                 received_in_pass: &HashMap<u32, u64>,
@@ -556,7 +999,7 @@ impl TransferPool {
                 }
                 let expected: u64 = announced[&pass].values().sum();
                 let received = *received_in_pass.get(&pass).unwrap_or(&0);
-                let lost = collect_lost(&manifest, groups, s);
+                let lost = collect_lost(manifest, groups, s);
                 report.trace.push(RecvPassRecord {
                     pass,
                     expected,
@@ -599,11 +1042,30 @@ impl TransferPool {
                 // request; it is answered only once every stream's marker
                 // has drained from the fan-in, because per-channel FIFO
                 // then guarantees all surviving fragments of the pass are
-                // already in `groups`.
+                // already in `groups`. Shed advertisements precede the
+                // barrier they apply to (control is FIFO), so a barrier
+                // is always priced against the current manifest.
                 while let Some(n) = control.try_recv_into(&mut ctl_buf) {
                     last_packet = Instant::now();
-                    if let Ok(Packet::EndOfPass { pass }) = Packet::decode(&ctl_buf[..n]) {
-                        pending_end = Some(pass);
+                    match Packet::decode(&ctl_buf[..n]) {
+                        Ok(Packet::EndOfPass { pass }) => {
+                            pending_end = Some(pass);
+                        }
+                        Ok(Packet::LevelShed { level, bytes, eps }) => {
+                            let li = level as usize;
+                            if li < manifest.levels.len() {
+                                let entry = &mut manifest.levels[li];
+                                if bytes == 0 {
+                                    entry.size = 0;
+                                    abandoned[li] = true;
+                                } else if bytes < entry.size {
+                                    entry.size = bytes;
+                                    entry.eps = eps;
+                                    entry.cut = true;
+                                }
+                            }
+                        }
+                        _ => {}
                     }
                 }
                 if let Some(pass) = pending_end {
@@ -612,6 +1074,7 @@ impl TransferPool {
                         if finalize(
                             pass,
                             control,
+                            &manifest,
                             &groups,
                             &announced,
                             &received_in_pass,
@@ -657,7 +1120,7 @@ impl TransferPool {
         done?;
 
         // === Reconstruct levels (shared group table) ===
-        reconstruct_levels(&manifest, &groups, s, &mut report, events)?;
+        reconstruct_levels(&manifest, &groups, s, &abandoned, &mut report, events)?;
         report.duration = start.elapsed().as_secs_f64();
         Ok(report)
     }
@@ -715,13 +1178,13 @@ impl TransferPool {
 }
 
 /// Worker body: RS-encode and pace this stream's share of the pass.
-/// Returns the number of fragments sent.
+/// Parity is per-job (`FtgJob::m`), set by the pass's plan. Returns the
+/// number of fragments sent.
 #[allow(clippy::too_many_arguments)]
 fn send_shard<D: Datagram>(
     chan: &mut D,
     stream: u8,
     pass: u32,
-    m: usize,
     shard: &[usize],
     jobs: &[FtgJob],
     levels: &[Vec<u8>],
@@ -742,8 +1205,8 @@ fn send_shard<D: Datagram>(
     for &ji in shard {
         let job = jobs[ji];
         let level_bytes = &levels[job.level as usize];
-        // Parity never shrinks a group below its planned k.
-        let m_eff = m.min(255usize.saturating_sub(job.k));
+        // The fragment index is a u8: parity never pushes k + m past 255.
+        let m_eff = (job.m as usize).min(255usize.saturating_sub(job.k));
         // Slice k data fragments into the arena (zero-padding tails —
         // the arena is reused, so stale bytes must be overwritten).
         arena.reset(job.k as u8, m_eff as u8, s);
@@ -790,6 +1253,13 @@ fn send_shard<D: Datagram>(
 /// FTGs (per manifest byte accounting) that cannot currently be decoded.
 /// (Reassembly state lives in [`FtgArena`]s — one strided allocation per
 /// group with a presence bitmap, growing when later passes raise m.)
+///
+/// Never-seen FTGs are strided by the *pass-0 planner geometry*: the
+/// manifest carries each level's pass-0 parity `m0`, so every group but
+/// the level tail covers exactly `(n − m0)·s` bytes. (The old worst-case
+/// `n·s` stride under-enumerated whole-level first-pass loss — the
+/// receiver then wasted retransmission passes re-discovering the tail
+/// as earlier groups arrived.)
 fn collect_lost(
     manifest: &Manifest,
     groups: &HashMap<(u8, u32), FtgArena>,
@@ -797,7 +1267,9 @@ fn collect_lost(
 ) -> Vec<(u8, u32)> {
     let n = manifest.n as usize;
     let mut lost = Vec::new();
-    for (li, &(size, _)) in manifest.levels.iter().enumerate() {
+    for (li, entry) in manifest.levels.iter().enumerate() {
+        let size = entry.size; // shrinks when the sender sheds a level
+        let k0 = n.saturating_sub(entry.m0 as usize).max(1) as u64;
         let mut covered = 0u64;
         let mut ftg = 0u32;
         while covered < size {
@@ -809,10 +1281,12 @@ fn collect_lost(
                     covered += g.k() as u64 * s as u64;
                 }
                 None => {
-                    // Never seen: unrecoverable by definition; stride by
-                    // the worst case since its true k is unknown.
+                    // Never seen: unrecoverable by definition; recompute
+                    // the planner's k for this group.
                     lost.push((li as u8, ftg));
-                    covered += n as u64 * s as u64;
+                    let remaining = size - covered;
+                    let k = k0.min(remaining.div_ceil(s as u64)).max(1);
+                    covered += k * s as u64;
                 }
             }
             ftg += 1;
@@ -821,16 +1295,23 @@ fn collect_lost(
     lost
 }
 
-/// Rebuild the exact level bytes from the shared group table.
+/// Rebuild the exact level bytes from the shared group table. Levels the
+/// sender abandoned (`abandoned[li]`) stay `None`; levels shed to a
+/// plane-cut prefix reconstruct up to their (shrunken) advertised size.
 fn reconstruct_levels(
     manifest: &Manifest,
     groups: &HashMap<(u8, u32), FtgArena>,
     s: usize,
+    abandoned: &[bool],
     report: &mut PoolReceiverReport,
     events: EventSink<'_>,
 ) -> Result<()> {
     let mut codes: HashMap<(u8, u8), RsCode> = HashMap::new();
-    for (li, &(size, _eps)) in manifest.levels.iter().enumerate() {
+    for (li, entry) in manifest.levels.iter().enumerate() {
+        if abandoned[li] {
+            continue; // stays None: no usable prefix of this level
+        }
+        let size = entry.size;
         let mut out = Vec::with_capacity(size as usize);
         let mut ok = true;
         let mut ftg = 0u32;
@@ -881,16 +1362,23 @@ fn reconstruct_levels(
             report.levels[li] = Some(out);
         }
     }
+    // Usable prefix: leading recovered levels, ending at the first
+    // plane-cut level — a cut level's missing bitplanes gate every
+    // later rung, so a fully-delivered level *behind* a cut must not
+    // inflate the certified ε (the sender's advertised_eps mirrors
+    // this walk).
     let mut prefix = 0;
-    for l in &report.levels {
-        if l.is_some() {
-            prefix += 1;
-        } else {
+    for (li, l) in report.levels.iter().enumerate() {
+        if l.is_none() {
+            break;
+        }
+        prefix += 1;
+        if manifest.levels[li].cut {
             break;
         }
     }
     report.levels_recovered = prefix;
-    report.achieved_eps = if prefix == 0 { 1.0 } else { manifest.levels[prefix - 1].1 };
+    report.achieved_eps = if prefix == 0 { 1.0 } else { manifest.levels[prefix - 1].eps };
     Ok(())
 }
 
@@ -933,10 +1421,45 @@ mod tests {
         PoolConfig {
             net: NetParams { t: 0.0005, r: 200_000.0, lambda: 0.0, n: 32, s: 1024 },
             streams,
-            error_bound: 1e-7,
+            contract: Contract::Fidelity(1e-7),
             initial_lambda: 0.0,
             max_duration: Duration::from_secs(60),
+            plane_cuts: Vec::new(),
         }
+    }
+
+    /// Drops everything `drop_if` matches on the way out; delivery and
+    /// receive paths are untouched. `fn` pointers keep every filter the
+    /// same type, so sender and receiver control channels stay one `C`.
+    struct SendFilter<C: Datagram> {
+        inner: C,
+        drop_if: fn(&[u8]) -> bool,
+    }
+
+    impl<C: Datagram> Datagram for SendFilter<C> {
+        fn send(&mut self, buf: &[u8]) {
+            if !(self.drop_if)(buf) {
+                self.inner.send(buf);
+            }
+        }
+        fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+            self.inner.recv_into(buf, timeout)
+        }
+        fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+            self.inner.try_recv_into(buf)
+        }
+    }
+
+    fn keep_all(_: &[u8]) -> bool {
+        false
+    }
+
+    fn drop_pass_stats(buf: &[u8]) -> bool {
+        matches!(Packet::decode(buf), Ok(Packet::PassStats { .. }))
+    }
+
+    fn drop_pass0_fragments(buf: &[u8]) -> bool {
+        matches!(PacketView::decode(buf), Ok(PacketView::Fragment(v)) if v.header.pass == 0)
     }
 
     fn rcfg() -> ReceiverConfig {
@@ -989,7 +1512,7 @@ mod tests {
     fn error_bound_limits_transmitted_levels() {
         let (levels, eps) = test_levels(3);
         let mut c = cfg(2);
-        c.error_bound = 0.004; // level 1 suffices
+        c.contract = Contract::Fidelity(0.004); // level 1 suffices
         let pool = TransferPool::new(c).unwrap();
         let (mut sc, sd, mut rc, rd) = pool_channels(2);
         let (_s, r) = pool
@@ -1019,5 +1542,202 @@ mod tests {
             .pooled_sender(&mut sc, &mut sd, &levels, &eps, None)
             .unwrap_err();
         assert!(format!("{err}").contains("data channels"), "{err}");
+    }
+
+    #[test]
+    fn empty_level_set_is_an_error_not_a_panic() {
+        // Regression: `eps[eps.len() - 1]` used to panic on an empty
+        // level set before the error message could even be built.
+        let pool = TransferPool::new(cfg(2)).unwrap();
+        let (mut sc, mut sd, _rc, _rd) = pool_channels(2);
+        let err = pool
+            .pooled_sender(&mut sc, &mut sd, &[], &[], None)
+            .unwrap_err();
+        assert!(format!("{err}").contains("no levels"), "{err}");
+        // Mismatched lengths are equally a typed error, not an assert.
+        let err = pool
+            .pooled_sender(&mut sc, &mut sd, &[vec![0u8; 8]], &[], None)
+            .unwrap_err();
+        assert!(format!("{err}").contains("epsilons"), "{err}");
+    }
+
+    #[test]
+    fn whole_level_first_pass_loss_enumerates_every_ftg() {
+        // Regression for the `collect_lost` stride: never-seen FTGs used
+        // to be strided by the worst case n·s while the sender plans
+        // k = n − m0, so a 100%-loss first pass under-enumerated the
+        // lost list and wasted passes re-discovering the tail. With the
+        // manifest-carried m0 the very first lost list names every
+        // planned FTG and one retransmission pass finishes the job.
+        let (levels, eps) = test_levels(6);
+        let mut c = cfg(2);
+        // Honest-but-lossy λ₀ so the pass-0 plan buys parity (k < n).
+        c.initial_lambda = 0.2 * c.net.r * 2.0;
+        let pool = TransferPool::new(c).unwrap();
+        let (mut sc, sd_raw, mut rc, rd) = pool_channels(2);
+        let sd: Vec<SendFilter<MemChannel>> = sd_raw
+            .into_iter()
+            .map(|inner| SendFilter { inner, drop_if: drop_pass0_fragments })
+            .collect();
+        let (s_rep, r_rep) = pool
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        assert!(s_rep.trace[0].m >= 1, "regression needs k < n geometry");
+        assert_eq!(
+            s_rep.trace[0].lost_ftgs, s_rep.trace[0].ftgs,
+            "100% pass-0 loss: the first lost list must enumerate every planned FTG"
+        );
+        assert_eq!(s_rep.passes, 1, "exact enumeration ⇒ one retransmission pass");
+        for (got, want) in r_rep.levels.iter().zip(&levels) {
+            assert_eq!(got.as_ref().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn done_is_terminal_even_when_pass_stats_is_dropped() {
+        // Regression: a completed transfer whose PassStats datagram was
+        // dropped used to spin the full retry budget and then abort with
+        // "no PassStats" — after the receiver had already certified
+        // completion with Done.
+        let (levels, eps) = test_levels(8);
+        let pool = TransferPool::new(cfg(2)).unwrap();
+        let (sc_raw, sd, rc_raw, rd) = pool_channels(2);
+        let mut sc = SendFilter { inner: sc_raw, drop_if: keep_all };
+        let mut rc = SendFilter { inner: rc_raw, drop_if: drop_pass_stats };
+        let (s_rep, r_rep) = pool
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        assert_eq!(r_rep.levels_recovered, 3);
+        for (got, want) in r_rep.levels.iter().zip(&levels) {
+            assert_eq!(got.as_ref().unwrap(), want);
+        }
+        assert_eq!(s_rep.passes, 0);
+        assert_eq!(s_rep.trace.len(), 1, "synthesized final record");
+        assert_eq!(s_rep.trace[0].lost_ftgs, 0);
+        assert_eq!(s_rep.trace[0].lambda_hat, 0.0, "no fresh stats: λ̂ keeps its prior");
+    }
+
+    #[test]
+    fn pooled_deadline_generous_tau_delivers_everything() {
+        let mut c = cfg(4);
+        c.contract = Contract::Deadline(60.0);
+        let pool = TransferPool::new(c).unwrap();
+        let (levels, eps) = test_levels(9);
+        let (mut sc, sd, mut rc, rd) = pool_channels(4);
+        let (s_rep, r_rep) = pool
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        assert_eq!(r_rep.levels_recovered, 3);
+        for (got, want) in r_rep.levels.iter().zip(&levels) {
+            assert_eq!(got.as_ref().unwrap(), want);
+        }
+        let dl = s_rep.deadline.as_ref().expect("deadline outcome");
+        assert!(dl.met, "generous τ must be met: {dl:?}");
+        assert!(dl.virtual_elapsed <= dl.tau);
+        assert!((dl.advertised_eps - eps[2]).abs() < 1e-15, "nothing shed");
+        assert!(s_rep.trace.iter().all(|p| p.shed.is_empty()));
+        assert!((r_rep.achieved_eps - dl.advertised_eps).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pooled_deadline_exhausted_budget_sheds_pending_levels() {
+        // Pass 0 goes out unprotected under a lying λ₀ = 0; every pass-0
+        // fragment dies; the barrier then shows the (tight) τ cannot fit
+        // retransmitting everything, so the tail levels are shed
+        // deterministically and the transfer still completes.
+        let (levels, eps) = test_levels(10);
+        let mut c = cfg(2);
+        // τ ≈ 2 × the unprotected pass-0 air time: after the total pass-0
+        // loss the residual budget can afford retransmitting a level
+        // prefix, nowhere near the whole dataset.
+        let frags: f64 = levels.iter().map(|l| l.len().div_ceil(1024) as f64).sum();
+        let tau = 2.0 * (0.0005 + frags / (2.0 * 200_000.0));
+        c.contract = Contract::Deadline(tau);
+        let pool = TransferPool::new(c).unwrap();
+        let (mut sc, sd_raw, mut rc, rd) = pool_channels(2);
+        let sd: Vec<SendFilter<MemChannel>> = sd_raw
+            .into_iter()
+            .map(|inner| SendFilter { inner, drop_if: drop_pass0_fragments })
+            .collect();
+        let (s_rep, r_rep) = pool
+            .pooled_session(&mut sc, sd, &mut rc, rd, &rcfg(), &levels, &eps)
+            .unwrap();
+        let dl = s_rep.deadline.as_ref().expect("deadline outcome");
+        let shed: Vec<&ShedDecision> = s_rep.trace.iter().flat_map(|p| &p.shed).collect();
+        assert!(!shed.is_empty(), "tight τ after total loss must shed: {dl:?}");
+        assert!(dl.met, "shedding must keep the virtual clock inside τ: {dl:?}");
+        // The receiver certifies exactly what the sender advertised.
+        assert!(
+            (r_rep.achieved_eps - dl.advertised_eps).abs() < 1e-15,
+            "receiver ε {} vs advertised {}",
+            r_rep.achieved_eps,
+            dl.advertised_eps
+        );
+        // Raw datasets have no plane cuts ⇒ every shed abandons a whole
+        // level, so the usable prefix genuinely shrank.
+        assert!(r_rep.levels_recovered < 3, "something must have been shed");
+        // Abandoned levels stay None; recovered prefix is byte-exact.
+        for li in 0..r_rep.levels_recovered {
+            assert_eq!(r_rep.levels[li].as_ref().unwrap(), &levels[li]);
+        }
+    }
+
+    #[test]
+    fn usable_prefix_stops_at_a_cut_level_even_when_later_levels_arrived() {
+        // Certification soundness: a mid-transfer plane-cut shed of
+        // level 1 removes bitplanes that every later rung depends on.
+        // A fully-delivered level 2 behind that cut must not inflate the
+        // certified ε — the prefix (and thus achieved_eps) stops at the
+        // cut on both sides.
+        let s = 4usize;
+        let mut groups: HashMap<(u8, u32), FtgArena> = HashMap::new();
+        for li in 0u8..3 {
+            let mut g = FtgArena::new(1, 0, s);
+            g.insert(0, &[li; 4]);
+            groups.insert((li, 0), g);
+        }
+        let manifest = Manifest {
+            n: 32,
+            s: s as u32,
+            streams: 1,
+            contract: 1,
+            levels: vec![
+                ManifestLevel { size: 4, eps: 0.01, m0: 0, cut: false },
+                ManifestLevel { size: 4, eps: 0.004, m0: 0, cut: true }, // shed to a cut
+                ManifestLevel { size: 4, eps: 0.0001, m0: 0, cut: false },
+            ],
+        };
+        let mut report = PoolReceiverReport {
+            levels: vec![None; 3],
+            levels_recovered: 0,
+            achieved_eps: 1.0,
+            fragments_received: 0,
+            groups_recovered: 0,
+            duration: 0.0,
+            trace: Vec::new(),
+        };
+        reconstruct_levels(&manifest, &groups, s, &[false; 3], &mut report, None).unwrap();
+        assert!(report.levels.iter().all(|l| l.is_some()), "all bytes arrived");
+        assert_eq!(report.levels_recovered, 2, "prefix ends at the cut level");
+        assert!(
+            (report.achieved_eps - 0.004).abs() < 1e-15,
+            "certify the cut ε, not the later rung's: {}",
+            report.achieved_eps
+        );
+
+        // The sender's advertisement walks identically.
+        let mut dl = DeadlineState::new(
+            10.0,
+            0.0001,
+            vec![4, 4, 4],
+            vec![0.01, 0.004, 0.0001],
+            vec![false, false, false],
+        );
+        dl.cut[1] = true;
+        dl.adv_eps[1] = 0.004;
+        assert!((dl.advertised_eps() - 0.004).abs() < 1e-15);
+        // An abandoned level 0 trumps everything.
+        dl.abandoned[0] = true;
+        assert!((dl.advertised_eps() - 1.0).abs() < 1e-15);
     }
 }

@@ -197,7 +197,8 @@ pub(crate) fn transfer_receiver(
     }
 
     // === Reconstruct levels ===
-    for (li, &(size, _eps)) in manifest.levels.iter().enumerate() {
+    for (li, entry) in manifest.levels.iter().enumerate() {
+        let size = entry.size;
         let mut out = Vec::with_capacity(size as usize);
         let mut ok = true;
         let mut ftg = 0u32;
@@ -247,12 +248,18 @@ pub(crate) fn transfer_receiver(
         }
     }
 
-    // Usable prefix + achieved ε.
+    // Usable prefix + achieved ε. The prefix ends at the first
+    // plane-cut level: its missing bitplanes gate every later rung
+    // (for the single-stream engine the cut is always the last
+    // advertised level, so this is belt-and-braces consistency with
+    // the pooled walk).
     let mut prefix = 0;
-    for l in &report.levels {
-        if l.is_some() {
-            prefix += 1;
-        } else {
+    for (li, l) in report.levels.iter().enumerate() {
+        if l.is_none() {
+            break;
+        }
+        prefix += 1;
+        if manifest.levels[li].cut {
             break;
         }
     }
@@ -260,7 +267,7 @@ pub(crate) fn transfer_receiver(
     report.achieved_eps = if prefix == 0 {
         1.0
     } else {
-        manifest.levels[prefix - 1].1
+        manifest.levels[prefix - 1].eps
     };
     report.duration = start.elapsed().as_secs_f64();
     Ok(report)
@@ -274,13 +281,16 @@ fn collect_lost(
 ) -> Vec<(u8, u32)> {
     let n = manifest.n as usize;
     let mut lost = Vec::new();
-    for (li, &(size, _)) in manifest.levels.iter().enumerate() {
-        // Walk the level's groups by byte accounting. Group geometry (k)
-        // varies with m over time, so rely on what we saw; a group never
-        // seen at all is unrecoverable by definition. We can't know its k
-        // without any fragment, so we approximate with the worst case
-        // k = n (sender keeps every generated FTG keyed by id, so the id
-        // is what matters for retransmission).
+    for (li, entry) in manifest.levels.iter().enumerate() {
+        let size = entry.size;
+        // Walk the level's groups by byte accounting. Unlike the pooled
+        // engine (fixed k per job, exact m0 recompute in its
+        // `collect_lost`), the single-stream sender adapts m — and thus
+        // k — *mid-pass* on λ updates, so the manifest's m0 cannot be
+        // trusted for never-seen groups here: a too-small stride would
+        // over-enumerate FTG ids that are then reported lost forever.
+        // Stick to the conservative worst case k = n (under-enumerates,
+        // converging as retransmitted groups reveal their true k).
         let mut covered = 0u64;
         let mut ftg = 0u32;
         while covered < size {

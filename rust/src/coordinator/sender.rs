@@ -8,7 +8,9 @@
 //! (λ updates, lost-FTG lists) and drives passive retransmission.
 
 use super::arena::FtgArena;
-use super::packet::{encode_fragment_into, validate_fragment_size, FragmentHeader, Manifest, Packet};
+use super::packet::{
+    encode_fragment_into, validate_fragment_size, FragmentHeader, Manifest, ManifestLevel, Packet,
+};
 use crate::api::observer::{emit, EventSink};
 use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
@@ -104,6 +106,7 @@ pub(crate) fn transfer_sender(
     // cut's measured ε and its truncated size.
     let mut limits: Vec<usize> = levels.iter().map(|l| l.len()).collect();
     let mut manifest_eps = eps.to_vec();
+    let mut cut_flags = vec![false; levels.len()];
     let (send_levels, deadline) = match cfg.contract {
         Contract::Fidelity(bound) => {
             let l = sched.levels_for_error_bound(bound).ok_or_else(|| {
@@ -121,10 +124,24 @@ pub(crate) fn transfer_sender(
             if let Some((li, cut)) = plan.partial {
                 limits[li] = cut.bytes as usize;
                 manifest_eps[li] = cut.eps;
+                cut_flags[li] = true;
                 m.push(0); // partial level ships unprotected (§5.2.3)
                 send = li + 1;
             }
             (send, Some((tau, m)))
+        }
+    };
+    // Per-level pass-0 parity advertised in the manifest. Deadline plans
+    // fix it per level; the adaptive contracts start from the initial
+    // Eq. 8 solve (the same one the parity thread seeds itself with).
+    // The single-stream receiver treats it as advisory only — see its
+    // `collect_lost` — but the wire geometry hint costs nothing.
+    let manifest_m0: Vec<u8> = match &deadline {
+        Some((_, m)) => m.iter().map(|&mi| mi as u8).collect(),
+        None => {
+            let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
+            let m = optimize_parity(&p, sched.total_bytes(send_levels).max(1)).m;
+            vec![m as u8; send_levels]
         }
     };
 
@@ -138,8 +155,15 @@ pub(crate) fn transfer_sender(
         n: n as u8,
         s: s as u32,
         streams: 1,
-        levels: (0..send_levels).map(|i| (limits[i] as u64, manifest_eps[i])).collect(),
-        contract: if cfg.contract.retransmits() { 0 } else { 1 },
+        levels: (0..send_levels)
+            .map(|i| ManifestLevel {
+                size: limits[i] as u64,
+                eps: manifest_eps[i],
+                m0: manifest_m0[i],
+                cut: cut_flags[i],
+            })
+            .collect(),
+        contract: u8::from(!cfg.contract.retransmits()),
     });
     let mut acked = false;
     for _ in 0..50 {

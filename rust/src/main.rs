@@ -129,7 +129,7 @@ const COMMANDS: &[CommandSpec] = &[
             OptSpec { name: "loss", value: Some("frac"), help: "injected fragment-loss fraction" },
             OptSpec { name: "streams", value: Some("n"), help: "concurrent streams" },
             OptSpec { name: "rate", value: Some("frag/s"), help: "per-stream pacing rate" },
-            OptSpec { name: "deadline", value: Some("s"), help: "use a Deadline contract (single-stream)" },
+            OptSpec { name: "deadline", value: Some("s"), help: "use a Deadline contract" },
         ],
     },
 ];
@@ -543,9 +543,6 @@ fn cmd_codec(args: &Args) {
         None => Contract::Fidelity(*enc.eps.last().expect("non-empty ladder")),
     };
     let dataset = Dataset::from_encoded(enc);
-    // Deadline contracts are single-stream; λ₀ must match the streams
-    // actually used or the plan prices loss against phantom bandwidth.
-    let streams = if matches!(contract, Contract::Deadline(_)) { 1 } else { streams };
     let spec = TransferSpec::builder()
         .contract(contract)
         .streams(streams)
@@ -559,6 +556,15 @@ fn cmd_codec(args: &Args) {
         loss_transport_pair(spec.streams(), |w| LossTrace::seeded(loss, seed ^ (w as u64 + 0x51)));
     let mut log = EventLog::new();
     let report = run_pair(&spec, st, rt, &dataset, None, Some(&mut log)).expect("codec transfer");
+    if let Some(dl) = report.sent.deadline() {
+        println!(
+            "deadline: τ = {:.4}s, virtual clock {:.4}s ({}), advertised ε ≤ {:.3e}",
+            dl.tau,
+            dl.virtual_elapsed,
+            if dl.met { "met" } else { "MISSED" },
+            dl.advertised_eps
+        );
+    }
 
     // 3. Progressive decode: the facade already replayed the prefix.
     for e in log.filtered(|e| matches!(e, TransferEvent::LevelDecoded { .. })) {

@@ -247,6 +247,27 @@ impl BitplaneDeadlinePlan {
             None => sched.eps_with_levels(self.base.levels),
         }
     }
+
+    /// Re-solve Eq. 12 against a **residual** schedule and budget — the
+    /// pass-barrier τ-accounting hook of the pooled Deadline engine. The
+    /// caller prices its pending retransmission set as a schedule (one
+    /// entry per level still missing data, `sizes` = pending bytes under
+    /// the pass-0 geometry, plane cuts remapped into pending-byte space)
+    /// and passes the deadline budget left after the virtual clock's
+    /// debits. `None` means not even one pending level fits at `m = 0`:
+    /// shed everything still pending. The returned plan's `base.levels`
+    /// counts *residual* levels (a prefix of the residual schedule), and
+    /// `partial` names a residual-space cut of the first excluded one.
+    pub fn replan_residual(
+        params: &NetParams,
+        residual: &LevelSchedule,
+        budget: f64,
+    ) -> Option<BitplaneDeadlinePlan> {
+        if budget.is_nan() || budget <= 0.0 {
+            return None;
+        }
+        optimize_deadline_bitplane(params, residual, budget)
+    }
 }
 
 /// Eq. 12 at bitplane granularity. Solves the paper's whole-level model
@@ -583,6 +604,36 @@ mod tests {
         let tight = plan.base.time + 0.01;
         let tight_plan = optimize_deadline_bitplane(&p, &sched, tight).unwrap();
         assert!(tight_plan.partial.is_none(), "10 ms slack < 40 fragments");
+    }
+
+    #[test]
+    fn replan_residual_degrades_gracefully_with_the_budget() {
+        let p = NetParams { t: 0.001, r: 1000.0, lambda: 0.0, n: 32, s: 1024 };
+        // A pending retransmission set: 32 KiB of level 1 and 128 KiB of
+        // level 2 still missing, level 2 carrying one remapped cut.
+        let residual = LevelSchedule::new(vec![32 * 1024, 128 * 1024], vec![0.01, 0.0001])
+            .with_cuts(vec![
+                vec![],
+                vec![PlaneCut { bytes: 40 * 1024, eps: 0.004 }],
+            ]);
+        // Generous budget: everything pending fits.
+        let all = BitplaneDeadlinePlan::replan_residual(&p, &residual, 10.0).unwrap();
+        assert_eq!(all.base.levels, 2);
+        assert!(all.partial.is_none());
+        // Mid budget: level 1 plus the 40 KiB cut of level 2 (32 + 40
+        // fragments ≈ 0.073 s at m = 0).
+        let mid = BitplaneDeadlinePlan::replan_residual(&p, &residual, 0.085).unwrap();
+        assert_eq!(mid.base.levels, 1);
+        let (level, cut) = mid.partial.expect("slack fits the remapped cut");
+        assert_eq!(level, 1);
+        assert_eq!(cut.bytes, 40 * 1024);
+        // Tiny budget: level 1 alone, cut unaffordable.
+        let tight = BitplaneDeadlinePlan::replan_residual(&p, &residual, 0.04).unwrap();
+        assert_eq!(tight.base.levels, 1);
+        assert!(tight.partial.is_none());
+        // No budget at all: shed everything pending.
+        assert!(BitplaneDeadlinePlan::replan_residual(&p, &residual, 0.0).is_none());
+        assert!(BitplaneDeadlinePlan::replan_residual(&p, &residual, -1.0).is_none());
     }
 
     #[test]

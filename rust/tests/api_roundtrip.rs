@@ -143,6 +143,180 @@ fn deadline_over_lossy_testkit_returns_exact_prefix() {
     assert!(rep.received.levels_recovered >= 1, "level 1 must survive");
 }
 
+#[test]
+fn pooled_deadline_matrix_meets_tau_in_virtual_time() {
+    // The tentpole acceptance matrix: Deadline on the multi-stream pool,
+    // {2, 4} streams × {0%, 5%, 20%} deterministic loss. τ is generous,
+    // so the τ budget absorbs every λ̂-adapted retransmission pass:
+    // everything arrives byte-exact, the virtual clock stays inside τ,
+    // and the receiver's ε equals the sender's advertisement.
+    for &streams in &[2usize, 4] {
+        for &(loss, seed) in &[(0.0, 31u64), (0.05, 32), (0.20, 33)] {
+            let data = test_dataset(0xDEAD ^ seed);
+            let tau = 60.0;
+            let s = spec(
+                Contract::Deadline(tau),
+                streams,
+                loss * streams as f64 * 200_000.0,
+            );
+            let (st, rt) = loss_transport_pair(streams, |w| {
+                LossTrace::seeded(loss, seed ^ (w as u64 + 1) * 0x9E37)
+            });
+            let rep = run_pair(&s, st, rt, &data, None, None).unwrap();
+            let ctx = format!("streams={streams} loss={loss}");
+            assert!(rep.sent.pooled().is_some(), "{ctx}: deadline routes pooled");
+            let dl = rep.sent.deadline().expect("pooled deadline outcome");
+            assert!(dl.met, "{ctx}: τ must be met, got {dl:?}");
+            assert!(dl.virtual_elapsed <= tau, "{ctx}: {dl:?}");
+            assert_byte_exact(&rep.received.levels, &data);
+            assert!(
+                (rep.received.achieved_eps - dl.advertised_eps).abs() < 1e-15,
+                "{ctx}: receiver ε {} vs advertised {}",
+                rep.received.achieved_eps,
+                dl.advertised_eps
+            );
+            assert!(
+                rep.sent.trace().unwrap().iter().all(|p| p.shed.is_empty()),
+                "{ctx}: generous τ must not shed"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_deadline_tight_budget_sheds_deterministically() {
+    // A lying λ₀ = 0 sends pass 0 unprotected; 20% loss then forces the
+    // pass-barrier replans to shed late levels. The decisions are a pure
+    // function of (config, dataset, seeds): two runs must agree on the
+    // full trace including sheds, and the receiver must certify exactly
+    // the post-shed advertisement.
+    let streams = 4usize;
+    let run = || {
+        let data = test_dataset(0x7A0);
+        // τ ≈ 1.4 × the unprotected pass-0 air time over the aggregate
+        // link: the clean pass fits, but after 20% of it dies the
+        // residual budget cannot afford even the smallest level's
+        // retransmission — the barrier must shed.
+        let frags: f64 = data.levels.iter().map(|l| l.len().div_ceil(1024) as f64).sum();
+        let tau = 1.4 * (0.0005 + frags / (streams as f64 * 200_000.0));
+        let s = spec(Contract::Deadline(tau), streams, 0.0);
+        let (st, rt) = loss_transport_pair(streams, |w| {
+            LossTrace::seeded(0.20, 0xBAD ^ (w as u64 + 1) * 0x9E37)
+        });
+        let mut sender_log = EventLog::new();
+        let rep = run_pair(&s, st, rt, &data, Some(&mut sender_log), None).unwrap();
+        (rep, sender_log, data)
+    };
+    let (r1, log1, data) = run();
+    let (r2, log2, _) = run();
+
+    // Determinism: full sender and receiver traces, sheds included.
+    assert_eq!(r1.sent.trace().unwrap(), r2.sent.trace().unwrap());
+    assert_eq!(
+        r1.received.pooled().unwrap().trace,
+        r2.received.pooled().unwrap().trace
+    );
+    assert_eq!(r1.sent.deadline(), r2.sent.deadline());
+    assert_eq!(log1.events, log2.events, "shed events replay identically");
+
+    let dl = r1.sent.deadline().unwrap();
+    let shed: Vec<_> = r1
+        .sent
+        .trace()
+        .unwrap()
+        .iter()
+        .flat_map(|p| p.shed.clone())
+        .collect();
+    assert!(!shed.is_empty(), "tight τ under 20% loss must shed: {dl:?}");
+    assert!(dl.met, "shedding keeps the virtual clock inside τ: {dl:?}");
+    // Shed events mirror the trace, in order.
+    let shed_events: Vec<_> = log1
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TransferEvent::LevelShed { level, kept_bytes, eps, .. } => {
+                Some((*level, *kept_bytes, *eps))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        shed_events,
+        shed.iter().map(|d| (d.level, d.kept_bytes, d.eps)).collect::<Vec<_>>()
+    );
+    // Receiver certifies exactly the post-shed advertisement, and the
+    // recovered prefix is byte-exact.
+    assert!((r1.received.achieved_eps - dl.advertised_eps).abs() < 1e-15);
+    for li in 0..r1.received.levels_recovered {
+        assert_eq!(r1.received.levels[li].as_ref().unwrap(), &data.levels[li]);
+    }
+    assert!(
+        r1.received.levels_recovered < data.levels.len(),
+        "a raw dataset has no plane cuts, so sheds abandon whole levels"
+    );
+}
+
+#[test]
+fn empty_dataset_is_a_typed_error_not_a_panic() {
+    // `Dataset`'s fields are public: a caller can clear them after
+    // construction. The facade must answer with a typed SpecError — the
+    // pooled engine used to panic on `eps[eps.len() - 1]`.
+    let mut data = test_dataset(40);
+    data.levels.clear();
+    data.eps.clear();
+    let (mut st, _rt) = mem_transport_pair(4);
+    let spec4 = spec(Contract::Fidelity(1e-7), 4, 0.0);
+    let err = janus::api::Endpoint::new(spec4)
+        .send(&mut st, &data, None)
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("at least one level"),
+        "typed empty-dataset error, got: {err}"
+    );
+    // Mismatched ladder lengths are equally typed.
+    let mut data = test_dataset(41);
+    data.eps.pop();
+    let (mut st, _rt) = mem_transport_pair(1);
+    let spec1 = spec(Contract::Fidelity(1e-7), 1, 0.0);
+    let err = janus::api::Endpoint::new(spec1)
+        .send(&mut st, &data, None)
+        .unwrap_err();
+    assert!(format!("{err}").contains("epsilon"), "{err}");
+    // A broken (non-decreasing) ladder is typed too, on both routes.
+    let mut data = test_dataset(42);
+    data.eps[1] = data.eps[0];
+    for streams in [1usize, 4] {
+        let (mut st, _rt) = mem_transport_pair(streams);
+        let err = janus::api::Endpoint::new(spec(Contract::Fidelity(1e-7), streams, 0.0))
+            .send(&mut st, &data, None)
+            .unwrap_err();
+        assert!(format!("{err}").contains("epsilon"), "{err}");
+    }
+}
+
+#[test]
+fn mutated_codec_dataset_degrades_to_whole_level_cuts() {
+    // Popping a codec dataset's public levels/eps leaves its plane cuts
+    // describing levels that no longer exist. The facade must drop the
+    // stale cuts and transfer the remaining rungs (losing only the
+    // Deadline contract's bitplane shed granularity) — not panic inside
+    // the engines' schedule asserts.
+    let vol = generate(16, &GrfConfig::default(), 9);
+    let cfg = CodecConfig { levels: 3, ladder: vec![8e-3, 4e-4], max_planes: 22 };
+    let mut data = Dataset::from_volume(&vol, &cfg).unwrap();
+    assert_eq!(data.levels.len(), 2);
+    data.levels.pop();
+    data.eps.pop(); // lengths stay equal; cuts keep one list too many
+    let bound = *data.eps.last().unwrap();
+    for streams in [1usize, 4] {
+        let (st, rt) = mem_transport_pair(streams);
+        let s = spec(Contract::Fidelity(bound), streams, 0.0);
+        let rep = run_pair(&s, st, rt, &data, None, None).unwrap();
+        assert_eq!(rep.received.levels.len(), 1, "streams={streams}");
+        assert_eq!(rep.received.levels[0].as_ref().unwrap(), &data.levels[0]);
+    }
+}
+
 // -------------------------------------------------------------- BestEffort
 
 #[test]

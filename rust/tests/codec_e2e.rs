@@ -290,6 +290,96 @@ fn deadline_sheds_to_the_maximal_plane_prefix() {
     assert!(lv.windows(2).all(|w| w[0].0 + 1 == w[1].0), "level order");
 }
 
+#[test]
+fn pooled_deadline_sheds_to_plane_prefix_and_certifies() {
+    // The tentpole end-to-end: Deadline on 4 streams with a codec
+    // dataset. Probe the exact solver the pooled engine runs (against
+    // the aggregate rate N·r) for a τ whose pass-0 plan keeps `ri` full
+    // rungs plus a plane-cut prefix of rung `ri`; over a lossless wire
+    // the advertised cut arrives in full, the virtual clock stays
+    // inside τ, and the decoder certifies the cut's measured ε.
+    // Seed 4: the same fixture the single-stream boundary test proves
+    // exposes plane cuts.
+    let (vol, data) = volume_dataset(4);
+    assert!(data.cuts().iter().any(|c| !c.is_empty()));
+    let streams = 4usize;
+    let net = NetParams { t: 0.0005, r: 2_000.0, lambda: 0.0, n: 32, s: 1024 };
+    let agg = NetParams { r: net.r * streams as f64, ..net };
+    let sched = data.schedule();
+    let steps = 200;
+    let mut found = None;
+    'boundary: for ri in (1..data.levels.len()).rev() {
+        if data.cuts()[ri].is_empty() {
+            continue;
+        }
+        let m_lo = vec![0usize; ri];
+        let m_hi = vec![0usize; ri + 1];
+        let t_lo = janus::model::transmission_time(&agg, &sched, &m_lo);
+        let t_hi = janus::model::transmission_time(&agg, &sched, &m_hi);
+        for i in (0..steps).rev() {
+            let tau = t_lo + (t_hi - t_lo) * (i as f64 + 0.5) / steps as f64;
+            if let Some(plan) = optimize_deadline_bitplane(&agg, &sched, tau) {
+                if plan.base.levels == ri && plan.partial.is_some() {
+                    found = Some((ri, tau, plan));
+                    break 'boundary;
+                }
+            }
+        }
+    }
+    let (ri, tau, plan) = found.expect("some τ admits a plane-prefix shed");
+    let (plevel, cut) = plan.partial.expect("selected for a partial");
+    assert_eq!(plevel, ri);
+
+    let spec = TransferSpec::builder()
+        .contract(Contract::Deadline(tau))
+        .streams(streams)
+        .net(net)
+        .initial_lambda(0.0)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(5))
+        .max_duration(Duration::from_secs(60))
+        .build()
+        .expect("pooled deadline spec builds — the restriction is gone");
+    let (st, rt) = loss_transport_pair(streams, |_| LossTrace::None);
+    let mut rlog = EventLog::new();
+    let rep = run_pair(&spec, st, rt, &data, None, Some(&mut rlog)).unwrap();
+
+    assert!(rep.sent.pooled().is_some(), "streams=4 routes pooled");
+    assert_eq!(
+        rep.received.levels.len(),
+        ri + 1,
+        "manifest: {ri} full rungs + the plane-cut partial"
+    );
+    assert_eq!(rep.received.levels_recovered, ri + 1, "lossless wire delivers the plan");
+    for li in 0..ri {
+        assert_eq!(rep.received.levels[li].as_ref().unwrap(), &data.levels[li]);
+    }
+    assert_eq!(
+        rep.received.levels[ri].as_ref().unwrap().as_slice(),
+        &data.levels[ri][..cut.bytes as usize],
+        "the partial rung is the advertised byte prefix"
+    );
+    let dl = rep.sent.deadline().expect("pooled deadline outcome");
+    // τ was scanned to sit exactly at a plan boundary; `met` already
+    // absorbs the whole-group ceil rounding of Eq. 12's fractional
+    // pricing, so a respected lossless plan reports met.
+    assert!(dl.met, "lossless run within the plan: {dl:?} vs τ={tau}");
+    let rounding = (data.levels.len() as f64 + 2.0) / agg.r;
+    assert!(
+        dl.virtual_elapsed <= tau + rounding,
+        "virtual clock within the plan (+rounding): {dl:?} vs τ={tau}"
+    );
+    assert!((dl.planned_eps - cut.eps).abs() < 1e-15, "plan promises the cut ε");
+    assert!((dl.advertised_eps - cut.eps).abs() < 1e-15, "nothing shed beyond the plan");
+    assert!((rep.received.achieved_eps - cut.eps).abs() < 1e-15);
+    // The progressive decoder certifies the same ε against ground truth.
+    let achieved = assert_certified(&vol, &rep);
+    assert!((achieved - cut.eps).abs() < 1e-15, "cut ε certified end to end");
+    let lv = level_decoded(&rlog);
+    assert_eq!(lv.len(), ri + 1, "one decode event per delivered rung");
+    assert!((lv[ri].1 - cut.eps).abs() < 1e-15);
+}
+
 // ----------------------------------------------------------------- Pooled
 
 #[test]

@@ -188,6 +188,60 @@ fn identical_seeds_produce_identical_traces() {
 }
 
 #[test]
+fn pooled_deadline_trace_determinism_includes_shed_decisions() {
+    // The pool's core invariant extends to the Deadline contract: the
+    // pass-barrier τ accounting (virtual clock, Eq. 12 re-solves, shed
+    // decisions) is a pure function of (config, dataset, seeds), so two
+    // identical runs produce bit-identical traces *including* the
+    // `PassRecord::shed` entries — and the receiver certifies exactly
+    // the advertisement the sheds left behind.
+    let run = |tau: f64| {
+        let data = sized_dataset(0x5EED, 1);
+        let spec = TransferSpec::builder()
+            .contract(Contract::Deadline(tau))
+            .streams(STREAMS)
+            .net(NetParams { t: 0.0005, r: RATE, lambda: 0.0, n: 32, s: 1024 })
+            .initial_lambda(0.0)
+            .lambda_window(0.25)
+            .idle_timeout(Duration::from_secs(10))
+            .max_duration(Duration::from_secs(120))
+            .build()
+            .unwrap();
+        let (st, rt) = loss_transport_pair(STREAMS, |w| {
+            LossTrace::seeded(0.20, 0xD1CE ^ (w as u64 + 1) * 0x9E37)
+        });
+        run_pair(&spec, st, rt, &data, None, None).unwrap()
+    };
+    // τ ≈ 1.4 × the unprotected pass-0 air time: after 20% of pass 0
+    // dies, the residual budget forces sheds at the barrier.
+    let frags: f64 = [60_000usize, 250_000, 500_000]
+        .iter()
+        .map(|&sz| sz.div_ceil(1024) as f64)
+        .sum();
+    let tau = 1.4 * (0.0005 + frags / (STREAMS as f64 * RATE));
+    let r1 = run(tau);
+    let r2 = run(tau);
+    assert_eq!(r1.sent.pooled().unwrap().trace, r2.sent.pooled().unwrap().trace);
+    assert_eq!(
+        r1.received.pooled().unwrap().trace,
+        r2.received.pooled().unwrap().trace
+    );
+    assert_eq!(r1.sent.deadline(), r2.sent.deadline());
+    let dl = r1.sent.deadline().expect("deadline outcome");
+    assert!(
+        r1.sent.pooled().unwrap().trace.iter().any(|p| !p.shed.is_empty()),
+        "tight τ under 20% loss must shed: {dl:?}"
+    );
+    assert!(dl.met, "sheds keep the virtual clock inside τ: {dl:?}");
+    assert!(
+        (r1.received.achieved_eps - dl.advertised_eps).abs() < 1e-15,
+        "receiver ε {} vs advertised {}",
+        r1.received.achieved_eps,
+        dl.advertised_eps
+    );
+}
+
+#[test]
 fn different_seeds_produce_different_traces_under_loss() {
     // Sanity for the determinism assertion above: the trace actually
     // depends on the loss realization (i.e. the equality test is not

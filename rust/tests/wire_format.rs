@@ -3,7 +3,7 @@
 //! never panics, never silently-wrong packets.
 
 use janus::coordinator::packet::{encode_fragment_into, is_fragment};
-use janus::coordinator::{FragmentHeader, Manifest, Packet};
+use janus::coordinator::{FragmentHeader, Manifest, ManifestLevel, Packet};
 use janus::util::prop::{check, no_shrink, PropConfig};
 use janus::util::Pcg64;
 
@@ -27,7 +27,7 @@ fn random_fragment(rng: &mut Pcg64) -> Packet {
 }
 
 fn random_packet(rng: &mut Pcg64) -> Packet {
-    match rng.next_below(9) {
+    match rng.next_below(10) {
         0 => random_fragment(rng),
         1 => Packet::LambdaUpdate { lambda: rng.next_f64() * 1e6 },
         2 => Packet::EndOfPass { pass: rng.next_u64() as u32 },
@@ -49,7 +49,12 @@ fn random_packet(rng: &mut Pcg64) -> Packet {
                 streams: rng.next_below(256) as u8,
                 contract: rng.next_below(2) as u8,
                 levels: (0..count)
-                    .map(|_| (rng.next_u64(), rng.next_f64()))
+                    .map(|_| ManifestLevel {
+                        size: rng.next_u64(),
+                        eps: rng.next_f64(),
+                        m0: rng.next_below(129) as u8,
+                        cut: rng.next_below(2) == 1,
+                    })
                     .collect(),
             })
         }
@@ -59,10 +64,15 @@ fn random_packet(rng: &mut Pcg64) -> Packet {
             pass: rng.next_u64() as u32,
             sent: rng.next_u64(),
         },
-        _ => Packet::PassStats {
+        8 => Packet::PassStats {
             pass: rng.next_u64() as u32,
             expected: rng.next_u64(),
             received: rng.next_u64(),
+        },
+        _ => Packet::LevelShed {
+            level: rng.next_below(256) as u8,
+            bytes: rng.next_u64(),
+            eps: rng.next_f64(),
         },
     }
 }
@@ -180,6 +190,45 @@ fn corrupted_length_field_cannot_overread() {
     match Packet::decode(&buf) {
         Err(e) => assert!(format!("{e}").contains("short"), "unexpected error {e}"),
         Ok(p) => panic!("oversized length accepted: {p:?}"),
+    }
+}
+
+#[test]
+fn manifest_carries_contract_and_shed_geometry() {
+    // The pooled Deadline tentpole rides on these fields: the contract
+    // byte (no longer hardcoded 0), the per-level pass-0 parity m0 the
+    // receiver recomputes never-seen FTG strides from, and the plane-cut
+    // flag marking a level shed to a decodable prefix.
+    let m = Manifest {
+        n: 32,
+        s: 1024,
+        streams: 4,
+        contract: 1,
+        levels: vec![
+            ManifestLevel { size: 123_456, eps: 0.004, m0: 7, cut: false },
+            ManifestLevel { size: 40 * 1024, eps: 0.00042, m0: 0, cut: true },
+        ],
+    };
+    let buf = Packet::Manifest(m.clone()).encode();
+    match Packet::decode(&buf).unwrap() {
+        Packet::Manifest(got) => {
+            assert_eq!(got, m);
+            assert_eq!(got.contract, 1, "contract byte survives the wire");
+            assert_eq!(got.levels[0].m0, 7);
+            assert!(!got.levels[0].cut);
+            assert_eq!(got.levels[1].m0, 0);
+            assert!(got.levels[1].cut, "plane-cut flag survives the wire");
+        }
+        other => panic!("expected manifest, got {other:?}"),
+    }
+    // The shed advertisement roundtrips, including the abandon form.
+    for p in [
+        Packet::LevelShed { level: 2, bytes: 40 * 1024, eps: 0.00042 },
+        Packet::LevelShed { level: 0, bytes: 0, eps: 1.0 },
+    ] {
+        let buf = p.encode();
+        assert_eq!(Packet::decode(&buf).unwrap(), p);
+        assert!(!is_fragment(&buf), "control packets are never loss-injected");
     }
 }
 
