@@ -1,0 +1,203 @@
+//! Adaptive pacing matrix: the same pooled transfer under (a) uniform
+//! 20% loss, (b) Gilbert-Elliott 20% mean loss in 8-fragment bursts at
+//! the same mean λ, (c) the GE channel with the burst-aware solver
+//! disabled (i.i.d. baseline), and (d) a rate-responsive congestion
+//! policer at half the nominal rate. Emits the scenario numbers —
+//! passes, fragments, wall time, full per-barrier rate trajectory — as
+//! `target/bench-results/BENCH_pacing.json` (uploaded by CI).
+
+use janus::api::{
+    run_pair, AdaptConfig, Contract, Dataset, FnObserver, TransferEvent, TransferReport,
+    TransferSpec,
+};
+use janus::metrics::bench::{bench_scale, BenchTable};
+use janus::model::NetParams;
+use janus::testkit::{congestion_transport_pair, loss_transport_pair, LossTrace};
+use janus::util::Pcg64;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const STREAMS: usize = 4;
+const RATE: f64 = 200_000.0;
+const LOSS: f64 = 0.2;
+const BURST: f64 = 8.0;
+
+fn dataset(total: usize) -> Dataset {
+    let mut rng = Pcg64::seeded(0xACE5);
+    let sizes = [total / 10, total * 3 / 10, total * 6 / 10];
+    let eps = vec![0.004, 0.0005, 0.0000001];
+    Dataset::new(
+        sizes
+            .iter()
+            .map(|&sz| {
+                let mut v = vec![0u8; sz.max(1)];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect(),
+        eps,
+    )
+    .expect("bench dataset")
+}
+
+fn spec(initial_lambda: f64, adapt: AdaptConfig) -> TransferSpec {
+    TransferSpec::builder()
+        .contract(Contract::Fidelity(1e-7))
+        .streams(STREAMS)
+        .net(NetParams { t: 0.0005, r: RATE, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(initial_lambda)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(30))
+        .max_duration(Duration::from_secs(600))
+        .adaptation(adapt)
+        .build()
+        .expect("bench spec")
+}
+
+struct Outcome {
+    name: &'static str,
+    passes: u32,
+    fragments: u64,
+    wall_s: f64,
+    min_rate: f64,
+    max_m: usize,
+    rates: Vec<f64>,
+}
+
+fn outcome(name: &'static str, rep: &TransferReport, wall_s: f64, data: &Dataset) -> Outcome {
+    assert_eq!(
+        rep.received.levels_recovered,
+        data.levels.len(),
+        "{name}: must deliver the full ladder"
+    );
+    let rates = rep.sent.rate_history.clone();
+    Outcome {
+        name,
+        passes: rep.sent.passes,
+        fragments: rep.sent.fragments_sent,
+        wall_s,
+        min_rate: rates.iter().cloned().fold(RATE, f64::min),
+        max_m: rep.sent.trace().map(|t| t.iter().map(|p| p.m).max().unwrap_or(0)).unwrap_or(0),
+        rates,
+    }
+}
+
+fn main() {
+    // Default ≈ 2.4 MB of payload; JANUS_SCALE=1 runs ~24 MB.
+    let scale = bench_scale(10);
+    let data = dataset(24 * 1024 * 1024 / scale as usize);
+    let lambda0 = LOSS * RATE * STREAMS as f64;
+
+    let run_lossy = |name, trace: fn(u64) -> LossTrace, adapt| {
+        let (st, rt) = loss_transport_pair(STREAMS, |w| trace(0xBEEF ^ (w as u64 + 1) * 0x9E37));
+        let t0 = Instant::now();
+        let rep = run_pair(&spec(lambda0, adapt), st, rt, &data, None, None).expect(name);
+        outcome(name, &rep, t0.elapsed().as_secs_f64(), &data)
+    };
+
+    let uniform = run_lossy("uniform", |s| LossTrace::seeded(LOSS, s), AdaptConfig::default());
+    let ge = run_lossy(
+        "ge_burst",
+        |s| LossTrace::gilbert_elliott(LOSS, BURST, RATE, s),
+        AdaptConfig::default(),
+    );
+    let ge_iid = run_lossy(
+        "ge_burst_iid_solver",
+        |s| LossTrace::gilbert_elliott(LOSS, BURST, RATE, s),
+        AdaptConfig::fixed(),
+    );
+
+    // Congestion: the observer closes the loop, feeding each RateAdapted
+    // barrier decision back into the policer's token bucket.
+    let congestion = {
+        let (st, rt, handle) = congestion_transport_pair(STREAMS, 0.5 * RATE, RATE);
+        let h = handle.clone();
+        let mut obs = FnObserver(move |e: &TransferEvent| {
+            if let TransferEvent::RateAdapted { rate, .. } = e {
+                h.set(*rate);
+            }
+        });
+        let t0 = Instant::now();
+        let rep = run_pair(&spec(0.0, AdaptConfig::default()), st, rt, &data, Some(&mut obs), None)
+            .expect("congestion");
+        outcome("congestion_0.5r", &rep, t0.elapsed().as_secs_f64(), &data)
+    };
+
+    let all = [&uniform, &ge, &ge_iid, &congestion];
+    let mut table = BenchTable::new(
+        "pacing",
+        vec!["scenario", "passes", "fragments", "wall_s", "min_rate", "max_m"],
+    );
+    table.header();
+    for o in all {
+        table.row(
+            o.name,
+            vec![
+                format!("{}", o.passes),
+                format!("{}", o.fragments),
+                format!("{:.3}", o.wall_s),
+                format!("{:.0}", o.min_rate),
+                format!("{}", o.max_m),
+            ],
+        );
+    }
+    table.save().unwrap();
+    write_json(&all).expect("write BENCH_pacing.json");
+
+    // --- Acceptance gates (the deterministic matrix of ISSUE 6) ---
+    assert!(
+        ge.min_rate >= 0.69 * RATE,
+        "burst loss must sustain the rate, got min {:.0}",
+        ge.min_rate
+    );
+    assert!(
+        congestion.min_rate < 0.6 * RATE,
+        "the policer must force a back-off, got min {:.0}",
+        congestion.min_rate
+    );
+    assert!(
+        ge.passes <= ge_iid.passes,
+        "burst-aware solve ({}) must not need more passes than i.i.d. ({})",
+        ge.passes,
+        ge_iid.passes
+    );
+    println!(
+        "\nge burst-aware {} passes (max m {}) vs iid {} passes (max m {}); \
+         congestion settled at min {:.0} frag/s",
+        ge.passes, ge.max_m, ge_iid.passes, ge_iid.max_m, congestion.min_rate
+    );
+    println!("pacing complete.");
+}
+
+/// Save the pacing matrix as JSON (CI uploads this artifact as
+/// `BENCH_pacing`).
+fn write_json(outcomes: &[&Outcome]) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_pacing.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"pacing\",")?;
+    writeln!(f, "  \"streams\": {STREAMS},")?;
+    writeln!(f, "  \"nominal_rate\": {RATE},")?;
+    writeln!(f, "  \"mean_loss\": {LOSS},")?;
+    writeln!(f, "  \"burst_len\": {BURST},")?;
+    writeln!(f, "  \"scenarios\": [")?;
+    for (i, o) in outcomes.iter().enumerate() {
+        let rates: Vec<String> = o.rates.iter().map(|r| format!("{r:.1}")).collect();
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"name\": \"{}\",", o.name)?;
+        writeln!(f, "      \"passes\": {},", o.passes)?;
+        writeln!(f, "      \"fragments\": {},", o.fragments)?;
+        writeln!(f, "      \"wall_s\": {:.4},", o.wall_s)?;
+        writeln!(f, "      \"min_rate\": {:.1},", o.min_rate)?;
+        writeln!(f, "      \"max_m\": {},", o.max_m)?;
+        writeln!(f, "      \"rate_trajectory\": [{}]", rates.join(", "))?;
+        writeln!(f, "    }}{}", if i + 1 < outcomes.len() { "," } else { "" })?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    println!("[saved {}]", path.display());
+    Ok(path)
+}

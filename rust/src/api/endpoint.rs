@@ -90,6 +90,7 @@ impl Endpoint {
                 initial_lambda: spec.initial_lambda(),
                 max_duration: spec.max_duration(),
                 plane_cuts,
+                adapt: spec.adaptation(),
             };
             let rep = transfer_sender(control.as_mut(), &cfg, &dataset.levels, &dataset.eps, sink)?;
             Ok(rep.into())
@@ -104,6 +105,7 @@ impl Endpoint {
                 initial_lambda: spec.initial_lambda(),
                 max_duration: spec.max_duration(),
                 plane_cuts,
+                adapt: spec.adaptation(),
             })?;
             let mut data = open_data_channels(transport, spec.streams())?;
             let rep =

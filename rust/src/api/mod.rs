@@ -67,6 +67,8 @@ pub use report::{
 // Pooled Deadline τ accounting, reachable from `SendSummary::deadline`
 // and the pooled pass trace.
 pub use crate::coordinator::pool::{DeadlineOutcome, ShedDecision};
+// Congestion/burst adaptation knobs for `TransferSpecBuilder::adaptation`.
+pub use crate::coordinator::rate::AdaptConfig;
 pub use spec::{Contract, Dataset, SpecError, TransferSpec, TransferSpecBuilder};
 
 // The codec types a facade caller needs for `Dataset::from_volume` and

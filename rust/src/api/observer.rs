@@ -16,6 +16,10 @@
 //!   interleave in any order (they come from concurrent workers).
 //! * `LevelShed { pass, .. }` events (pooled Deadline) follow the
 //!   pass's `LambdaUpdated` and precede the next `PassStarted`.
+//! * `RateAdapted { pass, .. }` follows the pass's `LambdaUpdated` and
+//!   precedes the next `PassStarted` — an observer that drives a live
+//!   channel model (the congestion testkit) therefore applies the new
+//!   rate deterministically at the pass boundary.
 //! * `GroupRecovered` events are receiver-side and are emitted in
 //!   (level, group) reconstruction order.
 //! * `LevelDecoded` events are receiver-side, follow every
@@ -50,6 +54,14 @@ pub enum TransferEvent {
     /// partial shed). Emitted after the pass's `LambdaUpdated`, before
     /// the next `PassStarted`.
     LevelShed { pass: u32, level: u8, kept_bytes: u64, eps: f64 },
+    /// The congestion controller settled the pacing rate for the *next*
+    /// pass: `rate` is the new per-stream rate (fragments/s), `backoff`
+    /// whether it sits below the configured maximum. Under
+    /// `AdaptConfig::fixed()` the rate never moves (the pooled engine
+    /// still reports it each barrier; the single-stream engine emits
+    /// only on change). Emitted after the pass's `LambdaUpdated`,
+    /// before the next `PassStarted`.
+    RateAdapted { pass: u32, rate: f64, backoff: bool },
 }
 
 /// Receives [`TransferEvent`]s while a transfer runs.

@@ -33,6 +33,11 @@ pub struct SendSummary {
     pub duration: f64,
     /// λ̂ values observed over the transfer, in order.
     pub lambda_history: Vec<f64>,
+    /// Pacing rate settled at each pass barrier (per-stream,
+    /// fragments/s). Constant at the configured rate under
+    /// `AdaptConfig::fixed()`; tracks the congestion controller when
+    /// rate control is on. Empty for zero-barrier transfers.
+    pub rate_history: Vec<f64>,
     /// Full engine report.
     pub detail: SendDetail,
 }
@@ -81,6 +86,7 @@ impl From<SenderReport> for SendSummary {
             passes: r.passes,
             duration: r.duration,
             lambda_history: r.lambda_updates.clone(),
+            rate_history: r.rate_history.clone(),
             detail: SendDetail::SingleStream(r),
         }
     }
@@ -94,6 +100,7 @@ impl From<PoolSenderReport> for SendSummary {
             passes: r.passes,
             duration: r.duration,
             lambda_history: r.lambda_history.clone(),
+            rate_history: r.rate_history.clone(),
             detail: SendDetail::Pooled(r),
         }
     }

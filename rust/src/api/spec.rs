@@ -2,6 +2,7 @@
 //! [`TransferSpec`] every Janus transfer is built from.
 
 use crate::codec::{self, CodecConfig, CodecError, Encoded};
+use crate::coordinator::rate::AdaptConfig;
 use crate::model::params::{LevelSchedule, NetParams, PlaneCut};
 use crate::refactor::Volume;
 use std::fmt;
@@ -68,6 +69,9 @@ pub enum SpecError {
     EmptyDataset,
     /// One ε per level, strictly decreasing, each in (0, 1].
     BadEpsilonLadder,
+    /// An [`AdaptConfig`] knob is out of range (message from
+    /// [`AdaptConfig::validate`]).
+    BadAdaptation(String),
 }
 
 impl fmt::Display for SpecError {
@@ -108,6 +112,7 @@ impl fmt::Display for SpecError {
                 f,
                 "dataset: need one epsilon per level, strictly decreasing, each in (0, 1]"
             ),
+            SpecError::BadAdaptation(msg) => write!(f, "spec: {msg}"),
         }
     }
 }
@@ -213,6 +218,7 @@ pub struct TransferSpec {
     t_w: f64,
     idle_timeout: Duration,
     max_duration: Duration,
+    adapt: AdaptConfig,
 }
 
 impl TransferSpec {
@@ -251,11 +257,18 @@ impl TransferSpec {
     pub fn max_duration(&self) -> Duration {
         self.max_duration
     }
+
+    /// Congestion/burst adaptation knobs (default: legacy fixed pacing).
+    pub fn adaptation(&self) -> AdaptConfig {
+        self.adapt
+    }
 }
 
 /// Builder for [`TransferSpec`]. Defaults: `BestEffort`, 1 stream, the
 /// paper's measured testbed parameters ([`NetParams::paper_default`]),
-/// λ₀ = 0, T_W = 3 s, 10 s idle timeout, 600 s overall cap.
+/// λ₀ = 0, T_W = 3 s, 10 s idle timeout, 600 s overall cap, legacy
+/// fixed pacing ([`AdaptConfig::fixed`] — opt into the congestion
+/// controller with [`TransferSpecBuilder::adaptation`]).
 #[derive(Debug, Clone)]
 pub struct TransferSpecBuilder {
     contract: Contract,
@@ -265,6 +278,7 @@ pub struct TransferSpecBuilder {
     t_w: f64,
     idle_timeout: Duration,
     max_duration: Duration,
+    adapt: AdaptConfig,
 }
 
 impl Default for TransferSpecBuilder {
@@ -277,6 +291,7 @@ impl Default for TransferSpecBuilder {
             t_w: 3.0,
             idle_timeout: Duration::from_secs(10),
             max_duration: Duration::from_secs(600),
+            adapt: AdaptConfig::fixed(),
         }
     }
 }
@@ -344,6 +359,15 @@ impl TransferSpecBuilder {
         self
     }
 
+    /// Congestion/burst adaptation knobs. `AdaptConfig::default()`
+    /// enables the CUBIC pacer and the burst-aware λ̂ split;
+    /// [`AdaptConfig::fixed`] (the spec default) keeps the legacy fixed
+    /// `1/r` pacing and i.i.d. λ̂.
+    pub fn adaptation(mut self, adapt: AdaptConfig) -> Self {
+        self.adapt = adapt;
+        self
+    }
+
     /// Validate into an immutable [`TransferSpec`].
     pub fn build(self) -> Result<TransferSpec, SpecError> {
         if self.streams == 0 {
@@ -392,6 +416,9 @@ impl TransferSpecBuilder {
             }
             Contract::BestEffort => {}
         }
+        if let Err(e) = self.adapt.validate() {
+            return Err(SpecError::BadAdaptation(e.to_string()));
+        }
         let mut net = self.net;
         net.lambda = self.initial_lambda;
         Ok(TransferSpec {
@@ -402,6 +429,7 @@ impl TransferSpecBuilder {
             t_w: self.t_w,
             idle_timeout: self.idle_timeout,
             max_duration: self.max_duration,
+            adapt: self.adapt,
         })
     }
 }
@@ -528,6 +556,20 @@ mod tests {
             TransferSpec::builder().lambda_window(0.0).build().unwrap_err(),
             SpecError::ZeroWindow
         );
+    }
+
+    #[test]
+    fn adaptation_defaults_fixed_and_validates() {
+        let spec = TransferSpec::builder().build().unwrap();
+        assert_eq!(spec.adaptation(), AdaptConfig::fixed());
+        assert!(!spec.adaptation().rate_control);
+        let spec = TransferSpec::builder().adaptation(AdaptConfig::default()).build().unwrap();
+        assert!(spec.adaptation().rate_control && spec.adaptation().burst_aware);
+        let err = TransferSpec::builder()
+            .adaptation(AdaptConfig { beta: 1.5, ..AdaptConfig::default() })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SpecError::BadAdaptation(_)), "{err}");
     }
 
     #[test]

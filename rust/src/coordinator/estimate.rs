@@ -1,0 +1,286 @@
+//! Loss-rate estimation for the transfer engines.
+//!
+//! The paper's receiver estimates λ by counting losses in a window
+//! `T_W` (§4). This module hosts that estimator family — promoted out
+//! of the simulator so the *engines* share it — plus the two-state
+//! burst/residual estimator the pass barrier feeds: raw per-pass loss
+//! fractions cannot distinguish 20% i.i.d. loss from 20% loss arriving
+//! in bursts of eight, yet Eq. 8 sizes parity very differently for the
+//! two (a burst eats `b` consecutive fragments of one FTG, so `m`
+//! parity only survives `⌊m/b⌋` events).
+//!
+//! [`tracking_rmse`](crate::sim::estimator::tracking_rmse) (in
+//! `sim::estimator`, which re-exports everything here) scores these
+//! estimators against HMM ground truth.
+
+/// Online λ estimator fed with per-window loss counts or raw events.
+pub trait LambdaEstimator {
+    /// Record that `lost` fragments were detected missing at `time`.
+    fn record_losses(&mut self, time: f64, lost: u64);
+    /// Current estimate (losses/second), if warmed up.
+    fn estimate(&self) -> Option<f64>;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's estimator: losses per fixed window `T_W`.
+#[derive(Debug, Clone)]
+pub struct WindowEstimator {
+    t_w: f64,
+    window_start: f64,
+    window_losses: u64,
+    last: Option<f64>,
+}
+
+impl WindowEstimator {
+    pub fn new(t_w: f64) -> Self {
+        assert!(t_w > 0.0);
+        WindowEstimator { t_w, window_start: 0.0, window_losses: 0, last: None }
+    }
+}
+
+impl LambdaEstimator for WindowEstimator {
+    fn record_losses(&mut self, time: f64, lost: u64) {
+        if time - self.window_start >= self.t_w {
+            let elapsed = time - self.window_start;
+            self.last = Some(self.window_losses as f64 / elapsed);
+            self.window_start = time;
+            self.window_losses = 0;
+        }
+        self.window_losses += lost;
+    }
+    fn estimate(&self) -> Option<f64> {
+        self.last
+    }
+    fn name(&self) -> &'static str {
+        "window"
+    }
+}
+
+/// Exponentially-weighted moving average over sub-windows: smoother than
+/// the raw window estimate, faster to react than enlarging `T_W`.
+#[derive(Debug, Clone)]
+pub struct EwmaEstimator {
+    sub_window: f64,
+    alpha: f64,
+    window_start: f64,
+    window_losses: u64,
+    value: Option<f64>,
+}
+
+impl EwmaEstimator {
+    pub fn new(sub_window: f64, alpha: f64) -> Self {
+        assert!(sub_window > 0.0 && (0.0..=1.0).contains(&alpha));
+        EwmaEstimator { sub_window, alpha, window_start: 0.0, window_losses: 0, value: None }
+    }
+}
+
+impl LambdaEstimator for EwmaEstimator {
+    fn record_losses(&mut self, time: f64, lost: u64) {
+        if time - self.window_start >= self.sub_window {
+            let elapsed = time - self.window_start;
+            let sample = self.window_losses as f64 / elapsed;
+            self.value = Some(match self.value {
+                Some(v) => self.alpha * sample + (1.0 - self.alpha) * v,
+                None => sample,
+            });
+            self.window_start = time;
+            self.window_losses = 0;
+        }
+        self.window_losses += lost;
+    }
+    fn estimate(&self) -> Option<f64> {
+        self.value
+    }
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+}
+
+/// One pass-barrier observation, as reported by the pooled receiver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassObservation {
+    /// Virtual seconds the pass occupied on the wire.
+    pub elapsed: f64,
+    /// Fragments offered to the wire during the pass.
+    pub offered: u64,
+    /// Fragments that survived.
+    pub received: u64,
+    /// Distinct loss runs (maximal gaps of consecutive per-stream
+    /// sequence numbers) the receiver observed; 0 when lossless.
+    pub runs: u32,
+    /// Losses that fell in runs of length ≥ 2.
+    pub burst_lost: u64,
+    /// Aggregate rate (fragments/s, all streams) the pass was paced at.
+    pub rate: f64,
+}
+
+impl PassObservation {
+    /// Lost fragments in the pass.
+    pub fn lost(&self) -> u64 {
+        self.offered.saturating_sub(self.received)
+    }
+
+    /// Pass loss fraction in [0, 1].
+    pub fn loss_frac(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        (1.0 - self.received as f64 / self.offered as f64).clamp(0.0, 1.0)
+    }
+
+    /// Mean loss-run length (≥ 1 whenever anything was lost).
+    pub fn burst_len(&self) -> f64 {
+        let lost = self.lost();
+        if lost == 0 || self.runs == 0 {
+            return if lost == 0 { 0.0 } else { 1.0 };
+        }
+        (lost as f64 / self.runs as f64).max(1.0)
+    }
+}
+
+/// Two-state burst/residual λ estimator: decomposes the per-pass loss
+/// observation into a total rate λ̂ (losses/s at the *actual* pass
+/// rate — the pre-adaptive code priced loss fractions at the nominal
+/// configured rate, overestimating λ̂ whenever the pacer had backed
+/// off), a mean burst length b̂, and the burst/residual split. EWMA
+/// smoothing across barriers; the first observation seeds the state
+/// directly so pass-0 estimates are the raw measurement (the
+/// determinism contract existing traces assert).
+#[derive(Debug, Clone)]
+pub struct TwoStateEstimator {
+    alpha: f64,
+    lambda_total: Option<f64>,
+    lambda_burst: f64,
+    burst_len: f64,
+}
+
+impl TwoStateEstimator {
+    /// `alpha` weights the newest barrier observation (1.0 = no memory).
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha) && alpha > 0.0);
+        TwoStateEstimator { alpha, lambda_total: None, lambda_burst: 0.0, burst_len: 1.0 }
+    }
+
+    fn blend(&self, old: f64, new: f64) -> f64 {
+        self.alpha * new + (1.0 - self.alpha) * old
+    }
+
+    /// Fold in one pass-barrier observation.
+    pub fn observe_pass(&mut self, obs: &PassObservation) {
+        let lam = obs.loss_frac() * obs.rate;
+        let lost = obs.lost();
+        let burst_frac = if lost == 0 { 0.0 } else { obs.burst_lost as f64 / lost as f64 };
+        let lam_burst = lam * burst_frac;
+        let b = obs.burst_len().max(1.0);
+        match self.lambda_total {
+            None => {
+                self.lambda_total = Some(lam);
+                self.lambda_burst = lam_burst;
+                self.burst_len = b;
+            }
+            Some(prev) => {
+                self.lambda_total = Some(self.blend(prev, lam));
+                self.lambda_burst = self.blend(self.lambda_burst, lam_burst);
+                // Burst length only means something when losses exist;
+                // a lossless pass must not drag b̂ toward zero.
+                if lost > 0 {
+                    self.burst_len = self.blend(self.burst_len, b).max(1.0);
+                }
+            }
+        }
+    }
+
+    /// Smoothed total loss rate λ̂ (losses/s), if warmed up.
+    pub fn lambda_total(&self) -> Option<f64> {
+        self.lambda_total
+    }
+
+    /// Smoothed burst-state loss rate (losses arriving in runs ≥ 2).
+    pub fn lambda_burst(&self) -> f64 {
+        self.lambda_burst
+    }
+
+    /// Residual (isolated-loss) rate: λ̂ − λ̂_burst.
+    pub fn lambda_residual(&self) -> f64 {
+        self.lambda_total.unwrap_or(0.0) - self.lambda_burst
+    }
+
+    /// Smoothed mean burst length b̂ ≥ 1.
+    pub fn burst_len(&self) -> f64 {
+        self.burst_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(offered: u64, received: u64, runs: u32, burst_lost: u64, rate: f64) -> PassObservation {
+        PassObservation { elapsed: 1.0, offered, received, runs, burst_lost, rate }
+    }
+
+    #[test]
+    fn first_observation_is_raw() {
+        let mut e = TwoStateEstimator::new(0.5);
+        assert!(e.lambda_total().is_none());
+        // 20% loss at 1000 frag/s aggregate ⇒ λ̂ = 200.
+        e.observe_pass(&obs(1000, 800, 200, 0, 1000.0));
+        assert!((e.lambda_total().unwrap() - 200.0).abs() < 1e-9);
+        assert!((e.burst_len() - 1.0).abs() < 1e-9, "200 runs of 1");
+        assert_eq!(e.lambda_burst(), 0.0);
+        assert!((e.lambda_residual() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lambda_prices_loss_at_the_actual_rate() {
+        // Same 20% fraction at half the pace ⇒ half the λ̂ — the bug the
+        // nominal-rate estimate had.
+        let mut full = TwoStateEstimator::new(1.0);
+        let mut half = TwoStateEstimator::new(1.0);
+        full.observe_pass(&obs(1000, 800, 200, 0, 1000.0));
+        half.observe_pass(&obs(1000, 800, 200, 0, 500.0));
+        assert!((full.lambda_total().unwrap() - 2.0 * half.lambda_total().unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_split_tracks_run_shape() {
+        let mut e = TwoStateEstimator::new(1.0);
+        // 160 of 200 losses in runs ≥ 2, 25 runs ⇒ b̂ = 8.
+        e.observe_pass(&obs(1000, 800, 25, 160, 1000.0));
+        assert!((e.burst_len() - 8.0).abs() < 1e-9);
+        assert!((e.lambda_burst() - 160.0).abs() < 1e-9);
+        assert!((e.lambda_residual() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_smooths_and_lossless_passes_keep_burst_len() {
+        let mut e = TwoStateEstimator::new(0.5);
+        e.observe_pass(&obs(1000, 800, 25, 160, 1000.0)); // b̂ = 8
+        e.observe_pass(&obs(1000, 1000, 0, 0, 1000.0)); // lossless
+        assert!((e.lambda_total().unwrap() - 100.0).abs() < 1e-9, "EWMA halves");
+        assert!((e.burst_len() - 8.0).abs() < 1e-9, "b̂ untouched by lossless pass");
+        e.observe_pass(&obs(1000, 900, 100, 0, 1000.0)); // b = 1
+        assert!((e.burst_len() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_offered_pass_is_a_no_op_observation() {
+        let mut e = TwoStateEstimator::new(0.5);
+        e.observe_pass(&obs(0, 0, 0, 0, 1000.0));
+        assert_eq!(e.lambda_total(), Some(0.0));
+        assert_eq!(e.burst_len(), 1.0);
+    }
+
+    #[test]
+    fn observation_helpers() {
+        let o = obs(100, 90, 5, 6, 1000.0);
+        assert_eq!(o.lost(), 10);
+        assert!((o.loss_frac() - 0.1).abs() < 1e-12);
+        assert!((o.burst_len() - 2.0).abs() < 1e-12);
+        let clean = obs(100, 100, 0, 0, 1000.0);
+        assert_eq!(clean.burst_len(), 0.0);
+        // Malformed (received > offered) clamps instead of exploding.
+        let weird = obs(100, 200, 0, 0, 1000.0);
+        assert_eq!(weird.loss_frac(), 0.0);
+    }
+}

@@ -18,6 +18,10 @@
 //!   parity pipeline's unit of transfer).
 //! * [`packet`] — fragment + control wire format (Protobuf substitute),
 //!   including the borrowing [`packet::PacketView`] hot-path decode.
+//! * [`estimate`] — λ̂ estimator family (window, EWMA, and the two-state
+//!   burst/residual estimator the pass barrier feeds).
+//! * [`rate`] — SRTT/RTTVAR barrier timing and the CUBIC-style
+//!   congestion-aware pacer shared by the engines.
 //! * [`sender`] — Alg. 1/Alg. 2 sender engine: a parity-generation thread
 //!   feeding a paced transmission thread, λ-adaptive redundancy, passive
 //!   retransmission.
@@ -31,14 +35,19 @@
 //!   and one shared λ̂ estimator.
 
 pub mod arena;
+pub mod estimate;
 pub mod packet;
 pub mod pool;
+pub mod rate;
 pub mod receiver;
 pub mod sender;
 pub mod session;
 
 pub use crate::api::Contract;
 pub use arena::FtgArena;
+pub use estimate::{
+    EwmaEstimator, LambdaEstimator, PassObservation, TwoStateEstimator, WindowEstimator,
+};
 pub use packet::{
     FragmentHeader, FragmentView, Manifest, ManifestLevel, Packet, PacketView, WireError,
 };
@@ -46,6 +55,7 @@ pub use pool::{
     DeadlineOutcome, PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport,
     RecvPassRecord, ShedDecision, TransferPool,
 };
+pub use rate::{AdaptConfig, PassVerdict, RateController, RttEstimator};
 #[allow(deprecated)]
 pub use receiver::run_receiver;
 pub use receiver::{ReceiverConfig, ReceiverReport};

@@ -40,8 +40,10 @@ pub fn validate_fragment_size(s: usize) -> crate::util::err::Result<()> {
 
 /// Largest lost-FTG count one [`Packet::LostList`] may carry: senders of
 /// the list truncate to this so the datagram always fits [`MAX_DATAGRAM`]
-/// (kind + pass + count + 5 bytes/entry + CRC). The remainder is simply
-/// reported on the next pass — passes iterate until the list drains.
+/// (kind + pass + total + count + 5 bytes/entry + CRC). The remainder is
+/// reported on the next pass — passes iterate until the list drains —
+/// and the `total` field keeps the truncated tail visible to deadline
+/// budget accounting meanwhile.
 pub const MAX_LOST_PER_MSG: usize = 1500;
 
 /// A parsed Janus packet.
@@ -55,7 +57,12 @@ pub enum Packet {
     EndOfPass { pass: u32 },
     /// Receiver → sender: FTGs with unrecoverable losses after `pass`
     /// (the tag lets retried end-of-pass exchanges discard stale lists).
-    LostList { pass: u32, ftgs: Vec<(u8, u32)> },
+    /// `total` is the true count of unrecoverable FTGs at the barrier:
+    /// when it exceeds `ftgs.len()`, the list was truncated to
+    /// [`MAX_LOST_PER_MSG`] and the sender must price the un-reported
+    /// tail into its deadline budget even though the entries arrive on
+    /// later passes.
+    LostList { pass: u32, total: u32, ftgs: Vec<(u8, u32)> },
     /// Receiver → sender: transfer complete.
     Done,
     /// Sender → receiver: transfer manifest (must precede fragments).
@@ -67,7 +74,10 @@ pub enum Packet {
     StreamEnd { stream: u8, pass: u32, sent: u64 },
     /// Receiver → sender: of the `expected` fragments announced for
     /// `pass`, `received` survived the wire (λ̂ input at the sender).
-    PassStats { pass: u32, expected: u64, received: u64 },
+    /// `runs` counts the distinct loss runs (maximal gaps in per-stream
+    /// sequence numbers) and `burst_lost` the losses that fell in runs of
+    /// length ≥ 2 — the shape inputs of the two-state burst estimator.
+    PassStats { pass: u32, expected: u64, received: u64, runs: u32, burst_lost: u64 },
     /// Sender → receiver (pooled Deadline): a pass barrier shed level
     /// `level` — its advertised prefix shrinks to `bytes` (0 = the level
     /// is abandoned entirely) with measured ε `eps`. Idempotent: re-sent
@@ -304,9 +314,10 @@ impl Packet {
                 out.push(KIND_END);
                 out.extend_from_slice(&pass.to_le_bytes());
             }
-            Packet::LostList { pass, ftgs } => {
+            Packet::LostList { pass, total, ftgs } => {
                 out.push(KIND_LOST);
                 out.extend_from_slice(&pass.to_le_bytes());
+                out.extend_from_slice(&total.to_le_bytes());
                 out.extend_from_slice(&(ftgs.len() as u32).to_le_bytes());
                 for &(level, ftg) in ftgs {
                     out.push(level);
@@ -335,11 +346,13 @@ impl Packet {
                 out.extend_from_slice(&pass.to_le_bytes());
                 out.extend_from_slice(&sent.to_le_bytes());
             }
-            Packet::PassStats { pass, expected, received } => {
+            Packet::PassStats { pass, expected, received, runs, burst_lost } => {
                 out.push(KIND_PASS_STATS);
                 out.extend_from_slice(&pass.to_le_bytes());
                 out.extend_from_slice(&expected.to_le_bytes());
                 out.extend_from_slice(&received.to_le_bytes());
+                out.extend_from_slice(&runs.to_le_bytes());
+                out.extend_from_slice(&burst_lost.to_le_bytes());
             }
             Packet::LevelShed { level, bytes, eps } => {
                 out.push(KIND_LEVEL_SHED);
@@ -388,19 +401,20 @@ impl Packet {
                 })
             }
             KIND_LOST => {
-                need(8)?;
+                need(12)?;
                 let pass = u32::from_le_bytes(rest[..4].try_into().unwrap());
-                let count = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
-                need(8 + count * 5)?;
+                let total = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+                let count = u32::from_le_bytes(rest[8..12].try_into().unwrap()) as usize;
+                need(12 + count * 5)?;
                 let mut ftgs = Vec::with_capacity(count);
                 for i in 0..count {
-                    let off = 8 + i * 5;
+                    let off = 12 + i * 5;
                     ftgs.push((
                         rest[off],
                         u32::from_le_bytes(rest[off + 1..off + 5].try_into().unwrap()),
                     ));
                 }
-                Ok(Packet::LostList { pass, ftgs })
+                Ok(Packet::LostList { pass, total, ftgs })
             }
             KIND_DONE => Ok(Packet::Done),
             KIND_MANIFEST => {
@@ -433,11 +447,13 @@ impl Packet {
                 })
             }
             KIND_PASS_STATS => {
-                need(4 + 8 + 8)?;
+                need(4 + 8 + 8 + 4 + 8)?;
                 Ok(Packet::PassStats {
                     pass: u32::from_le_bytes(rest[..4].try_into().unwrap()),
                     expected: u64::from_le_bytes(rest[4..12].try_into().unwrap()),
                     received: u64::from_le_bytes(rest[12..20].try_into().unwrap()),
+                    runs: u32::from_le_bytes(rest[20..24].try_into().unwrap()),
+                    burst_lost: u64::from_le_bytes(rest[24..32].try_into().unwrap()),
                 })
             }
             KIND_LEVEL_SHED => {
@@ -493,11 +509,12 @@ mod tests {
     fn control_roundtrips() {
         roundtrip(Packet::LambdaUpdate { lambda: 383.25 });
         roundtrip(Packet::EndOfPass { pass: 7 });
-        roundtrip(Packet::LostList { pass: 2, ftgs: vec![(0, 1), (3, 99999)] });
-        roundtrip(Packet::LostList { pass: 0, ftgs: vec![] });
-        // A maximally-sized lost list must fit one datagram.
+        roundtrip(Packet::LostList { pass: 2, total: 2, ftgs: vec![(0, 1), (3, 99999)] });
+        roundtrip(Packet::LostList { pass: 0, total: 0, ftgs: vec![] });
+        // A maximally-sized (truncated) lost list must fit one datagram.
         roundtrip(Packet::LostList {
             pass: 9,
+            total: 10 * MAX_LOST_PER_MSG as u32,
             ftgs: (0..MAX_LOST_PER_MSG).map(|i| (3u8, i as u32)).collect(),
         });
         roundtrip(Packet::Done);
@@ -513,7 +530,13 @@ mod tests {
             contract: 1,
         }));
         roundtrip(Packet::StreamEnd { stream: 3, pass: 2, sent: 123_456 });
-        roundtrip(Packet::PassStats { pass: 1, expected: 50_000, received: 49_500 });
+        roundtrip(Packet::PassStats {
+            pass: 1,
+            expected: 50_000,
+            received: 49_500,
+            runs: 125,
+            burst_lost: 320,
+        });
         roundtrip(Packet::LevelShed { level: 3, bytes: 40 * 1024, eps: 0.0042 });
         roundtrip(Packet::LevelShed { level: 0, bytes: 0, eps: 1.0 });
     }
@@ -602,7 +625,7 @@ mod tests {
             ),
             Packet::LambdaUpdate { lambda: 1.5 },
             Packet::Done,
-            Packet::LostList { pass: 1, ftgs: vec![(0, 3)] },
+            Packet::LostList { pass: 1, total: 1, ftgs: vec![(0, 3)] },
             Packet::StreamEnd { stream: 2, pass: 0, sent: 10 },
         ];
         for p in frames {

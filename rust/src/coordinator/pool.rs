@@ -49,14 +49,18 @@ use super::packet::{
     encode_fragment_into, FragmentHeader, Manifest, ManifestLevel, Packet, PacketView,
     MAX_DATAGRAM, MAX_LOST_PER_MSG,
 };
+use super::estimate::{PassObservation, TwoStateEstimator};
+use super::rate::{AdaptConfig, PassVerdict, RateController, RttEstimator};
 use super::receiver::ReceiverConfig;
 use super::sender::pace_until;
 use crate::api::observer::{emit, EventSink};
 use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
-use crate::model::error_model::{optimize_deadline_bitplane, BitplaneDeadlinePlan};
+use crate::model::error_model::{
+    optimize_deadline_bitplane, BitplaneDeadlinePlan, ResidualSchedule,
+};
 use crate::model::params::{LevelSchedule, NetParams, PlaneCut};
-use crate::model::time_model::optimize_parity;
+use crate::model::time_model::{optimize_parity, optimize_parity_bursty, parity_floor_bursty};
 use crate::transport::channel::{Datagram, FrameQueue};
 use crate::transport::frame::FramePool;
 use crate::util::err::Result;
@@ -91,6 +95,9 @@ pub struct PoolConfig {
     /// level shed granularity). Lets a Deadline transfer keep a decodable
     /// bitplane prefix of a level it cannot afford in full.
     pub plane_cuts: Vec<Vec<PlaneCut>>,
+    /// Congestion/burst adaptation knobs ([`AdaptConfig::fixed`] for the
+    /// legacy fixed-rate, i.i.d.-λ̂ behaviour).
+    pub adapt: AdaptConfig,
 }
 
 impl PoolConfig {
@@ -118,6 +125,7 @@ impl PoolConfig {
             }
             Contract::BestEffort => {}
         }
+        self.adapt.validate()?;
         Ok(())
     }
 
@@ -179,6 +187,10 @@ pub struct PassRecord {
     pub per_stream: Vec<u64>,
     /// λ̂ computed from this pass's receiver statistics.
     pub lambda_hat: f64,
+    /// Per-stream pacing rate the pass was sent at (fragments/s).
+    pub rate: f64,
+    /// Smoothed mean loss-run length b̂ after this pass's barrier.
+    pub burst: f64,
     /// FTGs the receiver reported unrecoverable after this pass.
     pub lost_ftgs: u64,
     /// Shed decisions taken at this pass's barrier (Deadline only; part
@@ -198,6 +210,9 @@ pub struct PoolSenderReport {
     pub trace: Vec<PassRecord>,
     /// λ̂ after each pass (same values as in `trace`, flat for plotting).
     pub lambda_history: Vec<f64>,
+    /// Per-stream pacing rate after each pass barrier (the controller's
+    /// back-off/recovery trajectory; constant under a fixed config).
+    pub rate_history: Vec<f64>,
     /// τ accounting for Deadline transfers (`None` otherwise).
     pub deadline: Option<DeadlineOutcome>,
 }
@@ -310,26 +325,40 @@ impl DeadlineState {
 
     /// Re-solve the deadline plan against the residual budget for the
     /// pending retransmission set `next` (job indices into `jobs`), at
-    /// the barrier's λ̂. Mutates the kept jobs' per-pass parity, drops
-    /// shed jobs from `next` (marking them dead in `alive`), queues
-    /// [`Packet::LevelShed`] advertisements, and returns the decisions
-    /// for the pass trace. Deterministic: every input is a pure function
-    /// of (config, dataset, channel seeds).
+    /// the barrier's λ̂ (priced into `net`, whose `r` is the *actual*
+    /// aggregate rate the next pass will be paced at). `burst` is the
+    /// smoothed mean loss-run length b̂ (1.0 = i.i.d.); `unreported` the
+    /// lost FTGs beyond the wire list's cap, charged as worst-case
+    /// groups the budget must still cover in later passes. Mutates the
+    /// kept jobs' per-pass parity, drops shed jobs from `next` (marking
+    /// them dead in `alive`), queues [`Packet::LevelShed`]
+    /// advertisements, and returns the decisions for the pass trace.
+    /// Deterministic: every input is a pure function of (config,
+    /// dataset, channel seeds).
+    #[allow(clippy::too_many_arguments)]
     fn replan(
         &mut self,
         cfg: &PoolConfig,
+        net: &NetParams,
         jobs: &mut [FtgJob],
         alive: &mut [bool],
         next: &mut Vec<usize>,
-        lambda_hat: f64,
+        burst: f64,
+        unreported: u64,
     ) -> Vec<ShedDecision> {
         let s = cfg.net.s as u64;
         // Reserve the closing barrier pass (one latency for the empty
-        // pass that converges the Done exchange after a shed) plus one
-        // group's air time of ceil-rounding slack — the Eq. 12 cost
-        // model prices fractional group counts.
-        let budget =
-            self.tau - self.virtual_elapsed - cfg.net.t - cfg.net.n as f64 / cfg.net.r;
+        // pass that converges the Done exchange after a shed) and the
+        // air time of the lost FTGs the receiver could not fit in the
+        // capped wire list — they resurface in later lost lists and
+        // cost at most n fragments each. The old reserve instead kept
+        // one whole group of ceil-rounding slack: with the exact
+        // per-group pricing of [`ResidualSchedule::transmission_time`]
+        // there is no fractional-group rounding left to absorb.
+        let budget = self.tau
+            - self.virtual_elapsed
+            - cfg.net.t
+            - unreported as f64 * cfg.net.n as f64 / net.r;
 
         // Pending retransmission set grouped by level, in level order.
         let mut by_level: BTreeMap<u8, Vec<usize>> = BTreeMap::new();
@@ -385,11 +414,15 @@ impl DeadlineState {
             let remapped = res_cuts.iter().map(|c| c.iter().map(|p| p.0).collect()).collect();
             rsched = rsched.with_cuts(remapped);
         }
-        let plan = BitplaneDeadlinePlan::replan_residual(
-            &cfg.aggregate_net(lambda_hat),
-            &rsched,
-            budget,
-        );
+        // Exact residual pricing: the pending groups' data geometry is
+        // frozen, so the re-plan charges Σ ceil(bytes_j/s) + G_j·m_j
+        // fragments per level — not the fractional Eq. 9 re-derivation,
+        // which overcharged ceil slack at the old m0 and undercharged
+        // plans that lowered parity.
+        let group_counts: Vec<u64> =
+            order.iter().map(|l| by_level[l].len() as u64).collect();
+        let residual = ResidualSchedule::new(rsched, group_counts);
+        let plan = BitplaneDeadlinePlan::replan_residual_exact(net, &residual, budget, burst);
         let (kept_levels, base_m, partial) = match plan {
             Some(p) => (p.base.levels, p.base.m, p.partial),
             None => (0, Vec::new(), None),
@@ -604,6 +637,17 @@ impl TransferPool {
         // Fixed per-pass parity keeps the trace deterministic; λ̂
         // feedback adapts the *next* pass (Eq. 8 / Eq. 12 re-solve).
         let mut lambda_hat = lambda_hat0;
+        // Adaptive layer, clocked by the same virtual pass time as the
+        // deadline debit so every decision is deterministic. The RTT
+        // estimator drives only the barrier retry cadence (cold RTO =
+        // the legacy 200 ms retry window); the controller moves the
+        // per-stream pace between passes; the two-state estimator
+        // splits the loss into burst/residual and prices λ̂ at the
+        // *actual* pass rate instead of the nominal one.
+        let mut controller = RateController::new(cfg.net.r, cfg.adapt);
+        let mut estimator = TwoStateEstimator::new(0.5);
+        let mut rtt = RttEstimator::new(0.02, 0.2);
+        let mut virtual_now = 0.0f64;
 
         let mut jobs: Vec<FtgJob> = Vec::new();
         for (li, level) in levels.iter().enumerate().take(send_levels) {
@@ -630,6 +674,7 @@ impl TransferPool {
             duration: 0.0,
             trace: Vec::new(),
             lambda_history: Vec::new(),
+            rate_history: Vec::new(),
             deadline: None,
         };
 
@@ -654,7 +699,10 @@ impl TransferPool {
                 .collect();
 
             // === Fan out: one worker per stream, own channel + encoder ===
-            let pace = Duration::from_secs_f64(1.0 / cfg.net.r);
+            // Paced at the controller's current per-stream rate (the
+            // configured `r` until a barrier verdict moves it).
+            let pace_rate = controller.rate();
+            let pace = Duration::from_secs_f64(1.0 / pace_rate);
             let net = cfg.net;
             let jobs_ref = &jobs;
             let sent_counts: Vec<u64> = std::thread::scope(|scope| {
@@ -682,8 +730,8 @@ impl TransferPool {
             report.fragments_sent += pass_sent;
 
             // === Barrier: end-of-pass exchange on the control channel ===
-            let mut stats: Option<(u64, u64)> = None;
-            let mut lost: Option<Vec<(u8, u32)>> = None;
+            let mut stats: Option<(u64, u64, u32, u64)> = None;
+            let mut lost: Option<(u32, Vec<(u8, u32)>)> = None;
             let mut finished = false;
             'exchange: for _ in 0..200 {
                 // Re-advertise pending sheds ahead of the barrier: the
@@ -694,19 +742,26 @@ impl TransferPool {
                         control.send(pkt);
                     }
                 }
+                let eop_sent = Instant::now();
                 control.send(&Packet::EndOfPass { pass }.encode());
-                let wait_until = Instant::now() + Duration::from_millis(200);
+                // Retry cadence from the RTT estimator: the idempotent
+                // exchange re-sends after one RTO instead of a fixed
+                // 200 ms (which the cold estimator reproduces).
+                let wait_until = eop_sent + Duration::from_secs_f64(rtt.rto());
                 while Instant::now() < wait_until {
                     let buf = match control.recv_timeout(Duration::from_millis(50)) {
                         Some(b) => b,
                         None => break,
                     };
                     match Packet::decode(&buf) {
-                        Ok(Packet::PassStats { pass: p, expected, received }) if p == pass => {
-                            stats = Some((expected, received));
+                        Ok(Packet::PassStats { pass: p, expected, received, runs, burst_lost })
+                            if p == pass =>
+                        {
+                            rtt.observe(eop_sent.elapsed().as_secs_f64());
+                            stats = Some((expected, received, runs, burst_lost));
                         }
-                        Ok(Packet::LostList { pass: p, ftgs }) if p == pass => {
-                            lost = Some(ftgs);
+                        Ok(Packet::LostList { pass: p, total, ftgs }) if p == pass => {
+                            lost = Some((total, ftgs));
                         }
                         Ok(Packet::Done) => {
                             finished = true;
@@ -724,44 +779,82 @@ impl TransferPool {
                     bail!("pool sender timed out awaiting pass {pass} feedback");
                 }
             }
-            let (expected, received, lost) = if finished && (stats.is_none() || lost.is_none())
-            {
-                // A completed transfer whose PassStats/LostList datagrams
-                // were dropped: synthesize the final trace record instead
-                // of aborting on "no PassStats".
-                let (e, r) = stats.unwrap_or((0, 0));
-                (e, r, Vec::new())
-            } else {
-                let (e, r) = stats
-                    .ok_or_else(|| anyhow!("no PassStats for pass {pass} (receiver gone?)"))?;
-                (e, r, lost.ok_or_else(|| anyhow!("no LostList for pass {pass}"))?)
-            };
-
-            // === Shared λ̂ update (kept when no fresh statistics came) ===
-            if !finished || expected > 0 {
-                let loss_frac = if expected == 0 {
-                    0.0
+            let (expected, received, runs, burst_lost, lost_total, lost) =
+                if finished && (stats.is_none() || lost.is_none()) {
+                    // A completed transfer whose PassStats/LostList
+                    // datagrams were dropped: synthesize the final trace
+                    // record instead of aborting on "no PassStats".
+                    let (e, r, ru, bl) = stats.unwrap_or((0, 0, 0, 0));
+                    (e, r, ru, bl, 0u32, Vec::new())
                 } else {
-                    (1.0 - received as f64 / expected as f64).clamp(0.0, 1.0)
+                    let (e, r, ru, bl) = stats
+                        .ok_or_else(|| anyhow!("no PassStats for pass {pass} (receiver gone?)"))?;
+                    let (t, l) = lost.ok_or_else(|| anyhow!("no LostList for pass {pass}"))?;
+                    (e, r, ru, bl, t, l)
                 };
-                lambda_hat = loss_frac * cfg.net.r * cfg.streams as f64;
-            }
-            report.lambda_history.push(lambda_hat);
-            emit(events, TransferEvent::LambdaUpdated { lambda: lambda_hat });
 
             // === Virtual-clock debit: Eq. 9 for the pass — aggregate
-            // air time over N·r plus one-way latency. Deterministic
-            // (a pure function of the fragment counts, unlike wall
-            // time) and priced like the Eq. 12 solves that planned the
-            // pass — modulo the whole-group ceil rounding the final
-            // `met` verdict and the replans' reserve account for. ===
-            let pass_secs = cfg.net.t
-                + pass_sent as f64 / (cfg.net.r * cfg.streams as f64);
+            // air time over the rate the pass was *actually* paced at,
+            // plus one-way latency. Deterministic (a pure function of
+            // the fragment counts and the controller's virtual-time
+            // decisions, unlike wall time) and priced like the Eq. 12
+            // solves that planned the pass. ===
+            let pass_rate_agg = pace_rate * cfg.streams as f64;
+            let pass_secs = cfg.net.t + pass_sent as f64 / pass_rate_agg;
+            virtual_now += pass_secs;
             if let Some(dl) = deadline.as_mut() {
                 dl.virtual_elapsed += pass_secs;
             }
 
+            // === Shared λ̂ update (kept when no fresh statistics came).
+            // The loss fraction is priced at the pass's actual aggregate
+            // rate: the old `loss_frac · N·r_nominal` overestimated λ̂
+            // whenever the pacer had backed off, double-counting the
+            // very loss the back-off was answering. ===
+            let obs = PassObservation {
+                elapsed: pass_secs,
+                offered: expected,
+                received,
+                runs,
+                burst_lost,
+                rate: pass_rate_agg,
+            };
+            let loss_frac = obs.loss_frac();
+            if !finished || expected > 0 {
+                estimator.observe_pass(&obs);
+                lambda_hat = loss_frac * pass_rate_agg;
+            }
+
+            // === Pass verdict: congestion backs the rate off, burst-
+            // shaped channel loss sustains it and codes harder. ===
+            let verdict = controller.on_pass(virtual_now, loss_frac, obs.burst_len());
+            if let PassVerdict::Congestion { residual_loss } = verdict {
+                // Loss the next (backed-off) pass still expects from the
+                // policer — the channel-noise part the parity must cover.
+                lambda_hat = residual_loss * controller.rate() * cfg.streams as f64;
+            }
+            let burst = if cfg.adapt.burst_aware { estimator.burst_len() } else { 1.0 };
+            report.lambda_history.push(lambda_hat);
+            report.rate_history.push(controller.rate());
+            emit(events, TransferEvent::LambdaUpdated { lambda: lambda_hat });
+            // Emitted before the next pass fans out, so an observer
+            // driving a live channel (the congestion testkit) applies
+            // the new rate deterministically at the pass boundary.
+            emit(
+                events,
+                TransferEvent::RateAdapted {
+                    pass,
+                    rate: controller.rate(),
+                    backoff: controller.rate() < controller.r_max(),
+                },
+            );
+
             // === Next pass: map lost ids to jobs, re-solve, shed ===
+            // Solvers see λ̂ *and* the rate the next pass will actually
+            // run at (λ·n/r is the regime selector — pricing λ̂ at the
+            // actual rate but r at nominal would skew every solve).
+            let solver_net =
+                NetParams { lambda: lambda_hat, r: controller.rate() * cfg.streams as f64, ..cfg.net };
             let mut shed: Vec<ShedDecision> = Vec::new();
             let mut next: Vec<usize> = Vec::new();
             if !finished && !lost.is_empty() {
@@ -780,16 +873,28 @@ impl TransferPool {
                         None => bail!("receiver reported unknown FTG {key:?}"),
                     }
                 }
+                let unreported = lost_total.saturating_sub(lost.len() as u32) as u64;
                 if let Some(dl) = deadline.as_mut() {
                     // Pass-barrier τ accounting: price the pending set
                     // under the fresh λ̂ against the residual budget and
-                    // shed what no longer fits (Eq. 12 re-solve).
-                    shed = dl.replan(cfg, &mut jobs, &mut alive, &mut next, lambda_hat);
+                    // shed what no longer fits (exact-geometry Eq. 12
+                    // re-solve, burst-aware under a burst verdict).
+                    shed = dl.replan(cfg, &solver_net, &mut jobs, &mut alive, &mut next, burst, unreported);
                 } else {
                     let lost_bytes: u64 =
                         next.iter().map(|&i| jobs[i].k as u64 * s as u64).sum();
-                    let m_new =
-                        optimize_parity(&cfg.aggregate_net(lambda_hat), lost_bytes.max(1)).m;
+                    // Under a burst verdict Eq. 8's optimum sits at the
+                    // start of a survivability plateau (see
+                    // `parity_floor_bursty`): clamp the solve so the
+                    // per-pass group-failure residual is contracted and
+                    // the lost list drains geometrically.
+                    let m_new = if matches!(verdict, PassVerdict::Burst { .. }) && burst > 1.0 {
+                        optimize_parity_bursty(&solver_net, lost_bytes.max(1), burst)
+                            .m
+                            .max(parity_floor_bursty(&solver_net, burst, 0.05))
+                    } else {
+                        optimize_parity(&solver_net, lost_bytes.max(1)).m
+                    };
                     for &i in &next {
                         jobs[i].m = m_new as u8;
                     }
@@ -802,6 +907,8 @@ impl TransferPool {
                 fragments: pass_sent,
                 per_stream,
                 lambda_hat,
+                rate: pace_rate,
+                burst: estimator.burst_len(),
                 lost_ftgs: lost.len() as u64,
                 shed: shed.clone(),
             });
@@ -930,6 +1037,18 @@ impl TransferPool {
         // Per-pass statistics: announced (per stream) and received counts.
         let mut announced: HashMap<u32, HashMap<u8, u64>> = HashMap::new();
         let mut received_in_pass: HashMap<u32, u64> = HashMap::new();
+        // Loss-run accounting for the burst estimator: per-stream wire
+        // sequences are monotone across passes, so a fragment arriving
+        // with seq above the stream's expectation is one contiguous loss
+        // run (length = gap). Runs of length ≥ 2 also accumulate into
+        // `burst_lost` so the sender can split λ̂ into burst/residual
+        // components. Tail losses (fragments after a stream's last
+        // arrival) are charged at the pass barrier from the announced
+        // counts.
+        let mut next_seq: HashMap<u8, u64> = HashMap::new();
+        let mut cum_announced: HashMap<u8, u64> = HashMap::new();
+        let mut pass_runs: HashMap<u32, u32> = HashMap::new();
+        let mut pass_burst_lost: HashMap<u32, u64> = HashMap::new();
         // Cached reply to the last finalized pass, pre-encoded once:
         // duplicate EndOfPass retries must get byte-identical answers
         // even after later fragments arrive, and resending reuses the
@@ -973,12 +1092,15 @@ impl TransferPool {
             // passes older than the cache are ignored. The manifest is a
             // parameter (not a capture) because LevelShed advertisements
             // mutate it between barriers.
+            #[allow(clippy::too_many_arguments)]
             let finalize = |pass: u32,
                                 control: &mut C,
                                 manifest: &Manifest,
                                 groups: &HashMap<(u8, u32), FtgArena>,
                                 announced: &HashMap<u32, HashMap<u8, u64>>,
                                 received_in_pass: &HashMap<u32, u64>,
+                                pass_runs: &HashMap<u32, u32>,
+                                pass_burst_lost: &HashMap<u32, u64>,
                                 last_reply: &mut Option<(u32, Vec<u8>, Vec<u8>, bool)>,
                                 report: &mut PoolReceiverReport|
              -> bool {
@@ -1008,13 +1130,23 @@ impl TransferPool {
                 });
                 // Cap the wire list to one datagram; the tail is simply
                 // re-reported on the next pass (nonempty ⇒ capped
-                // nonempty, so the Done decision is unaffected). Encoded
-                // once per pass — retries reuse the bytes.
+                // nonempty, so the Done decision is unaffected). `total`
+                // carries the true count so the sender can price the
+                // unreported tail when re-planning. Encoded once per
+                // pass — retries reuse the bytes.
+                let total = lost.len() as u32;
                 let wire: Vec<(u8, u32)> =
                     lost.iter().take(MAX_LOST_PER_MSG).copied().collect();
                 let lost_empty = lost.is_empty();
-                let stats_buf = Packet::PassStats { pass, expected, received }.encode();
-                let lost_buf = Packet::LostList { pass, ftgs: wire }.encode();
+                let stats_buf = Packet::PassStats {
+                    pass,
+                    expected,
+                    received,
+                    runs: *pass_runs.get(&pass).unwrap_or(&0),
+                    burst_lost: *pass_burst_lost.get(&pass).unwrap_or(&0),
+                }
+                .encode();
+                let lost_buf = Packet::LostList { pass, total, ftgs: wire }.encode();
                 control.send(&stats_buf);
                 control.send(&lost_buf);
                 *last_reply = Some((pass, stats_buf, lost_buf, lost_empty));
@@ -1071,6 +1203,28 @@ impl TransferPool {
                 if let Some(pass) = pending_end {
                     if marker_complete(&announced, pass) {
                         pending_end = None;
+                        // Tail-loss accounting, once per pass (retries hit
+                        // the cached reply): any announced fragments past a
+                        // stream's highest arrival are one trailing loss
+                        // run. Map order is irrelevant — per-stream
+                        // contributions commute into the pass totals.
+                        if last_reply.as_ref().map_or(true, |(p, ..)| pass > *p) {
+                            if let Some(per_stream) = announced.get(&pass) {
+                                for (st, &sent) in per_stream {
+                                    let cum = cum_announced.entry(*st).or_insert(0);
+                                    *cum += sent;
+                                    let seen = next_seq.get(st).copied().unwrap_or(0);
+                                    if *cum > seen {
+                                        let gap = *cum - seen;
+                                        *pass_runs.entry(pass).or_insert(0) += 1;
+                                        if gap >= 2 {
+                                            *pass_burst_lost.entry(pass).or_insert(0) += gap;
+                                        }
+                                        next_seq.insert(*st, *cum);
+                                    }
+                                }
+                            }
+                        }
                         if finalize(
                             pass,
                             control,
@@ -1078,6 +1232,8 @@ impl TransferPool {
                             &groups,
                             &announced,
                             &received_in_pass,
+                            &pass_runs,
+                            &pass_burst_lost,
                             &mut last_reply,
                             &mut report,
                         ) {
@@ -1095,6 +1251,23 @@ impl TransferPool {
                                 let h = view.header;
                                 report.fragments_received += 1;
                                 *received_in_pass.entry(h.pass).or_insert(0) += 1;
+                                // Loss-run detection on the stream's
+                                // monotone wire sequence. Reordering
+                                // within a channel cannot happen (FIFO
+                                // transports), so a gap is a genuine
+                                // contiguous drop; the run is charged to
+                                // the pass whose fragment exposed it.
+                                let exp = next_seq.get(&h.stream).copied().unwrap_or(0);
+                                if h.seq > exp {
+                                    let gap = h.seq - exp;
+                                    *pass_runs.entry(h.pass).or_insert(0) += 1;
+                                    if gap >= 2 {
+                                        *pass_burst_lost.entry(h.pass).or_insert(0) += gap;
+                                    }
+                                }
+                                if h.seq >= exp {
+                                    next_seq.insert(h.stream, h.seq + 1);
+                                }
                                 let g = groups
                                     .entry((h.level, h.ftg))
                                     .or_insert_with(|| FtgArena::new(h.k, h.m, s));
@@ -1425,6 +1598,7 @@ mod tests {
             initial_lambda: 0.0,
             max_duration: Duration::from_secs(60),
             plane_cuts: Vec::new(),
+            adapt: AdaptConfig::fixed(),
         }
     }
 

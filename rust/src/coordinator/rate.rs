@@ -1,0 +1,419 @@
+//! Congestion-aware rate control for the transfer engines.
+//!
+//! JANUS's fixed `pace = 1/r` treats every loss as channel noise to be
+//! out-coded with parity. On a shared path that is exactly wrong:
+//! congestion loss must be answered by *sending slower*, not by coding
+//! harder (which adds load and makes the collapse worse). This module
+//! supplies the discrimination machinery the pass barrier needs:
+//!
+//! * [`RttEstimator`] — SRTT/RTTVAR/RTO in the RFC 6298 shape, fed by
+//!   the wall-clock latency of the pass-barrier feedback exchange. It
+//!   drives only the *retry cadence* of the (idempotent) barrier
+//!   control exchange — never rate decisions — so engine traces stay a
+//!   pure function of (config, dataset, channel seeds).
+//! * [`RateController`] — a CUBIC-style pacer in the rate domain,
+//!   driven by **virtual** pass time: multiplicative decrease on
+//!   confirmed congestion, cubic recovery toward the pre-loss rate on
+//!   clean passes, full restore when a probe proves the loss is channel
+//!   noise.
+//! * [`AdaptConfig`] — the knobs, with [`AdaptConfig::fixed`]
+//!   reproducing the legacy fixed-rate/i.i.d. behaviour (the baseline
+//!   the adaptive path is benchmarked against).
+//!
+//! Congestion vs channel loss is settled by a deterministic
+//! rate-response probe. A policer of capacity `c` drops the fraction
+//! `1 − c/rate` regardless of coding; random or burst channel loss
+//! drops a fraction independent of the send rate. So on a suspect pass
+//! (lossy, but not burst-shaped) the controller backs off one pass and
+//! compares the observed loss against both predictions:
+//!
+//! ```text
+//! congestion prediction: max(0, 1 − capacity_est / rate_new)
+//!                        capacity_est = rate_old · (1 − loss_old)
+//! channel prediction:    loss_old   (rate-independent)
+//! ```
+//!
+//! whichever is closer wins. Burst-shaped loss (mean run length ≥
+//! [`AdaptConfig::burst_threshold`]) skips the probe entirely: bursts
+//! at sustained rate are the classic channel-fade signature and are
+//! answered with parity sized by the burst-aware Eq. 8
+//! ([`crate::model::optimize_parity_bursty`]).
+
+/// Knobs of the adaptive layer shared by both engines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptConfig {
+    /// Pace passes with the CUBIC controller (false = fixed `1/r`).
+    pub rate_control: bool,
+    /// Feed measured burst length into the Eq. 8 / Eq. 12 re-solves
+    /// (false = i.i.d. λ̂, the pre-adaptive behaviour).
+    pub burst_aware: bool,
+    /// Multiplicative decrease factor on congestion (CUBIC β).
+    pub beta: f64,
+    /// Cubic growth coefficient, as a fraction of the configured rate
+    /// per cubic-second (dimensionless; scales with `r`).
+    pub cubic_c: f64,
+    /// Mean loss-run length at or above which a lossy pass is
+    /// classified as channel burst loss (code harder, sustain rate).
+    pub burst_threshold: f64,
+    /// Pass loss fraction at or below which the pass counts as clean.
+    pub loss_threshold: f64,
+    /// Passes to wait after a channel verdict before probing again.
+    pub probe_holdoff: u32,
+    /// Rate floor, as a fraction of the configured per-stream rate.
+    pub min_rate_frac: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            rate_control: true,
+            burst_aware: true,
+            beta: 0.7,
+            cubic_c: 0.4,
+            burst_threshold: 3.0,
+            loss_threshold: 0.02,
+            probe_holdoff: 2,
+            min_rate_frac: 0.25,
+        }
+    }
+}
+
+impl AdaptConfig {
+    /// Legacy behaviour: fixed pacing at the configured rate and the
+    /// i.i.d. per-pass λ̂ — the ablation baseline.
+    pub fn fixed() -> Self {
+        AdaptConfig { rate_control: false, burst_aware: false, ..AdaptConfig::default() }
+    }
+
+    /// Engine-side sanity gate (the typed builder validates earlier).
+    pub fn validate(&self) -> crate::util::err::Result<()> {
+        if !(0.0 < self.beta && self.beta < 1.0) {
+            crate::bail!("adapt.beta must be in (0, 1), got {}", self.beta);
+        }
+        if !(self.cubic_c > 0.0 && self.cubic_c.is_finite()) {
+            crate::bail!("adapt.cubic_c must be positive, got {}", self.cubic_c);
+        }
+        if !(self.burst_threshold >= 1.0) {
+            crate::bail!("adapt.burst_threshold must be ≥ 1, got {}", self.burst_threshold);
+        }
+        if !(0.0..1.0).contains(&self.loss_threshold) {
+            crate::bail!("adapt.loss_threshold must be in [0, 1), got {}", self.loss_threshold);
+        }
+        if !(0.0 < self.min_rate_frac && self.min_rate_frac <= 1.0) {
+            crate::bail!("adapt.min_rate_frac must be in (0, 1], got {}", self.min_rate_frac);
+        }
+        Ok(())
+    }
+}
+
+/// SRTT/RTTVAR/RTO estimator (RFC 6298 shape: α = 1/8, β = 1/4).
+///
+/// Fed with wall-clock samples of the pass-barrier feedback exchange
+/// (EndOfPass sent → PassStats received); [`RttEstimator::rto`] sets
+/// the retry timeout of that idempotent exchange, replacing the fixed
+/// 200 ms retry the engines used before.
+#[derive(Debug, Clone)]
+pub struct RttEstimator {
+    srtt: Option<f64>,
+    rttvar: f64,
+    min_rto: f64,
+    max_rto: f64,
+}
+
+const RTT_ALPHA: f64 = 0.125;
+const RTT_BETA: f64 = 0.25;
+
+impl RttEstimator {
+    /// `min_rto`/`max_rto` clamp the retry timeout (seconds).
+    pub fn new(min_rto: f64, max_rto: f64) -> Self {
+        assert!(0.0 < min_rto && min_rto <= max_rto);
+        RttEstimator { srtt: None, rttvar: 0.0, min_rto, max_rto }
+    }
+
+    /// Record one RTT sample (seconds, non-negative).
+    pub fn observe(&mut self, rtt: f64) {
+        if !rtt.is_finite() || rtt < 0.0 {
+            return;
+        }
+        match self.srtt {
+            None => {
+                self.srtt = Some(rtt);
+                self.rttvar = rtt / 2.0;
+            }
+            Some(srtt) => {
+                self.rttvar = (1.0 - RTT_BETA) * self.rttvar + RTT_BETA * (srtt - rtt).abs();
+                self.srtt = Some((1.0 - RTT_ALPHA) * srtt + RTT_ALPHA * rtt);
+            }
+        }
+    }
+
+    /// Smoothed RTT, if warmed up.
+    pub fn srtt(&self) -> Option<f64> {
+        self.srtt
+    }
+
+    /// Retransmission timeout: `srtt + 4·rttvar`, clamped; `max_rto`
+    /// before the first sample (a cold barrier must not spin).
+    pub fn rto(&self) -> f64 {
+        match self.srtt {
+            None => self.max_rto,
+            Some(srtt) => (srtt + 4.0 * self.rttvar).clamp(self.min_rto, self.max_rto),
+        }
+    }
+}
+
+/// How the controller judged one pass barrier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PassVerdict {
+    /// Loss at or below the clean threshold; rate grows cubically.
+    Clean,
+    /// Burst-shaped channel loss: sustain rate, code harder with the
+    /// measured mean burst length.
+    Burst { burst_len: f64 },
+    /// Lossy but shape-ambiguous: rate backed off for one probe pass.
+    Probing,
+    /// Probe settled on congestion: stay backed off (CUBIC regime).
+    Congestion { residual_loss: f64 },
+    /// Probe settled on channel loss: rate restored, parity handles it.
+    ChannelLoss,
+}
+
+/// Outstanding rate-response probe.
+#[derive(Debug, Clone, Copy)]
+struct Probe {
+    /// Loss fraction of the pass that triggered the probe.
+    pre_loss: f64,
+    /// Rate the trigger pass ran at.
+    r_old: f64,
+}
+
+/// CUBIC-style pacer in the rate domain (fragments/s per stream),
+/// clocked by **virtual** pass time so decisions are deterministic.
+#[derive(Debug, Clone)]
+pub struct RateController {
+    cfg: AdaptConfig,
+    /// Configured (ceiling) per-stream rate.
+    r_max: f64,
+    /// Current per-stream pacing rate.
+    rate: f64,
+    /// Rate at the last multiplicative decrease (CUBIC `W_max`).
+    w_max: f64,
+    /// Virtual time of the last decrease (CUBIC epoch start).
+    epoch: f64,
+    probe: Option<Probe>,
+    holdoff: u32,
+}
+
+impl RateController {
+    pub fn new(r_max: f64, cfg: AdaptConfig) -> Self {
+        assert!(r_max > 0.0 && r_max.is_finite());
+        RateController { cfg, r_max, rate: r_max, w_max: r_max, epoch: 0.0, probe: None, holdoff: 0 }
+    }
+
+    /// Current per-stream pacing rate (fragments/s).
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Configured ceiling rate.
+    pub fn r_max(&self) -> f64 {
+        self.r_max
+    }
+
+    fn floor(&self) -> f64 {
+        self.r_max * self.cfg.min_rate_frac
+    }
+
+    /// CUBIC window as a function of time since the last decrease:
+    /// `W(t) = C·(t − K)³ + W_max`, `K = ∛(W_max·(1−β)/C)`, with
+    /// `C = cubic_c · r_max` so the knob is scale-free.
+    fn cubic_at(&self, now: f64) -> f64 {
+        let c = self.cfg.cubic_c * self.r_max;
+        let k = (self.w_max * (1.0 - self.cfg.beta) / c).cbrt();
+        let t = (now - self.epoch).max(0.0);
+        c * (t - k).powi(3) + self.w_max
+    }
+
+    fn decrease(&mut self, now: f64) {
+        self.w_max = self.rate;
+        self.rate = (self.rate * self.cfg.beta).max(self.floor());
+        self.epoch = now;
+    }
+
+    /// Feed one pass-barrier observation and update the rate the next
+    /// pass will be paced at. `now` is virtual seconds elapsed,
+    /// `loss_frac` the pass loss fraction, `burst_len` the mean length
+    /// of the receiver's observed loss runs (≥ 1 when any loss).
+    pub fn on_pass(&mut self, now: f64, loss_frac: f64, burst_len: f64) -> PassVerdict {
+        if !self.cfg.rate_control {
+            return if loss_frac <= self.cfg.loss_threshold {
+                PassVerdict::Clean
+            } else {
+                PassVerdict::Burst { burst_len }
+            };
+        }
+        if let Some(p) = self.probe.take() {
+            // Rate response observed: attribute the trigger pass.
+            let capacity_est = p.r_old * (1.0 - p.pre_loss);
+            let congestion_pred = (1.0 - capacity_est / self.rate).max(0.0);
+            let channel_pred = p.pre_loss;
+            let is_congestion = (loss_frac - congestion_pred).abs()
+                <= (loss_frac - channel_pred).abs();
+            if is_congestion {
+                // Stay backed off; decrease again while loss persists.
+                if loss_frac > self.cfg.loss_threshold {
+                    self.decrease(now);
+                }
+                let residual =
+                    (1.0 - capacity_est.min(self.rate) / self.rate).max(0.0);
+                return PassVerdict::Congestion { residual_loss: residual };
+            }
+            // Channel loss: the back-off bought nothing — restore.
+            self.rate = self.r_max;
+            self.holdoff = self.cfg.probe_holdoff;
+            return PassVerdict::ChannelLoss;
+        }
+        if loss_frac <= self.cfg.loss_threshold {
+            // Clean pass: cubic growth toward (and past) w_max.
+            if self.rate < self.r_max {
+                self.rate = self.cubic_at(now).clamp(self.rate, self.r_max);
+            }
+            self.holdoff = self.holdoff.saturating_sub(1);
+            return PassVerdict::Clean;
+        }
+        if self.cfg.burst_aware && burst_len >= self.cfg.burst_threshold {
+            // Burst-shaped channel loss: never back off, code harder.
+            self.rate = self.r_max;
+            return PassVerdict::Burst { burst_len };
+        }
+        if self.holdoff > 0 {
+            self.holdoff -= 1;
+            return PassVerdict::ChannelLoss;
+        }
+        // Ambiguous loss: probe with one backed-off pass.
+        self.probe = Some(Probe { pre_loss: loss_frac, r_old: self.rate });
+        self.rate = (self.rate * self.cfg.beta).max(self.floor());
+        self.epoch = now;
+        PassVerdict::Probing
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtt_first_sample_initializes_rfc6298() {
+        let mut e = RttEstimator::new(0.05, 2.0);
+        assert_eq!(e.rto(), 2.0, "cold estimator retries at max_rto");
+        e.observe(0.1);
+        assert!((e.srtt().unwrap() - 0.1).abs() < 1e-12);
+        // rto = srtt + 4·(srtt/2) = 3·srtt
+        assert!((e.rto() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rtt_converges_and_clamps() {
+        let mut e = RttEstimator::new(0.05, 2.0);
+        for _ in 0..200 {
+            e.observe(0.01);
+        }
+        assert!((e.srtt().unwrap() - 0.01).abs() < 1e-6);
+        assert_eq!(e.rto(), 0.05, "steady low RTT clamps to min_rto");
+        e.observe(f64::NAN); // ignored
+        assert_eq!(e.rto(), 0.05);
+    }
+
+    #[test]
+    fn clean_passes_keep_the_configured_rate() {
+        let mut c = RateController::new(1000.0, AdaptConfig::default());
+        for pass in 0..10 {
+            let v = c.on_pass(pass as f64 * 0.1, 0.0, 1.0);
+            assert_eq!(v, PassVerdict::Clean);
+            assert_eq!(c.rate(), 1000.0);
+        }
+    }
+
+    #[test]
+    fn policer_loss_confirms_congestion_and_converges() {
+        // Deterministic policer of capacity 500 frag/s: observed loss
+        // at rate R is max(0, 1 − 500/R).
+        let cap = 500.0;
+        let mut c = RateController::new(1000.0, AdaptConfig::default());
+        let loss_at = |r: f64| (1.0 - cap / r).max(0.0);
+        // Pass 0 at 1000 → 50% loss, runs of length 1 → probe.
+        let v = c.on_pass(0.1, loss_at(1000.0), 1.0);
+        assert_eq!(v, PassVerdict::Probing);
+        assert!((c.rate() - 700.0).abs() < 1e-9);
+        // Probe pass at 700 → 28.6% loss ⇒ congestion, decrease again.
+        let v = c.on_pass(0.2, loss_at(700.0), 1.0);
+        assert!(matches!(v, PassVerdict::Congestion { .. }), "{v:?}");
+        assert!((c.rate() - 490.0).abs() < 1e-9, "rate {}", c.rate());
+        // Below capacity: clean passes grow cubically but stay ≤ r_max.
+        let mut t = 0.3;
+        for _ in 0..20 {
+            let v = c.on_pass(t, loss_at(c.rate()), 1.0);
+            t += 0.1;
+            if c.rate() <= cap {
+                assert_eq!(v, PassVerdict::Clean);
+            }
+            assert!(c.rate() <= 1000.0);
+        }
+        // The controller hovers near capacity, not back at r_max.
+        assert!(c.rate() < 800.0, "rate {} should hug capacity", c.rate());
+    }
+
+    #[test]
+    fn bernoulli_loss_restores_rate_after_one_probe() {
+        // 20% rate-independent loss: the probe changes nothing ⇒
+        // channel verdict, rate restored, probing held off.
+        let mut c = RateController::new(1000.0, AdaptConfig::default());
+        assert_eq!(c.on_pass(0.1, 0.2, 1.2), PassVerdict::Probing);
+        assert!((c.rate() - 700.0).abs() < 1e-9);
+        assert_eq!(c.on_pass(0.2, 0.2, 1.2), PassVerdict::ChannelLoss);
+        assert_eq!(c.rate(), 1000.0, "channel loss must not cost rate");
+        // Holdoff: the next lossy passes do not probe again.
+        assert_eq!(c.on_pass(0.3, 0.2, 1.2), PassVerdict::ChannelLoss);
+        assert_eq!(c.rate(), 1000.0);
+    }
+
+    #[test]
+    fn burst_loss_sustains_rate_without_probing() {
+        let mut c = RateController::new(1000.0, AdaptConfig::default());
+        let v = c.on_pass(0.1, 0.2, 8.0);
+        assert_eq!(v, PassVerdict::Burst { burst_len: 8.0 });
+        assert_eq!(c.rate(), 1000.0);
+    }
+
+    #[test]
+    fn fixed_config_never_moves_the_rate() {
+        let mut c = RateController::new(1000.0, AdaptConfig::fixed());
+        for (i, loss) in [0.5, 0.3, 0.0, 0.9].iter().enumerate() {
+            c.on_pass(i as f64, *loss, 1.0);
+            assert_eq!(c.rate(), 1000.0);
+        }
+    }
+
+    #[test]
+    fn rate_floor_holds_under_sustained_congestion() {
+        let cfg = AdaptConfig { min_rate_frac: 0.25, ..AdaptConfig::default() };
+        let mut c = RateController::new(1000.0, cfg);
+        for i in 0..40 {
+            c.on_pass(i as f64 * 0.1, 0.9, 1.0);
+            assert!(c.rate() >= 250.0 - 1e-9, "rate {} under floor", c.rate());
+        }
+    }
+
+    #[test]
+    fn adapt_config_validation() {
+        assert!(AdaptConfig::default().validate().is_ok());
+        assert!(AdaptConfig::fixed().validate().is_ok());
+        assert!(AdaptConfig { beta: 1.0, ..AdaptConfig::default() }.validate().is_err());
+        assert!(AdaptConfig { cubic_c: 0.0, ..AdaptConfig::default() }.validate().is_err());
+        assert!(AdaptConfig { burst_threshold: 0.5, ..AdaptConfig::default() }
+            .validate()
+            .is_err());
+        assert!(AdaptConfig { loss_threshold: 1.0, ..AdaptConfig::default() }.validate().is_err());
+        assert!(AdaptConfig { min_rate_frac: 0.0, ..AdaptConfig::default() }.validate().is_err());
+    }
+}

@@ -178,10 +178,13 @@ pub(crate) fn transfer_receiver(
                 let lost = collect_lost(&manifest, &groups, s);
                 if retransmitting {
                     // Cap the wire list so it always fits one datagram;
-                    // the tail is re-reported on the next pass.
+                    // the tail is re-reported on the next pass. `total`
+                    // carries the true count so the sender can price the
+                    // unreported tail when re-planning.
+                    let total = lost.len() as u32;
                     let wire: Vec<(u8, u32)> =
                         lost.iter().take(MAX_LOST_PER_MSG).copied().collect();
-                    chan.send(&Packet::LostList { pass, ftgs: wire }.encode());
+                    chan.send(&Packet::LostList { pass, total, ftgs: wire }.encode());
                     if lost.is_empty() {
                         chan.send(&Packet::Done.encode());
                         break;
@@ -283,14 +286,15 @@ fn collect_lost(
     let mut lost = Vec::new();
     for (li, entry) in manifest.levels.iter().enumerate() {
         let size = entry.size;
-        // Walk the level's groups by byte accounting. Unlike the pooled
-        // engine (fixed k per job, exact m0 recompute in its
-        // `collect_lost`), the single-stream sender adapts m — and thus
-        // k — *mid-pass* on λ updates, so the manifest's m0 cannot be
-        // trusted for never-seen groups here: a too-small stride would
-        // over-enumerate FTG ids that are then reported lost forever.
-        // Stick to the conservative worst case k = n (under-enumerates,
-        // converging as retransmitted groups reveal their true k).
+        // Walk the level's groups by byte accounting. Group *geometry*
+        // (k per group) is frozen at pass 0 from the manifest's m0 — the
+        // sender adapts only the parity count m on λ updates, never k —
+        // so never-seen groups stride by exactly k0·s. (Before the
+        // freeze this fell back to a worst-case k = n stride, which
+        // under-enumerated after whole-pass loss: a single lost FTG id
+        // per n/k0 real groups, costing an extra feedback round per
+        // group to discover each next id.)
+        let k0 = n.saturating_sub(entry.m0 as usize).max(1);
         let mut covered = 0u64;
         let mut ftg = 0u32;
         while covered < size {
@@ -303,7 +307,7 @@ fn collect_lost(
                 }
                 None => {
                     lost.push((li as u8, ftg));
-                    covered += n as u64 * s as u64; // worst-case stride
+                    covered += k0 as u64 * s as u64;
                 }
             }
             ftg += 1;

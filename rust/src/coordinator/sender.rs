@@ -11,6 +11,7 @@ use super::arena::FtgArena;
 use super::packet::{
     encode_fragment_into, validate_fragment_size, FragmentHeader, Manifest, ManifestLevel, Packet,
 };
+use super::rate::{AdaptConfig, RateController, RttEstimator};
 use crate::api::observer::{emit, EventSink};
 use crate::api::{Contract, TransferEvent};
 use crate::erasure::RsCode;
@@ -40,6 +41,9 @@ pub struct SenderConfig {
     /// level granularity). Lets the Deadline contract shed the final
     /// level to a decodable bitplane prefix instead of dropping it.
     pub plane_cuts: Vec<Vec<PlaneCut>>,
+    /// Congestion/burst adaptation knobs ([`AdaptConfig::fixed`] for the
+    /// legacy fixed-rate behaviour).
+    pub adapt: AdaptConfig,
 }
 
 /// What the sender did.
@@ -57,6 +61,9 @@ pub struct SenderReport {
     pub encode_rate: f64,
     /// λ updates received from the peer.
     pub lambda_updates: Vec<f64>,
+    /// Pacing rate after each pass barrier (fragments/s) — records the
+    /// controller's back-off/recovery trajectory.
+    pub rate_history: Vec<f64>,
 }
 
 /// One encoded FTG traveling from the parity thread to the tx thread:
@@ -134,8 +141,10 @@ pub(crate) fn transfer_sender(
     // Per-level pass-0 parity advertised in the manifest. Deadline plans
     // fix it per level; the adaptive contracts start from the initial
     // Eq. 8 solve (the same one the parity thread seeds itself with).
-    // The single-stream receiver treats it as advisory only — see its
-    // `collect_lost` — but the wire geometry hint costs nothing.
+    // This is a geometry *contract*: the parity thread freezes each
+    // level's k at n − m0 and λ adaptation moves only the parity count,
+    // so the receiver's `collect_lost` can stride never-seen groups
+    // exactly instead of by the worst case.
     let manifest_m0: Vec<u8> = match &deadline {
         Some((_, m)) => m.iter().map(|&mi| mi as u8).collect(),
         None => {
@@ -188,6 +197,7 @@ pub(crate) fn transfer_sender(
         plan_history: Vec::new(),
         encode_rate: 0.0,
         lambda_updates: Vec::new(),
+        rate_history: Vec::new(),
     };
     if let Some((_, plan)) = &deadline {
         report.plan_history.push(plan.clone());
@@ -204,6 +214,7 @@ pub(crate) fn transfer_sender(
     let enc_stats = Arc::new(AtomicU64::new(0)); // fragments encoded
     let enc_stats2 = Arc::clone(&enc_stats);
     let sched2 = sched.clone();
+    let enc_m0 = manifest_m0.clone();
 
     // Emitted before the parity thread spawns so PassStarted is always
     // the first event of the transfer.
@@ -268,7 +279,18 @@ pub(crate) fn transfer_sender(
                         Some(p) => p[li],
                         None => current_m,
                     };
-                    let k = (n - m).min(remaining.div_ceil(s).max(1));
+                    // Geometry is frozen at the manifest's m0: k never
+                    // follows the adapted m (the old `k = n − m` made a
+                    // mid-pass λ update silently re-shape group
+                    // boundaries, so the receiver could not enumerate
+                    // never-seen groups and whole-pass loss cost one
+                    // extra feedback round per group). Groups may carry
+                    // k + m ≠ n slots; the header's (k, m) stays
+                    // authoritative for the receiver's arenas.
+                    let k = n
+                        .saturating_sub(enc_m0[li] as usize)
+                        .max(1)
+                        .min(remaining.div_ceil(s).max(1));
                     let code = codes
                         .entry((k, m))
                         .or_insert_with(|| RsCode::new(k, m).expect("valid k,m"));
@@ -342,9 +364,17 @@ fn transmit_loop(
     report: &mut SenderReport,
     events: EventSink<'_>,
 ) -> Result<()> {
-    let pace = Duration::from_secs_f64(1.0 / cfg.net.r);
+    // Pacing: the controller starts at the configured `r` and moves
+    // only on pass-barrier verdicts (congestion back-off / cubic
+    // recovery). `AdaptConfig::fixed()` reproduces the legacy 1/r pace.
+    let mut controller = RateController::new(cfg.net.r, cfg.adapt);
+    let mut pace = Duration::from_secs_f64(1.0 / controller.rate());
+    // Barrier retry cadence: cold RTO equals the legacy fixed 200 ms
+    // retry window, then tightens to the measured feedback RTT.
+    let mut rtt = RttEstimator::new(0.02, 0.2);
     let mut next_send = Instant::now();
     let mut seq = 0u64;
+    let mut pass_groups = 0u64;
     let mut out = Vec::with_capacity(cfg.net.s + 64);
     // Retained FTGs for retransmission (Alg. 1 only).
     let retain = cfg.contract.retransmits();
@@ -397,6 +427,7 @@ fn transmit_loop(
                 poll_feedback(chan, report);
             }
         }
+        pass_groups += 1;
         if retain {
             buf_store.insert((ftg.level, ftg.ftg), ftg);
         }
@@ -416,15 +447,19 @@ fn transmit_loop(
     );
     loop {
         // Notify end of pass; await the lost list (re-notify on timeout).
-        let mut lost: Option<Vec<(u8, u32)>> = None;
+        // The retry window is the RTT estimator's RTO, fed by the
+        // latency of each successful EndOfPass → LostList exchange.
+        let mut lost: Option<(u32, Vec<(u8, u32)>)> = None;
         for _ in 0..100 {
+            let eop_sent = Instant::now();
             chan.send(&Packet::EndOfPass { pass }.encode());
-            let deadline_wait = Instant::now() + Duration::from_millis(200);
+            let deadline_wait = eop_sent + Duration::from_secs_f64(rtt.rto());
             while Instant::now() < deadline_wait {
                 match chan.recv_timeout(Duration::from_millis(50)) {
                     Some(buf) => match Packet::decode(&buf) {
-                        Ok(Packet::LostList { pass: p, ftgs }) if p == pass => {
-                            lost = Some(ftgs);
+                        Ok(Packet::LostList { pass: p, total, ftgs }) if p == pass => {
+                            rtt.observe(eop_sent.elapsed().as_secs_f64());
+                            lost = Some((total, ftgs));
                             break;
                         }
                         Ok(Packet::Done) => return Ok(()),
@@ -446,7 +481,7 @@ fn transmit_loop(
                 bail!("sender timed out waiting for lost list");
             }
         }
-        let lost = match lost {
+        let (lost_total, lost) = match lost {
             Some(l) => l,
             None => {
                 if !cfg.contract.retransmits() {
@@ -459,8 +494,28 @@ fn transmit_loop(
         if lost.is_empty() || !retain {
             return Ok(());
         }
+        // Pass-barrier rate decision. The single-stream receiver reports
+        // group-granular loss only, so the group-failure fraction stands
+        // in for the fragment loss fraction and runs are unobserved
+        // (burst_len = 1 ⇒ the controller relies on its rate-response
+        // probe to discriminate congestion from channel loss).
+        let loss_frac = (lost_total as f64 / pass_groups.max(1) as f64).min(1.0);
+        controller.on_pass(start.elapsed().as_secs_f64(), loss_frac, 1.0);
+        if (controller.rate() - cfg.net.r).abs() > f64::EPSILON * cfg.net.r {
+            emit(
+                events,
+                TransferEvent::RateAdapted {
+                    pass,
+                    rate: controller.rate(),
+                    backoff: controller.rate() < controller.r_max(),
+                },
+            );
+        }
+        report.rate_history.push(controller.rate());
+        pace = Duration::from_secs_f64(1.0 / controller.rate());
         // Retransmit the lost FTGs.
         pass += 1;
+        pass_groups = lost.len() as u64;
         report.passes = pass;
         emit(events, TransferEvent::PassStarted { pass });
         let pass_start_fragments = report.fragments_sent;

@@ -11,7 +11,7 @@
 //! display drops the `n`.
 
 use super::params::{LevelSchedule, NetParams, PlaneCut};
-use super::prob::p_unrecoverable_table;
+use super::prob::{p_unrecoverable_table, p_unrecoverable_table_bursty};
 
 /// Per-level configuration chosen by the Eq. 12 solver.
 #[derive(Debug, Clone, PartialEq)]
@@ -267,6 +267,122 @@ impl BitplaneDeadlinePlan {
             return None;
         }
         optimize_deadline_bitplane(params, residual, budget)
+    }
+
+    /// [`replan_residual`](Self::replan_residual) with exact per-group
+    /// pricing and burst-aware loss: residual pass time comes from
+    /// [`ResidualSchedule::transmission_time`] (`Σ D_j + G_j·m_j`
+    /// fragments — the frozen pass-0 group geometry, not the fractional
+    /// Eq. 9 re-derivation) and the constraint probabilities use mean
+    /// burst length `burst` (1.0 = i.i.d.). The error partition weighs
+    /// the *actual* pending group counts. Like the paper solve, it takes
+    /// the maximum feasible residual-level prefix, minimizes corrected
+    /// expected error over the parity odometer, then spends slack on the
+    /// best plane cut of the first excluded level.
+    pub fn replan_residual_exact(
+        params: &NetParams,
+        residual: &ResidualSchedule,
+        budget: f64,
+        burst: f64,
+    ) -> Option<BitplaneDeadlinePlan> {
+        if budget.is_nan() || budget <= 0.0 {
+            return None;
+        }
+        let sched = &residual.sched;
+        let l = (1..=sched.num_levels())
+            .filter(|&l| residual.transmission_time(params, &vec![0; l]) <= budget)
+            .last()?;
+        let max_m = params.n / 2;
+        let p_table = p_unrecoverable_table_bursty(params, max_m, burst);
+        let n_groups: Vec<f64> = residual.groups[..l].iter().map(|&g| g as f64).collect();
+        let mut best: Option<DeadlineOpt> = None;
+        let mut m = vec![0usize; l];
+        loop {
+            let time = residual.transmission_time(params, &m);
+            if time <= budget {
+                let p: Vec<f64> = m.iter().map(|&mj| p_table[mj]).collect();
+                let err = expected_error_with(sched, &p, &n_groups, ErrorFormula::Corrected);
+                if best.as_ref().map_or(true, |b| err < b.expected_error) {
+                    best = Some(DeadlineOpt { levels: l, m: m.clone(), expected_error: err, time });
+                }
+            }
+            let mut idx = 0;
+            loop {
+                if idx == l {
+                    break;
+                }
+                m[idx] += 1;
+                if m[idx] <= max_m {
+                    break;
+                }
+                m[idx] = 0;
+                idx += 1;
+            }
+            if idx == l {
+                break;
+            }
+        }
+        let base = best?;
+        let next = base.levels;
+        let mut partial = None;
+        if next < sched.num_levels() {
+            let left = budget - base.time;
+            if left > 0.0 {
+                let frags = (left * params.r).floor();
+                if frags >= 1.0 {
+                    let budget_bytes = (frags as u64).saturating_mul(params.s as u64);
+                    if let Some(cut) = sched.best_cut_within(next, budget_bytes) {
+                        partial = Some((next, cut));
+                    }
+                }
+            }
+        }
+        Some(BitplaneDeadlinePlan { base, partial })
+    }
+}
+
+/// A pending retransmission set with its *frozen* group geometry: the
+/// per-level byte sizes (and remapped plane cuts) of a residual
+/// [`LevelSchedule`], plus the exact count of pending FTGs per level.
+///
+/// The continuous Eq. 9 model re-derives group counts from the candidate
+/// parity — `sizes_j / ((n − m_j)·s)` — which is right when planning a
+/// fresh transmission but wrong for a residual pass: the pending groups'
+/// data geometry was fixed at pass 0, so a re-plan only changes the
+/// *parity* appended to each existing group. Pricing residual passes
+/// with the fractional formula both overcharges (whole-group ceil slack
+/// at the old `m0`) and undercharges (a re-plan dropping parity below
+/// `m0` does not shrink the group count), which skews every shed
+/// decision downstream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidualSchedule {
+    /// Pending bytes + ε ladder (+ remapped cuts) per residual level.
+    pub sched: LevelSchedule,
+    /// Pending FTGs per residual level (same length as `sched`).
+    pub groups: Vec<u64>,
+}
+
+impl ResidualSchedule {
+    pub fn new(sched: LevelSchedule, groups: Vec<u64>) -> ResidualSchedule {
+        assert_eq!(groups.len(), sched.num_levels());
+        ResidualSchedule { sched, groups }
+    }
+
+    /// Exact single-pass time for retransmitting the first `l = m.len()`
+    /// residual levels with per-level parity `m`: every pending group
+    /// resends its data fragments (`Σ ceil(bytes_j/s)` in total) plus
+    /// `m_j` fresh parity fragments — `t + (Σ_j (D_j + G_j·m_j) − 1)/r`.
+    pub fn transmission_time(&self, params: &NetParams, m: &[usize]) -> f64 {
+        let s = params.s as f64;
+        let frags: f64 = m
+            .iter()
+            .enumerate()
+            .map(|(j, &mj)| {
+                let data = (self.sched.sizes[j] as f64 / s).ceil();
+                data + self.groups[j] as f64 * mj as f64
+            })
+            .sum();
+        params.t + (frags - 1.0) / params.r
     }
 }
 
@@ -634,6 +750,103 @@ mod tests {
         // No budget at all: shed everything pending.
         assert!(BitplaneDeadlinePlan::replan_residual(&p, &residual, 0.0).is_none());
         assert!(BitplaneDeadlinePlan::replan_residual(&p, &residual, -1.0).is_none());
+    }
+
+    #[test]
+    fn residual_time_charges_exact_per_group_parity() {
+        let p = NetParams { t: 0.001, r: 1000.0, lambda: 0.0, n: 32, s: 1024 };
+        // 10 pending groups holding 300 fragments of data (some groups
+        // are short tails — that's why G·k ≠ ceil(bytes/s) in general).
+        let rs = ResidualSchedule::new(
+            LevelSchedule::new(vec![300 * 1024, 64 * 1024], vec![0.01, 0.0001]),
+            vec![10, 2],
+        );
+        // m = [4, 16]: 300 + 10·4 + 64 + 2·16 = 436 fragments.
+        let t = rs.transmission_time(&p, &[4, 16]);
+        assert!((t - (0.001 + 435.0 / 1000.0)).abs() < 1e-12, "t={t}");
+        // m = 0 charges no parity at all — no whole-group ceil slack.
+        let t0 = rs.transmission_time(&p, &[0, 0]);
+        assert!((t0 - (0.001 + 363.0 / 1000.0)).abs() < 1e-12, "t0={t0}");
+        // The fractional Eq. 9 model overcharges the same m = 0 plan:
+        // 300·1024/(32·1024) = 9.375 "groups" × n = 300 data fragments
+        // priced as if every group were full-width.
+        let frac = transmission_time(&p, &rs.sched, &[0, 0]);
+        assert!((frac - t0).abs() < 1e-9, "full-width levels agree: {frac} vs {t0}");
+    }
+
+    #[test]
+    fn exact_replan_affords_more_than_fractional_when_parity_drops() {
+        let p = NetParams { t: 0.001, r: 1000.0, lambda: 0.0, n: 32, s: 1024 };
+        // Pending: 64 groups of level 1 (64 KiB) + 256 groups of level 2
+        // (256 KiB), every group a single data fragment (heavy loss left
+        // scattered single-fragment remnants).
+        let rs = ResidualSchedule::new(
+            LevelSchedule::new(vec![64 * 1024, 256 * 1024], vec![0.01, 0.0001]),
+            vec![64, 256],
+        );
+        // Budget fits all 320 data fragments at m = 0 (0.321 s) but the
+        // fractional model can also only afford m = 0 here, so compare
+        // where it matters: a budget in between lets the exact model
+        // finish both levels while the fractional one (same time at
+        // m = 0 for full-width levels) agrees — the divergence shows up
+        // once parity enters: exact prices m = 1 on level 1 as +64
+        // fragments, fractional as a *group-count* change.
+        let exact = BitplaneDeadlinePlan::replan_residual_exact(&p, &rs, 0.40, 1.0).unwrap();
+        assert_eq!(exact.base.levels, 2);
+        let exact_t = rs.transmission_time(&p, &exact.base.m);
+        assert!(exact_t <= 0.40);
+        // Lossless residual: no parity is worth buying.
+        assert_eq!(exact.base.m, vec![0, 0]);
+
+        // Under loss, the exact model buys parity per *group*.
+        let lossy = NetParams { lambda: 100.0, ..p };
+        let plan = BitplaneDeadlinePlan::replan_residual_exact(&lossy, &rs, 0.80, 1.0).unwrap();
+        assert_eq!(plan.base.levels, 2);
+        assert!(plan.base.m.iter().any(|&m| m > 0), "loss ⇒ parity: {:?}", plan.base.m);
+        assert!(rs.transmission_time(&lossy, &plan.base.m) <= 0.80);
+        // And the budget constraint really binds at the fragment level:
+        // every extra level-2 parity unit costs 256 fragments = 0.256 s.
+        let mut over = plan.base.m.clone();
+        over[1] += 4;
+        assert!(rs.transmission_time(&lossy, &over) > 0.80);
+    }
+
+    #[test]
+    fn exact_replan_burst_awareness_buys_whole_event_parity() {
+        // 20% loss in bursts of 8 at the pass rate: i.i.d. pricing is
+        // content below the plateau; burst pricing must either clear a
+        // whole extra event or spend nothing — never the dead zone where
+        // extra parity can't survive one more event.
+        let p = NetParams { t: 0.001, r: 19_144.0, lambda: 0.2 * 19_144.0, n: 32, s: 1024 };
+        let rs = ResidualSchedule::new(
+            LevelSchedule::new(vec![1024 * 1024, 4096 * 1024], vec![0.01, 0.0001]),
+            vec![32, 128],
+        );
+        // 5120 data fragments cost ~0.268 s; 0.30 leaves ~600 fragments
+        // of parity budget, so the solvers must actually choose.
+        let budget = 0.30;
+        let iid = BitplaneDeadlinePlan::replan_residual_exact(&p, &rs, budget, 1.0).unwrap();
+        let bursty = BitplaneDeadlinePlan::replan_residual_exact(&p, &rs, budget, 8.0).unwrap();
+        for &mj in &bursty.base.m {
+            assert!(
+                mj % 8 == 0 || mj == 16,
+                "burst-aware m={mj} wastes parity inside a plateau: {:?}",
+                bursty.base.m
+            );
+        }
+        assert!(iid.base.time <= budget && bursty.base.time <= budget);
+    }
+
+    #[test]
+    fn exact_replan_rejects_empty_budgets() {
+        let p = NetParams { t: 0.001, r: 1000.0, lambda: 0.0, n: 32, s: 1024 };
+        let rs = ResidualSchedule::new(
+            LevelSchedule::new(vec![64 * 1024], vec![0.01]),
+            vec![64],
+        );
+        assert!(BitplaneDeadlinePlan::replan_residual_exact(&p, &rs, 0.0, 1.0).is_none());
+        assert!(BitplaneDeadlinePlan::replan_residual_exact(&p, &rs, f64::NAN, 1.0).is_none());
+        assert!(BitplaneDeadlinePlan::replan_residual_exact(&p, &rs, 0.01, 1.0).is_none());
     }
 
     #[test]

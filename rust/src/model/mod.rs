@@ -17,10 +17,14 @@ pub use error_model::{
     expected_error, expected_error_with, feasible_levels,
     optimize_deadline_coordinate, optimize_deadline_coordinate_with,
     optimize_deadline_exhaustive, optimize_deadline_exhaustive_with,
-    transmission_time, BitplaneDeadlinePlan, DeadlineOpt, ErrorFormula,
+    transmission_time, BitplaneDeadlinePlan, DeadlineOpt, ErrorFormula, ResidualSchedule,
 };
 pub use params::{LevelSchedule, NetParams, PlaneCut};
-pub use prob::{mean_losses_per_ftg, p_unrecoverable, p_unrecoverable_table};
+pub use prob::{
+    mean_losses_per_ftg, p_unrecoverable, p_unrecoverable_bursty, p_unrecoverable_table,
+    p_unrecoverable_table_bursty,
+};
 pub use time_model::{
-    expected_time_curve, expected_total_time, num_ftgs, optimize_parity, TimeOpt,
+    expected_time_curve, expected_total_time, num_ftgs, optimize_parity, optimize_parity_bursty,
+    parity_floor_bursty, TimeOpt,
 };

@@ -73,6 +73,35 @@ pub fn p_unrecoverable_table(p: &NetParams, max_m: usize) -> Vec<f64> {
     (0..=max_m).map(|m| p_unrecoverable(p, m)).collect()
 }
 
+/// Burst-aware unrecoverability: λ losses/s arriving in runs of mean
+/// length `burst` fragments, instead of independently.
+///
+/// A stream transmits each FTG's fragments consecutively, so one loss
+/// *event* (a burst) erases ~`burst` consecutive fragments of the same
+/// group. Events therefore arrive at rate `λ/burst` and the group dies
+/// when more than `⌊m/burst⌋` events land in its air window — i.e.
+/// `P = poisson_sf(⌊m/b⌋, (λ/b)·n/r)`. Degrades to [`p_unrecoverable`]
+/// at `burst ≤ 1` (i.i.d.).
+///
+/// This is the correction the i.i.d. estimate misses: at 20% loss in
+/// bursts of 8 on n = 32, the i.i.d. model believes m = 12 is ample
+/// (p ≈ 1%) while the true failure rate is ~19% — one event kills 8
+/// fragments, so 12 parity only survives one event.
+pub fn p_unrecoverable_bursty(p: &NetParams, m: usize, burst: f64) -> f64 {
+    assert!(m < p.n);
+    if !(burst > 1.0) {
+        return p_unrecoverable(p, m);
+    }
+    let events = mean_losses_per_ftg(p) / burst;
+    let survivable = (m as f64 / burst).floor() as u64;
+    poisson_sf(survivable, events)
+}
+
+/// Precompute `p(m)` for m = 0..=max_m under burst-shaped loss.
+pub fn p_unrecoverable_table_bursty(p: &NetParams, max_m: usize, burst: f64) -> Vec<f64> {
+    (0..=max_m).map(|m| p_unrecoverable_bursty(p, m, burst)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +193,43 @@ mod tests {
         let table = p_unrecoverable_table(&p, 8);
         for (m, &v) in table.iter().enumerate() {
             assert_eq!(v, p_unrecoverable(&p, m));
+        }
+    }
+
+    #[test]
+    fn bursty_degrades_to_iid_at_unit_burst() {
+        for lambda in [19.0, 383.0, 957.0] {
+            let p = params(lambda);
+            for m in [0, 4, 12] {
+                assert_eq!(p_unrecoverable_bursty(&p, m, 1.0), p_unrecoverable(&p, m));
+                assert_eq!(p_unrecoverable_bursty(&p, m, 0.5), p_unrecoverable(&p, m));
+            }
+        }
+    }
+
+    #[test]
+    fn bursts_defeat_sub_burst_parity() {
+        // 20% loss at r=19144, n=32 ⇒ λn/r = 6.4 mean losses/FTG. In
+        // bursts of 8, m=12 survives only ⌊12/8⌋ = 1 event while events
+        // arrive at mean 0.8/FTG ⇒ P(≥2 events) ≈ 19% — an order of
+        // magnitude above the i.i.d. belief.
+        let p = NetParams { lambda: 0.2 * 19_144.0, ..params(0.0) };
+        let iid = p_unrecoverable(&p, 12);
+        let bursty = p_unrecoverable_bursty(&p, 12, 8.0);
+        assert!(bursty > 5.0 * iid, "bursty={bursty} iid={iid}");
+        assert!((0.15..0.25).contains(&bursty), "bursty={bursty}");
+    }
+
+    #[test]
+    fn bursty_table_monotone_and_matches_pointwise() {
+        let p = NetParams { lambda: 0.2 * 19_144.0, ..params(0.0) };
+        let table = p_unrecoverable_table_bursty(&p, 16, 8.0);
+        for (m, &v) in table.iter().enumerate() {
+            assert_eq!(v, p_unrecoverable_bursty(&p, m, 8.0));
+            assert!((0.0..=1.0).contains(&v));
+        }
+        for w in table.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15, "p must not increase with m");
         }
     }
 }

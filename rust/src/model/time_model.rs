@@ -2,7 +2,7 @@
 //! and the parity optimizer of Eq. 8 (guaranteed-error-bound contract).
 
 use super::params::NetParams;
-use super::prob::p_unrecoverable;
+use super::prob::{p_unrecoverable, p_unrecoverable_bursty};
 
 /// Number of FTGs needed to carry `total_bytes` of data with `m` parity
 /// fragments per group (continuous, as in the model: `N = S / ((n−m)s)`).
@@ -54,10 +54,20 @@ pub struct TimeOpt {
 /// `p` is computed with Eq. 7 when `λ·n/r > 1`, else Eq. 6 — dispatched
 /// inside [`p_unrecoverable`].
 pub fn optimize_parity(params: &NetParams, total_bytes: u64) -> TimeOpt {
+    optimize_parity_bursty(params, total_bytes, 1.0)
+}
+
+/// Eq. 8 under burst-shaped loss: identical search, but the constraint
+/// probability is [`p_unrecoverable_bursty`] with mean burst length
+/// `burst` (the two-state estimator's b̂). At `burst ≤ 1` this *is*
+/// [`optimize_parity`]. Burst-aware solves pick enough parity to survive
+/// whole loss events, where the i.i.d. estimate under-provisions and
+/// pays in extra retransmission passes.
+pub fn optimize_parity_bursty(params: &NetParams, total_bytes: u64, burst: f64) -> TimeOpt {
     let max_m = params.n / 2;
     let mut best: Option<TimeOpt> = None;
     for m in 0..=max_m {
-        let p_loss = p_unrecoverable(params, m);
+        let p_loss = p_unrecoverable_bursty(params, m, burst);
         let n_ftgs = num_ftgs(total_bytes, params, m);
         let t = expected_total_time(params, n_ftgs, p_loss);
         if best.map_or(true, |b| t < b.expected_time) {
@@ -65,6 +75,32 @@ pub fn optimize_parity(params: &NetParams, total_bytes: u64) -> TimeOpt {
         }
     }
     best.expect("non-empty search space")
+}
+
+/// Smallest `m ∈ {0..n/2}` whose burst-aware unrecoverability at mean
+/// burst length `burst` is at most `p_max` (falling back to `n/2` when
+/// no m reaches the target).
+///
+/// Why a floor on top of [`optimize_parity_bursty`]: Eq. 2 prices
+/// retransmission rounds as pure wire time, so under burst loss its
+/// optimum sits at the *start* of a survivability plateau (`m = b`,
+/// tolerating one event) and happily pays a long cascade of cheap
+/// rounds. In the pass-barrier engines every round is a full barrier —
+/// feedback RTT, re-solve, control exchange — which the continuous
+/// cascade underprices. When the two-state estimator's burst verdict is
+/// in force, the engines therefore clamp the Eq. 8 solve to this floor,
+/// bounding the per-pass group-failure residual at `p_max` so the lost
+/// list drains geometrically at a contracted rate instead of
+/// plateau-limited ~`P(≥2 events)`.
+pub fn parity_floor_bursty(params: &NetParams, burst: f64, p_max: f64) -> usize {
+    assert!((0.0..1.0).contains(&p_max));
+    let max_m = params.n / 2;
+    for m in 0..=max_m {
+        if p_unrecoverable_bursty(params, m, burst) <= p_max {
+            return m;
+        }
+    }
+    max_m
 }
 
 /// Expected time for every m (for Fig. 2's model curves).
@@ -159,6 +195,54 @@ mod tests {
         assert!(opt.expected_time <= curve[0].expected_time);
         assert!(opt.expected_time <= curve[16].expected_time);
         assert!(opt.m > 0 && opt.m < 16, "interior optimum expected, m={}", opt.m);
+    }
+
+    #[test]
+    fn burst_plateaus_trap_the_iid_solve() {
+        // Equal mean λ (20% of line rate, n = 32), burst length 8: the
+        // i.i.d. Eq. 8 solve lands mid-plateau (8 ≤ m ≤ 15 all survive
+        // exactly one event), so its believed failure rate is far below
+        // the burst truth, and extra parity between b and 2b−1 bought it
+        // nothing.
+        let p = NetParams { lambda: 0.2 * 19_144.0, ..NetParams::paper_default(0.0) };
+        let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+        let iid = optimize_parity(&p, bytes);
+        assert!(
+            (8..16).contains(&iid.m),
+            "iid pick m={} expected mid-plateau",
+            iid.m
+        );
+        let true_p = p_unrecoverable_bursty(&p, iid.m, 8.0);
+        assert!(
+            true_p > 1.5 * iid.p_unrecoverable,
+            "iid believed p={}, truth under bursts is {true_p}",
+            iid.p_unrecoverable
+        );
+        assert!((0.15..0.25).contains(&true_p), "plateau p={true_p}");
+    }
+
+    #[test]
+    fn parity_floor_escapes_the_plateau() {
+        // Same scenario: the 5%-residual floor demands m = 16 (two whole
+        // events survivable, p ≈ 4.7%) — the clamp that turns the burst
+        // verdict into fewer passes instead of a cheaper-looking cascade.
+        let p = NetParams { lambda: 0.2 * 19_144.0, ..NetParams::paper_default(0.0) };
+        let floor = parity_floor_bursty(&p, 8.0, 0.05);
+        assert_eq!(floor, 16);
+        assert!(p_unrecoverable_bursty(&p, floor, 8.0) <= 0.05);
+        assert!(p_unrecoverable_bursty(&p, floor - 1, 8.0) > 0.05);
+        // Unit burst degrades to the i.i.d. tail: the floor is modest.
+        let iid_floor = parity_floor_bursty(&p, 1.0, 0.05);
+        assert!(iid_floor < floor, "iid floor {iid_floor} !< burst floor {floor}");
+        // Unreachable targets saturate at n/2 instead of panicking.
+        assert_eq!(parity_floor_bursty(&p, 64.0, 1e-9), 16);
+    }
+
+    #[test]
+    fn burst_aware_solve_at_unit_burst_is_iid() {
+        let p = NetParams::paper_default(383.0);
+        let bytes = LevelSchedule::paper_nyx().total_bytes(4);
+        assert_eq!(optimize_parity_bursty(&p, bytes, 1.0), optimize_parity(&p, bytes));
     }
 
     #[test]

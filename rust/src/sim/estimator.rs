@@ -1,93 +1,14 @@
-//! Packet-loss-rate estimators.
+//! Packet-loss-rate estimators — simulator-facing surface.
 //!
-//! The paper's receiver estimates λ by counting losses in a window `T_W`
-//! (§4). This module provides that estimator plus an EWMA variant, with a
-//! common trait so the ablation bench can compare tracking error against
-//! the HMM ground truth (the paper cites HMM-based prediction work [37,
-//! 38, 41] as the natural extension).
+//! The estimator family itself lives in [`crate::coordinator::estimate`]
+//! now that the transfer engines consume it at the pass barrier (PR 6);
+//! this module re-exports it unchanged for existing `sim::` users and
+//! keeps [`tracking_rmse`], which depends on [`crate::sim::loss`] ground
+//! truth and therefore stays on the simulator side.
 
-/// Online λ estimator fed with per-window loss counts or raw events.
-pub trait LambdaEstimator {
-    /// Record that `lost` fragments were detected missing at `time`.
-    fn record_losses(&mut self, time: f64, lost: u64);
-    /// Current estimate (losses/second), if warmed up.
-    fn estimate(&self) -> Option<f64>;
-    fn name(&self) -> &'static str;
-}
-
-/// The paper's estimator: losses per fixed window `T_W`.
-#[derive(Debug, Clone)]
-pub struct WindowEstimator {
-    t_w: f64,
-    window_start: f64,
-    window_losses: u64,
-    last: Option<f64>,
-}
-
-impl WindowEstimator {
-    pub fn new(t_w: f64) -> Self {
-        assert!(t_w > 0.0);
-        WindowEstimator { t_w, window_start: 0.0, window_losses: 0, last: None }
-    }
-}
-
-impl LambdaEstimator for WindowEstimator {
-    fn record_losses(&mut self, time: f64, lost: u64) {
-        if time - self.window_start >= self.t_w {
-            let elapsed = time - self.window_start;
-            self.last = Some(self.window_losses as f64 / elapsed);
-            self.window_start = time;
-            self.window_losses = 0;
-        }
-        self.window_losses += lost;
-    }
-    fn estimate(&self) -> Option<f64> {
-        self.last
-    }
-    fn name(&self) -> &'static str {
-        "window"
-    }
-}
-
-/// Exponentially-weighted moving average over sub-windows: smoother than
-/// the raw window estimate, faster to react than enlarging `T_W`.
-#[derive(Debug, Clone)]
-pub struct EwmaEstimator {
-    sub_window: f64,
-    alpha: f64,
-    window_start: f64,
-    window_losses: u64,
-    value: Option<f64>,
-}
-
-impl EwmaEstimator {
-    pub fn new(sub_window: f64, alpha: f64) -> Self {
-        assert!(sub_window > 0.0 && (0.0..=1.0).contains(&alpha));
-        EwmaEstimator { sub_window, alpha, window_start: 0.0, window_losses: 0, value: None }
-    }
-}
-
-impl LambdaEstimator for EwmaEstimator {
-    fn record_losses(&mut self, time: f64, lost: u64) {
-        if time - self.window_start >= self.sub_window {
-            let elapsed = time - self.window_start;
-            let sample = self.window_losses as f64 / elapsed;
-            self.value = Some(match self.value {
-                Some(v) => self.alpha * sample + (1.0 - self.alpha) * v,
-                None => sample,
-            });
-            self.window_start = time;
-            self.window_losses = 0;
-        }
-        self.window_losses += lost;
-    }
-    fn estimate(&self) -> Option<f64> {
-        self.value
-    }
-    fn name(&self) -> &'static str {
-        "ewma"
-    }
-}
+pub use crate::coordinator::estimate::{
+    EwmaEstimator, LambdaEstimator, PassObservation, TwoStateEstimator, WindowEstimator,
+};
 
 /// Drive an estimator along an HMM loss trace at packet granularity and
 /// return its root-mean-square tracking error against the true λ(t).

@@ -18,12 +18,18 @@ pub struct HmmState {
     pub sigma: f64,
 }
 
-/// Configuration for the 3-state loss HMM.
+/// Configuration for the loss HMM.
 #[derive(Debug, Clone)]
 pub struct HmmConfig {
     pub states: Vec<HmmState>,
-    /// CTMC holding-time rate (transitions/second).
+    /// CTMC holding-time rate (transitions/second), used for every state
+    /// whose index is not covered by [`HmmConfig::hold_rates`].
     pub transition_rate: f64,
+    /// Optional per-state holding-time rates. Empty = uniform
+    /// `transition_rate` (the paper's symmetric 3-state chain); a
+    /// Gilbert-Elliott channel needs asymmetric dwell times, so its good
+    /// state holds far longer than its bad state.
+    pub hold_rates: Vec<f64>,
     /// Initial state index.
     pub initial_state: usize,
 }
@@ -39,12 +45,48 @@ impl Default for HmmConfig {
                 HmmState { mu: 957.0, sigma: 100.0 },
             ],
             transition_rate: 0.04,
+            hold_rates: Vec::new(),
             initial_state: 0,
         }
     }
 }
 
+impl HmmConfig {
+    /// Two-state Gilbert-Elliott channel tuned so that, observed at
+    /// `rate` fragments/s, the stationary loss fraction is `mean_loss`
+    /// and losses arrive in runs of mean length `burst_len` fragments.
+    ///
+    /// Construction: the bad state is near-total loss (λ_bad = 10·rate,
+    /// σ = 0, so every fragment inside a bad dwell is lost) and dwells
+    /// `burst_len / rate` seconds on average; the good state is lossless
+    /// and dwells `burst_len · (1 − mean_loss) / (mean_loss · rate)`, so
+    /// the fraction of time spent bad — hence the fraction of fragments
+    /// lost — is `mean_loss`.
+    pub fn gilbert_elliott(mean_loss: f64, burst_len: f64, rate: f64) -> Self {
+        assert!((0.0..1.0).contains(&mean_loss) && mean_loss > 0.0);
+        assert!(burst_len >= 1.0);
+        assert!(rate > 0.0);
+        let dwell_bad = burst_len / rate;
+        let dwell_good = dwell_bad * (1.0 - mean_loss) / mean_loss;
+        HmmConfig {
+            states: vec![
+                HmmState { mu: 0.0, sigma: 0.0 },         // good
+                HmmState { mu: 10.0 * rate, sigma: 0.0 }, // bad
+            ],
+            transition_rate: 1.0 / dwell_bad,
+            hold_rates: vec![1.0 / dwell_good, 1.0 / dwell_bad],
+            initial_state: 0,
+        }
+    }
+
+    /// Holding-time rate for state `i`.
+    fn hold_rate(&self, i: usize) -> f64 {
+        self.hold_rates.get(i).copied().unwrap_or(self.transition_rate)
+    }
+}
+
 /// HMM-driven loss process.
+#[derive(Debug, Clone)]
 pub struct HmmLoss {
     cfg: HmmConfig,
     rng: Pcg64,
@@ -75,7 +117,7 @@ impl HmmLoss {
         let mut rng = Pcg64::seeded(seed);
         let state = cfg.initial_state;
         let lambda = Self::draw_lambda(&mut rng, cfg.states[state]);
-        let state_end = dist::exponential(&mut rng, cfg.transition_rate);
+        let state_end = dist::exponential(&mut rng, cfg.hold_rate(state));
         let mut s = HmmLoss {
             cfg,
             rng,
@@ -119,7 +161,7 @@ impl HmmLoss {
         };
         self.state = next;
         self.lambda = Self::draw_lambda(&mut self.rng, self.cfg.states[next]);
-        self.state_end = at + dist::exponential(&mut self.rng, self.cfg.transition_rate);
+        self.state_end = at + dist::exponential(&mut self.rng, self.cfg.hold_rate(next));
     }
 
     /// Sample the next loss-event time from `from`, honouring state
@@ -246,6 +288,7 @@ mod tests {
         let cfg = HmmConfig {
             states: vec![HmmState { mu: 19.0, sigma: 0.0 }],
             transition_rate: 1e-12,
+            hold_rates: Vec::new(),
             initial_state: 0,
         };
         let mut h = HmmLoss::new(cfg, 3);

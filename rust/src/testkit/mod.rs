@@ -23,8 +23,12 @@
 
 use crate::api::transport::StagedTransport;
 use crate::coordinator::packet::is_fragment;
+use crate::sim::hmm::{HmmConfig, HmmLoss};
+use crate::sim::loss::LossProcess;
 use crate::transport::channel::{mem_pair, Datagram, MemChannel};
 use crate::util::Pcg64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Virtual time base: one tick per fragment pushed through the channel.
@@ -68,6 +72,12 @@ pub enum LossTrace {
     /// time, cycling on exhaustion — models regime changes (the HMM's
     /// low/medium/high states) deterministically.
     Phased { phases: Vec<(u64, f64)>, rng: Pcg64 },
+    /// Burst loss from a [`crate::sim::hmm`] Gilbert-Elliott chain,
+    /// sampled on the virtual clock: fragment ordinal `tick` maps to
+    /// chain time `tick / rate`, so the drop sequence is a pure function
+    /// of (config, seed) — bit-identical across runs regardless of how
+    /// the sender paces.
+    Gilbert { loss: HmmLoss, rate: f64 },
 }
 
 impl LossTrace {
@@ -82,6 +92,18 @@ impl LossTrace {
         assert!(!phases.is_empty());
         assert!(phases.iter().all(|&(n, f)| n > 0 && (0.0..=1.0).contains(&f)));
         LossTrace::Phased { phases, rng: Pcg64::seeded(seed) }
+    }
+
+    /// Gilbert-Elliott burst trace: stationary loss fraction `mean_loss`
+    /// arriving in runs of mean length `burst_len` fragments, observed at
+    /// `rate` fragments/s on the virtual clock. Same mean λ as
+    /// [`LossTrace::seeded`]`(mean_loss, _)` but a very different shape —
+    /// the pair the adaptive controller must tell apart.
+    pub fn gilbert_elliott(mean_loss: f64, burst_len: f64, rate: f64, seed: u64) -> LossTrace {
+        let cfg = HmmConfig::gilbert_elliott(mean_loss, burst_len, rate);
+        // One-packet-service-time TTL: a loss event marks exactly the
+        // fragment whose slot it fell in (see `sim::loss::StaticLoss`).
+        LossTrace::Gilbert { loss: HmmLoss::with_ttl(cfg, seed, 1.0 / rate), rate }
     }
 
     /// Decide the fate of the fragment at virtual time `tick` (0-based
@@ -106,7 +128,99 @@ impl LossTrace {
                 }
                 rng.bool_with(fraction)
             }
+            LossTrace::Gilbert { loss, rate } => loss.is_lost(tick as f64 / *rate),
         }
+    }
+}
+
+/// Shared, atomically-updated pacing rate (fragments/s) — the hook a test
+/// uses to make a [`CongestionChannel`]'s loss respond to the sender's
+/// adaptive rate: an observer sink stores each `RateAdapted` event here,
+/// and the channel reads it per fragment.
+#[derive(Debug, Clone)]
+pub struct RateHandle(Arc<AtomicU64>);
+
+impl RateHandle {
+    pub fn new(rate: f64) -> RateHandle {
+        assert!(rate > 0.0);
+        RateHandle(Arc::new(AtomicU64::new(rate.to_bits())))
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn set(&self, rate: f64) {
+        assert!(rate > 0.0);
+        self.0.store(rate.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Deterministic congestion model: a token-bucket policer of `capacity`
+/// fragments/s that drops the overflow whenever the sender's current rate
+/// (read from a [`RateHandle`]) exceeds capacity. Credit accrues in
+/// *virtual* time — `capacity / rate` tokens per offered fragment — so
+/// which fragments die is a pure function of (capacity, rate history),
+/// independent of wall-clock pacing: loss fraction ≈ `1 − capacity/rate`
+/// while over capacity, and exactly zero once the controller backs off to
+/// `rate ≤ capacity`. This is the loss *shape* that should trigger rate
+/// back-off, in contrast to [`LossTrace::Gilbert`] which should not.
+pub struct CongestionChannel<C: Datagram> {
+    pub inner: C,
+    capacity: f64,
+    rate: RateHandle,
+    credit: f64,
+    fragments_sent: u64,
+    fragments_dropped: u64,
+}
+
+impl<C: Datagram> CongestionChannel<C> {
+    /// `capacity` in fragments/s on this channel; `rate` is the handle
+    /// tracking the sender's current per-channel pacing rate.
+    pub fn new(inner: C, capacity: f64, rate: RateHandle) -> Self {
+        assert!(capacity > 0.0);
+        CongestionChannel {
+            inner,
+            capacity,
+            rate,
+            credit: 1.0,
+            fragments_sent: 0,
+            fragments_dropped: 0,
+        }
+    }
+
+    /// (fragments offered, fragments dropped).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.fragments_sent, self.fragments_dropped)
+    }
+}
+
+impl<C: Datagram> Datagram for CongestionChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        if is_fragment(buf) {
+            self.fragments_sent += 1;
+            // Bucket depth 2: enough slack to absorb rounding, small
+            // enough that sustained over-rate sending drops immediately.
+            self.credit = (self.credit + self.capacity / self.rate.get()).min(2.0);
+            if self.credit < 1.0 {
+                self.fragments_dropped += 1;
+                return;
+            }
+            self.credit -= 1.0;
+        }
+        self.inner.send(buf);
+    }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        self.inner.recv_into(buf, timeout)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        self.inner.try_recv_into(buf)
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.inner.try_recv()
     }
 }
 
@@ -229,6 +343,32 @@ pub fn loss_transport_pair(
     (
         StagedTransport::new(sc, sender_data),
         StagedTransport::new(rc, receiver_data),
+    )
+}
+
+/// Congestion wiring for the [`crate::api`] facade: every data stream is
+/// policed by a [`CongestionChannel`] of `capacity` fragments/s reading
+/// the sender's current per-stream rate from the returned [`RateHandle`]
+/// (initialised to `nominal_rate`). Control is lossless both ways.
+pub fn congestion_transport_pair(
+    streams: usize,
+    capacity: f64,
+    nominal_rate: f64,
+) -> (StagedTransport, StagedTransport, RateHandle) {
+    assert!(streams >= 2, "congestion fixture targets the pooled route");
+    let handle = RateHandle::new(nominal_rate);
+    let (sc, rc) = mem_pair();
+    let mut sender_data: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    let mut receiver_data: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    for _ in 0..streams {
+        let (a, b) = mem_pair();
+        sender_data.push(Box::new(CongestionChannel::new(a, capacity, handle.clone())));
+        receiver_data.push(Box::new(b));
+    }
+    (
+        StagedTransport::new(sc, sender_data),
+        StagedTransport::new(rc, receiver_data),
+        handle,
     )
 }
 
@@ -373,6 +513,64 @@ mod tests {
         assert!(rd.recv_timeout(Duration::from_millis(50)).is_none());
         sd.send(&Packet::Done.encode());
         assert!(rd.recv_timeout(Duration::from_millis(50)).is_some());
+    }
+
+    #[test]
+    fn gilbert_trace_is_bursty_at_the_requested_mean() {
+        // 20% mean loss in bursts of ~8 at 1000 frag/s.
+        let mut trace = LossTrace::gilbert_elliott(0.2, 8.0, 1000.0, 42);
+        let n = 200_000u64;
+        let drops: Vec<bool> = (0..n).map(|t| trace.drop_at(t)).collect();
+        let lost = drops.iter().filter(|&&d| d).count() as f64;
+        let frac = lost / n as f64;
+        assert!((frac - 0.2).abs() < 0.05, "mean loss {frac} !≈ 0.2");
+        // Run-length structure: mean run well above i.i.d.'s ~1.25.
+        let mut runs = 0u64;
+        let mut prev = false;
+        for &d in &drops {
+            if d && !prev {
+                runs += 1;
+            }
+            prev = d;
+        }
+        let mean_run = lost / runs as f64;
+        assert!(mean_run > 3.0, "mean run {mean_run} not bursty");
+        // Determinism: same seed, same drop sequence.
+        let mut again = LossTrace::gilbert_elliott(0.2, 8.0, 1000.0, 42);
+        let replay: Vec<bool> = (0..n).map(|t| again.drop_at(t)).collect();
+        assert_eq!(drops, replay);
+    }
+
+    #[test]
+    fn congestion_channel_polices_to_capacity() {
+        let handle = RateHandle::new(2000.0);
+        let (a, mut b) = mem_pair();
+        let mut ch = CongestionChannel::new(a, 1000.0, handle.clone());
+        for i in 0..1000 {
+            ch.send(&fragment_buf(i));
+        }
+        let (sent, dropped) = ch.stats();
+        assert_eq!(sent, 1000);
+        let frac = dropped as f64 / sent as f64;
+        assert!(
+            (frac - 0.5).abs() < 0.01,
+            "rate 2×capacity must shed ≈half, got {frac}"
+        );
+        // Back off to capacity: no further drops.
+        handle.set(1000.0);
+        for i in 0..1000 {
+            ch.send(&fragment_buf(i));
+        }
+        let (_, dropped_after) = ch.stats();
+        assert_eq!(dropped_after, dropped, "at-capacity sending is lossless");
+        // Control packets bypass the policer entirely.
+        handle.set(1e9);
+        ch.send(&Packet::Done.encode());
+        let mut survived = 0;
+        while b.try_recv().is_some() {
+            survived += 1;
+        }
+        assert_eq!(survived as u64, 2000 - dropped + 1);
     }
 
     #[test]

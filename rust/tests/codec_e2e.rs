@@ -380,6 +380,107 @@ fn pooled_deadline_sheds_to_plane_prefix_and_certifies() {
     assert!((lv[ri].1 - cut.eps).abs() < 1e-15);
 }
 
+#[test]
+fn residual_replan_prices_whole_groups_not_fractions() {
+    // The Deadline re-plan prices retransmission passes with
+    // `ResidualSchedule::transmission_time`: every pending group resends
+    // ceil'd data fragments plus `m_j` parity *per pending group*. The
+    // fractional Eq. 9 both undercharges (sub-fragment tails) and
+    // mischarges parity (G·m is not `n/(n−m)` byte inflation).
+    let (_, data) = volume_dataset(6);
+    let sched = data.schedule();
+    let net = NetParams { t: 0.0005, r: 2_000.0, lambda: 0.0, n: 32, s: 1024 };
+    let k0 = net.n - 4; // the frozen pass-0 data geometry
+    let groups: Vec<u64> = sched
+        .sizes
+        .iter()
+        .map(|&sz| sz.div_ceil(k0 as u64 * net.s as u64))
+        .collect();
+    let residual = janus::model::ResidualSchedule::new(data.schedule(), groups.clone());
+    let l = sched.num_levels();
+
+    // Parity-free: the exact price is the ceil'd fragment walk, never
+    // below the fractional byte volume.
+    let exact0 = residual.transmission_time(&net, &vec![0; l]);
+    let frac0 = janus::model::transmission_time(&net, &sched, &vec![0; l]);
+    assert!(
+        exact0 >= frac0 - 1e-12,
+        "ceil pricing cannot undercut the fractional volume: {exact0} < {frac0}"
+    );
+
+    // Adding parity costs exactly G_j fragments per unit of m_j — the
+    // per-group k+m accounting the re-plan budget debits.
+    let m = vec![3usize; l];
+    let exact_m = residual.transmission_time(&net, &m);
+    let parity_frags: f64 = groups.iter().map(|&g| g as f64 * 3.0).sum();
+    assert!(
+        (exact_m - exact0 - parity_frags / net.r).abs() < 1e-9,
+        "parity must be priced per pending group: {} vs {}",
+        exact_m - exact0,
+        parity_frags / net.r
+    );
+
+    // A spent budget (e.g. the unreported-tail debit when the lost list
+    // overflowed the wire message) admits no plan at all.
+    assert!(
+        janus::model::BitplaneDeadlinePlan::replan_residual_exact(&net, &residual, 0.0, 1.0)
+            .is_none(),
+        "zero/negative budget must not produce a plan"
+    );
+}
+
+#[test]
+fn pooled_deadline_replans_under_loss_and_respects_tau() {
+    // Satellite: the pass-barrier re-plan prices the residual with the
+    // exact per-group schedule, so a τ with honest headroom is met on
+    // the virtual clock even when 5% loss forces retransmission passes,
+    // and the final advertisement is exactly what the receiver decodes.
+    let (vol, data) = volume_dataset(7);
+    let streams = 4usize;
+    let net = NetParams { t: 0.0005, r: 2_000.0, lambda: 0.0, n: 32, s: 1024 };
+    let agg = NetParams { r: net.r * streams as f64, ..net };
+    let sched = data.schedule();
+    let l = sched.num_levels();
+    let t_all = janus::model::transmission_time(&agg, &sched, &vec![0; l]);
+    let tau = 2.2 * t_all; // real retransmission headroom past pass 0
+
+    let spec = TransferSpec::builder()
+        .contract(Contract::Deadline(tau))
+        .streams(streams)
+        .net(net)
+        .initial_lambda(LOSS * net.r * streams as f64)
+        .lambda_window(0.25)
+        .idle_timeout(Duration::from_secs(5))
+        .max_duration(Duration::from_secs(60))
+        .build()
+        .unwrap();
+    let (st, rt) = loss_transport_pair(streams, |w| LossTrace::seeded(LOSS, 700 + w as u64));
+    let rep = run_pair(&spec, st, rt, &data, None, None).unwrap();
+
+    let dl = rep.sent.deadline().expect("pooled deadline outcome");
+    let rounding = (l as f64 + 2.0) / agg.r;
+    assert!(
+        dl.virtual_elapsed <= tau + rounding,
+        "exact residual pricing keeps the virtual clock inside τ: {dl:?} vs τ={tau}"
+    );
+    assert!(dl.met, "honest headroom + exact pricing meets the deadline: {dl:?}");
+    // The advertisement is honored: every advertised rung arrives and
+    // the decoder certifies the advertised ε against ground truth.
+    assert_eq!(
+        rep.received.levels_recovered,
+        rep.received.levels.len(),
+        "all advertised rungs delivered"
+    );
+    assert!(
+        (rep.received.achieved_eps - dl.advertised_eps).abs() < 1e-15,
+        "delivered ε {} vs advertised {}",
+        rep.received.achieved_eps,
+        dl.advertised_eps
+    );
+    let achieved = assert_certified(&vol, &rep);
+    assert!((achieved - dl.advertised_eps).abs() < 1e-15);
+}
+
 // ----------------------------------------------------------------- Pooled
 
 #[test]

@@ -1,0 +1,162 @@
+//! Property tests for the loss-estimation stack feeding the adaptive
+//! layer: the Gilbert-Elliott channel model (`sim::hmm`), the estimator
+//! family (`coordinator::estimate`, re-exported through
+//! `sim::estimator`), and the pass-barrier two-state burst/residual
+//! estimator — all deterministic under seeds on the virtual clock.
+
+use janus::coordinator::estimate::{
+    EwmaEstimator, LambdaEstimator, PassObservation, TwoStateEstimator, WindowEstimator,
+};
+use janus::sim::estimator::tracking_rmse;
+use janus::sim::hmm::{HmmConfig, HmmLoss};
+use janus::sim::loss::LossProcess;
+
+const RATE: f64 = 10_000.0;
+
+/// Sample `n` fragment fates from a Gilbert-Elliott chain observed at
+/// `RATE` fragments/s (one-packet-service-time TTL, like the testkit).
+fn ge_drops(mean_loss: f64, burst_len: f64, seed: u64, n: u64) -> Vec<bool> {
+    let cfg = HmmConfig::gilbert_elliott(mean_loss, burst_len, RATE);
+    let mut loss = HmmLoss::with_ttl(cfg, seed, 1.0 / RATE);
+    (0..n).map(|i| loss.is_lost(i as f64 / RATE)).collect()
+}
+
+/// (loss fraction, mean run length) of a drop sequence.
+fn shape(drops: &[bool]) -> (f64, f64) {
+    let lost = drops.iter().filter(|&&d| d).count() as f64;
+    let mut runs = 0u64;
+    let mut prev = false;
+    for &d in drops {
+        if d && !prev {
+            runs += 1;
+        }
+        prev = d;
+    }
+    (lost / drops.len() as f64, if runs == 0 { 0.0 } else { lost / runs as f64 })
+}
+
+#[test]
+fn gilbert_elliott_hits_the_stationary_loss_rate() {
+    // π_bad = dwell_bad / (dwell_bad + dwell_good) = mean_loss by
+    // construction; the empirical fraction must match it, and the run
+    // structure must be bursty (mean run ≫ i.i.d.'s 1/(1−p)).
+    for (mean, burst) in [(0.05, 4.0), (0.2, 8.0), (0.4, 16.0)] {
+        let drops = ge_drops(mean, burst, 0x6E0d ^ (burst as u64), 400_000);
+        let (frac, mean_run) = shape(&drops);
+        assert!(
+            (frac - mean).abs() / mean < 0.25,
+            "mean={mean} burst={burst}: stationary loss {frac}"
+        );
+        let iid_run = 1.0 / (1.0 - mean);
+        assert!(
+            mean_run > 2.0 * iid_run,
+            "mean={mean} burst={burst}: run {mean_run} vs iid {iid_run}"
+        );
+    }
+}
+
+#[test]
+fn gilbert_elliott_is_bit_identical_under_a_seed() {
+    let a = ge_drops(0.2, 8.0, 42, 100_000);
+    let b = ge_drops(0.2, 8.0, 42, 100_000);
+    assert_eq!(a, b, "same seed must replay the same fates");
+    let c = ge_drops(0.2, 8.0, 43, 100_000);
+    assert_ne!(a, c, "different seeds must differ somewhere");
+}
+
+#[test]
+fn window_and_ewma_track_the_paper_hmm() {
+    // Both engine-side estimators bound their RMSE against the 3-state
+    // paper chain's true λ(t) (states at 19/383/957 losses/s), and the
+    // score itself is deterministic under the seed.
+    let r = 19_144.0;
+    let run = |mk: &mut dyn LambdaEstimator| {
+        let mut loss = HmmLoss::paper_default_with_ttl(11, 1.0 / r);
+        tracking_rmse(mk, &mut loss, r, 120.0)
+    };
+    let w = run(&mut WindowEstimator::new(3.0));
+    let e = run(&mut EwmaEstimator::new(1.0, 0.25));
+    assert!(w.is_finite() && w > 0.0 && w < 500.0, "window rmse {w}");
+    assert!(e.is_finite() && e > 0.0 && e < 500.0, "ewma rmse {e}");
+    let w2 = run(&mut WindowEstimator::new(3.0));
+    assert_eq!(w, w2, "tracking_rmse must be deterministic under a seed");
+}
+
+/// Chunk a drop sequence into pass-barrier observations exactly the way
+/// the pooled receiver accounts them (runs = maximal gaps, burst_lost =
+/// losses in runs of length ≥ 2).
+fn observe_chunks(drops: &[bool], chunk: usize) -> TwoStateEstimator {
+    let mut est = TwoStateEstimator::new(0.5);
+    for ch in drops.chunks(chunk) {
+        let offered = ch.len() as u64;
+        let lost = ch.iter().filter(|&&d| d).count() as u64;
+        let mut runs = 0u32;
+        let mut burst_lost = 0u64;
+        let mut run_len = 0u64;
+        for &d in ch {
+            if d {
+                run_len += 1;
+            } else if run_len > 0 {
+                runs += 1;
+                if run_len >= 2 {
+                    burst_lost += run_len;
+                }
+                run_len = 0;
+            }
+        }
+        if run_len > 0 {
+            runs += 1;
+            if run_len >= 2 {
+                burst_lost += run_len;
+            }
+        }
+        est.observe_pass(&PassObservation {
+            elapsed: offered as f64 / RATE,
+            offered,
+            received: offered - lost,
+            runs,
+            burst_lost,
+            rate: RATE,
+        });
+    }
+    est
+}
+
+#[test]
+fn two_state_estimator_recovers_burst_length_from_ge_ground_truth() {
+    let drops = ge_drops(0.2, 8.0, 99, 400_000);
+    let est = observe_chunks(&drops, 5_000);
+    let b = est.burst_len();
+    assert!(
+        (4.0..=16.0).contains(&b),
+        "b̂={b} should recover the configured burst ≈ 8"
+    );
+    let lam = est.lambda_total().expect("warmed up");
+    let expect = 0.2 * RATE;
+    assert!(
+        (lam - expect).abs() / expect < 0.35,
+        "λ̂={lam} vs stationary {expect}"
+    );
+    // Burst-dominated channel: most of λ̂ sits in the burst component.
+    assert!(
+        est.lambda_burst() > est.lambda_residual(),
+        "burst {} vs residual {}",
+        est.lambda_burst(),
+        est.lambda_residual()
+    );
+}
+
+#[test]
+fn two_state_estimator_sees_iid_loss_as_unit_bursts() {
+    // Same mean λ, i.i.d. shape: b̂ stays near the i.i.d. run length
+    // 1/(1−p) = 1.25, far below the burst classifier's threshold — the
+    // discrimination the engines rely on.
+    let mut rng = janus::util::Pcg64::seeded(7);
+    let drops: Vec<bool> = (0..400_000).map(|_| rng.bool_with(0.2)).collect();
+    let est = observe_chunks(&drops, 5_000);
+    let b = est.burst_len();
+    assert!(b < 2.0, "i.i.d. 20% loss must not look bursty: b̂={b}");
+    let lam = est.lambda_total().expect("warmed up");
+    let expect = 0.2 * RATE;
+    assert!((lam - expect).abs() / expect < 0.15, "λ̂={lam}");
+}

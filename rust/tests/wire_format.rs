@@ -33,12 +33,12 @@ fn random_packet(rng: &mut Pcg64) -> Packet {
         2 => Packet::EndOfPass { pass: rng.next_u64() as u32 },
         3 => {
             let count = rng.range(0, 64);
-            Packet::LostList {
-                pass: rng.next_u64() as u32,
-                ftgs: (0..count)
-                    .map(|_| (rng.next_below(8) as u8, rng.next_u64() as u32))
-                    .collect(),
-            }
+            let ftgs: Vec<(u8, u32)> = (0..count)
+                .map(|_| (rng.next_below(8) as u8, rng.next_u64() as u32))
+                .collect();
+            // `total` may exceed the carried list (truncation marker).
+            let total = ftgs.len() as u32 + rng.next_below(1000) as u32;
+            Packet::LostList { pass: rng.next_u64() as u32, total, ftgs }
         }
         4 => Packet::Done,
         5 => {
@@ -68,6 +68,8 @@ fn random_packet(rng: &mut Pcg64) -> Packet {
             pass: rng.next_u64() as u32,
             expected: rng.next_u64(),
             received: rng.next_u64(),
+            runs: rng.next_u64() as u32,
+            burst_lost: rng.next_u64(),
         },
         _ => Packet::LevelShed {
             level: rng.next_below(256) as u8,
