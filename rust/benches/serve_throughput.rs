@@ -1,0 +1,173 @@
+//! `janus serve` scaling matrix: one Virtual-mode daemon loop driving
+//! 1, 64, and 1024 concurrent mem-transport transfers over a single
+//! shared socket pair (transfer-id demux). Measures wall time,
+//! completed transfers/s, and routed fragment datagrams/s per fan-out,
+//! byte-exactness gated throughout. Emits
+//! `target/bench-results/BENCH_serve.json` (uploaded by CI).
+
+use janus::api::{AdaptConfig, Contract};
+use janus::coordinator::{ReceiverConfig, SenderConfig};
+use janus::metrics::bench::{bench_scale, BenchTable};
+use janus::model::NetParams;
+use janus::serve::{AdmissionPolicy, Daemon, ServeConfig, TimeMode, TransferOutcome};
+use janus::transport::channel::mem_pair;
+use janus::util::Pcg64;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const FANOUTS: [u32; 3] = [1, 64, 1024];
+const RATE: f64 = 200_000.0;
+
+fn payload(id: u32, n: usize) -> Vec<u8> {
+    let mut rng = Pcg64::seeded(0x5E12 ^ u64::from(id));
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn sender_cfg() -> SenderConfig {
+    SenderConfig {
+        net: NetParams { t: 0.0005, r: RATE, lambda: 0.0, n: 32, s: 1024 },
+        contract: Contract::Fidelity(1e-7),
+        initial_lambda: 0.0,
+        max_duration: Duration::from_secs(600),
+        plane_cuts: vec![],
+        adapt: AdaptConfig::fixed(),
+    }
+}
+
+fn recv_cfg() -> ReceiverConfig {
+    ReceiverConfig {
+        t_w: 3.0,
+        idle_timeout: Duration::from_secs(60),
+        max_duration: Duration::from_secs(600),
+    }
+}
+
+struct Outcome {
+    concurrency: u32,
+    wall_s: f64,
+    fragments: u64,
+    transfers_per_s: f64,
+    datagrams_per_s: f64,
+}
+
+fn run_fanout(n: u32, size: usize) -> Outcome {
+    let mut d = Daemon::new(ServeConfig { mode: TimeMode::Virtual, ..ServeConfig::default() });
+    let (a, b) = mem_pair();
+    let tx = d.add_socket(Box::new(a));
+    let rx = d.add_socket(Box::new(b));
+    let tenant = d.add_tenant("bench", u64::MAX, AdmissionPolicy::Queue);
+    for id in 0..n {
+        d.register_receiver(tenant, rx, id, recv_cfg(), size as u64).unwrap();
+        d.register_sender(tenant, tx, id, sender_cfg(), vec![payload(id, size)], vec![1e-7])
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    d.run_to_completion().expect("serve bench run");
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let finished = d.take_finished();
+    assert_eq!(finished.len(), 2 * n as usize, "fan-out {n}: every transfer must finish");
+    let mut fragments = 0u64;
+    let mut received = 0u32;
+    for f in &finished {
+        assert!(f.outcome.is_ok(), "fan-out {n} transfer {}: {:?}", f.id, f.outcome);
+        match &f.outcome {
+            TransferOutcome::Sent(rep) => fragments += rep.fragments_sent,
+            TransferOutcome::Received(rep) => {
+                assert_eq!(
+                    rep.levels[0].as_deref(),
+                    Some(&payload(f.id, size)[..]),
+                    "fan-out {n} transfer {} bytes differ",
+                    f.id
+                );
+                received += 1;
+            }
+            TransferOutcome::Failed(_) => unreachable!(),
+        }
+    }
+    assert_eq!(received, n, "fan-out {n}: every receiver must complete");
+    Outcome {
+        concurrency: n,
+        wall_s,
+        fragments,
+        transfers_per_s: f64::from(n) / wall_s,
+        datagrams_per_s: fragments as f64 / wall_s,
+    }
+}
+
+fn main() {
+    // Default ≈ 25 KiB per transfer (~26 MB at the 1024 fan-out);
+    // JANUS_SCALE=1 runs 256 KiB per transfer.
+    let scale = bench_scale(10);
+    let size = (256 * 1024 / scale as usize).max(1024);
+
+    let outcomes: Vec<Outcome> = FANOUTS.iter().map(|&n| run_fanout(n, size)).collect();
+
+    let mut table = BenchTable::new(
+        "serve",
+        vec!["concurrency", "wall_s", "transfers_per_s", "fragments", "kdatagrams_per_s"],
+    );
+    table.header();
+    for o in &outcomes {
+        table.row(
+            format!("{}", o.concurrency),
+            vec![
+                format!("{:.3}", o.wall_s),
+                format!("{:.1}", o.transfers_per_s),
+                format!("{}", o.fragments),
+                format!("{:.1}", o.datagrams_per_s / 1e3),
+            ],
+        );
+    }
+    table.save().unwrap();
+    write_json(size, &outcomes).expect("write BENCH_serve.json");
+
+    // The daemon must not collapse under fan-out: routing 1024 transfers
+    // through one loop should still move fragments at a useful clip
+    // relative to the single-transfer baseline.
+    let single = &outcomes[0];
+    let widest = &outcomes[outcomes.len() - 1];
+    assert!(
+        widest.datagrams_per_s > 0.05 * single.datagrams_per_s,
+        "fan-out collapse: {:.0} dgram/s at {} transfers vs {:.0} at 1",
+        widest.datagrams_per_s,
+        widest.concurrency,
+        single.datagrams_per_s
+    );
+    println!(
+        "\nserve: 1×{:.0} dgram/s, {}×{:.0} dgram/s ({:.1} transfers/s at the widest fan-out)",
+        single.datagrams_per_s, widest.concurrency, widest.datagrams_per_s,
+        widest.transfers_per_s
+    );
+    println!("serve_throughput complete.");
+}
+
+/// Save the fan-out matrix as JSON (CI uploads this artifact as
+/// `BENCH_serve`).
+fn write_json(size: usize, outcomes: &[Outcome]) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_serve.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"serve\",")?;
+    writeln!(f, "  \"transfer_bytes\": {size},")?;
+    writeln!(f, "  \"nominal_rate\": {RATE},")?;
+    writeln!(f, "  \"fanouts\": [")?;
+    for (i, o) in outcomes.iter().enumerate() {
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"concurrency\": {},", o.concurrency)?;
+        writeln!(f, "      \"wall_s\": {:.4},", o.wall_s)?;
+        writeln!(f, "      \"transfers_per_s\": {:.2},", o.transfers_per_s)?;
+        writeln!(f, "      \"fragments\": {},", o.fragments)?;
+        writeln!(f, "      \"datagrams_per_s\": {:.1}", o.datagrams_per_s)?;
+        writeln!(f, "    }}{}", if i + 1 < outcomes.len() { "," } else { "" })?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    println!("[saved {}]", path.display());
+    Ok(path)
+}

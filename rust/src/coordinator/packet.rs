@@ -152,6 +152,7 @@ const KIND_MANIFEST_ACK: u8 = 7;
 const KIND_STREAM_END: u8 = 8;
 const KIND_PASS_STATS: u8 = 9;
 const KIND_LEVEL_SHED: u8 = 10;
+const KIND_TRANSFER_TAG: u8 = 11;
 
 /// Bytes per manifest level entry on the wire: size + ε + m0 + cut flag.
 const MANIFEST_LEVEL_BYTES: usize = 8 + 8 + 1 + 1;
@@ -167,9 +168,48 @@ fn crc(buf: &[u8]) -> u32 {
 
 /// Cheap peek: is this (unvalidated) datagram a data fragment? Loss
 /// injectors use it to drop only the data path, like the paper's WAN
-/// substitute — control packets model a reliable side channel.
+/// substitute — control packets model a reliable side channel. Sees
+/// through a transfer-tag envelope so the testkit's loss and congestion
+/// channels gate `janus serve` traffic the same way they gate legacy
+/// single-transfer traffic.
 pub fn is_fragment(buf: &[u8]) -> bool {
-    buf.first() == Some(&KIND_FRAGMENT)
+    match buf.first() {
+        Some(&KIND_FRAGMENT) => true,
+        Some(&KIND_TRANSFER_TAG) => buf.get(TAG_BYTES) == Some(&KIND_FRAGMENT),
+        _ => false,
+    }
+}
+
+/// Bytes the transfer-tag envelope prepends to an inner datagram: kind
+/// byte + little-endian `u32` transfer id. Tagged senders must keep
+/// `s ≤ MAX_FRAGMENT_PAYLOAD − TAG_BYTES` so a max-size fragment still
+/// fits one [`MAX_DATAGRAM`] (the serve daemon validates this at
+/// registration).
+pub const TAG_BYTES: usize = 5;
+
+/// Wrap a complete inner datagram (its CRC trailer included) in a
+/// transfer-tag envelope: `[kind=11][u32 id LE][inner…]`. The envelope
+/// carries no checksum of its own — the inner CRC already covers the
+/// payload, and a corrupted id merely misroutes to a transfer whose
+/// machine rejects the inner packet.
+pub fn encode_tagged(id: u32, inner: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(TAG_BYTES + inner.len());
+    out.push(KIND_TRANSFER_TAG);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(inner);
+}
+
+/// Peel a transfer-tag envelope, returning `(id, inner datagram)`.
+/// `None` when the buffer is not tagged (legacy untagged traffic) or too
+/// short to carry an id — the caller decides whether untagged datagrams
+/// are dropped (daemon sockets) or passed through (legacy engines).
+pub fn peel_tag(buf: &[u8]) -> Option<(u32, &[u8])> {
+    if buf.first() != Some(&KIND_TRANSFER_TAG) || buf.len() < TAG_BYTES {
+        return None;
+    }
+    let id = u32::from_le_bytes(buf[1..TAG_BYTES].try_into().unwrap());
+    Some((id, &buf[TAG_BYTES..]))
 }
 
 /// Validate the length and CRC32 trailer, returning the body (kind byte
@@ -672,5 +712,57 @@ mod tests {
         assert!(is_fragment(&fast));
         assert!(!is_fragment(&Packet::Done.encode()));
         assert!(!is_fragment(&[]));
+    }
+
+    #[test]
+    fn transfer_tag_roundtrip() {
+        let inner = Packet::EndOfPass { pass: 3 }.encode();
+        let mut tagged = Vec::new();
+        encode_tagged(0xDEAD_BEEF, &inner, &mut tagged);
+        assert_eq!(tagged.len(), inner.len() + TAG_BYTES);
+        let (id, peeled) = peel_tag(&tagged).expect("tagged datagram must peel");
+        assert_eq!(id, 0xDEAD_BEEF);
+        assert_eq!(peeled, &inner[..]);
+        assert_eq!(Packet::decode(peeled).unwrap(), Packet::EndOfPass { pass: 3 });
+        // encode_tagged clears its output buffer like the other encoders.
+        encode_tagged(7, &inner, &mut tagged);
+        assert_eq!(peel_tag(&tagged).unwrap().0, 7);
+    }
+
+    #[test]
+    fn peel_tag_rejects_untagged_and_truncated() {
+        assert_eq!(peel_tag(&Packet::Done.encode()), None);
+        assert_eq!(peel_tag(&[]), None);
+        assert_eq!(peel_tag(&[KIND_TRANSFER_TAG, 1, 2]), None);
+        // Exactly TAG_BYTES peels to an empty inner datagram (which any
+        // decoder then rejects as truncated).
+        let bare = [KIND_TRANSFER_TAG, 9, 0, 0, 0];
+        assert_eq!(peel_tag(&bare), Some((9, &[][..])));
+    }
+
+    #[test]
+    fn is_fragment_sees_through_transfer_tag() {
+        let h =
+            FragmentHeader { level: 0, stream: 0, ftg: 0, index: 0, k: 1, m: 0, seq: 0, pass: 0 };
+        let mut frag = Vec::new();
+        encode_fragment_into(&h, &[1, 2, 3], &mut frag);
+        let mut tagged = Vec::new();
+        encode_tagged(42, &frag, &mut tagged);
+        assert!(is_fragment(&tagged));
+        encode_tagged(42, &Packet::Done.encode(), &mut tagged);
+        assert!(!is_fragment(&tagged));
+        assert!(!is_fragment(&[KIND_TRANSFER_TAG]));
+    }
+
+    #[test]
+    fn max_tagged_fragment_fits_one_datagram() {
+        let h =
+            FragmentHeader { level: 0, stream: 0, ftg: 0, index: 0, k: 1, m: 0, seq: 0, pass: 0 };
+        let payload = vec![0u8; MAX_FRAGMENT_PAYLOAD - TAG_BYTES];
+        let mut frag = Vec::new();
+        encode_fragment_into(&h, &payload, &mut frag);
+        let mut tagged = Vec::new();
+        encode_tagged(u32::MAX, &frag, &mut tagged);
+        assert!(tagged.len() <= MAX_DATAGRAM, "tagged max fragment must fit MAX_DATAGRAM");
     }
 }

@@ -879,7 +879,20 @@ impl TransferPool {
                     // under the fresh λ̂ against the residual budget and
                     // shed what no longer fits (exact-geometry Eq. 12
                     // re-solve, burst-aware under a burst verdict).
-                    shed = dl.replan(cfg, &solver_net, &mut jobs, &mut alive, &mut next, burst, unreported);
+                    // Under a congestion verdict the pacing rate is not
+                    // the delivery rate: a policer of capacity c drops
+                    // everything above c no matter how fast we send, so
+                    // the τ budget must price residual air time at
+                    // min(rate, ĉ) or the re-plan keeps levels the path
+                    // cannot actually carry and the deadline is missed.
+                    let cap_net = match controller.capacity_estimate() {
+                        Some(cap) => NetParams {
+                            r: solver_net.r.min(cap * cfg.streams as f64),
+                            ..solver_net
+                        },
+                        None => solver_net,
+                    };
+                    shed = dl.replan(cfg, &cap_net, &mut jobs, &mut alive, &mut next, burst, unreported);
                 } else {
                     let lost_bytes: u64 =
                         next.iter().map(|&i| jobs[i].k as u64 * s as u64).sum();

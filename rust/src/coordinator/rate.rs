@@ -202,17 +202,40 @@ pub struct RateController {
     epoch: f64,
     probe: Option<Probe>,
     holdoff: u32,
+    /// Path capacity implied by the last congestion verdict
+    /// (fragments/s per stream); `None` when no congestion is in
+    /// evidence. Consumed by the Deadline re-planner, which must not
+    /// price residual work at a rate the path has been shown to drop.
+    capacity: Option<f64>,
 }
 
 impl RateController {
     pub fn new(r_max: f64, cfg: AdaptConfig) -> Self {
         assert!(r_max > 0.0 && r_max.is_finite());
-        RateController { cfg, r_max, rate: r_max, w_max: r_max, epoch: 0.0, probe: None, holdoff: 0 }
+        RateController {
+            cfg,
+            r_max,
+            rate: r_max,
+            w_max: r_max,
+            epoch: 0.0,
+            probe: None,
+            holdoff: 0,
+            capacity: None,
+        }
     }
 
     /// Current per-stream pacing rate (fragments/s).
     pub fn rate(&self) -> f64 {
         self.rate
+    }
+
+    /// Capacity implied by the last congestion verdict (fragments/s per
+    /// stream), or `None` while the path shows no congestion. Cleared
+    /// when a probe settles on channel loss, on a burst verdict, and
+    /// once clean passes carry the rate past the estimate (the policer
+    /// is gone or was never that tight).
+    pub fn capacity_estimate(&self) -> Option<f64> {
+        self.capacity
     }
 
     /// Configured ceiling rate.
@@ -264,6 +287,7 @@ impl RateController {
                 if loss_frac > self.cfg.loss_threshold {
                     self.decrease(now);
                 }
+                self.capacity = Some(capacity_est);
                 let residual =
                     (1.0 - capacity_est.min(self.rate) / self.rate).max(0.0);
                 return PassVerdict::Congestion { residual_loss: residual };
@@ -271,6 +295,7 @@ impl RateController {
             // Channel loss: the back-off bought nothing — restore.
             self.rate = self.r_max;
             self.holdoff = self.cfg.probe_holdoff;
+            self.capacity = None;
             return PassVerdict::ChannelLoss;
         }
         if loss_frac <= self.cfg.loss_threshold {
@@ -278,12 +303,17 @@ impl RateController {
             if self.rate < self.r_max {
                 self.rate = self.cubic_at(now).clamp(self.rate, self.r_max);
             }
+            if self.capacity.map_or(false, |cap| self.rate > cap) {
+                // Running clean above the estimate falsifies it.
+                self.capacity = None;
+            }
             self.holdoff = self.holdoff.saturating_sub(1);
             return PassVerdict::Clean;
         }
         if self.cfg.burst_aware && burst_len >= self.cfg.burst_threshold {
             // Burst-shaped channel loss: never back off, code harder.
             self.rate = self.r_max;
+            self.capacity = None;
             return PassVerdict::Burst { burst_len };
         }
         if self.holdoff > 0 {
@@ -361,6 +391,53 @@ mod tests {
         }
         // The controller hovers near capacity, not back at r_max.
         assert!(c.rate() < 800.0, "rate {} should hug capacity", c.rate());
+    }
+
+    #[test]
+    fn congestion_verdict_exposes_capacity_estimate() {
+        let cap = 500.0;
+        let mut c = RateController::new(1000.0, AdaptConfig::default());
+        assert_eq!(c.capacity_estimate(), None, "no congestion seen yet");
+        let loss_at = |r: f64| (1.0 - cap / r).max(0.0);
+        c.on_pass(0.1, loss_at(1000.0), 1.0); // probe
+        assert_eq!(c.capacity_estimate(), None, "probe pending, no verdict");
+        let v = c.on_pass(0.2, loss_at(700.0), 1.0);
+        assert!(matches!(v, PassVerdict::Congestion { .. }), "{v:?}");
+        // capacity_est = r_old · (1 − pre_loss) = 1000 · 0.5 = 500.
+        let est = c.capacity_estimate().expect("congestion fixes an estimate");
+        assert!((est - cap).abs() < 1e-9, "estimate {est}");
+        // Clean passes below the estimate keep it; growth past it
+        // falsifies it.
+        let mut t = 0.3;
+        while c.rate() <= est {
+            assert_eq!(c.capacity_estimate(), Some(est));
+            c.on_pass(t, 0.0, 1.0);
+            t += 5.0;
+        }
+        assert_eq!(c.capacity_estimate(), None, "clean above estimate clears it");
+    }
+
+    #[test]
+    fn channel_verdict_clears_capacity_estimate() {
+        let mut c = RateController::new(1000.0, AdaptConfig::default());
+        let loss_at = |r: f64| (1.0 - 500.0 / r).max(0.0);
+        c.on_pass(0.1, loss_at(1000.0), 1.0);
+        c.on_pass(0.2, loss_at(700.0), 1.0);
+        assert!(c.capacity_estimate().is_some());
+        // A later probe that resolves to channel loss wipes the stale
+        // congestion picture. First grow back over the threshold so a
+        // fresh probe can trigger, then feed rate-independent loss.
+        let mut t = 10.0;
+        loop {
+            match c.on_pass(t, 0.2, 1.2) {
+                PassVerdict::Probing => {}
+                PassVerdict::ChannelLoss => break,
+                v => panic!("unexpected verdict {v:?}"),
+            }
+            t += 5.0;
+        }
+        assert_eq!(c.capacity_estimate(), None);
+        assert_eq!(c.rate(), 1000.0);
     }
 
     #[test]

@@ -200,6 +200,35 @@ pub(crate) fn transfer_receiver(
     }
 
     // === Reconstruct levels ===
+    let (levels, recovered) = reconstruct_levels(&manifest, &groups, s, &mut codes, events);
+    report.levels = levels;
+    report.groups_recovered = recovered;
+
+    let prefix = usable_prefix(&manifest, &report.levels);
+    report.levels_recovered = prefix;
+    report.achieved_eps = if prefix == 0 {
+        1.0
+    } else {
+        manifest.levels[prefix - 1].eps
+    };
+    report.duration = start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Reconstruct every level's byte buffer from the FTG arenas (cached RS
+/// decode matrices across groups). Returns the per-level buffers
+/// (`None` where an FTG was unrecoverable) and the count of groups that
+/// needed Reed–Solomon recovery. Shared by the blocking receiver and
+/// the sans-IO [`crate::engine::ReceiverMachine`].
+pub(crate) fn reconstruct_levels(
+    manifest: &Manifest,
+    groups: &HashMap<(u8, u32), FtgArena>,
+    s: usize,
+    codes: &mut HashMap<(u8, u8), RsCode>,
+    events: EventSink<'_>,
+) -> (Vec<Option<Vec<u8>>>, u64) {
+    let mut levels: Vec<Option<Vec<u8>>> = vec![None; manifest.levels.len()];
+    let mut groups_recovered = 0u64;
     for (li, entry) in manifest.levels.iter().enumerate() {
         let size = entry.size;
         let mut out = Vec::with_capacity(size as usize);
@@ -225,7 +254,7 @@ pub(crate) fn transfer_receiver(
                     out.resize(start_len + k as usize * s, 0);
                     match code.reconstruct_into(&shards, &mut out[start_len..]) {
                         Ok(()) => {
-                            report.groups_recovered += 1;
+                            groups_recovered += 1;
                             emit(
                                 events,
                                 TransferEvent::GroupRecovered { level: li as u8, ftg },
@@ -247,17 +276,20 @@ pub(crate) fn transfer_receiver(
         }
         if ok {
             out.truncate(size as usize);
-            report.levels[li] = Some(out);
+            levels[li] = Some(out);
         }
     }
+    (levels, groups_recovered)
+}
 
-    // Usable prefix + achieved ε. The prefix ends at the first
-    // plane-cut level: its missing bitplanes gate every later rung
-    // (for the single-stream engine the cut is always the last
-    // advertised level, so this is belt-and-braces consistency with
-    // the pooled walk).
+/// Usable prefix length. The prefix ends at the first missing level or
+/// the first plane-cut level: a cut level's missing bitplanes gate
+/// every later rung (for the single-stream engine the cut is always the
+/// last advertised level, so this is belt-and-braces consistency with
+/// the pooled walk).
+pub(crate) fn usable_prefix(manifest: &Manifest, levels: &[Option<Vec<u8>>]) -> usize {
     let mut prefix = 0;
-    for (li, l) in report.levels.iter().enumerate() {
+    for (li, l) in levels.iter().enumerate() {
         if l.is_none() {
             break;
         }
@@ -266,18 +298,13 @@ pub(crate) fn transfer_receiver(
             break;
         }
     }
-    report.levels_recovered = prefix;
-    report.achieved_eps = if prefix == 0 {
-        1.0
-    } else {
-        manifest.levels[prefix - 1].eps
-    };
-    report.duration = start.elapsed().as_secs_f64();
-    Ok(report)
+    prefix
 }
 
 /// FTGs (per manifest byte accounting) that cannot currently be decoded.
-fn collect_lost(
+/// Shared by the blocking receiver and the sans-IO
+/// [`crate::engine::ReceiverMachine`].
+pub(crate) fn collect_lost(
     manifest: &Manifest,
     groups: &HashMap<(u8, u32), FtgArena>,
     s: usize,

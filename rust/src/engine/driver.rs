@@ -1,0 +1,135 @@
+//! Blocking drivers: the legacy one-transfer-one-channel call shape,
+//! rebuilt as a thin loop over a sans-IO machine.
+//!
+//! A driver owns the I/O the machine refuses to do: it drains the
+//! channel into `handle_datagram`, pumps `poll_transmit` onto the wire,
+//! sleeps (inside `recv_into`) until the machine's `poll_timeout`, and
+//! fires `handle_timeout` when it passes. This is the migration path
+//! for callers that want machine-backed transfers without running a
+//! [`crate::serve`] daemon; the original blocking engines remain the
+//! trace-stable reference (`tests/engine_sm.rs` asserts equivalence).
+
+use crate::coordinator::packet::MAX_DATAGRAM;
+use crate::coordinator::receiver::{ReceiverConfig, ReceiverReport};
+use crate::coordinator::sender::{SenderConfig, SenderReport};
+use crate::engine::{ReceiverMachine, SenderMachine};
+use crate::transport::channel::Datagram;
+use crate::util::err::Result;
+use std::time::{Duration, Instant};
+
+/// Poll cadence cap: even with a far-off machine deadline the driver
+/// wakes this often to notice newly arrived datagrams' side effects.
+const MAX_WAIT: Duration = Duration::from_millis(50);
+
+/// The machine surface the drivers pump. Private: the public types are
+/// the machines themselves.
+trait Machine {
+    fn handle_datagram(&mut self, buf: &[u8], now: Instant);
+    fn poll_transmit(&mut self, out: &mut Vec<u8>, now: Instant) -> bool;
+    fn poll_timeout(&self) -> Option<Instant>;
+    fn handle_timeout(&mut self, now: Instant);
+    fn is_finished(&self) -> bool;
+}
+
+impl Machine for SenderMachine {
+    fn handle_datagram(&mut self, buf: &[u8], now: Instant) {
+        SenderMachine::handle_datagram(self, buf, now)
+    }
+    fn poll_transmit(&mut self, out: &mut Vec<u8>, now: Instant) -> bool {
+        SenderMachine::poll_transmit(self, out, now)
+    }
+    fn poll_timeout(&self) -> Option<Instant> {
+        SenderMachine::poll_timeout(self)
+    }
+    fn handle_timeout(&mut self, now: Instant) {
+        SenderMachine::handle_timeout(self, now)
+    }
+    fn is_finished(&self) -> bool {
+        SenderMachine::is_finished(self)
+    }
+}
+
+impl Machine for ReceiverMachine {
+    fn handle_datagram(&mut self, buf: &[u8], now: Instant) {
+        ReceiverMachine::handle_datagram(self, buf, now)
+    }
+    fn poll_transmit(&mut self, out: &mut Vec<u8>, now: Instant) -> bool {
+        ReceiverMachine::poll_transmit(self, out, now)
+    }
+    fn poll_timeout(&self) -> Option<Instant> {
+        ReceiverMachine::poll_timeout(self)
+    }
+    fn handle_timeout(&mut self, now: Instant) {
+        ReceiverMachine::handle_timeout(self, now)
+    }
+    fn is_finished(&self) -> bool {
+        ReceiverMachine::is_finished(self)
+    }
+}
+
+/// Pump one machine over one channel until it finishes (real clock).
+fn drive<M: Machine>(m: &mut M, chan: &mut dyn Datagram) {
+    let mut rbuf = vec![0u8; MAX_DATAGRAM];
+    let mut out = Vec::with_capacity(MAX_DATAGRAM);
+    while !m.is_finished() {
+        let mut progressed = false;
+        while let Some(n) = chan.try_recv_into(&mut rbuf) {
+            m.handle_datagram(&rbuf[..n], Instant::now());
+            progressed = true;
+        }
+        while m.poll_transmit(&mut out, Instant::now()) {
+            chan.send(&out);
+            progressed = true;
+        }
+        if m.is_finished() {
+            break;
+        }
+        if progressed {
+            continue;
+        }
+        // Idle: block on the channel until the machine's next deadline
+        // (capped so freshly queued peer datagrams are never starved).
+        let now = Instant::now();
+        let wait = match m.poll_timeout() {
+            Some(at) => at.saturating_duration_since(now).min(MAX_WAIT),
+            None => MAX_WAIT,
+        };
+        if wait.is_zero() {
+            m.handle_timeout(now);
+            continue;
+        }
+        if let Some(n) = chan.recv_into(&mut rbuf, wait) {
+            m.handle_datagram(&rbuf[..n], Instant::now());
+        } else if let Some(at) = m.poll_timeout() {
+            let now = Instant::now();
+            if now >= at {
+                m.handle_timeout(now);
+            }
+        }
+    }
+    // Flush queued control datagrams (e.g. the receiver's final Done).
+    while m.poll_transmit(&mut out, Instant::now()) {
+        chan.send(&out);
+    }
+}
+
+/// Run a transfer as the sender: machine-backed equivalent of
+/// [`crate::coordinator::sender::transfer_sender`]'s blocking loop.
+pub fn drive_sender(
+    chan: &mut dyn Datagram,
+    cfg: &SenderConfig,
+    levels: &[Vec<u8>],
+    eps: &[f64],
+) -> Result<SenderReport> {
+    let mut m = SenderMachine::new(cfg, levels, eps, Instant::now())?;
+    drive(&mut m, chan);
+    m.into_report()
+}
+
+/// Run a transfer as the receiver: machine-backed equivalent of
+/// [`crate::coordinator::receiver::transfer_receiver`]'s blocking loop.
+pub fn drive_receiver(chan: &mut dyn Datagram, cfg: &ReceiverConfig) -> Result<ReceiverReport> {
+    let mut m = ReceiverMachine::new(cfg, Instant::now());
+    drive(&mut m, chan);
+    m.into_report()
+}

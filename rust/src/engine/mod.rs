@@ -1,0 +1,45 @@
+//! Sans-IO transfer engine — the single-stream protocol re-stated as
+//! poll-driven state machines (DESIGN.md §10).
+//!
+//! The blocking engines in [`crate::coordinator`] own their sockets and
+//! their clock: concurrency means threads, and testing means real time.
+//! This module factors the *protocol* out of the *I/O*: a
+//! [`SenderMachine`] / [`ReceiverMachine`] never touches a channel or
+//! calls `Instant::now()` — every state transition is driven through
+//! four calls, clocked by explicit `Instant`s the caller supplies:
+//!
+//! * `handle_datagram(bytes, now)` — feed one received datagram in;
+//! * `poll_transmit(out, now)` — ask for the next datagram to send
+//!   (pacing, handshake retries and barrier retries are all expressed
+//!   as "nothing to send yet" until their timer is due);
+//! * `poll_timeout()` — the next `Instant` at which the machine wants
+//!   `handle_timeout` or another `poll_transmit`;
+//! * `handle_timeout(now)` — let the machine act on elapsed time
+//!   (failure deadlines: manifest/idle/max-duration expiry).
+//!
+//! One machine = one transfer = no threads, which is what lets
+//! [`crate::serve`] multiplex thousands of transfers on a single event
+//! loop, and what lets `tests/engine_sm.rs` script loss, reordering,
+//! duplication and RTT steps against a virtual clock with no sleeps.
+//!
+//! The protocol logic mirrors the blocking engines statement-for-
+//! statement (manifest handshake cadence, frozen FTG geometry, pass
+//! barriers on the RFC 6298 RTO, pass-barrier rate verdicts); the
+//! receiver side shares `collect_lost` / `reconstruct_levels` /
+//! `usable_prefix` with [`crate::coordinator::receiver`] outright.
+//! Two deliberate divergences, both invisible to byte-exact delivery:
+//! machines emit no [`crate::api::TransferEvent`]s, and the sender
+//! applies λ̂ updates at the next group-encode boundary instead of the
+//! blocking engine's ≤ 64-fragment feedback-poll lag.
+//!
+//! [`driver`] rebuilds the blocking call shape as a thin loop over a
+//! machine — the migration path for code that wants one transfer on one
+//! channel without running a daemon.
+
+pub mod driver;
+pub mod receiver;
+pub mod sender;
+
+pub use driver::{drive_receiver, drive_sender};
+pub use receiver::ReceiverMachine;
+pub use sender::SenderMachine;

@@ -1,0 +1,268 @@
+//! Sans-IO receiver: the reassembly/recovery/feedback protocol of
+//! [`crate::coordinator::receiver`] as a poll-driven state machine.
+//!
+//! Reconstruction, lost-FTG enumeration and the usable-prefix walk are
+//! literally shared with the blocking engine (`reconstruct_levels`,
+//! `collect_lost`, `usable_prefix`), so the two cannot drift. Outgoing
+//! control datagrams (ManifestAck, λ̂ updates, lost lists, Done) queue
+//! internally and drain through `poll_transmit` — the receiver has no
+//! pacing, so the queue empties as fast as the caller pumps it.
+
+use crate::bail;
+use crate::coordinator::arena::FtgArena;
+use crate::coordinator::packet::{
+    validate_fragment_size, Manifest, Packet, PacketView, MAX_LOST_PER_MSG,
+};
+use crate::coordinator::receiver::{
+    collect_lost, reconstruct_levels, usable_prefix, ReceiverConfig, ReceiverReport,
+};
+use crate::erasure::RsCode;
+use crate::util::err::Result;
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+enum State {
+    AwaitManifest,
+    Receiving,
+    Finished,
+    Failed,
+}
+
+/// Poll-driven single-stream receiver. See the [`crate::engine`] module
+/// docs for the calling convention. Note that queued control datagrams
+/// (the final `Done` in particular) may still be pending after
+/// [`Self::is_finished`] turns true — drain `poll_transmit` before
+/// retiring the machine.
+pub struct ReceiverMachine {
+    cfg: ReceiverConfig,
+    start: Instant,
+    state: State,
+    manifest: Option<Manifest>,
+    retransmitting: bool,
+    s: usize,
+    groups: HashMap<(u8, u32), FtgArena>,
+    codes: HashMap<(u8, u8), RsCode>,
+    pending: VecDeque<Vec<u8>>,
+    window_start: Instant,
+    window_received: u64,
+    window_first_seq: Option<u64>,
+    window_max_seq: u64,
+    last_packet: Instant,
+    report: ReceiverReport,
+    error: Option<String>,
+}
+
+impl ReceiverMachine {
+    /// `now` is the transfer's start instant; the manifest/idle/
+    /// max-duration deadlines are relative to it.
+    pub fn new(cfg: &ReceiverConfig, now: Instant) -> ReceiverMachine {
+        ReceiverMachine {
+            cfg: cfg.clone(),
+            start: now,
+            state: State::AwaitManifest,
+            manifest: None,
+            retransmitting: false,
+            s: 0,
+            groups: HashMap::new(),
+            codes: HashMap::new(),
+            pending: VecDeque::new(),
+            window_start: now,
+            window_received: 0,
+            window_first_seq: None,
+            window_max_seq: 0,
+            last_packet: now,
+            report: ReceiverReport {
+                levels: Vec::new(),
+                achieved_eps: 1.0,
+                levels_recovered: 0,
+                fragments_received: 0,
+                groups_recovered: 0,
+                lambda_reports: Vec::new(),
+                duration: 0.0,
+            },
+            error: None,
+        }
+    }
+
+    /// Feed one received datagram (already un-tagged by the caller).
+    pub fn handle_datagram(&mut self, buf: &[u8], now: Instant) {
+        match self.state {
+            State::AwaitManifest => {
+                if let Ok(Packet::Manifest(m)) = Packet::decode(buf) {
+                    let s = m.s as usize;
+                    if validate_fragment_size(s).is_err() {
+                        self.fail("receiver: manifest fragment size exceeds datagram limit");
+                        return;
+                    }
+                    self.pending.push_back(Packet::ManifestAck.encode());
+                    self.report.levels = vec![None; m.levels.len()];
+                    self.retransmitting = m.contract == 0;
+                    self.s = s;
+                    self.manifest = Some(m);
+                    self.state = State::Receiving;
+                    self.last_packet = now;
+                    self.window_start = now;
+                }
+            }
+            State::Receiving => {
+                self.last_packet = now;
+                match PacketView::decode(buf) {
+                    Ok(PacketView::Fragment(view)) => {
+                        let h = view.header;
+                        self.report.fragments_received += 1;
+                        // λ window bookkeeping (sequence-gap based).
+                        self.window_received += 1;
+                        if self.window_first_seq.is_none() {
+                            self.window_first_seq = Some(h.seq);
+                        }
+                        self.window_max_seq = self.window_max_seq.max(h.seq);
+                        let elapsed =
+                            now.saturating_duration_since(self.window_start).as_secs_f64();
+                        if elapsed >= self.cfg.t_w {
+                            let first = self.window_first_seq.unwrap_or(self.window_max_seq);
+                            let expected = self.window_max_seq.saturating_sub(first) + 1;
+                            let lost = expected.saturating_sub(self.window_received);
+                            let lambda_hat = lost as f64 / elapsed;
+                            self.report.lambda_reports.push(lambda_hat);
+                            self.pending
+                                .push_back(Packet::LambdaUpdate { lambda: lambda_hat }.encode());
+                            self.window_start = now;
+                            self.window_received = 0;
+                            self.window_first_seq = None;
+                        }
+                        // Copy the payload exactly once: datagram → arena.
+                        // An index beyond the group's geometry is a stray
+                        // datagram — dropped, never grown into a phantom
+                        // shard.
+                        let s = self.s;
+                        let g = self
+                            .groups
+                            .entry((h.level, h.ftg))
+                            .or_insert_with(|| FtgArena::new(h.k, h.m, s));
+                        if (h.index as usize) < g.slots() {
+                            g.insert(h.index as usize, view.payload);
+                        }
+                    }
+                    Ok(PacketView::Control(Packet::EndOfPass { pass })) => {
+                        let manifest = self.manifest.as_ref().expect("manifest set");
+                        let lost = collect_lost(manifest, &self.groups, self.s);
+                        if self.retransmitting {
+                            let total = lost.len() as u32;
+                            let wire: Vec<(u8, u32)> =
+                                lost.iter().take(MAX_LOST_PER_MSG).copied().collect();
+                            self.pending
+                                .push_back(Packet::LostList { pass, total, ftgs: wire }.encode());
+                            if lost.is_empty() {
+                                self.pending.push_back(Packet::Done.encode());
+                                self.finish(now);
+                            }
+                        } else {
+                            // Deadline contract: take what we have.
+                            self.pending.push_back(Packet::Done.encode());
+                            self.finish(now);
+                        }
+                    }
+                    Ok(PacketView::Control(Packet::Manifest(_))) => {
+                        // Our ack may have been lost: re-ack so the
+                        // sender stops retrying the handshake. (The
+                        // blocking engine relies on a lossless control
+                        // path here; the machine is also driven over
+                        // lossy shared sockets.)
+                        self.pending.push_back(Packet::ManifestAck.encode());
+                    }
+                    _ => {}
+                }
+            }
+            State::Finished | State::Failed => {}
+        }
+    }
+
+    /// Pop the next queued control datagram into `out`. Unpaced: keeps
+    /// returning `true` until the queue is empty.
+    pub fn poll_transmit(&mut self, out: &mut Vec<u8>, _now: Instant) -> bool {
+        match self.pending.pop_front() {
+            Some(buf) => {
+                out.clear();
+                out.extend_from_slice(&buf);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Next failure deadline: idle timeout or max duration, whichever
+    /// is earlier. `None` once finished or failed.
+    pub fn poll_timeout(&self) -> Option<Instant> {
+        match self.state {
+            State::AwaitManifest | State::Receiving => Some(
+                (self.last_packet + self.cfg.idle_timeout)
+                    .min(self.start + self.cfg.max_duration),
+            ),
+            State::Finished | State::Failed => None,
+        }
+    }
+
+    /// Enforce the idle/max-duration failure deadlines. Spurious calls
+    /// are harmless.
+    pub fn handle_timeout(&mut self, now: Instant) {
+        let over_max = now.saturating_duration_since(self.start) > self.cfg.max_duration;
+        let idle = now.saturating_duration_since(self.last_packet) > self.cfg.idle_timeout;
+        match self.state {
+            State::AwaitManifest => {
+                if over_max {
+                    self.fail("receiver: no manifest");
+                } else if idle {
+                    self.fail("receiver: timed out waiting for manifest");
+                }
+            }
+            State::Receiving => {
+                if over_max {
+                    self.fail("receiver exceeded max duration");
+                } else if idle {
+                    self.fail("receiver: sender went silent");
+                }
+            }
+            State::Finished | State::Failed => {}
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, State::Finished | State::Failed)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self.state, State::Failed)
+    }
+
+    /// Consume the machine into its report. Errors if the transfer
+    /// failed or is still in flight.
+    pub fn into_report(self) -> Result<ReceiverReport> {
+        match self.state {
+            State::Finished => Ok(self.report),
+            State::Failed => {
+                bail!("{}", self.error.unwrap_or_else(|| "receiver failed".into()))
+            }
+            _ => bail!("receiver machine still running"),
+        }
+    }
+
+    fn fail(&mut self, msg: &str) {
+        self.error = Some(msg.to_string());
+        self.state = State::Failed;
+    }
+
+    fn finish(&mut self, now: Instant) {
+        let manifest = self.manifest.take().expect("manifest set");
+        let (levels, recovered) =
+            reconstruct_levels(&manifest, &self.groups, self.s, &mut self.codes, None);
+        self.report.levels = levels;
+        self.report.groups_recovered = recovered;
+        let prefix = usable_prefix(&manifest, &self.report.levels);
+        self.report.levels_recovered = prefix;
+        self.report.achieved_eps = if prefix == 0 { 1.0 } else { manifest.levels[prefix - 1].eps };
+        self.report.duration = now.saturating_duration_since(self.start).as_secs_f64();
+        self.manifest = Some(manifest);
+        self.state = State::Finished;
+    }
+}

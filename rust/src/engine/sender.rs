@@ -1,0 +1,601 @@
+//! Sans-IO sender: the Alg. 1 / Alg. 2 protocol of
+//! [`crate::coordinator::sender`] as a poll-driven state machine.
+//!
+//! The blocking engine splits the work across a parity thread and a
+//! transmission thread with a bounded pipeline between them; here the
+//! same plan/geometry/pacing/barrier logic runs inline, encoding one
+//! FTG lazily whenever transmission catches up with generation. The
+//! wire behaviour is identical (asserted by `tests/engine_sm.rs`); only
+//! the thread structure and event emission differ.
+
+use crate::api::Contract;
+use crate::coordinator::arena::FtgArena;
+use crate::coordinator::packet::{
+    encode_fragment_into, validate_fragment_size, FragmentHeader, Manifest, ManifestLevel, Packet,
+};
+use crate::coordinator::rate::{RateController, RttEstimator};
+use crate::coordinator::sender::{SenderConfig, SenderReport};
+use crate::erasure::RsCode;
+use crate::model::error_model::optimize_deadline_bitplane;
+use crate::model::params::{LevelSchedule, NetParams};
+use crate::model::time_model::optimize_parity;
+use crate::util::err::Result;
+use crate::{anyhow, bail};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Manifest handshake cadence (blocking engine: 50 tries × 100 ms).
+const MANIFEST_TRIES: u32 = 50;
+const MANIFEST_INTERVAL: Duration = Duration::from_millis(100);
+/// End-of-pass barrier retries (blocking engine: 100 tries × RTO).
+const EOP_TRIES: u32 = 100;
+
+/// One encoded FTG: all `k + m` fragments in one strided arena.
+struct StoredFtg {
+    level: u8,
+    ftg: u32,
+    k: u8,
+    m: u8,
+    arena: FtgArena,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum State {
+    /// Resending the manifest until the ack arrives.
+    SendManifest { tries: u32, next_at: Instant },
+    /// Streaming pass-0 fragments (paced).
+    Sending,
+    /// Sent `EndOfPass`, awaiting the lost list (retries on the RTO).
+    Barrier { tries: u32, eop_sent_at: Instant, next_at: Instant },
+    /// Streaming a retransmission pass (paced).
+    Retransmit,
+    Finished,
+    Failed,
+}
+
+/// Poll-driven single-stream sender. See the [`crate::engine`] module
+/// docs for the calling convention.
+pub struct SenderMachine {
+    cfg: SenderConfig,
+    levels: Vec<Vec<u8>>,
+    start: Instant,
+    state: State,
+    manifest: Vec<u8>,
+    // Plan (frozen at construction, like the blocking engine).
+    send_levels: usize,
+    limits: Vec<usize>,
+    deadline_tau: Option<f64>,
+    plan_m: Option<Vec<usize>>,
+    manifest_m0: Vec<u8>,
+    sched_sizes: Vec<u64>,
+    // Pass-0 encode cursor (lazy per-group parity generation).
+    li: usize,
+    offset: usize,
+    remaining: usize,
+    ftg_id: u32,
+    frag_counter: u64,
+    current: Option<StoredFtg>,
+    slot: usize,
+    codes: HashMap<(usize, usize), RsCode>,
+    current_m: usize,
+    lambda: f64,
+    lambda_dirty: bool,
+    // Pacing + barrier timing.
+    controller: RateController,
+    pace: Duration,
+    rtt: RttEstimator,
+    /// RFC 6298 §5.5 exponential backoff exponent. Bumped on every
+    /// barrier retry, held across barriers until a clean (unretried)
+    /// RTT sample arrives — without this, an RTT step upward would turn
+    /// every later barrier into a spurious-retry storm that Karn's rule
+    /// never lets the estimator recover from.
+    backoff: u32,
+    next_send: Instant,
+    seq: u64,
+    pass: u32,
+    pass_groups: u64,
+    eop_sends: u64,
+    // Retransmission state.
+    retain: bool,
+    buf_store: HashMap<(u8, u32), StoredFtg>,
+    rq: Vec<(u8, u32)>,
+    rq_idx: usize,
+    report: SenderReport,
+    error: Option<String>,
+}
+
+impl SenderMachine {
+    /// Build the machine: solves the contract's plan exactly like
+    /// [`crate::coordinator::sender::transfer_sender`] and queues the
+    /// manifest for transmission. `now` is the transfer's start instant
+    /// (all later deadlines are relative to it).
+    pub fn new(
+        cfg: &SenderConfig,
+        levels: &[Vec<u8>],
+        eps: &[f64],
+        now: Instant,
+    ) -> Result<SenderMachine> {
+        assert_eq!(levels.len(), eps.len());
+        let n = cfg.net.n;
+        let s = cfg.net.s;
+        validate_fragment_size(s)?;
+        let sched =
+            LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec())
+                .with_cuts(cfg.plane_cuts.clone());
+
+        let mut limits: Vec<usize> = levels.iter().map(|l| l.len()).collect();
+        let mut manifest_eps = eps.to_vec();
+        let mut cut_flags = vec![false; levels.len()];
+        let (send_levels, deadline) = match cfg.contract {
+            Contract::Fidelity(bound) => {
+                let l = sched.levels_for_error_bound(bound).ok_or_else(|| {
+                    anyhow!("error bound {bound} unachievable: ε_L = {}", eps[eps.len() - 1])
+                })?;
+                (l, None)
+            }
+            Contract::BestEffort => (levels.len(), None),
+            Contract::Deadline(tau) => {
+                let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
+                let plan = optimize_deadline_bitplane(&p, &sched, tau)
+                    .ok_or_else(|| anyhow!("deadline {tau}s infeasible for this schedule"))?;
+                let mut m = plan.base.m.clone();
+                let mut send = plan.base.levels;
+                if let Some((li, cut)) = plan.partial {
+                    limits[li] = cut.bytes as usize;
+                    manifest_eps[li] = cut.eps;
+                    cut_flags[li] = true;
+                    m.push(0); // partial level ships unprotected (§5.2.3)
+                    send = li + 1;
+                }
+                (send, Some((tau, m)))
+            }
+        };
+        let manifest_m0: Vec<u8> = match &deadline {
+            Some((_, m)) => m.iter().map(|&mi| mi as u8).collect(),
+            None => {
+                let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
+                let m = optimize_parity(&p, sched.total_bytes(send_levels).max(1)).m;
+                vec![m as u8; send_levels]
+            }
+        };
+        let manifest = Packet::Manifest(Manifest {
+            n: n as u8,
+            s: s as u32,
+            streams: 1,
+            levels: (0..send_levels)
+                .map(|i| ManifestLevel {
+                    size: limits[i] as u64,
+                    eps: manifest_eps[i],
+                    m0: manifest_m0[i],
+                    cut: cut_flags[i],
+                })
+                .collect(),
+            contract: u8::from(!cfg.contract.retransmits()),
+        })
+        .encode();
+
+        let retain = cfg.contract.retransmits();
+        let current_m = if retain {
+            let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
+            optimize_parity(&p, sched.total_bytes(send_levels)).m
+        } else {
+            0
+        };
+        let mut report = SenderReport {
+            fragments_sent: 0,
+            data_fragments: 0,
+            passes: 0,
+            duration: 0.0,
+            m_history: vec![(0, current_m)],
+            plan_history: Vec::new(),
+            encode_rate: 0.0,
+            lambda_updates: Vec::new(),
+            rate_history: Vec::new(),
+        };
+        if let Some((_, plan)) = &deadline {
+            report.plan_history.push(plan.clone());
+        }
+
+        let controller = RateController::new(cfg.net.r, cfg.adapt);
+        let pace = Duration::from_secs_f64(1.0 / controller.rate());
+        let remaining0 = if send_levels > 0 { limits[0].min(levels[0].len()) } else { 0 };
+        Ok(SenderMachine {
+            cfg: cfg.clone(),
+            levels: levels.to_vec(),
+            start: now,
+            state: State::SendManifest { tries: 0, next_at: now },
+            manifest,
+            send_levels,
+            limits,
+            deadline_tau: deadline.as_ref().map(|(tau, _)| *tau),
+            plan_m: deadline.map(|(_, m)| m),
+            manifest_m0,
+            sched_sizes: sched.sizes.clone(),
+            li: 0,
+            offset: 0,
+            remaining: remaining0,
+            ftg_id: 0,
+            frag_counter: 0,
+            current: None,
+            slot: 0,
+            codes: HashMap::new(),
+            current_m,
+            lambda: cfg.initial_lambda,
+            lambda_dirty: false,
+            controller,
+            pace,
+            rtt: RttEstimator::new(0.02, 0.2),
+            backoff: 0,
+            next_send: now,
+            seq: 0,
+            pass: 0,
+            pass_groups: 0,
+            eop_sends: 0,
+            retain,
+            buf_store: HashMap::new(),
+            rq: Vec::new(),
+            rq_idx: 0,
+            report,
+            error: None,
+        })
+    }
+
+    /// Feed one received datagram (already un-tagged by the caller).
+    /// Undecodable datagrams are dropped, like the blocking engine.
+    pub fn handle_datagram(&mut self, buf: &[u8], now: Instant) {
+        let pkt = match Packet::decode(buf) {
+            Ok(p) => p,
+            Err(_) => return,
+        };
+        match pkt {
+            Packet::ManifestAck => {
+                if matches!(self.state, State::SendManifest { .. }) {
+                    self.state = State::Sending;
+                    self.next_send = now;
+                }
+            }
+            Packet::LambdaUpdate { lambda } => {
+                self.report.lambda_updates.push(lambda);
+                self.lambda = lambda;
+                self.lambda_dirty = true;
+            }
+            Packet::LostList { pass: p, total, ftgs } => {
+                if let State::Barrier { tries, eop_sent_at, .. } = self.state {
+                    if p == self.pass {
+                        // Karn's algorithm: only an unretried barrier
+                        // yields an unambiguous RTT sample; a retried one
+                        // keeps its backed-off RTO for the next barrier.
+                        if tries == 1 {
+                            self.rtt.observe(
+                                now.saturating_duration_since(eop_sent_at).as_secs_f64(),
+                            );
+                            self.backoff = 0;
+                        }
+                        self.on_lost_list(total, ftgs, now);
+                    }
+                }
+            }
+            Packet::Done => {
+                if matches!(
+                    self.state,
+                    State::Sending | State::Barrier { .. } | State::Retransmit
+                ) {
+                    self.finish(now);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Fill `out` with the next datagram due at `now`, if any. Pacing,
+    /// manifest retries and barrier retries all surface here: `false`
+    /// means "nothing due yet" — [`Self::poll_timeout`] says when to ask
+    /// again.
+    pub fn poll_transmit(&mut self, out: &mut Vec<u8>, now: Instant) -> bool {
+        match self.state {
+            State::SendManifest { tries, next_at } => {
+                if now < next_at {
+                    return false;
+                }
+                if tries >= MANIFEST_TRIES {
+                    self.fail("receiver did not acknowledge manifest");
+                    return false;
+                }
+                out.clear();
+                out.extend_from_slice(&self.manifest);
+                self.state =
+                    State::SendManifest { tries: tries + 1, next_at: now + MANIFEST_INTERVAL };
+                true
+            }
+            State::Sending => {
+                if now < self.next_send {
+                    return false;
+                }
+                if self.current.is_none() {
+                    self.next_group(now);
+                    if !matches!(self.state, State::Sending) {
+                        // Pass 0 exhausted → the barrier's EndOfPass is
+                        // due immediately.
+                        return self.poll_transmit(out, now);
+                    }
+                }
+                let g = self.current.as_ref().expect("current group");
+                let hdr = FragmentHeader {
+                    level: g.level,
+                    stream: 0,
+                    ftg: g.ftg,
+                    index: self.slot as u8,
+                    k: g.k,
+                    m: g.m,
+                    seq: self.seq,
+                    pass: 0,
+                };
+                self.seq += 1;
+                encode_fragment_into(&hdr, g.arena.slot(self.slot), out);
+                self.next_send = now.max(self.next_send) + self.pace;
+                self.report.fragments_sent += 1;
+                if self.slot < g.k as usize {
+                    self.report.data_fragments += 1;
+                }
+                self.slot += 1;
+                if self.slot >= self.current.as_ref().expect("current group").arena.slots() {
+                    self.finish_group(now);
+                }
+                true
+            }
+            State::Barrier { tries, next_at, .. } => {
+                if now < next_at {
+                    return false;
+                }
+                if tries >= EOP_TRIES {
+                    // Blocking engine: retries exhausted means failure
+                    // under a retransmission contract, success otherwise
+                    // (the Deadline peer may simply be done already).
+                    if self.retain {
+                        self.fail("no response to EndOfPass");
+                    } else {
+                        self.finish(now);
+                    }
+                    return false;
+                }
+                if tries > 0 {
+                    // RFC 6298 §5.5: back the timer off on every retry.
+                    self.backoff = (self.backoff + 1).min(6);
+                }
+                Packet::EndOfPass { pass: self.pass }.encode_into(out);
+                self.eop_sends += 1;
+                let rto =
+                    Duration::from_secs_f64(self.rtt.rto() * f64::from(1u32 << self.backoff));
+                self.state =
+                    State::Barrier { tries: tries + 1, eop_sent_at: now, next_at: now + rto };
+                true
+            }
+            State::Retransmit => {
+                if now < self.next_send {
+                    return false;
+                }
+                // Advance past finished / unknown lost-list entries.
+                loop {
+                    if self.rq_idx >= self.rq.len() {
+                        self.enter_barrier(now);
+                        return self.poll_transmit(out, now);
+                    }
+                    match self.buf_store.get(&self.rq[self.rq_idx]) {
+                        Some(g) if self.slot < g.arena.slots() => break,
+                        _ => {
+                            self.rq_idx += 1;
+                            self.slot = 0;
+                        }
+                    }
+                }
+                let g = self.buf_store.get(&self.rq[self.rq_idx]).expect("retained group");
+                let hdr = FragmentHeader {
+                    level: g.level,
+                    stream: 0,
+                    ftg: g.ftg,
+                    index: self.slot as u8,
+                    k: g.k,
+                    m: g.m,
+                    seq: self.seq,
+                    pass: self.pass,
+                };
+                self.seq += 1;
+                encode_fragment_into(&hdr, g.arena.slot(self.slot), out);
+                self.next_send = now.max(self.next_send) + self.pace;
+                self.report.fragments_sent += 1;
+                self.slot += 1;
+                true
+            }
+            State::Finished | State::Failed => false,
+        }
+    }
+
+    /// The next instant at which the machine has time-gated work: a
+    /// manifest/barrier retry, the pacing gate, or the max-duration
+    /// failure deadline. `None` once finished or failed.
+    pub fn poll_timeout(&self) -> Option<Instant> {
+        let hard = self.start + self.cfg.max_duration;
+        let at = match self.state {
+            State::SendManifest { next_at, .. } | State::Barrier { next_at, .. } => next_at,
+            State::Sending | State::Retransmit => self.next_send,
+            State::Finished | State::Failed => return None,
+        };
+        Some(at.min(hard))
+    }
+
+    /// Act on elapsed time: enforces the max-duration failure deadline.
+    /// Spurious calls (timer fired early or late) are harmless.
+    pub fn handle_timeout(&mut self, now: Instant) {
+        if matches!(self.state, State::Finished | State::Failed) {
+            return;
+        }
+        if now.saturating_duration_since(self.start) > self.cfg.max_duration {
+            let msg = match self.state {
+                State::Barrier { .. } => "sender timed out waiting for lost list",
+                State::Retransmit => "sender exceeded max duration during retransmission",
+                _ => "sender exceeded max duration",
+            };
+            self.fail(msg);
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, State::Finished | State::Failed)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self.state, State::Failed)
+    }
+
+    /// Current barrier retry timeout (RFC 6298 RTO), seconds — the
+    /// RTT-step scenario test asserts re-convergence through this.
+    pub fn rto(&self) -> f64 {
+        self.rtt.rto()
+    }
+
+    /// `EndOfPass` datagrams sent so far (spurious-retry accounting).
+    pub fn eop_sends(&self) -> u64 {
+        self.eop_sends
+    }
+
+    /// Current pass number (0 = initial transmission).
+    pub fn pass(&self) -> u32 {
+        self.pass
+    }
+
+    /// Consume the machine into its report. Errors if the transfer
+    /// failed or is still in flight.
+    pub fn into_report(self) -> Result<SenderReport> {
+        match self.state {
+            State::Finished => Ok(self.report),
+            State::Failed => {
+                bail!("{}", self.error.unwrap_or_else(|| "sender failed".into()))
+            }
+            _ => bail!("sender machine still running"),
+        }
+    }
+
+    fn fail(&mut self, msg: &str) {
+        self.error = Some(msg.to_string());
+        self.state = State::Failed;
+    }
+
+    fn finish(&mut self, now: Instant) {
+        let elapsed = now.saturating_duration_since(self.start).as_secs_f64();
+        self.report.duration = elapsed;
+        self.report.encode_rate = self.frag_counter as f64 / elapsed.max(1e-9);
+        self.state = State::Finished;
+    }
+
+    fn enter_barrier(&mut self, now: Instant) {
+        self.state = State::Barrier { tries: 0, eop_sent_at: now, next_at: now };
+    }
+
+    /// A group's last fragment went out: retain it for retransmission,
+    /// count it toward the pass, and apply the Deadline hard stop.
+    fn finish_group(&mut self, now: Instant) {
+        let g = self.current.take().expect("current group");
+        self.pass_groups += 1;
+        if self.retain {
+            self.buf_store.insert((g.level, g.ftg), g);
+        }
+        self.slot = 0;
+        if let Some(tau) = self.deadline_tau {
+            if now.saturating_duration_since(self.start).as_secs_f64() >= tau {
+                // Deadline contract: hard stop at τ (skip the rest of
+                // pass 0, like the blocking engine's loop break).
+                self.enter_barrier(now);
+            }
+        }
+    }
+
+    /// Encode the next FTG of pass 0 (lazy parity generation) or enter
+    /// the barrier when the plan is exhausted. Mirrors the blocking
+    /// parity thread: λ̂ re-solves happen at group boundaries, geometry
+    /// stays frozen at the manifest's m0.
+    fn next_group(&mut self, now: Instant) {
+        while self.li < self.send_levels && self.remaining == 0 {
+            self.li += 1;
+            if self.li < self.send_levels {
+                self.offset = 0;
+                self.remaining = self.limits[self.li].min(self.levels[self.li].len());
+                self.ftg_id = 0;
+            }
+        }
+        if self.li >= self.send_levels {
+            self.enter_barrier(now);
+            return;
+        }
+        if self.lambda_dirty {
+            self.lambda_dirty = false;
+            if self.retain {
+                let p = NetParams { lambda: self.lambda, ..self.cfg.net };
+                let left = self.remaining as u64
+                    + self.sched_sizes[self.li + 1..self.send_levels].iter().sum::<u64>();
+                let m_new = optimize_parity(&p, left.max(1)).m;
+                if m_new != self.current_m {
+                    self.current_m = m_new;
+                    self.report.m_history.push((self.frag_counter, m_new));
+                }
+            }
+        }
+        let s = self.cfg.net.s;
+        let n = self.cfg.net.n;
+        let m = match &self.plan_m {
+            Some(p) => p[self.li],
+            None => self.current_m,
+        };
+        let k = n
+            .saturating_sub(self.manifest_m0[self.li] as usize)
+            .max(1)
+            .min(self.remaining.div_ceil(s).max(1));
+        let code =
+            self.codes.entry((k, m)).or_insert_with(|| RsCode::new(k, m).expect("valid k,m"));
+        let mut arena = FtgArena::new(k as u8, m as u8, s);
+        let limit = self.limits[self.li].min(self.levels[self.li].len());
+        let level_bytes = &self.levels[self.li];
+        for i in 0..k {
+            let lo = self.offset.min(limit);
+            let hi = (self.offset + s).min(limit);
+            arena.slot_mut(i)[..hi - lo].copy_from_slice(&level_bytes[lo..hi]);
+            self.offset += s;
+            self.remaining = self.remaining.saturating_sub(s);
+        }
+        arena.encode_parity(code).expect("encode");
+        self.frag_counter += arena.slots() as u64;
+        self.current = Some(StoredFtg {
+            level: self.li as u8,
+            ftg: self.ftg_id,
+            k: k as u8,
+            m: m as u8,
+            arena,
+        });
+        self.slot = 0;
+        self.ftg_id += 1;
+    }
+
+    /// Barrier resolved with a lost list: finish if it is empty, else
+    /// run the pass-barrier rate verdict and start the retransmission
+    /// pass (Alg. 1).
+    fn on_lost_list(&mut self, total: u32, ftgs: Vec<(u8, u32)>, now: Instant) {
+        if ftgs.is_empty() || !self.retain {
+            self.finish(now);
+            return;
+        }
+        let loss_frac = (total as f64 / self.pass_groups.max(1) as f64).min(1.0);
+        self.controller.on_pass(
+            now.saturating_duration_since(self.start).as_secs_f64(),
+            loss_frac,
+            1.0,
+        );
+        self.report.rate_history.push(self.controller.rate());
+        self.pace = Duration::from_secs_f64(1.0 / self.controller.rate());
+        self.pass += 1;
+        self.pass_groups = ftgs.len() as u64;
+        self.report.passes = self.pass;
+        self.rq = ftgs;
+        self.rq_idx = 0;
+        self.slot = 0;
+        self.state = State::Retransmit;
+    }
+}

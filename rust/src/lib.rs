@@ -22,11 +22,13 @@ pub mod api;
 pub mod codec;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod erasure;
 pub mod metrics;
 pub mod model;
 pub mod refactor;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testkit;
 pub mod transport;

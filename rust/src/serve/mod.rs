@@ -1,0 +1,622 @@
+//! `janus serve` — a multi-tenant transfer daemon multiplexing many
+//! concurrent transfers over shared sockets on one event loop
+//! (DESIGN.md §10).
+//!
+//! The blocking engines bind one transfer to one channel and one
+//! thread; a facility-edge data mover wants thousands of concurrent
+//! transfers through a handful of sockets. The daemon gets there with
+//! the [`crate::engine`] machines:
+//!
+//! * **Transfer-id routing** — every datagram on a daemon socket wears
+//!   the [`crate::coordinator::packet::encode_tagged`] envelope. The
+//!   loop peels the tag and routes the inner packet to the owning
+//!   machine through sharded `(socket, id) → slot` tables; untagged or
+//!   unknown datagrams are counted and dropped.
+//! * **One event loop** — no per-transfer threads. Sockets are drained
+//!   non-blockingly; touched slots go on a ready queue; each serviced
+//!   slot pumps `poll_transmit` until its pacing gate closes.
+//! * **A timer wheel** ([`wheel::TimerWheel`]) orders every machine's
+//!   `poll_timeout()`. In [`TimeMode::Virtual`] the loop never sleeps:
+//!   when nothing is ready it jumps the clock to the end of the next
+//!   armed wheel bucket, so a whole bucket of pacing deadlines fires
+//!   per jump and each paced sender batches ~granularity/pace
+//!   fragments per wake-up. [`TimeMode::Real`] sleeps the same wait
+//!   out on the OS clock instead.
+//! * **Tenant budgets** — each transfer is registered under a tenant
+//!   with an in-flight byte budget. Over-budget submissions are
+//!   rejected or queued per [`AdmissionPolicy`]; finishing transfers
+//!   release budget and admit queued work FIFO.
+//!
+//! Remote peers that are not themselves a daemon dial in with
+//! [`transport::ServeTransport`], which wraps any [`Datagram`] channel
+//! so an ordinary [`crate::api::Endpoint`] speaks the tagged dialect.
+
+pub mod transport;
+pub mod wheel;
+
+pub use transport::{ServeTransport, TaggedChannel};
+pub use wheel::TimerWheel;
+
+use crate::coordinator::packet::{self, MAX_DATAGRAM, MAX_FRAGMENT_PAYLOAD, TAG_BYTES};
+use crate::coordinator::receiver::{ReceiverConfig, ReceiverReport};
+use crate::coordinator::sender::{SenderConfig, SenderReport};
+use crate::engine::{ReceiverMachine, SenderMachine};
+use crate::transport::channel::Datagram;
+use crate::util::err::Result;
+use crate::{anyhow, bail};
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Real-mode poll cadence: how long the loop sleeps when idle with no
+/// machine deadline nearer than this.
+const REAL_POLL: Duration = Duration::from_micros(200);
+
+/// How the daemon's clock advances.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeMode {
+    /// `Instant::now()`; idle waits sleep on the OS clock. Use with
+    /// real sockets and live peers.
+    Real,
+    /// Virtual clock: idle waits *jump* to the next armed deadline.
+    /// Deterministic and sleep-free — in-process benchmarks and tests.
+    Virtual,
+}
+
+/// What happens to a submission that does not fit its tenant's budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Fail the registration call.
+    Reject,
+    /// Park it; admit FIFO as running transfers release budget.
+    Queue,
+}
+
+/// Daemon construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub mode: TimeMode,
+    /// Routing-table shards (keyed by `id % shards`).
+    pub shards: usize,
+    /// Timer-wheel bucket width — the effective timer resolution and
+    /// the virtual-clock batching quantum.
+    pub wheel_granularity: Duration,
+    /// Timer-wheel bucket count (horizon = slots × granularity).
+    pub wheel_slots: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            mode: TimeMode::Real,
+            shards: 16,
+            wheel_granularity: Duration::from_millis(1),
+            wheel_slots: 1024,
+        }
+    }
+}
+
+/// Either half of a transfer, as a machine.
+enum MachineKind {
+    Sender(Box<SenderMachine>),
+    Receiver(Box<ReceiverMachine>),
+}
+
+impl MachineKind {
+    fn handle_datagram(&mut self, buf: &[u8], now: Instant) {
+        match self {
+            MachineKind::Sender(m) => m.handle_datagram(buf, now),
+            MachineKind::Receiver(m) => m.handle_datagram(buf, now),
+        }
+    }
+    fn poll_transmit(&mut self, out: &mut Vec<u8>, now: Instant) -> bool {
+        match self {
+            MachineKind::Sender(m) => m.poll_transmit(out, now),
+            MachineKind::Receiver(m) => m.poll_transmit(out, now),
+        }
+    }
+    fn poll_timeout(&self) -> Option<Instant> {
+        match self {
+            MachineKind::Sender(m) => m.poll_timeout(),
+            MachineKind::Receiver(m) => m.poll_timeout(),
+        }
+    }
+    fn handle_timeout(&mut self, now: Instant) {
+        match self {
+            MachineKind::Sender(m) => m.handle_timeout(now),
+            MachineKind::Receiver(m) => m.handle_timeout(now),
+        }
+    }
+    fn is_finished(&self) -> bool {
+        match self {
+            MachineKind::Sender(m) => m.is_finished(),
+            MachineKind::Receiver(m) => m.is_finished(),
+        }
+    }
+}
+
+/// One live transfer.
+struct Slot {
+    tenant: usize,
+    socket: usize,
+    id: u32,
+    /// Bytes charged against the tenant budget while in flight.
+    cost: u64,
+    /// Deadline currently armed in the wheel (lazy-cancel: stale wheel
+    /// entries for this key fire spuriously and are ignored).
+    armed: Option<Instant>,
+    machine: MachineKind,
+}
+
+/// A not-yet-admitted transfer. Machines are built at *admission* so
+/// deadline clocks (τ, max-duration) start when the transfer actually
+/// starts, not while it sits queued.
+enum PendingKind {
+    Sender { cfg: SenderConfig, levels: Vec<Vec<u8>>, eps: Vec<f64> },
+    Receiver { cfg: ReceiverConfig },
+}
+
+struct Pending {
+    socket: usize,
+    id: u32,
+    cost: u64,
+    kind: PendingKind,
+}
+
+struct Tenant {
+    name: String,
+    budget_bytes: u64,
+    used: u64,
+    policy: AdmissionPolicy,
+    queued: VecDeque<Pending>,
+}
+
+/// Terminal record for one transfer, collected via
+/// [`Daemon::take_finished`].
+#[derive(Debug)]
+pub struct FinishedTransfer {
+    pub tenant: usize,
+    pub socket: usize,
+    pub id: u32,
+    pub outcome: TransferOutcome,
+}
+
+#[derive(Debug)]
+pub enum TransferOutcome {
+    Sent(SenderReport),
+    Received(ReceiverReport),
+    Failed(String),
+}
+
+impl TransferOutcome {
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, TransferOutcome::Failed(_))
+    }
+}
+
+/// The multi-tenant transfer daemon. Single-threaded: construct,
+/// register sockets/tenants/transfers, then [`Daemon::run_to_completion`].
+pub struct Daemon {
+    cfg: ServeConfig,
+    origin: Instant,
+    /// Virtual clock = `origin + now_off` (ignored in real mode).
+    now_off: Duration,
+    sockets: Vec<Box<dyn Datagram>>,
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    /// `(socket, id) → slot`, sharded by `id % shards`.
+    shards: Vec<HashMap<(usize, u32), usize>>,
+    tenants: Vec<Tenant>,
+    wheel: TimerWheel,
+    ready: VecDeque<usize>,
+    in_ready: Vec<bool>,
+    finished: Vec<FinishedTransfer>,
+    active: usize,
+    queued_total: usize,
+    dropped_untagged: u64,
+    dropped_unknown: u64,
+    rbuf: Vec<u8>,
+    out: Vec<u8>,
+    tag_buf: Vec<u8>,
+    fired: Vec<u64>,
+}
+
+impl Daemon {
+    pub fn new(cfg: ServeConfig) -> Daemon {
+        let origin = Instant::now();
+        let wheel = TimerWheel::new(origin, cfg.wheel_granularity, cfg.wheel_slots.max(1));
+        let shards = vec![HashMap::new(); cfg.shards.max(1)];
+        Daemon {
+            cfg,
+            origin,
+            now_off: Duration::ZERO,
+            sockets: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            shards,
+            tenants: Vec::new(),
+            wheel,
+            ready: VecDeque::new(),
+            in_ready: Vec::new(),
+            finished: Vec::new(),
+            active: 0,
+            queued_total: 0,
+            dropped_untagged: 0,
+            dropped_unknown: 0,
+            rbuf: vec![0u8; MAX_DATAGRAM],
+            out: Vec::with_capacity(MAX_DATAGRAM),
+            tag_buf: Vec::with_capacity(MAX_DATAGRAM),
+            fired: Vec::new(),
+        }
+    }
+
+    /// Adopt a (nonblocking-capable) channel; returns its socket index.
+    pub fn add_socket(&mut self, sock: Box<dyn Datagram>) -> usize {
+        self.sockets.push(sock);
+        self.sockets.len() - 1
+    }
+
+    /// Create a tenant with an in-flight byte budget; returns its index.
+    pub fn add_tenant(&mut self, name: &str, budget_bytes: u64, policy: AdmissionPolicy) -> usize {
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            budget_bytes,
+            used: 0,
+            policy,
+            queued: VecDeque::new(),
+        });
+        self.tenants.len() - 1
+    }
+
+    /// Register the sending half of transfer `id` on `socket`. The
+    /// tenant is charged the dataset size while the transfer runs.
+    pub fn register_sender(
+        &mut self,
+        tenant: usize,
+        socket: usize,
+        id: u32,
+        cfg: SenderConfig,
+        levels: Vec<Vec<u8>>,
+        eps: Vec<f64>,
+    ) -> Result<()> {
+        self.check_registration(tenant, socket, id)?;
+        if cfg.net.s > MAX_FRAGMENT_PAYLOAD - TAG_BYTES {
+            bail!(
+                "serve: fragment size {} exceeds the tagged-datagram payload limit {}",
+                cfg.net.s,
+                MAX_FRAGMENT_PAYLOAD - TAG_BYTES
+            );
+        }
+        let cost: u64 = levels.iter().map(|l| l.len() as u64).sum();
+        let kind = PendingKind::Sender { cfg, levels, eps };
+        self.submit(tenant, Pending { socket, id, cost, kind })
+    }
+
+    /// Register the receiving half of transfer `id` on `socket`.
+    /// `cost` is the expected dataset size charged against the tenant
+    /// budget (the receiver only learns the true size at manifest time).
+    pub fn register_receiver(
+        &mut self,
+        tenant: usize,
+        socket: usize,
+        id: u32,
+        cfg: ReceiverConfig,
+        cost: u64,
+    ) -> Result<()> {
+        self.check_registration(tenant, socket, id)?;
+        let kind = PendingKind::Receiver { cfg };
+        self.submit(tenant, Pending { socket, id, cost, kind })
+    }
+
+    fn check_registration(&self, tenant: usize, socket: usize, id: u32) -> Result<()> {
+        if tenant >= self.tenants.len() {
+            bail!("serve: unknown tenant index {tenant}");
+        }
+        if socket >= self.sockets.len() {
+            bail!("serve: unknown socket index {socket}");
+        }
+        if self.shards[self.shard_of(id)].contains_key(&(socket, id)) {
+            bail!("serve: transfer id {id} already active on socket {socket}");
+        }
+        for t in &self.tenants {
+            if t.queued.iter().any(|p| p.socket == socket && p.id == id) {
+                bail!("serve: transfer id {id} already queued on socket {socket}");
+            }
+        }
+        Ok(())
+    }
+
+    fn shard_of(&self, id: u32) -> usize {
+        id as usize % self.shards.len()
+    }
+
+    fn submit(&mut self, tenant: usize, p: Pending) -> Result<()> {
+        let t = &self.tenants[tenant];
+        if t.used + p.cost <= t.budget_bytes {
+            return self.admit(tenant, p);
+        }
+        match t.policy {
+            AdmissionPolicy::Reject => bail!(
+                "serve: tenant '{}' over budget ({} in flight + {} requested > {} bytes)",
+                t.name,
+                t.used,
+                p.cost,
+                t.budget_bytes
+            ),
+            AdmissionPolicy::Queue => {
+                self.tenants[tenant].queued.push_back(p);
+                self.queued_total += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Build the machine, charge the budget, activate the slot.
+    fn admit(&mut self, tenant: usize, p: Pending) -> Result<()> {
+        let now = self.now();
+        let machine = match p.kind {
+            PendingKind::Sender { cfg, levels, eps } => {
+                MachineKind::Sender(Box::new(SenderMachine::new(&cfg, &levels, &eps, now)?))
+            }
+            PendingKind::Receiver { cfg } => {
+                MachineKind::Receiver(Box::new(ReceiverMachine::new(&cfg, now)))
+            }
+        };
+        self.tenants[tenant].used += p.cost;
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.in_ready.push(false);
+                self.slots.len() - 1
+            }
+        };
+        self.shards[self.shard_of(p.id)].insert((p.socket, p.id), idx);
+        self.slots[idx] =
+            Some(Slot { tenant, socket: p.socket, id: p.id, cost: p.cost, armed: None, machine });
+        self.active += 1;
+        self.push_ready(idx);
+        Ok(())
+    }
+
+    fn push_ready(&mut self, idx: usize) {
+        if !self.in_ready[idx] {
+            self.in_ready[idx] = true;
+            self.ready.push_back(idx);
+        }
+    }
+
+    fn now(&self) -> Instant {
+        match self.cfg.mode {
+            TimeMode::Real => Instant::now(),
+            TimeMode::Virtual => self.origin + self.now_off,
+        }
+    }
+
+    /// Run the event loop until every registered transfer (including
+    /// queued ones) has finished or failed.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.active > 0 || self.queued_total > 0 {
+            if self.poll_once() {
+                continue;
+            }
+            if self.active == 0 {
+                bail!(
+                    "serve: {} queued transfers can never be admitted \
+                     (their cost exceeds the whole tenant budget)",
+                    self.queued_total
+                );
+            }
+            self.idle_step()?;
+        }
+        Ok(())
+    }
+
+    /// One pass: drain sockets, service the ready queue. Returns
+    /// whether anything moved.
+    fn poll_once(&mut self) -> bool {
+        let mut progressed = false;
+        let now = self.now();
+        for si in 0..self.sockets.len() {
+            while let Some(n) = self.sockets[si].try_recv_into(&mut self.rbuf) {
+                progressed = true;
+                match packet::peel_tag(&self.rbuf[..n]) {
+                    Some((id, inner)) => {
+                        let shard = id as usize % self.shards.len();
+                        match self.shards[shard].get(&(si, id)).copied() {
+                            Some(idx) => {
+                                if let Some(slot) = self.slots[idx].as_mut() {
+                                    slot.machine.handle_datagram(inner, now);
+                                }
+                                if !self.in_ready[idx] {
+                                    self.in_ready[idx] = true;
+                                    self.ready.push_back(idx);
+                                }
+                            }
+                            None => self.dropped_unknown += 1,
+                        }
+                    }
+                    None => self.dropped_untagged += 1,
+                }
+            }
+        }
+        while let Some(idx) = self.ready.pop_front() {
+            self.in_ready[idx] = false;
+            progressed |= self.service(idx);
+        }
+        progressed
+    }
+
+    /// Pump one slot: transmit until its pacing gate closes, reap it if
+    /// finished, re-arm its wheel deadline otherwise.
+    fn service(&mut self, idx: usize) -> bool {
+        let mut progressed = false;
+        let now = self.now();
+        loop {
+            let slot = match self.slots[idx].as_mut() {
+                Some(s) => s,
+                None => return progressed,
+            };
+            if !slot.machine.poll_transmit(&mut self.out, now) {
+                break;
+            }
+            let (id, si) = (slot.id, slot.socket);
+            packet::encode_tagged(id, &self.out, &mut self.tag_buf);
+            self.sockets[si].send(&self.tag_buf);
+            progressed = true;
+        }
+        let done = self.slots[idx].as_ref().map_or(false, |s| s.machine.is_finished());
+        if done {
+            self.reap(idx);
+            return true;
+        }
+        if let Some(slot) = self.slots[idx].as_mut() {
+            let want = slot.machine.poll_timeout();
+            if want != slot.armed {
+                if let Some(at) = want {
+                    self.wheel.schedule(idx as u64, at);
+                }
+                slot.armed = want;
+            }
+        }
+        progressed
+    }
+
+    /// Retire a finished slot: record the outcome, release the budget,
+    /// admit queued transfers that now fit (FIFO).
+    fn reap(&mut self, idx: usize) {
+        let slot = match self.slots[idx].take() {
+            Some(s) => s,
+            None => return,
+        };
+        self.shards[self.shard_of(slot.id)].remove(&(slot.socket, slot.id));
+        self.free.push(idx);
+        self.active -= 1;
+        let outcome = match slot.machine {
+            MachineKind::Sender(m) => match (*m).into_report() {
+                Ok(r) => TransferOutcome::Sent(r),
+                Err(e) => TransferOutcome::Failed(e.to_string()),
+            },
+            MachineKind::Receiver(m) => match (*m).into_report() {
+                Ok(r) => TransferOutcome::Received(r),
+                Err(e) => TransferOutcome::Failed(e.to_string()),
+            },
+        };
+        self.finished.push(FinishedTransfer {
+            tenant: slot.tenant,
+            socket: slot.socket,
+            id: slot.id,
+            outcome,
+        });
+        let t = &mut self.tenants[slot.tenant];
+        t.used = t.used.saturating_sub(slot.cost);
+        let mut admit = Vec::new();
+        let mut reserved = 0u64;
+        while let Some(p) = t.queued.front() {
+            if t.used + reserved + p.cost > t.budget_bytes {
+                break;
+            }
+            reserved += p.cost;
+            admit.push(t.queued.pop_front().unwrap());
+        }
+        self.queued_total -= admit.len();
+        for p in admit {
+            let (psock, pid) = (p.socket, p.id);
+            if let Err(e) = self.admit(slot.tenant, p) {
+                self.finished.push(FinishedTransfer {
+                    tenant: slot.tenant,
+                    socket: psock,
+                    id: pid,
+                    outcome: TransferOutcome::Failed(e.to_string()),
+                });
+            }
+        }
+    }
+
+    /// Nothing is ready: advance time to the next armed deadline. In
+    /// virtual mode this jumps the clock to the end of the deadline's
+    /// wheel bucket (draining a whole bucket per jump); in real mode it
+    /// sleeps the wait out, capped at [`REAL_POLL`] so fresh socket
+    /// arrivals are noticed promptly.
+    fn idle_step(&mut self) -> Result<()> {
+        match self.cfg.mode {
+            TimeMode::Virtual => {
+                let dl = self.wheel.next_deadline().ok_or_else(|| {
+                    anyhow!(
+                        "serve: stalled — {} transfers active but no timer armed",
+                        self.active
+                    )
+                })?;
+                let now = self.now().max(self.wheel.bucket_end(dl));
+                self.now_off = now.saturating_duration_since(self.origin);
+                self.fire_timers(now);
+            }
+            TimeMode::Real => {
+                let now = Instant::now();
+                let wait = match self.wheel.next_deadline() {
+                    Some(at) => at.saturating_duration_since(now).min(REAL_POLL),
+                    None => REAL_POLL,
+                };
+                if !wait.is_zero() {
+                    std::thread::sleep(wait);
+                }
+                self.fire_timers(Instant::now());
+            }
+        }
+        Ok(())
+    }
+
+    fn fire_timers(&mut self, now: Instant) {
+        let mut fired = std::mem::take(&mut self.fired);
+        fired.clear();
+        self.wheel.advance(now, &mut fired);
+        for &key in &fired {
+            let idx = key as usize;
+            // Clear `armed` so `service` re-arms even an unchanged
+            // deadline; a key whose slot died or re-armed since is a
+            // stale lazy-cancel entry — the spurious `handle_timeout`
+            // is harmless by the machine contract.
+            let live = match self.slots.get_mut(idx).and_then(|s| s.as_mut()) {
+                Some(slot) => {
+                    slot.armed = None;
+                    slot.machine.handle_timeout(now);
+                    true
+                }
+                None => false,
+            };
+            if live {
+                self.push_ready(idx);
+            }
+        }
+        self.fired = fired;
+    }
+
+    /// Drain the finished-transfer records collected so far.
+    pub fn take_finished(&mut self) -> Vec<FinishedTransfer> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Transfers currently holding a slot (admitted, not yet reaped).
+    pub fn active_transfers(&self) -> usize {
+        self.active
+    }
+
+    /// Transfers parked in tenant admission queues.
+    pub fn queued_transfers(&self) -> usize {
+        self.queued_total
+    }
+
+    /// Bytes of `tenant`'s budget currently held by in-flight transfers.
+    pub fn tenant_used(&self, tenant: usize) -> u64 {
+        self.tenants[tenant].used
+    }
+
+    /// Datagrams dropped for missing the transfer-tag envelope.
+    pub fn dropped_untagged(&self) -> u64 {
+        self.dropped_untagged
+    }
+
+    /// Tagged datagrams dropped for an unknown `(socket, id)`.
+    pub fn dropped_unknown(&self) -> u64 {
+        self.dropped_unknown
+    }
+}

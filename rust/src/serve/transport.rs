@@ -1,0 +1,107 @@
+//! Dialing a daemon from a plain endpoint: the tagged-datagram dialect
+//! as a [`Datagram`] wrapper and a single-stream [`Transport`].
+//!
+//! A [`crate::serve::Daemon`] only speaks transfer-tagged datagrams on
+//! its shared sockets. [`TaggedChannel`] makes any ordinary channel
+//! speak that dialect for exactly one transfer id: sends are wrapped in
+//! the [`packet::encode_tagged`] envelope, receives peel it and drop
+//! anything tagged for a different transfer (other tenants' traffic on
+//! the same shared socket). [`ServeTransport`] packages one such
+//! channel as a [`Transport`], so an unmodified [`crate::api::Endpoint`]
+//! can run a transfer against a daemon.
+
+use crate::api::transport::Transport;
+use crate::coordinator::packet::{self, MAX_DATAGRAM};
+use crate::transport::channel::Datagram;
+use crate::util::err::Result;
+use crate::{anyhow, bail};
+use std::time::{Duration, Instant};
+
+/// One transfer's view of a shared tagged socket.
+pub struct TaggedChannel<C: Datagram> {
+    inner: C,
+    id: u32,
+    sbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+}
+
+impl<C: Datagram> TaggedChannel<C> {
+    pub fn new(inner: C, id: u32) -> TaggedChannel<C> {
+        TaggedChannel {
+            inner,
+            id,
+            sbuf: Vec::with_capacity(MAX_DATAGRAM),
+            rbuf: vec![0u8; MAX_DATAGRAM],
+        }
+    }
+
+    /// Copy a peeled inner packet out if the tag matches our id.
+    /// Foreign and untagged datagrams vanish, like a kernel dropping
+    /// someone else's port traffic.
+    fn accept(&self, n: usize, buf: &mut [u8]) -> Option<usize> {
+        let (id, inner) = packet::peel_tag(&self.rbuf[..n])?;
+        if id != self.id {
+            return None;
+        }
+        let m = inner.len().min(buf.len());
+        buf[..m].copy_from_slice(&inner[..m]);
+        Some(m)
+    }
+}
+
+impl<C: Datagram> Datagram for TaggedChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        packet::encode_tagged(self.id, buf, &mut self.sbuf);
+        self.inner.send(&self.sbuf);
+    }
+
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            let n = self.inner.recv_into(&mut self.rbuf, left)?;
+            if let Some(m) = self.accept(n, buf) {
+                return Some(m);
+            }
+            if deadline.saturating_duration_since(Instant::now()).is_zero() {
+                return None;
+            }
+        }
+    }
+
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        loop {
+            let n = self.inner.try_recv_into(&mut self.rbuf)?;
+            if let Some(m) = self.accept(n, buf) {
+                return Some(m);
+            }
+        }
+    }
+}
+
+/// Single-stream [`Transport`] for one transfer against a daemon
+/// socket — [`crate::api::transport::ChannelTransport`] with the tag
+/// envelope applied.
+pub struct ServeTransport {
+    control: Option<Box<dyn Datagram>>,
+}
+
+impl ServeTransport {
+    /// `chan` is (one end of) the daemon's shared socket; `id` must
+    /// match the id the transfer was registered under.
+    pub fn new(chan: impl Datagram + 'static, id: u32) -> ServeTransport {
+        ServeTransport { control: Some(Box::new(TaggedChannel::new(chan, id))) }
+    }
+}
+
+impl Transport for ServeTransport {
+    fn open_control(&mut self) -> Result<Box<dyn Datagram>> {
+        self.control
+            .take()
+            .ok_or_else(|| anyhow!("serve transport: control already opened"))
+    }
+
+    fn open_data(&mut self, stream: usize) -> Result<Box<dyn Datagram>> {
+        bail!("serve transport is single-stream; no data channel {stream}")
+    }
+}

@@ -1,0 +1,217 @@
+//! Hashed timer wheel ordering every machine's `poll_timeout()`.
+//!
+//! The daemon multiplexes thousands of transfers, each with one armed
+//! deadline (pacing gate, barrier retry, idle/max-duration expiry). A
+//! wheel keeps arming O(1): deadlines hash into `granularity`-wide
+//! buckets; `advance` walks the cursor to `now` and fires everything
+//! due. Entries keep their *exact* `Instant` — a bucket holds a range
+//! of deadlines, and `advance` re-files entries whose exact time has
+//! not arrived yet — so [`TimerWheel::next_deadline`] can answer the
+//! virtual-clock question ("what is the next instant anything becomes
+//! due?") exactly, which is what lets [`crate::serve::Daemon`] jump
+//! virtual time without ever sleeping.
+//!
+//! Cancellation is lazy: the daemon never removes entries. A fired key
+//! whose slot re-armed (or died) since is a spurious wake-up, and
+//! machines tolerate spurious `handle_timeout` calls by design.
+
+use std::time::{Duration, Instant};
+
+/// One-deadline-per-key hashed wheel. Keys are caller-defined (the
+/// daemon uses slot indices).
+pub struct TimerWheel {
+    origin: Instant,
+    granularity: Duration,
+    buckets: Vec<Vec<(u64, Instant)>>,
+    /// Deadlines beyond the wheel horizon, re-filed as the cursor wraps.
+    overflow: Vec<(u64, Instant)>,
+    /// Tick index of the next bucket `advance` will drain.
+    cursor: u64,
+    /// Live entries (buckets + overflow) — cheap emptiness probe.
+    len: usize,
+}
+
+impl TimerWheel {
+    /// `slots × granularity` is the horizon; later deadlines go to the
+    /// overflow list and are re-filed as the cursor approaches them.
+    pub fn new(origin: Instant, granularity: Duration, slots: usize) -> TimerWheel {
+        assert!(slots > 0 && granularity > Duration::ZERO);
+        TimerWheel {
+            origin,
+            granularity,
+            buckets: vec![Vec::new(); slots],
+            overflow: Vec::new(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    fn tick_of(&self, at: Instant) -> u64 {
+        let dt = at.saturating_duration_since(self.origin);
+        (dt.as_nanos() / self.granularity.as_nanos().max(1)) as u64
+    }
+
+    /// Round `at` up to the end of its bucket — the effective firing
+    /// resolution. The daemon's virtual clock jumps to bucket ends so
+    /// one jump drains one whole bucket (the wheel's batching unit).
+    pub fn bucket_end(&self, at: Instant) -> Instant {
+        self.origin + self.granularity * (self.tick_of(at) as u32 + 1)
+    }
+
+    /// Arm `key` at `at`. Deadlines already in the past land in the
+    /// cursor's bucket and fire on the next `advance`.
+    pub fn schedule(&mut self, key: u64, at: Instant) {
+        let tick = self.tick_of(at).max(self.cursor);
+        if tick >= self.cursor + self.buckets.len() as u64 {
+            self.overflow.push((key, at));
+        } else {
+            let idx = (tick % self.buckets.len() as u64) as usize;
+            self.buckets[idx].push((key, at));
+        }
+        self.len += 1;
+    }
+
+    /// Walk the cursor to `now`, appending every key whose exact
+    /// deadline has passed to `fired`. Same-bucket entries with later
+    /// exact times are re-filed, never fired early.
+    pub fn advance(&mut self, now: Instant, fired: &mut Vec<u64>) {
+        let now_tick = self.tick_of(now);
+        while self.cursor <= now_tick {
+            let idx = (self.cursor % self.buckets.len() as u64) as usize;
+            let entries = std::mem::take(&mut self.buckets[idx]);
+            self.cursor += 1;
+            self.len -= entries.len();
+            for (key, at) in entries {
+                if at <= now {
+                    fired.push(key);
+                } else {
+                    self.schedule(key, at);
+                }
+            }
+            // The cursor moved: overflow entries may now be inside the
+            // horizon.
+            let horizon = self.cursor + self.buckets.len() as u64;
+            let mut i = 0;
+            while i < self.overflow.len() {
+                let (key, at) = self.overflow[i];
+                if self.tick_of(at).max(self.cursor) < horizon {
+                    self.overflow.swap_remove(i);
+                    self.len -= 1;
+                    self.schedule(key, at);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Exact minimum armed `Instant` (buckets and overflow), or `None`
+    /// when nothing is armed. Scans from the cursor to the first
+    /// non-empty bucket — O(gap), cheap in steady state because the
+    /// nearest deadline is almost always near the cursor.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let mut best: Option<Instant> = None;
+        if self.len > self.overflow.len() {
+            for off in 0..self.buckets.len() as u64 {
+                let idx = ((self.cursor + off) % self.buckets.len() as u64) as usize;
+                let b = &self.buckets[idx];
+                if b.is_empty() {
+                    continue;
+                }
+                best = b.iter().map(|&(_, at)| at).min();
+                break;
+            }
+        }
+        for &(_, at) in &self.overflow {
+            best = Some(best.map_or(at, |x| x.min(at)));
+        }
+        best
+    }
+
+    /// Live entries (including stale ones not yet lazily discarded).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wheel() -> (TimerWheel, Instant) {
+        let origin = Instant::now();
+        (TimerWheel::new(origin, Duration::from_millis(1), 16), origin)
+    }
+
+    #[test]
+    fn fires_in_deadline_order() {
+        let (mut w, t0) = wheel();
+        w.schedule(1, t0 + Duration::from_millis(5));
+        w.schedule(2, t0 + Duration::from_millis(2));
+        w.schedule(3, t0 + Duration::from_millis(9));
+        assert_eq!(w.len(), 3);
+        let mut fired = Vec::new();
+        w.advance(t0 + Duration::from_millis(3), &mut fired);
+        assert_eq!(fired, vec![2]);
+        w.advance(t0 + Duration::from_millis(20), &mut fired);
+        assert_eq!(fired, vec![2, 1, 3]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn same_bucket_later_instant_not_fired_early() {
+        let (mut w, t0) = wheel();
+        // Two deadlines in the same 1 ms bucket, 400 µs apart.
+        w.schedule(1, t0 + Duration::from_micros(4200));
+        w.schedule(2, t0 + Duration::from_micros(4600));
+        let mut fired = Vec::new();
+        w.advance(t0 + Duration::from_micros(4300), &mut fired);
+        assert_eq!(fired, vec![1], "later same-bucket entry must be re-filed, not fired");
+        assert_eq!(w.len(), 1);
+        w.advance(t0 + Duration::from_micros(5100), &mut fired);
+        assert_eq!(fired, vec![1, 2]);
+    }
+
+    #[test]
+    fn overflow_refiles_into_horizon() {
+        let (mut w, t0) = wheel();
+        // Horizon is 16 ms: a 40 ms deadline starts in overflow.
+        w.schedule(7, t0 + Duration::from_millis(40));
+        assert_eq!(w.next_deadline(), Some(t0 + Duration::from_millis(40)));
+        let mut fired = Vec::new();
+        w.advance(t0 + Duration::from_millis(30), &mut fired);
+        assert!(fired.is_empty());
+        w.advance(t0 + Duration::from_millis(41), &mut fired);
+        assert_eq!(fired, vec![7]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn next_deadline_is_exact_min() {
+        let (mut w, t0) = wheel();
+        assert_eq!(w.next_deadline(), None);
+        w.schedule(1, t0 + Duration::from_millis(12));
+        w.schedule(2, t0 + Duration::from_micros(3700));
+        w.schedule(3, t0 + Duration::from_millis(100)); // overflow
+        assert_eq!(w.next_deadline(), Some(t0 + Duration::from_micros(3700)));
+        let mut fired = Vec::new();
+        w.advance(t0 + Duration::from_millis(4), &mut fired);
+        assert_eq!(fired, vec![2]);
+        assert_eq!(w.next_deadline(), Some(t0 + Duration::from_millis(12)));
+    }
+
+    #[test]
+    fn past_deadlines_fire_on_next_advance() {
+        let (mut w, t0) = wheel();
+        let mut fired = Vec::new();
+        w.advance(t0 + Duration::from_millis(8), &mut fired);
+        w.schedule(1, t0 + Duration::from_millis(2)); // already past
+        assert!(w.next_deadline().is_some());
+        w.advance(t0 + Duration::from_millis(8), &mut fired);
+        assert_eq!(fired, vec![1]);
+    }
+}

@@ -206,6 +206,56 @@ impl<'a> World for Tcp<'a> {
     }
 }
 
+/// Standalone Reno congestion window — the AIMD core of the simulation
+/// above (slow start, congestion avoidance, multiplicative decrease)
+/// without the event loop, for components that model a *competing* TCP
+/// flow packet-by-packet (the testkit's TCP-competitor channel feeds
+/// ACK/loss signals in as its shared link admits or drops packets).
+#[derive(Debug, Clone)]
+pub struct RenoCwnd {
+    cwnd: f64,
+    ssthresh: f64,
+}
+
+impl RenoCwnd {
+    /// Initial window of 2 segments, matching [`run_tcp`].
+    pub fn new() -> RenoCwnd {
+        RenoCwnd { cwnd: 2.0, ssthresh: f64::INFINITY }
+    }
+
+    /// One cumulative-ACK step: slow start below ssthresh, congestion
+    /// avoidance above.
+    pub fn on_ack(&mut self) {
+        if self.cwnd < self.ssthresh {
+            self.cwnd += 1.0;
+        } else {
+            self.cwnd += 1.0 / self.cwnd;
+        }
+    }
+
+    /// One loss event (triple-dup-ACK equivalent): halve, floor at 2.
+    pub fn on_loss(&mut self) {
+        self.ssthresh = (self.cwnd / 2.0).max(2.0);
+        self.cwnd = self.ssthresh;
+    }
+
+    /// Current window, segments.
+    pub fn cwnd(&self) -> f64 {
+        self.cwnd
+    }
+
+    /// Send rate implied by the window over `rtt` seconds (segments/s).
+    pub fn rate(&self, rtt: f64) -> f64 {
+        self.cwnd / rtt.max(1e-9)
+    }
+}
+
+impl Default for RenoCwnd {
+    fn default() -> Self {
+        RenoCwnd::new()
+    }
+}
+
 /// Simulate a TCP transfer of `total_bytes` over the link described by
 /// `params` (rate `r`, one-way latency `t`, fragment size `s`).
 ///
@@ -328,5 +378,29 @@ mod tests {
         };
         assert!((run1.total_time - run2.total_time).abs() < 1e-9);
         assert_eq!(run1.packets_sent, run2.packets_sent);
+    }
+
+    #[test]
+    fn reno_cwnd_aimd_dynamics() {
+        let mut w = RenoCwnd::new();
+        assert!((w.cwnd() - 2.0).abs() < 1e-12);
+        // Slow start: +1 per ACK while below ssthresh.
+        for _ in 0..8 {
+            w.on_ack();
+        }
+        assert!((w.cwnd() - 10.0).abs() < 1e-12);
+        // Loss halves the window and sets ssthresh there.
+        w.on_loss();
+        assert!((w.cwnd() - 5.0).abs() < 1e-12);
+        // Now in congestion avoidance: sub-linear growth per ACK.
+        w.on_ack();
+        assert!((w.cwnd() - 5.2).abs() < 1e-12);
+        // Floor at 2 segments no matter how many losses.
+        for _ in 0..10 {
+            w.on_loss();
+        }
+        assert!((w.cwnd() - 2.0).abs() < 1e-12);
+        // rate() spreads the window over one RTT.
+        assert!((w.rate(0.5) - 4.0).abs() < 1e-12);
     }
 }

@@ -25,6 +25,7 @@ use crate::api::transport::StagedTransport;
 use crate::coordinator::packet::is_fragment;
 use crate::sim::hmm::{HmmConfig, HmmLoss};
 use crate::sim::loss::LossProcess;
+use crate::sim::tcp::RenoCwnd;
 use crate::transport::channel::{mem_pair, Datagram, MemChannel};
 use crate::util::Pcg64;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -372,6 +373,192 @@ pub fn congestion_transport_pair(
     )
 }
 
+/// Aggregate counters for the simulated TCP flows competing with the
+/// janus sender inside [`TcpCompetitorChannel`]s. Cloneable handle; all
+/// streams of a fixture feed one instance.
+#[derive(Debug, Clone, Default)]
+pub struct TcpCompetitorStats {
+    inner: Arc<TcpStatsInner>,
+}
+
+#[derive(Debug, Default)]
+struct TcpStatsInner {
+    tcp_sent: AtomicU64,
+    tcp_dropped: AtomicU64,
+    janus_offered: AtomicU64,
+    janus_dropped: AtomicU64,
+}
+
+impl TcpCompetitorStats {
+    pub fn new() -> TcpCompetitorStats {
+        TcpCompetitorStats::default()
+    }
+
+    /// TCP segments the shared link admitted.
+    pub fn tcp_sent(&self) -> u64 {
+        self.inner.tcp_sent.load(Ordering::Relaxed)
+    }
+
+    /// TCP segments the shared link shed (Reno loss events).
+    pub fn tcp_dropped(&self) -> u64 {
+        self.inner.tcp_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Janus fragments offered to the shared link.
+    pub fn janus_offered(&self) -> u64 {
+        self.inner.janus_offered.load(Ordering::Relaxed)
+    }
+
+    /// Janus fragments the shared link shed.
+    pub fn janus_dropped(&self) -> u64 {
+        self.inner.janus_dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Deterministic *competing-flow* congestion model: the janus stream and
+/// a simulated Reno TCP flow ([`RenoCwnd`]) share one token-bucket link
+/// of `capacity` fragments/s. Time is virtual — each offered janus
+/// fragment advances the clock by `1 / rate` seconds (rate read from the
+/// [`RateHandle`]), during which the link accrues credit and the TCP
+/// flow generates `cwnd / rtt · dt` segments of demand. TCP's backlog
+/// drains first each tick (an ACK-clocked kernel flow reacts at RTT
+/// granularity, far faster than the pass-barrier controller, so giving
+/// it priority is the conservative fairness test); whatever credit
+/// remains admits the janus fragment or sheds it. Admitted TCP segments
+/// ACK the window up, shed ones halve it — the classic sawtooth — so
+/// both flows adapt to each other and the division of `capacity` is a
+/// pure function of (capacity, rtt, rate history), independent of
+/// wall-clock pacing.
+pub struct TcpCompetitorChannel<C: Datagram> {
+    pub inner: C,
+    capacity: f64,
+    rate: RateHandle,
+    rtt: f64,
+    reno: RenoCwnd,
+    credit: f64,
+    tcp_backlog: f64,
+    stats: TcpCompetitorStats,
+}
+
+impl<C: Datagram> TcpCompetitorChannel<C> {
+    /// `capacity` in fragments/s on this link; `rate` tracks the janus
+    /// sender's current per-channel pacing rate; `rtt` is the competing
+    /// TCP flow's round-trip time in seconds.
+    pub fn new(
+        inner: C,
+        capacity: f64,
+        rate: RateHandle,
+        rtt: f64,
+        stats: TcpCompetitorStats,
+    ) -> Self {
+        assert!(capacity > 0.0);
+        assert!(rtt > 0.0);
+        TcpCompetitorChannel {
+            inner,
+            capacity,
+            rate,
+            rtt,
+            reno: RenoCwnd::new(),
+            credit: 1.0,
+            tcp_backlog: 0.0,
+            stats,
+        }
+    }
+
+    /// The competitor's current congestion window, segments.
+    pub fn tcp_cwnd(&self) -> f64 {
+        self.reno.cwnd()
+    }
+}
+
+impl<C: Datagram> Datagram for TcpCompetitorChannel<C> {
+    fn send(&mut self, buf: &[u8]) {
+        if is_fragment(buf) {
+            let dt = 1.0 / self.rate.get().max(1.0);
+            // Bucket depth 4: two flows share it, so give each the same
+            // slack the single-flow CongestionChannel's depth-2 bucket
+            // allows.
+            self.credit = (self.credit + self.capacity * dt).min(4.0);
+            self.tcp_backlog += self.reno.rate(self.rtt) * dt;
+            // Drop-tail: TCP's burst goes first, then the janus fragment
+            // contends for whatever credit is left. One halving per tick
+            // no matter how many of the burst died (one loss *event*).
+            let mut tcp_lost = false;
+            while self.tcp_backlog >= 1.0 {
+                self.tcp_backlog -= 1.0;
+                if self.credit >= 1.0 {
+                    self.credit -= 1.0;
+                    self.stats.inner.tcp_sent.fetch_add(1, Ordering::Relaxed);
+                    self.reno.on_ack();
+                } else {
+                    self.stats.inner.tcp_dropped.fetch_add(1, Ordering::Relaxed);
+                    tcp_lost = true;
+                }
+            }
+            if tcp_lost {
+                self.reno.on_loss();
+            }
+            self.stats.inner.janus_offered.fetch_add(1, Ordering::Relaxed);
+            if self.credit < 1.0 {
+                self.stats.inner.janus_dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            self.credit -= 1.0;
+        }
+        self.inner.send(buf);
+    }
+    fn recv_into(&mut self, buf: &mut [u8], timeout: Duration) -> Option<usize> {
+        self.inner.recv_into(buf, timeout)
+    }
+    fn try_recv_into(&mut self, buf: &mut [u8]) -> Option<usize> {
+        self.inner.try_recv_into(buf)
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Vec<u8>> {
+        self.inner.try_recv()
+    }
+}
+
+/// TCP-competition wiring for the [`crate::api`] facade: every data
+/// stream shares its `capacity`-fragments/s link with an independent Reno
+/// TCP flow of round-trip time `rtt` seconds. Control is lossless both
+/// ways. The returned [`RateHandle`] (initialised to `nominal_rate`)
+/// must track the sender's adaptive per-stream rate; the returned
+/// [`TcpCompetitorStats`] aggregates both flows' admitted/shed counts
+/// across all streams.
+pub fn tcp_competitor_transport_pair(
+    streams: usize,
+    capacity: f64,
+    nominal_rate: f64,
+    rtt: f64,
+) -> (StagedTransport, StagedTransport, RateHandle, TcpCompetitorStats) {
+    assert!(streams >= 2, "competitor fixture targets the pooled route");
+    let handle = RateHandle::new(nominal_rate);
+    let stats = TcpCompetitorStats::new();
+    let (sc, rc) = mem_pair();
+    let mut sender_data: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    let mut receiver_data: Vec<Box<dyn Datagram>> = Vec::with_capacity(streams);
+    for _ in 0..streams {
+        let (a, b) = mem_pair();
+        sender_data.push(Box::new(TcpCompetitorChannel::new(
+            a,
+            capacity,
+            handle.clone(),
+            rtt,
+            stats.clone(),
+        )));
+        receiver_data.push(Box::new(b));
+    }
+    (
+        StagedTransport::new(sc, sender_data),
+        StagedTransport::new(rc, receiver_data),
+        handle,
+        stats,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -571,6 +758,37 @@ mod tests {
             survived += 1;
         }
         assert_eq!(survived as u64, 2000 - dropped + 1);
+    }
+
+    #[test]
+    fn tcp_competitor_contends_then_yields() {
+        let run = |rate2: f64| {
+            let handle = RateHandle::new(1000.0);
+            let stats = TcpCompetitorStats::new();
+            let (a, _b) = mem_pair();
+            let mut ch =
+                TcpCompetitorChannel::new(a, 1000.0, handle.clone(), 0.05, stats.clone());
+            for i in 0..20_000 {
+                ch.send(&fragment_buf(i));
+            }
+            let shed1 = stats.janus_dropped() as f64 / stats.janus_offered() as f64;
+            // TCP carved out a real share and saw its sawtooth losses.
+            assert!(stats.tcp_sent() > 1_000, "tcp sent {}", stats.tcp_sent());
+            assert!(stats.tcp_dropped() > 0, "no Reno loss events");
+            assert!(shed1 > 0.02, "competition must pressure janus: {shed1}");
+            // Janus backs off; its loss fraction must drop.
+            handle.set(rate2);
+            let (off0, drop0) = (stats.janus_offered(), stats.janus_dropped());
+            for i in 0..20_000 {
+                ch.send(&fragment_buf(i));
+            }
+            let shed2 = (stats.janus_dropped() - drop0) as f64
+                / (stats.janus_offered() - off0) as f64;
+            assert!(shed2 < shed1, "backing off must shed less: {shed2} vs {shed1}");
+            (stats.tcp_sent(), stats.tcp_dropped(), stats.janus_dropped())
+        };
+        // Deterministic: identical inputs, identical division of the link.
+        assert_eq!(run(400.0), run(400.0));
     }
 
     #[test]

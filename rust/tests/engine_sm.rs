@@ -1,0 +1,358 @@
+//! Datagram-level scenario tests for the sans-IO machines: a
+//! single-threaded virtual-clock harness feeds [`SenderMachine`] /
+//! [`ReceiverMachine`] one datagram at a time through scripted loss,
+//! reordering, duplication and mid-transfer RTT steps — no sockets, no
+//! threads, no sleeps. The blocking engines run the same seeds over real
+//! channels to pin trace equivalence.
+
+use janus::api::{AdaptConfig, Contract};
+use janus::coordinator::packet::is_fragment;
+use janus::coordinator::{
+    run_receiver, run_sender, PacketView, ReceiverConfig, SenderConfig,
+};
+use janus::engine::{ReceiverMachine, SenderMachine};
+use janus::model::NetParams;
+use janus::testkit::{FragmentLossChannel, LossTrace};
+use janus::transport::channel::mem_pair;
+use janus::util::Pcg64;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+const RATE: f64 = 50_000.0;
+
+fn scfg(lambda0: f64) -> SenderConfig {
+    SenderConfig {
+        net: NetParams { t: 0.002, r: RATE, lambda: 0.0, n: 32, s: 1024 },
+        contract: Contract::Fidelity(1e-7),
+        initial_lambda: lambda0,
+        max_duration: Duration::from_secs(600),
+        plane_cuts: vec![],
+        adapt: AdaptConfig::fixed(),
+    }
+}
+
+fn rcfg() -> ReceiverConfig {
+    ReceiverConfig {
+        // Suppress λ windows: virtual and wall clocks tick differently,
+        // and the equivalence test needs both engines update-free.
+        t_w: 1e9,
+        idle_timeout: Duration::from_secs(300),
+        max_duration: Duration::from_secs(600),
+    }
+}
+
+fn payload(seed: u64, n: usize) -> Vec<u8> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Deterministic single-thread network: two one-way pipes with settable
+/// latency, fragment loss by ordinal trace or by (pass, seq) predicate,
+/// optional adjacent-pair reordering and every-Nth duplication on the
+/// sender→receiver path. Control datagrams are reliable, like every
+/// loss fixture in the repo.
+struct Net {
+    now: Instant,
+    latency: Duration,
+    s2r: VecDeque<(Instant, Vec<u8>)>,
+    r2s: VecDeque<(Instant, Vec<u8>)>,
+    trace: LossTrace,
+    drop_fn: Option<Box<dyn FnMut(u32, u64) -> bool>>,
+    frag_tick: u64,
+    reorder: bool,
+    held: Option<(Instant, Vec<u8>)>,
+    dup_every: Option<u64>,
+}
+
+impl Net {
+    fn new(latency: Duration, trace: LossTrace) -> Net {
+        Net {
+            now: Instant::now(),
+            latency,
+            s2r: VecDeque::new(),
+            r2s: VecDeque::new(),
+            trace,
+            drop_fn: None,
+            frag_tick: 0,
+            reorder: false,
+            held: None,
+            dup_every: None,
+        }
+    }
+
+    fn send_s2r(&mut self, buf: &[u8]) {
+        if is_fragment(buf) {
+            let tick = self.frag_tick;
+            self.frag_tick += 1;
+            let drop = match &mut self.drop_fn {
+                Some(f) => {
+                    let (pass, seq) = match PacketView::decode(buf) {
+                        Ok(PacketView::Fragment(v)) => (v.header.pass, v.header.seq),
+                        _ => (0, 0),
+                    };
+                    f(pass, seq)
+                }
+                None => self.trace.drop_at(tick),
+            };
+            if drop {
+                return;
+            }
+            let at = self.now + self.latency;
+            let dup = self.dup_every.map_or(false, |n| tick % n == n - 1);
+            if self.reorder {
+                match self.held.take() {
+                    // Second of a pair: it arrives first, its earlier
+                    // partner a hair later — a genuine swap on the wire.
+                    Some((_, first)) => {
+                        self.s2r.push_back((at, buf.to_vec()));
+                        self.s2r.push_back((at + Duration::from_micros(1), first));
+                    }
+                    None => {
+                        self.held = Some((at, buf.to_vec()));
+                        return;
+                    }
+                }
+            } else {
+                self.s2r.push_back((at, buf.to_vec()));
+            }
+            if dup {
+                self.s2r.push_back((at, buf.to_vec()));
+            }
+            return;
+        }
+        // Control: flush any held fragment so a barrier marker never
+        // overtakes the data it fences.
+        if let Some(h) = self.held.take() {
+            self.s2r.push_back(h);
+        }
+        self.s2r.push_back((self.now + self.latency, buf.to_vec()));
+    }
+
+    fn send_r2s(&mut self, buf: &[u8]) {
+        self.r2s.push_back((self.now + self.latency, buf.to_vec()));
+    }
+
+    /// Every queued datagram due at or before `now`, in queue order (a
+    /// latency drop may legitimately deliver a late packet first: UDP).
+    fn due(q: &mut VecDeque<(Instant, Vec<u8>)>, now: Instant) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some((at, buf)) = q.pop_front() {
+            if at <= now {
+                out.push(buf);
+            } else {
+                rest.push_back((at, buf));
+            }
+        }
+        *q = rest;
+        out
+    }
+
+    fn next_arrival(&self) -> Option<Instant> {
+        self.s2r.iter().chain(self.r2s.iter()).map(|&(at, _)| at).min()
+    }
+}
+
+/// Pump both machines over the scripted network until both finish.
+/// `hook` runs each iteration (the RTT-step test mutates latency there).
+/// Returns the virtual duration.
+fn run(
+    net: &mut Net,
+    s: &mut SenderMachine,
+    r: &mut ReceiverMachine,
+    mut hook: impl FnMut(&mut Net, &SenderMachine),
+) -> Duration {
+    let start = net.now;
+    let mut out = Vec::new();
+    let mut steps = 0u64;
+    while !(s.is_finished() && r.is_finished()) {
+        steps += 1;
+        assert!(steps < 10_000_000, "harness stalled");
+        hook(net, s);
+        let now = net.now;
+        let mut progressed = false;
+        for buf in Net::due(&mut net.s2r, now) {
+            r.handle_datagram(&buf, now);
+            progressed = true;
+        }
+        for buf in Net::due(&mut net.r2s, now) {
+            s.handle_datagram(&buf, now);
+            progressed = true;
+        }
+        while s.poll_transmit(&mut out, now) {
+            net.send_s2r(&out);
+            progressed = true;
+        }
+        while r.poll_transmit(&mut out, now) {
+            net.send_r2s(&out);
+            progressed = true;
+        }
+        if progressed {
+            continue;
+        }
+        // Idle: jump the virtual clock to the next event. Deliveries are
+        // handled before transmissions next iteration, so a reply that
+        // lands exactly on a retry deadline wins the race (and gives the
+        // RTT estimator its clean sample).
+        let mut next = net.next_arrival();
+        for cand in [s.poll_timeout(), r.poll_timeout()] {
+            next = match (next, cand) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        let next = next.expect("idle with no pending event: deadlock");
+        // Strictly advance — a deadline may sit exactly on `now`.
+        net.now = next.max(now + Duration::from_nanos(100));
+        s.handle_timeout(net.now);
+        r.handle_timeout(net.now);
+    }
+    net.now.saturating_duration_since(start)
+}
+
+fn assert_delivered(report: &janus::coordinator::ReceiverReport, data: &[Vec<u8>]) {
+    for (li, want) in data.iter().enumerate() {
+        assert_eq!(
+            report.levels[li].as_deref(),
+            Some(&want[..]),
+            "level {li} bytes differ"
+        );
+    }
+    assert_eq!(report.levels_recovered, data.len());
+}
+
+#[test]
+fn machines_roundtrip_losslessly() {
+    let data = vec![payload(1, 40_000), payload(2, 80_000)];
+    let eps = vec![1e-3, 1e-7];
+    let mut net = Net::new(Duration::from_millis(2), LossTrace::None);
+    let mut s = SenderMachine::new(&scfg(0.0), &data, &eps, net.now).unwrap();
+    let mut r = ReceiverMachine::new(&rcfg(), net.now);
+    let dur = run(&mut net, &mut s, &mut r, |_, _| {});
+    assert!(!s.is_failed(), "sender failed");
+    assert!(!r.is_failed(), "receiver failed");
+    let sr = s.into_report().unwrap();
+    assert_eq!(sr.passes, 0, "lossless transfer needs no retransmission");
+    assert_delivered(&r.into_report().unwrap(), &data);
+    assert!(dur < Duration::from_secs(30), "virtual duration {dur:?}");
+}
+
+#[test]
+fn scripted_loss_reorder_duplication_still_byte_exact() {
+    let data = vec![payload(7, 120_000)];
+    let eps = vec![1e-7];
+    // Scattered singles plus a 16-fragment burst that no pass-0 parity
+    // survives; beyond the script, everything delivers.
+    let mut script = vec![false; 400];
+    for d in script.iter_mut().skip(10).step_by(17) {
+        *d = true;
+    }
+    for d in script.iter_mut().take(56).skip(40) {
+        *d = true;
+    }
+    let mut net = Net::new(Duration::from_millis(2), LossTrace::Script(script));
+    net.reorder = true;
+    net.dup_every = Some(9);
+    let mut s = SenderMachine::new(&scfg(0.05 * RATE), &data, &eps, net.now).unwrap();
+    let mut r = ReceiverMachine::new(&rcfg(), net.now);
+    run(&mut net, &mut s, &mut r, |_, _| {});
+    assert!(!s.is_failed(), "sender failed");
+    assert!(!r.is_failed(), "receiver failed");
+    let sr = s.into_report().unwrap();
+    assert!(sr.passes >= 1, "the burst must force a retransmission pass");
+    assert_delivered(&r.into_report().unwrap(), &data);
+}
+
+#[test]
+fn machine_trace_matches_blocking_engine_under_identical_loss() {
+    let data = vec![payload(0xE0, 96_000)];
+    let eps = vec![1e-7];
+    let seed = 0xBEEF;
+    let frac = 0.15;
+    let cfg = scfg(frac * RATE);
+    let rc_cfg = rcfg();
+
+    // Blocking reference: real channels, real threads, loss decided by
+    // the same seeded trace over the same fragment ordinals.
+    let (sc, rc) = mem_pair();
+    let mut lossy = FragmentLossChannel::new(sc, LossTrace::seeded(frac, seed));
+    let thread_cfg = rc_cfg.clone();
+    let join = std::thread::spawn(move || {
+        let mut rc = rc;
+        run_receiver(&mut rc, &thread_cfg).unwrap()
+    });
+    let blocking_sent = run_sender(&mut lossy, &cfg, &data, &eps).unwrap();
+    let blocking_recv = join.join().unwrap();
+    assert_delivered(&blocking_recv, &data);
+
+    // Machine run, same seed, virtual clock.
+    let mut net = Net::new(Duration::from_millis(2), LossTrace::seeded(frac, seed));
+    let mut s = SenderMachine::new(&cfg, &data, &eps, net.now).unwrap();
+    let mut r = ReceiverMachine::new(&rc_cfg, net.now);
+    run(&mut net, &mut s, &mut r, |_, _| {});
+    let machine_sent = s.into_report().unwrap();
+    let machine_recv = r.into_report().unwrap();
+    assert_delivered(&machine_recv, &data);
+
+    // Identical seeds ⇒ identical wire trace, thread structure aside.
+    assert_eq!(machine_sent.passes, blocking_sent.passes, "pass count");
+    assert_eq!(
+        machine_sent.fragments_sent, blocking_sent.fragments_sent,
+        "fragments offered to the wire"
+    );
+    assert_eq!(
+        machine_sent.data_fragments, blocking_sent.data_fragments,
+        "data fragments"
+    );
+    assert_eq!(
+        machine_recv.fragments_received, blocking_recv.fragments_received,
+        "fragments delivered"
+    );
+    assert_eq!(
+        machine_recv.groups_recovered, blocking_recv.groups_recovered,
+        "groups needing RS recovery"
+    );
+}
+
+#[test]
+fn rtt_step_reconverges_without_retry_storm() {
+    let data = vec![payload(3, 100_000)];
+    let eps = vec![1e-7];
+    // λ₀ = 0 plans zero parity, and the predicate kills every third
+    // fragment through pass 2: passes 0–2 each lose all their groups,
+    // pass 3 runs clean — exactly three retransmission passes, four
+    // barriers, deterministic with no seeds.
+    let mut net = Net::new(Duration::from_millis(2), LossTrace::None);
+    net.drop_fn = Some(Box::new(|pass, seq| pass < 3 && seq % 3 == 0));
+    let mut s = SenderMachine::new(&scfg(0.0), &data, &eps, net.now).unwrap();
+    let mut r = ReceiverMachine::new(&rcfg(), net.now);
+    // Step the path latency 2 ms → 40 ms once the first retransmission
+    // pass begins: every barrier after the step answers in 80 ms, four
+    // times the sender's converged RTO.
+    let stepped = Duration::from_millis(40);
+    run(&mut net, &mut s, &mut r, |net, s| {
+        if s.pass() >= 1 {
+            net.latency = stepped;
+        }
+    });
+    assert!(!s.is_failed(), "sender failed");
+    assert!(!r.is_failed(), "receiver failed");
+    let rto = s.rto();
+    let eop = s.eop_sends();
+    let sr = s.into_report().unwrap();
+    assert_eq!(sr.passes, 3, "drop predicate fixes the pass count");
+    assert_delivered(&r.into_report().unwrap(), &data);
+    // RFC 6298 re-convergence: the RTO covers the stepped 80 ms barrier
+    // round trip again (it was ~20 ms before the step).
+    assert!(rto >= 0.08, "rto {rto} must re-converge past the 80 ms RTT");
+    // Karn + exponential backoff keep retries bounded: one EndOfPass per
+    // barrier plus a couple of backoff probes at the step — a storm
+    // would burn EOP_TRIES-scale bursts on every post-step barrier.
+    let passes = u64::from(sr.passes);
+    assert!(
+        eop <= passes + 6,
+        "retry storm: {eop} EndOfPass sends over {passes} retransmission passes"
+    );
+}

@@ -11,7 +11,9 @@ use janus::api::{
 };
 use janus::coordinator::PacketView;
 use janus::model::NetParams;
-use janus::testkit::{congestion_transport_pair, loss_transport_pair, LossTrace};
+use janus::testkit::{
+    congestion_transport_pair, loss_transport_pair, tcp_competitor_transport_pair, LossTrace,
+};
 use janus::transport::channel::Datagram;
 use janus::util::Pcg64;
 use std::time::Duration;
@@ -125,6 +127,53 @@ fn congested_runs_are_bit_identical() {
     assert_eq!(a.sent.lambda_history, b.sent.lambda_history);
     assert_eq!(a.sent.trace().unwrap(), b.sent.trace().unwrap());
     assert_eq!(a.sent.passes, b.sent.passes);
+}
+
+#[test]
+fn tcp_competitor_shares_the_link_without_starvation() {
+    // A Reno flow (ACK-clocked, so it reacts far faster than the
+    // pass-barrier controller) shares every data stream's link with the
+    // janus sender. Neither side may starve: the controller's rate floor
+    // keeps janus sending, and its back-off leaves room for the
+    // competitor's sawtooth.
+    let data = sized_dataset(0x7C9, 3);
+    let (sender_t, receiver_t, handle, stats) =
+        tcp_competitor_transport_pair(STREAMS, RATE, RATE, 5e-4);
+    let h = handle.clone();
+    let mut obs = FnObserver(move |e: &TransferEvent| {
+        if let TransferEvent::RateAdapted { rate, .. } = e {
+            h.set(*rate);
+        }
+    });
+    let report = run_pair(
+        &spec(0.0, STREAMS, AdaptConfig::default()),
+        sender_t,
+        receiver_t,
+        &data,
+        Some(&mut obs),
+        None,
+    )
+    .unwrap();
+    assert_byte_exact(&report, &data);
+
+    // Janus is never throttled below its configured floor, nor above max.
+    let rates = &report.sent.rate_history;
+    assert!(!rates.is_empty(), "competition must cross pass barriers");
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = rates.iter().cloned().fold(0.0, f64::max);
+    assert!(min >= 0.25 * RATE - 1e-9, "rate floor violated: {min}");
+    assert!(max <= RATE + 1e-9, "rate ceiling violated: {max}");
+
+    // Both flows land a real share of the link's grants.
+    let janus_through = stats.janus_offered() - stats.janus_dropped();
+    let total = janus_through + stats.tcp_sent();
+    let janus_share = janus_through as f64 / total as f64;
+    let tcp_share = stats.tcp_sent() as f64 / total as f64;
+    assert!(janus_share >= 0.10, "janus starved by TCP: share {janus_share}");
+    assert!(tcp_share >= 0.10, "TCP starved by janus: share {tcp_share}");
+    // …and TCP is genuinely regulated by the shared link, not free-riding
+    // on an idle one.
+    assert!(stats.tcp_dropped() > 0, "Reno never hit the shared bucket");
 }
 
 fn run_ge(adapt: AdaptConfig, seed: u64, scale: usize) -> TransferReport {

@@ -1,0 +1,224 @@
+//! End-to-end acceptance for `janus::serve`: one single-threaded daemon
+//! loop multiplexing hundreds of concurrent transfers over two shared
+//! sockets (transfer-id demux), with per-tenant budget admission in both
+//! policies and a Real-mode interop check against the blocking
+//! [`Endpoint`] facade dialing through a [`ServeTransport`].
+
+use janus::api::{AdaptConfig, Contract, Dataset, Endpoint, TransferSpec};
+use janus::coordinator::{ReceiverConfig, SenderConfig};
+use janus::model::NetParams;
+use janus::serve::{
+    AdmissionPolicy, Daemon, ServeConfig, ServeTransport, TimeMode, TransferOutcome,
+};
+use janus::testkit::{FragmentLossChannel, LossTrace};
+use janus::transport::channel::mem_pair;
+use janus::util::Pcg64;
+use std::time::Duration;
+
+fn payload(id: u32, n: usize) -> Vec<u8> {
+    let mut rng = Pcg64::seeded(0x5EED ^ u64::from(id));
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn sender_cfg(rate: f64, lambda0: f64) -> SenderConfig {
+    SenderConfig {
+        net: NetParams { t: 0.0005, r: rate, lambda: 0.0, n: 32, s: 1024 },
+        contract: Contract::Fidelity(1e-7),
+        initial_lambda: lambda0,
+        max_duration: Duration::from_secs(600),
+        plane_cuts: vec![],
+        adapt: AdaptConfig::fixed(),
+    }
+}
+
+fn recv_cfg() -> ReceiverConfig {
+    ReceiverConfig {
+        t_w: 3.0,
+        idle_timeout: Duration::from_secs(60),
+        max_duration: Duration::from_secs(600),
+    }
+}
+
+fn virtual_daemon() -> Daemon {
+    Daemon::new(ServeConfig { mode: TimeMode::Virtual, ..ServeConfig::default() })
+}
+
+#[test]
+fn daemon_completes_256_concurrent_transfers_under_loss() {
+    const N: u32 = 256;
+    const SIZE: usize = 4096;
+    let mut d = virtual_daemon();
+    // Two shared sockets: every sender tags onto one lossy channel (5%
+    // fragment loss, seeded), every receiver answers on the other end.
+    let (a, b) = mem_pair();
+    let lossy = FragmentLossChannel::new(a, LossTrace::seeded(0.05, 42));
+    let tx = d.add_socket(Box::new(lossy));
+    let rx = d.add_socket(Box::new(b));
+    let tenants: Vec<usize> = (0..4)
+        .map(|i| d.add_tenant(&format!("org-{i}"), u64::MAX, AdmissionPolicy::Queue))
+        .collect();
+    for id in 0..N {
+        let t = tenants[(id % 4) as usize];
+        d.register_receiver(t, rx, id, recv_cfg(), SIZE as u64).unwrap();
+    }
+    for id in 0..N {
+        let t = tenants[(id % 4) as usize];
+        d.register_sender(
+            t,
+            tx,
+            id,
+            sender_cfg(50_000.0, 2_500.0),
+            vec![payload(id, SIZE)],
+            vec![1e-7],
+        )
+        .unwrap();
+    }
+    assert_eq!(d.active_transfers(), 2 * N as usize);
+    assert_eq!(d.queued_transfers(), 0);
+
+    d.run_to_completion().unwrap();
+
+    assert_eq!(d.active_transfers(), 0);
+    let finished = d.take_finished();
+    assert_eq!(finished.len(), 2 * N as usize);
+    let mut received = 0u32;
+    for f in &finished {
+        assert!(
+            f.outcome.is_ok(),
+            "transfer {} on socket {} failed: {:?}",
+            f.id,
+            f.socket,
+            f.outcome
+        );
+        if let TransferOutcome::Received(rep) = &f.outcome {
+            assert_eq!(
+                rep.levels[0].as_deref(),
+                Some(&payload(f.id, SIZE)[..]),
+                "transfer {} bytes differ",
+                f.id
+            );
+            received += 1;
+        }
+    }
+    assert_eq!(received, N, "every registered receiver must complete");
+    for &t in &tenants {
+        assert_eq!(d.tenant_used(t), 0, "budgets must drain with the transfers");
+    }
+    assert_eq!(d.dropped_untagged(), 0);
+    assert_eq!(d.dropped_unknown(), 0);
+}
+
+#[test]
+fn queue_policy_parks_submissions_until_budget_frees() {
+    const SIZE: usize = 8192;
+    let mut d = virtual_daemon();
+    let (a, b) = mem_pair();
+    let tx = d.add_socket(Box::new(a));
+    let rx = d.add_socket(Box::new(b));
+    // The sender tenant fits exactly two in-flight datasets; receivers
+    // ride an unconstrained tenant so only sender admission is at play.
+    let capped = d.add_tenant("capped", 2 * SIZE as u64, AdmissionPolicy::Queue);
+    let sink = d.add_tenant("sink", u64::MAX, AdmissionPolicy::Queue);
+    for id in 0..6u32 {
+        d.register_receiver(sink, rx, id, recv_cfg(), SIZE as u64).unwrap();
+        d.register_sender(
+            capped,
+            tx,
+            id,
+            sender_cfg(50_000.0, 0.0),
+            vec![payload(id, SIZE)],
+            vec![1e-7],
+        )
+        .unwrap();
+    }
+    assert_eq!(d.queued_transfers(), 4, "only two senders fit the budget");
+    assert!(d.tenant_used(capped) <= 2 * SIZE as u64, "budget ceiling breached");
+
+    d.run_to_completion().unwrap();
+
+    assert_eq!(d.queued_transfers(), 0, "queued senders must drain FIFO");
+    let finished = d.take_finished();
+    assert_eq!(finished.len(), 12);
+    for f in &finished {
+        assert!(f.outcome.is_ok(), "transfer {}: {:?}", f.id, f.outcome);
+        if let TransferOutcome::Received(rep) = &f.outcome {
+            assert_eq!(rep.levels[0].as_deref(), Some(&payload(f.id, SIZE)[..]));
+        }
+    }
+    assert_eq!(d.tenant_used(capped), 0);
+}
+
+#[test]
+fn reject_policy_and_routing_guards_error_at_registration() {
+    let mut d = virtual_daemon();
+    let (a, b) = mem_pair();
+    let tx = d.add_socket(Box::new(a));
+    let rx = d.add_socket(Box::new(b));
+    let strict = d.add_tenant("strict", 10_000, AdmissionPolicy::Reject);
+    let cfg = sender_cfg(50_000.0, 0.0);
+    d.register_sender(strict, tx, 1, cfg.clone(), vec![payload(1, 8_000)], vec![1e-7])
+        .unwrap();
+    // Over budget → typed rejection naming the tenant.
+    let err = d
+        .register_sender(strict, tx, 2, cfg.clone(), vec![payload(2, 8_000)], vec![1e-7])
+        .unwrap_err();
+    assert!(format!("{err}").contains("over budget"), "{err}");
+    assert!(format!("{err}").contains("strict"), "{err}");
+    // Duplicate (socket, id) → rejected regardless of budget.
+    let err = d
+        .register_sender(strict, tx, 1, cfg.clone(), vec![payload(1, 16)], vec![1e-7])
+        .unwrap_err();
+    assert!(format!("{err}").contains("already active"), "{err}");
+    // A fragment size that cannot fit under the transfer tag is refused
+    // up front, not silently truncated on the wire.
+    let mut fat = cfg.clone();
+    fat.net.s = 9_200;
+    let err =
+        d.register_sender(strict, tx, 3, fat, vec![payload(3, 16)], vec![1e-7]).unwrap_err();
+    assert!(format!("{err}").contains("payload limit"), "{err}");
+    // Unknown tenant / socket indexes are typed errors too.
+    assert!(d.register_receiver(99, rx, 7, recv_cfg(), 1).is_err());
+    assert!(d.register_receiver(strict, 99, 7, recv_cfg(), 1).is_err());
+}
+
+#[test]
+fn blocking_endpoint_dials_a_real_mode_daemon() {
+    const SIZE: usize = 32_768;
+    let (a, b) = mem_pair();
+    let mut d = Daemon::new(ServeConfig::default()); // Real mode
+    let sock = d.add_socket(Box::new(b));
+    let tenant = d.add_tenant("edge", u64::MAX, AdmissionPolicy::Queue);
+    d.register_receiver(tenant, sock, 7, recv_cfg(), SIZE as u64).unwrap();
+    let daemon = std::thread::spawn(move || {
+        d.run_to_completion().unwrap();
+        d
+    });
+
+    let data = Dataset::new(vec![payload(7, SIZE)], vec![1e-7]).unwrap();
+    let spec = TransferSpec::builder()
+        .contract(Contract::Fidelity(1e-7))
+        .streams(1)
+        .net(NetParams { t: 0.0005, r: 50_000.0, lambda: 0.0, n: 32, s: 1024 })
+        .initial_lambda(0.0)
+        .lambda_window(3.0)
+        .idle_timeout(Duration::from_secs(10))
+        .max_duration(Duration::from_secs(60))
+        .adaptation(AdaptConfig::fixed())
+        .build()
+        .unwrap();
+    let mut transport = ServeTransport::new(a, 7);
+    let summary = Endpoint::new(spec).send(&mut transport, &data, None).unwrap();
+    assert_eq!(summary.data_fragments, (SIZE / 1024) as u64);
+
+    let mut d = daemon.join().unwrap();
+    let finished = d.take_finished();
+    assert_eq!(finished.len(), 1);
+    match &finished[0].outcome {
+        TransferOutcome::Received(rep) => {
+            assert_eq!(rep.levels[0].as_deref(), Some(&data.levels[0][..]));
+        }
+        other => panic!("expected Received, got {other:?}"),
+    }
+}
