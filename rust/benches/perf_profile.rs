@@ -13,6 +13,7 @@
 use janus::coordinator::arena::FtgArena;
 use janus::coordinator::packet::{encode_fragment_into, FragmentHeader, Packet, PacketView};
 use janus::erasure::gf256::MulTable;
+use janus::erasure::kernel;
 use janus::erasure::RsCode;
 use janus::metrics::bench::{bench_scale, time_it, BenchTable};
 use janus::model::{
@@ -236,6 +237,24 @@ fn main() {
             format!("{:.2}", reps as f64 * 4096.0 / secs / 1e9),
         ],
     );
+    // Same kernel on every supported tier (dispatch-once makes the
+    // default row above whatever `best_supported` resolves to; these
+    // rows make scalar/SSSE3/AVX2 deltas attributable).
+    for tier in kernel::supported_tiers() {
+        let (_, secs) = time_it(|| {
+            for _ in 0..reps {
+                t.mul_slice_add_tier(&x, &mut y, tier);
+                std::hint::black_box(&y);
+            }
+        });
+        table.row(
+            format!("gf256 mul_slice_add [{}]", tier.name()),
+            vec![
+                "GB/s".into(),
+                format!("{:.2}", reps as f64 * 4096.0 / secs / 1e9),
+            ],
+        );
+    }
 
     // --- Wire format ---
     let hdr = FragmentHeader { level: 1, stream: 0, ftg: 9, index: 3, k: 28, m: 4, seq: 77, pass: 0 };

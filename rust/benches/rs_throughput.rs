@@ -1,13 +1,117 @@
-//! §5.2.2 — Parity-fragment generation rate `r_ec` vs m.
+//! §5.2.2 — Parity-fragment generation rate `r_ec` vs m, plus the
+//! kernel-tier bandwidth gate (ISSUE 8).
 //!
 //! Paper measurement (liberasurecode, n = 32, 4 096-B fragments):
 //! 319 531 frag/s at m = 1 falling to 41 561 frag/s at m = 16. This bench
 //! produces our codec's curve; the paper's conclusion to reproduce is
 //! r_ec > r_link = 19 144 frag/s for every m, so the link (not encoding)
 //! bounds the transmission rate.
+//!
+//! The second half sweeps the fused strided encode across every kernel
+//! tier the host supports (scalar → SSSE3 → AVX2) and against the
+//! row-at-a-time reference, saving GB/s per (k, m, tier) to
+//! `target/bench-results/BENCH_rs.json` (CI uploads it). Two gates:
+//! fused ≥ 1.3× row-at-a-time on the best SIMD tier, and AVX2 ≥ 2×
+//! scalar at (k=8, m=4). Hosts without the relevant ISA skip (never
+//! fail) the corresponding gate.
 
-use janus::erasure::sweep_ec_rates;
+use janus::erasure::kernel::{self, KernelTier};
+use janus::erasure::{sweep_ec_rates, RsCode};
 use janus::metrics::bench::BenchTable;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Geometries swept by the kernel bench: the gate geometry (8, 4), the
+/// paper's (28, 4), and a deep-parity point (16, 16).
+const GEOMS: [(usize, usize); 3] = [(8, 4), (28, 4), (16, 16)];
+const S: usize = 4096;
+
+/// One measured point of the kernel sweep.
+struct KernelRow {
+    k: usize,
+    m: usize,
+    tier: KernelTier,
+    fused_gbps: f64,
+    rowwise_gbps: f64,
+}
+
+/// Best-of-3 strided-encode source bandwidth (GB/s of data encoded) on
+/// a forced tier; `rowwise` selects the row-at-a-time reference path.
+fn encode_gbps(
+    code: &RsCode,
+    k: usize,
+    m: usize,
+    secs: f64,
+    tier: KernelTier,
+    rowwise: bool,
+) -> f64 {
+    let mut buf = vec![0u8; (k + m) * S];
+    for (i, b) in buf[..k * S].iter_mut().enumerate() {
+        *b = (i * 131 % 251) as u8;
+    }
+    let mut best = 0.0f64;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut bytes = 0u64;
+        loop {
+            if rowwise {
+                code.encode_strided_rowwise(&mut buf, S, tier).expect("encode");
+            } else {
+                code.encode_strided_tier(&mut buf, S, tier).expect("encode");
+            }
+            std::hint::black_box(&buf);
+            bytes += (k * S) as u64;
+            if t0.elapsed().as_secs_f64() >= secs {
+                break;
+            }
+        }
+        best = best.max(bytes as f64 / t0.elapsed().as_secs_f64() / 1e9);
+    }
+    best
+}
+
+/// Save the kernel sweep + gate verdicts as JSON (CI uploads this).
+fn write_rs_json(
+    rows: &[KernelRow],
+    fused_speedup: Option<f64>,
+    avx2_speedup: Option<f64>,
+) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_rs.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"rs_kernels\",")?;
+    writeln!(f, "  \"fragment_size_bytes\": {S},")?;
+    writeln!(f, "  \"best_tier\": \"{}\",", kernel::best_supported().name())?;
+    writeln!(f, "  \"rows\": [")?;
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        writeln!(
+            f,
+            "    {{\"k\": {}, \"m\": {}, \"tier\": \"{}\", \
+             \"fused_gbps\": {:.3}, \"rowwise_gbps\": {:.3}}}{comma}",
+            r.k,
+            r.m,
+            r.tier.name(),
+            r.fused_gbps,
+            r.rowwise_gbps
+        )?;
+    }
+    writeln!(f, "  ],")?;
+    match fused_speedup {
+        Some(v) => writeln!(f, "  \"fused_vs_rowwise\": {v:.3},")?,
+        None => writeln!(f, "  \"fused_vs_rowwise\": null,")?,
+    }
+    match avx2_speedup {
+        Some(v) => writeln!(f, "  \"avx2_vs_scalar\": {v:.3}")?,
+        None => writeln!(f, "  \"avx2_vs_scalar\": null")?,
+    }
+    writeln!(f, "}}")?;
+    println!("[saved {}]", path.display());
+    Ok(path)
+}
 
 fn main() {
     let n = 32;
@@ -31,7 +135,63 @@ fn main() {
             ],
         );
     }
+
+    // --- Kernel-tier sweep (ISSUE 8 gate) ---
+    let tiers = kernel::supported_tiers();
+    let per_point = (secs / 4.0).clamp(0.02, 0.5);
+    let mut rows: Vec<KernelRow> = Vec::new();
+    for &(k, m) in &GEOMS {
+        let code = RsCode::new(k, m).unwrap();
+        for &tier in &tiers {
+            let fused = encode_gbps(&code, k, m, per_point, tier, false);
+            let rowwise = encode_gbps(&code, k, m, per_point, tier, true);
+            table.row(
+                format!("k={k} m={m} {}", tier.name()),
+                vec![
+                    "-".into(),
+                    format!("{fused:.2} GB/s fused"),
+                    format!("{:.2}x vs rowwise", fused / rowwise.max(1e-9)),
+                ],
+            );
+            rows.push(KernelRow { k, m, tier, fused_gbps: fused, rowwise_gbps: rowwise });
+        }
+    }
     table.save().unwrap();
+
+    let best = kernel::best_supported();
+    let gate = |k: usize, m: usize, tier: KernelTier| {
+        rows.iter().find(|r| r.k == k && r.m == m && r.tier == tier)
+    };
+    // Gate 1: fused ≥ 1.3× row-at-a-time on the best SIMD tier at the
+    // gate geometry. Scalar-only hosts skip (fusion saves table reloads
+    // that scalar code never pays for in the same way).
+    let fused_speedup = if best > KernelTier::Scalar {
+        let r = gate(8, 4, best).expect("gate geometry measured");
+        Some(r.fused_gbps / r.rowwise_gbps.max(1e-9))
+    } else {
+        println!("[skip] fused-vs-rowwise gate: no SIMD tier on this host");
+        None
+    };
+    // Gate 2: AVX2 ≥ 2× scalar on the fused encode at (8, 4). Skipped
+    // (not failed) on hosts without AVX2.
+    let avx2_speedup = if best >= KernelTier::Avx2 {
+        let a = gate(8, 4, KernelTier::Avx2).expect("avx2 measured");
+        let s = gate(8, 4, KernelTier::Scalar).expect("scalar measured");
+        Some(a.fused_gbps / s.fused_gbps.max(1e-9))
+    } else {
+        println!("[skip] avx2-vs-scalar gate: AVX2 not supported on this host");
+        None
+    };
+    write_rs_json(&rows, fused_speedup, avx2_speedup).unwrap();
+    if let Some(v) = fused_speedup {
+        assert!(
+            v >= 1.3,
+            "fused multi-row kernel regressed: {v:.2}x vs row-at-a-time (target ≥1.3x)"
+        );
+    }
+    if let Some(v) = avx2_speedup {
+        assert!(v >= 2.0, "AVX2 kernel regressed: {v:.2}x vs scalar (target ≥2x)");
+    }
 
     // Shape checks from the paper's table.
     assert!(

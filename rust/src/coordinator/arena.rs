@@ -191,6 +191,24 @@ impl FtgArena {
         &self.buf
     }
 
+    /// Slice the `k` data slots out of `src` starting at byte `offset`,
+    /// zero-padding slot tails that run past the end of `src`. The
+    /// explicit tail fill makes this correct on *reused* arenas (stale
+    /// bytes from the previous group must not leak into short final
+    /// groups). Shared by the pooled per-stream workers and the sans-IO
+    /// sender — the slicing arithmetic used to be duplicated at each
+    /// call site.
+    pub fn fill_data(&mut self, src: &[u8], offset: usize) {
+        let s = self.s;
+        for i in 0..self.k as usize {
+            let lo = (offset + i * s).min(src.len());
+            let hi = (offset + (i + 1) * s).min(src.len());
+            let slot = self.slot_mut(i);
+            slot[..hi - lo].copy_from_slice(&src[lo..hi]);
+            slot[hi - lo..].fill(0);
+        }
+    }
+
     /// Reed–Solomon-encode the parity slots from the data slots in place
     /// and mark every slot present (the sender's one-allocation path).
     pub fn encode_parity(&mut self, code: &RsCode) -> Result<(), RsError> {
@@ -263,6 +281,25 @@ mod tests {
         a.insert(70, &[0u8; 2]);
         assert_eq!(a.have_data(), 65);
         assert_eq!(a.have_total(), 66);
+    }
+
+    #[test]
+    fn fill_data_slices_pads_and_overwrites_stale_bytes() {
+        let src: Vec<u8> = (0..22u8).collect();
+        let mut a = FtgArena::new(3, 1, 8);
+        // Dirty every slot, as a reused arena would be.
+        a.as_mut_slice().fill(0xEE);
+        a.fill_data(&src, 0);
+        assert_eq!(a.slot(0), &src[0..8]);
+        assert_eq!(a.slot(1), &src[8..16]);
+        assert_eq!(&a.slot(2)[..6], &src[16..22]);
+        assert_eq!(&a.slot(2)[6..], &[0u8; 2], "tail zero-padded, not stale");
+        // Offset past the end: fully zeroed slots.
+        a.as_mut_slice().fill(0xEE);
+        a.fill_data(&src, 100);
+        for i in 0..3 {
+            assert_eq!(a.slot(i), &[0u8; 8], "slot {i}");
+        }
     }
 
     #[test]

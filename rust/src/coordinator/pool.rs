@@ -55,7 +55,7 @@ use super::receiver::ReceiverConfig;
 use super::sender::pace_until;
 use crate::api::observer::{emit, EventSink};
 use crate::api::{Contract, TransferEvent};
-use crate::erasure::RsCode;
+use crate::erasure::{CodingPool, RsCode};
 use crate::model::error_model::{
     optimize_deadline_bitplane, BitplaneDeadlinePlan, ResidualSchedule,
 };
@@ -649,6 +649,14 @@ impl TransferPool {
         let mut rtt = RttEstimator::new(0.02, 0.2);
         let mut virtual_now = 0.0f64;
 
+        // Shared coding pool: parity compute parallelism beyond the
+        // stream count. Output is byte-identical for any worker count
+        // (erasure::par determinism contract), so the thread budget is
+        // pure tuning — clamped to keep streams + coding threads modest.
+        let coding = CodingPool::new(
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(4),
+        );
+
         let mut jobs: Vec<FtgJob> = Vec::new();
         for (li, level) in levels.iter().enumerate().take(send_levels) {
             let limit = limits[li].min(level.len());
@@ -705,6 +713,7 @@ impl TransferPool {
             let pace = Duration::from_secs_f64(1.0 / pace_rate);
             let net = cfg.net;
             let jobs_ref = &jobs;
+            let coding_ref = &coding;
             let sent_counts: Vec<u64> = std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(cfg.streams);
                 for (w, chan) in data.iter_mut().enumerate() {
@@ -713,7 +722,7 @@ impl TransferPool {
                     handles.push(scope.spawn(move || {
                         send_shard(
                             chan, w as u8, pass, shard, jobs_ref, levels, &net, pace, seq0,
-                            events,
+                            coding_ref, events,
                         )
                     }));
                 }
@@ -1363,9 +1372,17 @@ impl TransferPool {
     }
 }
 
+/// Groups a worker encodes ahead of pacing them out: deep enough to
+/// amortize the coding-pool handoff, shallow enough that the look-ahead
+/// working set (`ENC_BATCH · (k+m) · s` bytes) stays cache-friendly.
+const ENC_BATCH: usize = 4;
+
 /// Worker body: RS-encode and pace this stream's share of the pass.
-/// Parity is per-job (`FtgJob::m`), set by the pass's plan. Returns the
-/// number of fragments sent.
+/// Parity is per-job (`FtgJob::m`), set by the pass's plan. Runs of
+/// same-geometry jobs are encoded as one [`RsCode::encode_batch`] on the
+/// shared coding pool, then paced out strictly in job order — wire
+/// bytes and sequence numbers are identical to the old
+/// one-group-at-a-time loop. Returns the number of fragments sent.
 #[allow(clippy::too_many_arguments)]
 fn send_shard<D: Datagram>(
     chan: &mut D,
@@ -1377,53 +1394,64 @@ fn send_shard<D: Datagram>(
     net: &NetParams,
     pace: Duration,
     seq0: u64,
+    coding: &CodingPool,
     events: EventSink<'_>,
 ) -> u64 {
     let s = net.s;
     let mut codes: HashMap<(usize, usize), RsCode> = HashMap::new();
     let mut out = Vec::with_capacity(s + 64);
-    // One strided arena reused across the shard's FTGs: the worker's
-    // steady state allocates nothing per group (the buffer only regrows
-    // when (k+m)·s grows).
-    let mut arena = FtgArena::new(0, 0, s);
+    // A ring of strided arenas reused across the shard's FTGs: the
+    // worker's steady state allocates nothing per group (buffers only
+    // regrow when (k+m)·s grows).
+    let mut arenas: Vec<FtgArena> = (0..ENC_BATCH).map(|_| FtgArena::new(0, 0, s)).collect();
     let mut seq = seq0;
     let mut next_send = Instant::now();
-    for &ji in shard {
-        let job = jobs[ji];
-        let level_bytes = &levels[job.level as usize];
+    let mut i = 0usize;
+    while i < shard.len() {
+        let job0 = jobs[shard[i]];
         // The fragment index is a u8: parity never pushes k + m past 255.
-        let m_eff = (job.m as usize).min(255usize.saturating_sub(job.k));
-        // Slice k data fragments into the arena (zero-padding tails —
-        // the arena is reused, so stale bytes must be overwritten).
-        arena.reset(job.k as u8, m_eff as u8, s);
-        for i in 0..job.k {
-            let lo = (job.offset + i * s).min(level_bytes.len());
-            let hi = (job.offset + (i + 1) * s).min(level_bytes.len());
-            let slot = arena.slot_mut(i);
-            slot[..hi - lo].copy_from_slice(&level_bytes[lo..hi]);
-            slot[hi - lo..].fill(0);
+        let m_eff = (job0.m as usize).min(255usize.saturating_sub(job0.k));
+        // Extend the batch across consecutive jobs sharing (k, m_eff):
+        // one RsCode, one pool dispatch.
+        let mut batch = 1usize;
+        while batch < ENC_BATCH && i + batch < shard.len() {
+            let next = jobs[shard[i + batch]];
+            let next_m = (next.m as usize).min(255usize.saturating_sub(next.k));
+            if next.k != job0.k || next_m != m_eff {
+                break;
+            }
+            batch += 1;
+        }
+        for (b, arena) in arenas.iter_mut().enumerate().take(batch) {
+            let job = jobs[shard[i + b]];
+            arena.reset(job.k as u8, m_eff as u8, s);
+            arena.fill_data(&levels[job.level as usize], job.offset);
         }
         let code = codes
-            .entry((job.k, m_eff))
-            .or_insert_with(|| RsCode::new(job.k, m_eff).expect("valid k,m"));
-        arena.encode_parity(code).expect("encode");
-        for idx in 0..arena.slots() {
-            let hdr = FragmentHeader {
-                level: job.level,
-                stream,
-                ftg: job.ftg,
-                index: idx as u8,
-                k: job.k as u8,
-                m: m_eff as u8,
-                seq,
-                pass,
-            };
-            seq += 1;
-            encode_fragment_into(&hdr, arena.slot(idx), &mut out);
-            pace_until(next_send);
-            next_send = Instant::now().max(next_send) + pace;
-            chan.send(&out);
+            .entry((job0.k, m_eff))
+            .or_insert_with(|| RsCode::new(job0.k, m_eff).expect("valid k,m"));
+        code.encode_batch(coding, &mut arenas[..batch]).expect("encode");
+        for (b, arena) in arenas.iter().enumerate().take(batch) {
+            let job = jobs[shard[i + b]];
+            for idx in 0..arena.slots() {
+                let hdr = FragmentHeader {
+                    level: job.level,
+                    stream,
+                    ftg: job.ftg,
+                    index: idx as u8,
+                    k: job.k as u8,
+                    m: m_eff as u8,
+                    seq,
+                    pass,
+                };
+                seq += 1;
+                encode_fragment_into(&hdr, arena.slot(idx), &mut out);
+                pace_until(next_send);
+                next_send = Instant::now().max(next_send) + pace;
+                chan.send(&out);
+            }
         }
+        i += batch;
     }
     let sent = seq - seq0;
     // Announce this stream's pass total on the data path (FIFO after the

@@ -41,5 +41,5 @@ pub mod receiver;
 pub mod sender;
 
 pub use driver::{drive_receiver, drive_sender};
-pub use receiver::ReceiverMachine;
-pub use sender::SenderMachine;
+pub use receiver::{DecodeJob, ReceiverMachine};
+pub use sender::{EncodeJob, SenderMachine};

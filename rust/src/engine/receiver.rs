@@ -25,8 +25,33 @@ use std::time::Instant;
 enum State {
     AwaitManifest,
     Receiving,
+    /// Transfer is over on the wire; reconstruction is running
+    /// off-machine as a [`DecodeJob`] (coding offload only).
+    Decoding,
     Finished,
     Failed,
+}
+
+/// Reconstruction work split out of the machine so a host can run it
+/// off-thread: take it with [`ReceiverMachine::take_decode_job`], call
+/// [`DecodeJob::run`] anywhere (it owns the manifest, group arenas and
+/// decode caches), and hand it back via
+/// [`ReceiverMachine::complete_decode_job`] to finalize the report.
+pub struct DecodeJob {
+    manifest: Manifest,
+    groups: HashMap<(u8, u32), FtgArena>,
+    codes: HashMap<(u8, u8), RsCode>,
+    s: usize,
+    finished_at: Instant,
+    out: Option<(Vec<Option<Vec<u8>>>, u64)>,
+}
+
+impl DecodeJob {
+    /// Reconstruct every level (the CPU-heavy part).
+    pub fn run(&mut self) {
+        self.out =
+            Some(reconstruct_levels(&self.manifest, &self.groups, self.s, &mut self.codes, None));
+    }
 }
 
 /// Poll-driven single-stream receiver. See the [`crate::engine`] module
@@ -49,6 +74,11 @@ pub struct ReceiverMachine {
     window_first_seq: Option<u64>,
     window_max_seq: u64,
     last_packet: Instant,
+    // Coding offload (serve daemon): when enabled, final reconstruction
+    // runs off-machine as a `DecodeJob` instead of inline in `finish`.
+    coding_offload: bool,
+    pending_decode: Option<DecodeJob>,
+    decode_inflight: bool,
     report: ReceiverReport,
     error: Option<String>,
 }
@@ -72,6 +102,9 @@ impl ReceiverMachine {
             window_first_seq: None,
             window_max_seq: 0,
             last_packet: now,
+            coding_offload: false,
+            pending_decode: None,
+            decode_inflight: false,
             report: ReceiverReport {
                 levels: Vec::new(),
                 achieved_eps: 1.0,
@@ -174,7 +207,7 @@ impl ReceiverMachine {
                     _ => {}
                 }
             }
-            State::Finished | State::Failed => {}
+            State::Decoding | State::Finished | State::Failed => {}
         }
     }
 
@@ -199,8 +232,49 @@ impl ReceiverMachine {
                 (self.last_packet + self.cfg.idle_timeout)
                     .min(self.start + self.cfg.max_duration),
             ),
+            // Awaiting the off-machine decode: the wire is quiet, so the
+            // idle timer no longer applies — only the hard deadline.
+            State::Decoding => Some(self.start + self.cfg.max_duration),
             State::Finished | State::Failed => None,
         }
+    }
+
+    /// Route final reconstruction through the caller: when enabled,
+    /// end-of-transfer decode parks a [`DecodeJob`] for
+    /// [`Self::take_decode_job`] instead of running inline; the report
+    /// finalizes once [`Self::complete_decode_job`] hands it back.
+    pub fn set_coding_offload(&mut self, on: bool) {
+        self.coding_offload = on;
+    }
+
+    /// Take the parked decode job, if any (marks it in flight).
+    pub fn take_decode_job(&mut self) -> Option<DecodeJob> {
+        let job = self.pending_decode.take();
+        if job.is_some() {
+            self.decode_inflight = true;
+        }
+        job
+    }
+
+    /// Return a completed decode job and finalize the report. The
+    /// transfer's duration anchors at the instant the wire went quiet
+    /// (not at job completion), matching the inline path. Dropped if a
+    /// racing failure deadline already killed the machine.
+    pub fn complete_decode_job(&mut self, job: DecodeJob) {
+        self.decode_inflight = false;
+        if !matches!(self.state, State::Decoding) {
+            return;
+        }
+        let DecodeJob { manifest, finished_at, out, .. } = job;
+        let (levels, recovered) = out.expect("decode job was run");
+        self.report.levels = levels;
+        self.report.groups_recovered = recovered;
+        let prefix = usable_prefix(&manifest, &self.report.levels);
+        self.report.levels_recovered = prefix;
+        self.report.achieved_eps = if prefix == 0 { 1.0 } else { manifest.levels[prefix - 1].eps };
+        self.report.duration = finished_at.saturating_duration_since(self.start).as_secs_f64();
+        self.manifest = Some(manifest);
+        self.state = State::Finished;
     }
 
     /// Enforce the idle/max-duration failure deadlines. Spurious calls
@@ -221,6 +295,11 @@ impl ReceiverMachine {
                     self.fail("receiver exceeded max duration");
                 } else if idle {
                     self.fail("receiver: sender went silent");
+                }
+            }
+            State::Decoding => {
+                if over_max {
+                    self.fail("receiver exceeded max duration during decode");
                 }
             }
             State::Finished | State::Failed => {}
@@ -254,6 +333,20 @@ impl ReceiverMachine {
 
     fn finish(&mut self, now: Instant) {
         let manifest = self.manifest.take().expect("manifest set");
+        if self.coding_offload {
+            // Park reconstruction for the host; the queued Done/LostList
+            // control datagrams still drain through `poll_transmit`.
+            self.pending_decode = Some(DecodeJob {
+                manifest,
+                groups: std::mem::take(&mut self.groups),
+                codes: std::mem::take(&mut self.codes),
+                s: self.s,
+                finished_at: now,
+                out: None,
+            });
+            self.state = State::Decoding;
+            return;
+        }
         let (levels, recovered) =
             reconstruct_levels(&manifest, &self.groups, self.s, &mut self.codes, None);
         self.report.levels = levels;

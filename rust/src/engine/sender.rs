@@ -22,6 +22,7 @@ use crate::model::time_model::optimize_parity;
 use crate::util::err::Result;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Manifest handshake cadence (blocking engine: 50 tries × 100 ms).
@@ -37,6 +38,24 @@ struct StoredFtg {
     k: u8,
     m: u8,
     arena: FtgArena,
+}
+
+/// Parity work split out of the machine so a host can run it
+/// off-thread: take it with [`SenderMachine::take_encode_job`], call
+/// [`EncodeJob::run`] anywhere (it owns all its data), and hand it back
+/// via [`SenderMachine::complete_encode_job`]. The machine emits no
+/// fragments for the group until the job returns, so wire bytes are
+/// identical to the inline path regardless of where `run` executes.
+pub struct EncodeJob {
+    ftg: StoredFtg,
+    code: Arc<RsCode>,
+}
+
+impl EncodeJob {
+    /// Compute the group's parity slots (the CPU-heavy part).
+    pub fn run(&mut self) {
+        self.ftg.arena.encode_parity(&self.code).expect("encode");
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -76,7 +95,12 @@ pub struct SenderMachine {
     frag_counter: u64,
     current: Option<StoredFtg>,
     slot: usize,
-    codes: HashMap<(usize, usize), RsCode>,
+    codes: HashMap<(usize, usize), Arc<RsCode>>,
+    // Coding offload (serve daemon): when enabled, pass-0 parity runs
+    // off-machine as `EncodeJob`s instead of inline in `next_group`.
+    coding_offload: bool,
+    pending_encode: Option<EncodeJob>,
+    encode_inflight: bool,
     current_m: usize,
     lambda: f64,
     lambda_dirty: bool,
@@ -219,6 +243,9 @@ impl SenderMachine {
             current: None,
             slot: 0,
             codes: HashMap::new(),
+            coding_offload: false,
+            pending_encode: None,
+            encode_inflight: false,
             current_m,
             lambda: cfg.initial_lambda,
             lambda_dirty: false,
@@ -312,6 +339,19 @@ impl SenderMachine {
                     return false;
                 }
                 if self.current.is_none() {
+                    if self.coding_offload {
+                        if self.pending_encode.is_none() && !self.encode_inflight {
+                            self.prepare_encode_job(now);
+                            if !matches!(self.state, State::Sending) {
+                                // Pass 0 exhausted → the barrier's
+                                // EndOfPass is due immediately.
+                                return self.poll_transmit(out, now);
+                            }
+                        }
+                        // Parity is computing off-machine: nothing to
+                        // send until `complete_encode_job`.
+                        return false;
+                    }
                     self.next_group(now);
                     if !matches!(self.state, State::Sending) {
                         // Pass 0 exhausted → the barrier's EndOfPass is
@@ -417,10 +457,54 @@ impl SenderMachine {
         let hard = self.start + self.cfg.max_duration;
         let at = match self.state {
             State::SendManifest { next_at, .. } | State::Barrier { next_at, .. } => next_at,
-            State::Sending | State::Retransmit => self.next_send,
+            State::Sending | State::Retransmit => {
+                if self.awaiting_coding() {
+                    // Nothing is due until the host returns the parity
+                    // job — only the hard deadline gates time (keeps
+                    // the event loop from spinning on a stale pace).
+                    return Some(hard);
+                }
+                self.next_send
+            }
             State::Finished | State::Failed => return None,
         };
         Some(at.min(hard))
+    }
+
+    /// Route pass-0 parity through the caller: when enabled,
+    /// [`Self::poll_transmit`] stops encoding inline and instead parks
+    /// an [`EncodeJob`] for [`Self::take_encode_job`]; transmission
+    /// resumes once [`Self::complete_encode_job`] hands it back.
+    pub fn set_coding_offload(&mut self, on: bool) {
+        self.coding_offload = on;
+    }
+
+    /// Take the parked parity job, if any (marks it in flight).
+    pub fn take_encode_job(&mut self) -> Option<EncodeJob> {
+        let job = self.pending_encode.take();
+        if job.is_some() {
+            self.encode_inflight = true;
+        }
+        job
+    }
+
+    /// Return a completed parity job. The group is dropped (not an
+    /// error) if the transfer left pass 0 while the job was in flight —
+    /// a racing `Done` wins.
+    pub fn complete_encode_job(&mut self, job: EncodeJob) {
+        self.encode_inflight = false;
+        if matches!(self.state, State::Sending) {
+            self.current = Some(job.ftg);
+            self.slot = 0;
+        }
+    }
+
+    /// Is transmission blocked on an off-machine parity job?
+    fn awaiting_coding(&self) -> bool {
+        matches!(self.state, State::Sending)
+            && self.coding_offload
+            && self.current.is_none()
+            && (self.pending_encode.is_some() || self.encode_inflight)
     }
 
     /// Act on elapsed time: enforces the max-duration failure deadline.
@@ -509,11 +593,12 @@ impl SenderMachine {
         }
     }
 
-    /// Encode the next FTG of pass 0 (lazy parity generation) or enter
-    /// the barrier when the plan is exhausted. Mirrors the blocking
-    /// parity thread: λ̂ re-solves happen at group boundaries, geometry
-    /// stays frozen at the manifest's m0.
-    fn next_group(&mut self, now: Instant) {
+    /// Advance the pass-0 cursor and slice the next FTG's data slots
+    /// into a fresh arena (parity slots still zero). `None` means the
+    /// plan is exhausted and the machine entered the barrier. Mirrors
+    /// the blocking parity thread: λ̂ re-solves happen at group
+    /// boundaries, geometry stays frozen at the manifest's m0.
+    fn build_group(&mut self, now: Instant) -> Option<(StoredFtg, Arc<RsCode>)> {
         while self.li < self.send_levels && self.remaining == 0 {
             self.li += 1;
             if self.li < self.send_levels {
@@ -524,7 +609,7 @@ impl SenderMachine {
         }
         if self.li >= self.send_levels {
             self.enter_barrier(now);
-            return;
+            return None;
         }
         if self.lambda_dirty {
             self.lambda_dirty = false;
@@ -549,29 +634,46 @@ impl SenderMachine {
             .saturating_sub(self.manifest_m0[self.li] as usize)
             .max(1)
             .min(self.remaining.div_ceil(s).max(1));
-        let code =
-            self.codes.entry((k, m)).or_insert_with(|| RsCode::new(k, m).expect("valid k,m"));
+        let code = self
+            .codes
+            .entry((k, m))
+            .or_insert_with(|| Arc::new(RsCode::new(k, m).expect("valid k,m")))
+            .clone();
         let mut arena = FtgArena::new(k as u8, m as u8, s);
         let limit = self.limits[self.li].min(self.levels[self.li].len());
-        let level_bytes = &self.levels[self.li];
-        for i in 0..k {
-            let lo = self.offset.min(limit);
-            let hi = (self.offset + s).min(limit);
-            arena.slot_mut(i)[..hi - lo].copy_from_slice(&level_bytes[lo..hi]);
-            self.offset += s;
-            self.remaining = self.remaining.saturating_sub(s);
-        }
-        arena.encode_parity(code).expect("encode");
+        arena.fill_data(&self.levels[self.li][..limit], self.offset);
+        self.offset += k * s;
+        self.remaining = self.remaining.saturating_sub(k * s);
         self.frag_counter += arena.slots() as u64;
-        self.current = Some(StoredFtg {
+        let ftg = StoredFtg {
             level: self.li as u8,
             ftg: self.ftg_id,
             k: k as u8,
             m: m as u8,
             arena,
-        });
-        self.slot = 0;
+        };
         self.ftg_id += 1;
+        Some((ftg, code))
+    }
+
+    /// Encode the next FTG of pass 0 inline (lazy parity generation) or
+    /// enter the barrier when the plan is exhausted.
+    fn next_group(&mut self, now: Instant) {
+        let Some((mut ftg, code)) = self.build_group(now) else {
+            return;
+        };
+        ftg.arena.encode_parity(&code).expect("encode");
+        self.current = Some(ftg);
+        self.slot = 0;
+    }
+
+    /// Offload variant of [`Self::next_group`]: park the data-filled
+    /// group as an [`EncodeJob`] instead of encoding inline.
+    fn prepare_encode_job(&mut self, now: Instant) {
+        let Some((ftg, code)) = self.build_group(now) else {
+            return;
+        };
+        self.pending_encode = Some(EncodeJob { ftg, code });
     }
 
     /// Barrier resolved with a lost list: finish if it is empty, else

@@ -10,6 +10,14 @@
 //!    table per constant, applied over byte slices. This is the encode/
 //!    decode inner loop; it avoids the log/exp double lookup and the
 //!    branch on zero, and vectorizes well.
+//!
+//! Kernel tiers (scalar / SSSE3 `pshufb` / AVX2 `vpshufb`) are resolved
+//! exactly once per process by [`crate::erasure::kernel::active`]; the
+//! slice kernels here dispatch on that cached tier — no per-call feature
+//! detection. The `*_tier` variants force a tier (clamped to CPU
+//! support) for tests and benches.
+
+use super::kernel;
 
 /// Primitive polynomial x^8+x^4+x^3+x^2+1 (0x11D) reduced to 8 bits.
 const POLY: u32 = 0x11D;
@@ -104,8 +112,8 @@ pub fn pow(a: u8, n: u64) -> u8 {
 /// byte, no branches, friendly to auto-vectorization.
 #[derive(Clone)]
 pub struct MulTable {
-    lo: [u8; 16],
-    hi: [u8; 16],
+    pub(crate) lo: [u8; 16],
+    pub(crate) hi: [u8; 16],
 }
 
 impl MulTable {
@@ -121,21 +129,30 @@ impl MulTable {
 
     /// y[i] ^= c * x[i] over slices.
     ///
-    /// Hot loop of Reed–Solomon encode/decode. On x86-64 with SSSE3 the
-    /// split-nibble tables map directly onto `pshufb` (16 parallel table
+    /// Hot loop of Reed–Solomon encode/decode. On x86-64 the split-nibble
+    /// tables map directly onto `pshufb`/`vpshufb` (16/32 parallel table
     /// lookups per instruction — the ISA-L/liberasurecode technique the
-    /// paper's `r_ec` numbers come from); elsewhere a scalar loop.
+    /// paper's `r_ec` numbers come from); elsewhere a scalar loop. The
+    /// tier comes from the process-wide dispatch cache
+    /// ([`kernel::active`]) — resolved once, branched on here.
     #[inline]
     pub fn mul_slice_add(&self, x: &[u8], y: &mut [u8]) {
+        self.mul_slice_add_tier(x, y, kernel::active());
+    }
+
+    /// [`MulTable::mul_slice_add`] on a forced kernel tier (clamped to
+    /// what the CPU supports) — lets tests and benches sweep every tier
+    /// in one process.
+    #[inline]
+    pub fn mul_slice_add_tier(&self, x: &[u8], y: &mut [u8], tier: kernel::KernelTier) {
         debug_assert_eq!(x.len(), y.len());
-        #[cfg(target_arch = "x86_64")]
-        {
-            if is_x86_feature_detected!("ssse3") {
-                unsafe { self.mul_slice_add_ssse3(x, y) };
-                return;
-            }
+        match tier.clamp() {
+            #[cfg(target_arch = "x86_64")]
+            kernel::KernelTier::Avx2 => unsafe { self.mul_slice_add_avx2(x, y) },
+            #[cfg(target_arch = "x86_64")]
+            kernel::KernelTier::Ssse3 => unsafe { self.mul_slice_add_ssse3(x, y) },
+            _ => self.mul_slice_add_scalar(x, y),
         }
-        self.mul_slice_add_scalar(x, y);
     }
 
     #[inline]
@@ -170,20 +187,57 @@ impl MulTable {
         self.mul_slice_add_scalar(&x[done..], &mut y[done..]);
     }
 
+    /// 32-byte AVX2 accumulate kernel: the two 16-entry nibble tables are
+    /// broadcast to both 128-bit lanes (`vpshufb` shuffles per lane, so
+    /// the broadcast is exactly the duplicated lookup table it needs);
+    /// the sub-32-byte tail reuses the SSSE3 kernel (AVX2 implies SSSE3).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_slice_add_avx2(&self, x: &[u8], y: &mut [u8]) {
+        use std::arch::x86_64::*;
+        let lo_tbl =
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.lo.as_ptr() as *const __m128i));
+        let hi_tbl =
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.hi.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0F);
+        let chunks = x.len() / 32;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..chunks {
+            let xv = _mm256_loadu_si256(xp.add(i * 32) as *const __m256i);
+            let lo_idx = _mm256_and_si256(xv, mask);
+            let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(lo_tbl, lo_idx),
+                _mm256_shuffle_epi8(hi_tbl, hi_idx),
+            );
+            let yv = _mm256_loadu_si256(yp.add(i * 32) as *const __m256i);
+            _mm256_storeu_si256(yp.add(i * 32) as *mut __m256i, _mm256_xor_si256(yv, prod));
+        }
+        let done = chunks * 32;
+        self.mul_slice_add_ssse3(&x[done..], &mut y[done..]);
+    }
+
     /// y[i] = c * x[i] over slices — overwrites `y`, no pre-zeroing
     /// needed (write-once kernel; pairs with [`MulTable::mul_slice_add`]
     /// so decode accumulation never double-touches the output).
     #[inline]
     pub fn mul_slice(&self, x: &[u8], y: &mut [u8]) {
+        self.mul_slice_tier(x, y, kernel::active());
+    }
+
+    /// [`MulTable::mul_slice`] on a forced kernel tier (clamped to what
+    /// the CPU supports).
+    #[inline]
+    pub fn mul_slice_tier(&self, x: &[u8], y: &mut [u8], tier: kernel::KernelTier) {
         debug_assert_eq!(x.len(), y.len());
-        #[cfg(target_arch = "x86_64")]
-        {
-            if is_x86_feature_detected!("ssse3") {
-                unsafe { self.mul_slice_set_ssse3(x, y) };
-                return;
-            }
+        match tier.clamp() {
+            #[cfg(target_arch = "x86_64")]
+            kernel::KernelTier::Avx2 => unsafe { self.mul_slice_set_avx2(x, y) },
+            #[cfg(target_arch = "x86_64")]
+            kernel::KernelTier::Ssse3 => unsafe { self.mul_slice_set_ssse3(x, y) },
+            _ => self.mul_slice_set_scalar(x, y),
         }
-        self.mul_slice_set_scalar(x, y);
     }
 
     #[inline]
@@ -215,6 +269,34 @@ impl MulTable {
         }
         let done = chunks * 16;
         self.mul_slice_set_scalar(&x[done..], &mut y[done..]);
+    }
+
+    /// 32-byte AVX2 write-once kernel (same shape as the accumulate
+    /// variant above, minus the output load/xor).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_slice_set_avx2(&self, x: &[u8], y: &mut [u8]) {
+        use std::arch::x86_64::*;
+        let lo_tbl =
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.lo.as_ptr() as *const __m128i));
+        let hi_tbl =
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.hi.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0F);
+        let chunks = x.len() / 32;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..chunks {
+            let xv = _mm256_loadu_si256(xp.add(i * 32) as *const __m256i);
+            let lo_idx = _mm256_and_si256(xv, mask);
+            let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(lo_tbl, lo_idx),
+                _mm256_shuffle_epi8(hi_tbl, hi_idx),
+            );
+            _mm256_storeu_si256(yp.add(i * 32) as *mut __m256i, prod);
+        }
+        let done = chunks * 32;
+        self.mul_slice_set_ssse3(&x[done..], &mut y[done..]);
     }
 }
 
@@ -332,6 +414,29 @@ mod tests {
         assert_eq!(y, [0, 0, 0, 0]);
         mul_slice_add(1, &x, &mut y);
         assert_eq!(y, x);
+    }
+
+    #[test]
+    fn slice_kernels_agree_across_tiers() {
+        use crate::erasure::kernel::{supported_tiers, KernelTier};
+        for c in [0u8, 1, 0x8E, 0xFF] {
+            let t = MulTable::new(c);
+            for len in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 100] {
+                let x: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+                let mut want = vec![0u8; len];
+                t.mul_slice_tier(&x, &mut want, KernelTier::Scalar);
+                let mut acc_want = x.clone();
+                t.mul_slice_add_tier(&x, &mut acc_want, KernelTier::Scalar);
+                for tier in supported_tiers() {
+                    let mut got = vec![0xEEu8; len];
+                    t.mul_slice_tier(&x, &mut got, tier);
+                    assert_eq!(got, want, "set c={c} len={len} tier={tier}");
+                    let mut acc_got = x.clone();
+                    t.mul_slice_add_tier(&x, &mut acc_got, tier);
+                    assert_eq!(acc_got, acc_want, "add c={c} len={len} tier={tier}");
+                }
+            }
+        }
     }
 
     #[test]

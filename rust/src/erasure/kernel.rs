@@ -1,0 +1,622 @@
+//! Crate-wide GF(256) kernel dispatch and fused multi-row coding kernels.
+//!
+//! Two jobs (DESIGN.md §11):
+//!
+//! 1. **Dispatch-once tier selection.** CPU features are resolved exactly
+//!    once per process into a [`KernelTier`] ([`active`], a `OnceLock`) —
+//!    the per-call `is_x86_feature_detected!` that used to sit inside
+//!    every `mul_slice*` is gone from the hot path. The env override
+//!    `JANUS_GF_KERNEL=scalar|ssse3|avx2|auto` forces a tier for tests
+//!    and CI lanes; a request the CPU cannot honor is clamped down to the
+//!    best supported tier, never up.
+//!
+//! 2. **Fused multi-row kernels.** [`mul_matrix_strided`] / [`mul_matrix`]
+//!    apply *all* output rows of a coefficient matrix to each source
+//!    fragment while the source chunk is hot in registers (the ISA-L
+//!    `gf_vect_mad` shape): per 16/32-byte chunk the two nibble indices
+//!    are computed once and reused across a band of up to [`BAND`] output
+//!    rows, so every source byte is loaded (and its nibbles extracted)
+//!    once per band instead of once per parity row. Outputs are
+//!    write-once: the first source term overwrites, later terms
+//!    accumulate — callers never pre-zero.
+//!
+//! Safety argument for the `unsafe` blocks: the SIMD paths are only
+//! reachable after `is_x86_feature_detected!` has confirmed the feature
+//! (clamping), every pointer handed to [`mul_matrix_raw`] is derived from
+//! a live slice of at least `len` bytes, sources and outputs come from
+//! disjoint borrows (`&[u8]` vs `&mut [u8]`, or `split_at_mut` halves),
+//! and the vector loops stop at `len / width` with a scalar tail — no
+//! read or write ever crosses `len`. All tiers compute the identical
+//! bytes (exact field arithmetic), asserted tier-against-tier by
+//! `rust/tests/erasure_props.rs`.
+
+use super::gf256::MulTable;
+use std::sync::OnceLock;
+
+/// A GF(256) kernel implementation tier, in increasing order of width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelTier {
+    /// Portable split-nibble table loop (any CPU).
+    Scalar,
+    /// 16-byte `pshufb` nibble lookups (x86-64 SSSE3).
+    Ssse3,
+    /// 32-byte `vpshufb` nibble lookups (x86-64 AVX2).
+    Avx2,
+}
+
+impl KernelTier {
+    /// Stable lower-case name (matches the `JANUS_GF_KERNEL` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Ssse3 => "ssse3",
+            KernelTier::Avx2 => "avx2",
+        }
+    }
+
+    /// This tier, lowered to the best the CPU actually supports.
+    #[inline]
+    pub fn clamp(self) -> KernelTier {
+        self.min(best_supported())
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Best tier this CPU supports (`is_x86_feature_detected!` caches the
+/// CPUID result internally; this is cheap but not free — hot paths go
+/// through [`active`] instead).
+pub fn best_supported() -> KernelTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelTier::Avx2;
+        }
+        if is_x86_feature_detected!("ssse3") {
+            return KernelTier::Ssse3;
+        }
+    }
+    KernelTier::Scalar
+}
+
+/// Every tier this CPU can run, ascending (always starts with Scalar).
+pub fn supported_tiers() -> Vec<KernelTier> {
+    let mut tiers = vec![KernelTier::Scalar];
+    if best_supported() >= KernelTier::Ssse3 {
+        tiers.push(KernelTier::Ssse3);
+    }
+    if best_supported() >= KernelTier::Avx2 {
+        tiers.push(KernelTier::Avx2);
+    }
+    tiers
+}
+
+static ACTIVE: OnceLock<KernelTier> = OnceLock::new();
+
+/// The process-wide kernel tier, resolved exactly once: CPU detection,
+/// overridden by `JANUS_GF_KERNEL=scalar|ssse3|avx2` (an unsupported or
+/// unknown value, or `auto`, falls back to CPU-best). All dispatching
+/// call sites branch on this cached value — no feature detection in any
+/// per-call path.
+pub fn active() -> KernelTier {
+    *ACTIVE.get_or_init(|| {
+        let req = match std::env::var("JANUS_GF_KERNEL") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "scalar" => Some(KernelTier::Scalar),
+                "ssse3" => Some(KernelTier::Ssse3),
+                "avx2" => Some(KernelTier::Avx2),
+                _ => None,
+            },
+            Err(_) => None,
+        };
+        req.unwrap_or_else(best_supported).clamp()
+    })
+}
+
+/// Output rows fused per band: four accumulator/table-pair sets fit the
+/// 16 architectural vector registers alongside the source chunk and the
+/// nibble mask without spilling.
+pub const BAND: usize = 4;
+
+/// Fused matrix-vector product over equal-length byte fragments:
+/// `outs[p] = Σ_j tables[p][j] · srcs[j]` (write-once — no pre-zeroing
+/// of `outs` required; with no sources the outputs are zeroed).
+///
+/// Uses the process-wide tier ([`active`]).
+pub fn mul_matrix(tables: &[Vec<MulTable>], srcs: &[&[u8]], outs: &mut [&mut [u8]]) {
+    mul_matrix_tier(tables, srcs, outs, active());
+}
+
+/// [`mul_matrix`] on a forced tier (clamped to CPU support) — the
+/// tier-sweeping entry point for tests and benches.
+pub fn mul_matrix_tier(
+    tables: &[Vec<MulTable>],
+    srcs: &[&[u8]],
+    outs: &mut [&mut [u8]],
+    tier: KernelTier,
+) {
+    let m = outs.len();
+    assert_eq!(tables.len(), m, "one table row per output");
+    if m == 0 {
+        return;
+    }
+    if srcs.is_empty() {
+        for out in outs.iter_mut() {
+            out.fill(0);
+        }
+        return;
+    }
+    let len = outs[0].len();
+    for src in srcs {
+        assert_eq!(src.len(), len, "source length mismatch");
+    }
+    for out in outs.iter() {
+        assert_eq!(out.len(), len, "output length mismatch");
+    }
+    for row in tables {
+        assert!(row.len() >= srcs.len(), "table row shorter than sources");
+    }
+    assert!(srcs.len() <= 256 && m <= 256, "GF(256) codes have n <= 256");
+    let mut sp = [std::ptr::null::<u8>(); 256];
+    let mut op = [std::ptr::null_mut::<u8>(); 256];
+    for (j, src) in srcs.iter().enumerate() {
+        sp[j] = src.as_ptr();
+    }
+    for (p, out) in outs.iter_mut().enumerate() {
+        op[p] = out.as_mut_ptr();
+    }
+    // SAFETY: every pointer covers `len` bytes of a live slice; `srcs`
+    // and `outs` are disjoint by borrow rules; tier is clamped.
+    unsafe { mul_matrix_raw(tables, &sp[..srcs.len()], &op[..m], len, tier.clamp()) }
+}
+
+/// Fused product from referenced sources into one contiguous strided
+/// output: `out[p·len..(p+1)·len] = Σ_j tables[p][j] · srcs[j]` for
+/// `p < tables.len()`, write-once. The decode shape: survivors live in
+/// scattered fragments, the reconstruction lands in one strided buffer.
+/// Allocation-free.
+pub fn mul_matrix_into_strided_tier(
+    tables: &[Vec<MulTable>],
+    srcs: &[&[u8]],
+    out: &mut [u8],
+    len: usize,
+    tier: KernelTier,
+) {
+    let m = tables.len();
+    assert_eq!(out.len(), m * len, "output must hold tables.len() rows of len bytes");
+    if m == 0 {
+        return;
+    }
+    if srcs.is_empty() {
+        out.fill(0);
+        return;
+    }
+    for src in srcs {
+        assert_eq!(src.len(), len, "source length mismatch");
+    }
+    for row in tables {
+        assert!(row.len() >= srcs.len(), "table row shorter than sources");
+    }
+    assert!(srcs.len() <= 256 && m <= 256, "GF(256) codes have n <= 256");
+    if len == 0 {
+        return;
+    }
+    let mut sp = [std::ptr::null::<u8>(); 256];
+    let mut op = [std::ptr::null_mut::<u8>(); 256];
+    for (j, src) in srcs.iter().enumerate() {
+        sp[j] = src.as_ptr();
+    }
+    let out_base = out.as_mut_ptr();
+    for (p, slot) in op.iter_mut().enumerate().take(m) {
+        *slot = out_base.wrapping_add(p * len);
+    }
+    // SAFETY: `out` holds m·len bytes (asserted), so the row windows are
+    // disjoint and in-bounds; `srcs` are live shared borrows disjoint
+    // from the `out` mutable borrow; tier is clamped.
+    unsafe { mul_matrix_raw(tables, &sp[..srcs.len()], &op[..m], len, tier.clamp()) }
+}
+
+/// Variant of [`mul_matrix`] writing into owned `Vec<u8>` outputs (the
+/// `encode_into` shape) without collecting a slice of references —
+/// keeps that path allocation-free. Every output must already have the
+/// sources' length.
+pub fn mul_matrix_into_vecs_tier(
+    tables: &[Vec<MulTable>],
+    srcs: &[&[u8]],
+    outs: &mut [Vec<u8>],
+    tier: KernelTier,
+) {
+    let m = outs.len();
+    assert_eq!(tables.len(), m, "one table row per output");
+    if m == 0 {
+        return;
+    }
+    if srcs.is_empty() {
+        for out in outs.iter_mut() {
+            out.fill(0);
+        }
+        return;
+    }
+    let len = srcs[0].len();
+    for src in srcs {
+        assert_eq!(src.len(), len, "source length mismatch");
+    }
+    for out in outs.iter() {
+        assert_eq!(out.len(), len, "output length mismatch");
+    }
+    for row in tables {
+        assert!(row.len() >= srcs.len(), "table row shorter than sources");
+    }
+    assert!(srcs.len() <= 256 && m <= 256, "GF(256) codes have n <= 256");
+    let mut sp = [std::ptr::null::<u8>(); 256];
+    let mut op = [std::ptr::null_mut::<u8>(); 256];
+    for (j, src) in srcs.iter().enumerate() {
+        sp[j] = src.as_ptr();
+    }
+    for (p, out) in outs.iter_mut().enumerate() {
+        op[p] = out.as_mut_ptr();
+    }
+    // SAFETY: each output Vec holds `len` bytes (asserted); distinct
+    // Vecs never alias, nor do they alias the shared `srcs` borrows;
+    // tier is clamped.
+    unsafe { mul_matrix_raw(tables, &sp[..srcs.len()], &op[..m], len, tier.clamp()) }
+}
+
+/// Fused strided encode over an arena-layout buffer: `buf` holds `k`
+/// source fragments followed by `tables.len()` output fragments, each
+/// `stride` bytes. Computes `out[p] = Σ_j tables[p][j] · data[j]`
+/// write-once (the output region is never pre-zeroed, and is fully
+/// overwritten). Allocation-free — the pointer gather lives on the
+/// stack, which is what keeps `encode_strided` on the sender's
+/// zero-allocation datapath (`rust/tests/alloc_datapath.rs`).
+pub fn mul_matrix_strided(tables: &[Vec<MulTable>], buf: &mut [u8], k: usize, stride: usize) {
+    mul_matrix_strided_tier(tables, buf, k, stride, active());
+}
+
+/// [`mul_matrix_strided`] on a forced tier (clamped to CPU support).
+pub fn mul_matrix_strided_tier(
+    tables: &[Vec<MulTable>],
+    buf: &mut [u8],
+    k: usize,
+    stride: usize,
+    tier: KernelTier,
+) {
+    let m = tables.len();
+    assert!(buf.len() >= (k + m) * stride, "buffer shorter than (k+m)·stride");
+    assert!(k <= 256 && m <= 256, "GF(256) codes have n <= 256");
+    if m == 0 || stride == 0 {
+        return;
+    }
+    let (data, parity) = buf.split_at_mut(k * stride);
+    if k == 0 {
+        parity[..m * stride].fill(0);
+        return;
+    }
+    for row in tables {
+        assert!(row.len() >= k, "table row shorter than sources");
+    }
+    let mut sp = [std::ptr::null::<u8>(); 256];
+    let mut op = [std::ptr::null_mut::<u8>(); 256];
+    let data_base = data.as_ptr();
+    let parity_base = parity.as_mut_ptr();
+    for (j, slot) in sp.iter_mut().enumerate().take(k) {
+        *slot = data_base.wrapping_add(j * stride);
+    }
+    for (p, slot) in op.iter_mut().enumerate().take(m) {
+        *slot = parity_base.wrapping_add(p * stride);
+    }
+    // SAFETY: `data` holds k·stride bytes and `parity` at least m·stride
+    // (asserted above), so every row pointer covers `stride` bytes; the
+    // two `split_at_mut` halves cannot alias; rows within each half are
+    // disjoint `stride`-sized windows; tier is clamped.
+    unsafe { mul_matrix_raw(tables, &sp[..k], &op[..m], stride, tier.clamp()) }
+}
+
+/// Fused core over raw fragment pointers.
+///
+/// # Safety
+/// Every pointer in `srcs`/`outs` must be valid for `len` bytes; the
+/// `outs` regions must not overlap each other or any `srcs` region;
+/// `tier` must be supported by the CPU; `tables[p][j]` must exist for
+/// every `p < outs.len()`, `j < srcs.len()`.
+unsafe fn mul_matrix_raw(
+    tables: &[Vec<MulTable>],
+    srcs: &[*const u8],
+    outs: &[*mut u8],
+    len: usize,
+    tier: KernelTier,
+) {
+    debug_assert_eq!(tables.len(), outs.len());
+    let mut band_start = 0;
+    while band_start < outs.len() {
+        let band_end = (band_start + BAND).min(outs.len());
+        match tier {
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => band_avx2(tables, srcs, outs, len, band_start, band_end),
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Ssse3 => band_ssse3(tables, srcs, outs, len, band_start, band_end),
+            _ => band_scalar(tables, srcs, outs, len, band_start, band_end),
+        }
+        band_start = band_end;
+    }
+}
+
+/// Scalar fused band: nibbles of each source byte are extracted once and
+/// applied to every row in the band.
+///
+/// # Safety
+/// See [`mul_matrix_raw`].
+unsafe fn band_scalar(
+    tables: &[Vec<MulTable>],
+    srcs: &[*const u8],
+    outs: &[*mut u8],
+    len: usize,
+    b0: usize,
+    b1: usize,
+) {
+    let nb = b1 - b0;
+    for (j, &x) in srcs.iter().enumerate() {
+        let first = j == 0;
+        let mut tabs: [&MulTable; BAND] = [&tables[b0][j]; BAND];
+        let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
+        for (bi, p) in (b0..b1).enumerate() {
+            tabs[bi] = &tables[p][j];
+            ys[bi] = outs[p];
+        }
+        for i in 0..len {
+            let xi = *x.add(i);
+            let lo = (xi & 0x0F) as usize;
+            let hi = (xi >> 4) as usize;
+            for bi in 0..nb {
+                let prod = tabs[bi].lo[lo] ^ tabs[bi].hi[hi];
+                if first {
+                    *ys[bi].add(i) = prod;
+                } else {
+                    *ys[bi].add(i) ^= prod;
+                }
+            }
+        }
+    }
+}
+
+/// SSSE3 fused band: the band's split-nibble tables stay in xmm
+/// registers across the whole stride; each 16-byte source chunk is
+/// loaded and nibble-split once, then `pshufb`-multiplied into every
+/// row of the band.
+///
+/// # Safety
+/// See [`mul_matrix_raw`]; additionally the CPU must support SSSE3.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn band_ssse3(
+    tables: &[Vec<MulTable>],
+    srcs: &[*const u8],
+    outs: &[*mut u8],
+    len: usize,
+    b0: usize,
+    b1: usize,
+) {
+    use std::arch::x86_64::*;
+    let nb = b1 - b0;
+    let mask = _mm_set1_epi8(0x0F);
+    let chunks = len / 16;
+    for (j, &x) in srcs.iter().enumerate() {
+        let first = j == 0;
+        let mut lo_tbl = [_mm_setzero_si128(); BAND];
+        let mut hi_tbl = [_mm_setzero_si128(); BAND];
+        let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
+        for (bi, p) in (b0..b1).enumerate() {
+            let t = &tables[p][j];
+            lo_tbl[bi] = _mm_loadu_si128(t.lo.as_ptr() as *const __m128i);
+            hi_tbl[bi] = _mm_loadu_si128(t.hi.as_ptr() as *const __m128i);
+            ys[bi] = outs[p];
+        }
+        for c in 0..chunks {
+            let xv = _mm_loadu_si128(x.add(c * 16) as *const __m128i);
+            let lo_idx = _mm_and_si128(xv, mask);
+            let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
+            for bi in 0..nb {
+                let prod = _mm_xor_si128(
+                    _mm_shuffle_epi8(lo_tbl[bi], lo_idx),
+                    _mm_shuffle_epi8(hi_tbl[bi], hi_idx),
+                );
+                let yp = ys[bi].add(c * 16) as *mut __m128i;
+                if first {
+                    _mm_storeu_si128(yp, prod);
+                } else {
+                    let acc = _mm_xor_si128(_mm_loadu_si128(yp as *const __m128i), prod);
+                    _mm_storeu_si128(yp, acc);
+                }
+            }
+        }
+        let done = chunks * 16;
+        if done < len {
+            tail_scalar(tables, x, &ys, j, done, len, first, b0, b1);
+        }
+    }
+}
+
+/// AVX2 fused band: as [`band_ssse3`] but 32 bytes per `vpshufb`, with
+/// the 16-byte nibble tables broadcast to both 128-bit lanes (per-lane
+/// shuffle semantics make the broadcast exactly the table duplication
+/// the lookup needs).
+///
+/// # Safety
+/// See [`mul_matrix_raw`]; additionally the CPU must support AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn band_avx2(
+    tables: &[Vec<MulTable>],
+    srcs: &[*const u8],
+    outs: &[*mut u8],
+    len: usize,
+    b0: usize,
+    b1: usize,
+) {
+    use std::arch::x86_64::*;
+    let nb = b1 - b0;
+    let mask = _mm256_set1_epi8(0x0F);
+    let chunks = len / 32;
+    for (j, &x) in srcs.iter().enumerate() {
+        let first = j == 0;
+        let mut lo_tbl = [_mm256_setzero_si256(); BAND];
+        let mut hi_tbl = [_mm256_setzero_si256(); BAND];
+        let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
+        for (bi, p) in (b0..b1).enumerate() {
+            let t = &tables[p][j];
+            lo_tbl[bi] =
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
+            hi_tbl[bi] =
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
+            ys[bi] = outs[p];
+        }
+        for c in 0..chunks {
+            let xv = _mm256_loadu_si256(x.add(c * 32) as *const __m256i);
+            let lo_idx = _mm256_and_si256(xv, mask);
+            let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
+            for bi in 0..nb {
+                let prod = _mm256_xor_si256(
+                    _mm256_shuffle_epi8(lo_tbl[bi], lo_idx),
+                    _mm256_shuffle_epi8(hi_tbl[bi], hi_idx),
+                );
+                let yp = ys[bi].add(c * 32) as *mut __m256i;
+                if first {
+                    _mm256_storeu_si256(yp, prod);
+                } else {
+                    _mm256_storeu_si256(
+                        yp,
+                        _mm256_xor_si256(_mm256_loadu_si256(yp as *const __m256i), prod),
+                    );
+                }
+            }
+        }
+        let done = chunks * 32;
+        if done < len {
+            tail_scalar(tables, x, &ys, j, done, len, first, b0, b1);
+        }
+    }
+}
+
+/// Scalar tail for the SIMD bands: bytes `done..len` of source `j`
+/// (pointer `x`) applied to the band rows already gathered in `ys`.
+///
+/// # Safety
+/// See [`mul_matrix_raw`]; `ys[bi]` must be `outs[b0 + bi]`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn tail_scalar(
+    tables: &[Vec<MulTable>],
+    x: *const u8,
+    ys: &[*mut u8; BAND],
+    j: usize,
+    done: usize,
+    len: usize,
+    first: bool,
+    b0: usize,
+    b1: usize,
+) {
+    let nb = b1 - b0;
+    for i in done..len {
+        let xi = *x.add(i);
+        let lo = (xi & 0x0F) as usize;
+        let hi = (xi >> 4) as usize;
+        for bi in 0..nb {
+            let t = &tables[b0 + bi][j];
+            let prod = t.lo[lo] ^ t.hi[hi];
+            if first {
+                *ys[bi].add(i) = prod;
+            } else {
+                *ys[bi].add(i) ^= prod;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn clamp_never_raises_tier() {
+        assert_eq!(KernelTier::Scalar.clamp(), KernelTier::Scalar);
+        assert!(KernelTier::Avx2.clamp() <= best_supported());
+        assert!(supported_tiers().contains(&active()));
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [KernelTier::Scalar, KernelTier::Ssse3, KernelTier::Avx2] {
+            assert_eq!(t.to_string(), t.name());
+        }
+    }
+
+    #[test]
+    fn fused_matches_rowwise_reference_on_every_tier() {
+        let mut rng = Pcg64::seeded(0xF00D);
+        for (k, m, len) in [(1usize, 1usize, 17usize), (5, 3, 64), (8, 4, 100), (3, 9, 31)] {
+            let tables: Vec<Vec<MulTable>> = (0..m)
+                .map(|_| (0..k).map(|_| MulTable::new(rng.next_u64() as u8)).collect())
+                .collect();
+            let srcs_data: Vec<Vec<u8>> = (0..k)
+                .map(|_| {
+                    let mut v = vec![0u8; len];
+                    rng.fill_bytes(&mut v);
+                    v
+                })
+                .collect();
+            let srcs: Vec<&[u8]> = srcs_data.iter().map(|v| v.as_slice()).collect();
+            // Reference: scalar row-at-a-time accumulation.
+            let mut want = vec![vec![0u8; len]; m];
+            for (p, out) in want.iter_mut().enumerate() {
+                for (j, src) in srcs.iter().enumerate() {
+                    tables[p][j].mul_slice_add(src, out);
+                }
+            }
+            for tier in supported_tiers() {
+                let mut got = vec![vec![0xABu8; len]; m]; // pre-dirtied
+                let mut refs: Vec<&mut [u8]> = got.iter_mut().map(|v| v.as_mut_slice()).collect();
+                mul_matrix_tier(&tables, &srcs, &mut refs, tier);
+                assert_eq!(got, want, "k={k} m={m} len={len} tier={tier}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_matches_refs_variant() {
+        let mut rng = Pcg64::seeded(0xBEEF);
+        let (k, m, s) = (6usize, 5usize, 77usize);
+        let tables: Vec<Vec<MulTable>> = (0..m)
+            .map(|_| (0..k).map(|_| MulTable::new(rng.next_u64() as u8)).collect())
+            .collect();
+        let mut buf = vec![0u8; (k + m) * s];
+        rng.fill_bytes(&mut buf);
+        let data: Vec<Vec<u8>> = (0..k).map(|j| buf[j * s..(j + 1) * s].to_vec()).collect();
+        let srcs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let mut want = vec![vec![0u8; s]; m];
+        let mut refs: Vec<&mut [u8]> = want.iter_mut().map(|v| v.as_mut_slice()).collect();
+        mul_matrix(&tables, &srcs, &mut refs);
+        for tier in supported_tiers() {
+            let mut b = buf.clone();
+            mul_matrix_strided_tier(&tables, &mut b, k, s, tier);
+            for (p, w) in want.iter().enumerate() {
+                assert_eq!(&b[(k + p) * s..(k + p + 1) * s], &w[..], "p={p} tier={tier}");
+            }
+            assert_eq!(&b[..k * s], &buf[..k * s], "data region untouched");
+        }
+    }
+
+    #[test]
+    fn empty_sources_zero_the_outputs() {
+        let tables: Vec<Vec<MulTable>> = vec![Vec::new(); 2];
+        let mut outs = vec![vec![0x55u8; 9]; 2];
+        let mut refs: Vec<&mut [u8]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        mul_matrix(&tables, &[], &mut refs);
+        assert!(outs.iter().all(|o| o.iter().all(|&b| b == 0)));
+    }
+}

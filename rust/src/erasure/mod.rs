@@ -2,14 +2,22 @@
 //! substrate of Janus (paper §2.1, §3.1; substitute for liberasurecode).
 //!
 //! * [`gf256`] — field arithmetic with split-nibble slice kernels.
+//! * [`kernel`] — dispatch-once SIMD tier selection (scalar/SSSE3/AVX2,
+//!   `JANUS_GF_KERNEL` override) + fused multi-row coding kernels.
 //! * [`matrix`] — GF(256) linear algebra + systematic MDS generator.
 //! * [`rs`] — `(k, m)` encode / reconstruct, the FTG primitive.
+//! * [`par`] — fixed std-thread coding pool (deterministic batch
+//!   encode/decode across cores).
 //! * [`throughput`] — measured parity-generation rate `r_ec` (§5.2.2).
 
 pub mod gf256;
+pub mod kernel;
 pub mod matrix;
+pub mod par;
 pub mod rs;
 pub mod throughput;
 
+pub use kernel::KernelTier;
+pub use par::CodingPool;
 pub use rs::{RsCode, RsError};
 pub use throughput::{measure_ec_rate, measure_parallel_ec_rate, sweep_ec_rates, EcRate};

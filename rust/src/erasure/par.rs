@@ -1,0 +1,264 @@
+//! Fixed-size std-thread worker pool for erasure-coding compute.
+//!
+//! Zero new dependencies: plain `std::thread` workers draining a
+//! `Mutex<VecDeque>` of boxed jobs behind a condvar. Two submission
+//! modes:
+//!
+//! * [`CodingPool::spawn`] — fire-and-forget `'static` jobs. Used by the
+//!   `janus serve` daemon, which moves a machine's coding job into the
+//!   closure and gets it back through its own completion queue.
+//! * [`CodingPool::run_batch`] — scoped borrowed jobs. Blocks until every
+//!   job in the batch has executed; while waiting, the *caller* also
+//!   drains the pool queue, so a batch always completes even on a pool
+//!   with zero workers (the caller is the worker). This is what
+//!   `RsCode::encode_batch` / `reconstruct_batch` ride on.
+//!
+//! Determinism contract: jobs are pure compute on disjoint buffers —
+//! which thread runs a job affects only timing, never bytes. Encoding a
+//! batch of FTG arenas through the pool is byte-identical to encoding
+//! them sequentially, for any worker count (asserted for 0/1/2/8 workers
+//! by `rust/tests/erasure_props.rs`).
+//!
+//! A panicking job poisons its batch: the panic is caught on the worker
+//! (keeping the thread alive for other tenants), recorded on the batch
+//! latch, and re-raised on the submitting thread when the batch drains.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// Count-down latch completing one batch of [`CodingPool::run_batch`].
+struct Latch {
+    /// (jobs still outstanding, some job panicked).
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, false)), cv: Condvar::new() }
+    }
+
+    fn complete(&self, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if !ok {
+            st.1 = true;
+        }
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every job has executed; true when one panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// Fixed worker pool for encode/decode compute (see module docs).
+pub struct CodingPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl CodingPool {
+    /// Spawn `workers` threads. Zero is legal: [`CodingPool::spawn`] jobs
+    /// then only run when a [`CodingPool::run_batch`] caller drains the
+    /// queue, so pools that might receive fire-and-forget jobs should
+    /// have at least one worker.
+    pub fn new(workers: usize) -> CodingPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("janus-coding-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn coding worker")
+            })
+            .collect();
+        CodingPool { shared, workers: handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push_back(Box::new(job));
+        }
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Run a batch of borrowed jobs to completion (see module docs for
+    /// the caller-drains + determinism contract). Panics if any job
+    /// panicked.
+    #[allow(clippy::type_complexity)]
+    pub fn run_batch<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for job in jobs {
+                // SAFETY: the latch is only released once the wrapped
+                // closure has run (or panicked), and `run_batch` does not
+                // return until the latch drains — every borrow captured
+                // by `job` strictly outlives its execution.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let l = Arc::clone(&latch);
+                st.jobs.push_back(Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+                    l.complete(ok);
+                }));
+            }
+        }
+        self.shared.work_cv.notify_all();
+        // Help drain: the submitting thread works the queue until it is
+        // empty, then waits for in-flight jobs. Correct at 0 workers.
+        loop {
+            let job = { self.shared.state.lock().unwrap().jobs.pop_front() };
+            match job {
+                Some(j) => j(),
+                None => break,
+            }
+        }
+        if latch.wait() {
+            panic!("coding pool: a batch job panicked");
+        }
+    }
+}
+
+impl Drop for CodingPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = sh.work_cv.wait(st).unwrap();
+            }
+        };
+        match job {
+            // Batch jobs catch panics themselves; spawn() jobs are pure
+            // compute closures built by this crate and must not panic —
+            // a stray panic here only kills this worker, not the pool.
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_batch_executes_every_job_even_with_zero_workers() {
+        for workers in [0usize, 1, 3] {
+            let pool = CodingPool::new(workers);
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..17)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_batch(jobs);
+            assert_eq!(hits.load(Ordering::SeqCst), 17, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn spawn_jobs_complete_before_drop_joins() {
+        let pool = CodingPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let h = Arc::clone(&hits);
+            pool.spawn(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // Drop drains the queue, then joins.
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn batch_jobs_can_mutate_borrowed_disjoint_buffers() {
+        let pool = CodingPool::new(2);
+        let mut bufs = vec![vec![0u8; 64]; 9];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = bufs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, b)| {
+                Box::new(move || b.fill(i as u8 + 1)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_batch(jobs);
+        for (i, b) in bufs.iter().enumerate() {
+            assert!(b.iter().all(|&x| x == i as u8 + 1), "buffer {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "a batch job panicked")]
+    fn panicking_batch_job_propagates_to_submitter() {
+        let pool = CodingPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.run_batch(jobs);
+    }
+}

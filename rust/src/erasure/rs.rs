@@ -9,9 +9,19 @@
 //! hot loop uses per-constant split-nibble tables ([`gf256::MulTable`])
 //! and reuses precomputed tables across FTGs via [`RsCode`], since the
 //! paper's sender encodes thousands of FTGs with the same (k, m).
+//!
+//! Encode (and dense decode) go through the fused multi-row kernels in
+//! [`crate::erasure::kernel`]: each source fragment is streamed once per
+//! band of up to four output rows instead of once per row, write-once
+//! (no parity pre-zeroing). [`RsCode::encode_batch`] /
+//! [`RsCode::reconstruct_batch`] fan whole-FTG jobs across a
+//! [`CodingPool`] with byte-identical results for any worker count.
 
 use super::gf256::MulTable;
+use super::kernel::{self, KernelTier};
 use super::matrix::{systematic_generator, Matrix};
+use super::par::CodingPool;
+use crate::coordinator::arena::FtgArena;
 
 /// Errors from Reed–Solomon operations.
 #[derive(Debug, PartialEq, Eq)]
@@ -50,8 +60,12 @@ struct DecodeEntry {
     /// Inverted k×k submatrix of the generator for those rows.
     inv: Matrix,
     /// `inv` as precomputed split-nibble tables: `tables[j][i]` applies
-    /// coefficient `inv[(j, i)]`.
+    /// coefficient `inv[(j, i)]` (built for every cell, zeros included,
+    /// so the fused kernel can consume the matrix directly).
     tables: Vec<Vec<MulTable>>,
+    /// Nonzero cells of `inv` — picks between the fused kernel (dense
+    /// inverses) and the skip-zero row loop (near-identity inverses).
+    nnz: usize,
     /// LRU stamp (last lookup that touched this entry).
     stamp: u64,
 }
@@ -103,10 +117,14 @@ impl DecodeCache {
         let tables: Vec<Vec<MulTable>> = (0..k)
             .map(|j| (0..k).map(|i| MulTable::new(inv[(j, i)])).collect())
             .collect();
+        let nnz = (0..k)
+            .map(|j| (0..k).filter(|&i| inv[(j, i)] != 0).count())
+            .sum();
         let entry = DecodeEntry {
             rows: rows.iter().map(|&r| r as u8).collect(),
             inv,
             tables,
+            nnz,
             stamp: clock,
         };
         if self.entries.len() < DECODE_CACHE_CAP {
@@ -176,42 +194,71 @@ impl RsCode {
             }
         }
         let mut parity = vec![vec![0u8; len]; self.m];
-        for (p, out) in parity.iter_mut().enumerate() {
-            for (j, frag) in data.iter().enumerate() {
-                self.parity_tables[p][j].mul_slice_add(frag, out);
-            }
-        }
+        kernel::mul_matrix_into_vecs_tier(&self.parity_tables, data, &mut parity, kernel::active());
         Ok(parity)
     }
 
     /// Encode into caller-provided parity buffers (no allocation).
     ///
-    /// Used by the throughput benchmark and the sender hot path.
+    /// Used by the throughput benchmark and the sender hot path. The
+    /// fused kernel is write-once: parity buffers are resized for
+    /// geometry but never pre-zeroed.
     pub fn encode_into(&self, data: &[&[u8]], parity: &mut [Vec<u8>]) -> Result<(), RsError> {
         if data.len() != self.k {
             return Err(RsError::NotEnough { have: data.len(), need: self.k });
         }
         let len = data[0].len();
-        assert_eq!(parity.len(), self.m);
-        for (p, out) in parity.iter_mut().enumerate() {
-            // resize already zero-fills any growth; only the retained
-            // prefix needs clearing (no double zero-fill).
-            let keep = out.len().min(len);
-            out.resize(len, 0);
-            out[..keep].fill(0);
-            for (j, frag) in data.iter().enumerate() {
-                self.parity_tables[p][j].mul_slice_add(frag, out);
+        for d in data {
+            if d.len() != len {
+                return Err(RsError::LengthMismatch { expected: len, got: d.len() });
             }
         }
+        assert_eq!(parity.len(), self.m);
+        for out in parity.iter_mut() {
+            out.resize(len, 0);
+        }
+        kernel::mul_matrix_into_vecs_tier(&self.parity_tables, data, parity, kernel::active());
         Ok(())
     }
 
     /// Encode within a strided group buffer (the
     /// [`crate::coordinator::arena::FtgArena`] layout): `buf` holds the
     /// `k` data fragments followed by the `m` parity slots, each
-    /// `stride` bytes. Parity is computed in place — the sender's
-    /// zero-allocation path.
+    /// `stride` bytes. Parity is computed in place via the fused
+    /// multi-row kernel — the sender's zero-allocation path.
     pub fn encode_strided(&self, buf: &mut [u8], stride: usize) -> Result<(), RsError> {
+        self.encode_strided_tier(buf, stride, kernel::active())
+    }
+
+    /// [`RsCode::encode_strided`] on a forced kernel tier (clamped to
+    /// CPU support) — the tier-sweeping entry point for tests/benches.
+    pub fn encode_strided_tier(
+        &self,
+        buf: &mut [u8],
+        stride: usize,
+        tier: KernelTier,
+    ) -> Result<(), RsError> {
+        if stride == 0 || buf.len() != self.n() * stride {
+            return Err(RsError::LengthMismatch {
+                expected: self.n() * stride,
+                got: buf.len(),
+            });
+        }
+        kernel::mul_matrix_strided_tier(&self.parity_tables, buf, self.k, stride, tier);
+        Ok(())
+    }
+
+    /// Row-at-a-time strided encode on a forced tier: the reference
+    /// implementation the fused kernel is validated against (property
+    /// tests) and benchmarked against (the fused-speedup gate in
+    /// `benches/rs_throughput.rs`). Write-once like the fused path —
+    /// the first source term overwrites, the rest accumulate.
+    pub fn encode_strided_rowwise(
+        &self,
+        buf: &mut [u8],
+        stride: usize,
+        tier: KernelTier,
+    ) -> Result<(), RsError> {
         if stride == 0 || buf.len() != self.n() * stride {
             return Err(RsError::LengthMismatch {
                 expected: self.n() * stride,
@@ -219,12 +266,15 @@ impl RsCode {
             });
         }
         let (data, parity) = buf.split_at_mut(self.k * stride);
-        parity.fill(0);
         for p in 0..self.m {
             let out = &mut parity[p * stride..(p + 1) * stride];
             for j in 0..self.k {
-                self.parity_tables[p][j]
-                    .mul_slice_add(&data[j * stride..(j + 1) * stride], out);
+                let x = &data[j * stride..(j + 1) * stride];
+                if j == 0 {
+                    self.parity_tables[p][j].mul_slice_tier(x, out, tier);
+                } else {
+                    self.parity_tables[p][j].mul_slice_add_tier(x, out, tier);
+                }
             }
         }
         Ok(())
@@ -242,69 +292,8 @@ impl RsCode {
         shards: &[(usize, &[u8])],
         out: &mut [u8],
     ) -> Result<(), RsError> {
-        if shards.len() < self.k {
-            return Err(RsError::NotEnough { have: shards.len(), need: self.k });
-        }
-        let len = shards[0].1.len();
-        for &(idx, frag) in shards {
-            if idx >= self.n() {
-                return Err(RsError::BadIndex { idx, n: self.n() });
-            }
-            if frag.len() != len {
-                return Err(RsError::LengthMismatch { expected: len, got: frag.len() });
-            }
-        }
-        if out.len() != self.k * len {
-            return Err(RsError::LengthMismatch { expected: self.k * len, got: out.len() });
-        }
-        // Fast path: all data fragments present — pure copies.
-        let mut seen = [0u64; 4];
-        let mut have_data = 0usize;
-        for &(idx, _) in shards {
-            if idx < self.k {
-                let (w, b) = (idx / 64, 1u64 << (idx % 64));
-                if seen[w] & b == 0 {
-                    seen[w] |= b;
-                    have_data += 1;
-                }
-            }
-        }
-        if have_data == self.k {
-            for &(idx, frag) in shards {
-                if idx < self.k {
-                    out[idx * len..(idx + 1) * len].copy_from_slice(frag);
-                }
-            }
-            return Ok(());
-        }
-        // General path: cached inverse of the k×k submatrix picked by
-        // the first k surviving fragment indices. The first nonzero
-        // term overwrites (write-once `mul_slice`), the rest accumulate
-        // — `out` needs no pre-zeroing and is touched exactly once per
-        // term.
-        let chosen = &shards[..self.k];
-        let e = self.decode_cache.lookup_or_build(&self.generator, self.k, chosen);
-        let entry = &self.decode_cache.entries[e];
-        for j in 0..self.k {
-            let out_frag = &mut out[j * len..(j + 1) * len];
-            let mut written = false;
-            for (i, &(_, frag)) in chosen.iter().enumerate() {
-                if entry.inv[(j, i)] != 0 {
-                    if written {
-                        entry.tables[j][i].mul_slice_add(frag, out_frag);
-                    } else {
-                        entry.tables[j][i].mul_slice(frag, out_frag);
-                        written = true;
-                    }
-                }
-            }
-            if !written {
-                // Unreachable for an MDS inverse (no zero rows), but
-                // stay well-defined on arbitrary matrices.
-                out_frag.fill(0);
-            }
-        }
-        Ok(())
+        let n = self.n();
+        reconstruct_into_cached(&self.generator, self.k, n, &mut self.decode_cache, shards, out)
     }
 
     /// (hits, misses) of the decode-matrix cache.
@@ -387,6 +376,163 @@ impl RsCode {
         frags.extend(parity);
         Ok(frags)
     }
+
+    /// Encode the parity of a batch of FTG arenas across a worker pool.
+    ///
+    /// Byte-identical to calling [`FtgArena::encode_parity`] on each
+    /// arena in order, for any pool size — the jobs are pure compute on
+    /// disjoint arenas (see the determinism contract in
+    /// [`crate::erasure::par`]). Geometry is validated up front so the
+    /// parallel phase cannot fail.
+    pub fn encode_batch(&self, pool: &CodingPool, arenas: &mut [FtgArena]) -> Result<(), RsError> {
+        for arena in arenas.iter() {
+            let stride = arena.stride();
+            if stride == 0 || arena.as_slice().len() != self.n() * stride {
+                return Err(RsError::LengthMismatch {
+                    expected: self.n() * stride,
+                    got: arena.as_slice().len(),
+                });
+            }
+        }
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = arenas
+            .iter_mut()
+            .map(|arena| {
+                Box::new(move || {
+                    arena.encode_parity(self).expect("geometry validated above");
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_batch(jobs);
+        Ok(())
+    }
+
+    /// Reconstruct a batch of groups across a worker pool: each item
+    /// pairs an arena (its present fragments are the survivors) with a
+    /// `k·stride` output buffer. Returns one result per item, in order.
+    ///
+    /// Byte-identical to sequential [`RsCode::reconstruct_into`] for any
+    /// worker count: chunks use thread-local decode caches, and cache
+    /// state never changes decoded bytes (only inversion reuse). The
+    /// shared `&self` cache is deliberately untouched.
+    pub fn reconstruct_batch(
+        &self,
+        pool: &CodingPool,
+        items: &mut [(&FtgArena, &mut [u8])],
+    ) -> Vec<Result<(), RsError>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let mut results: Vec<Result<(), RsError>> = Vec::with_capacity(items.len());
+        results.resize_with(items.len(), || Ok(()));
+        let chunk = items.len().div_ceil(pool.workers().max(1) + 1).max(1);
+        let generator = &self.generator;
+        let (k, n) = (self.k, self.n());
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
+            .chunks_mut(chunk)
+            .zip(results.chunks_mut(chunk))
+            .map(|(item_chunk, result_chunk)| {
+                Box::new(move || {
+                    let mut cache = DecodeCache::new();
+                    for (item, result) in item_chunk.iter_mut().zip(result_chunk.iter_mut()) {
+                        let shards: Vec<(usize, &[u8])> = item.0.iter_present().collect();
+                        *result =
+                            reconstruct_into_cached(generator, k, n, &mut cache, &shards, item.1);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_batch(jobs);
+        results
+    }
+}
+
+/// Core of [`RsCode::reconstruct_into`] with an explicit decode cache,
+/// shared between the `&mut self` entry point and the batch path (which
+/// runs chunks with thread-local caches — decoded bytes never depend on
+/// cache state).
+fn reconstruct_into_cached(
+    generator: &Matrix,
+    k: usize,
+    n: usize,
+    cache: &mut DecodeCache,
+    shards: &[(usize, &[u8])],
+    out: &mut [u8],
+) -> Result<(), RsError> {
+    if shards.len() < k {
+        return Err(RsError::NotEnough { have: shards.len(), need: k });
+    }
+    let len = shards[0].1.len();
+    for &(idx, frag) in shards {
+        if idx >= n {
+            return Err(RsError::BadIndex { idx, n });
+        }
+        if frag.len() != len {
+            return Err(RsError::LengthMismatch { expected: len, got: frag.len() });
+        }
+    }
+    if out.len() != k * len {
+        return Err(RsError::LengthMismatch { expected: k * len, got: out.len() });
+    }
+    // Fast path: all data fragments present — pure copies.
+    let mut seen = [0u64; 4];
+    let mut have_data = 0usize;
+    for &(idx, _) in shards {
+        if idx < k {
+            let (w, b) = (idx / 64, 1u64 << (idx % 64));
+            if seen[w] & b == 0 {
+                seen[w] |= b;
+                have_data += 1;
+            }
+        }
+    }
+    if have_data == k {
+        for &(idx, frag) in shards {
+            if idx < k {
+                out[idx * len..(idx + 1) * len].copy_from_slice(frag);
+            }
+        }
+        return Ok(());
+    }
+    // General path: cached inverse of the k×k submatrix picked by the
+    // first k surviving fragment indices.
+    let chosen = &shards[..k];
+    let e = cache.lookup_or_build(generator, k, chosen);
+    let entry = &cache.entries[e];
+    if entry.nnz * 2 >= k * k {
+        // Dense inverse (deep-loss pattern): fused multi-row kernel over
+        // the full matrix. Zero cells multiply to zero, so this is
+        // byte-identical to the skip-zero accumulation below.
+        let mut srcs: [&[u8]; 256] = [&[]; 256];
+        for (i, &(_, frag)) in chosen.iter().enumerate() {
+            srcs[i] = frag;
+        }
+        kernel::mul_matrix_into_strided_tier(&entry.tables, &srcs[..k], out, len, kernel::active());
+        return Ok(());
+    }
+    // Near-identity inverse (few losses): most cells are zero — skip
+    // them row by row. The first nonzero term overwrites (write-once
+    // `mul_slice`), the rest accumulate — `out` needs no pre-zeroing
+    // and is touched exactly once per term.
+    for j in 0..k {
+        let out_frag = &mut out[j * len..(j + 1) * len];
+        let mut written = false;
+        for (i, &(_, frag)) in chosen.iter().enumerate() {
+            if entry.inv[(j, i)] != 0 {
+                if written {
+                    entry.tables[j][i].mul_slice_add(frag, out_frag);
+                } else {
+                    entry.tables[j][i].mul_slice(frag, out_frag);
+                    written = true;
+                }
+            }
+        }
+        if !written {
+            // Unreachable for an MDS inverse (no zero rows), but stay
+            // well-defined on arbitrary matrices.
+            out_frag.fill(0);
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

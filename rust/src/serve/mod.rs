@@ -40,11 +40,13 @@ pub use wheel::TimerWheel;
 use crate::coordinator::packet::{self, MAX_DATAGRAM, MAX_FRAGMENT_PAYLOAD, TAG_BYTES};
 use crate::coordinator::receiver::{ReceiverConfig, ReceiverReport};
 use crate::coordinator::sender::{SenderConfig, SenderReport};
-use crate::engine::{ReceiverMachine, SenderMachine};
+use crate::engine::{DecodeJob, EncodeJob, ReceiverMachine, SenderMachine};
+use crate::erasure::CodingPool;
 use crate::transport::channel::Datagram;
 use crate::util::err::Result;
 use crate::{anyhow, bail};
 use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Real-mode poll cadence: how long the loop sleeps when idle with no
@@ -82,6 +84,11 @@ pub struct ServeConfig {
     pub wheel_granularity: Duration,
     /// Timer-wheel bucket count (horizon = slots × granularity).
     pub wheel_slots: usize,
+    /// Coding worker threads for off-loop parity/decode compute. Zero
+    /// (the default) keeps all coding inline on the event loop. Only
+    /// honoured in [`TimeMode::Real`]: virtual-clock runs stay inline
+    /// and synchronous so traces are deterministic.
+    pub coding_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -91,8 +98,34 @@ impl Default for ServeConfig {
             shards: 16,
             wheel_granularity: Duration::from_millis(1),
             wheel_slots: 1024,
+            coding_workers: 0,
         }
     }
+}
+
+/// One unit of off-loop coding compute: a sender's parity encode or a
+/// receiver's final reconstruction, moved out of the machine whole.
+enum CodingJob {
+    Encode(EncodeJob),
+    Decode(DecodeJob),
+}
+
+impl CodingJob {
+    fn run(&mut self) {
+        match self {
+            CodingJob::Encode(j) => j.run(),
+            CodingJob::Decode(j) => j.run(),
+        }
+    }
+}
+
+/// A coding job on its way back from the pool. `gen` fences slot reuse:
+/// a completion whose generation no longer matches the slot's is from a
+/// transfer that already died (failure deadline, reap) and is dropped.
+struct Completion {
+    idx: usize,
+    gen: u64,
+    job: CodingJob,
 }
 
 /// Either half of a transfer, as a machine.
@@ -132,6 +165,27 @@ impl MachineKind {
             MachineKind::Receiver(m) => m.is_finished(),
         }
     }
+    fn set_coding_offload(&mut self, on: bool) {
+        match self {
+            MachineKind::Sender(m) => m.set_coding_offload(on),
+            MachineKind::Receiver(m) => m.set_coding_offload(on),
+        }
+    }
+    fn take_coding_job(&mut self) -> Option<CodingJob> {
+        match self {
+            MachineKind::Sender(m) => m.take_encode_job().map(CodingJob::Encode),
+            MachineKind::Receiver(m) => m.take_decode_job().map(CodingJob::Decode),
+        }
+    }
+    fn complete_coding_job(&mut self, job: CodingJob) {
+        match (self, job) {
+            (MachineKind::Sender(m), CodingJob::Encode(j)) => m.complete_encode_job(j),
+            (MachineKind::Receiver(m), CodingJob::Decode(j)) => m.complete_decode_job(j),
+            // A kind mismatch can only follow a routing bug; the job is
+            // dropped rather than poisoning an unrelated transfer.
+            _ => {}
+        }
+    }
 }
 
 /// One live transfer.
@@ -144,6 +198,11 @@ struct Slot {
     /// Deadline currently armed in the wheel (lazy-cancel: stale wheel
     /// entries for this key fire spuriously and are ignored).
     armed: Option<Instant>,
+    /// Admission generation (fences stale coding completions after this
+    /// slot index is reused).
+    gen: u64,
+    /// Coding jobs this transfer sent through the pool.
+    coding_jobs: u64,
     machine: MachineKind,
 }
 
@@ -177,6 +236,9 @@ pub struct FinishedTransfer {
     pub tenant: usize,
     pub socket: usize,
     pub id: u32,
+    /// Coding jobs this transfer ran on the daemon's coding pool
+    /// (zero when offload is disabled or inline coding was used).
+    pub coding_jobs: u64,
     pub outcome: TransferOutcome,
 }
 
@@ -214,6 +276,17 @@ pub struct Daemon {
     queued_total: usize,
     dropped_untagged: u64,
     dropped_unknown: u64,
+    /// Coding offload (None: all coding runs inline on the loop).
+    coding: Option<CodingPool>,
+    /// Jobs on their way back from the pool, drained each `poll_once`.
+    completions: Arc<Mutex<Vec<Completion>>>,
+    /// Admission generation counter (see [`Slot::gen`]).
+    gen_counter: u64,
+    coding_jobs_queued: u64,
+    coding_jobs_completed: u64,
+    /// Longest single `service` call observed — the event-loop stall
+    /// bound that offload exists to keep small.
+    max_service_stall: Duration,
     rbuf: Vec<u8>,
     out: Vec<u8>,
     tag_buf: Vec<u8>,
@@ -225,6 +298,13 @@ impl Daemon {
         let origin = Instant::now();
         let wheel = TimerWheel::new(origin, cfg.wheel_granularity, cfg.wheel_slots.max(1));
         let shards = vec![HashMap::new(); cfg.shards.max(1)];
+        // Virtual mode keeps coding inline: a worker thread finishing a
+        // job on the OS clock would race the virtual clock and break
+        // trace determinism.
+        let coding = match cfg.mode {
+            TimeMode::Real if cfg.coding_workers > 0 => Some(CodingPool::new(cfg.coding_workers)),
+            _ => None,
+        };
         Daemon {
             cfg,
             origin,
@@ -242,6 +322,12 @@ impl Daemon {
             queued_total: 0,
             dropped_untagged: 0,
             dropped_unknown: 0,
+            coding,
+            completions: Arc::new(Mutex::new(Vec::new())),
+            gen_counter: 0,
+            coding_jobs_queued: 0,
+            coding_jobs_completed: 0,
+            max_service_stall: Duration::ZERO,
             rbuf: vec![0u8; MAX_DATAGRAM],
             out: Vec::with_capacity(MAX_DATAGRAM),
             tag_buf: Vec::with_capacity(MAX_DATAGRAM),
@@ -353,7 +439,7 @@ impl Daemon {
     /// Build the machine, charge the budget, activate the slot.
     fn admit(&mut self, tenant: usize, p: Pending) -> Result<()> {
         let now = self.now();
-        let machine = match p.kind {
+        let mut machine = match p.kind {
             PendingKind::Sender { cfg, levels, eps } => {
                 MachineKind::Sender(Box::new(SenderMachine::new(&cfg, &levels, &eps, now)?))
             }
@@ -361,6 +447,9 @@ impl Daemon {
                 MachineKind::Receiver(Box::new(ReceiverMachine::new(&cfg, now)))
             }
         };
+        if self.coding.is_some() {
+            machine.set_coding_offload(true);
+        }
         self.tenants[tenant].used += p.cost;
         let idx = match self.free.pop() {
             Some(i) => i,
@@ -371,8 +460,17 @@ impl Daemon {
             }
         };
         self.shards[self.shard_of(p.id)].insert((p.socket, p.id), idx);
-        self.slots[idx] =
-            Some(Slot { tenant, socket: p.socket, id: p.id, cost: p.cost, armed: None, machine });
+        self.gen_counter += 1;
+        self.slots[idx] = Some(Slot {
+            tenant,
+            socket: p.socket,
+            id: p.id,
+            cost: p.cost,
+            armed: None,
+            gen: self.gen_counter,
+            coding_jobs: 0,
+            machine,
+        });
         self.active += 1;
         self.push_ready(idx);
         Ok(())
@@ -415,6 +513,7 @@ impl Daemon {
     /// whether anything moved.
     fn poll_once(&mut self) -> bool {
         let mut progressed = false;
+        progressed |= self.drain_completions();
         let now = self.now();
         for si in 0..self.sockets.len() {
             while let Some(n) = self.sockets[si].try_recv_into(&mut self.rbuf) {
@@ -441,7 +540,34 @@ impl Daemon {
         }
         while let Some(idx) = self.ready.pop_front() {
             self.in_ready[idx] = false;
+            let t0 = Instant::now();
             progressed |= self.service(idx);
+            self.max_service_stall = self.max_service_stall.max(t0.elapsed());
+        }
+        progressed
+    }
+
+    /// Hand completed coding jobs back to their machines. Generation
+    /// mismatches (the slot died or was reused while the job ran) drop
+    /// the job on the floor — the new occupant never sees it.
+    fn drain_completions(&mut self) -> bool {
+        let done: Vec<Completion> = {
+            let mut q = self.completions.lock().unwrap();
+            if q.is_empty() {
+                return false;
+            }
+            std::mem::take(&mut *q)
+        };
+        let mut progressed = false;
+        for c in done {
+            self.coding_jobs_completed += 1;
+            if let Some(slot) = self.slots.get_mut(c.idx).and_then(|s| s.as_mut()) {
+                if slot.gen == c.gen {
+                    slot.machine.complete_coding_job(c.job);
+                    progressed = true;
+                    self.push_ready(c.idx);
+                }
+            }
         }
         progressed
     }
@@ -463,6 +589,24 @@ impl Daemon {
             packet::encode_tagged(id, &self.out, &mut self.tag_buf);
             self.sockets[si].send(&self.tag_buf);
             progressed = true;
+        }
+        // Ship any parked coding job to the pool; the machine emits
+        // nothing for that work until the completion comes back, so the
+        // loop never blocks on a large group's parity or decode.
+        if self.coding.is_some() {
+            if let Some(slot) = self.slots[idx].as_mut() {
+                if let Some(mut job) = slot.machine.take_coding_job() {
+                    slot.coding_jobs += 1;
+                    let gen = slot.gen;
+                    self.coding_jobs_queued += 1;
+                    let completions = Arc::clone(&self.completions);
+                    self.coding.as_ref().expect("coding pool").spawn(move || {
+                        job.run();
+                        completions.lock().unwrap().push(Completion { idx, gen, job });
+                    });
+                    progressed = true;
+                }
+            }
         }
         let done = self.slots[idx].as_ref().map_or(false, |s| s.machine.is_finished());
         if done {
@@ -505,6 +649,7 @@ impl Daemon {
             tenant: slot.tenant,
             socket: slot.socket,
             id: slot.id,
+            coding_jobs: slot.coding_jobs,
             outcome,
         });
         let t = &mut self.tenants[slot.tenant];
@@ -526,6 +671,7 @@ impl Daemon {
                     tenant: slot.tenant,
                     socket: psock,
                     id: pid,
+                    coding_jobs: 0,
                     outcome: TransferOutcome::Failed(e.to_string()),
                 });
             }
@@ -618,5 +764,17 @@ impl Daemon {
     /// Tagged datagrams dropped for an unknown `(socket, id)`.
     pub fn dropped_unknown(&self) -> u64 {
         self.dropped_unknown
+    }
+
+    /// Coding-offload counters: `(jobs queued to the pool, completions
+    /// handed back)`. Both zero when offload is disabled.
+    pub fn coding_stats(&self) -> (u64, u64) {
+        (self.coding_jobs_queued, self.coding_jobs_completed)
+    }
+
+    /// Longest single slot-service call observed so far — the bound on
+    /// how long any one transfer stalled the shared event loop.
+    pub fn max_service_stall(&self) -> Duration {
+        self.max_service_stall
     }
 }

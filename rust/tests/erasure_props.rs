@@ -3,8 +3,10 @@
 //! field axioms (mini-prop framework; proptest is not in the offline
 //! vendored crate set).
 
+use janus::coordinator::arena::FtgArena;
 use janus::erasure::gf256;
-use janus::erasure::RsCode;
+use janus::erasure::kernel::{self, KernelTier};
+use janus::erasure::{CodingPool, RsCode};
 use janus::util::prop::{check, no_shrink, PropConfig};
 use janus::util::Pcg64;
 
@@ -255,6 +257,221 @@ fn decode_matrix_cache_hits_across_groups_with_same_pattern() {
     let (hits, misses) = code.decode_cache_stats();
     assert_eq!(misses, 1, "one inversion for 50 identically-lossy groups");
     assert_eq!(hits, 49);
+}
+
+// === Kernel tiers + coding pool (ISSUE 8) ===
+
+#[test]
+fn prop_slice_kernels_byte_identical_across_tiers() {
+    // mul_slice / mul_slice_add on every supported tier must match the
+    // scalar reference bit-for-bit: random constants (including 0 and 1
+    // by density), odd lengths, lengths below one SIMD vector, and
+    // misaligned starts (odd subslice offsets defeat any alignment
+    // assumption in the 16/32-byte paths).
+    check(
+        &PropConfig { cases: 150, ..Default::default() },
+        |rng| {
+            let len = rng.range(0, 300);
+            let off = rng.range(0, 5);
+            let c = rng.next_below(256) as u8;
+            (len, off, c, rng.next_u64())
+        },
+        no_shrink,
+        |&(len, off, c, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let t = gf256::MulTable::new(c);
+            let mut x = vec![0u8; off + len];
+            rng.fill_bytes(&mut x);
+            let mut y0 = vec![0u8; off + len];
+            rng.fill_bytes(&mut y0);
+            for &tier in &kernel::supported_tiers() {
+                let mut got = y0.clone();
+                let mut want = y0.clone();
+                t.mul_slice_tier(&x[off..], &mut got[off..], tier);
+                t.mul_slice_tier(&x[off..], &mut want[off..], KernelTier::Scalar);
+                if got != want {
+                    return Err(format!("mul_slice {tier} ≠ scalar: c={c} len={len} off={off}"));
+                }
+                let mut got = y0.clone();
+                let mut want = y0.clone();
+                t.mul_slice_add_tier(&x[off..], &mut got[off..], tier);
+                t.mul_slice_add_tier(&x[off..], &mut want[off..], KernelTier::Scalar);
+                if got != want {
+                    return Err(format!(
+                        "mul_slice_add {tier} ≠ scalar: c={c} len={len} off={off}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn slice_kernel_edge_lengths_and_constants_across_tiers() {
+    // Deterministic sweep of the boundary cases the prop may under-
+    // sample: the zero and identity constants, and every length around
+    // the 16-byte (SSSE3) and 32-byte (AVX2) vector widths.
+    let lens = [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100];
+    let mut rng = Pcg64::seeded(0x1551);
+    for &c in &[0u8, 1, 2, 0x1D, 255] {
+        let t = gf256::MulTable::new(c);
+        for &len in &lens {
+            for off in 0..3usize {
+                let mut x = vec![0u8; off + len];
+                rng.fill_bytes(&mut x);
+                let mut y0 = vec![0u8; off + len];
+                rng.fill_bytes(&mut y0);
+                for &tier in &kernel::supported_tiers() {
+                    let mut got = y0.clone();
+                    let mut want = y0.clone();
+                    t.mul_slice_add_tier(&x[off..], &mut got[off..], tier);
+                    t.mul_slice_add_tier(&x[off..], &mut want[off..], KernelTier::Scalar);
+                    assert_eq!(got, want, "add c={c} len={len} off={off} tier={tier}");
+                    let mut got = y0.clone();
+                    let mut want = y0.clone();
+                    t.mul_slice_tier(&x[off..], &mut got[off..], tier);
+                    t.mul_slice_tier(&x[off..], &mut want[off..], KernelTier::Scalar);
+                    assert_eq!(got, want, "set c={c} len={len} off={off} tier={tier}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fused_encode_matches_rowwise_on_every_tier() {
+    // The fused multi-row strided encode must equal the row-at-a-time
+    // scalar reference byte-for-byte on every tier, across odd strides
+    // (including strides under one SIMD vector) and parity counts that
+    // exercise partial bands. Parity slots are pre-dirtied: write-once
+    // semantics must fully overwrite them.
+    check(
+        &PropConfig { cases: 80, ..Default::default() },
+        |rng| {
+            let k = rng.range(1, 14);
+            let m = rng.range(0, 10);
+            let s = rng.range(1, 90);
+            (k, m, s, rng.next_u64())
+        },
+        no_shrink,
+        |&(k, m, s, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let code = RsCode::new(k, m).map_err(|e| e.to_string())?;
+            let mut base = vec![0u8; (k + m) * s];
+            rng.fill_bytes(&mut base[..k * s]);
+            let mut want = base.clone();
+            code.encode_strided_rowwise(&mut want, s, KernelTier::Scalar)
+                .map_err(|e| e.to_string())?;
+            for &tier in &kernel::supported_tiers() {
+                let mut fused = base.clone();
+                fused[k * s..].fill(0xEE);
+                code.encode_strided_tier(&mut fused, s, tier).map_err(|e| e.to_string())?;
+                if fused != want {
+                    return Err(format!("fused {tier} ≠ scalar rowwise: k={k} m={m} s={s}"));
+                }
+                let mut row = base.clone();
+                row[k * s..].fill(0xEE);
+                code.encode_strided_rowwise(&mut row, s, tier).map_err(|e| e.to_string())?;
+                if row != want {
+                    return Err(format!("rowwise {tier} ≠ scalar rowwise: k={k} m={m} s={s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn encode_batch_matches_sequential_for_any_worker_count() {
+    // The pool's determinism contract, asserted end-to-end: a batch of
+    // arenas encoded through 0/1/2/8 workers is byte-identical to
+    // sequential `encode_parity` in order.
+    let (k, m, s) = (9usize, 4usize, 96usize);
+    let code = RsCode::new(k, m).unwrap();
+    let mut rng = Pcg64::seeded(0xBA7C);
+    let base: Vec<Vec<u8>> = (0..12)
+        .map(|_| {
+            let mut v = vec![0u8; k * s];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect();
+    let build = |data: &[Vec<u8>]| -> Vec<FtgArena> {
+        data.iter()
+            .map(|d| {
+                let mut a = FtgArena::new(k as u8, m as u8, s);
+                a.as_mut_slice()[..k * s].copy_from_slice(d);
+                a
+            })
+            .collect()
+    };
+    let mut seq = build(&base);
+    for a in seq.iter_mut() {
+        a.encode_parity(&code).unwrap();
+    }
+    for workers in [0usize, 1, 2, 8] {
+        let pool = CodingPool::new(workers);
+        let mut arenas = build(&base);
+        code.encode_batch(&pool, &mut arenas).unwrap();
+        for (i, (got, want)) in arenas.iter().zip(seq.iter()).enumerate() {
+            assert_eq!(got.as_slice(), want.as_slice(), "arena {i} workers={workers}");
+            assert_eq!(got.have_total(), k + m, "presence marks, arena {i}");
+        }
+    }
+}
+
+#[test]
+fn reconstruct_batch_matches_sequential_for_any_worker_count() {
+    // Decode side of the determinism contract: batches of lossy groups
+    // reconstructed through 0/1/2/8 workers equal per-group
+    // `reconstruct_into`, and per-item errors land in order.
+    let (k, m, s) = (8usize, 3usize, 64usize);
+    let mut code = RsCode::new(k, m).unwrap();
+    let mut rng = Pcg64::seeded(0xDECBA);
+    // Build 10 encoded groups, each missing a different fragment pair.
+    let mut lossy: Vec<FtgArena> = Vec::new();
+    let mut want: Vec<Vec<u8>> = Vec::new();
+    for g in 0..10usize {
+        let mut full = FtgArena::new(k as u8, m as u8, s);
+        let mut data = vec![0u8; k * s];
+        rng.fill_bytes(&mut data);
+        full.as_mut_slice()[..k * s].copy_from_slice(&data);
+        full.encode_parity(&code).unwrap();
+        let lost = [g % (k + m), (g * 5 + 1) % (k + m)];
+        let mut partial = FtgArena::new(k as u8, m as u8, s);
+        for idx in 0..k + m {
+            if !lost.contains(&idx) {
+                assert!(partial.insert(idx, full.slot(idx)));
+            }
+        }
+        let shards: Vec<(usize, &[u8])> = partial.iter_present().collect();
+        let mut out = vec![0u8; k * s];
+        code.reconstruct_into(&shards, &mut out).unwrap();
+        assert_eq!(out, data, "group {g} reference decode");
+        lossy.push(partial);
+        want.push(out);
+    }
+    // One undecodable group at the end: its error must come back in
+    // position without disturbing the others.
+    let starved = FtgArena::new(k as u8, m as u8, s);
+    lossy.push(starved);
+    for workers in [0usize, 1, 2, 8] {
+        let pool = CodingPool::new(workers);
+        let mut outs = vec![vec![0xA5u8; k * s]; lossy.len()];
+        let mut items: Vec<(&FtgArena, &mut [u8])> = lossy
+            .iter()
+            .zip(outs.iter_mut())
+            .map(|(a, o)| (a, o.as_mut_slice()))
+            .collect();
+        let results = code.reconstruct_batch(&pool, &mut items);
+        assert_eq!(results.len(), lossy.len());
+        for (g, w) in want.iter().enumerate() {
+            assert!(results[g].is_ok(), "group {g} workers={workers}");
+            assert_eq!(&outs[g], w, "group {g} workers={workers}");
+        }
+        assert!(results[want.len()].is_err(), "starved group must error");
+    }
 }
 
 // === GF(2^8) field axioms ===

@@ -184,6 +184,74 @@ fn reject_policy_and_routing_guards_error_at_registration() {
 }
 
 #[test]
+fn real_mode_coding_offload_keeps_loop_responsive_under_large_groups() {
+    // A tenant encoding huge FTGs (k ≈ 128, 2 KiB fragments — ~256 KiB
+    // of GF math per group) shares the daemon with small transfers.
+    // With coding offload enabled, the big groups' parity and decode
+    // run on the pool, so no single slot-service call may stall the
+    // event loop — and therefore the small transfers' timer deadlines —
+    // beyond the offload bound.
+    const BIG: usize = 512 * 1024;
+    const SMALL: usize = 4096;
+    const BIG_ID: u32 = 1000;
+    let (a, b) = mem_pair();
+    let mut d = Daemon::new(ServeConfig { coding_workers: 2, ..ServeConfig::default() });
+    let tx = d.add_socket(Box::new(a));
+    let rx = d.add_socket(Box::new(b));
+    let tenant = d.add_tenant("lab", u64::MAX, AdmissionPolicy::Queue);
+    let big_cfg = SenderConfig {
+        net: NetParams { t: 0.0005, r: 50_000.0, lambda: 0.0, n: 132, s: 2048 },
+        ..sender_cfg(50_000.0, 2_500.0)
+    };
+    d.register_receiver(tenant, rx, BIG_ID, recv_cfg(), BIG as u64).unwrap();
+    for id in 0..8u32 {
+        d.register_receiver(tenant, rx, id, recv_cfg(), SMALL as u64).unwrap();
+    }
+    d.register_sender(tenant, tx, BIG_ID, big_cfg, vec![payload(BIG_ID, BIG)], vec![1e-7])
+        .unwrap();
+    for id in 0..8u32 {
+        d.register_sender(
+            tenant,
+            tx,
+            id,
+            sender_cfg(50_000.0, 2_500.0),
+            vec![payload(id, SMALL)],
+            vec![1e-7],
+        )
+        .unwrap();
+    }
+
+    d.run_to_completion().unwrap();
+
+    let finished = d.take_finished();
+    assert_eq!(finished.len(), 18);
+    let mut big_jobs = 0u64;
+    for f in &finished {
+        assert!(f.outcome.is_ok(), "transfer {}: {:?}", f.id, f.outcome);
+        if let TransferOutcome::Received(rep) = &f.outcome {
+            let want = payload(f.id, if f.id == BIG_ID { BIG } else { SMALL });
+            assert_eq!(rep.levels[0].as_deref(), Some(&want[..]), "transfer {} bytes", f.id);
+        }
+        if f.id == BIG_ID {
+            big_jobs += f.coding_jobs;
+        }
+    }
+    assert!(big_jobs > 0, "the big transfer must have run coding jobs on the pool");
+    let (queued, completed) = d.coding_stats();
+    assert!(queued > 0, "offload enabled: jobs must route through the pool");
+    assert_eq!(queued, completed, "every queued job must complete");
+    // The offload bound: no slot-service call (which no longer encodes
+    // or decodes inline) may have stalled the shared loop for long.
+    // Generous for noisy CI runners; inline k=128 coding would not even
+    // be measured here, but its absence is what keeps service short.
+    assert!(
+        d.max_service_stall() < Duration::from_millis(250),
+        "event loop stalled {:?} — coding not off the loop?",
+        d.max_service_stall()
+    );
+}
+
+#[test]
 fn blocking_endpoint_dials_a_real_mode_daemon() {
     const SIZE: usize = 32_768;
     let (a, b) = mem_pair();
