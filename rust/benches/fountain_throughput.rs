@@ -1,0 +1,302 @@
+//! RS-vs-fountain duration matrix on a virtual clock: the same payload
+//! through both erasure backends across loss {1%, 5%, 20%} × one-way
+//! latency {2 ms, 50 ms}, plus a Gilbert-Elliott burst scenario. The
+//! pass-barrier RS pipeline pays ≥1 RTT per retransmission pass; the
+//! rateless fountain streams repair symbols ack-gated with no barrier,
+//! so its completion time is RTT-additive, not RTT-multiplicative. The
+//! virtual clock makes every duration a pure function of (seed, config)
+//! — no wall-time noise. Emits
+//! `target/bench-results/BENCH_fountain.json` (uploaded by CI) and
+//! gates: fountain must beat RS at 5% loss on the high-RTT path.
+
+use janus::api::{AdaptConfig, Contract};
+use janus::coordinator::packet::is_fragment;
+use janus::coordinator::{ReceiverConfig, SenderConfig};
+use janus::engine::{ReceiverMachine, SenderMachine};
+use janus::erasure::Backend;
+use janus::metrics::bench::{bench_scale, BenchTable};
+use janus::model::NetParams;
+use janus::testkit::LossTrace;
+use janus::util::Pcg64;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const RATE: f64 = 200_000.0;
+const BURST: f64 = 8.0;
+
+/// Minimal deterministic two-pipe network (the engine_sm harness, sans
+/// reordering): settable one-way latency, ordinal loss trace on the
+/// fragment/repair path, reliable control datagrams.
+struct Net {
+    now: Instant,
+    latency: Duration,
+    s2r: VecDeque<(Instant, Vec<u8>)>,
+    r2s: VecDeque<(Instant, Vec<u8>)>,
+    trace: LossTrace,
+    frag_tick: u64,
+}
+
+impl Net {
+    fn new(latency: Duration, trace: LossTrace) -> Net {
+        Net {
+            now: Instant::now(),
+            latency,
+            s2r: VecDeque::new(),
+            r2s: VecDeque::new(),
+            trace,
+            frag_tick: 0,
+        }
+    }
+
+    fn send_s2r(&mut self, buf: &[u8]) {
+        if is_fragment(buf) {
+            let tick = self.frag_tick;
+            self.frag_tick += 1;
+            if self.trace.drop_at(tick) {
+                return;
+            }
+        }
+        self.s2r.push_back((self.now + self.latency, buf.to_vec()));
+    }
+
+    fn due(q: &mut VecDeque<(Instant, Vec<u8>)>, now: Instant) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(&(at, _)) = q.front() {
+            if at > now {
+                break;
+            }
+            out.push(q.pop_front().unwrap().1);
+        }
+        out
+    }
+
+    fn next_arrival(&self) -> Option<Instant> {
+        self.s2r.front().iter().chain(self.r2s.front().iter()).map(|&&(at, _)| at).min()
+    }
+}
+
+fn pump(net: &mut Net, s: &mut SenderMachine, r: &mut ReceiverMachine) -> f64 {
+    let start = net.now;
+    let mut out = Vec::new();
+    let mut steps = 0u64;
+    while !(s.is_finished() && r.is_finished()) {
+        steps += 1;
+        assert!(steps < 50_000_000, "bench harness stalled");
+        let now = net.now;
+        let mut progressed = false;
+        for buf in Net::due(&mut net.s2r, now) {
+            r.handle_datagram(&buf, now);
+            progressed = true;
+        }
+        for buf in Net::due(&mut net.r2s, now) {
+            s.handle_datagram(&buf, now);
+            progressed = true;
+        }
+        while s.poll_transmit(&mut out, now) {
+            net.send_s2r(&out);
+            progressed = true;
+        }
+        while r.poll_transmit(&mut out, now) {
+            net.r2s.push_back((now + net.latency, out.clone()));
+            progressed = true;
+        }
+        if progressed {
+            continue;
+        }
+        let mut next = net.next_arrival();
+        for cand in [s.poll_timeout(), r.poll_timeout()] {
+            next = match (next, cand) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        let next = next.expect("bench harness: idle with no pending event");
+        net.now = next.max(now + Duration::from_nanos(100));
+        s.handle_timeout(net.now);
+        r.handle_timeout(net.now);
+    }
+    net.now.saturating_duration_since(start).as_secs_f64()
+}
+
+fn payload(total: usize) -> Vec<Vec<u8>> {
+    let mut rng = Pcg64::seeded(0xF0A7);
+    [total / 4, total * 3 / 4]
+        .iter()
+        .map(|&sz| {
+            let mut v = vec![0u8; sz.max(1)];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect()
+}
+
+struct Outcome {
+    scenario: String,
+    backend: &'static str,
+    loss: f64,
+    rtt_ms: f64,
+    virt_s: f64,
+    fragments: u64,
+    passes: u32,
+}
+
+fn run_one(
+    scenario: &str,
+    backend: Backend,
+    data: &[Vec<u8>],
+    loss: f64,
+    latency: Duration,
+    trace: LossTrace,
+) -> Outcome {
+    let scfg = SenderConfig {
+        net: NetParams { t: latency.as_secs_f64(), r: RATE, lambda: 0.0, n: 32, s: 1024 },
+        contract: Contract::Fidelity(1e-7),
+        initial_lambda: loss * RATE,
+        max_duration: Duration::from_secs(600),
+        plane_cuts: vec![],
+        adapt: AdaptConfig::fixed(),
+    };
+    let rcfg = ReceiverConfig {
+        t_w: 1e9,
+        idle_timeout: Duration::from_secs(300),
+        max_duration: Duration::from_secs(600),
+    };
+    let eps = vec![1e-3, 1e-7];
+    let mut net = Net::new(latency, trace);
+    let mut s = SenderMachine::with_backend(&scfg, data, &eps, backend, net.now)
+        .expect("sender machine");
+    let mut r = ReceiverMachine::new(&rcfg, net.now);
+    let virt_s = pump(&mut net, &mut s, &mut r);
+    assert!(!s.is_failed() && !r.is_failed(), "{scenario}: transfer failed");
+    let sr = s.into_report().expect("sender report");
+    let rr = r.into_report().expect("receiver report");
+    for (li, want) in data.iter().enumerate() {
+        assert_eq!(
+            rr.levels[li].as_deref(),
+            Some(&want[..]),
+            "{scenario}: level {li} bytes differ"
+        );
+    }
+    Outcome {
+        scenario: scenario.to_string(),
+        backend: if backend == Backend::Fountain { "fountain" } else { "rs" },
+        loss,
+        rtt_ms: 2.0 * latency.as_secs_f64() * 1e3,
+        virt_s,
+        fragments: sr.fragments_sent,
+        passes: sr.passes,
+    }
+}
+
+fn main() {
+    // Default ≈ 1.2 MB of payload; JANUS_SCALE=1 runs ~12 MB.
+    let scale = bench_scale(10);
+    let data = payload(12 * 1024 * 1024 / scale as usize);
+
+    let mut outcomes: Vec<Outcome> = Vec::new();
+    for &(rtt_name, latency) in
+        &[("lan", Duration::from_millis(2)), ("wan", Duration::from_millis(50))]
+    {
+        for &loss in &[0.01, 0.05, 0.20] {
+            for backend in [Backend::Rs, Backend::Fountain] {
+                let seed = 0x5EED ^ (((loss * 1e3) as u64) << 8);
+                let name = format!("{rtt_name}_{:.0}pct", loss * 100.0);
+                outcomes.push(run_one(
+                    &name,
+                    backend,
+                    &data,
+                    loss,
+                    latency,
+                    LossTrace::seeded(loss, seed),
+                ));
+            }
+        }
+        // Same mean loss arriving in bursts — the shape that defeats
+        // per-group parity but not a rateless stream.
+        for backend in [Backend::Rs, Backend::Fountain] {
+            outcomes.push(run_one(
+                &format!("{rtt_name}_ge_burst"),
+                backend,
+                &data,
+                0.05,
+                latency,
+                LossTrace::gilbert_elliott(0.05, BURST, RATE, 0x6E0B),
+            ));
+        }
+    }
+
+    let mut table = BenchTable::new(
+        "fountain",
+        vec!["scenario", "backend", "virt_s", "fragments", "passes"],
+    );
+    table.header();
+    for o in &outcomes {
+        table.row(
+            o.scenario.clone(),
+            vec![
+                o.backend.to_string(),
+                format!("{:.4}", o.virt_s),
+                format!("{}", o.fragments),
+                format!("{}", o.passes),
+            ],
+        );
+    }
+    table.save().unwrap();
+    write_json(&outcomes).expect("write BENCH_fountain.json");
+
+    // --- Acceptance gate (ISSUE 9): barrier-free repair must win where
+    // barriers are expensive — 5% loss on the 100 ms-RTT path.
+    let pick = |scenario: &str, backend: &str| {
+        outcomes
+            .iter()
+            .find(|o| o.scenario == scenario && o.backend == backend)
+            .unwrap_or_else(|| panic!("missing {scenario}/{backend}"))
+    };
+    let rs_wan = pick("wan_5pct", "rs");
+    let ft_wan = pick("wan_5pct", "fountain");
+    assert!(
+        ft_wan.virt_s < rs_wan.virt_s,
+        "fountain ({:.4}s) must beat RS ({:.4}s) at 5% loss over a 100 ms RTT",
+        ft_wan.virt_s,
+        rs_wan.virt_s
+    );
+    assert_eq!(ft_wan.passes, 0, "fountain never takes a retransmission pass");
+    println!(
+        "\nwan 5%: fountain {:.4}s vs rs {:.4}s ({} passes) — barrier-free repair wins {:.1}x",
+        ft_wan.virt_s,
+        rs_wan.virt_s,
+        rs_wan.passes,
+        rs_wan.virt_s / ft_wan.virt_s
+    );
+    println!("fountain_throughput complete.");
+}
+
+/// Save the matrix as JSON (CI uploads this artifact as `BENCH_fountain`).
+fn write_json(outcomes: &[Outcome]) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_fountain.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"fountain\",")?;
+    writeln!(f, "  \"nominal_rate\": {RATE},")?;
+    writeln!(f, "  \"burst_len\": {BURST},")?;
+    writeln!(f, "  \"scenarios\": [")?;
+    for (i, o) in outcomes.iter().enumerate() {
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"name\": \"{}\",", o.scenario)?;
+        writeln!(f, "      \"backend\": \"{}\",", o.backend)?;
+        writeln!(f, "      \"loss\": {},", o.loss)?;
+        writeln!(f, "      \"rtt_ms\": {:.1},", o.rtt_ms)?;
+        writeln!(f, "      \"virtual_s\": {:.6},", o.virt_s)?;
+        writeln!(f, "      \"fragments\": {},", o.fragments)?;
+        writeln!(f, "      \"passes\": {}", o.passes)?;
+        writeln!(f, "    }}{}", if i + 1 < outcomes.len() { "," } else { "" })?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    println!("json -> {}", path.display());
+    Ok(path)
+}

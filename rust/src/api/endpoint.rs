@@ -9,6 +9,8 @@ use crate::codec::Decoder;
 use crate::coordinator::pool::{PoolConfig, TransferPool};
 use crate::coordinator::receiver::{transfer_receiver, ReceiverConfig};
 use crate::coordinator::sender::{transfer_sender, SenderConfig};
+use crate::engine::{drive_receiver, drive_sender_backend};
+use crate::erasure::Backend;
 use crate::transport::channel::Datagram;
 use crate::util::err::Result;
 use std::sync::Mutex;
@@ -92,6 +94,19 @@ impl Endpoint {
                 plane_cuts,
                 adapt: spec.adaptation(),
             };
+            if spec.backend() == Backend::Fountain {
+                // Barrier-free rateless mode runs on the sans-IO machine
+                // (the blocking engine's loop is organized around pass
+                // barriers, which fountain transfers do not have).
+                let rep = drive_sender_backend(
+                    control.as_mut(),
+                    &cfg,
+                    &dataset.levels,
+                    &dataset.eps,
+                    Backend::Fountain,
+                )?;
+                return Ok(rep.into());
+            }
             let rep = transfer_sender(control.as_mut(), &cfg, &dataset.levels, &dataset.eps, sink)?;
             Ok(rep.into())
         } else {
@@ -127,7 +142,14 @@ impl Endpoint {
         };
         let mut control = transport.open_control()?;
         let mut summary: ReceiveSummary = if spec.streams() == 1 {
-            transfer_receiver(control.as_mut(), &rcfg, sink)?.into()
+            if spec.backend() == Backend::Fountain {
+                // The machine receiver auto-detects the fountain flag in
+                // the manifest; routing by spec keeps the two sides
+                // symmetric (and the blocking engine barrier-only).
+                drive_receiver(control.as_mut(), &rcfg)?.into()
+            } else {
+                transfer_receiver(control.as_mut(), &rcfg, sink)?.into()
+            }
         } else {
             let data = open_data_channels(transport, spec.streams())?;
             TransferPool::pooled_receiver(&mut control, data, &rcfg, sink)?.into()

@@ -69,6 +69,7 @@ pub use report::{
 pub use crate::coordinator::pool::{DeadlineOutcome, ShedDecision};
 // Congestion/burst adaptation knobs for `TransferSpecBuilder::adaptation`.
 pub use crate::coordinator::rate::AdaptConfig;
+pub use crate::erasure::Backend;
 pub use spec::{Contract, Dataset, SpecError, TransferSpec, TransferSpecBuilder};
 
 // The codec types a facade caller needs for `Dataset::from_volume` and

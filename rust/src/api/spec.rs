@@ -3,6 +3,7 @@
 
 use crate::codec::{self, CodecConfig, CodecError, Encoded};
 use crate::coordinator::rate::AdaptConfig;
+use crate::erasure::Backend;
 use crate::model::params::{LevelSchedule, NetParams, PlaneCut};
 use crate::refactor::Volume;
 use std::fmt;
@@ -72,6 +73,9 @@ pub enum SpecError {
     /// An [`AdaptConfig`] knob is out of range (message from
     /// [`AdaptConfig::validate`]).
     BadAdaptation(String),
+    /// The fountain backend streams one seeded symbol sequence per
+    /// group; it runs single-stream only (`streams == 1`).
+    FountainNeedsSingleStream(usize),
 }
 
 impl fmt::Display for SpecError {
@@ -113,6 +117,11 @@ impl fmt::Display for SpecError {
                 "dataset: need one epsilon per level, strictly decreasing, each in (0, 1]"
             ),
             SpecError::BadAdaptation(msg) => write!(f, "spec: {msg}"),
+            SpecError::FountainNeedsSingleStream(n) => write!(
+                f,
+                "spec: the fountain backend is single-stream (barrier-free repair \
+                 streaming), got streams = {n}"
+            ),
         }
     }
 }
@@ -219,6 +228,7 @@ pub struct TransferSpec {
     idle_timeout: Duration,
     max_duration: Duration,
     adapt: AdaptConfig,
+    backend: Backend,
 }
 
 impl TransferSpec {
@@ -262,6 +272,12 @@ impl TransferSpec {
     pub fn adaptation(&self) -> AdaptConfig {
         self.adapt
     }
+
+    /// Erasure backend (default [`Backend::Rs`] — pass-barrier RS repair,
+    /// byte-identical to every pre-backend release).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
 }
 
 /// Builder for [`TransferSpec`]. Defaults: `BestEffort`, 1 stream, the
@@ -279,6 +295,7 @@ pub struct TransferSpecBuilder {
     idle_timeout: Duration,
     max_duration: Duration,
     adapt: AdaptConfig,
+    backend: Backend,
 }
 
 impl Default for TransferSpecBuilder {
@@ -292,6 +309,7 @@ impl Default for TransferSpecBuilder {
             idle_timeout: Duration::from_secs(10),
             max_duration: Duration::from_secs(600),
             adapt: AdaptConfig::fixed(),
+            backend: Backend::Rs,
         }
     }
 }
@@ -368,6 +386,15 @@ impl TransferSpecBuilder {
         self
     }
 
+    /// Erasure backend selector. [`Backend::Rs`] (the default) keeps the
+    /// classic pass-barrier engines and byte-identical wire traces;
+    /// [`Backend::Fountain`] streams rateless repair symbols with compact
+    /// group acks and no EndOfPass/LostList barriers (DESIGN.md §12).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// Validate into an immutable [`TransferSpec`].
     pub fn build(self) -> Result<TransferSpec, SpecError> {
         if self.streams == 0 {
@@ -419,6 +446,9 @@ impl TransferSpecBuilder {
         if let Err(e) = self.adapt.validate() {
             return Err(SpecError::BadAdaptation(e.to_string()));
         }
+        if self.backend == Backend::Fountain && self.streams != 1 {
+            return Err(SpecError::FountainNeedsSingleStream(self.streams));
+        }
         let mut net = self.net;
         net.lambda = self.initial_lambda;
         Ok(TransferSpec {
@@ -430,6 +460,7 @@ impl TransferSpecBuilder {
             idle_timeout: self.idle_timeout,
             max_duration: self.max_duration,
             adapt: self.adapt,
+            backend: self.backend,
         })
     }
 }
@@ -614,6 +645,20 @@ mod tests {
         let r = Dataset::raw(vec![vec![0u8; 8]], vec![0.1]).unwrap();
         assert!(r.cuts.iter().all(|c| c.is_empty()));
         assert!(Dataset::from_volume(&Volume::zeros(16), &cfg).is_err());
+    }
+
+    #[test]
+    fn backend_defaults_rs_and_fountain_is_single_stream() {
+        let spec = TransferSpec::builder().build().unwrap();
+        assert_eq!(spec.backend(), Backend::Rs);
+        let spec = TransferSpec::builder().backend(Backend::Fountain).build().unwrap();
+        assert_eq!(spec.backend(), Backend::Fountain);
+        let err = TransferSpec::builder()
+            .backend(Backend::Fountain)
+            .streams(4)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::FountainNeedsSingleStream(4));
     }
 
     #[test]

@@ -19,6 +19,47 @@ use crate::refactor::lifting::{try_decompose, try_reconstruct, Volume};
 /// Floor for recorded ε values (a `Dataset` ladder must stay in (0, 1]).
 const EPS_FLOOR: f64 = 1e-12;
 
+/// Within-rung segment emission order (see [`encode_ordered`]).
+///
+/// Segment order never changes what a *full* rung decodes to — the
+/// decoder applies per-level plane windows independently — but it does
+/// change what a rung **prefix** certifies: the Deadline contract sheds
+/// at interior [`PlaneCut`] boundaries, so the ε reached per byte of
+/// rung is the shed schedule's quality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentOrder {
+    /// Coarse-to-fine level order — the legacy emission.
+    LevelOrder,
+    /// Greedy marginal-ε: each next segment is the one whose planes cut
+    /// the measured error the most. Falls back to [`SegmentOrder::LevelOrder`]
+    /// unless the greedy order's certified-ε step function dominates at
+    /// every byte budget, so reordering can never worsen a shed point.
+    MarginalEps,
+}
+
+/// Certified ε at `budget` bytes into a rung whose segment boundaries
+/// are `steps` (cumulative bytes, measured ε): the running minimum over
+/// boundaries inside the budget, starting from the previous rung's ε —
+/// exactly the semantics of the [`PlaneCut`] list the boundaries feed.
+fn certified_at(steps: &[(u64, f64)], budget: u64, start: f64) -> f64 {
+    let mut e = start;
+    for &(bytes, eps) in steps {
+        if bytes <= budget && eps < e {
+            e = eps;
+        }
+    }
+    e
+}
+
+/// Does emission order `a` certify an ε no worse than order `b` at
+/// *every* byte budget? Both step functions only change at their
+/// boundaries, so the union of boundary budgets is exhaustive.
+fn order_dominates(a: &[(u64, f64)], b: &[(u64, f64)], start: f64) -> bool {
+    a.iter()
+        .chain(b)
+        .all(|&(budget, _)| certified_at(a, budget, start) <= certified_at(b, budget, start) + 1e-15)
+}
+
 /// The serialized progressive container plus its measured metadata.
 #[derive(Debug, Clone)]
 pub struct Encoded {
@@ -62,8 +103,18 @@ struct LevelCtx {
 
 /// Encode `vol` against the config's ε ladder. Fails with a typed error
 /// on unsupported shapes, degenerate volumes, or rungs the plane budget
-/// cannot reach.
+/// cannot reach. Segments within each rung are scheduled by marginal ε
+/// reduction ([`SegmentOrder::MarginalEps`]).
 pub fn encode(vol: &Volume, cfg: &CodecConfig) -> Result<Encoded, CodecError> {
+    encode_ordered(vol, cfg, SegmentOrder::MarginalEps)
+}
+
+/// [`encode`] with an explicit within-rung segment order.
+pub fn encode_ordered(
+    vol: &Volume,
+    cfg: &CodecConfig,
+    order: SegmentOrder,
+) -> Result<Encoded, CodecError> {
     cfg.validate()?;
     if vol.data.iter().any(|v| !v.is_finite()) {
         return Err(CodecError::BadConfig("volume values must be finite"));
@@ -181,23 +232,122 @@ pub fn encode(vol: &Volume, cfg: &CodecConfig) -> Result<Encoded, CodecError> {
             return Err(CodecError::UnachievableEps { rung: r, requested: eps_req, best: measured });
         }
 
-        // Serialize the rung: one segment per level that gained planes,
-        // coarse level first, each stamped with the measured ε of the
-        // stream prefix ending at it.
+        // Schedule the rung's segments (one per level that gained
+        // planes). Level order measures each prefix as it goes; the
+        // marginal-ε greedy additionally searches, at every step, for
+        // the remaining segment whose planes cut the measured error the
+        // most — and is only kept if its certified-ε step function
+        // dominates level order at every byte budget.
+        let new_levels: Vec<usize> = (0..l).filter(|&i| b[i] > prev_b[i]).collect();
+        // Measured ε at each segment boundary of an emission order (the
+        // last boundary is the rung's `measured`, shared).
+        let boundary_eps = |seq: &[usize]| -> Result<Vec<f64>, CodecError> {
+            let mut cur = prev_b.clone();
+            let mut out = Vec::with_capacity(seq.len());
+            for (si, &i) in seq.iter().enumerate() {
+                cur[i] = b[i];
+                out.push(if si + 1 == seq.len() {
+                    measured
+                } else {
+                    measure(&cur)?.max(EPS_FLOOR)
+                });
+            }
+            Ok(out)
+        };
+        // Serialized length of level `i`'s segment — order-independent
+        // (`eps_after` is fixed-width), so a scratch write sizes it.
+        let seg_len = |i: usize| -> u64 {
+            let ctx = &ctxs[i];
+            let hdr = SegmentHeader {
+                level: i as u8,
+                plane_lo: prev_b[i],
+                plane_hi: b[i],
+                planes_total: ctx.block.planes,
+                e_max: ctx.block.e_max,
+                coeff_count: ctx.block.len as u64,
+                eps_after: 0.0,
+            };
+            let plane_refs: Vec<&[u8]> = ctx.block.plane_bits
+                [prev_b[i] as usize..b[i] as usize]
+                .iter()
+                .map(|p| p.as_slice())
+                .collect();
+            let signs =
+                if prev_b[i] == 0 { Some(ctx.block.signs.as_slice()) } else { None };
+            let mut scratch = Vec::new();
+            super::container::write_segment(&mut scratch, &hdr, signs, &plane_refs);
+            scratch.len() as u64
+        };
+        let steps_of = |seq: &[usize], eps: &[f64]| -> Vec<(u64, f64)> {
+            let mut acc = 0u64;
+            seq.iter()
+                .zip(eps)
+                .map(|(&i, &e)| {
+                    acc += seg_len(i);
+                    (acc, e)
+                })
+                .collect()
+        };
+        let (emit, emit_eps) = match order {
+            SegmentOrder::MarginalEps if new_levels.len() > 1 => {
+                let mut remaining = new_levels.clone();
+                let mut cur = prev_b.clone();
+                let mut seq = Vec::with_capacity(new_levels.len());
+                let mut seq_eps = Vec::with_capacity(new_levels.len());
+                while !remaining.is_empty() {
+                    if remaining.len() == 1 {
+                        let i = remaining.pop().expect("non-empty");
+                        cur[i] = b[i];
+                        seq.push(i);
+                        seq_eps.push(measured);
+                        break;
+                    }
+                    // Ties break toward the lower level index (the
+                    // `<` comparison), keeping the schedule
+                    // deterministic.
+                    let mut best = 0usize;
+                    let mut best_eps = f64::INFINITY;
+                    for (ci, &i) in remaining.iter().enumerate() {
+                        let saved = cur[i];
+                        cur[i] = b[i];
+                        let e = measure(&cur)?.max(EPS_FLOOR);
+                        cur[i] = saved;
+                        if e < best_eps {
+                            best_eps = e;
+                            best = ci;
+                        }
+                    }
+                    let i = remaining.remove(best);
+                    cur[i] = b[i];
+                    seq.push(i);
+                    seq_eps.push(best_eps);
+                }
+                let lvl_eps = boundary_eps(&new_levels)?;
+                let greedy_steps = steps_of(&seq, &seq_eps);
+                let lvl_steps = steps_of(&new_levels, &lvl_eps);
+                if order_dominates(&greedy_steps, &lvl_steps, prev_eps) {
+                    (seq, seq_eps)
+                } else {
+                    (new_levels.clone(), lvl_eps)
+                }
+            }
+            _ => {
+                let eps = boundary_eps(&new_levels)?;
+                (new_levels.clone(), eps)
+            }
+        };
+
+        // Serialize the rung in the chosen order, each segment stamped
+        // with the measured ε of the stream prefix ending at it.
         let mut bytes = Vec::new();
         if r == 0 {
             StreamHeader { d: vol.d, levels: l, ladder: cfg.ladder.clone() }
                 .encode_into(&mut bytes);
         }
-        let new_levels: Vec<usize> = (0..l).filter(|&i| b[i] > prev_b[i]).collect();
         let mut cuts = Vec::new();
-        let mut cur = prev_b.clone();
         let mut last_boundary_eps = prev_eps;
-        for (si, &i) in new_levels.iter().enumerate() {
-            cur[i] = b[i];
-            let last = si + 1 == new_levels.len();
-            let eps_after =
-                if last { measured } else { measure(&cur)?.max(EPS_FLOOR) };
+        for (si, (&i, &eps_after)) in emit.iter().zip(&emit_eps).enumerate() {
+            let last = si + 1 == emit.len();
             let ctx = &ctxs[i];
             let hdr = SegmentHeader {
                 level: i as u8,

@@ -26,6 +26,11 @@
 //! ```
 //!
 //! * [`encode`] / [`Encoded`] — build the container from a volume.
+//!   Within each rung, segments are scheduled by greedy marginal-ε
+//!   reduction ([`SegmentOrder::MarginalEps`], with a dominance gate
+//!   that falls back to level order), so a byte budget cut mid-rung —
+//!   the Deadline contract's plane-cut shed — certifies the smallest
+//!   reachable ε. [`encode_ordered`] exposes the order explicitly.
 //! * [`Decoder`] / [`DecodeOutput`] — progressive reconstruction from
 //!   any rung/plane prefix, reporting the recorded achieved ε.
 //! * [`container`] — the segment wire format.
@@ -38,7 +43,7 @@ pub mod encoder;
 
 pub use container::{ParsedSegment, SegmentHeader, StreamHeader};
 pub use decoder::{DecodeOutput, Decoder};
-pub use encoder::{encode, Encoded};
+pub use encoder::{encode, encode_ordered, Encoded, SegmentOrder};
 
 use crate::refactor::ShapeError;
 use std::fmt;

@@ -11,7 +11,8 @@
 //! [`crate::erasure::RsCode::reconstruct_into`] want their operands
 //! (DESIGN.md §6).
 
-use crate::erasure::{RsCode, RsError};
+use crate::erasure::backend::ErasureBackend;
+use crate::erasure::RsError;
 
 /// Presence bitmap width: wire fragment indices are `u8`, so 256 bits
 /// cover every legal slot.
@@ -182,7 +183,7 @@ impl FtgArena {
     }
 
     /// Raw strided buffer — `k` data slots then parity slots — for
-    /// [`RsCode::encode_strided`].
+    /// [`crate::erasure::RsCode::encode_strided`].
     pub fn as_mut_slice(&mut self) -> &mut [u8] {
         &mut self.buf
     }
@@ -209,9 +210,11 @@ impl FtgArena {
         }
     }
 
-    /// Reed–Solomon-encode the parity slots from the data slots in place
-    /// and mark every slot present (the sender's one-allocation path).
-    pub fn encode_parity(&mut self, code: &RsCode) -> Result<(), RsError> {
+    /// Encode the parity slots from the data slots in place and mark
+    /// every slot present (the sender's one-allocation path). Generic
+    /// over [`ErasureBackend`] so the arena works unchanged for any
+    /// coding backend — rateless backends simply have zero parity slots.
+    pub fn encode_parity<B: ErasureBackend + ?Sized>(&mut self, code: &B) -> Result<(), RsError> {
         let s = self.s;
         code.encode_strided(&mut self.buf, s)?;
         let n = self.slots();
@@ -304,7 +307,7 @@ mod tests {
 
     #[test]
     fn encode_parity_fills_and_marks_all_slots() {
-        let code = RsCode::new(4, 2).unwrap();
+        let code = crate::erasure::RsCode::new(4, 2).unwrap();
         let mut a = FtgArena::new(4, 2, 32);
         for i in 0..4usize {
             a.slot_mut(i).fill(i as u8 + 1);

@@ -49,7 +49,8 @@ pub use estimate::{
     EwmaEstimator, LambdaEstimator, PassObservation, TwoStateEstimator, WindowEstimator,
 };
 pub use packet::{
-    FragmentHeader, FragmentView, Manifest, ManifestLevel, Packet, PacketView, WireError,
+    FragmentHeader, FragmentView, Manifest, ManifestLevel, Packet, PacketView, RepairHeader,
+    RepairView, WireError,
 };
 pub use pool::{
     DeadlineOutcome, PassRecord, PoolConfig, PoolReceiverReport, PoolSenderReport,

@@ -84,6 +84,17 @@ pub enum Packet {
     /// ahead of every later `EndOfPass` so a lossy control path
     /// converges on the same manifest state.
     LevelShed { level: u8, bytes: u64, eps: f64 },
+    /// Sender → receiver (fountain mode): one rateless symbol of group
+    /// `header.group`. Symbols with `esi < k` are systematic source
+    /// fragments; `esi ≥ k` are seeded LT combinations. Rides the data
+    /// path (loss-injected like fragments), never the control path.
+    RepairSymbol(RepairHeader, Vec<u8>),
+    /// Receiver → sender (fountain mode): compact cumulative group ack —
+    /// every global group id `< upto` has decoded, and bit `i` of
+    /// `bitmap` marks group `upto + i` decoded too. Replaces the
+    /// EndOfPass/LostList barrier exchange; idempotent and monotone, so
+    /// a duplicated or reordered ack never un-retires a group.
+    GroupAck { upto: u32, bitmap: u64 },
 }
 
 /// Fragment metadata (the paper's per-packet erasure-coding metadata).
@@ -106,6 +117,23 @@ pub struct FragmentHeader {
     pub seq: u64,
     /// Retransmission pass that produced this copy.
     pub pass: u32,
+}
+
+/// Rateless-symbol metadata (fountain mode's counterpart of
+/// [`FragmentHeader`]). Groups are addressed by a flat global id — both
+/// endpoints enumerate the manifest's levels in order and stride each
+/// into `k`-fragment groups, so the id needs no (level, ftg) pair on the
+/// wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepairHeader {
+    /// Global group id (manifest enumeration order).
+    pub group: u32,
+    /// Encoding symbol id: `< k` systematic source, `≥ k` LT repair.
+    pub esi: u32,
+    /// Transfer-wide seed the symbol's neighbor set derives from.
+    pub seed: u64,
+    /// Wire sequence number (loss detection / λ̂ windows at the receiver).
+    pub seq: u64,
 }
 
 /// One level entry of the transfer manifest.
@@ -137,9 +165,27 @@ pub struct Manifest {
     pub streams: u8,
     /// Per-level entries, in transmission order.
     pub levels: Vec<ManifestLevel>,
-    /// Contract: 0 = guaranteed error bound (Alg. 1, retransmission on),
-    /// 1 = guaranteed time (Alg. 2 / pooled pass-barrier τ accounting).
+    /// Low nibble: 0 = guaranteed error bound (Alg. 1, retransmission
+    /// on), 1 = guaranteed time (Alg. 2 / pooled pass-barrier τ
+    /// accounting). Bit [`CONTRACT_FOUNTAIN`]: the transfer streams
+    /// rateless symbols instead of RS passes. RS manifests never set the
+    /// flag, keeping legacy encodings byte-identical.
     pub contract: u8,
+}
+
+/// Bit of the manifest `contract` byte marking a fountain-mode transfer.
+pub const CONTRACT_FOUNTAIN: u8 = 0x10;
+
+impl Manifest {
+    /// Does this manifest announce a rateless (fountain) transfer?
+    pub fn is_fountain(&self) -> bool {
+        self.contract & CONTRACT_FOUNTAIN != 0
+    }
+
+    /// The contract id with mode flags masked off.
+    pub fn contract_mode(&self) -> u8 {
+        self.contract & !CONTRACT_FOUNTAIN
+    }
 }
 
 const KIND_FRAGMENT: u8 = 1;
@@ -153,12 +199,18 @@ const KIND_STREAM_END: u8 = 8;
 const KIND_PASS_STATS: u8 = 9;
 const KIND_LEVEL_SHED: u8 = 10;
 const KIND_TRANSFER_TAG: u8 = 11;
+const KIND_REPAIR: u8 = 12;
+const KIND_GROUP_ACK: u8 = 13;
 
 /// Bytes per manifest level entry on the wire: size + ε + m0 + cut flag.
 const MANIFEST_LEVEL_BYTES: usize = 8 + 8 + 1 + 1;
 
 /// Fragment wire header length after the kind byte.
 const FRAGMENT_HEADER: usize = 1 + 1 + 4 + 1 + 1 + 1 + 8 + 4 + 4;
+
+/// Repair-symbol wire header length after the kind byte:
+/// group + esi + seed + seq + payload length.
+const REPAIR_HEADER: usize = 4 + 4 + 8 + 8 + 4;
 
 fn crc(buf: &[u8]) -> u32 {
     let mut h = Hasher::new();
@@ -168,14 +220,17 @@ fn crc(buf: &[u8]) -> u32 {
 
 /// Cheap peek: is this (unvalidated) datagram a data fragment? Loss
 /// injectors use it to drop only the data path, like the paper's WAN
-/// substitute — control packets model a reliable side channel. Sees
-/// through a transfer-tag envelope so the testkit's loss and congestion
-/// channels gate `janus serve` traffic the same way they gate legacy
-/// single-transfer traffic.
+/// substitute — control packets model a reliable side channel. Fountain
+/// repair symbols are the data path of rateless transfers, so they count
+/// too. Sees through a transfer-tag envelope so the testkit's loss and
+/// congestion channels gate `janus serve` traffic the same way they gate
+/// legacy single-transfer traffic.
 pub fn is_fragment(buf: &[u8]) -> bool {
     match buf.first() {
-        Some(&KIND_FRAGMENT) => true,
-        Some(&KIND_TRANSFER_TAG) => buf.get(TAG_BYTES) == Some(&KIND_FRAGMENT),
+        Some(&KIND_FRAGMENT) | Some(&KIND_REPAIR) => true,
+        Some(&KIND_TRANSFER_TAG) => {
+            matches!(buf.get(TAG_BYTES), Some(&KIND_FRAGMENT) | Some(&KIND_REPAIR))
+        }
         _ => false,
     }
 }
@@ -250,6 +305,23 @@ fn parse_fragment(rest: &[u8], total: usize) -> Result<(FragmentHeader, &[u8]), 
     ))
 }
 
+/// Parse a repair-symbol body (everything after the kind byte),
+/// borrowing the payload. `total` is the datagram length, for errors.
+fn parse_repair(rest: &[u8], total: usize) -> Result<(RepairHeader, &[u8]), WireError> {
+    if rest.len() < REPAIR_HEADER {
+        return Err(WireError::Truncated(total));
+    }
+    let group = u32::from_le_bytes(rest[..4].try_into().unwrap());
+    let esi = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+    let seed = u64::from_le_bytes(rest[8..16].try_into().unwrap());
+    let seq = u64::from_le_bytes(rest[16..24].try_into().unwrap());
+    let len = u32::from_le_bytes(rest[24..28].try_into().unwrap()) as usize;
+    if rest.len() < REPAIR_HEADER + len {
+        return Err(WireError::Truncated(total));
+    }
+    Ok((RepairHeader { group, esi, seed, seq }, &rest[REPAIR_HEADER..REPAIR_HEADER + len]))
+}
+
 /// Borrowed view of one fragment: header parsed, payload still sitting
 /// in the receive buffer — the receiver copies it exactly once, into its
 /// [`crate::coordinator::arena::FtgArena`] slot.
@@ -259,12 +331,20 @@ pub struct FragmentView<'a> {
     pub payload: &'a [u8],
 }
 
-/// Zero-copy decode of a datagram: fragments borrow their payload from
-/// the input buffer; control packets (small, off the hot path) decode to
-/// the owned [`Packet`].
+/// Borrowed view of one rateless symbol (fountain mode's hot path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepairView<'a> {
+    pub header: RepairHeader,
+    pub payload: &'a [u8],
+}
+
+/// Zero-copy decode of a datagram: fragments and repair symbols borrow
+/// their payload from the input buffer; control packets (small, off the
+/// hot path) decode to the owned [`Packet`].
 #[derive(Debug, PartialEq)]
 pub enum PacketView<'a> {
     Fragment(FragmentView<'a>),
+    Repair(RepairView<'a>),
     Control(Packet),
 }
 
@@ -276,6 +356,9 @@ impl<'a> PacketView<'a> {
         if body[0] == KIND_FRAGMENT {
             let (header, payload) = parse_fragment(&body[1..], buf.len())?;
             Ok(PacketView::Fragment(FragmentView { header, payload }))
+        } else if body[0] == KIND_REPAIR {
+            let (header, payload) = parse_repair(&body[1..], buf.len())?;
+            Ok(PacketView::Repair(RepairView { header, payload }))
         } else {
             Ok(PacketView::Control(Packet::decode_body(body, buf.len())?))
         }
@@ -295,6 +378,21 @@ pub fn encode_fragment_into(h: &FragmentHeader, payload: &[u8], out: &mut Vec<u8
     out.push(h.m);
     out.extend_from_slice(&h.seq.to_le_bytes());
     out.extend_from_slice(&h.pass.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let c = crc(out);
+    out.extend_from_slice(&c.to_le_bytes());
+}
+
+/// Serialize a repair symbol without constructing a [`Packet`] (the
+/// fountain sender hot path: avoids cloning the payload into the enum).
+pub fn encode_repair_into(h: &RepairHeader, payload: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.push(KIND_REPAIR);
+    out.extend_from_slice(&h.group.to_le_bytes());
+    out.extend_from_slice(&h.esi.to_le_bytes());
+    out.extend_from_slice(&h.seed.to_le_bytes());
+    out.extend_from_slice(&h.seq.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(payload);
     let c = crc(out);
@@ -400,6 +498,20 @@ impl Packet {
                 out.extend_from_slice(&bytes.to_le_bytes());
                 out.extend_from_slice(&eps.to_le_bytes());
             }
+            Packet::RepairSymbol(h, payload) => {
+                out.push(KIND_REPAIR);
+                out.extend_from_slice(&h.group.to_le_bytes());
+                out.extend_from_slice(&h.esi.to_le_bytes());
+                out.extend_from_slice(&h.seed.to_le_bytes());
+                out.extend_from_slice(&h.seq.to_le_bytes());
+                out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                out.extend_from_slice(payload);
+            }
+            Packet::GroupAck { upto, bitmap } => {
+                out.push(KIND_GROUP_ACK);
+                out.extend_from_slice(&upto.to_le_bytes());
+                out.extend_from_slice(&bitmap.to_le_bytes());
+            }
         }
         let c = crc(out);
         out.extend_from_slice(&c.to_le_bytes());
@@ -504,6 +616,17 @@ impl Packet {
                     eps: f64::from_le_bytes(rest[9..17].try_into().unwrap()),
                 })
             }
+            KIND_REPAIR => {
+                let (header, payload) = parse_repair(rest, total)?;
+                Ok(Packet::RepairSymbol(header, payload.to_vec()))
+            }
+            KIND_GROUP_ACK => {
+                need(4 + 8)?;
+                Ok(Packet::GroupAck {
+                    upto: u32::from_le_bytes(rest[..4].try_into().unwrap()),
+                    bitmap: u64::from_le_bytes(rest[4..12].try_into().unwrap()),
+                })
+            }
             k => Err(WireError::UnknownKind(k)),
         }
     }
@@ -579,6 +702,62 @@ mod tests {
         });
         roundtrip(Packet::LevelShed { level: 3, bytes: 40 * 1024, eps: 0.0042 });
         roundtrip(Packet::LevelShed { level: 0, bytes: 0, eps: 1.0 });
+    }
+
+    #[test]
+    fn repair_and_group_ack_roundtrip() {
+        roundtrip(Packet::RepairSymbol(
+            RepairHeader { group: 123_456, esi: 7, seed: 0xFEED_FACE_CAFE_BEEF, seq: 99 },
+            vec![0x5D; 4096],
+        ));
+        roundtrip(Packet::RepairSymbol(
+            RepairHeader { group: 0, esi: 0, seed: 0, seq: 0 },
+            vec![],
+        ));
+        roundtrip(Packet::GroupAck { upto: 0, bitmap: 0 });
+        roundtrip(Packet::GroupAck { upto: u32::MAX, bitmap: u64::MAX });
+    }
+
+    #[test]
+    fn repair_fast_path_matches_enum_encoding() {
+        let h = RepairHeader { group: 9, esi: 40, seed: 0x1234_5678, seq: 1_000_000 };
+        let payload = vec![0xA7u8; 777];
+        let mut fast = Vec::new();
+        encode_repair_into(&h, &payload, &mut fast);
+        assert_eq!(fast, Packet::RepairSymbol(h, payload.clone()).encode());
+        // Repair symbols are the fountain data path: loss-injected like
+        // fragments, directly and through a transfer-tag envelope.
+        assert!(is_fragment(&fast));
+        let mut tagged = Vec::new();
+        encode_tagged(3, &fast, &mut tagged);
+        assert!(is_fragment(&tagged));
+        // And the borrowing view decode matches the owned decode.
+        match PacketView::decode(&fast).unwrap() {
+            PacketView::Repair(view) => {
+                assert_eq!(view.header, h);
+                assert_eq!(view.payload, &payload[..]);
+                let base = fast.as_ptr() as usize;
+                let p = view.payload.as_ptr() as usize;
+                assert!(p >= base && p < base + fast.len());
+            }
+            other => panic!("expected repair view, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn group_ack_is_control_not_data() {
+        let buf = Packet::GroupAck { upto: 5, bitmap: 0b101 }.encode();
+        assert!(!is_fragment(&buf), "acks ride the reliable control path");
+    }
+
+    #[test]
+    fn fountain_flag_masks_out_of_contract() {
+        let mut m = Manifest { n: 32, s: 1024, streams: 1, levels: vec![], contract: 1 };
+        assert!(!m.is_fountain());
+        assert_eq!(m.contract_mode(), 1);
+        m.contract |= CONTRACT_FOUNTAIN;
+        assert!(m.is_fountain());
+        assert_eq!(m.contract_mode(), 1, "mode bits survive the flag");
     }
 
     #[test]

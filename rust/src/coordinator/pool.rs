@@ -1509,9 +1509,44 @@ fn collect_lost(
     lost
 }
 
+/// Decode-worker budget for the pooled receiver's batched RS recovery:
+/// `JANUS_POOL_DECODE_WORKERS` overrides (0 = caller-drains, still
+/// correct), else the same modest clamp the sender's encode pool uses.
+fn decode_workers() -> usize {
+    match std::env::var("JANUS_POOL_DECODE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(w) => w.min(64),
+        None => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(4),
+    }
+}
+
+/// One RS-decodable group queued for the batched recovery phase of
+/// [`reconstruct_levels`], remembering where its `k·s` bytes land in
+/// the level buffer.
+struct DecodeJobItem<'a> {
+    level: usize,
+    ftg: u32,
+    start: usize,
+    k: u8,
+    m_seen: u8,
+    arena: &'a FtgArena,
+    buf: Vec<u8>,
+    ok: bool,
+}
+
 /// Rebuild the exact level bytes from the shared group table. Levels the
 /// sender abandoned (`abandoned[li]`) stay `None`; levels shed to a
 /// plane-cut prefix reconstruct up to their (shrunken) advertised size.
+///
+/// Recovery is batched: a first sequential walk copies complete groups
+/// and queues every decodable one, then same-geometry runs fan across a
+/// [`CodingPool`] via [`RsCode::reconstruct_batch`]. Delivered bytes,
+/// `GroupRecovered` event order and `groups_recovered` are byte-for-byte
+/// identical to the old one-group-at-a-time loop for any worker count
+/// (the erasure::par determinism contract; asserted by
+/// `tests/pool_e2e.rs`).
 fn reconstruct_levels(
     manifest: &Manifest,
     groups: &HashMap<(u8, u32), FtgArena>,
@@ -1520,7 +1555,15 @@ fn reconstruct_levels(
     report: &mut PoolReceiverReport,
     events: EventSink<'_>,
 ) -> Result<()> {
-    let mut codes: HashMap<(u8, u8), RsCode> = HashMap::new();
+    let num_levels = manifest.levels.len();
+    // === Phase 1: sequential layout walk ===
+    // Complete groups are copied straight into the level buffer;
+    // decodable groups reserve their range (zero-filled) and join the
+    // batch. A missing/undecodable group ends the level's walk exactly
+    // where the sequential loop stopped.
+    let mut outs: Vec<Option<Vec<u8>>> = (0..num_levels).map(|_| None).collect();
+    let mut walk_ok = vec![false; num_levels];
+    let mut pending: Vec<DecodeJobItem<'_>> = Vec::new();
     for (li, entry) in manifest.levels.iter().enumerate() {
         if abandoned[li] {
             continue; // stays None: no usable prefix of this level
@@ -1537,32 +1580,19 @@ fn reconstruct_levels(
                     }
                 }
                 Some(g) if g.decodable() => {
-                    // Reed–Solomon recovery over whatever mix of passes'
-                    // fragments arrived (parity rows nest in m), decoded
-                    // straight into the level buffer with the
-                    // survivor-pattern matrix cache.
                     let k = g.k();
                     let m_seen = (g.slots() - k as usize) as u8;
-                    let code = codes.entry((k, m_seen)).or_insert_with(|| {
-                        RsCode::new(k as usize, m_seen as usize).expect("valid k,m")
+                    pending.push(DecodeJobItem {
+                        level: li,
+                        ftg,
+                        start: out.len(),
+                        k,
+                        m_seen,
+                        arena: g,
+                        buf: vec![0u8; k as usize * s],
+                        ok: false,
                     });
-                    let shards: Vec<(usize, &[u8])> = g.iter_present().collect();
-                    let start_len = out.len();
-                    out.resize(start_len + k as usize * s, 0);
-                    match code.reconstruct_into(&shards, &mut out[start_len..]) {
-                        Ok(()) => {
-                            report.groups_recovered += 1;
-                            emit(
-                                events,
-                                TransferEvent::GroupRecovered { level: li as u8, ftg },
-                            );
-                        }
-                        Err(_) => {
-                            out.truncate(start_len);
-                            ok = false;
-                            break;
-                        }
-                    }
+                    out.resize(out.len() + k as usize * s, 0);
                 }
                 _ => {
                     ok = false;
@@ -1571,8 +1601,62 @@ fn reconstruct_levels(
             }
             ftg += 1;
         }
-        if ok {
-            out.truncate(size as usize);
+        walk_ok[li] = ok;
+        outs[li] = Some(out);
+    }
+
+    // === Phase 2: batched Reed–Solomon recovery ===
+    // Stable-sort by geometry so each `(k, m_seen)` run shares one
+    // survivor-pattern matrix cache family and one batch submission.
+    if !pending.is_empty() {
+        let pool = CodingPool::new(decode_workers());
+        let mut codes: HashMap<(u8, u8), RsCode> = HashMap::new();
+        pending.sort_by_key(|it| (it.k, it.m_seen));
+        let mut rest: &mut [DecodeJobItem<'_>] = &mut pending;
+        while !rest.is_empty() {
+            let geom = (rest[0].k, rest[0].m_seen);
+            let len = rest.iter().take_while(|it| (it.k, it.m_seen) == geom).count();
+            let (run, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let code = codes.entry(geom).or_insert_with(|| {
+                RsCode::new(geom.0 as usize, geom.1 as usize).expect("valid k,m")
+            });
+            let mut items: Vec<(&FtgArena, &mut [u8])> =
+                run.iter_mut().map(|it| (it.arena, it.buf.as_mut_slice())).collect();
+            let results = code.reconstruct_batch(&pool, &mut items);
+            drop(items);
+            for (it, res) in run.iter_mut().zip(results) {
+                it.ok = res.is_ok();
+            }
+        }
+        pending.sort_by_key(|it| (it.level, it.ftg)); // restore walk order
+    }
+
+    // === Phase 3: sequential stitch ===
+    // Events and `groups_recovered` replay the old loop exactly: within
+    // a level, decoded groups are announced in ftg order up to the first
+    // failure; a failed decode (like a failed walk) leaves the level
+    // `None`.
+    let mut idx = 0usize;
+    for li in 0..num_levels {
+        let Some(mut out) = outs[li].take() else { continue };
+        let mut failed = false;
+        while idx < pending.len() && pending[idx].level == li {
+            let it = &pending[idx];
+            idx += 1;
+            if failed {
+                continue;
+            }
+            if it.ok {
+                out[it.start..it.start + it.buf.len()].copy_from_slice(&it.buf);
+                report.groups_recovered += 1;
+                emit(events, TransferEvent::GroupRecovered { level: li as u8, ftg: it.ftg });
+            } else {
+                failed = true;
+            }
+        }
+        if walk_ok[li] && !failed {
+            out.truncate(manifest.levels[li].size as usize);
             report.levels[li] = Some(out);
         }
     }

@@ -306,7 +306,7 @@ pub(crate) fn transfer_sender(
                         offset += s;
                         remaining = remaining.saturating_sub(s);
                     }
-                    arena.encode_parity(code).expect("encode");
+                    arena.encode_parity(&*code).expect("encode");
                     frag_counter += arena.slots() as u64;
                     enc_stats2.store(
                         (frag_counter as f64 / enc_start.elapsed().as_secs_f64().max(1e-9))

@@ -13,6 +13,7 @@ use crate::coordinator::packet::MAX_DATAGRAM;
 use crate::coordinator::receiver::{ReceiverConfig, ReceiverReport};
 use crate::coordinator::sender::{SenderConfig, SenderReport};
 use crate::engine::{ReceiverMachine, SenderMachine};
+use crate::erasure::Backend;
 use crate::transport::channel::Datagram;
 use crate::util::err::Result;
 use std::time::{Duration, Instant};
@@ -121,7 +122,20 @@ pub fn drive_sender(
     levels: &[Vec<u8>],
     eps: &[f64],
 ) -> Result<SenderReport> {
-    let mut m = SenderMachine::new(cfg, levels, eps, Instant::now())?;
+    drive_sender_backend(chan, cfg, levels, eps, Backend::Rs)
+}
+
+/// [`drive_sender`] with an explicit erasure backend
+/// ([`Backend::Fountain`] = barrier-free rateless repair streaming; the
+/// receive side needs no flag — it follows the manifest).
+pub fn drive_sender_backend(
+    chan: &mut dyn Datagram,
+    cfg: &SenderConfig,
+    levels: &[Vec<u8>],
+    eps: &[f64],
+    backend: Backend,
+) -> Result<SenderReport> {
+    let mut m = SenderMachine::with_backend(cfg, levels, eps, backend, Instant::now())?;
     drive(&mut m, chan);
     m.into_report()
 }

@@ -40,6 +40,6 @@ pub mod driver;
 pub mod receiver;
 pub mod sender;
 
-pub use driver::{drive_receiver, drive_sender};
+pub use driver::{drive_receiver, drive_sender, drive_sender_backend};
 pub use receiver::{DecodeJob, ReceiverMachine};
 pub use sender::{EncodeJob, SenderMachine};

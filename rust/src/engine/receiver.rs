@@ -16,10 +16,54 @@ use crate::coordinator::packet::{
 use crate::coordinator::receiver::{
     collect_lost, reconstruct_levels, usable_prefix, ReceiverConfig, ReceiverReport,
 };
-use crate::erasure::RsCode;
+use crate::engine::sender::fountain_table;
+use crate::erasure::{FountainDecoder, LtCode, RsCode};
 use crate::util::err::Result;
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
+
+/// Rateless receive state ([`crate::erasure::Backend::Fountain`]),
+/// entered when the manifest carries the fountain contract flag — the
+/// receive side needs no configuration, it follows the wire.
+struct FountainRx {
+    /// `(level, byte-offset-in-level, k)` per global group id, in the
+    /// shared manifest enumeration order (see
+    /// [`crate::engine::sender::fountain_table`]).
+    groups: Vec<(u8, usize, usize)>,
+    /// `(level, ftg) → global group id` for systematic fragments.
+    map: HashMap<(u8, u32), u32>,
+    /// Lazily created per-group decoders, dropped on completion.
+    decoders: HashMap<u32, FountainDecoder>,
+    done: Vec<bool>,
+    /// Groups that received at least one repair (non-systematic) symbol.
+    saw_repair: Vec<bool>,
+    completed: usize,
+    /// Completed groups that needed repair symbols (report statistic —
+    /// the fountain analogue of `groups_recovered`).
+    repaired: u64,
+    /// Assembled level payloads (written group by group).
+    levels: Vec<Vec<u8>>,
+    /// Symbols since the last ack went out (periodic re-ack cadence).
+    since_ack: u32,
+}
+
+/// Re-ack cadence: a fresh [`Packet::GroupAck`] also goes out every
+/// this many received symbols, so a lost ack only costs a short burst
+/// of redundant repair symbols, never a stall.
+const ACK_EVERY: u32 = 32;
+
+/// Compress the done-set into the compact ack: `upto` = longest fully
+/// complete prefix, `bitmap` = the 64 groups after it.
+fn ack_of(done: &[bool]) -> (u32, u64) {
+    let upto = done.iter().take_while(|&&d| d).count();
+    let mut bitmap = 0u64;
+    for (b, &d) in done[upto..].iter().take(64).enumerate() {
+        if d {
+            bitmap |= 1u64 << b;
+        }
+    }
+    (upto as u32, bitmap)
+}
 
 #[derive(Clone, Copy, Debug)]
 enum State {
@@ -79,6 +123,8 @@ pub struct ReceiverMachine {
     coding_offload: bool,
     pending_decode: Option<DecodeJob>,
     decode_inflight: bool,
+    // Rateless decode state (None = classic RS pass barriers).
+    fountain: Option<FountainRx>,
     report: ReceiverReport,
     error: Option<String>,
 }
@@ -105,6 +151,7 @@ impl ReceiverMachine {
             coding_offload: false,
             pending_decode: None,
             decode_inflight: false,
+            fountain: None,
             report: ReceiverReport {
                 levels: Vec::new(),
                 achieved_eps: 1.0,
@@ -130,12 +177,46 @@ impl ReceiverMachine {
                     }
                     self.pending.push_back(Packet::ManifestAck.encode());
                     self.report.levels = vec![None; m.levels.len()];
-                    self.retransmitting = m.contract == 0;
+                    self.retransmitting = m.contract_mode() == 0;
+                    if m.is_fountain() {
+                        // Enumerate the shared group table from the
+                        // manifest — identical to the sender's, so
+                        // global group ids agree without negotiation.
+                        let sizes: Vec<usize> =
+                            m.levels.iter().map(|l| l.size as usize).collect();
+                        let table = fountain_table(m.n as usize, s, &sizes);
+                        let mut offsets = vec![0usize; m.levels.len()];
+                        let mut groups = Vec::with_capacity(table.len());
+                        let mut map = HashMap::with_capacity(table.len());
+                        for (gi, g) in table.iter().enumerate() {
+                            let off = offsets[g.level as usize];
+                            offsets[g.level as usize] += g.k * s;
+                            groups.push((g.level, off, g.k));
+                            map.insert((g.level, g.ftg), gi as u32);
+                        }
+                        let count = groups.len();
+                        self.fountain = Some(FountainRx {
+                            groups,
+                            map,
+                            decoders: HashMap::new(),
+                            done: vec![false; count],
+                            saw_repair: vec![false; count],
+                            completed: 0,
+                            repaired: 0,
+                            levels: sizes.into_iter().map(|sz| vec![0u8; sz]).collect(),
+                            since_ack: 0,
+                        });
+                    }
                     self.s = s;
                     self.manifest = Some(m);
                     self.state = State::Receiving;
                     self.last_packet = now;
                     self.window_start = now;
+                    // An empty fountain dataset is complete on arrival.
+                    if self.fountain.as_ref().is_some_and(|f| f.groups.is_empty()) {
+                        self.pending.push_back(Packet::Done.encode());
+                        self.finish_fountain(now);
+                    }
                 }
             }
             State::Receiving => {
@@ -144,25 +225,23 @@ impl ReceiverMachine {
                     Ok(PacketView::Fragment(view)) => {
                         let h = view.header;
                         self.report.fragments_received += 1;
-                        // λ window bookkeeping (sequence-gap based).
-                        self.window_received += 1;
-                        if self.window_first_seq.is_none() {
-                            self.window_first_seq = Some(h.seq);
-                        }
-                        self.window_max_seq = self.window_max_seq.max(h.seq);
-                        let elapsed =
-                            now.saturating_duration_since(self.window_start).as_secs_f64();
-                        if elapsed >= self.cfg.t_w {
-                            let first = self.window_first_seq.unwrap_or(self.window_max_seq);
-                            let expected = self.window_max_seq.saturating_sub(first) + 1;
-                            let lost = expected.saturating_sub(self.window_received);
-                            let lambda_hat = lost as f64 / elapsed;
-                            self.report.lambda_reports.push(lambda_hat);
-                            self.pending
-                                .push_back(Packet::LambdaUpdate { lambda: lambda_hat }.encode());
-                            self.window_start = now;
-                            self.window_received = 0;
-                            self.window_first_seq = None;
+                        self.lambda_tick(h.seq, now);
+                        if self.fountain.is_some() {
+                            // Systematic fountain symbol: ESI = slot index.
+                            if let Some(gi) = self
+                                .fountain
+                                .as_ref()
+                                .and_then(|f| f.map.get(&(h.level, h.ftg)).copied())
+                            {
+                                self.fountain_symbol(
+                                    gi,
+                                    h.index as u32,
+                                    LtCode::DEFAULT_SEED,
+                                    view.payload,
+                                    now,
+                                );
+                            }
+                            return;
                         }
                         // Copy the payload exactly once: datagram → arena.
                         // An index beyond the group's geometry is a stray
@@ -177,7 +256,20 @@ impl ReceiverMachine {
                             g.insert(h.index as usize, view.payload);
                         }
                     }
+                    Ok(PacketView::Repair(view)) => {
+                        let h = view.header;
+                        self.report.fragments_received += 1;
+                        self.lambda_tick(h.seq, now);
+                        if self.fountain.is_some() {
+                            self.fountain_symbol(h.group, h.esi, h.seed, view.payload, now);
+                        }
+                    }
                     Ok(PacketView::Control(Packet::EndOfPass { pass })) => {
+                        if self.fountain.is_some() {
+                            // Barrier-free mode has no pass barriers; a
+                            // stray EndOfPass gets no LostList back.
+                            return;
+                        }
                         let manifest = self.manifest.as_ref().expect("manifest set");
                         let lost = collect_lost(manifest, &self.groups, self.s);
                         if self.retransmitting {
@@ -324,6 +416,91 @@ impl ReceiverMachine {
             }
             _ => bail!("receiver machine still running"),
         }
+    }
+
+    /// λ window bookkeeping (sequence-gap based) — shared by the classic
+    /// fragment path and the fountain symbol path, so λ̂ cadence and
+    /// values are identical across backends at equal `(seq, arrival)`
+    /// streams.
+    fn lambda_tick(&mut self, seq: u64, now: Instant) {
+        self.window_received += 1;
+        if self.window_first_seq.is_none() {
+            self.window_first_seq = Some(seq);
+        }
+        self.window_max_seq = self.window_max_seq.max(seq);
+        let elapsed = now.saturating_duration_since(self.window_start).as_secs_f64();
+        if elapsed >= self.cfg.t_w {
+            let first = self.window_first_seq.unwrap_or(self.window_max_seq);
+            let expected = self.window_max_seq.saturating_sub(first) + 1;
+            let lost = expected.saturating_sub(self.window_received);
+            let lambda_hat = lost as f64 / elapsed;
+            self.report.lambda_reports.push(lambda_hat);
+            self.pending.push_back(Packet::LambdaUpdate { lambda: lambda_hat }.encode());
+            self.window_start = now;
+            self.window_received = 0;
+            self.window_first_seq = None;
+        }
+    }
+
+    /// Feed one fountain symbol (systematic fragment or repair) into its
+    /// group's decoder; on completion place the data, retire the
+    /// decoder, and push the compact ack. Symbols for unknown or
+    /// already-done groups only refresh the ack cadence.
+    fn fountain_symbol(&mut self, gi: u32, esi: u32, seed: u64, payload: &[u8], now: Instant) {
+        let s = self.s;
+        let gid = gi as usize;
+        let f = self.fountain.as_mut().expect("fountain state");
+        let Some(&(level, offset, k)) = f.groups.get(gid) else {
+            return; // stray group id: drop, like out-of-geometry fragments
+        };
+        let mut completed_now = false;
+        if !f.done[gid] {
+            if esi as usize >= k {
+                f.saw_repair[gid] = true;
+            }
+            let dec = f.decoders.entry(gi).or_insert_with(|| {
+                FountainDecoder::new(k, s, seed, gi).expect("group table geometry is valid")
+            });
+            if dec.add_symbol(esi, payload) {
+                let lvl = &mut f.levels[level as usize];
+                let len = (k * s).min(lvl.len().saturating_sub(offset));
+                lvl[offset..offset + len].copy_from_slice(&dec.data()[..len]);
+                f.decoders.remove(&gi);
+                f.done[gid] = true;
+                f.completed += 1;
+                if f.saw_repair[gid] {
+                    f.repaired += 1;
+                }
+                completed_now = true;
+            }
+        }
+        f.since_ack += 1;
+        let all = f.completed == f.groups.len();
+        if completed_now || f.since_ack >= ACK_EVERY {
+            f.since_ack = 0;
+            let (upto, bitmap) = ack_of(&f.done);
+            self.pending.push_back(Packet::GroupAck { upto, bitmap }.encode());
+        }
+        if all {
+            self.pending.push_back(Packet::Done.encode());
+            self.finish_fountain(now);
+        }
+    }
+
+    /// Fountain counterpart of [`ReceiverMachine::finish`]: levels were
+    /// assembled incrementally as groups completed, so there is no
+    /// decode step left — just the report.
+    fn finish_fountain(&mut self, now: Instant) {
+        let manifest = self.manifest.take().expect("manifest set");
+        let f = self.fountain.take().expect("fountain state");
+        self.report.levels = f.levels.into_iter().map(Some).collect();
+        self.report.groups_recovered = f.repaired;
+        let prefix = usable_prefix(&manifest, &self.report.levels);
+        self.report.levels_recovered = prefix;
+        self.report.achieved_eps = if prefix == 0 { 1.0 } else { manifest.levels[prefix - 1].eps };
+        self.report.duration = now.saturating_duration_since(self.start).as_secs_f64();
+        self.manifest = Some(manifest);
+        self.state = State::Finished;
     }
 
     fn fail(&mut self, msg: &str) {

@@ -11,14 +11,15 @@
 use crate::api::Contract;
 use crate::coordinator::arena::FtgArena;
 use crate::coordinator::packet::{
-    encode_fragment_into, validate_fragment_size, FragmentHeader, Manifest, ManifestLevel, Packet,
+    encode_fragment_into, encode_repair_into, validate_fragment_size, FragmentHeader, Manifest,
+    ManifestLevel, Packet, RepairHeader, CONTRACT_FOUNTAIN,
 };
 use crate::coordinator::rate::{RateController, RttEstimator};
 use crate::coordinator::sender::{SenderConfig, SenderReport};
-use crate::erasure::RsCode;
+use crate::erasure::{Backend, LtCode, RsCode};
 use crate::model::error_model::optimize_deadline_bitplane;
 use crate::model::params::{LevelSchedule, NetParams};
-use crate::model::time_model::optimize_parity;
+use crate::model::time_model::{fountain_feasible_levels, optimize_parity};
 use crate::util::err::Result;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
@@ -54,7 +55,7 @@ pub struct EncodeJob {
 impl EncodeJob {
     /// Compute the group's parity slots (the CPU-heavy part).
     pub fn run(&mut self) {
-        self.ftg.arena.encode_parity(&self.code).expect("encode");
+        self.ftg.arena.encode_parity(&*self.code).expect("encode");
     }
 }
 
@@ -68,8 +69,61 @@ enum State {
     Barrier { tries: u32, eop_sent_at: Instant, next_at: Instant },
     /// Streaming a retransmission pass (paced).
     Retransmit,
+    /// Fountain backend only: streaming rateless repair symbols
+    /// round-robin over unacked groups (paced). No barriers — groups
+    /// retire on compact [`Packet::GroupAck`]s instead.
+    Repair,
     Finished,
     Failed,
+}
+
+/// Rateless transmission state ([`Backend::Fountain`]): the global
+/// group table in build order (both endpoints enumerate the manifest
+/// identically, so group ids never ride the wire beyond a `u32`),
+/// per-group ack/ESI cursors, and one [`LtCode`] per distinct `k`.
+struct FountainTx {
+    seed: u64,
+    groups: Vec<FountainGroup>,
+    acked: usize,
+    cursor: usize,
+    lt: HashMap<usize, LtCode>,
+    neigh: Vec<usize>,
+    sym: Vec<u8>,
+}
+
+pub(crate) struct FountainGroup {
+    pub(crate) level: u8,
+    pub(crate) ftg: u32,
+    pub(crate) k: usize,
+    /// Next repair ESI (starts at `k`; `0..k` were pass-0 fragments).
+    pub(crate) next_esi: u32,
+    pub(crate) acked: bool,
+}
+
+/// The fountain group table for level byte-sizes `sizes`: both
+/// endpoints run this exact enumeration (sender over its send plan,
+/// receiver over the manifest), so a group's global id, geometry and
+/// data placement agree without any extra wire state. Mirrors
+/// [`SenderMachine::build_group`]'s cursor arithmetic at `m0 = 0`.
+pub(crate) fn fountain_table(n: usize, s: usize, sizes: &[usize]) -> Vec<FountainGroup> {
+    let mut groups = Vec::new();
+    for (li, &size) in sizes.iter().enumerate() {
+        let mut remaining = size;
+        let mut ftg = 0u32;
+        while remaining > 0 {
+            let k = n.max(1).min(remaining.div_ceil(s).max(1));
+            groups.push(FountainGroup {
+                level: li as u8,
+                ftg,
+                k,
+                next_esi: k as u32,
+                acked: false,
+            });
+            remaining = remaining.saturating_sub(k * s);
+            ftg += 1;
+        }
+    }
+    groups
 }
 
 /// Poll-driven single-stream sender. See the [`crate::engine`] module
@@ -124,6 +178,8 @@ pub struct SenderMachine {
     buf_store: HashMap<(u8, u32), StoredFtg>,
     rq: Vec<(u8, u32)>,
     rq_idx: usize,
+    // Rateless repair state (None = classic RS pass barriers).
+    fountain: Option<FountainTx>,
     report: SenderReport,
     error: Option<String>,
 }
@@ -139,10 +195,26 @@ impl SenderMachine {
         eps: &[f64],
         now: Instant,
     ) -> Result<SenderMachine> {
+        Self::with_backend(cfg, levels, eps, Backend::Rs, now)
+    }
+
+    /// [`SenderMachine::new`] with an explicit erasure backend.
+    /// [`Backend::Rs`] is the classic pass-barrier machine (every wire
+    /// byte identical to [`SenderMachine::new`]); [`Backend::Fountain`]
+    /// plans zero parity, flags the manifest, and follows pass 0 with
+    /// the barrier-free rateless repair stream (DESIGN.md §12).
+    pub fn with_backend(
+        cfg: &SenderConfig,
+        levels: &[Vec<u8>],
+        eps: &[f64],
+        backend: Backend,
+        now: Instant,
+    ) -> Result<SenderMachine> {
         assert_eq!(levels.len(), eps.len());
         let n = cfg.net.n;
         let s = cfg.net.s;
         validate_fragment_size(s)?;
+        let rateless = backend == Backend::Fountain;
         let sched =
             LevelSchedule::new(levels.iter().map(|l| l.len() as u64).collect(), eps.to_vec())
                 .with_cuts(cfg.plane_cuts.clone());
@@ -158,6 +230,19 @@ impl SenderMachine {
                 (l, None)
             }
             Contract::BestEffort => (levels.len(), None),
+            Contract::Deadline(tau) if rateless => {
+                // Barrier-free τ accounting: no repair rounds to price,
+                // so the Eq. 12 search collapses to the largest level
+                // prefix whose expected overhead-symbol stream fits τ.
+                // No mid-pass hard stop either — the prefix was sized so
+                // the whole stream (overhead included) completes in time.
+                let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
+                let l = fountain_feasible_levels(&p, &sched, tau);
+                if l == 0 {
+                    bail!("deadline {tau}s infeasible for this schedule (fountain)");
+                }
+                (l, None)
+            }
             Contract::Deadline(tau) => {
                 let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
                 let plan = optimize_deadline_bitplane(&p, &sched, tau)
@@ -174,14 +259,20 @@ impl SenderMachine {
                 (send, Some((tau, m)))
             }
         };
-        let manifest_m0: Vec<u8> = match &deadline {
-            Some((_, m)) => m.iter().map(|&mi| mi as u8).collect(),
-            None => {
-                let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
-                let m = optimize_parity(&p, sched.total_bytes(send_levels).max(1)).m;
-                vec![m as u8; send_levels]
+        let manifest_m0: Vec<u8> = if rateless {
+            vec![0; send_levels] // rateless: repair is generated on demand
+        } else {
+            match &deadline {
+                Some((_, m)) => m.iter().map(|&mi| mi as u8).collect(),
+                None => {
+                    let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
+                    let m = optimize_parity(&p, sched.total_bytes(send_levels).max(1)).m;
+                    vec![m as u8; send_levels]
+                }
             }
         };
+        let contract_byte = u8::from(!cfg.contract.retransmits())
+            | if rateless { CONTRACT_FOUNTAIN } else { 0 };
         let manifest = Packet::Manifest(Manifest {
             n: n as u8,
             s: s as u32,
@@ -194,17 +285,32 @@ impl SenderMachine {
                     cut: cut_flags[i],
                 })
                 .collect(),
-            contract: u8::from(!cfg.contract.retransmits()),
+            contract: contract_byte,
         })
         .encode();
 
-        let retain = cfg.contract.retransmits();
-        let current_m = if retain {
+        // Fountain groups are retained whatever the contract: repair
+        // symbols are generated from the stored data until acked.
+        let retain = rateless || cfg.contract.retransmits();
+        let current_m = if retain && !rateless {
             let p = NetParams { lambda: cfg.initial_lambda, ..cfg.net };
             optimize_parity(&p, sched.total_bytes(send_levels)).m
         } else {
             0
         };
+        let fountain = rateless.then(|| {
+            let sizes: Vec<usize> =
+                (0..send_levels).map(|i| limits[i].min(levels[i].len())).collect();
+            FountainTx {
+                seed: LtCode::DEFAULT_SEED,
+                groups: fountain_table(n, s, &sizes),
+                acked: 0,
+                cursor: 0,
+                lt: HashMap::new(),
+                neigh: Vec::new(),
+                sym: vec![0u8; s],
+            }
+        });
         let mut report = SenderReport {
             fragments_sent: 0,
             data_fragments: 0,
@@ -262,6 +368,7 @@ impl SenderMachine {
             buf_store: HashMap::new(),
             rq: Vec::new(),
             rq_idx: 0,
+            fountain,
             report,
             error: None,
         })
@@ -302,10 +409,41 @@ impl SenderMachine {
                     }
                 }
             }
+            Packet::GroupAck { upto, bitmap } => {
+                if let Some(ft) = self.fountain.as_mut() {
+                    // Cumulative + bitmap, monotone and idempotent: acks
+                    // may arrive duplicated, reordered or stale.
+                    let len = ft.groups.len();
+                    let upto = (upto as usize).min(len);
+                    let mut newly = 0usize;
+                    for g in ft.groups.iter_mut().take(upto) {
+                        if !g.acked {
+                            g.acked = true;
+                            newly += 1;
+                        }
+                    }
+                    for b in 0..64usize {
+                        if bitmap >> b & 1 == 1 {
+                            if let Some(g) = ft.groups.get_mut(upto + b) {
+                                if !g.acked {
+                                    g.acked = true;
+                                    newly += 1;
+                                }
+                            }
+                        }
+                    }
+                    ft.acked += newly;
+                    if ft.acked == len
+                        && matches!(self.state, State::Sending | State::Repair)
+                    {
+                        self.finish(now);
+                    }
+                }
+            }
             Packet::Done => {
                 if matches!(
                     self.state,
-                    State::Sending | State::Barrier { .. } | State::Retransmit
+                    State::Sending | State::Barrier { .. } | State::Retransmit | State::Repair
                 ) {
                     self.finish(now);
                 }
@@ -446,6 +584,50 @@ impl SenderMachine {
                 self.slot += 1;
                 true
             }
+            State::Repair => {
+                if now < self.next_send {
+                    return false;
+                }
+                let all_acked = match &self.fountain {
+                    Some(ft) => ft.acked >= ft.groups.len(),
+                    None => true,
+                };
+                if all_acked {
+                    self.finish(now);
+                    return false;
+                }
+                let s = self.cfg.net.s;
+                let ft = self.fountain.as_mut().expect("repair state implies fountain");
+                let total = ft.groups.len();
+                let mut idx = ft.cursor % total;
+                for _ in 0..total {
+                    if !ft.groups[idx].acked {
+                        break;
+                    }
+                    idx = (idx + 1) % total;
+                }
+                let g = &mut ft.groups[idx];
+                let stored = self
+                    .buf_store
+                    .get(&(g.level, g.ftg))
+                    .expect("fountain retains every group");
+                let esi = g.next_esi;
+                g.next_esi += 1;
+                let k = g.k;
+                let data = &stored.arena.as_slice()[..k * s];
+                let lt = ft
+                    .lt
+                    .entry(k)
+                    .or_insert_with(|| LtCode::new(k, LtCode::DEFAULT_SEED).expect("valid k"));
+                lt.symbol_into(data, s, idx as u32, esi, &mut ft.neigh, &mut ft.sym);
+                let hdr = RepairHeader { group: idx as u32, esi, seed: ft.seed, seq: self.seq };
+                self.seq += 1;
+                encode_repair_into(&hdr, &ft.sym, out);
+                ft.cursor = (idx + 1) % total;
+                self.next_send = now.max(self.next_send) + self.pace;
+                self.report.fragments_sent += 1;
+                true
+            }
             State::Finished | State::Failed => false,
         }
     }
@@ -457,7 +639,7 @@ impl SenderMachine {
         let hard = self.start + self.cfg.max_duration;
         let at = match self.state {
             State::SendManifest { next_at, .. } | State::Barrier { next_at, .. } => next_at,
-            State::Sending | State::Retransmit => {
+            State::Sending | State::Retransmit | State::Repair => {
                 if self.awaiting_coding() {
                     // Nothing is due until the host returns the parity
                     // job — only the hard deadline gates time (keeps
@@ -608,12 +790,20 @@ impl SenderMachine {
             }
         }
         if self.li >= self.send_levels {
-            self.enter_barrier(now);
+            if self.fountain.is_some() {
+                // Barrier-free: source symbols are out; stream rateless
+                // repair until the group acks drain. No EndOfPass, ever.
+                self.state = State::Repair;
+            } else {
+                self.enter_barrier(now);
+            }
             return None;
         }
         if self.lambda_dirty {
             self.lambda_dirty = false;
-            if self.retain {
+            // Rateless groups have no parity geometry to re-solve; λ̂
+            // still lands in the report via `handle_datagram`.
+            if self.retain && self.fountain.is_none() {
                 let p = NetParams { lambda: self.lambda, ..self.cfg.net };
                 let left = self.remaining as u64
                     + self.sched_sizes[self.li + 1..self.send_levels].iter().sum::<u64>();
@@ -662,7 +852,7 @@ impl SenderMachine {
         let Some((mut ftg, code)) = self.build_group(now) else {
             return;
         };
-        ftg.arena.encode_parity(&code).expect("encode");
+        ftg.arena.encode_parity(&*code).expect("encode");
         self.current = Some(ftg);
         self.slot = 0;
     }

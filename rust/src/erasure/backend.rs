@@ -1,0 +1,178 @@
+//! Pluggable erasure backends — the trait seam between the transfer
+//! engines and the coding math.
+//!
+//! PR 1–8 hard-wired [`RsCode`] into every engine: the arenas, the
+//! coding pool, and the batch entry points all named the concrete type.
+//! [`ErasureBackend`] extracts the surface those layers actually use —
+//! group geometry, strided-arena encode, group reconstruct, and the
+//! deterministic batch entry points — so [`FtgArena`]/[`CodingPool`]
+//! plumbing stays backend-agnostic while backends differ in *how*
+//! redundancy is produced:
+//!
+//! * [`RsCode`] — fixed-rate systematic Reed–Solomon: `m` parity
+//!   fragments planned per pass, repaired through the pass-barrier
+//!   LostList exchange.
+//! * [`crate::erasure::fountain::LtCode`] — rateless LT: zero planned
+//!   parity, an unbounded stream of seeded XOR symbols repaired with
+//!   compact cumulative acks and no barriers (DESIGN.md §12).
+//!
+//! The enum [`Backend`] is the user-facing selector
+//! (`TransferSpecBuilder::backend`); `Backend::Rs` is the default and
+//! keeps every legacy trace byte-identical.
+
+use super::par::CodingPool;
+use super::rs::{RsCode, RsError};
+use crate::coordinator::arena::FtgArena;
+
+/// User-facing backend selector (see
+/// [`crate::api::TransferSpecBuilder::backend`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Systematic Reed–Solomon with pass-barrier repair (the paper's
+    /// design; the default — legacy traces stay byte-identical).
+    #[default]
+    Rs,
+    /// LT-style rateless fountain: barrier-free repair streaming.
+    Fountain,
+}
+
+/// The coding surface the transfer engines consume.
+///
+/// `encode_*` methods take `&self` (pure math, safe to share across the
+/// pool's workers); `reconstruct_group` takes `&mut self` because
+/// backends may keep per-code decode state (the RS inverted-matrix LRU).
+pub trait ErasureBackend {
+    /// Data fragments per group (`k`).
+    fn data_fragments(&self) -> usize;
+
+    /// Planned parity fragments per group (`m`; 0 for rateless backends,
+    /// whose repair symbols are generated on demand instead).
+    fn parity_fragments(&self) -> usize;
+
+    /// Slots a group arena carries (`k + m`).
+    fn group_slots(&self) -> usize {
+        self.data_fragments() + self.parity_fragments()
+    }
+
+    /// Fill the parity slots of a strided group buffer (`k` data slots
+    /// then `m` parity slots, each `stride` bytes) in place.
+    fn encode_strided(&self, buf: &mut [u8], stride: usize) -> Result<(), RsError>;
+
+    /// Encode a batch of arenas, optionally fanned out over `pool`.
+    /// Contract (inherited from [`RsCode::encode_batch`]): byte-identical
+    /// output for any worker count, including zero.
+    fn encode_batch(&self, pool: &CodingPool, arenas: &mut [FtgArena]) -> Result<(), RsError>
+    where
+        Self: Sized,
+    {
+        let _ = pool;
+        for arena in arenas.iter_mut() {
+            arena.encode_parity(self)?;
+        }
+        Ok(())
+    }
+
+    /// Reconstruct a group's `k` data fragments from any decodable shard
+    /// set into one contiguous output buffer.
+    fn reconstruct_group(
+        &mut self,
+        shards: &[(usize, &[u8])],
+        out: &mut [u8],
+    ) -> Result<(), RsError>;
+
+    /// Reconstruct a batch of groups, optionally fanned out over `pool`,
+    /// returning one result per item. Same any-worker-count determinism
+    /// contract as [`ErasureBackend::encode_batch`].
+    fn reconstruct_batch(
+        &self,
+        pool: &CodingPool,
+        items: &mut [(&FtgArena, &mut [u8])],
+    ) -> Vec<Result<(), RsError>>;
+}
+
+impl ErasureBackend for RsCode {
+    fn data_fragments(&self) -> usize {
+        self.k
+    }
+
+    fn parity_fragments(&self) -> usize {
+        self.m
+    }
+
+    fn encode_strided(&self, buf: &mut [u8], stride: usize) -> Result<(), RsError> {
+        RsCode::encode_strided(self, buf, stride)
+    }
+
+    fn encode_batch(&self, pool: &CodingPool, arenas: &mut [FtgArena]) -> Result<(), RsError> {
+        RsCode::encode_batch(self, pool, arenas)
+    }
+
+    fn reconstruct_group(
+        &mut self,
+        shards: &[(usize, &[u8])],
+        out: &mut [u8],
+    ) -> Result<(), RsError> {
+        self.reconstruct_into(shards, out)
+    }
+
+    fn reconstruct_batch(
+        &self,
+        pool: &CodingPool,
+        items: &mut [(&FtgArena, &mut [u8])],
+    ) -> Vec<Result<(), RsError>> {
+        RsCode::reconstruct_batch(self, pool, items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive an arena through the trait object-agnostic surface and
+    /// check it matches the concrete RS path bit for bit.
+    fn encode_both_ways(k: u8, m: u8, s: usize) -> (Vec<u8>, Vec<u8>) {
+        let code = RsCode::new(k as usize, m as usize).unwrap();
+        let data: Vec<u8> = (0..k as usize * s).map(|i| (i * 31 % 251) as u8).collect();
+
+        let mut direct = FtgArena::new(k, m, s);
+        direct.fill_data(&data, 0);
+        direct.encode_parity(&code).unwrap();
+
+        let mut via_trait = FtgArena::new(k, m, s);
+        via_trait.fill_data(&data, 0);
+        let backend: &dyn ErasureBackend = &code;
+        assert_eq!(backend.data_fragments(), k as usize);
+        assert_eq!(backend.parity_fragments(), m as usize);
+        assert_eq!(backend.group_slots(), (k + m) as usize);
+        let stride = via_trait.stride();
+        backend.encode_strided(via_trait.as_mut_slice(), stride).unwrap();
+
+        (direct.as_slice().to_vec(), via_trait.as_slice().to_vec())
+    }
+
+    #[test]
+    fn trait_encode_matches_concrete_rs() {
+        for (k, m) in [(4u8, 2u8), (24, 8), (31, 1)] {
+            let (a, b) = encode_both_ways(k, m, 64);
+            assert_eq!(a, b, "k={k} m={m}");
+        }
+    }
+
+    #[test]
+    fn trait_reconstruct_matches_concrete_rs() {
+        let (k, m, s) = (6usize, 3usize, 48usize);
+        let mut code = RsCode::new(k, m).unwrap();
+        let data: Vec<u8> = (0..k * s).map(|i| (i * 17 % 239) as u8).collect();
+        let mut arena = FtgArena::new(k as u8, m as u8, s);
+        arena.fill_data(&data, 0);
+        arena.encode_parity(&code).unwrap();
+
+        // Drop three data fragments, keep parity.
+        let shards: Vec<(usize, &[u8])> =
+            arena.iter_present().filter(|&(i, _)| !(1..=3).contains(&i)).collect();
+        let mut out = vec![0u8; k * s];
+        let backend: &mut dyn ErasureBackend = &mut code;
+        backend.reconstruct_group(&shards, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+}

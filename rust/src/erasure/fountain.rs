@@ -1,0 +1,671 @@
+//! LT-style rateless fountain code — the barrier-free erasure backend
+//! (DESIGN.md §12).
+//!
+//! Reed–Solomon plans `m` parity fragments per group up front and
+//! repairs residual loss through pass-barrier LostList exchanges, paying
+//! one RTT per repair round. An LT code is *rateless*: the sender can
+//! generate an unbounded stream of encoding symbols, each a seeded XOR
+//! of a robust-soliton-sized subset of the group's `k` source fragments,
+//! and the receiver decodes as soon as *any* `k(1+ε)` symbols arrive —
+//! no rounds, no lost lists (exemplar: the `raptorq` sender/receiver
+//! split; SNIPPETS.md Snippet 2).
+//!
+//! * [`RobustSoliton`] — the degree distribution μ(d): the ideal soliton
+//!   ρ(d) plus Luby's τ(d) spike, normalized into a sampling CDF.
+//! * [`LtCode`] — symbol generation: `esi < k` emits the systematic
+//!   source fragment unchanged; `esi ≥ k` XORs a seeded neighbor set on
+//!   the GF(256) kernel fast paths (XOR is GF(256) addition, so the
+//!   dispatch-once SIMD `MulTable(1)` slice kernels apply unchanged).
+//! * [`FountainDecoder`] — incremental peeling with a bounded pending
+//!   buffer and a Gaussian-elimination fallback for the stalls peeling
+//!   alone cannot clear (both produce identical bytes; asserted by
+//!   `tests/fountain_props.rs`).
+//!
+//! Determinism contract: a symbol's neighbor set is a pure function of
+//! `(seed, group, esi, k)` — both endpoints derive it independently, so
+//! the wire carries only those integers, never the neighbor list.
+
+use super::backend::ErasureBackend;
+use super::gf256::MulTable;
+use super::par::CodingPool;
+use super::rs::RsError;
+use crate::coordinator::arena::FtgArena;
+use crate::util::Pcg64;
+
+/// Robust-soliton degree distribution over `1..=k`, precomputed as a
+/// CDF for O(log k) sampling.
+#[derive(Debug, Clone)]
+pub struct RobustSoliton {
+    k: usize,
+    cdf: Vec<f64>,
+}
+
+impl RobustSoliton {
+    /// Default spike-width constant `c` (Luby's tuning parameter).
+    pub const C: f64 = 0.1;
+    /// Default decode-failure bound `δ`.
+    pub const DELTA: f64 = 0.5;
+
+    /// Distribution for `k` source symbols with the default `(c, δ)`.
+    pub fn new(k: usize) -> RobustSoliton {
+        Self::with_params(k, Self::C, Self::DELTA)
+    }
+
+    /// Distribution with explicit Luby parameters. `R = c·ln(k/δ)·√k`
+    /// sizes the spike; the spike position `k/R` is clamped into
+    /// `1..=k` so tiny `k` stay well-formed.
+    pub fn with_params(k: usize, c: f64, delta: f64) -> RobustSoliton {
+        assert!(k >= 1, "degree distribution needs k >= 1");
+        if k == 1 {
+            return RobustSoliton { k, cdf: vec![1.0] };
+        }
+        let kf = k as f64;
+        let r = (c * (kf / delta).ln() * kf.sqrt()).max(1.0);
+        let spike = ((kf / r).round() as usize).clamp(1, k);
+        let mut pdf = vec![0.0f64; k];
+        // Ideal soliton ρ: ρ(1) = 1/k, ρ(d) = 1/(d(d−1)).
+        pdf[0] = 1.0 / kf;
+        for d in 2..=k {
+            pdf[d - 1] = 1.0 / (d as f64 * (d as f64 - 1.0));
+        }
+        // Luby's τ: R/(dk) below the spike, R·ln(R/δ)/k at it.
+        for d in 1..spike {
+            pdf[d - 1] += r / (d as f64 * kf);
+        }
+        pdf[spike - 1] += r * (r / delta).ln().max(0.0) / kf;
+        let beta: f64 = pdf.iter().sum();
+        let mut cdf = Vec::with_capacity(k);
+        let mut acc = 0.0;
+        for p in &pdf {
+            acc += p / beta;
+            cdf.push(acc);
+        }
+        // Guard the tail against float drift so sample() never misses.
+        *cdf.last_mut().unwrap() = 1.0;
+        RobustSoliton { k, cdf }
+    }
+
+    /// Source symbols the distribution was built for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Map a uniform draw `u ∈ [0, 1)` to a degree in `1..=k`.
+    pub fn sample(&self, u: f64) -> usize {
+        let idx = self.cdf.partition_point(|&p| p <= u);
+        idx.min(self.k - 1) + 1
+    }
+
+    /// Mean degree (the expected XOR width; tests pin statistics here).
+    pub fn mean_degree(&self) -> f64 {
+        let mut prev = 0.0;
+        let mut mean = 0.0;
+        for (i, &p) in self.cdf.iter().enumerate() {
+            mean += (i + 1) as f64 * (p - prev);
+            prev = p;
+        }
+        mean
+    }
+}
+
+/// Mix `(seed, group, esi)` into one 64-bit symbol seed (splitmix64
+/// finalizer — both endpoints must agree on this exactly).
+fn symbol_seed(seed: u64, group: u32, esi: u32) -> u64 {
+    let mut z = seed
+        ^ ((group as u64) << 32)
+        ^ (esi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// LT encoder/geometry for one group size `k`: seeded robust-soliton
+/// degree sampling + XOR symbol generation on the kernel fast paths.
+///
+/// One `LtCode` serves every group with the same `k` (the per-symbol
+/// neighbor set mixes the group id in, so groups stay decorrelated).
+#[derive(Debug, Clone)]
+pub struct LtCode {
+    k: usize,
+    seed: u64,
+    dist: RobustSoliton,
+    /// `MulTable::new(1)`: GF(256) add is XOR, so the SIMD slice kernels
+    /// double as the fountain's XOR engine.
+    one: MulTable,
+}
+
+impl LtCode {
+    /// Protocol-default transfer seed. Every repair symbol carries its
+    /// seed on the wire ([`crate::coordinator::packet::RepairHeader`]),
+    /// so senders *may* randomize; the default keeps both endpoints
+    /// aligned even for groups whose first arrivals are systematic
+    /// fragments (which carry no seed).
+    pub const DEFAULT_SEED: u64 = 0x4A41_4E55_535F_4C54; // "JANUS_LT"
+
+    /// Code for `k` source fragments under transfer seed `seed`.
+    pub fn new(k: usize, seed: u64) -> Result<LtCode, RsError> {
+        if k < 1 || k > 256 {
+            return Err(RsError::BadParams { k, m: 0 });
+        }
+        Ok(LtCode { k, seed, dist: RobustSoliton::new(k), one: MulTable::new(1) })
+    }
+
+    /// Source fragments per group.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The transfer seed symbols derive from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The degree distribution (tests sample it directly).
+    pub fn distribution(&self) -> &RobustSoliton {
+        &self.dist
+    }
+
+    /// XOR `src` into `dst` through the dispatch-once kernel tiers.
+    #[inline]
+    pub fn xor_into(&self, src: &[u8], dst: &mut [u8]) {
+        self.one.mul_slice_add(src, dst);
+    }
+
+    /// Compute the neighbor set of symbol `esi` for `group` into `out`.
+    /// `esi < k` is systematic (neighbors = `[esi]`); `esi ≥ k` draws a
+    /// robust-soliton degree and that many distinct source indices from
+    /// the seeded per-symbol stream.
+    pub fn neighbors_into(&self, group: u32, esi: u32, out: &mut Vec<usize>) {
+        out.clear();
+        let e = esi as usize;
+        if e < self.k {
+            out.push(e);
+            return;
+        }
+        let mut rng = Pcg64::seeded(symbol_seed(self.seed, group, esi));
+        let d = self.dist.sample(rng.next_f64());
+        out.extend(rng.sample_indices(self.k, d));
+    }
+
+    /// Generate symbol `esi` of `group` into `out` (`stride` bytes) from
+    /// the group's source data (`≥ k·stride` bytes, slot `i` at
+    /// `[i·stride, (i+1)·stride)`). `scratch` avoids a per-symbol
+    /// neighbor allocation on the sender hot path.
+    pub fn symbol_into(
+        &self,
+        data: &[u8],
+        stride: usize,
+        group: u32,
+        esi: u32,
+        scratch: &mut Vec<usize>,
+        out: &mut [u8],
+    ) {
+        debug_assert!(data.len() >= self.k * stride);
+        debug_assert_eq!(out.len(), stride);
+        self.neighbors_into(group, esi, scratch);
+        let mut first = true;
+        for &nb in scratch.iter() {
+            let src = &data[nb * stride..(nb + 1) * stride];
+            if first {
+                self.one.mul_slice(src, out);
+                first = false;
+            } else {
+                self.one.mul_slice_add(src, out);
+            }
+        }
+    }
+}
+
+impl ErasureBackend for LtCode {
+    fn data_fragments(&self) -> usize {
+        self.k
+    }
+
+    /// Rateless: no planned parity slots — repair symbols are generated
+    /// on demand, so group arenas carry exactly `k` slots.
+    fn parity_fragments(&self) -> usize {
+        0
+    }
+
+    fn encode_strided(&self, buf: &mut [u8], stride: usize) -> Result<(), RsError> {
+        if stride == 0 || buf.len() != self.k * stride {
+            return Err(RsError::LengthMismatch { expected: self.k * stride, got: buf.len() });
+        }
+        // Systematic source only: nothing to compute in the arena. The
+        // repair stream flows through [`LtCode::symbol_into`] instead.
+        Ok(())
+    }
+
+    /// The trait path only handles the systematic-complete case (all `k`
+    /// source fragments present); lossy groups decode through
+    /// [`FountainDecoder`], which owns the rateless symbol state.
+    fn reconstruct_group(
+        &mut self,
+        shards: &[(usize, &[u8])],
+        out: &mut [u8],
+    ) -> Result<(), RsError> {
+        let mut found = 0usize;
+        let len = match shards.first() {
+            Some(&(_, f)) => f.len(),
+            None => return Err(RsError::NotEnough { have: 0, need: self.k }),
+        };
+        if out.len() != self.k * len {
+            return Err(RsError::LengthMismatch { expected: self.k * len, got: out.len() });
+        }
+        for &(idx, frag) in shards {
+            if idx >= self.k {
+                return Err(RsError::BadIndex { idx, n: self.k });
+            }
+            if frag.len() != len {
+                return Err(RsError::LengthMismatch { expected: len, got: frag.len() });
+            }
+            out[idx * len..(idx + 1) * len].copy_from_slice(frag);
+            found += 1;
+        }
+        if found < self.k {
+            return Err(RsError::NotEnough { have: found, need: self.k });
+        }
+        Ok(())
+    }
+
+    fn reconstruct_batch(
+        &self,
+        _pool: &CodingPool,
+        items: &mut [(&FtgArena, &mut [u8])],
+    ) -> Vec<Result<(), RsError>> {
+        items
+            .iter_mut()
+            .map(|(arena, out)| {
+                let shards: Vec<(usize, &[u8])> = arena.iter_present().collect();
+                // Clone is cheap: LtCode is a CDF + one table; decode
+                // state, unlike RS, lives in FountainDecoder.
+                self.clone().reconstruct_group(&shards, out)
+            })
+            .collect()
+    }
+}
+
+/// One buffered not-yet-resolved symbol: its still-unknown neighbor set
+/// and its payload reduced by every already-decoded source.
+#[derive(Debug)]
+struct Pending {
+    neighbors: Vec<usize>,
+    buf: Vec<u8>,
+}
+
+/// Incremental per-group LT decoder: peeling first, bounded pending
+/// memory, Gaussian elimination when peeling stalls.
+///
+/// Memory bound: the decoded output (`k·s` bytes) plus at most
+/// `2k + 16` pending symbols of `s` bytes each — symbols beyond the cap
+/// are counted in [`FountainDecoder::dropped`] and simply re-requested
+/// by the rateless stream's nature (more symbols always come).
+#[derive(Debug)]
+pub struct FountainDecoder {
+    code: LtCode,
+    group: u32,
+    s: usize,
+    data: Vec<u8>,
+    have: Vec<bool>,
+    decoded: usize,
+    pending: Vec<Pending>,
+    scratch: Vec<usize>,
+    received: u64,
+    dropped: u64,
+    /// Gaussian-elimination throttle: attempts are spaced this many
+    /// symbols apart once the rank condition is plausible.
+    ge_cooldown: usize,
+}
+
+impl FountainDecoder {
+    /// Decoder for group `group` with `k` source fragments of `s` bytes
+    /// under transfer seed `seed`.
+    pub fn new(k: usize, s: usize, seed: u64, group: u32) -> Result<FountainDecoder, RsError> {
+        let code = LtCode::new(k, seed)?;
+        Ok(FountainDecoder {
+            code,
+            group,
+            s,
+            data: vec![0u8; k * s],
+            have: vec![false; k],
+            decoded: 0,
+            pending: Vec::new(),
+            scratch: Vec::new(),
+            received: 0,
+            dropped: 0,
+            ge_cooldown: 0,
+        })
+    }
+
+    /// Source fragments this group decodes to.
+    pub fn k(&self) -> usize {
+        self.code.k()
+    }
+
+    /// Symbols fed in so far (including redundant ones).
+    pub fn received(&self) -> u64 {
+        self.received
+    }
+
+    /// Symbols discarded at the pending-buffer cap (bounded memory).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Currently buffered unresolved symbols.
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Have all `k` source fragments been recovered?
+    pub fn is_complete(&self) -> bool {
+        self.decoded == self.code.k()
+    }
+
+    /// The recovered group data (`k·s` bytes). Only meaningful once
+    /// [`FountainDecoder::is_complete`] returns true.
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    fn cap(&self) -> usize {
+        2 * self.code.k() + 16
+    }
+
+    /// Feed one symbol; returns `true` the moment the group completes.
+    /// Wrong-length payloads are ignored (a corrupted-but-CRC-valid
+    /// datagram cannot reach here; this guards logic bugs upstream).
+    pub fn add_symbol(&mut self, esi: u32, payload: &[u8]) -> bool {
+        if self.is_complete() || payload.len() != self.s {
+            return false;
+        }
+        self.received += 1;
+        self.code.neighbors_into(self.group, esi, &mut self.scratch);
+        // Reduce against everything already decoded.
+        let mut buf = payload.to_vec();
+        let mut unknown: Vec<usize> = Vec::with_capacity(self.scratch.len());
+        for i in 0..self.scratch.len() {
+            let nb = self.scratch[i];
+            if self.have[nb] {
+                self.code.xor_into(&self.data[nb * self.s..(nb + 1) * self.s], &mut buf);
+            } else {
+                unknown.push(nb);
+            }
+        }
+        match unknown.len() {
+            0 => {} // redundant: every neighbor already known
+            1 => {
+                let idx = unknown[0];
+                self.learn(idx, &buf);
+                self.peel();
+            }
+            _ => {
+                if self.pending.len() >= self.cap() {
+                    self.dropped += 1;
+                } else {
+                    self.pending.push(Pending { neighbors: unknown, buf });
+                }
+            }
+        }
+        if !self.is_complete() {
+            self.maybe_gaussian();
+        }
+        if self.is_complete() {
+            self.pending.clear();
+            self.pending.shrink_to_fit();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn learn(&mut self, idx: usize, bytes: &[u8]) {
+        debug_assert!(!self.have[idx]);
+        self.data[idx * self.s..(idx + 1) * self.s].copy_from_slice(bytes);
+        self.have[idx] = true;
+        self.decoded += 1;
+    }
+
+    /// Peeling cascade: reduce every pending symbol by the known
+    /// sources, release the degree-1 remainders, repeat to fixpoint.
+    fn peel(&mut self) {
+        let s = self.s;
+        loop {
+            // Reduce all pending entries against the current known set.
+            for p in self.pending.iter_mut() {
+                let mut j = 0;
+                while j < p.neighbors.len() {
+                    let nb = p.neighbors[j];
+                    if self.have[nb] {
+                        self.code.xor_into(&self.data[nb * s..(nb + 1) * s], &mut p.buf);
+                        p.neighbors.swap_remove(j);
+                    } else {
+                        j += 1;
+                    }
+                }
+            }
+            // Release resolved entries; learning any re-runs the loop.
+            let mut progressed = false;
+            let mut i = 0;
+            while i < self.pending.len() {
+                match self.pending[i].neighbors.len() {
+                    0 => {
+                        self.pending.swap_remove(i);
+                    }
+                    1 => {
+                        let p = self.pending.swap_remove(i);
+                        let idx = p.neighbors[0];
+                        if !self.have[idx] {
+                            self.learn(idx, &p.buf);
+                            progressed = true;
+                        }
+                    }
+                    _ => i += 1,
+                }
+            }
+            if !progressed || self.is_complete() {
+                break;
+            }
+        }
+    }
+
+    /// Gaussian-elimination fallback: peeling can stall even when the
+    /// buffered symbols jointly have full rank over the missing sources
+    /// (no degree-1 symbol exposed). Attempt a solve over GF(2) when the
+    /// count condition allows one, throttled so the O(pending·k) work
+    /// isn't paid on every symbol.
+    fn maybe_gaussian(&mut self) {
+        let k = self.code.k();
+        if self.decoded + self.pending.len() < k {
+            return;
+        }
+        if self.ge_cooldown > 0 {
+            self.ge_cooldown -= 1;
+            return;
+        }
+        self.ge_cooldown = 4;
+        self.gaussian();
+    }
+
+    fn gaussian(&mut self) {
+        let k = self.code.k();
+        let missing: Vec<usize> = (0..k).filter(|&i| !self.have[i]).collect();
+        let ncols = missing.len();
+        if ncols == 0 || self.pending.len() < ncols {
+            return;
+        }
+        let mut col_of = vec![usize::MAX; k];
+        for (c, &idx) in missing.iter().enumerate() {
+            col_of[idx] = c;
+        }
+        let words = ncols.div_ceil(64);
+        // Work on copies: a failed (rank-deficient) solve must leave the
+        // pending set intact for future peeling.
+        let mut rows: Vec<(Vec<u64>, Vec<u8>)> = self
+            .pending
+            .iter()
+            .map(|p| {
+                let mut bits = vec![0u64; words];
+                for &nb in &p.neighbors {
+                    let c = col_of[nb];
+                    bits[c / 64] |= 1u64 << (c % 64);
+                }
+                (bits, p.buf.clone())
+            })
+            .collect();
+        let bit = |bits: &[u64], c: usize| bits[c / 64] >> (c % 64) & 1 == 1;
+        // Gauss-Jordan over GF(2): after the sweep each pivot row holds
+        // exactly its own column bit.
+        let mut pivot_of_col = vec![usize::MAX; ncols];
+        let mut next_row = 0usize;
+        for c in 0..ncols {
+            let Some(pr) = (next_row..rows.len()).find(|&i| bit(&rows[i].0, c)) else {
+                continue;
+            };
+            rows.swap(next_row, pr);
+            let (pbits, pbuf) = (rows[next_row].0.clone(), rows[next_row].1.clone());
+            for (i, row) in rows.iter_mut().enumerate() {
+                if i != next_row && bit(&row.0, c) {
+                    for (w, pw) in row.0.iter_mut().zip(&pbits) {
+                        *w ^= pw;
+                    }
+                    self.code.xor_into(&pbuf, &mut row.1);
+                }
+            }
+            pivot_of_col[c] = next_row;
+            next_row += 1;
+        }
+        if pivot_of_col.iter().any(|&p| p == usize::MAX) {
+            return; // rank-deficient: wait for more symbols
+        }
+        for c in 0..ncols {
+            let r = pivot_of_col[c];
+            debug_assert!(bit(&rows[r].0, c));
+            let idx = missing[c];
+            let buf = std::mem::take(&mut rows[r].1);
+            self.learn(idx, &buf);
+        }
+        self.pending.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group_data(k: usize, s: usize, seed: u64) -> Vec<u8> {
+        let mut data = vec![0u8; k * s];
+        Pcg64::seeded(seed).fill_bytes(&mut data);
+        data
+    }
+
+    #[test]
+    fn soliton_cdf_is_monotone_and_complete() {
+        for k in [1usize, 2, 3, 8, 31, 64, 255] {
+            let d = RobustSoliton::new(k);
+            let mut prev = 0.0;
+            for (i, &p) in d.cdf.iter().enumerate() {
+                assert!(p >= prev, "k={k}: cdf dips at degree {}", i + 1);
+                prev = p;
+            }
+            assert_eq!(*d.cdf.last().unwrap(), 1.0);
+            assert_eq!(d.sample(0.0), 1, "k={k}: u=0 must map to degree 1");
+            assert!(d.sample(0.9999999) <= k);
+        }
+    }
+
+    #[test]
+    fn systematic_symbols_are_source_fragments() {
+        let (k, s) = (8usize, 64usize);
+        let code = LtCode::new(k, 0xABCD).unwrap();
+        let data = group_data(k, s, 1);
+        let mut scratch = Vec::new();
+        let mut out = vec![0u8; s];
+        for esi in 0..k as u32 {
+            code.symbol_into(&data, s, 0, esi, &mut scratch, &mut out);
+            assert_eq!(&out[..], &data[esi as usize * s..(esi as usize + 1) * s]);
+        }
+    }
+
+    #[test]
+    fn decoder_completes_from_source_symbols_alone() {
+        let (k, s) = (6usize, 32usize);
+        let data = group_data(k, s, 2);
+        let mut dec = FountainDecoder::new(k, s, 7, 3).unwrap();
+        for esi in 0..k as u32 {
+            let done = dec.add_symbol(esi, &data[esi as usize * s..(esi as usize + 1) * s]);
+            assert_eq!(done, esi as usize == k - 1);
+        }
+        assert!(dec.is_complete());
+        assert_eq!(dec.data(), &data[..]);
+    }
+
+    #[test]
+    fn decoder_recovers_lost_sources_from_repair_symbols() {
+        let (k, s) = (12usize, 48usize);
+        let seed = 0xFEED;
+        let code = LtCode::new(k, seed).unwrap();
+        let data = group_data(k, s, 3);
+        let mut dec = FountainDecoder::new(k, s, seed, 9).unwrap();
+        let mut scratch = Vec::new();
+        let mut sym = vec![0u8; s];
+        // Lose a third of the source symbols.
+        for esi in 0..k as u32 {
+            if esi % 3 == 0 {
+                continue;
+            }
+            code.symbol_into(&data, s, 9, esi, &mut scratch, &mut sym);
+            dec.add_symbol(esi, &sym);
+        }
+        assert!(!dec.is_complete());
+        // Stream repair symbols until it closes (generous bound).
+        let mut esi = k as u32;
+        while !dec.is_complete() {
+            assert!(esi < 20 * k as u32, "decoder failed to converge");
+            code.symbol_into(&data, s, 9, esi, &mut scratch, &mut sym);
+            dec.add_symbol(esi, &sym);
+            esi += 1;
+        }
+        assert_eq!(dec.data(), &data[..]);
+    }
+
+    #[test]
+    fn pending_buffer_is_bounded() {
+        let (k, s) = (8usize, 16usize);
+        let seed = 0x11;
+        let code = LtCode::new(k, seed).unwrap();
+        let data = group_data(k, s, 4);
+        let mut dec = FountainDecoder::new(k, s, seed, 0).unwrap();
+        let mut scratch = Vec::new();
+        let mut sym = vec![0u8; s];
+        // Feed only high-degree repair symbols; the pending buffer must
+        // never exceed the documented cap whatever happens.
+        for esi in k as u32..(k as u32 + 500) {
+            code.symbol_into(&data, s, 0, esi, &mut scratch, &mut sym);
+            dec.add_symbol(esi, &sym);
+            assert!(dec.buffered() <= 2 * k + 16);
+            if dec.is_complete() {
+                break;
+            }
+        }
+        assert!(dec.is_complete(), "500 symbols must decode k=8");
+        assert_eq!(dec.data(), &data[..]);
+    }
+
+    #[test]
+    fn backend_trait_geometry_for_lt() {
+        let code = LtCode::new(24, 1).unwrap();
+        let b: &dyn ErasureBackend = &code;
+        assert_eq!(b.data_fragments(), 24);
+        assert_eq!(b.parity_fragments(), 0);
+        assert_eq!(b.group_slots(), 24);
+    }
+
+    #[test]
+    fn backend_encode_strided_validates_geometry() {
+        let code = LtCode::new(4, 1).unwrap();
+        let mut buf = vec![0u8; 4 * 8];
+        assert!(ErasureBackend::encode_strided(&code, &mut buf, 8).is_ok());
+        assert!(ErasureBackend::encode_strided(&code, &mut buf, 7).is_err());
+    }
+}

@@ -6,10 +6,17 @@
 //!   `JANUS_GF_KERNEL` override) + fused multi-row coding kernels.
 //! * [`matrix`] — GF(256) linear algebra + systematic MDS generator.
 //! * [`rs`] — `(k, m)` encode / reconstruct, the FTG primitive.
+//! * [`backend`] — the [`ErasureBackend`] trait seam + the user-facing
+//!   [`Backend`] selector (DESIGN.md §12).
+//! * [`fountain`] — LT-style rateless code: robust-soliton degree
+//!   sampling, seeded XOR symbols on the kernel fast paths, peeling +
+//!   Gaussian-elimination decoding.
 //! * [`par`] — fixed std-thread coding pool (deterministic batch
 //!   encode/decode across cores).
 //! * [`throughput`] — measured parity-generation rate `r_ec` (§5.2.2).
 
+pub mod backend;
+pub mod fountain;
 pub mod gf256;
 pub mod kernel;
 pub mod matrix;
@@ -17,6 +24,8 @@ pub mod par;
 pub mod rs;
 pub mod throughput;
 
+pub use backend::{Backend, ErasureBackend};
+pub use fountain::{FountainDecoder, LtCode, RobustSoliton};
 pub use kernel::KernelTier;
 pub use par::CodingPool;
 pub use rs::{RsCode, RsError};

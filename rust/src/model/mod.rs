@@ -25,6 +25,7 @@ pub use prob::{
     p_unrecoverable_table_bursty,
 };
 pub use time_model::{
-    expected_time_curve, expected_total_time, num_ftgs, optimize_parity, optimize_parity_bursty,
-    parity_floor_bursty, TimeOpt,
+    expected_time_curve, expected_total_time, fountain_feasible_levels, fountain_overhead,
+    fountain_symbols, fountain_total_time, num_ftgs, optimize_parity, optimize_parity_bursty,
+    p_fragment_loss, parity_floor_bursty, TimeOpt,
 };

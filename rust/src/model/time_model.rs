@@ -103,6 +103,78 @@ pub fn parity_floor_bursty(params: &NetParams, burst: f64, p_max: f64) -> usize 
     max_m
 }
 
+// ---------------------------------------------------------------------------
+// Barrier-free fountain accounting (DESIGN.md §12).
+//
+// Eq. 2 prices repair as a geometric cascade of pass barriers: each round
+// costs a feedback RTT plus the retransmitted wire time. The rateless
+// backend has no rounds at all — the sender streams source symbols and
+// then repair symbols until the compact group acks drain, so the only
+// repair cost is the *expected overhead symbol count*, paid inline at
+// line rate. These functions re-derive the τ budget for that shape.
+
+/// Expected reception overhead `ε` of the LT decoder at group size `k`:
+/// robust-soliton peeling completes w.h.p. once `k·(1+ε)` distinct
+/// symbols arrive, with `ε ≈ (R + g)/k` where `R = c·ln(k/δ)·√k` is the
+/// soliton spike mass (the classic `O(√k·ln(k/δ))` overhead) and `g` a
+/// small constant margin for the Gaussian-elimination fallback clearing
+/// the last rank deficiencies. Uses the decoder's shipped defaults
+/// ([`crate::erasure::RobustSoliton::C`]/[`DELTA`](crate::erasure::RobustSoliton::DELTA)).
+pub fn fountain_overhead(k: usize) -> f64 {
+    assert!(k >= 1);
+    if k == 1 {
+        return 0.0; // degree-1 symbols only: first arrival decodes.
+    }
+    const GE_MARGIN: f64 = 2.0;
+    let kf = k as f64;
+    let c = crate::erasure::RobustSoliton::C;
+    let delta = crate::erasure::RobustSoliton::DELTA;
+    let r_spike = (c * (kf / delta).ln() * kf.sqrt()).max(1.0);
+    (r_spike + GE_MARGIN) / kf
+}
+
+/// Expected symbols the fountain sender puts on the wire to deliver
+/// `total_bytes`: `(S/s)·(1+ε)/(1−p_f)` — every group needs `k·(1+ε)`
+/// *received* symbols and the channel erases each sent symbol with
+/// probability `p_f` independently. Fountain groups carry `k = n` data
+/// fragments (no planned parity slots).
+pub fn fountain_symbols(total_bytes: u64, p: &NetParams, p_frag_loss: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p_frag_loss), "p={p_frag_loss}");
+    let source = total_bytes as f64 / p.s as f64;
+    source * (1.0 + fountain_overhead(p.n)) / (1.0 - p_frag_loss)
+}
+
+/// Per-fragment channel loss probability implied by the Table 1
+/// parameters: `λ` losses/s over `r` fragments/s on the wire.
+pub fn p_fragment_loss(p: &NetParams) -> f64 {
+    (p.lambda / p.r).clamp(0.0, 0.999)
+}
+
+/// Barrier-free expected completion time: one propagation delay to open
+/// the stream, the symbol train at rate `r`, and one more `t` for the
+/// final [`GroupAck`](crate::coordinator::Packet::GroupAck) to land —
+/// the *entire* feedback cost, replacing Eq. 2's per-round `t` cascade.
+pub fn fountain_total_time(params: &NetParams, total_bytes: u64, p_frag_loss: f64) -> f64 {
+    let symbols = fountain_symbols(total_bytes, params, p_frag_loss);
+    2.0 * params.t + (symbols - 1.0).max(0.0) / params.r
+}
+
+/// Deadline prefix selection for the barrier-free mode: the largest
+/// level count `l` whose fountain completion time fits `τ` (the Eq. 12
+/// analogue — with no retransmission rounds to price, the search over
+/// per-level parity collapses to a prefix scan).
+pub fn fountain_feasible_levels(
+    params: &NetParams,
+    sched: &crate::model::LevelSchedule,
+    tau: f64,
+) -> usize {
+    let p_f = p_fragment_loss(params);
+    (1..=sched.num_levels())
+        .rev()
+        .find(|&l| fountain_total_time(params, sched.total_bytes(l), p_f) <= tau)
+        .unwrap_or(0)
+}
+
 /// Expected time for every m (for Fig. 2's model curves).
 pub fn expected_time_curve(params: &NetParams, total_bytes: u64, max_m: usize) -> Vec<TimeOpt> {
     (0..=max_m)
@@ -243,6 +315,66 @@ mod tests {
         let p = NetParams::paper_default(383.0);
         let bytes = LevelSchedule::paper_nyx().total_bytes(4);
         assert_eq!(optimize_parity_bursty(&p, bytes, 1.0), optimize_parity(&p, bytes));
+    }
+
+    #[test]
+    fn fountain_overhead_shrinks_relatively_with_k() {
+        assert_eq!(fountain_overhead(1), 0.0);
+        // ε ~ O(ln k/√k): the *relative* overhead decays as groups grow.
+        let e8 = fountain_overhead(8);
+        let e32 = fountain_overhead(32);
+        let e256 = fountain_overhead(256);
+        assert!(e8 > e32 && e32 > e256, "{e8} {e32} {e256}");
+        assert!(e256 > 0.0 && e8 < 2.0, "overhead out of range: {e8}..{e256}");
+    }
+
+    #[test]
+    fn fountain_time_monotone_in_loss_and_size() {
+        let p = NetParams::paper_default(383.0);
+        let t0 = fountain_total_time(&p, 1 << 26, 0.0);
+        let t5 = fountain_total_time(&p, 1 << 26, 0.05);
+        let t20 = fountain_total_time(&p, 1 << 26, 0.20);
+        assert!(t0 < t5 && t5 < t20);
+        assert!(fountain_total_time(&p, 1 << 27, 0.05) > t5);
+        // Lossless fountain pays only the soliton overhead over wire time.
+        let wire = 2.0 * p.t + ((1u64 << 26) as f64 / p.s as f64 - 1.0) / p.r;
+        assert!(t0 >= wire && t0 < wire * (1.0 + 2.0 * fountain_overhead(p.n)) + 1.0);
+    }
+
+    #[test]
+    fn fountain_beats_barrier_cascade_at_high_rtt_loss() {
+        // The headline claim of the barrier-free mode: at 5% fragment
+        // loss on a high-latency path, streaming the expected overhead
+        // inline beats Eq. 2's pass cascade (every round re-pays `t`).
+        let mut p = NetParams::paper_default(0.0);
+        p.t = 0.5; // 500 ms one-way: cross-facility WAN.
+        p.lambda = 0.05 * p.r; // 5% fragment loss.
+        let bytes = 1u64 << 26;
+        let m = 2; // lightly provisioned RS: repair happens in passes.
+        let p_loss = p_unrecoverable(&p, m);
+        let rs_time = expected_total_time(&p, num_ftgs(bytes, &p, m), p_loss);
+        let f_time = fountain_total_time(&p, bytes, p_fragment_loss(&p));
+        assert!(
+            f_time < rs_time,
+            "fountain {f_time:.3}s !< RS cascade {rs_time:.3}s"
+        );
+    }
+
+    #[test]
+    fn fountain_feasible_levels_monotone_in_tau() {
+        let p = NetParams::paper_default(383.0);
+        let sched = LevelSchedule::paper_nyx();
+        let p_f = p_fragment_loss(&p);
+        let full = fountain_total_time(&p, sched.total_bytes(sched.num_levels()), p_f);
+        assert_eq!(fountain_feasible_levels(&p, &sched, full * 1.01), sched.num_levels());
+        let one = fountain_total_time(&p, sched.total_bytes(1), p_f);
+        assert_eq!(fountain_feasible_levels(&p, &sched, one * 0.5), 0);
+        let mut prev = 0;
+        for i in 1..=8 {
+            let l = fountain_feasible_levels(&p, &sched, full * i as f64 / 8.0);
+            assert!(l >= prev, "feasible prefix not monotone in τ");
+            prev = l;
+        }
     }
 
     #[test]

@@ -508,3 +508,57 @@ fn pooled_fidelity_certifies_over_asymmetric_loss() {
     assert_eq!(level_decoded(&rlog).len(), data.levels.len());
     assert!(rep.sent.pooled().is_some(), "streams=4 routes pooled");
 }
+
+// ------------------------------------------------------- Segment order
+
+#[test]
+fn marginal_segment_order_never_worsens_certified_eps_at_equal_budget() {
+    use janus::codec::{encode_ordered, Decoder, Encoded, SegmentOrder};
+    let vol = generate(32, &GrfConfig::default(), 0x06D3);
+    let cfg = CodecConfig { levels: 4, ladder: vec![4e-3, 5e-4, 8e-5], max_planes: 24 };
+    let lvl = encode_ordered(&vol, &cfg, SegmentOrder::LevelOrder).unwrap();
+    let marg = encode_ordered(&vol, &cfg, SegmentOrder::MarginalEps).unwrap();
+    // A rung's plane plan — and thus its full-rung measured ε and byte
+    // count — is fixed before scheduling; only interior boundaries move.
+    assert_eq!(lvl.eps, marg.eps);
+    assert_eq!(lvl.planes, marg.planes);
+    for r in 0..lvl.rungs.len() {
+        assert_eq!(lvl.rungs[r].len(), marg.rungs[r].len(), "rung {r} total bytes");
+        let start = if r == 0 { 1.0 } else { lvl.eps[r - 1] };
+        // Certified ε at a byte budget mid-rung: the best PlaneCut shed
+        // point inside the budget (the Deadline contract's semantics).
+        let certified = |enc: &Encoded, budget: u64| -> f64 {
+            let mut e = start;
+            for cut in &enc.cuts[r] {
+                if cut.bytes <= budget && cut.eps < e {
+                    e = cut.eps;
+                }
+            }
+            if budget >= enc.rungs[r].len() as u64 {
+                e = e.min(enc.eps[r]);
+            }
+            e
+        };
+        let budgets: Vec<u64> = lvl.cuts[r]
+            .iter()
+            .chain(&marg.cuts[r])
+            .map(|c| c.bytes)
+            .chain([lvl.rungs[r].len() as u64])
+            .collect();
+        for &budget in &budgets {
+            let (m, l2) = (certified(&marg, budget), certified(&lvl, budget));
+            assert!(
+                m <= l2 + 1e-15,
+                "rung {r} @ {budget}B: marginal certifies {m}, level order {l2}"
+            );
+        }
+    }
+    // Both orders decode byte-exactly to the same full-precision output.
+    let refs_l: Vec<&[u8]> = lvl.rungs.iter().map(|r| r.as_slice()).collect();
+    let refs_m: Vec<&[u8]> = marg.rungs.iter().map(|r| r.as_slice()).collect();
+    let out_l = Decoder::decode(&refs_l).unwrap();
+    let out_m = Decoder::decode(&refs_m).unwrap();
+    assert_eq!(out_l.volume.data, out_m.volume.data, "segment order is decode-invariant");
+    assert!((out_l.achieved_eps - out_m.achieved_eps).abs() < 1e-18);
+    assert_eq!(out_l.planes_used, out_m.planes_used);
+}

@@ -8,9 +8,10 @@
 use janus::api::{AdaptConfig, Contract};
 use janus::coordinator::packet::is_fragment;
 use janus::coordinator::{
-    run_receiver, run_sender, PacketView, ReceiverConfig, SenderConfig,
+    run_receiver, run_sender, Packet, PacketView, ReceiverConfig, SenderConfig,
 };
 use janus::engine::{ReceiverMachine, SenderMachine};
+use janus::erasure::Backend;
 use janus::model::NetParams;
 use janus::testkit::{FragmentLossChannel, LossTrace};
 use janus::transport::channel::mem_pair;
@@ -355,4 +356,123 @@ fn rtt_step_reconverges_without_retry_storm() {
         eop <= passes + 6,
         "retry storm: {eop} EndOfPass sends over {passes} retransmission passes"
     );
+}
+
+#[test]
+fn fountain_backend_is_barrier_free_and_byte_exact_under_loss() {
+    // The rateless acceptance matrix: random loss at {0, 1, 5, 20}% plus
+    // Gilbert-Elliott bursts. Every run must deliver byte-exact with the
+    // pass-barrier machinery *never engaging* — no EndOfPass, no
+    // LostList on the wire, zero retransmission passes — because repair
+    // symbols stream until the receiver's GroupAcks say stop.
+    let data = vec![payload(11, 40_000), payload(12, 80_000)];
+    let eps = vec![1e-3, 1e-7];
+    let traces: Vec<(&str, LossTrace)> = vec![
+        ("lossless", LossTrace::None),
+        ("1% random", LossTrace::seeded(0.01, 0xA1)),
+        ("5% random", LossTrace::seeded(0.05, 0xA2)),
+        ("20% random", LossTrace::seeded(0.20, 0xA3)),
+        ("5% in bursts of 8", LossTrace::gilbert_elliott(0.05, 8.0, RATE, 0xA4)),
+    ];
+    for (name, trace) in traces {
+        let mut net = Net::new(Duration::from_millis(2), trace);
+        let mut s = SenderMachine::with_backend(
+            &scfg(0.05 * RATE),
+            &data,
+            &eps,
+            Backend::Fountain,
+            net.now,
+        )
+        .unwrap();
+        let mut r = ReceiverMachine::new(&rcfg(), net.now);
+        // Loss injection keys on `is_fragment`, which covers repair
+        // symbols too — the repair stream itself rides the lossy path.
+        let mut barrier_pkt: Option<&'static str> = None;
+        run(&mut net, &mut s, &mut r, |net, _| {
+            for (_, buf) in net.s2r.iter().chain(net.r2s.iter()) {
+                match Packet::decode(buf) {
+                    Ok(Packet::EndOfPass { .. }) => barrier_pkt = Some("EndOfPass"),
+                    Ok(Packet::LostList { .. }) => barrier_pkt = Some("LostList"),
+                    _ => {}
+                }
+            }
+        });
+        assert!(!s.is_failed(), "{name}: sender failed");
+        assert!(!r.is_failed(), "{name}: receiver failed");
+        assert_eq!(s.eop_sends(), 0, "{name}: fountain sender sent EndOfPass");
+        assert_eq!(barrier_pkt, None, "{name}: barrier packet on the wire");
+        let sr = s.into_report().unwrap();
+        assert_eq!(sr.passes, 0, "{name}: fountain transfer counted a pass");
+        assert_delivered(&r.into_report().unwrap(), &data);
+    }
+}
+
+#[test]
+fn explicit_rs_backend_matches_the_default_constructor_trace() {
+    // `Backend::Rs` is the default: selecting it explicitly must leave
+    // the wire trace byte-identical to `SenderMachine::new` under the
+    // same seeded loss — the backend seam adds a dispatch point, not a
+    // behavior change.
+    let data = vec![payload(21, 96_000)];
+    let eps = vec![1e-7];
+    let mut run_one = |explicit: bool| {
+        let mut net = Net::new(Duration::from_millis(2), LossTrace::seeded(0.10, 0xC3));
+        let cfg = scfg(0.10 * RATE);
+        let mut s = if explicit {
+            SenderMachine::with_backend(&cfg, &data, &eps, Backend::Rs, net.now).unwrap()
+        } else {
+            SenderMachine::new(&cfg, &data, &eps, net.now).unwrap()
+        };
+        let mut r = ReceiverMachine::new(&rcfg(), net.now);
+        run(&mut net, &mut s, &mut r, |_, _| {});
+        assert!(!s.is_failed() && !r.is_failed());
+        (s.into_report().unwrap(), r.into_report().unwrap())
+    };
+    let (sd, rd) = run_one(false);
+    let (se, re) = run_one(true);
+    assert_eq!(sd.passes, se.passes, "pass count");
+    assert_eq!(sd.fragments_sent, se.fragments_sent, "fragments offered");
+    assert_eq!(sd.data_fragments, se.data_fragments, "data fragments");
+    assert_eq!(sd.m_history, se.m_history, "adaptation history");
+    assert_eq!(rd.fragments_received, re.fragments_received, "fragments delivered");
+    assert_eq!(rd.groups_recovered, re.groups_recovered, "RS recoveries");
+    assert_eq!(rd.levels, re.levels, "delivered bytes");
+    assert_delivered(&rd, &data);
+}
+
+#[test]
+fn lambda_windows_pair_one_to_one_across_backends() {
+    // λ̂ window accounting is shared by the classic and fountain receive
+    // paths (repair symbols carry the same seq space as fragments), and
+    // LambdaUpdate rides the reliable control path: every window the
+    // receiver closes must land at the sender, in order, value-exact —
+    // under either backend — at a cadence bounded by duration / T_W.
+    let data = vec![payload(31, 400_000)];
+    let eps = vec![1e-7];
+    let t_w = 0.002;
+    let rc = ReceiverConfig { t_w, ..rcfg() };
+    for backend in [Backend::Rs, Backend::Fountain] {
+        let mut net = Net::new(Duration::from_millis(2), LossTrace::seeded(0.05, 0xD4));
+        let mut s =
+            SenderMachine::with_backend(&scfg(0.05 * RATE), &data, &eps, backend, net.now)
+                .unwrap();
+        let mut r = ReceiverMachine::new(&rc, net.now);
+        let dur = run(&mut net, &mut s, &mut r, |_, _| {});
+        assert!(!s.is_failed(), "{backend:?}: sender failed");
+        assert!(!r.is_failed(), "{backend:?}: receiver failed");
+        let sr = s.into_report().unwrap();
+        let rr = r.into_report().unwrap();
+        assert_delivered(&rr, &data);
+        assert_eq!(
+            sr.lambda_updates, rr.lambda_reports,
+            "{backend:?}: emitted λ̂ windows and received updates must pair one-to-one"
+        );
+        let windows = rr.lambda_reports.len();
+        assert!(windows >= 2, "{backend:?}: only {windows} λ windows over {dur:?}");
+        let ceiling = (dur.as_secs_f64() / t_w).ceil() as usize + 2;
+        assert!(
+            windows <= ceiling,
+            "{backend:?}: {windows} windows exceed the cadence ceiling {ceiling}"
+        );
+    }
 }

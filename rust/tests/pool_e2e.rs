@@ -242,6 +242,36 @@ fn pooled_deadline_trace_determinism_includes_shed_decisions() {
 }
 
 #[test]
+fn decode_worker_count_never_changes_delivered_bytes() {
+    // The pooled receiver's RS recovery is batched across a CodingPool
+    // (`reconstruct_levels` → `RsCode::reconstruct_batch`); the
+    // erasure::par determinism contract promises byte-identical delivery
+    // for any worker count — including zero, where the submitting thread
+    // drains the whole queue itself.
+    let run = |workers: &str| {
+        std::env::set_var("JANUS_POOL_DECODE_WORKERS", workers);
+        let rep = run_at(0.05, 4242, 0.05 * RATE * STREAMS as f64);
+        std::env::remove_var("JANUS_POOL_DECODE_WORKERS");
+        rep
+    };
+    let r0 = run("0");
+    let r3 = run("3");
+    assert!(
+        r0.received.groups_recovered > 0,
+        "matrix point must actually exercise RS recovery"
+    );
+    assert_eq!(r0.received.groups_recovered, r3.received.groups_recovered);
+    assert_eq!(
+        r0.received.levels, r3.received.levels,
+        "delivered bytes must not depend on the decode worker count"
+    );
+    assert_eq!(
+        r0.received.pooled().unwrap().trace,
+        r3.received.pooled().unwrap().trace
+    );
+}
+
+#[test]
 fn different_seeds_produce_different_traces_under_loss() {
     // Sanity for the determinism assertion above: the trace actually
     // depends on the loss realization (i.e. the equality test is not

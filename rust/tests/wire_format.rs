@@ -3,7 +3,7 @@
 //! never panics, never silently-wrong packets.
 
 use janus::coordinator::packet::{encode_fragment_into, is_fragment};
-use janus::coordinator::{FragmentHeader, Manifest, ManifestLevel, Packet};
+use janus::coordinator::{FragmentHeader, Manifest, ManifestLevel, Packet, RepairHeader};
 use janus::util::prop::{check, no_shrink, PropConfig};
 use janus::util::Pcg64;
 
@@ -26,8 +26,23 @@ fn random_fragment(rng: &mut Pcg64) -> Packet {
     )
 }
 
+fn random_repair(rng: &mut Pcg64) -> Packet {
+    let len = rng.range(0, 4097);
+    let mut payload = vec![0u8; len];
+    rng.fill_bytes(&mut payload);
+    Packet::RepairSymbol(
+        RepairHeader {
+            group: rng.next_u64() as u32,
+            esi: rng.next_u64() as u32,
+            seed: rng.next_u64(),
+            seq: rng.next_u64(),
+        },
+        payload,
+    )
+}
+
 fn random_packet(rng: &mut Pcg64) -> Packet {
-    match rng.next_below(10) {
+    match rng.next_below(12) {
         0 => random_fragment(rng),
         1 => Packet::LambdaUpdate { lambda: rng.next_f64() * 1e6 },
         2 => Packet::EndOfPass { pass: rng.next_u64() as u32 },
@@ -71,11 +86,13 @@ fn random_packet(rng: &mut Pcg64) -> Packet {
             runs: rng.next_u64() as u32,
             burst_lost: rng.next_u64(),
         },
-        _ => Packet::LevelShed {
+        9 => Packet::LevelShed {
             level: rng.next_below(256) as u8,
             bytes: rng.next_u64(),
             eps: rng.next_f64(),
         },
+        10 => random_repair(rng),
+        _ => Packet::GroupAck { upto: rng.next_u64() as u32, bitmap: rng.next_u64() },
     }
 }
 
@@ -237,10 +254,15 @@ fn manifest_carries_contract_and_shed_geometry() {
 #[test]
 fn fragment_discriminator_is_stable() {
     // testkit's loss injection keys on the first byte; pin the contract.
+    // Repair symbols ride the data path, so loss channels must drop them
+    // like fragments; group acks are control traffic.
     let mut rng = Pcg64::seeded(7);
-    for _ in 0..200 {
+    for _ in 0..240 {
         let p = random_packet(&mut rng);
         let buf = p.encode();
-        assert_eq!(is_fragment(&buf), matches!(p, Packet::Fragment(..)));
+        assert_eq!(
+            is_fragment(&buf),
+            matches!(p, Packet::Fragment(..) | Packet::RepairSymbol(..))
+        );
     }
 }
