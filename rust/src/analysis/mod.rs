@@ -1,0 +1,204 @@
+//! In-tree static analysis: the `janus lint` rule engine (DESIGN.md §13).
+//!
+//! JANUS's correctness story rests on contracts the compiler never
+//! checks: the sans-IO engine promises "every clock is an explicit
+//! `Instant` parameter", the datapath promises zero steady-state
+//! allocation, the wire format promises pinned discriminants, the SIMD
+//! kernels promise their `unsafe` is sound, and the workspace promises
+//! zero external dependencies. This module turns those promises into
+//! machine-checked rules: a comment/string-aware line scanner
+//! ([`scan`]) feeds a catalog of project-specific rules ([`rules`]),
+//! and `tests/lint_gate.rs` fails `cargo test` on any violation.
+//!
+//! The rules run over a [`SourceTree`] — an in-memory snapshot of the
+//! workspace sources — so the gate test can also run them over
+//! *mutated* copies: every rule is mutation-tested by seeding a
+//! violation and asserting the rule goes red.
+//!
+//! Zero dependencies by design: no `syn`, no filesystem walker crate.
+//! The scanner is a byte-wise state machine and the loader is a small
+//! recursive `std::fs` walk.
+
+pub mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The checked-in per-file unsafe budget (rule `unsafe-audit`).
+pub const DEFAULT_BUDGET: &str = include_str!("unsafe_budget.txt");
+
+/// One rule violation: `path:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule name from [`rules::RULES`].
+    pub rule: &'static str,
+    /// Workspace-relative path with `/` separators.
+    pub path: String,
+    /// 1-based line, or 0 when the violation is file-level.
+    pub line: usize,
+    /// Human-readable description with the fix direction.
+    pub message: String,
+}
+
+impl Violation {
+    pub fn new(rule: &'static str, path: &str, line: usize, message: String) -> Self {
+        Violation { rule, path: path.to_string(), line, message }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// One source file: workspace-relative path (always `/`-separated) and
+/// full text.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// An in-memory snapshot of the workspace sources the rules care
+/// about: every `.rs` file under `rust/src/` plus both Cargo.tomls.
+/// Tests mutate copies via [`SourceTree::replace_file`]/
+/// [`SourceTree::push_file`] to seed violations.
+#[derive(Debug, Clone, Default)]
+pub struct SourceTree {
+    files: Vec<SourceFile>,
+}
+
+impl SourceTree {
+    /// Load the tree from a workspace root (the directory holding the
+    /// top-level `Cargo.toml` and `rust/`).
+    pub fn load(root: &Path) -> io::Result<SourceTree> {
+        let mut tree = SourceTree::default();
+        let src = root.join("rust").join("src");
+        if !src.is_dir() {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("{} is not a workspace root (no rust/src)", root.display()),
+            ));
+        }
+        walk_rs(&src, Path::new("rust/src"), &mut tree.files)?;
+        for rel in ["Cargo.toml", "rust/Cargo.toml"] {
+            let text = fs::read_to_string(root.join(rel))?;
+            tree.files.push(SourceFile { path: rel.to_string(), text });
+        }
+        tree.files.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(tree)
+    }
+
+    /// All `.rs` files, in path order.
+    pub fn rs_files(&self) -> impl Iterator<Item = &SourceFile> {
+        self.files.iter().filter(|f| f.path.ends_with(".rs"))
+    }
+
+    /// Look up a file by workspace-relative path.
+    pub fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    /// Add a file (tests: seed a synthetic violating file).
+    pub fn push_file(&mut self, path: &str, text: &str) {
+        self.files.push(SourceFile { path: path.to_string(), text: text.to_string() });
+    }
+
+    /// Replace an existing file's text, returning whether it existed
+    /// (tests: mutate a real file and assert the rule goes red).
+    pub fn replace_file(&mut self, path: &str, text: &str) -> bool {
+        match self.files.iter_mut().find(|f| f.path == path) {
+            Some(f) => {
+                f.text = text.to_string();
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Recursive walk collecting `.rs` files with stable `/`-separated
+/// relative paths, in sorted order for determinism across platforms.
+fn walk_rs(dir: &Path, rel: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let path = entry.path();
+        let rel = rel.join(&*name);
+        if path.is_dir() {
+            walk_rs(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            let text = fs::read_to_string(&path)?;
+            let rel = rel.to_string_lossy().replace('\\', "/");
+            out.push(SourceFile { path: rel, text });
+        }
+    }
+    Ok(())
+}
+
+/// Find the workspace root: prefer the compile-time manifest dir
+/// (`rust/`, whose parent is the root), falling back to walking up
+/// from the current directory looking for `rust/src/lib.rs`.
+pub fn workspace_root() -> Option<PathBuf> {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if let Some(parent) = manifest.parent() {
+        if parent.join("rust/src/lib.rs").is_file() {
+            return Some(parent.to_path_buf());
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Load the tree at `root` and run the whole rule catalog against the
+/// checked-in unsafe budget.
+pub fn lint_root(root: &Path) -> io::Result<Vec<Violation>> {
+    let tree = SourceTree::load(root)?;
+    Ok(rules::run_all(&tree, DEFAULT_BUDGET))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_accessors() {
+        let mut tree = SourceTree::default();
+        tree.push_file("rust/src/a.rs", "fn a() {}\n");
+        tree.push_file("Cargo.toml", "[workspace]\n");
+        assert_eq!(tree.rs_files().count(), 1);
+        assert!(tree.file("Cargo.toml").is_some());
+        assert!(tree.replace_file("rust/src/a.rs", "fn b() {}\n"));
+        assert!(!tree.replace_file("rust/src/missing.rs", ""));
+        assert!(tree.file("rust/src/a.rs").unwrap().text.contains("fn b"));
+    }
+
+    #[test]
+    fn workspace_root_finds_the_repo() {
+        let root = workspace_root().expect("workspace root");
+        assert!(root.join("rust/src/analysis/mod.rs").is_file());
+    }
+
+    #[test]
+    fn real_tree_loads_and_lints_clean() {
+        let root = workspace_root().expect("workspace root");
+        let violations = lint_root(&root).expect("lint");
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        assert!(violations.is_empty(), "{} violations on the real tree", violations.len());
+    }
+}

@@ -1,0 +1,426 @@
+//! The `janus lint` rule catalog (DESIGN.md §13). Each rule is a pure
+//! function from a [`SourceTree`] to a list of [`Violation`]s, so the
+//! gate test can run the same rules on both the real tree and mutated
+//! in-memory copies (mutation tests: every rule must go red when its
+//! invariant is seeded broken).
+
+use super::scan::{self, Line};
+use super::{SourceTree, Violation};
+use std::collections::BTreeMap;
+
+/// Rule names, in the order `run_all` executes them.
+pub const RULES: &[&str] =
+    &["sans-io-clock", "unsafe-audit", "datapath-no-alloc", "wire-pin", "no-deps"];
+
+// ---------------------------------------------------------------------------
+// Rule 1: sans-io-clock
+// ---------------------------------------------------------------------------
+
+/// Directories under the explicit-clock contract (DESIGN.md §10): the
+/// machines take `Instant` parameters; only drivers may read the OS
+/// clock.
+const CLOCK_SCOPES: &[&str] = &["rust/src/engine/", "rust/src/serve/"];
+
+/// Whole files allowed to touch the real clock: the blocking drivers,
+/// whose entire job is pumping a sans-IO machine on real time.
+const CLOCK_FILE_ALLOWLIST: &[&str] = &["rust/src/engine/driver.rs", "rust/src/serve/transport.rs"];
+
+/// Banned tokens (matched on the comment/string-stripped shadow).
+const CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime::now", "thread::sleep"];
+
+/// Inline waiver marker: on the flagged line or anywhere in the
+/// contiguous comment block directly above it (waiver justifications
+/// are encouraged to run long).
+const CLOCK_WAIVER: &str = "lint: allow(sans-io-clock)";
+
+/// Is the flagged line at `idx` covered by a waiver in the contiguous
+/// `//` comment block directly above? Stops at the first code line, so
+/// a waiver never leaks past the statement it annotates.
+fn clock_waived_above(lines: &[Line], idx: usize) -> bool {
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = lines[i].raw.trim();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains(CLOCK_WAIVER) {
+            return true;
+        }
+    }
+    false
+}
+
+/// No wall-clock reads inside the sans-IO scope, outside the allowlist.
+pub fn sans_io_clock(tree: &SourceTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in tree.rs_files() {
+        if !CLOCK_SCOPES.iter().any(|s| f.path.starts_with(s)) {
+            continue;
+        }
+        if CLOCK_FILE_ALLOWLIST.contains(&f.path.as_str()) {
+            continue;
+        }
+        let lines = scan::strip(&f.text);
+        for (idx, line) in lines.iter().enumerate() {
+            // Test modules sit at the bottom of each file; the real
+            // clock is fair game there.
+            if line.raw.contains("#[cfg(test)]") {
+                break;
+            }
+            let Some(tok) = CLOCK_TOKENS.iter().find(|t| scan::has_token(&line.code, t)) else {
+                continue;
+            };
+            let waived = line.raw.contains(CLOCK_WAIVER) || clock_waived_above(&lines, idx);
+            if waived {
+                continue;
+            }
+            out.push(Violation::new(
+                "sans-io-clock",
+                &f.path,
+                idx + 1,
+                format!(
+                    "`{tok}` in sans-IO scope; pass `Instant` in, or waive with \
+                     `// {CLOCK_WAIVER}: <reason>`"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: unsafe-audit
+// ---------------------------------------------------------------------------
+
+/// Path of the checked-in per-file unsafe budget.
+const BUDGET_PATH: &str = "rust/src/analysis/unsafe_budget.txt";
+
+/// Every `unsafe` token needs a `SAFETY:` justification on the same
+/// line or in the contiguous comment/attribute block above, and the
+/// per-file token counts must match the checked-in budget exactly
+/// (both directions: new unsafe and stale budget entries fail).
+pub fn unsafe_audit(tree: &SourceTree, budget: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut pinned: BTreeMap<&str, usize> = BTreeMap::new();
+    for (idx, line) in budget.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        match (it.next(), it.next().and_then(|n| n.parse().ok()), it.next()) {
+            (Some(path), Some(count), None) => {
+                pinned.insert(path, count);
+            }
+            _ => out.push(Violation::new(
+                "unsafe-audit",
+                BUDGET_PATH,
+                idx + 1,
+                format!("malformed budget line `{t}` (want `<path> <count>`)"),
+            )),
+        }
+    }
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    for f in tree.rs_files() {
+        let lines = scan::strip(&f.text);
+        let mut count = 0;
+        for (idx, line) in lines.iter().enumerate() {
+            let c = scan::count_token(&line.code, "unsafe");
+            if c == 0 {
+                continue;
+            }
+            count += c;
+            if !has_safety_comment(&lines, idx) {
+                out.push(Violation::new(
+                    "unsafe-audit",
+                    &f.path,
+                    idx + 1,
+                    "`unsafe` without a `// SAFETY:` comment immediately above".to_string(),
+                ));
+            }
+        }
+        if count > 0 {
+            seen.insert(f.path.clone(), count);
+        }
+    }
+    for (path, &want) in &pinned {
+        let got = seen.get(*path).copied().unwrap_or(0);
+        if got != want {
+            out.push(Violation::new(
+                "unsafe-audit",
+                path,
+                0,
+                format!("unsafe budget mismatch: counted {got}, budget pins {want}"),
+            ));
+        }
+    }
+    for (path, &got) in &seen {
+        if !pinned.contains_key(path.as_str()) {
+            out.push(Violation::new(
+                "unsafe-audit",
+                path,
+                0,
+                format!("{got} unsafe token(s) but no entry in {BUDGET_PATH}"),
+            ));
+        }
+    }
+    out
+}
+
+/// `SAFETY:` (or a `# Safety` doc heading) on this raw line, or in the
+/// contiguous run of comment/attribute lines directly above it.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    let justifies = |raw: &str| raw.contains("SAFETY:") || raw.contains("# Safety");
+    if justifies(&lines[idx].raw) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = lines[i].raw.trim();
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![") {
+            if justifies(t) {
+                return true;
+            }
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: datapath-no-alloc
+// ---------------------------------------------------------------------------
+
+/// Region markers: a line whose first token is the marker comment.
+/// Matching on the line *prefix* (not `contains`) keeps prose that
+/// merely mentions the markers — like this module — from opening
+/// phantom regions.
+const DATAPATH_OPEN: &str = "// lint: datapath";
+const DATAPATH_CLOSE: &str = "// lint: end-datapath";
+
+/// Allocation tokens banned inside marked regions. The counting
+/// allocator (`tests/alloc_datapath.rs`) catches these dynamically on
+/// the paths it drives; this rule catches them lexically everywhere.
+const ALLOC_TOKENS: &[&str] = &["vec!", "Vec::new", ".to_vec()", ".clone()"];
+
+/// No allocation tokens between `// lint: datapath` and
+/// `// lint: end-datapath`; unbalanced markers are violations too.
+pub fn datapath_no_alloc(tree: &SourceTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in tree.rs_files() {
+        let lines = scan::strip(&f.text);
+        let mut open: Option<usize> = None;
+        for (idx, line) in lines.iter().enumerate() {
+            let marker = line.raw.trim_start();
+            if marker.starts_with(DATAPATH_CLOSE) {
+                if open.is_none() {
+                    out.push(Violation::new(
+                        "datapath-no-alloc",
+                        &f.path,
+                        idx + 1,
+                        "stray `lint: end-datapath` (no open region)".to_string(),
+                    ));
+                }
+                open = None;
+                continue;
+            }
+            if marker.starts_with(DATAPATH_OPEN) {
+                if open.is_some() {
+                    out.push(Violation::new(
+                        "datapath-no-alloc",
+                        &f.path,
+                        idx + 1,
+                        "nested `lint: datapath` (close the previous region first)".to_string(),
+                    ));
+                }
+                open = Some(idx);
+                continue;
+            }
+            if open.is_none() {
+                continue;
+            }
+            for tok in ALLOC_TOKENS {
+                if scan::has_token(&line.code, tok) {
+                    out.push(Violation::new(
+                        "datapath-no-alloc",
+                        &f.path,
+                        idx + 1,
+                        format!("`{tok}` inside a `lint: datapath` region"),
+                    ));
+                }
+            }
+        }
+        if let Some(start) = open {
+            out.push(Violation::new(
+                "datapath-no-alloc",
+                &f.path,
+                start + 1,
+                "unclosed `lint: datapath` region".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: wire-pin
+// ---------------------------------------------------------------------------
+
+/// The wire-format source of truth.
+const PACKET_FILE: &str = "rust/src/coordinator/packet.rs";
+
+/// Pinned `Packet` discriminants: the on-wire kind bytes. Renumbering
+/// any of these breaks cross-version interop — a new variant gets a
+/// new number appended here, existing numbers never move.
+const PINNED_KINDS: &[(&str, u64)] = &[
+    ("KIND_FRAGMENT", 1),
+    ("KIND_LAMBDA", 2),
+    ("KIND_END", 3),
+    ("KIND_LOST", 4),
+    ("KIND_DONE", 5),
+    ("KIND_MANIFEST", 6),
+    ("KIND_MANIFEST_ACK", 7),
+    ("KIND_STREAM_END", 8),
+    ("KIND_PASS_STATS", 9),
+    ("KIND_LEVEL_SHED", 10),
+    ("KIND_TRANSFER_TAG", 11),
+    ("KIND_REPAIR", 12),
+    ("KIND_GROUP_ACK", 13),
+];
+
+/// Other pinned wire constants from the same file.
+const PINNED_CONSTS: &[(&str, u64)] = &[("CONTRACT_FOUNTAIN", 0x10), ("TAG_BYTES", 5)];
+
+/// Cross-check packet.rs constants against the pinned tables: every
+/// pinned name must exist with the pinned value, and every `KIND_*`
+/// constant in the file must be pinned.
+pub fn wire_pin(tree: &SourceTree) -> Vec<Violation> {
+    let Some(f) = tree.file(PACKET_FILE) else {
+        return vec![Violation::new("wire-pin", PACKET_FILE, 0, "file missing".to_string())];
+    };
+    let mut out = Vec::new();
+    let mut found: BTreeMap<String, (usize, Option<u64>)> = BTreeMap::new();
+    for (idx, line) in scan::strip(&f.text).iter().enumerate() {
+        if let Some((name, value)) = parse_const_line(&line.code) {
+            found.insert(name.to_string(), (idx + 1, value));
+        }
+    }
+    for &(name, want) in PINNED_KINDS.iter().chain(PINNED_CONSTS) {
+        match found.get(name) {
+            None => out.push(Violation::new(
+                "wire-pin",
+                PACKET_FILE,
+                0,
+                format!("pinned constant `{name}` not found"),
+            )),
+            Some(&(line, None)) => out.push(Violation::new(
+                "wire-pin",
+                PACKET_FILE,
+                line,
+                format!("pinned constant `{name}` has a non-literal value"),
+            )),
+            Some(&(line, Some(got))) if got != want => out.push(Violation::new(
+                "wire-pin",
+                PACKET_FILE,
+                line,
+                format!("wire constant `{name}` = {got}, pinned table says {want}"),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (name, &(line, _)) in &found {
+        let pinned = PINNED_KINDS.iter().any(|&(n, _)| n == name);
+        if name.starts_with("KIND_") && !pinned {
+            out.push(Violation::new(
+                "wire-pin",
+                PACKET_FILE,
+                line,
+                format!("new discriminant `{name}` is not in the pinned table (analysis/rules.rs)"),
+            ));
+        }
+    }
+    out
+}
+
+/// Parse `[pub [(crate)]] const NAME: TY = <int literal>;` from a
+/// stripped code line. Returns `(name, None)` when the value is not a
+/// plain integer literal.
+fn parse_const_line(code: &str) -> Option<(&str, Option<u64>)> {
+    let rest = code.trim_start();
+    let rest = rest.strip_prefix("pub(crate) ").unwrap_or(rest);
+    let rest = rest.strip_prefix("pub ").unwrap_or(rest);
+    let rest = rest.strip_prefix("const ")?;
+    let name = rest[..rest.find(':')?].trim();
+    if name.is_empty() || !name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_') {
+        return None;
+    }
+    let val = rest[rest.find('=')? + 1..].trim().trim_end_matches(';').trim();
+    Some((name, parse_int_literal(val)))
+}
+
+/// Parse a decimal or `0x` integer literal, `_` separators allowed.
+fn parse_int_literal(s: &str) -> Option<u64> {
+    let s: String = s.chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: no-deps
+// ---------------------------------------------------------------------------
+
+/// Both manifests stay dependency-free. The single sanctioned entry is
+/// the pjrt-gated `xla` path dependency (normally commented out).
+const MANIFESTS: &[&str] = &["Cargo.toml", "rust/Cargo.toml"];
+
+/// Every `*dependencies*` section in both Cargo.tomls must be empty,
+/// except an `xla` path entry (the pjrt escape hatch).
+pub fn no_deps(tree: &SourceTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for path in MANIFESTS {
+        let Some(f) = tree.file(path) else {
+            out.push(Violation::new("no-deps", path, 0, "manifest missing".to_string()));
+            continue;
+        };
+        let mut section = String::new();
+        for (idx, line) in f.text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            if t.starts_with('[') {
+                section = t.trim_matches(|c| c == '[' || c == ']').to_string();
+                continue;
+            }
+            if !section.ends_with("dependencies") {
+                continue;
+            }
+            if t.starts_with("xla") && t.contains("path") {
+                continue;
+            }
+            out.push(Violation::new(
+                "no-deps",
+                path,
+                idx + 1,
+                format!("dependency `{t}` in [{section}]: the workspace is zero-dependency"),
+            ));
+        }
+    }
+    out
+}
+
+/// Run the whole catalog against `tree` with the given unsafe budget.
+pub fn run_all(tree: &SourceTree, budget: &str) -> Vec<Violation> {
+    let mut out = sans_io_clock(tree);
+    out.extend(unsafe_audit(tree, budget));
+    out.extend(datapath_no_alloc(tree));
+    out.extend(wire_pin(tree));
+    out.extend(no_deps(tree));
+    out
+}

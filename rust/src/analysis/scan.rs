@@ -1,0 +1,294 @@
+//! Comment/string-aware line scanner: the zero-dependency substitute
+//! for a real Rust parser (`syn` is not in the offline crate set, and
+//! the rules in [`crate::analysis::rules`] only need token-level facts).
+//!
+//! [`strip`] runs a byte-wise state machine over a source file and
+//! returns, per line, the original text plus a "code only" shadow where
+//! comments and string/char-literal contents are blanked to spaces.
+//! Rules match tokens against the shadow (so a doc comment mentioning
+//! `Instant::now()` never fires) and read markers/waivers from the raw
+//! text (so `// SAFETY:` and `// lint:` comments stay visible).
+//!
+//! Handled lexical shapes: `//`-comments, nested `/* */` blocks,
+//! `"…"`/`b"…"` strings with escapes, `r"…"`/`r#"…"#` raw strings
+//! (any hash depth, `br` included), char literals (`'x'`, `'\n'`,
+//! `'"'`), and lifetimes (`'a` is kept as code). Non-ASCII bytes
+//! inside blanked regions become spaces, so the shadow stays valid
+//! UTF-8 and line numbers always match the raw text.
+
+/// One source line: raw text and its comment/string-stripped shadow.
+#[derive(Debug, Clone)]
+pub struct Line {
+    pub raw: String,
+    pub code: String,
+}
+
+/// Is `b` an identifier byte (the token-boundary alphabet)?
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Detect a raw-string opener at `i` (pointing at `r`): `r"`, `r#"`,
+/// `br"`, … — returns (hash count, index just past the opening quote).
+fn raw_string_open(bytes: &[u8], i: usize) -> Option<(usize, usize)> {
+    let prev_ok = |p: usize| p == 0 || !is_ident(bytes[p - 1]);
+    let start_ok = if bytes[i] != b'r' {
+        false
+    } else if i >= 1 && bytes[i - 1] == b'b' {
+        prev_ok(i - 1)
+    } else {
+        prev_ok(i)
+    };
+    if !start_ok {
+        return None;
+    }
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while j < bytes.len() && bytes[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < bytes.len() && bytes[j] == b'"' {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Strip comments and literal contents from `text`, preserving line
+/// structure exactly (see module docs).
+pub fn strip(text: &str) -> Vec<Line> {
+    let bytes = text.as_bytes();
+    let mut code = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+    }
+    let mut st = St::Code;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'\n' {
+            code.push(b'\n');
+            i += 1;
+            if let St::LineComment = st {
+                st = St::Code;
+            }
+            continue;
+        }
+        match st {
+            St::Code => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    st = St::LineComment;
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    st = St::BlockComment(1);
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b == b'"' {
+                    st = St::Str;
+                    code.push(b' ');
+                    i += 1;
+                } else if b == b'r' {
+                    if let Some((hashes, past_quote)) = raw_string_open(bytes, i) {
+                        for _ in i..past_quote {
+                            code.push(b' ');
+                        }
+                        st = St::RawStr(hashes);
+                        i = past_quote;
+                    } else {
+                        code.push(b);
+                        i += 1;
+                    }
+                } else if b == b'\'' {
+                    if bytes.get(i + 1) == Some(&b'\\') {
+                        // Escaped char literal: blank through the close.
+                        let mut j = i + 2;
+                        while j < bytes.len() {
+                            if bytes[j] == b'\\' {
+                                j += 2;
+                            } else if bytes[j] == b'\'' {
+                                j += 1;
+                                break;
+                            } else {
+                                j += 1;
+                            }
+                        }
+                        let j = j.min(bytes.len());
+                        for _ in i..j {
+                            code.push(b' ');
+                        }
+                        i = j;
+                    } else if bytes.get(i + 2) == Some(&b'\'') {
+                        // Simple one-byte char literal, `'"'` included.
+                        code.extend_from_slice(b"   ");
+                        i += 3;
+                    } else {
+                        // Lifetime: keep the tick as code.
+                        code.push(b);
+                        i += 1;
+                    }
+                } else {
+                    code.push(b);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                code.push(b' ');
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if b == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                    st = St::BlockComment(depth + 1);
+                } else {
+                    code.push(b' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if b == b'\\' {
+                    code.push(b' ');
+                    if i + 1 < bytes.len() && bytes[i + 1] != b'\n' {
+                        code.push(b' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if b == b'"' {
+                    code.push(b' ');
+                    i += 1;
+                    st = St::Code;
+                } else {
+                    code.push(b' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                let hashes_follow =
+                    bytes[i + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes;
+                if b == b'"' && hashes_follow {
+                    for _ in 0..=hashes {
+                        code.push(b' ');
+                    }
+                    i += 1 + hashes;
+                    st = St::Code;
+                } else {
+                    code.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    let code = String::from_utf8(code).expect("blanked shadow stays valid UTF-8");
+    text.lines()
+        .zip(code.lines().chain(std::iter::repeat("")))
+        .map(|(raw, shadow)| Line { raw: raw.to_string(), code: shadow.to_string() })
+        .collect()
+}
+
+/// Occurrences of `tok` in `code` at identifier boundaries: a match may
+/// not be flanked by identifier bytes when the token itself starts/ends
+/// with one (`unsafe` never matches inside `unsafe_code`; punctuated
+/// tokens like `.to_vec()` need no boundary on the punctuation side).
+pub fn count_token(code: &str, tok: &str) -> usize {
+    let cb = code.as_bytes();
+    let tb = tok.as_bytes();
+    if tb.is_empty() || cb.len() < tb.len() {
+        return 0;
+    }
+    let first_ident = is_ident(tb[0]);
+    let last_ident = is_ident(tb[tb.len() - 1]);
+    let mut n = 0;
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(tok) {
+        let s = from + pos;
+        let e = s + tb.len();
+        let left_ok = !first_ident || s == 0 || !is_ident(cb[s - 1]);
+        let right_ok = !last_ident || e >= cb.len() || !is_ident(cb[e]);
+        if left_ok && right_ok {
+            n += 1;
+        }
+        from = s + 1;
+    }
+    n
+}
+
+/// Does `code` contain `tok` at identifier boundaries?
+pub fn has_token(code: &str, tok: &str) -> bool {
+    count_token(code, tok) > 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let a = 1; // Instant::now()\nlet s = \"unsafe\"; /* vec! */ let b = 2;\n";
+        let lines = strip(src);
+        assert_eq!(lines.len(), 2);
+        assert!(!has_token(&lines[0].code, "Instant::now"));
+        assert!(lines[0].raw.contains("Instant::now"));
+        assert!(!has_token(&lines[1].code, "unsafe"));
+        assert!(!has_token(&lines[1].code, "vec!"));
+        assert!(has_token(&lines[1].code, "b"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "/* a /* b */ still comment\nunsafe */ let x = 1;\n";
+        let lines = strip(src);
+        assert!(!has_token(&lines[0].code, "still"));
+        assert!(!has_token(&lines[1].code, "unsafe"));
+        assert!(has_token(&lines[1].code, "x"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(c: char) { if c == '\"' { } let _q: &'a str = \"x\"; }\n";
+        let lines = strip(src);
+        // The '"' char literal must not open a string (the code after
+        // it survives).
+        assert!(has_token(&lines[0].code, "str"));
+        assert!(lines[0].code.contains("'a"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let r = r#\"unsafe \" still\"#; let done = 1;\n";
+        let lines = strip(src);
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(has_token(&lines[0].code, "done"));
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert_eq!(count_token("unsafe unsafe_code deny(unsafe_op)", "unsafe"), 1);
+        assert_eq!(count_token("self.x.to_vec()", ".to_vec()"), 1);
+        assert_eq!(count_token("Vec::with_capacity(4)", "Vec::new"), 0);
+        assert_eq!(count_token("vec![0u8; 4] myvec!", "vec!"), 1);
+        assert_eq!(count_token("std::thread::sleep(d)", "thread::sleep"), 1);
+    }
+
+    #[test]
+    fn line_counts_always_match() {
+        let src = "a\n\"multi\nline\nstring\"\nb";
+        let lines = strip(src);
+        assert_eq!(lines.len(), src.lines().count());
+        assert!(has_token(lines.last().unwrap().code.as_str(), "b"));
+    }
+}

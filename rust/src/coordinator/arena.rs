@@ -97,6 +97,10 @@ impl FtgArena {
         }
     }
 
+    // lint: datapath — per-fragment receive path: one copy into the
+    // strided slot, no heap traffic (grow via `ensure_slots` is the
+    // amortized cold path and uses `resize`, never a fresh Vec).
+
     /// Copy `payload` into slot `idx` (zero-padding the tail) and mark
     /// it present. Returns `false` — and copies nothing — for
     /// duplicates, out-of-range indices, or over-long payloads.
@@ -112,6 +116,8 @@ impl FtgArena {
         self.present[w] |= b;
         true
     }
+
+    // lint: end-datapath
 
     /// Fragments present, any index.
     pub fn have_total(&self) -> usize {
@@ -192,6 +198,9 @@ impl FtgArena {
         &self.buf
     }
 
+    // lint: datapath — per-group sender path: slice + pad + encode in
+    // place inside the arena's single allocation.
+
     /// Slice the `k` data slots out of `src` starting at byte `offset`,
     /// zero-padding slot tails that run past the end of `src`. The
     /// explicit tail fill makes this correct on *reused* arenas (stale
@@ -224,6 +233,8 @@ impl FtgArena {
         Ok(())
     }
 }
+
+// lint: end-datapath
 
 #[cfg(test)]
 mod tests {

@@ -147,8 +147,12 @@ impl MulTable {
     pub fn mul_slice_add_tier(&self, x: &[u8], y: &mut [u8], tier: kernel::KernelTier) {
         debug_assert_eq!(x.len(), y.len());
         match tier.clamp() {
+            // SAFETY: `clamp()` only returns Avx2 when the CPU reports
+            // AVX2, satisfying the kernel's target-feature contract.
             #[cfg(target_arch = "x86_64")]
             kernel::KernelTier::Avx2 => unsafe { self.mul_slice_add_avx2(x, y) },
+            // SAFETY: `clamp()` only returns Ssse3 when the CPU reports
+            // SSSE3, satisfying the kernel's target-feature contract.
             #[cfg(target_arch = "x86_64")]
             kernel::KernelTier::Ssse3 => unsafe { self.mul_slice_add_ssse3(x, y) },
             _ => self.mul_slice_add_scalar(x, y),
@@ -162,28 +166,36 @@ impl MulTable {
         }
     }
 
+    /// # Safety
+    /// The CPU must support SSSE3 (the `#[target_feature]` calling
+    /// contract) and `x.len() == y.len()`.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "ssse3")]
     unsafe fn mul_slice_add_ssse3(&self, x: &[u8], y: &mut [u8]) {
         use std::arch::x86_64::*;
-        let lo_tbl = _mm_loadu_si128(self.lo.as_ptr() as *const __m128i);
-        let hi_tbl = _mm_loadu_si128(self.hi.as_ptr() as *const __m128i);
-        let mask = _mm_set1_epi8(0x0F);
         let chunks = x.len() / 16;
+        let done = chunks * 16;
         let xp = x.as_ptr();
         let yp = y.as_mut_ptr();
-        for i in 0..chunks {
-            let xv = _mm_loadu_si128(xp.add(i * 16) as *const __m128i);
-            let lo_idx = _mm_and_si128(xv, mask);
-            let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
-            let prod = _mm_xor_si128(
-                _mm_shuffle_epi8(lo_tbl, lo_idx),
-                _mm_shuffle_epi8(hi_tbl, hi_idx),
-            );
-            let yv = _mm_loadu_si128(yp.add(i * 16) as *const __m128i);
-            _mm_storeu_si128(yp.add(i * 16) as *mut __m128i, _mm_xor_si128(yv, prod));
+        // SAFETY: the caller guarantees SSSE3; unaligned loads/stores
+        // stay in bounds because every offset is < chunks*16 <= len,
+        // and the table loads read exactly the 16-byte nibble arrays.
+        unsafe {
+            let lo_tbl = _mm_loadu_si128(self.lo.as_ptr() as *const __m128i);
+            let hi_tbl = _mm_loadu_si128(self.hi.as_ptr() as *const __m128i);
+            let mask = _mm_set1_epi8(0x0F);
+            for i in 0..chunks {
+                let xv = _mm_loadu_si128(xp.add(i * 16) as *const __m128i);
+                let lo_idx = _mm_and_si128(xv, mask);
+                let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
+                let prod = _mm_xor_si128(
+                    _mm_shuffle_epi8(lo_tbl, lo_idx),
+                    _mm_shuffle_epi8(hi_tbl, hi_idx),
+                );
+                let yv = _mm_loadu_si128(yp.add(i * 16) as *const __m128i);
+                _mm_storeu_si128(yp.add(i * 16) as *mut __m128i, _mm_xor_si128(yv, prod));
+            }
         }
-        let done = chunks * 16;
         self.mul_slice_add_scalar(&x[done..], &mut y[done..]);
     }
 
@@ -191,31 +203,41 @@ impl MulTable {
     /// broadcast to both 128-bit lanes (`vpshufb` shuffles per lane, so
     /// the broadcast is exactly the duplicated lookup table it needs);
     /// the sub-32-byte tail reuses the SSSE3 kernel (AVX2 implies SSSE3).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (the `#[target_feature]` calling
+    /// contract; AVX2 implies SSSE3 for the tail) and
+    /// `x.len() == y.len()`.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
     unsafe fn mul_slice_add_avx2(&self, x: &[u8], y: &mut [u8]) {
         use std::arch::x86_64::*;
-        let lo_tbl =
-            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.lo.as_ptr() as *const __m128i));
-        let hi_tbl =
-            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.hi.as_ptr() as *const __m128i));
-        let mask = _mm256_set1_epi8(0x0F);
         let chunks = x.len() / 32;
+        let done = chunks * 32;
         let xp = x.as_ptr();
         let yp = y.as_mut_ptr();
-        for i in 0..chunks {
-            let xv = _mm256_loadu_si256(xp.add(i * 32) as *const __m256i);
-            let lo_idx = _mm256_and_si256(xv, mask);
-            let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
-            let prod = _mm256_xor_si256(
-                _mm256_shuffle_epi8(lo_tbl, lo_idx),
-                _mm256_shuffle_epi8(hi_tbl, hi_idx),
-            );
-            let yv = _mm256_loadu_si256(yp.add(i * 32) as *const __m256i);
-            _mm256_storeu_si256(yp.add(i * 32) as *mut __m256i, _mm256_xor_si256(yv, prod));
+        // SAFETY: the caller guarantees AVX2 (hence SSSE3 for the tail
+        // call); unaligned loads/stores stay in bounds because every
+        // offset is < chunks*32 <= len.
+        unsafe {
+            let lo_tbl =
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(self.lo.as_ptr() as *const __m128i));
+            let hi_tbl =
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(self.hi.as_ptr() as *const __m128i));
+            let mask = _mm256_set1_epi8(0x0F);
+            for i in 0..chunks {
+                let xv = _mm256_loadu_si256(xp.add(i * 32) as *const __m256i);
+                let lo_idx = _mm256_and_si256(xv, mask);
+                let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
+                let prod = _mm256_xor_si256(
+                    _mm256_shuffle_epi8(lo_tbl, lo_idx),
+                    _mm256_shuffle_epi8(hi_tbl, hi_idx),
+                );
+                let yv = _mm256_loadu_si256(yp.add(i * 32) as *const __m256i);
+                _mm256_storeu_si256(yp.add(i * 32) as *mut __m256i, _mm256_xor_si256(yv, prod));
+            }
+            self.mul_slice_add_ssse3(&x[done..], &mut y[done..]);
         }
-        let done = chunks * 32;
-        self.mul_slice_add_ssse3(&x[done..], &mut y[done..]);
     }
 
     /// y[i] = c * x[i] over slices — overwrites `y`, no pre-zeroing
@@ -232,8 +254,12 @@ impl MulTable {
     pub fn mul_slice_tier(&self, x: &[u8], y: &mut [u8], tier: kernel::KernelTier) {
         debug_assert_eq!(x.len(), y.len());
         match tier.clamp() {
+            // SAFETY: `clamp()` only returns Avx2 when the CPU reports
+            // AVX2, satisfying the kernel's target-feature contract.
             #[cfg(target_arch = "x86_64")]
             kernel::KernelTier::Avx2 => unsafe { self.mul_slice_set_avx2(x, y) },
+            // SAFETY: `clamp()` only returns Ssse3 when the CPU reports
+            // SSSE3, satisfying the kernel's target-feature contract.
             #[cfg(target_arch = "x86_64")]
             kernel::KernelTier::Ssse3 => unsafe { self.mul_slice_set_ssse3(x, y) },
             _ => self.mul_slice_set_scalar(x, y),
@@ -247,56 +273,74 @@ impl MulTable {
         }
     }
 
+    /// # Safety
+    /// The CPU must support SSSE3 (the `#[target_feature]` calling
+    /// contract) and `x.len() == y.len()`.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "ssse3")]
     unsafe fn mul_slice_set_ssse3(&self, x: &[u8], y: &mut [u8]) {
         use std::arch::x86_64::*;
-        let lo_tbl = _mm_loadu_si128(self.lo.as_ptr() as *const __m128i);
-        let hi_tbl = _mm_loadu_si128(self.hi.as_ptr() as *const __m128i);
-        let mask = _mm_set1_epi8(0x0F);
         let chunks = x.len() / 16;
+        let done = chunks * 16;
         let xp = x.as_ptr();
         let yp = y.as_mut_ptr();
-        for i in 0..chunks {
-            let xv = _mm_loadu_si128(xp.add(i * 16) as *const __m128i);
-            let lo_idx = _mm_and_si128(xv, mask);
-            let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
-            let prod = _mm_xor_si128(
-                _mm_shuffle_epi8(lo_tbl, lo_idx),
-                _mm_shuffle_epi8(hi_tbl, hi_idx),
-            );
-            _mm_storeu_si128(yp.add(i * 16) as *mut __m128i, prod);
+        // SAFETY: the caller guarantees SSSE3; unaligned loads/stores
+        // stay in bounds because every offset is < chunks*16 <= len,
+        // and the table loads read exactly the 16-byte nibble arrays.
+        unsafe {
+            let lo_tbl = _mm_loadu_si128(self.lo.as_ptr() as *const __m128i);
+            let hi_tbl = _mm_loadu_si128(self.hi.as_ptr() as *const __m128i);
+            let mask = _mm_set1_epi8(0x0F);
+            for i in 0..chunks {
+                let xv = _mm_loadu_si128(xp.add(i * 16) as *const __m128i);
+                let lo_idx = _mm_and_si128(xv, mask);
+                let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
+                let prod = _mm_xor_si128(
+                    _mm_shuffle_epi8(lo_tbl, lo_idx),
+                    _mm_shuffle_epi8(hi_tbl, hi_idx),
+                );
+                _mm_storeu_si128(yp.add(i * 16) as *mut __m128i, prod);
+            }
         }
-        let done = chunks * 16;
         self.mul_slice_set_scalar(&x[done..], &mut y[done..]);
     }
 
     /// 32-byte AVX2 write-once kernel (same shape as the accumulate
     /// variant above, minus the output load/xor).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (the `#[target_feature]` calling
+    /// contract; AVX2 implies SSSE3 for the tail) and
+    /// `x.len() == y.len()`.
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
     unsafe fn mul_slice_set_avx2(&self, x: &[u8], y: &mut [u8]) {
         use std::arch::x86_64::*;
-        let lo_tbl =
-            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.lo.as_ptr() as *const __m128i));
-        let hi_tbl =
-            _mm256_broadcastsi128_si256(_mm_loadu_si128(self.hi.as_ptr() as *const __m128i));
-        let mask = _mm256_set1_epi8(0x0F);
         let chunks = x.len() / 32;
+        let done = chunks * 32;
         let xp = x.as_ptr();
         let yp = y.as_mut_ptr();
-        for i in 0..chunks {
-            let xv = _mm256_loadu_si256(xp.add(i * 32) as *const __m256i);
-            let lo_idx = _mm256_and_si256(xv, mask);
-            let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
-            let prod = _mm256_xor_si256(
-                _mm256_shuffle_epi8(lo_tbl, lo_idx),
-                _mm256_shuffle_epi8(hi_tbl, hi_idx),
-            );
-            _mm256_storeu_si256(yp.add(i * 32) as *mut __m256i, prod);
+        // SAFETY: the caller guarantees AVX2 (hence SSSE3 for the tail
+        // call); unaligned loads/stores stay in bounds because every
+        // offset is < chunks*32 <= len.
+        unsafe {
+            let lo_tbl =
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(self.lo.as_ptr() as *const __m128i));
+            let hi_tbl =
+                _mm256_broadcastsi128_si256(_mm_loadu_si128(self.hi.as_ptr() as *const __m128i));
+            let mask = _mm256_set1_epi8(0x0F);
+            for i in 0..chunks {
+                let xv = _mm256_loadu_si256(xp.add(i * 32) as *const __m256i);
+                let lo_idx = _mm256_and_si256(xv, mask);
+                let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
+                let prod = _mm256_xor_si256(
+                    _mm256_shuffle_epi8(lo_tbl, lo_idx),
+                    _mm256_shuffle_epi8(hi_tbl, hi_idx),
+                );
+                _mm256_storeu_si256(yp.add(i * 32) as *mut __m256i, prod);
+            }
+            self.mul_slice_set_ssse3(&x[done..], &mut y[done..]);
         }
-        let done = chunks * 32;
-        self.mul_slice_set_ssse3(&x[done..], &mut y[done..]);
     }
 }
 

@@ -122,6 +122,10 @@ pub fn active() -> KernelTier {
 /// nibble mask without spilling.
 pub const BAND: usize = 4;
 
+// lint: datapath — the fused coding kernels run per fragment on the
+// hot path; everything below until the end marker must stay free of
+// heap allocation (rule `datapath-no-alloc`, DESIGN.md §13).
+
 /// Fused matrix-vector product over equal-length byte fragments:
 /// `outs[p] = Σ_j tables[p][j] · srcs[j]` (write-once — no pre-zeroing
 /// of `outs` required; with no sources the outputs are zeroed).
@@ -334,12 +338,16 @@ unsafe fn mul_matrix_raw(
     let mut band_start = 0;
     while band_start < outs.len() {
         let band_end = (band_start + BAND).min(outs.len());
-        match tier {
-            #[cfg(target_arch = "x86_64")]
-            KernelTier::Avx2 => band_avx2(tables, srcs, outs, len, band_start, band_end),
-            #[cfg(target_arch = "x86_64")]
-            KernelTier::Ssse3 => band_ssse3(tables, srcs, outs, len, band_start, band_end),
-            _ => band_scalar(tables, srcs, outs, len, band_start, band_end),
+        // SAFETY: forwarding the caller's contract verbatim; the band
+        // kernels touch only rows b0..b1 and bytes 0..len of each.
+        unsafe {
+            match tier {
+                #[cfg(target_arch = "x86_64")]
+                KernelTier::Avx2 => band_avx2(tables, srcs, outs, len, band_start, band_end),
+                #[cfg(target_arch = "x86_64")]
+                KernelTier::Ssse3 => band_ssse3(tables, srcs, outs, len, band_start, band_end),
+                _ => band_scalar(tables, srcs, outs, len, band_start, band_end),
+            }
         }
         band_start = band_end;
     }
@@ -367,16 +375,21 @@ unsafe fn band_scalar(
             tabs[bi] = &tables[p][j];
             ys[bi] = outs[p];
         }
-        for i in 0..len {
-            let xi = *x.add(i);
-            let lo = (xi & 0x0F) as usize;
-            let hi = (xi >> 4) as usize;
-            for bi in 0..nb {
-                let prod = tabs[bi].lo[lo] ^ tabs[bi].hi[hi];
-                if first {
-                    *ys[bi].add(i) = prod;
-                } else {
-                    *ys[bi].add(i) ^= prod;
+        // SAFETY: `x` and every `ys[bi]` cover `len` bytes and the
+        // output rows are disjoint (caller contract), so each `add(i)`
+        // with i < len is in bounds and writes never alias reads.
+        unsafe {
+            for i in 0..len {
+                let xi = *x.add(i);
+                let lo = (xi & 0x0F) as usize;
+                let hi = (xi >> 4) as usize;
+                for bi in 0..nb {
+                    let prod = tabs[bi].lo[lo] ^ tabs[bi].hi[hi];
+                    if first {
+                        *ys[bi].add(i) = prod;
+                    } else {
+                        *ys[bi].add(i) ^= prod;
+                    }
                 }
             }
         }
@@ -402,40 +415,46 @@ unsafe fn band_ssse3(
 ) {
     use std::arch::x86_64::*;
     let nb = b1 - b0;
-    let mask = _mm_set1_epi8(0x0F);
     let chunks = len / 16;
-    for (j, &x) in srcs.iter().enumerate() {
-        let first = j == 0;
-        let mut lo_tbl = [_mm_setzero_si128(); BAND];
-        let mut hi_tbl = [_mm_setzero_si128(); BAND];
-        let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
-        for (bi, p) in (b0..b1).enumerate() {
-            let t = &tables[p][j];
-            lo_tbl[bi] = _mm_loadu_si128(t.lo.as_ptr() as *const __m128i);
-            hi_tbl[bi] = _mm_loadu_si128(t.hi.as_ptr() as *const __m128i);
-            ys[bi] = outs[p];
-        }
-        for c in 0..chunks {
-            let xv = _mm_loadu_si128(x.add(c * 16) as *const __m128i);
-            let lo_idx = _mm_and_si128(xv, mask);
-            let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
-            for bi in 0..nb {
-                let prod = _mm_xor_si128(
-                    _mm_shuffle_epi8(lo_tbl[bi], lo_idx),
-                    _mm_shuffle_epi8(hi_tbl[bi], hi_idx),
-                );
-                let yp = ys[bi].add(c * 16) as *mut __m128i;
-                if first {
-                    _mm_storeu_si128(yp, prod);
-                } else {
-                    let acc = _mm_xor_si128(_mm_loadu_si128(yp as *const __m128i), prod);
-                    _mm_storeu_si128(yp, acc);
+    // SAFETY: caller guarantees SSSE3 and `len` readable/writable bytes
+    // per pointer; all `loadu`/`storeu` stay below `chunks * 16 <= len`
+    // and are unaligned-tolerant; `tail_scalar` gets the same contract
+    // with `ys[bi] == outs[b0 + bi]` as gathered above.
+    unsafe {
+        let mask = _mm_set1_epi8(0x0F);
+        for (j, &x) in srcs.iter().enumerate() {
+            let first = j == 0;
+            let mut lo_tbl = [_mm_setzero_si128(); BAND];
+            let mut hi_tbl = [_mm_setzero_si128(); BAND];
+            let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
+            for (bi, p) in (b0..b1).enumerate() {
+                let t = &tables[p][j];
+                lo_tbl[bi] = _mm_loadu_si128(t.lo.as_ptr() as *const __m128i);
+                hi_tbl[bi] = _mm_loadu_si128(t.hi.as_ptr() as *const __m128i);
+                ys[bi] = outs[p];
+            }
+            for c in 0..chunks {
+                let xv = _mm_loadu_si128(x.add(c * 16) as *const __m128i);
+                let lo_idx = _mm_and_si128(xv, mask);
+                let hi_idx = _mm_and_si128(_mm_srli_epi64(xv, 4), mask);
+                for bi in 0..nb {
+                    let prod = _mm_xor_si128(
+                        _mm_shuffle_epi8(lo_tbl[bi], lo_idx),
+                        _mm_shuffle_epi8(hi_tbl[bi], hi_idx),
+                    );
+                    let yp = ys[bi].add(c * 16) as *mut __m128i;
+                    if first {
+                        _mm_storeu_si128(yp, prod);
+                    } else {
+                        let acc = _mm_xor_si128(_mm_loadu_si128(yp as *const __m128i), prod);
+                        _mm_storeu_si128(yp, acc);
+                    }
                 }
             }
-        }
-        let done = chunks * 16;
-        if done < len {
-            tail_scalar(tables, x, &ys, j, done, len, first, b0, b1);
+            let done = chunks * 16;
+            if done < len {
+                tail_scalar(tables, x, &ys, j, done, len, first, b0, b1);
+            }
         }
     }
 }
@@ -459,44 +478,50 @@ unsafe fn band_avx2(
 ) {
     use std::arch::x86_64::*;
     let nb = b1 - b0;
-    let mask = _mm256_set1_epi8(0x0F);
     let chunks = len / 32;
-    for (j, &x) in srcs.iter().enumerate() {
-        let first = j == 0;
-        let mut lo_tbl = [_mm256_setzero_si256(); BAND];
-        let mut hi_tbl = [_mm256_setzero_si256(); BAND];
-        let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
-        for (bi, p) in (b0..b1).enumerate() {
-            let t = &tables[p][j];
-            lo_tbl[bi] =
-                _mm256_broadcastsi128_si256(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
-            hi_tbl[bi] =
-                _mm256_broadcastsi128_si256(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
-            ys[bi] = outs[p];
-        }
-        for c in 0..chunks {
-            let xv = _mm256_loadu_si256(x.add(c * 32) as *const __m256i);
-            let lo_idx = _mm256_and_si256(xv, mask);
-            let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
-            for bi in 0..nb {
-                let prod = _mm256_xor_si256(
-                    _mm256_shuffle_epi8(lo_tbl[bi], lo_idx),
-                    _mm256_shuffle_epi8(hi_tbl[bi], hi_idx),
-                );
-                let yp = ys[bi].add(c * 32) as *mut __m256i;
-                if first {
-                    _mm256_storeu_si256(yp, prod);
-                } else {
-                    _mm256_storeu_si256(
-                        yp,
-                        _mm256_xor_si256(_mm256_loadu_si256(yp as *const __m256i), prod),
+    // SAFETY: caller guarantees AVX2 and `len` readable/writable bytes
+    // per pointer; all `loadu`/`storeu` stay below `chunks * 32 <= len`
+    // and are unaligned-tolerant; `tail_scalar` gets the same contract
+    // with `ys[bi] == outs[b0 + bi]` as gathered above.
+    unsafe {
+        let mask = _mm256_set1_epi8(0x0F);
+        for (j, &x) in srcs.iter().enumerate() {
+            let first = j == 0;
+            let mut lo_tbl = [_mm256_setzero_si256(); BAND];
+            let mut hi_tbl = [_mm256_setzero_si256(); BAND];
+            let mut ys: [*mut u8; BAND] = [outs[b0]; BAND];
+            for (bi, p) in (b0..b1).enumerate() {
+                let t = &tables[p][j];
+                lo_tbl[bi] =
+                    _mm256_broadcastsi128_si256(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
+                hi_tbl[bi] =
+                    _mm256_broadcastsi128_si256(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
+                ys[bi] = outs[p];
+            }
+            for c in 0..chunks {
+                let xv = _mm256_loadu_si256(x.add(c * 32) as *const __m256i);
+                let lo_idx = _mm256_and_si256(xv, mask);
+                let hi_idx = _mm256_and_si256(_mm256_srli_epi64(xv, 4), mask);
+                for bi in 0..nb {
+                    let prod = _mm256_xor_si256(
+                        _mm256_shuffle_epi8(lo_tbl[bi], lo_idx),
+                        _mm256_shuffle_epi8(hi_tbl[bi], hi_idx),
                     );
+                    let yp = ys[bi].add(c * 32) as *mut __m256i;
+                    if first {
+                        _mm256_storeu_si256(yp, prod);
+                    } else {
+                        _mm256_storeu_si256(
+                            yp,
+                            _mm256_xor_si256(_mm256_loadu_si256(yp as *const __m256i), prod),
+                        );
+                    }
                 }
             }
-        }
-        let done = chunks * 32;
-        if done < len {
-            tail_scalar(tables, x, &ys, j, done, len, first, b0, b1);
+            let done = chunks * 32;
+            if done < len {
+                tail_scalar(tables, x, &ys, j, done, len, first, b0, b1);
+            }
         }
     }
 }
@@ -521,21 +546,27 @@ unsafe fn tail_scalar(
     b1: usize,
 ) {
     let nb = b1 - b0;
-    for i in done..len {
-        let xi = *x.add(i);
-        let lo = (xi & 0x0F) as usize;
-        let hi = (xi >> 4) as usize;
-        for bi in 0..nb {
-            let t = &tables[b0 + bi][j];
-            let prod = t.lo[lo] ^ t.hi[hi];
-            if first {
-                *ys[bi].add(i) = prod;
-            } else {
-                *ys[bi].add(i) ^= prod;
+    // SAFETY: `x` and each `ys[bi]` cover `len` bytes (caller contract),
+    // so every `add(i)` with done <= i < len stays in bounds.
+    unsafe {
+        for i in done..len {
+            let xi = *x.add(i);
+            let lo = (xi & 0x0F) as usize;
+            let hi = (xi >> 4) as usize;
+            for bi in 0..nb {
+                let t = &tables[b0 + bi][j];
+                let prod = t.lo[lo] ^ t.hi[hi];
+                if first {
+                    *ys[bi].add(i) = prod;
+                } else {
+                    *ys[bi].add(i) ^= prod;
+                }
             }
         }
     }
 }
+
+// lint: end-datapath
 
 #[cfg(test)]
 mod tests {

@@ -18,6 +18,16 @@
 //! achieved error bound. See `DESIGN.md` for the module inventory and
 //! `EXPERIMENTS.md` for the reproduced tables/figures.
 
+// Unsafe is confined to four audited modules (the SIMD GF(256) kernels,
+// the coding-pool scoped-job transmute, and the UDP setsockopt call),
+// each carrying `#[allow(unsafe_code)]` on its `mod` declaration. Every
+// unsafe block needs a `// SAFETY:` comment and a matching entry in
+// `analysis/unsafe_budget.txt` — `janus lint` (rule `unsafe-audit`,
+// DESIGN.md §13) and `tests/lint_gate.rs` enforce both.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod api;
 pub mod codec;
 pub mod config;

@@ -19,6 +19,9 @@
 //!   serve      Multi-tenant daemon demo: many concurrent transfers
 //!              multiplexed over one shared lossy socket pair on a
 //!              single event loop (serve::Daemon, virtual clock).
+//!   lint       Run the in-tree static-analysis catalog over the
+//!              workspace sources (DESIGN.md §13); exits non-zero on
+//!              any violation.
 //!
 //! `janus <subcommand> --help` prints generated help; unknown options
 //! are rejected with the valid list (typos used to be silently ignored).
@@ -149,6 +152,16 @@ const COMMANDS: &[CommandSpec] = &[
             OptSpec { name: "seed", value: Some("n"), help: "loss-trace + payload seed" },
         ],
     },
+    CommandSpec {
+        name: "lint",
+        summary: "run the in-tree static-analysis rule catalog (DESIGN.md §13)",
+        positional: &[],
+        opts: &[OptSpec {
+            name: "root",
+            value: Some("dir"),
+            help: "workspace root to lint (default: auto-detected)",
+        }],
+    },
 ];
 
 fn global_usage() -> String {
@@ -199,6 +212,7 @@ fn main() {
         "pool" => cmd_pool(&args),
         "codec" => cmd_codec(&args),
         "serve" => cmd_serve(&args),
+        "lint" => cmd_lint(&args),
         _ => unreachable!("spec lookup covers every command"),
     }
 }
@@ -739,4 +753,36 @@ fn measured_eps(vol: &janus::refactor::Volume, levels: &[Vec<f32>]) -> Vec<f64> 
         }
     }
     eps
+}
+
+fn cmd_lint(args: &Args) {
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => match janus::analysis::workspace_root() {
+            Some(r) => r,
+            None => {
+                eprintln!(
+                    "janus lint: cannot find the workspace root (looked for rust/src/lib.rs \
+                     above the current directory); pass --root <dir>"
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+    let violations = match janus::analysis::lint_root(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("janus lint: failed to load {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+    if violations.is_empty() {
+        println!("janus lint: clean ({} rules)", janus::analysis::rules::RULES.len());
+        return;
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    eprintln!("janus lint: {} violation(s)", violations.len());
+    std::process::exit(1);
 }

@@ -295,6 +295,8 @@ pub struct Daemon {
 
 impl Daemon {
     pub fn new(cfg: ServeConfig) -> Daemon {
+        // lint: allow(sans-io-clock): the construction-time origin both
+        // modes measure offsets from; Virtual never reads the clock again.
         let origin = Instant::now();
         let wheel = TimerWheel::new(origin, cfg.wheel_granularity, cfg.wheel_slots.max(1));
         let shards = vec![HashMap::new(); cfg.shards.max(1)];
@@ -485,6 +487,8 @@ impl Daemon {
 
     fn now(&self) -> Instant {
         match self.cfg.mode {
+            // lint: allow(sans-io-clock): the single Real-mode clock read
+            // every other `now()` caller funnels through.
             TimeMode::Real => Instant::now(),
             TimeMode::Virtual => self.origin + self.now_off,
         }
@@ -540,6 +544,8 @@ impl Daemon {
         }
         while let Some(idx) = self.ready.pop_front() {
             self.in_ready[idx] = false;
+            // lint: allow(sans-io-clock): stall telemetry only — measures
+            // host service latency, never feeds protocol decisions.
             let t0 = Instant::now();
             progressed |= self.service(idx);
             self.max_service_stall = self.max_service_stall.max(t0.elapsed());
@@ -697,14 +703,18 @@ impl Daemon {
                 self.fire_timers(now);
             }
             TimeMode::Real => {
+                // lint: allow(sans-io-clock): Real-mode idle wait — this
+                // arm IS the driver; Virtual mode never reaches it.
                 let now = Instant::now();
                 let wait = match self.wheel.next_deadline() {
                     Some(at) => at.saturating_duration_since(now).min(REAL_POLL),
                     None => REAL_POLL,
                 };
                 if !wait.is_zero() {
+                    // lint: allow(sans-io-clock): Real-mode idle sleep.
                     std::thread::sleep(wait);
                 }
+                // lint: allow(sans-io-clock): Real-mode timer pump.
                 self.fire_timers(Instant::now());
             }
         }

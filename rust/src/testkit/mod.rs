@@ -21,6 +21,8 @@
 //! * [`loss_transport_pair`] — the same wiring packaged as a pair of
 //!   [`crate::api::Transport`]s for the `janus::api` facade.
 
+pub mod sched;
+
 use crate::api::transport::StagedTransport;
 use crate::coordinator::packet::is_fragment;
 use crate::sim::hmm::{HmmConfig, HmmLoss};

@@ -1,0 +1,972 @@
+//! Bounded-interleaving concurrency model checker (DESIGN.md §13).
+//!
+//! A CHESS-style *stateless* explorer: the scenario's threads run as
+//! real OS threads, but a central scheduler serializes them so exactly
+//! one is ever executing, and every visible operation on the
+//! instrumented shims ([`Mutex`], [`Condvar`], [`AtomicUsize`],
+//! [`AtomicBool`]) is a *decision point* where the scheduler may switch
+//! threads. [`explore`] enumerates schedules depth-first, branching at
+//! every decision point whose alternative stays within the configured
+//! *preemption bound* (switching away from a thread that could have
+//! continued costs one preemption; switching off a blocked thread is
+//! free). Empirically, almost all real concurrency bugs manifest within
+//! two preemptions, so a small bound buys near-exhaustive coverage at a
+//! tractable schedule count.
+//!
+//! The checker finds four kinds of [`Finding`]:
+//! * [`Finding::Panic`] — a scenario thread panicked (assertion failed).
+//! * [`Finding::Deadlock`] — no thread is runnable but some are blocked.
+//! * [`Finding::Check`] — a [`Env::finally`] post-condition failed.
+//! * [`Finding::StepLimit`] — a schedule exceeded `max_steps` (livelock
+//!   guard).
+//!
+//! Modeled semantics, chosen to match how this crate uses `std::sync`:
+//! mutexes are non-reentrant and unfair; condvars have FIFO wake order
+//! and **no spurious wakeups** (every `std` wait in this crate is
+//! wrapped in a predicate loop anyway, and removing spurious wakes
+//! keeps the schedule space finite); atomics are sequentially
+//! consistent regardless of the `Ordering` argument (the crate only
+//! relies on SeqCst-or-stronger reasoning; weak-memory exploration is
+//! out of scope). Lock poisoning is not modeled: a panic aborts the
+//! schedule and is reported directly.
+//!
+//! Used by `rust/tests/sched_model.rs` to check faithful mirrors of the
+//! three hand-rolled concurrent structures in this crate — the
+//! `erasure::par::CodingPool` latch, the serve generation-fenced coding
+//! completion queue, and the `transport::frame::FrameQueue` drop
+//! semantics — with zero findings on the real logic and a caught
+//! finding on each deliberately injected bug.
+//!
+//! Outside a model thread (e.g. inside [`Env::finally`] checks, which
+//! run on the controller), the shims degrade to their plain `std`
+//! behavior, so post-conditions can read final state directly.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::atomic::Ordering as AtomicOrdering;
+use std::sync::atomic::{AtomicBool as StdAtomicBool, AtomicUsize as StdAtomicUsize};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::thread;
+
+// ---------------------------------------------------------------------------
+// Configuration and results
+// ---------------------------------------------------------------------------
+
+/// Exploration limits.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Maximum number of preemptive context switches per schedule.
+    pub preemption_bound: usize,
+    /// Hard cap on the number of schedules explored; hitting it clears
+    /// [`Report::exhausted`].
+    pub max_schedules: usize,
+    /// Per-schedule decision cap (livelock guard).
+    pub max_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config { preemption_bound: 2, max_schedules: 50_000, max_steps: 20_000 }
+    }
+}
+
+impl Config {
+    /// Default limits with a specific preemption bound.
+    pub fn with_bound(preemption_bound: usize) -> Config {
+        Config { preemption_bound, ..Config::default() }
+    }
+}
+
+/// What went wrong in one schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Finding {
+    /// A scenario thread panicked (message captured).
+    Panic { thread: usize, message: String },
+    /// No thread runnable, some not finished: the listed threads are
+    /// blocked forever.
+    Deadlock { blocked: Vec<usize> },
+    /// A [`Env::finally`] post-condition panicked after a clean finish.
+    Check { message: String },
+    /// The schedule exceeded [`Config::max_steps`] decisions.
+    StepLimit,
+}
+
+/// A finding plus the schedule that produced it (replayable: the
+/// decision sequence is the thread id chosen at each decision point).
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub finding: Finding,
+    pub schedule: Vec<usize>,
+    /// 0-based index of the failing schedule in exploration order.
+    pub schedule_index: usize,
+}
+
+/// Result of [`explore`].
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Schedules actually executed.
+    pub schedules: usize,
+    /// True when the bounded schedule space was fully enumerated
+    /// (false on failure or when `max_schedules` was hit).
+    pub exhausted: bool,
+    /// First failure encountered, if any (exploration stops there).
+    pub failure: Option<Failure>,
+    /// FNV-1a hash over every decision of every schedule, in order —
+    /// two deterministic explorations of the same scenario must agree.
+    pub trace_hash: u64,
+}
+
+impl Report {
+    /// Panic with the failing schedule if the check found anything.
+    #[track_caller]
+    pub fn assert_ok(&self) {
+        if let Some(f) = &self.failure {
+            panic!(
+                "model check failed after {} schedule(s): {:?} (schedule {:?})",
+                self.schedules, f.finding, f.schedule
+            );
+        }
+    }
+
+    /// Panic unless the check found something; returns the failure.
+    #[track_caller]
+    pub fn assert_finding(&self) -> &Failure {
+        match &self.failure {
+            Some(f) => f,
+            None => panic!(
+                "model check found nothing in {} schedule(s) (exhausted: {})",
+                self.schedules, self.exhausted
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Central scheduler state
+// ---------------------------------------------------------------------------
+
+/// Per-thread scheduler state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum TState {
+    /// Spawned but not yet checked in at its first decision point.
+    New,
+    /// Parked at a decision point, eligible to be scheduled.
+    Runnable,
+    /// Currently the one executing thread.
+    Running,
+    /// Waiting for the mutex with this registration id.
+    BlockedMutex(usize),
+    /// Waiting on the condvar with this registration id.
+    BlockedCv(usize),
+    /// Body returned (or unwound).
+    Finished,
+}
+
+/// Everything the controller and the shims share.
+#[derive(Debug)]
+struct St {
+    threads: Vec<TState>,
+    /// The one thread allowed to execute, if any.
+    active: Option<usize>,
+    /// Set at teardown: parked threads unwind with [`AbortSignal`].
+    abort: bool,
+    /// Ownership per registered mutex.
+    mutex_owner: Vec<Option<usize>>,
+    /// FIFO wait queue per registered condvar.
+    cv_queue: Vec<VecDeque<usize>>,
+    /// First real (non-abort) panic: (thread, message).
+    panic_msg: Option<(usize, String)>,
+}
+
+struct Ctl {
+    st: StdMutex<St>,
+    cv: StdCondvar,
+}
+
+impl Ctl {
+    fn new() -> Ctl {
+        Ctl {
+            st: StdMutex::new(St {
+                threads: Vec::new(),
+                active: None,
+                abort: false,
+                mutex_owner: Vec::new(),
+                cv_queue: Vec::new(),
+                panic_msg: None,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+}
+
+/// Panic payload used to unwind parked threads at teardown. Never
+/// reported as a [`Finding`].
+struct AbortSignal;
+
+thread_local! {
+    /// Set on model threads: which checker run this thread belongs to,
+    /// and its thread id within it.
+    static CURRENT: std::cell::RefCell<Option<(Arc<Ctl>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The calling thread's model id, if it belongs to `ctl`'s run.
+fn current_for(ctl: &Arc<Ctl>) -> Option<usize> {
+    CURRENT.with(|c| {
+        c.borrow().as_ref().and_then(|(c2, id)| Arc::ptr_eq(c2, ctl).then_some(*id))
+    })
+}
+
+/// Park the calling thread: apply `set` (its new state plus any other
+/// bookkeeping) under the lock, hand control back, and block until the
+/// controller schedules this thread again. Unwinds with [`AbortSignal`]
+/// at teardown.
+fn block_until_scheduled(ctl: &Ctl, me: usize, set: impl FnOnce(&mut St)) {
+    let mut st = ctl.st.lock().unwrap();
+    set(&mut st);
+    if st.active == Some(me) {
+        st.active = None;
+    }
+    ctl.cv.notify_all();
+    loop {
+        if st.abort {
+            drop(st);
+            panic_any(AbortSignal);
+        }
+        if st.active == Some(me) {
+            break;
+        }
+        st = ctl.cv.wait(st).unwrap();
+    }
+    st.threads[me] = TState::Running;
+}
+
+/// A plain yield: park as Runnable, continue when rescheduled. The
+/// decision point preceding every shim operation.
+fn yield_point(ctl: &Ctl, me: usize) {
+    block_until_scheduled(ctl, me, |st| st.threads[me] = TState::Runnable);
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented shims
+// ---------------------------------------------------------------------------
+
+struct MutexInner<T> {
+    ctl: Arc<Ctl>,
+    id: usize,
+    cell: StdMutex<T>,
+}
+
+/// Instrumented mutex. Created via [`Env::mutex`]; clones share the
+/// cell. No poisoning: [`Mutex::lock`] returns the guard directly.
+pub struct Mutex<T> {
+    inner: Arc<MutexInner<T>>,
+}
+
+impl<T> Clone for Mutex<T> {
+    fn clone(&self) -> Self {
+        Mutex { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Guard for [`Mutex`]; releasing it is a decision point.
+pub struct MutexGuard<'a, T> {
+    m: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    /// Lock, blocking (in model time) while another thread owns it.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        match current_for(&self.inner.ctl) {
+            Some(me) => {
+                yield_point(&self.inner.ctl, me);
+                let g = acquire(&self.inner, me);
+                MutexGuard { m: self, inner: Some(g) }
+            }
+            None => MutexGuard { m: self, inner: Some(self.inner.cell.lock().unwrap()) },
+        }
+    }
+}
+
+/// Claim ownership of `m` for `me`, parking as `BlockedMutex` while it
+/// is owned. Returns the real guard (uncontended by construction: only
+/// the registered owner ever locks the cell).
+fn acquire<'a, T>(m: &'a MutexInner<T>, me: usize) -> StdMutexGuard<'a, T> {
+    loop {
+        let mut st = m.ctl.st.lock().unwrap();
+        if st.abort {
+            drop(st);
+            panic_any(AbortSignal);
+        }
+        if st.mutex_owner[m.id].is_none() {
+            st.mutex_owner[m.id] = Some(me);
+            drop(st);
+            return m.cell.lock().unwrap();
+        }
+        // Owned elsewhere: park until the owner's release wakes us.
+        st.threads[me] = TState::BlockedMutex(m.id);
+        if st.active == Some(me) {
+            st.active = None;
+        }
+        m.ctl.cv.notify_all();
+        loop {
+            if st.abort {
+                drop(st);
+                panic_any(AbortSignal);
+            }
+            if st.active == Some(me) {
+                break;
+            }
+            st = m.ctl.cv.wait(st).unwrap();
+        }
+        st.threads[me] = TState::Running;
+        // Retry: another scheduled thread may have claimed it first.
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard consumed")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard consumed")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Already consumed (by Condvar::wait): nothing to release.
+        let Some(real) = self.inner.take() else { return };
+        drop(real);
+        let ctl = &self.m.inner.ctl;
+        let Some(me) = current_for(ctl) else { return };
+        let mid = self.m.inner.id;
+        let abort = {
+            let mut st = ctl.st.lock().unwrap();
+            if st.mutex_owner[mid] == Some(me) {
+                st.mutex_owner[mid] = None;
+            }
+            wake_mutex_waiters(&mut st, mid);
+            ctl.cv.notify_all();
+            st.abort
+        };
+        // The release itself is a decision point — unless this thread
+        // is unwinding (parking inside Drop during a panic would turn
+        // teardown into a double panic).
+        if !abort && !thread::panicking() {
+            yield_point(ctl, me);
+        }
+    }
+}
+
+/// Move every `BlockedMutex(mid)` thread back to `Runnable`.
+fn wake_mutex_waiters(st: &mut St, mid: usize) {
+    for t in st.threads.iter_mut() {
+        if *t == TState::BlockedMutex(mid) {
+            *t = TState::Runnable;
+        }
+    }
+}
+
+struct CvInner {
+    ctl: Arc<Ctl>,
+    id: usize,
+}
+
+/// Instrumented condvar: FIFO wake order, no spurious wakeups. Only
+/// usable from model threads.
+pub struct Condvar {
+    inner: Arc<CvInner>,
+}
+
+impl Clone for Condvar {
+    fn clone(&self) -> Self {
+        Condvar { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl Condvar {
+    /// Atomically release the guard's mutex and wait to be notified;
+    /// reacquires the mutex before returning.
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let ctl = &self.inner.ctl;
+        let me = current_for(ctl).expect("sched::Condvar::wait outside a model thread");
+        let m = guard.m;
+        drop(guard.inner.take().expect("guard consumed"));
+        let (cvid, mid) = (self.inner.id, m.inner.id);
+        block_until_scheduled(ctl, me, |st| {
+            if st.mutex_owner[mid] == Some(me) {
+                st.mutex_owner[mid] = None;
+            }
+            wake_mutex_waiters(st, mid);
+            st.cv_queue[cvid].push_back(me);
+            st.threads[me] = TState::BlockedCv(cvid);
+        });
+        // Notified and scheduled: take the mutex back.
+        let real = acquire(&m.inner, me);
+        MutexGuard { m, inner: Some(real) }
+    }
+
+    /// Wake the longest-waiting thread, if any.
+    pub fn notify_one(&self) {
+        self.notify(false)
+    }
+
+    /// Wake every waiting thread.
+    pub fn notify_all(&self) {
+        self.notify(true)
+    }
+
+    fn notify(&self, all: bool) {
+        let ctl = &self.inner.ctl;
+        let Some(me) = current_for(ctl) else { return };
+        yield_point(ctl, me);
+        let mut st = ctl.st.lock().unwrap();
+        let cvid = self.inner.id;
+        loop {
+            match st.cv_queue[cvid].pop_front() {
+                Some(t) => st.threads[t] = TState::Runnable,
+                None => break,
+            }
+            if !all {
+                break;
+            }
+        }
+        ctl.cv.notify_all();
+    }
+}
+
+struct AtomicInnerUsize {
+    ctl: Arc<Ctl>,
+    cell: StdAtomicUsize,
+}
+
+/// Instrumented atomic counter. Every operation is a decision point;
+/// the `Ordering` argument is accepted for mirror fidelity but the
+/// model is always sequentially consistent.
+pub struct AtomicUsize {
+    inner: Arc<AtomicInnerUsize>,
+}
+
+impl Clone for AtomicUsize {
+    fn clone(&self) -> Self {
+        AtomicUsize { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl AtomicUsize {
+    fn step(&self) {
+        if let Some(me) = current_for(&self.inner.ctl) {
+            yield_point(&self.inner.ctl, me);
+        }
+    }
+
+    pub fn load(&self, _order: AtomicOrdering) -> usize {
+        self.step();
+        self.inner.cell.load(AtomicOrdering::SeqCst)
+    }
+
+    pub fn store(&self, value: usize, _order: AtomicOrdering) {
+        self.step();
+        self.inner.cell.store(value, AtomicOrdering::SeqCst)
+    }
+
+    pub fn fetch_add(&self, value: usize, _order: AtomicOrdering) -> usize {
+        self.step();
+        self.inner.cell.fetch_add(value, AtomicOrdering::SeqCst)
+    }
+}
+
+struct AtomicInnerBool {
+    ctl: Arc<Ctl>,
+    cell: StdAtomicBool,
+}
+
+/// Instrumented atomic flag (see [`AtomicUsize`]).
+pub struct AtomicBool {
+    inner: Arc<AtomicInnerBool>,
+}
+
+impl Clone for AtomicBool {
+    fn clone(&self) -> Self {
+        AtomicBool { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl AtomicBool {
+    fn step(&self) {
+        if let Some(me) = current_for(&self.inner.ctl) {
+            yield_point(&self.inner.ctl, me);
+        }
+    }
+
+    pub fn load(&self, _order: AtomicOrdering) -> bool {
+        self.step();
+        self.inner.cell.load(AtomicOrdering::SeqCst)
+    }
+
+    pub fn store(&self, value: bool, _order: AtomicOrdering) {
+        self.step();
+        self.inner.cell.store(value, AtomicOrdering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario environment
+// ---------------------------------------------------------------------------
+
+/// Handed to the scenario closure each schedule: registers shims,
+/// thread bodies, and post-conditions. A fresh `Env` (and fresh shims)
+/// is built for every schedule, so scenarios must create all state
+/// through it.
+pub struct Env {
+    ctl: Arc<Ctl>,
+    bodies: Vec<Box<dyn FnOnce() + Send + 'static>>,
+    finals: Vec<Box<dyn FnOnce() + 'static>>,
+}
+
+impl Env {
+    /// Register a model thread. Ids are assigned in registration order
+    /// starting at 0.
+    pub fn spawn(&mut self, body: impl FnOnce() + Send + 'static) {
+        self.bodies.push(Box::new(body));
+    }
+
+    /// Register a post-condition, run on the controller after every
+    /// cleanly finished schedule; a panic becomes [`Finding::Check`].
+    pub fn finally(&mut self, check: impl FnOnce() + 'static) {
+        self.finals.push(Box::new(check));
+    }
+
+    /// Create an instrumented mutex.
+    pub fn mutex<T>(&mut self, value: T) -> Mutex<T> {
+        let mut st = self.ctl.st.lock().unwrap();
+        let id = st.mutex_owner.len();
+        st.mutex_owner.push(None);
+        drop(st);
+        Mutex {
+            inner: Arc::new(MutexInner {
+                ctl: Arc::clone(&self.ctl),
+                id,
+                cell: StdMutex::new(value),
+            }),
+        }
+    }
+
+    /// Create an instrumented condvar.
+    pub fn condvar(&mut self) -> Condvar {
+        let mut st = self.ctl.st.lock().unwrap();
+        let id = st.cv_queue.len();
+        st.cv_queue.push(VecDeque::new());
+        drop(st);
+        Condvar { inner: Arc::new(CvInner { ctl: Arc::clone(&self.ctl), id }) }
+    }
+
+    /// Create an instrumented atomic counter.
+    pub fn atomic_usize(&mut self, value: usize) -> AtomicUsize {
+        AtomicUsize {
+            inner: Arc::new(AtomicInnerUsize {
+                ctl: Arc::clone(&self.ctl),
+                cell: StdAtomicUsize::new(value),
+            }),
+        }
+    }
+
+    /// Create an instrumented atomic flag.
+    pub fn atomic_bool(&mut self, value: bool) -> AtomicBool {
+        AtomicBool {
+            inner: Arc::new(AtomicInnerBool {
+                ctl: Arc::clone(&self.ctl),
+                cell: StdAtomicBool::new(value),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution of one schedule
+// ---------------------------------------------------------------------------
+
+/// One scheduling decision: who was eligible, who ran, and whether the
+/// choice preempted a thread that could have continued.
+#[derive(Debug, Clone)]
+struct Decision {
+    runnable: Vec<usize>,
+    chosen: usize,
+    preemptive: bool,
+}
+
+struct Execution {
+    decisions: Vec<Decision>,
+    finding: Option<Finding>,
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Run the scenario once, following `prefix` at the first
+/// `prefix.len()` decision points and the deterministic default
+/// afterwards (keep the previous thread while it is runnable, else the
+/// lowest-id runnable thread — zero preemptions).
+fn run_one(scenario: &dyn Fn(&mut Env), cfg: &Config, prefix: &[usize]) -> Execution {
+    let ctl = Arc::new(Ctl::new());
+    let mut env = Env { ctl: Arc::clone(&ctl), bodies: Vec::new(), finals: Vec::new() };
+    scenario(&mut env);
+    let bodies = std::mem::take(&mut env.bodies);
+    ctl.st.lock().unwrap().threads = vec![TState::New; bodies.len()];
+
+    let handles: Vec<_> = bodies
+        .into_iter()
+        .enumerate()
+        .map(|(i, body)| {
+            let ctl = Arc::clone(&ctl);
+            thread::Builder::new()
+                .name(format!("sched-model-{i}"))
+                .spawn(move || {
+                    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&ctl), i)));
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        // Check in: the first decision point.
+                        block_until_scheduled(&ctl, i, |st| st.threads[i] = TState::Runnable);
+                        body();
+                    }));
+                    let mut st = ctl.st.lock().unwrap();
+                    st.threads[i] = TState::Finished;
+                    if st.active == Some(i) {
+                        st.active = None;
+                    }
+                    if let Err(payload) = result {
+                        if !payload.is::<AbortSignal>() && st.panic_msg.is_none() {
+                            st.panic_msg = Some((i, panic_message(payload)));
+                            st.abort = true;
+                        }
+                    }
+                    drop(st);
+                    ctl.cv.notify_all();
+                })
+                .expect("spawn model thread")
+        })
+        .collect();
+
+    let mut decisions: Vec<Decision> = Vec::new();
+    let mut finding = None;
+    let mut prev: Option<usize> = None;
+    loop {
+        let mut st = ctl.st.lock().unwrap();
+        // Wait for quiescence: nobody executing, everybody checked in.
+        loop {
+            if st.panic_msg.is_some() {
+                break;
+            }
+            let quiet =
+                st.active.is_none() && st.threads.iter().all(|t| !matches!(t, TState::New));
+            if quiet {
+                break;
+            }
+            st = ctl.cv.wait(st).unwrap();
+        }
+        if let Some((thread, message)) = st.panic_msg.clone() {
+            finding = Some(Finding::Panic { thread, message });
+            break;
+        }
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, TState::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            if st.threads.iter().any(|t| !matches!(t, TState::Finished)) {
+                let blocked: Vec<usize> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| !matches!(t, TState::Finished))
+                    .map(|(i, _)| i)
+                    .collect();
+                finding = Some(Finding::Deadlock { blocked });
+            }
+            break;
+        }
+        if decisions.len() >= cfg.max_steps {
+            finding = Some(Finding::StepLimit);
+            break;
+        }
+        let chosen = match prefix.get(decisions.len()) {
+            // Replay is deterministic, so the prefix thread is always
+            // runnable; fall back defensively if a scenario is not.
+            Some(&want) if runnable.contains(&want) => want,
+            _ => match prev {
+                Some(p) if runnable.contains(&p) => p,
+                _ => runnable[0],
+            },
+        };
+        let preemptive = prev.map_or(false, |p| chosen != p && runnable.contains(&p));
+        decisions.push(Decision { runnable, chosen, preemptive });
+        prev = Some(chosen);
+        st.active = Some(chosen);
+        drop(st);
+        ctl.cv.notify_all();
+    }
+
+    // Teardown: unwind every parked thread and join.
+    {
+        let mut st = ctl.st.lock().unwrap();
+        st.abort = true;
+        drop(st);
+        ctl.cv.notify_all();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if finding.is_none() {
+        for check in std::mem::take(&mut env.finals) {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(check)) {
+                finding = Some(Finding::Check { message: panic_message(payload) });
+                break;
+            }
+        }
+    }
+    Execution { decisions, finding }
+}
+
+// ---------------------------------------------------------------------------
+// Exploration
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+
+fn fnv(hash: u64, value: u64) -> u64 {
+    let mut h = hash;
+    for byte in value.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Depth-first enumeration of schedules up to the preemption bound.
+/// Stops at the first failure. Deterministic: two calls on the same
+/// scenario produce identical reports (including [`Report::trace_hash`]).
+pub fn explore(cfg: &Config, scenario: impl Fn(&mut Env)) -> Report {
+    let mut stack: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut schedules = 0usize;
+    let mut trace_hash = FNV_OFFSET;
+    let mut exhausted = true;
+    while let Some(prefix) = stack.pop() {
+        if schedules >= cfg.max_schedules {
+            exhausted = false;
+            break;
+        }
+        let exec = run_one(&scenario, cfg, &prefix);
+        schedules += 1;
+        for d in &exec.decisions {
+            trace_hash = fnv(trace_hash, d.chosen as u64 + 1);
+        }
+        trace_hash = fnv(trace_hash, 0);
+        if let Some(finding) = exec.finding {
+            return Report {
+                schedules,
+                exhausted: false,
+                failure: Some(Failure {
+                    finding,
+                    schedule: exec.decisions.iter().map(|d| d.chosen).collect(),
+                    schedule_index: schedules - 1,
+                }),
+                trace_hash,
+            };
+        }
+        // Branch at every decision at or past the prefix depth whose
+        // alternative keeps the schedule within the preemption bound.
+        let mut preemptions = 0usize;
+        let mut alts: Vec<Vec<usize>> = Vec::new();
+        for (i, d) in exec.decisions.iter().enumerate() {
+            if i >= prefix.len() {
+                let prev = i.checked_sub(1).map(|j| exec.decisions[j].chosen);
+                for &alt in &d.runnable {
+                    if alt == d.chosen {
+                        continue;
+                    }
+                    let alt_preemptive =
+                        prev.map_or(false, |p| alt != p && d.runnable.contains(&p));
+                    if preemptions + usize::from(alt_preemptive) <= cfg.preemption_bound {
+                        let mut next: Vec<usize> =
+                            exec.decisions[..i].iter().map(|x| x.chosen).collect();
+                        next.push(alt);
+                        alts.push(next);
+                    }
+                }
+            }
+            preemptions += usize::from(d.preemptive);
+        }
+        // Reverse so the stack pops shallowest-first, in thread order.
+        for p in alts.into_iter().rev() {
+            stack.push(p);
+        }
+    }
+    Report { schedules, exhausted, failure: None, trace_hash }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    /// Two threads doing a read-modify-write through separate load and
+    /// store: the classic lost update. Needs one preemption.
+    fn racy_counter(env: &mut Env) {
+        let counter = env.atomic_usize(0);
+        for _ in 0..2 {
+            let c = counter.clone();
+            env.spawn(move || {
+                let v = c.load(SeqCst);
+                c.store(v + 1, SeqCst);
+            });
+        }
+        let c = counter;
+        env.finally(move || assert_eq!(c.load(SeqCst), 2, "lost update"));
+    }
+
+    #[test]
+    fn racy_counter_not_found_at_bound_zero() {
+        let report = explore(&Config::with_bound(0), racy_counter);
+        report.assert_ok();
+        assert!(report.exhausted);
+        assert!(report.schedules >= 2, "both first-thread choices explored");
+    }
+
+    #[test]
+    fn racy_counter_found_at_bound_one() {
+        let report = explore(&Config::with_bound(1), racy_counter);
+        let failure = report.assert_finding();
+        assert!(
+            matches!(&failure.finding, Finding::Check { message } if message.contains("lost update")),
+            "unexpected finding: {:?}",
+            failure.finding
+        );
+    }
+
+    #[test]
+    fn ab_ba_deadlock_detected() {
+        let report = explore(&Config::with_bound(2), |env| {
+            let a = env.mutex(());
+            let b = env.mutex(());
+            let (a1, b1) = (a.clone(), b.clone());
+            env.spawn(move || {
+                let _ga = a1.lock();
+                let _gb = b1.lock();
+            });
+            env.spawn(move || {
+                let _gb = b.lock();
+                let _ga = a.lock();
+            });
+        });
+        let failure = report.assert_finding();
+        assert!(
+            matches!(&failure.finding, Finding::Deadlock { blocked } if blocked.len() == 2),
+            "unexpected finding: {:?}",
+            failure.finding
+        );
+    }
+
+    #[test]
+    fn condvar_handoff_has_no_lost_wakeup() {
+        // Predicate-loop wait never hangs: the checker proves it over
+        // every schedule within the bound.
+        let report = explore(&Config::with_bound(2), |env| {
+            let slot = env.mutex(0usize);
+            let cv = env.condvar();
+            let (s1, c1) = (slot.clone(), cv.clone());
+            env.spawn(move || {
+                let mut g = s1.lock();
+                *g = 1;
+                drop(g);
+                c1.notify_one();
+            });
+            env.spawn(move || {
+                let mut g = slot.lock();
+                while *g == 0 {
+                    g = cv.wait(g);
+                }
+                assert_eq!(*g, 1);
+            });
+        });
+        report.assert_ok();
+        assert!(report.exhausted);
+    }
+
+    #[test]
+    fn naked_condvar_wait_misses_the_wakeup() {
+        // Bug under test: the ready check happens outside the mutex, so
+        // the notify can fire between the check and the wait — the
+        // checker must expose the lost wakeup as a deadlock.
+        let report = explore(&Config::with_bound(2), |env| {
+            let ready = env.atomic_bool(false);
+            let m = env.mutex(());
+            let cv = env.condvar();
+            let (r1, c1) = (ready.clone(), cv.clone());
+            env.spawn(move || {
+                r1.store(true, SeqCst);
+                c1.notify_one();
+            });
+            env.spawn(move || {
+                if !ready.load(SeqCst) {
+                    let g = m.lock();
+                    let _g = cv.wait(g);
+                }
+            });
+        });
+        let failure = report.assert_finding();
+        assert!(
+            matches!(&failure.finding, Finding::Deadlock { blocked } if blocked == &vec![1]),
+            "unexpected finding: {:?}",
+            failure.finding
+        );
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        let run = || explore(&Config::with_bound(2), racy_counter);
+        let (a, b) = (run(), run());
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.trace_hash, b.trace_hash);
+        let (fa, fb) = (a.assert_finding(), b.assert_finding());
+        assert_eq!(fa.schedule, fb.schedule);
+        assert_eq!(fa.schedule_index, fb.schedule_index);
+        assert_eq!(fa.finding, fb.finding);
+    }
+
+    #[test]
+    fn mutex_exclusion_holds_in_every_schedule() {
+        let report = explore(&Config::with_bound(2), |env| {
+            let m = env.mutex(0usize);
+            for _ in 0..2 {
+                let m = m.clone();
+                env.spawn(move || {
+                    for _ in 0..2 {
+                        let mut g = m.lock();
+                        let v = *g;
+                        *g = v + 1;
+                    }
+                });
+            }
+            let m = m;
+            env.finally(move || assert_eq!(*m.lock(), 4));
+        });
+        report.assert_ok();
+        assert!(report.exhausted);
+    }
+}

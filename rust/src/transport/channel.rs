@@ -95,6 +95,9 @@ impl FrameQueue {
         })
     }
 
+    // lint: datapath — queue operations move pooled frames only; every
+    // allocation stays in `new()` above.
+
     fn close(&self) {
         self.closed.store(true, Ordering::Relaxed);
         self.cv.notify_all();
@@ -131,6 +134,8 @@ impl FrameQueue {
         }
     }
 }
+
+// lint: end-datapath
 
 /// In-memory datagram endpoint (lossless, ordered — loss is layered on
 /// with [`LossyChannel`]). Datagrams travel as [`Frame`]s leased from a
@@ -177,6 +182,11 @@ impl Drop for MemChannel {
     }
 }
 
+// lint: datapath — the `*_into` primitives are the engines' per-datagram
+// path: lease-copy-push on send, copy-out on receive, zero heap traffic
+// once the pool is warm. The allocating `recv_timeout`/`try_recv` shims
+// below the end marker are deliberately outside.
+
 impl Datagram for MemChannel {
     fn send(&mut self, buf: &[u8]) {
         if self.tx.closed.load(Ordering::Relaxed) {
@@ -198,6 +208,7 @@ impl Datagram for MemChannel {
         buf[..n].copy_from_slice(&frame[..n]);
         Some(n)
     }
+    // lint: end-datapath
     /// Zero-extra-copy override of the allocating receive: hand the
     /// pooled frame's bytes out as an exact-size `Vec`.
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Vec<u8>> {

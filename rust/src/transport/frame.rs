@@ -88,6 +88,9 @@ pub struct Frame {
     pool: Arc<FramePool>,
 }
 
+// lint: datapath — the warmed-up frame path (fill, read, recycle-on-drop)
+// must not allocate; only the cold `lease` miss above may.
+
 impl Frame {
     /// Copy a datagram into the frame. Oversized payloads are truncated
     /// at `MAX_DATAGRAM`, like a UDP socket buffer would.
@@ -141,6 +144,8 @@ impl Drop for Frame {
         }
     }
 }
+
+// lint: end-datapath
 
 #[cfg(test)]
 mod tests {

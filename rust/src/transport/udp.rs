@@ -39,8 +39,10 @@ fn grow_buffers(sock: &UdpSocket) {
     const SO_SNDBUF: i32 = 7;
     let fd = sock.as_raw_fd();
     let size: i32 = 16 * 1024 * 1024;
+    // SAFETY: `fd` is a live socket owned by `sock`; `optval` points at a
+    // stack i32 whose size is passed as `optlen`. Best-effort — the
+    // kernel clamps to rmem_max/wmem_max and errors are ignored.
     unsafe {
-        // Best-effort; the kernel clamps to rmem_max/wmem_max.
         setsockopt(
             fd,
             SOL_SOCKET,

@@ -620,3 +620,30 @@ fn pooled_events_arrive_in_protocol_order() {
     );
     assert!(rep.received.groups_recovered > 0, "5% loss must recover groups");
 }
+
+#[test]
+fn fountain_with_multiple_streams_is_a_typed_spec_error() {
+    use janus::api::SpecError;
+    use janus::erasure::Backend;
+    // The rateless backend owns its stream's repair schedule; the pooled
+    // engine would shard one fountain across streams with colliding
+    // symbol seeds. The builder must reject the combination up front
+    // with a typed error naming the offending stream count.
+    let err = TransferSpec::builder()
+        .backend(Backend::Fountain)
+        .streams(4)
+        .build()
+        .unwrap_err();
+    assert_eq!(err, SpecError::FountainNeedsSingleStream(4));
+    assert!(
+        format!("{err}").contains("single"),
+        "error must say fountain needs a single stream, got: {err}"
+    );
+    // streams(1) is the supported shape and must build.
+    let spec = TransferSpec::builder()
+        .backend(Backend::Fountain)
+        .streams(1)
+        .build()
+        .expect("fountain with one stream is valid");
+    assert_eq!(spec.backend(), Backend::Fountain);
+}

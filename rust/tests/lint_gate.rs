@@ -1,0 +1,247 @@
+//! The lint gate: `cargo test` fails on any `janus lint` violation, and
+//! every rule in the catalog is mutation-tested — a seeded violation of
+//! each invariant must turn exactly that rule red (a rule that cannot
+//! fail is not a check; DESIGN.md §13).
+
+use janus::analysis::rules::{self, RULES};
+use janus::analysis::{lint_root, workspace_root, SourceTree, Violation, DEFAULT_BUDGET};
+
+fn load_real_tree() -> SourceTree {
+    let root = workspace_root().expect("workspace root");
+    SourceTree::load(&root).expect("load sources")
+}
+
+fn rules_hit(violations: &[Violation]) -> Vec<&'static str> {
+    let mut hit: Vec<&'static str> = violations.iter().map(|v| v.rule).collect();
+    hit.sort_unstable();
+    hit.dedup();
+    hit
+}
+
+// ---------------------------------------------------------------------------
+// The gate itself
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_tree_is_clean() {
+    let root = workspace_root().expect("workspace root");
+    let violations = lint_root(&root).expect("lint");
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    assert!(
+        violations.is_empty(),
+        "`janus lint` found {} violation(s); fix them or waive them explicitly",
+        violations.len()
+    );
+}
+
+#[test]
+fn every_rule_is_registered() {
+    assert_eq!(
+        RULES,
+        &["sans-io-clock", "unsafe-audit", "datapath-no-alloc", "wire-pin", "no-deps"]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Mutation tests: seed one violation per rule, assert that rule (and
+// only that rule) goes red.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_clock_read_in_engine_trips_sans_io_clock() {
+    let mut tree = load_real_tree();
+    tree.push_file(
+        "rust/src/engine/synthetic.rs",
+        "pub fn oops() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
+    );
+    let violations = rules::run_all(&tree, DEFAULT_BUDGET);
+    assert_eq!(rules_hit(&violations), vec!["sans-io-clock"], "{violations:?}");
+    assert_eq!(violations.len(), 1);
+    assert_eq!(violations[0].path, "rust/src/engine/synthetic.rs");
+    assert_eq!(violations[0].line, 2);
+}
+
+#[test]
+fn clock_waiver_and_test_module_are_respected() {
+    let mut tree = load_real_tree();
+    tree.push_file(
+        "rust/src/serve/synthetic.rs",
+        concat!(
+            "pub fn driver_edge() -> std::time::Instant {\n",
+            "    // lint: allow(sans-io-clock): synthetic waiver under test\n",
+            "    std::time::Instant::now()\n",
+            "}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { let _ = std::time::Instant::now(); }\n",
+            "}\n",
+        ),
+    );
+    let violations = rules::sans_io_clock(&tree);
+    assert!(violations.is_empty(), "waived + test-module reads must pass: {violations:?}");
+    // A clock read in a comment or string must not trip the rule either.
+    let mut tree = load_real_tree();
+    tree.push_file(
+        "rust/src/engine/synthetic.rs",
+        "// Instant::now() is banned here\npub const T: &str = \"Instant::now()\";\n",
+    );
+    assert!(rules::sans_io_clock(&tree).is_empty());
+}
+
+#[test]
+fn seeded_naked_unsafe_trips_unsafe_audit() {
+    let mut tree = load_real_tree();
+    tree.push_file(
+        "rust/src/erasure/synthetic.rs",
+        "pub fn oops(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    );
+    let violations = rules::run_all(&tree, DEFAULT_BUDGET);
+    assert_eq!(rules_hit(&violations), vec!["unsafe-audit"], "{violations:?}");
+    // Two findings: missing SAFETY comment + missing budget entry.
+    assert!(violations.iter().any(|v| v.message.contains("SAFETY")), "{violations:?}");
+    assert!(violations.iter().any(|v| v.message.contains("budget")), "{violations:?}");
+}
+
+#[test]
+fn safety_comment_walks_past_attributes_but_not_code() {
+    let mut tree = SourceTree::default();
+    tree.push_file(
+        "rust/src/ok.rs",
+        concat!(
+            "// SAFETY: p is valid for reads (caller contract).\n",
+            "#[inline]\n",
+            "pub fn read(p: *const u8) -> u8 {\n",
+            "    unsafe { *p }\n",
+            "}\n",
+        ),
+    );
+    tree.push_file("Cargo.toml", "[workspace]\n");
+    tree.push_file("rust/Cargo.toml", "[package]\n");
+    // The SAFETY comment sits above the *function*, but the contiguous
+    // comment/attribute walk-up from the `unsafe {` line stops at the
+    // `pub fn` code line — the justification must be adjacent.
+    let violations = rules::unsafe_audit(&tree, "rust/src/ok.rs 1\n");
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert!(violations[0].message.contains("SAFETY"));
+    // Putting the comment directly above the block passes.
+    let mut tree2 = SourceTree::default();
+    tree2.push_file(
+        "rust/src/ok.rs",
+        concat!(
+            "pub fn read(p: *const u8) -> u8 {\n",
+            "    // SAFETY: p is valid for reads (caller contract).\n",
+            "    unsafe { *p }\n",
+            "}\n",
+        ),
+    );
+    assert!(rules::unsafe_audit(&tree2, "rust/src/ok.rs 1\n").is_empty());
+}
+
+#[test]
+fn stale_budget_trips_unsafe_audit_in_both_directions() {
+    let tree = load_real_tree();
+    // Undercount: pin kernel.rs one below its real count.
+    let undercount = DEFAULT_BUDGET.replace(
+        "rust/src/erasure/kernel.rs 14",
+        "rust/src/erasure/kernel.rs 13",
+    );
+    assert_ne!(undercount, DEFAULT_BUDGET, "budget line moved; update this test");
+    let violations = rules::unsafe_audit(&tree, &undercount);
+    assert!(
+        violations.iter().any(|v| v.message.contains("counted 14, budget pins 13")),
+        "{violations:?}"
+    );
+    // Stale entry: a budget line for a file with no unsafe left.
+    let mut stale = String::from(DEFAULT_BUDGET);
+    stale.push_str("rust/src/erasure/rs.rs 2\n");
+    let violations = rules::unsafe_audit(&tree, &stale);
+    assert!(
+        violations.iter().any(|v| v.message.contains("counted 0, budget pins 2")),
+        "{violations:?}"
+    );
+}
+
+#[test]
+fn seeded_alloc_in_datapath_region_trips_datapath_no_alloc() {
+    let mut tree = load_real_tree();
+    tree.push_file(
+        "rust/src/transport/synthetic.rs",
+        concat!(
+            "// lint: datapath\n",
+            "pub fn hot(v: &[u8]) -> Vec<u8> {\n",
+            "    v.to_vec()\n",
+            "}\n",
+            "// lint: end-datapath\n",
+        ),
+    );
+    let violations = rules::run_all(&tree, DEFAULT_BUDGET);
+    assert_eq!(rules_hit(&violations), vec!["datapath-no-alloc"], "{violations:?}");
+    assert_eq!(violations.len(), 1);
+    assert!(violations[0].message.contains(".to_vec()"));
+    assert_eq!(violations[0].line, 3);
+}
+
+#[test]
+fn unbalanced_datapath_markers_are_violations() {
+    let mut tree = load_real_tree();
+    tree.push_file("rust/src/a.rs", "// lint: datapath\nfn f() {}\n");
+    tree.push_file("rust/src/b.rs", "fn g() {}\n// lint: end-datapath\n");
+    let violations = rules::datapath_no_alloc(&tree);
+    assert_eq!(violations.len(), 2, "{violations:?}");
+    assert!(violations.iter().any(|v| v.message.contains("unclosed")));
+    assert!(violations.iter().any(|v| v.message.contains("stray")));
+}
+
+#[test]
+fn renumbered_wire_constant_trips_wire_pin() {
+    let mut tree = load_real_tree();
+    let packet = tree.file("rust/src/coordinator/packet.rs").expect("packet.rs").text.clone();
+    let mutated = packet.replace("const KIND_REPAIR: u8 = 12;", "const KIND_REPAIR: u8 = 14;");
+    assert_ne!(mutated, packet, "KIND_REPAIR declaration moved; update this test");
+    assert!(tree.replace_file("rust/src/coordinator/packet.rs", &mutated));
+    let violations = rules::run_all(&tree, DEFAULT_BUDGET);
+    assert_eq!(rules_hit(&violations), vec!["wire-pin"], "{violations:?}");
+    assert!(
+        violations.iter().any(|v| v.message.contains("KIND_REPAIR")
+            && v.message.contains("14")
+            && v.message.contains("12")),
+        "{violations:?}"
+    );
+}
+
+#[test]
+fn unpinned_new_discriminant_trips_wire_pin() {
+    let mut tree = load_real_tree();
+    let packet = tree.file("rust/src/coordinator/packet.rs").expect("packet.rs").text.clone();
+    let mutated = format!("{packet}\nconst KIND_EXPERIMENTAL: u8 = 99;\n");
+    assert!(tree.replace_file("rust/src/coordinator/packet.rs", &mutated));
+    let violations = rules::wire_pin(&tree);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert!(violations[0].message.contains("KIND_EXPERIMENTAL"));
+    assert!(violations[0].message.contains("not in the pinned table"));
+}
+
+#[test]
+fn seeded_dependency_trips_no_deps() {
+    let mut tree = load_real_tree();
+    let manifest = tree.file("rust/Cargo.toml").expect("rust/Cargo.toml").text.clone();
+    let mutated = manifest.replace("[dependencies]", "[dependencies]\nserde = \"1\"");
+    assert_ne!(mutated, manifest, "[dependencies] section vanished; update this test");
+    assert!(tree.replace_file("rust/Cargo.toml", &mutated));
+    let violations = rules::run_all(&tree, DEFAULT_BUDGET);
+    assert_eq!(rules_hit(&violations), vec!["no-deps"], "{violations:?}");
+    assert!(violations[0].message.contains("serde"));
+}
+
+#[test]
+fn xla_path_escape_hatch_is_tolerated() {
+    let mut tree = load_real_tree();
+    let manifest = tree.file("rust/Cargo.toml").expect("rust/Cargo.toml").text.clone();
+    let mutated = manifest
+        .replace("[dependencies]", "[dependencies]\nxla = { path = \"../vendor/xla\" }");
+    assert_ne!(mutated, manifest);
+    assert!(tree.replace_file("rust/Cargo.toml", &mutated));
+    assert!(rules::no_deps(&tree).is_empty(), "the pjrt escape hatch is sanctioned");
+}

@@ -1,0 +1,483 @@
+//! Bounded-interleaving model checks for the crate's three hand-rolled
+//! concurrency structures (DESIGN.md §13): the coding-pool batch latch
+//! (`erasure::par`), the serve daemon's generation-fenced completion
+//! queue (`serve::Daemon::drain_completions`), and the transport
+//! `FrameQueue` close/drain protocol. Each structure is mirrored onto
+//! `testkit::sched` shims *in its real shape* — same lock boundaries,
+//! same check order — and explored exhaustively up to a preemption
+//! bound. Each mirror is also mutation-tested: a seeded concurrency bug
+//! (lost-update latch, off-by-one generation fence, closed-check before
+//! drain, close without the lock) must produce a finding, or the model
+//! would prove nothing.
+
+use janus::testkit::sched::{explore, Config, Env, Finding};
+use std::sync::atomic::Ordering;
+
+// ---------------------------------------------------------------------------
+// 1. erasure::par — batch latch + submitter-helps-drain
+// ---------------------------------------------------------------------------
+
+/// Mirror of `CodingPool::run_batch` with one worker: the submitter
+/// enqueues two jobs, then drains the queue itself before waiting on
+/// the latch, while a worker thread concurrently pops jobs. The latch
+/// is the exact `par::Latch` shape: `Mutex<(outstanding, poisoned)>` +
+/// condvar, `notify_all` at zero, predicate-looped wait. A "panicking"
+/// job completes with `ok = false` (the real code's `catch_unwind`).
+fn pool_batch_scenario(env: &mut Env, poison: bool) {
+    let queue = env.mutex(vec![0usize, 1]);
+    let latch = env.mutex((2usize, false));
+    let latch_cv = env.condvar();
+    let executed = env.atomic_usize(0);
+    let waited = env.atomic_usize(usize::MAX);
+
+    let complete = {
+        let latch = latch.clone();
+        let latch_cv = latch_cv.clone();
+        move |ok: bool| {
+            let mut st = latch.lock();
+            st.0 -= 1;
+            if !ok {
+                st.1 = true;
+            }
+            if st.0 == 0 {
+                latch_cv.notify_all();
+            }
+        }
+    };
+
+    // Worker: pop until the queue is empty, then exit (a worker that
+    // never gets scheduled is the zero-worker pool — the submitter
+    // still finishes the batch alone).
+    {
+        let queue = queue.clone();
+        let executed = executed.clone();
+        let complete = complete.clone();
+        env.spawn(move || loop {
+            let job = queue.lock().pop();
+            match job {
+                Some(j) => {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    complete(!(poison && j == 0));
+                }
+                None => break,
+            }
+        });
+    }
+
+    // Submitter: help drain, then wait the latch.
+    {
+        let queue = queue.clone();
+        let executed = executed.clone();
+        let latch = latch.clone();
+        let latch_cv = latch_cv.clone();
+        let waited = waited.clone();
+        env.spawn(move || {
+            loop {
+                let job = queue.lock().pop();
+                match job {
+                    Some(j) => {
+                        executed.fetch_add(1, Ordering::SeqCst);
+                        complete(!(poison && j == 0));
+                    }
+                    None => break,
+                }
+            }
+            let mut st = latch.lock();
+            while st.0 > 0 {
+                st = latch_cv.wait(st);
+            }
+            waited.store(usize::from(st.1), Ordering::SeqCst);
+        });
+    }
+
+    let want = usize::from(poison);
+    env.finally(move || {
+        assert_eq!(executed.load(Ordering::SeqCst), 2, "every job ran exactly once");
+        assert_eq!(
+            waited.load(Ordering::SeqCst),
+            want,
+            "wait() must report poisoning iff a job panicked"
+        );
+    });
+}
+
+#[test]
+fn coding_pool_batch_completes_in_every_interleaving() {
+    let report = explore(&Config::with_bound(2), |env| pool_batch_scenario(env, false));
+    report.assert_ok();
+    assert!(report.exhausted, "bounded space must be fully enumerated");
+    assert!(report.schedules > 1, "the mirror must actually branch");
+}
+
+#[test]
+fn coding_pool_poisoning_reaches_the_submitter_in_every_interleaving() {
+    let report = explore(&Config::with_bound(2), |env| pool_batch_scenario(env, true));
+    report.assert_ok();
+    assert!(report.exhausted);
+}
+
+/// Seeded bug: the outstanding-job count kept in a bare atomic with a
+/// load/store (non-atomic) decrement instead of under the latch mutex.
+/// Two completers can both read 2 and both write 1 — the count never
+/// hits zero, nobody notifies, and the waiter blocks forever. The
+/// checker must find the lost update as a deadlock.
+#[test]
+fn broken_latch_lost_update_is_caught() {
+    let report = explore(&Config::with_bound(2), |env| {
+        let count = env.atomic_usize(2);
+        let gate = env.mutex(());
+        let cv = env.condvar();
+        for _ in 0..2 {
+            let count = count.clone();
+            let gate = gate.clone();
+            let cv = cv.clone();
+            env.spawn(move || {
+                let c = count.load(Ordering::SeqCst);
+                count.store(c - 1, Ordering::SeqCst);
+                if c - 1 == 0 {
+                    let _g = gate.lock();
+                    cv.notify_all();
+                }
+            });
+        }
+        {
+            let count = count.clone();
+            let gate = gate.clone();
+            let cv = cv.clone();
+            env.spawn(move || {
+                let mut g = gate.lock();
+                while count.load(Ordering::SeqCst) > 0 {
+                    g = cv.wait(g);
+                }
+                drop(g);
+            });
+        }
+    });
+    let failure = report.assert_finding();
+    assert!(
+        matches!(&failure.finding, Finding::Deadlock { blocked } if blocked == &[2]),
+        "expected the waiter deadlocked, got {:?}",
+        failure.finding
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. serve — generation-fenced coding completions
+// ---------------------------------------------------------------------------
+
+/// Mirror of `Daemon::drain_completions` against a slot that is reaped
+/// and reused while an old tenant's coding job is still in flight. The
+/// worker pushes a completion stamped with generation 0; the daemon
+/// bumps the slot to generation 1 (new tenant) and then drains,
+/// delivering a completion only when its stamp equals the slot's
+/// current generation. `fence_slack` widens the acceptance window — 0
+/// is the real code, 1 is the seeded off-by-one that hands the new
+/// tenant the dead tenant's job.
+fn gen_fence_scenario(env: &mut Env, fence_slack: usize) {
+    let completions = env.mutex(Vec::<(usize, u32)>::new());
+    let slot_gen = env.atomic_usize(0);
+    let stale_delivered = env.atomic_bool(false);
+
+    // Coding worker: finish the generation-0 tenant's job.
+    {
+        let completions = completions.clone();
+        env.spawn(move || {
+            completions.lock().push((0, 7));
+        });
+    }
+
+    // Daemon: reap + reuse the slot, then drain completions.
+    {
+        let completions = completions.clone();
+        let slot_gen = slot_gen.clone();
+        let stale = stale_delivered.clone();
+        env.spawn(move || {
+            slot_gen.store(1, Ordering::SeqCst);
+            let done = std::mem::take(&mut *completions.lock());
+            for (gen, _payload) in done {
+                let cur = slot_gen.load(Ordering::SeqCst);
+                let deliver = cur == gen || (fence_slack > 0 && cur == gen + fence_slack);
+                if deliver && gen != cur {
+                    stale.store(true, Ordering::SeqCst);
+                }
+            }
+        });
+    }
+
+    env.finally(move || {
+        assert!(
+            !stale_delivered.load(Ordering::SeqCst),
+            "a stale-generation completion was delivered to the slot's new occupant"
+        );
+    });
+}
+
+#[test]
+fn generation_fence_never_delivers_stale_completions() {
+    let report = explore(&Config::with_bound(2), |env| gen_fence_scenario(env, 0));
+    report.assert_ok();
+    assert!(report.exhausted);
+    assert!(report.schedules > 1);
+}
+
+#[test]
+fn off_by_one_generation_fence_is_caught() {
+    let report = explore(&Config::with_bound(2), |env| gen_fence_scenario(env, 1));
+    let failure = report.assert_finding();
+    assert!(
+        matches!(&failure.finding, Finding::Check { message } if message.contains("stale")),
+        "expected the stale-delivery post-condition to fire, got {:?}",
+        failure.finding
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. transport — FrameQueue close/drain protocol
+// ---------------------------------------------------------------------------
+
+/// Mirror of `FrameQueue` (`transport::channel`): producer pushes a
+/// backlog then closes; the consumer loops `pop_timeout`'s exact check
+/// order — drain first, closed second, wait third. One deliberate
+/// difference: the real `close()` stores the flag without taking the
+/// queue lock and relies on `pop_timeout`'s *bounded* wait to cover the
+/// check-to-wait window; the model has no timeouts, so the mirror
+/// stores the flag under the lock (the equivalent protocol).
+/// `naked_close_without_the_lock_deadlocks` below checks the real
+/// variant and proves the window exists — documenting exactly why
+/// `pop_timeout` must use `wait_timeout`, not `wait`.
+fn frame_queue_scenario(env: &mut Env, buggy_check_order: bool) {
+    let q = env.mutex(std::collections::VecDeque::<u32>::new());
+    let cv = env.condvar();
+    let closed = env.atomic_bool(false);
+    let received = env.mutex(Vec::<u32>::new());
+
+    {
+        let q = q.clone();
+        let cv = cv.clone();
+        let closed = closed.clone();
+        env.spawn(move || {
+            for v in [1u32, 2] {
+                q.lock().push_back(v);
+                cv.notify_one();
+            }
+            {
+                let _g = q.lock();
+                closed.store(true, Ordering::SeqCst);
+            }
+            cv.notify_all();
+        });
+    }
+
+    {
+        let q = q.clone();
+        let cv = cv.clone();
+        let closed = closed.clone();
+        let received = received.clone();
+        env.spawn(move || {
+            let mut g = q.lock();
+            loop {
+                if buggy_check_order {
+                    // Seeded bug: report disconnection before draining —
+                    // the backlog a finished sender left behind is lost.
+                    if closed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                if let Some(v) = g.pop_front() {
+                    drop(g);
+                    received.lock().push(v);
+                    g = q.lock();
+                    continue;
+                }
+                if closed.load(Ordering::SeqCst) {
+                    break;
+                }
+                g = cv.wait(g);
+            }
+        });
+    }
+
+    env.finally(move || {
+        assert_eq!(
+            *received.lock(),
+            vec![1, 2],
+            "the backlog must deliver, in order, before the close is reported"
+        );
+    });
+}
+
+#[test]
+fn frame_queue_backlog_survives_close_in_every_interleaving() {
+    let report = explore(&Config::with_bound(2), |env| frame_queue_scenario(env, false));
+    report.assert_ok();
+    assert!(report.exhausted);
+    assert!(report.schedules > 1);
+}
+
+#[test]
+fn closed_check_before_drain_loses_the_backlog_and_is_caught() {
+    let report = explore(&Config::with_bound(2), |env| frame_queue_scenario(env, true));
+    let failure = report.assert_finding();
+    assert!(
+        matches!(failure.finding, Finding::Check { .. }),
+        "expected the delivery post-condition to fire, got {:?}",
+        failure.finding
+    );
+}
+
+/// The real `close()` window, modeled honestly: flag stored without the
+/// queue lock, consumer waiting unboundedly. The consumer can check
+/// `closed` (false), the closer can store + notify while nobody waits,
+/// and the consumer then sleeps forever. This is the latent lost-wakeup
+/// that `pop_timeout`'s `wait_timeout` backstop absorbs in production —
+/// the model check pins it so nobody "simplifies" the timeout away.
+#[test]
+fn naked_close_without_the_lock_deadlocks() {
+    let report = explore(&Config::with_bound(1), |env| {
+        let q = env.mutex(std::collections::VecDeque::<u32>::new());
+        let cv = env.condvar();
+        let closed = env.atomic_bool(false);
+        {
+            let closed = closed.clone();
+            let cv = cv.clone();
+            env.spawn(move || {
+                closed.store(true, Ordering::SeqCst);
+                cv.notify_all();
+            });
+        }
+        {
+            let q = q.clone();
+            let cv = cv.clone();
+            let closed = closed.clone();
+            env.spawn(move || {
+                let mut g = q.lock();
+                loop {
+                    if g.pop_front().is_some() {
+                        continue;
+                    }
+                    if closed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    g = cv.wait(g);
+                }
+            });
+        }
+    });
+    let failure = report.assert_finding();
+    assert!(
+        matches!(&failure.finding, Finding::Deadlock { blocked } if blocked == &[1]),
+        "expected the consumer asleep forever, got {:?}",
+        failure.finding
+    );
+}
+
+/// MemChannel drop semantics on top of the queue: a send that observed
+/// the close drops its frame by choice; a send that raced past the
+/// check may land after the consumer drained and left, in which case
+/// the frame strands in the queue and is recycled when the queue drops
+/// — also a drop, just a later one. What the protocol *does* guarantee,
+/// in every interleaving: the pre-close backlog always delivers, and
+/// nothing is ever delivered that was not pushed.
+#[test]
+fn racing_sender_frame_is_delivered_or_dropped_never_fabricated() {
+    let report = explore(&Config::with_bound(1), |env| {
+        let q = env.mutex(std::collections::VecDeque::<u32>::new());
+        let cv = env.condvar();
+        let closed = env.atomic_bool(false);
+        let pushed9 = env.atomic_bool(false);
+        let received = env.mutex(Vec::<u32>::new());
+
+        // Tenant A: one frame, then close (endpoint drop).
+        {
+            let q = q.clone();
+            let cv = cv.clone();
+            let closed = closed.clone();
+            env.spawn(move || {
+                q.lock().push_back(1);
+                cv.notify_one();
+                {
+                    let _g = q.lock();
+                    closed.store(true, Ordering::SeqCst);
+                }
+                cv.notify_all();
+            });
+        }
+        // Peer sender: MemChannel::send's exact shape — check closed,
+        // then lease + push. The check and the push are separate steps,
+        // so a close can land in between; that frame must still arrive.
+        {
+            let q = q.clone();
+            let cv = cv.clone();
+            let closed = closed.clone();
+            let pushed9 = pushed9.clone();
+            env.spawn(move || {
+                if !closed.load(Ordering::SeqCst) {
+                    q.lock().push_back(9);
+                    cv.notify_one();
+                    pushed9.store(true, Ordering::SeqCst);
+                }
+            });
+        }
+        // Consumer: drain-first close protocol.
+        {
+            let q = q.clone();
+            let cv = cv.clone();
+            let closed = closed.clone();
+            let received = received.clone();
+            env.spawn(move || {
+                let mut g = q.lock();
+                loop {
+                    if let Some(v) = g.pop_front() {
+                        drop(g);
+                        received.lock().push(v);
+                        g = q.lock();
+                        continue;
+                    }
+                    if closed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    g = cv.wait(g);
+                }
+            });
+        }
+
+        env.finally(move || {
+            let got = received.lock();
+            assert!(got.contains(&1), "the pre-close frame must always deliver: {got:?}");
+            assert!(
+                !got.contains(&9) || pushed9.load(Ordering::SeqCst),
+                "a frame the sender dropped at the closed check cannot arrive: {got:?}"
+            );
+            assert!(got.iter().all(|v| *v == 1 || *v == 9), "fabricated frame: {got:?}");
+        });
+    });
+    report.assert_ok();
+    assert!(report.exhausted);
+}
+
+// ---------------------------------------------------------------------------
+// Determinism of the checker itself
+// ---------------------------------------------------------------------------
+
+/// Two explorations of the same scenario must enumerate the same
+/// schedules in the same order — the trace hash covers every decision
+/// of every schedule, so any nondeterminism in the scheduler shows up.
+#[test]
+fn exploration_is_reproducible_across_runs() {
+    let run = || explore(&Config::with_bound(2), |env| pool_batch_scenario(env, false));
+    let a = run();
+    let b = run();
+    assert_eq!(a.schedules, b.schedules);
+    assert_eq!(a.trace_hash, b.trace_hash);
+    assert!(a.failure.is_none() && b.failure.is_none());
+
+    // Same property on a failing scenario: the same bug is found on the
+    // same schedule, with the same decision sequence.
+    let fail = || explore(&Config::with_bound(2), |env| gen_fence_scenario(env, 1));
+    let a = fail();
+    let b = fail();
+    let (fa, fb) = (a.assert_finding(), b.assert_finding());
+    assert_eq!(fa.schedule_index, fb.schedule_index);
+    assert_eq!(fa.schedule, fb.schedule);
+    assert_eq!(a.trace_hash, b.trace_hash);
+}
